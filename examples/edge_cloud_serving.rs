@@ -1,0 +1,73 @@
+//! END-TO-END serving driver (DESIGN.md §5 "e2e"): the full collaborative-
+//! intelligence stack on a real workload.
+//!
+//! Simulated edge devices regenerate validation images, run the AOT edge
+//! network via PJRT, compress the split tensor with the lightweight codec
+//! (model-optimal clipping), ship bit-streams through a bounded "network"
+//! queue, and a cloud worker decodes + finishes inference. Reports task
+//! quality, real compressed rate, latency percentiles and throughput for
+//! both the classification and the detection network, plus an uncompressed
+//! float32 baseline for the rate comparison.
+//!
+//! Run: `make artifacts && cargo run --release --example edge_cloud_serving`
+
+use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
+use lwfc::experiments::common::family_of;
+use lwfc::modeling::{fit, optimal_cmax};
+use lwfc::runtime::Manifest;
+
+fn run_task(m: &Manifest, task: TaskKind, levels: usize, requests: usize) -> anyhow::Result<()> {
+    let stats = match task {
+        TaskKind::ClassifyResnet { split } => m.resnet_split(split)?.stats,
+        TaskKind::ClassifyAlex => m.alex.stats,
+        TaskKind::Detect => m.detect.stats,
+    };
+    let (act, kappa) = family_of(task);
+    let model = fit(stats.mean, stats.var, kappa, act).map_err(anyhow::Error::msg)?;
+    let c_max = optimal_cmax(&model.pdf, 0.0, levels).c_max;
+
+    println!("\n=== {task}: N={levels}, model c_max={c_max:.4} ===");
+    let cfg = ServeConfig {
+        edge: EdgeConfig {
+            task,
+            quant: QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: c_max as f32,
+                levels,
+            },
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            adaptive: None,
+        },
+        cloud: CloudConfig {
+            task,
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            obj_threshold: 0.3,
+        },
+        edge_workers: 2,
+        requests,
+        queue_capacity: 64,
+        first_index: 0,
+    };
+    let report = serve(m, cfg)?;
+    println!("{}", report.summary());
+    println!(
+        "compression vs raw f32: {:.0}x (32 bits -> {:.3} bits/element)",
+        32.0 / report.bits_per_element,
+        report.bits_per_element
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::load(&Manifest::default_dir())?;
+    println!(
+        "artifacts: serve_batch={} resnet_top1(build)={:.4}",
+        m.serve_batch, m.resnet_top1
+    );
+    run_task(&m, TaskKind::ClassifyResnet { split: 2 }, 4, 512)?;
+    run_task(&m, TaskKind::ClassifyResnet { split: 2 }, 2, 512)?;
+    run_task(&m, TaskKind::Detect, 4, 256)?;
+    Ok(())
+}

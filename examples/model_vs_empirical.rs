@@ -1,0 +1,46 @@
+//! Table I analog on this testbed: empirical vs model-based vs ACIQ
+//! clipping ranges for all three networks (compact version of
+//! `lwfc experiment table1`).
+//!
+//! Run: `make artifacts && cargo run --release --example model_vs_empirical`
+
+use lwfc::experiments::common::{all_tasks, fit_cache, ExpCtx, ValCache};
+use lwfc::experiments::fig2::sweep_cmax_grid;
+use lwfc::codec::UniformQuantizer;
+use lwfc::modeling::{aciq_cmax, estimate_b, optimal_cmax};
+use lwfc::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let ctx = ExpCtx::new(manifest, std::path::Path::new("results"), 128)?;
+    for (name, task) in all_tasks() {
+        let cache = ValCache::build(&ctx.manifest, task, ctx.val_n)?;
+        let model = fit_cache(&cache)?;
+        let b = estimate_b(&cache.features);
+        println!(
+            "\n{name}: clean={:.4}  λ={:.4} μ={:.4} laplace-b={b:.4}",
+            cache.metric_with(|x| x)?,
+            model.input.lambda,
+            model.input.mu
+        );
+        println!("  N | empirical c_max | model c_max | ACIQ c_max");
+        let grid = sweep_cmax_grid(cache.max_value());
+        for levels in [2usize, 4, 8] {
+            let mut emp = (f64::NEG_INFINITY, 0.0f32);
+            for &c in &grid {
+                let q = UniformQuantizer::new(0.0, c, levels);
+                let m = cache.metric_with(|x| q.fake_quant(x))?;
+                if m > emp.0 {
+                    emp = (m, c);
+                }
+            }
+            println!(
+                "  {levels} | {:>15.3} | {:>11.3} | {:>10.3}",
+                emp.1,
+                optimal_cmax(&model.pdf, 0.0, levels).c_max,
+                aciq_cmax(b, levels)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: compress and decompress one real split-layer tensor.
+//!
+//! Loads the ci-resnet edge artifact, runs one batch of validation images
+//! through it, fits the paper's asymmetric-Laplace model from the tensor's
+//! own statistics, picks the model-optimal clipping range, and pushes the
+//! tensor through the full lightweight codec (clip → 2-bit quantize →
+//! truncated unary → CABAC), reporting rate and reconstruction error.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::modeling::{fit_leaky, optimal_cmax};
+use lwfc::runtime::{Manifest, Runtime};
+use lwfc::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let rt = Runtime::cpu()?;
+    let split = manifest.resnet_split(2)?;
+    let edge = rt.load(&split.edge)?;
+    println!("loaded {} on {}", edge.name, rt.platform());
+
+    // 1. One batch of deterministic validation images -> split tensor.
+    let b = manifest.serve_batch;
+    let (xs, _labels) = lwfc::data::gen_class_batch(manifest.val_seed, 0, b);
+    let features = edge.run1(&[&Tensor::new(&[b, 32, 32, 3], xs)])?;
+    let item = &features.data()[..features.len() / b]; // first image's tensor
+    println!("split tensor: {:?} ({} elements/item)", features.shape(), item.len());
+
+    // 2. Fit the paper's model from sample moments (Eqs. 2-8).
+    let n = item.len() as f64;
+    let mean = item.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = item.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let model = fit_leaky(mean, var).map_err(anyhow::Error::msg)?;
+    println!("fitted asymmetric Laplace: λ={:.4} μ={:.4}", model.input.lambda, model.input.mu);
+
+    // 3. Optimal clipping for a 4-level (2-bit) quantizer (Eqs. 9-11).
+    let levels = 4;
+    let clip = optimal_cmax(&model.pdf, 0.0, levels);
+    println!("model-optimal clip range for N={levels}: [0, {:.4}]", clip.c_max);
+
+    // 4. Encode -> bit-stream -> decode.
+    let q = UniformQuantizer::new(0.0, clip.c_max as f32, levels);
+    let mut enc = Encoder::new(EncoderConfig::classification(Quantizer::Uniform(q), 32));
+    let stream = enc.encode(item);
+    println!(
+        "encoded {} elements -> {} bytes = {:.3} bits/element (12-byte header included)",
+        stream.elements,
+        stream.bytes.len(),
+        stream.bits_per_element()
+    );
+
+    let (decoded, header) = decode(&stream.bytes, item.len()).map_err(anyhow::Error::msg)?;
+    let mse: f64 = item
+        .iter()
+        .zip(&decoded)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / n;
+    println!(
+        "decoded with header N={} clip=[{}, {:.4}]; reconstruction MSE = {:.6}",
+        header.levels, header.c_min, header.c_max, mse
+    );
+    println!("analytic e_tot at this range   = {:.6}", clip.e_tot);
+    Ok(())
+}

@@ -1,0 +1,217 @@
+"""AOT pipeline: train the L2 networks, lower edge/cloud halves (+ L1 Pallas
+kernels) to HLO **text**, and write the artifact manifest.
+
+Runs once via ``make artifacts``; the Rust binary is self-contained
+afterwards.  Python is never on the request path.
+
+Interchange format is HLO *text*, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Emitted artifacts (batch B = SERVE_BATCH unless suffixed _b1):
+
+    resnet_edge_s{1,2,3}_b8.hlo.txt   edge half up to split tap s
+    resnet_cloud_s{1,2,3}_b8.hlo.txt  cloud half from split tap s -> logits
+    resnet_edge_s2_b1.hlo.txt         single-request latency variant
+    resnet_cloud_s2_b1.hlo.txt
+    resnet_edge_fq_s2_b8.hlo.txt      edge + fused Pallas fakequant kernel
+    alex_edge_b8 / alex_cloud_b8      plain-ReLU classifier
+    detect_edge_b8 / detect_cloud_b8  detector (cloud output = decoded probs)
+    moments_resnet_s2_b8.hlo.txt      Pallas moment kernel over the split tensor
+    manifest.json                     shapes, stats, accuracy, file index
+    train_log_<net>.csv               loss curves (EXPERIMENTS.md §E2E)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+from .kernels import fakequant as fq
+from .kernels import moments as mom
+
+SERVE_BATCH = 8
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text)} chars)")
+    return name
+
+
+def write_log(out_dir: str, name: str, log) -> str:
+    path = os.path.join(out_dir, f"train_log_{name}.csv")
+    with open(path, "w") as f:
+        f.write("step,loss\n")
+        for step, loss in log:
+            f.write(f"{step},{loss:.6f}\n")
+    return os.path.basename(path)
+
+
+def build(out_dir: str, steps_scale: float = 1.0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "version": MANIFEST_VERSION,
+        "serve_batch": SERVE_BATCH,
+        "train_seed": train.TRAIN_SEED,
+        "val_seed": train.VAL_SEED,
+        "data_version": data.DATA_VERSION,
+        "nets": {},
+        "files": {},
+    }
+    sc = lambda n: max(20, int(n * steps_scale))
+
+    # ------------------------------------------------------------ ci_resnet
+    print("[aot] training ci_resnet ...")
+    rp, rlog = train.train_resnet(steps=sc(500))
+    top1 = train.eval_class_top1(lambda p, x: model.resnet_full(p, x, 2), rp, n=512)
+    print(f"[aot] ci_resnet top1={top1:.4f}")
+    manifest["files"]["train_log_resnet"] = write_log(out_dir, "resnet", rlog)
+
+    net: dict = {"top1_val512": top1, "input": [SERVE_BATCH, 32, 32, 3], "splits": {}}
+    for s in model.RESNET_SPLITS:
+        fh, fw, fc = model.RESNET_FEAT_SHAPES[s]
+        feat = (SERVE_BATCH, fh, fw, fc)
+        edge = lower_fn(
+            lambda x, _s=s: (model.resnet_edge(rp, x, _s),), spec((SERVE_BATCH, 32, 32, 3))
+        )
+        cloud = lower_fn(lambda f, _s=s: (model.resnet_cloud(rp, f, _s),), spec(feat))
+        stats = train.split_tensor_stats(
+            lambda p, x, _s=s: model.resnet_edge(p, x, _s), rp, n=512
+        )
+        net["splits"][str(s)] = {
+            "feature": list(feat),
+            "edge": write(out_dir, f"resnet_edge_s{s}_b{SERVE_BATCH}.hlo.txt", edge),
+            "cloud": write(out_dir, f"resnet_cloud_s{s}_b{SERVE_BATCH}.hlo.txt", cloud),
+            "stats": stats,
+        }
+
+    # b1 latency variant + fused-fakequant edge + moment kernel (split 2)
+    fh, fw, fc = model.RESNET_FEAT_SHAPES[2]
+    net["edge_b1"] = write(
+        out_dir,
+        "resnet_edge_s2_b1.hlo.txt",
+        lower_fn(lambda x: (model.resnet_edge(rp, x, 2),), spec((1, 32, 32, 3))),
+    )
+    net["cloud_b1"] = write(
+        out_dir,
+        "resnet_cloud_s2_b1.hlo.txt",
+        lower_fn(lambda f: (model.resnet_cloud(rp, f, 2),), spec((1, fh, fw, fc))),
+    )
+
+    def edge_fq(x, params):
+        f = model.resnet_edge(rp, x, 2)
+        return (fq.fakequant_2d(f.reshape(-1, fq.LANES), params, block_rows=fh * fw // 4).reshape(f.shape),)
+
+    net["edge_fq"] = write(
+        out_dir,
+        f"resnet_edge_fq_s2_b{SERVE_BATCH}.hlo.txt",
+        lower_fn(edge_fq, spec((SERVE_BATCH, 32, 32, 3)), spec((1, 3))),
+    )
+    net["moments"] = write(
+        out_dir,
+        f"moments_resnet_s2_b{SERVE_BATCH}.hlo.txt",
+        lower_fn(lambda f: mom.moments(f), spec((SERVE_BATCH, fh, fw, fc))),
+    )
+    manifest["nets"]["resnet"] = net
+
+    # -------------------------------------------------------------- ci_alex
+    print("[aot] training ci_alex ...")
+    ap, alog = train.train_alex(steps=sc(400))
+    top1 = train.eval_class_top1(model.alex_full, ap, n=512)
+    print(f"[aot] ci_alex top1={top1:.4f}")
+    manifest["files"]["train_log_alex"] = write_log(out_dir, "alex", alog)
+    feat = (SERVE_BATCH,) + model.ALEX_FEAT_SHAPE
+    manifest["nets"]["alex"] = {
+        "top1_val512": top1,
+        "input": [SERVE_BATCH, 32, 32, 3],
+        "feature": list(feat),
+        "edge": write(
+            out_dir,
+            f"alex_edge_b{SERVE_BATCH}.hlo.txt",
+            lower_fn(lambda x: (model.alex_edge(ap, x),), spec((SERVE_BATCH, 32, 32, 3))),
+        ),
+        "cloud": write(
+            out_dir,
+            f"alex_cloud_b{SERVE_BATCH}.hlo.txt",
+            lower_fn(lambda f: (model.alex_cloud(ap, f),), spec(feat)),
+        ),
+        "stats": train.split_tensor_stats(model.alex_edge, ap, n=512),
+    }
+
+    # ------------------------------------------------------------ ci_detect
+    print("[aot] training ci_detect ...")
+    dp, dlog = train.train_detect(steps=sc(500))
+    manifest["files"]["train_log_detect"] = write_log(out_dir, "detect", dlog)
+    feat = (SERVE_BATCH,) + model.DETECT_FEAT_SHAPE
+    manifest["nets"]["detect"] = {
+        "input": [SERVE_BATCH, 64, 64, 3],
+        "feature": list(feat),
+        "grid": data.GRID,
+        "classes": data.DET_CLASSES,
+        "edge": write(
+            out_dir,
+            f"detect_edge_b{SERVE_BATCH}.hlo.txt",
+            lower_fn(lambda x: (model.detect_edge(dp, x),), spec((SERVE_BATCH, 64, 64, 3))),
+        ),
+        # cloud emits decoded (obj, txy, twh, class-probs) so Rust needs no nonlinearity
+        "cloud": write(
+            out_dir,
+            f"detect_cloud_b{SERVE_BATCH}.hlo.txt",
+            lower_fn(
+                lambda f: (model.detect_decode(model.detect_cloud(dp, f)),), spec(feat)
+            ),
+        ),
+        "stats": train.split_tensor_stats(model.detect_edge, dp, n=256, detect=True),
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--steps-scale",
+        type=float,
+        default=1.0,
+        help="scale training steps (0.05 for smoke tests)",
+    )
+    args = ap.parse_args()
+    build(args.out, args.steps_scale)
+
+
+if __name__ == "__main__":
+    main()

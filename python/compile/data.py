@@ -1,0 +1,237 @@
+"""Synthetic corpora for the collaborative-intelligence networks.
+
+Two deterministic datasets, generated identically (same PRNG, same draw
+order, f64 math, final f32 cast) in Python (training, build time) and in
+Rust (`rust/src/data/`, validation on the request path):
+
+* **SynthImageNet** — 32x32x3, 10 classes. Each class has a distinct grating
+  orientation/frequency and a base colour; a Gaussian blob and per-pixel
+  hash noise are added. Stands in for ImageNet ILSVRC2012 in the paper's
+  classification experiments.
+* **SynthScenes** — 64x64x3 detection scenes with 1-3 geometric objects
+  (square / circle / cross) on a gradient background. Stands in for COCO
+  2017 in the paper's object-detection experiments.
+
+The per-image *parameters* come from a SplitMix64 stream seeded by
+``derive_seed(base, stream, index)``; per-pixel noise comes from a
+vectorised SplitMix64 hash of (image seed, pixel index) so that no long
+PRNG sequences need to stay in lockstep across languages.
+
+DRAW ORDER CONTRACT (mirrored in rust/src/data/): documented per function;
+any change here must be reflected there and bumps DATA_VERSION.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .rng import SplitMix64, derive_seed
+
+DATA_VERSION = 1
+
+STREAM_CLS = 1
+STREAM_DET = 2
+NOISE_STREAM_CLS = 7
+NOISE_STREAM_DET = 8
+
+NUM_CLASSES = 10
+IMG = 32
+
+DET_IMG = 64
+DET_CLASSES = 3  # 0 square, 1 circle, 2 cross
+DET_MAX_OBJ = 3
+
+# Fixed per-class base colours (r, g, b weights in [0,1]); shared with Rust.
+CLASS_COLORS = np.array(
+    [
+        [0.9, 0.1, 0.1],
+        [0.1, 0.9, 0.1],
+        [0.1, 0.1, 0.9],
+        [0.9, 0.9, 0.1],
+        [0.9, 0.1, 0.9],
+        [0.1, 0.9, 0.9],
+        [0.7, 0.4, 0.1],
+        [0.4, 0.1, 0.7],
+        [0.1, 0.7, 0.4],
+        [0.6, 0.6, 0.6],
+    ],
+    dtype=np.float64,
+)
+
+DET_COLORS = np.array(
+    [[0.95, 0.25, 0.2], [0.2, 0.55, 0.95], [0.95, 0.85, 0.2]], dtype=np.float64
+)
+
+_M64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _splitmix_vec(z: np.ndarray) -> np.ndarray:
+    """Vectorised SplitMix64 output function over a uint64 array."""
+    z = (z + np.uint64(0x9E3779B97F4A7C15)) & _M64
+    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & _M64
+    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & _M64
+    return (z ^ (z >> np.uint64(31))) & _M64
+
+
+def hash_noise(img_seed: int, stream: int, count: int) -> np.ndarray:
+    """Per-pixel noise field in [-1, 1): one SplitMix64 hash per element.
+
+    Element i uses seed mix(img_seed, stream, i) — identical formula to
+    rust/src/util/rng.rs::hash_noise.
+    """
+    idx = np.arange(count, dtype=np.uint64)
+    with np.errstate(over="ignore"):  # uint64 wraparound is intentional
+        s = (
+            np.uint64(img_seed)
+            ^ (np.uint64(stream) * np.uint64(0x9E3779B97F4A7C15))
+            ^ (idx * np.uint64(0xD1B54A32D192ED03))
+        ) & _M64
+        u = _splitmix_vec(s)
+    return ((u >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))) * 2.0 - 1.0
+
+
+def class_of(index: int) -> int:
+    return index % NUM_CLASSES
+
+
+def gen_class_image(base_seed: int, index: int) -> tuple[np.ndarray, int]:
+    """Generate SynthImageNet image `index`.
+
+    Draw order: theta_jit, freq_jit, phase, d_theta, d_phase, blob_cx,
+    blob_cy, blob_amp, col_r, col_g, col_b, contrast, brightness
+    (13 uniform draws).
+    """
+    c = class_of(index)
+    seed = derive_seed(base_seed, STREAM_CLS, index)
+    rng = SplitMix64(seed)
+
+    # The ONLY class-dependent quantity is the primary grating orientation
+    # (18 degrees apart, +/- 6 degree jitter); everything else is a nuisance
+    # variable, so the network must learn orientation under heavy noise and
+    # a same-frequency distractor grating.
+    theta = c * (np.pi / (2 * NUM_CLASSES)) + rng.uniform(-0.07, 0.07)
+    freq = 0.80 + rng.uniform(-0.05, 0.05)
+    phase = rng.uniform(0.0, 2.0 * np.pi)
+    d_theta = rng.uniform(0.0, np.pi)
+    d_phase = rng.uniform(0.0, 2.0 * np.pi)
+    blob_cx = rng.uniform(8.0, 24.0)
+    blob_cy = rng.uniform(8.0, 24.0)
+    blob_amp = rng.uniform(0.0, 0.35)
+    col = np.array(
+        [rng.uniform(0.3, 1.0), rng.uniform(0.3, 1.0), rng.uniform(0.3, 1.0)]
+    )
+    contrast = rng.uniform(0.6, 1.4)
+    brightness = rng.uniform(-0.15, 0.15)
+
+    y, x = np.meshgrid(
+        np.arange(IMG, dtype=np.float64), np.arange(IMG, dtype=np.float64), indexing="ij"
+    )
+    g = np.sin(freq * (x * np.cos(theta) + y * np.sin(theta)) + phase)
+    d = np.sin(freq * (x * np.cos(d_theta) + y * np.sin(d_theta)) + d_phase)
+    d2 = (x - blob_cx) ** 2 + (y - blob_cy) ** 2
+    blob = np.exp(-d2 / (2.0 * 4.5 * 4.5))
+
+    noise = hash_noise(seed, NOISE_STREAM_CLS, IMG * IMG * 3).reshape(IMG, IMG, 3)
+    img = (
+        0.32 * g[..., None] * col[None, None, :]
+        + 0.16 * d[..., None] * col[None, None, ::-1]
+        + blob_amp * blob[..., None]
+    )
+    img = 0.5 + contrast * img + brightness + 0.30 * noise
+    return img.astype(np.float32), c
+
+
+def gen_class_batch(base_seed: int, start: int, count: int):
+    xs = np.empty((count, IMG, IMG, 3), dtype=np.float32)
+    ys = np.empty((count,), dtype=np.int32)
+    for i in range(count):
+        xs[i], ys[i] = gen_class_image(base_seed, start + i)
+    return xs, ys
+
+
+def gen_detect_scene(base_seed: int, index: int):
+    """Generate SynthScenes image `index` plus ground-truth boxes.
+
+    Draw order: grad_dir, grad_lo, grad_hi, n_obj_raw, then per object:
+    cls_raw, size, cx, cy, col_jit.  Returns (img f32[64,64,3],
+    boxes list[(cls, x, y, w, h)]) with x/y/w/h in pixels (x,y = top-left).
+    """
+    seed = derive_seed(base_seed, STREAM_DET, index)
+    rng = SplitMix64(seed)
+
+    grad_dir = rng.next_u32_below(2)
+    grad_lo = rng.uniform(0.15, 0.35)
+    grad_hi = rng.uniform(0.45, 0.65)
+    n_obj = 1 + rng.next_u32_below(DET_MAX_OBJ)
+
+    y, x = np.meshgrid(
+        np.arange(DET_IMG, dtype=np.float64),
+        np.arange(DET_IMG, dtype=np.float64),
+        indexing="ij",
+    )
+    t = (x if grad_dir == 0 else y) / (DET_IMG - 1)
+    img = np.repeat((grad_lo + (grad_hi - grad_lo) * t)[..., None], 3, axis=2)
+
+    boxes = []
+    for _ in range(n_obj):
+        cls = rng.next_u32_below(DET_CLASSES)
+        size = rng.uniform(12.0, 24.0)
+        cx = rng.uniform(size / 2 + 2, DET_IMG - size / 2 - 2)
+        cy = rng.uniform(size / 2 + 2, DET_IMG - size / 2 - 2)
+        jit = rng.uniform(-0.1, 0.1)
+        col = np.clip(DET_COLORS[cls] + jit, 0.0, 1.0)
+
+        half = size / 2.0
+        if cls == 0:  # filled square
+            mask = (np.abs(x - cx) <= half) & (np.abs(y - cy) <= half)
+        elif cls == 1:  # filled circle
+            mask = (x - cx) ** 2 + (y - cy) ** 2 <= half * half
+        else:  # cross: two orthogonal bars of thickness size/4
+            th = size / 4.0
+            mask = ((np.abs(x - cx) <= th) & (np.abs(y - cy) <= half)) | (
+                (np.abs(y - cy) <= th) & (np.abs(x - cx) <= half)
+            )
+        img[mask] = col
+        boxes.append((cls, cx - half, cy - half, size, size))
+
+    noise = hash_noise(seed, NOISE_STREAM_DET, DET_IMG * DET_IMG * 3).reshape(
+        DET_IMG, DET_IMG, 3
+    )
+    img = img + 0.10 * noise
+    return img.astype(np.float32), boxes
+
+
+GRID = 8  # detection output grid (8x8 cells over 64px => 8px cells)
+
+
+def detect_target(boxes) -> np.ndarray:
+    """Encode ground truth as an 8x8x(1+4+3) grid target (YOLO-style).
+
+    Cell containing a box centre is responsible: obj=1, (tx, ty) = centre
+    offset within cell in [0,1], (tw, th) = size / DET_IMG, one-hot class.
+    """
+    t = np.zeros((GRID, GRID, 1 + 4 + DET_CLASSES), dtype=np.float32)
+    cell = DET_IMG / GRID
+    for cls, bx, by, bw, bh in boxes:
+        cx, cy = bx + bw / 2.0, by + bh / 2.0
+        gx, gy = int(cx // cell), int(cy // cell)
+        gx, gy = min(gx, GRID - 1), min(gy, GRID - 1)
+        t[gy, gx, 0] = 1.0
+        t[gy, gx, 1] = cx / cell - gx
+        t[gy, gx, 2] = cy / cell - gy
+        t[gy, gx, 3] = bw / DET_IMG
+        t[gy, gx, 4] = bh / DET_IMG
+        t[gy, gx, 5 + cls] = 1.0
+    return t
+
+
+def gen_detect_batch(base_seed: int, start: int, count: int):
+    xs = np.empty((count, DET_IMG, DET_IMG, 3), dtype=np.float32)
+    ts = np.empty((count, GRID, GRID, 1 + 4 + DET_CLASSES), dtype=np.float32)
+    all_boxes = []
+    for i in range(count):
+        img, boxes = gen_detect_scene(base_seed, start + i)
+        xs[i] = img
+        ts[i] = detect_target(boxes)
+        all_boxes.append(boxes)
+    return xs, ts, all_boxes

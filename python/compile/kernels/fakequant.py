@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused clip -> N-level quantize -> dequantize.
+
+This is the per-element hot-spot of the paper's lightweight codec
+(Sec. III-A, Eq. (1)): every feature-tensor element emitted at the split
+layer is clipped to [c_min, c_max] and quantized with an N-level scalar
+quantizer whose outermost bins reconstruct to the clip boundaries.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): quantization is pure VPU
+element-wise work — no MXU — so the kernel is HBM-bandwidth bound.  The
+BlockSpec streams (block_rows x 128)-lane tiles HBM->VMEM exactly once;
+the clip parameters ride along as a tiny (1,3) block replicated to every
+grid step.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes directly.
+
+The quantization parameters (c_min, c_max, scale) are *runtime inputs*,
+not compile-time constants, so a single AOT artifact serves every clip
+range the Rust coordinator's adaptive controller chooses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU VPU; the last dim of every block is a multiple.
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _fakequant_kernel(params_ref, x_ref, o_ref):
+    """params = [c_min, c_max, scale] with scale = (N-1)/(c_max-c_min)."""
+    c_min = params_ref[0, 0]
+    c_max = params_ref[0, 1]
+    scale = params_ref[0, 2]
+    x = x_ref[...]
+    xc = jnp.minimum(jnp.maximum(x, c_min), c_max)
+    q = jnp.floor((xc - c_min) * scale + 0.5)
+    o_ref[...] = q / scale + c_min
+
+
+def fakequant_2d(x, params, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Apply fused fake-quantization to a 2D f32 array.
+
+    x: f32[rows, cols] with rows % block_rows == 0 and cols % LANES == 0
+    (the public wrapper pads); params: f32[1, 3] = [c_min, c_max, scale].
+    """
+    rows, cols = x.shape
+    grid = (rows // block_rows, cols // LANES)
+    return pl.pallas_call(
+        _fakequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i, j: (0, 0)),  # broadcast params
+            pl.BlockSpec((block_rows, LANES), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(params, x)
+
+
+def fakequant(x, c_min, c_max, levels, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Shape-generic entry: flattens x, pads to the tile grid, applies the
+    kernel, and restores the original shape.  c_min/c_max/levels may be
+    Python floats or traced scalars."""
+    scale = (levels - 1.0) / (c_max - c_min)
+    params = jnp.stack(
+        [jnp.float32(c_min), jnp.float32(c_max), jnp.float32(scale)]
+    ).reshape(1, 3)
+
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = LANES
+    rows = -(-n // cols)  # ceil div
+    rows_pad = -(-rows // block_rows) * block_rows
+    padded = jnp.zeros((rows_pad * cols,), jnp.float32).at[:n].set(flat)
+    out = fakequant_2d(padded.reshape(rows_pad, cols), params, block_rows)
+    return out.reshape(-1)[:n].reshape(x.shape)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: tiled first/second moment accumulation.
+
+The lightweight codec's model-based clipping (paper Sec. III-B) needs the
+sample mean and variance of the split-layer tensor.  On the edge device
+this runs over every produced feature tensor, so it is part of the hot
+path (the paper notes the statistics converge within a few hundred
+images and can be maintained online, Sec. III-E).
+
+TPU mapping: classic grid reduction — each grid step reduces one
+(block_rows x 128) VMEM tile to a partial (sum, sumsq) pair accumulated
+into a (1, 2) output block shared by all steps (revisiting output blocks
+across sequential grid steps is the Pallas accumulation idiom).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _moments_kernel(x_ref, o_ref):
+    @pl.when(jnp.logical_and(pl.program_id(0) == 0, pl.program_id(1) == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    o_ref[0, 0] += jnp.sum(x)
+    o_ref[0, 1] += jnp.sum(x * x)
+
+
+def moments_2d(x, block_rows: int = DEFAULT_BLOCK_ROWS):
+    rows, cols = x.shape
+    grid = (rows // block_rows, cols // LANES)
+    out = pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[0, 0], out[0, 1]
+
+
+def moments(x, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """(sum, sumsq) of an arbitrary-shape f32 tensor (pads with zeros —
+    harmless for both sums)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    cols = LANES
+    rows = -(-n // cols)
+    rows_pad = -(-rows // block_rows) * block_rows
+    padded = jnp.zeros((rows_pad * cols,), jnp.float32).at[:n].set(flat)
+    return moments_2d(padded.reshape(rows_pad, cols), block_rows)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` sweeps the
+Pallas kernels (interpret mode) against these references over shapes,
+dtypes and parameter ranges via hypothesis.
+
+The quantizer follows Eq. (1) of the paper with round-half-AWAY-from-zero
+(the paper's convention, and Rust ``f32::round``): since the argument is
+non-negative after clipping, that is ``floor(v + 0.5)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_index(x, c_min, c_max, levels):
+    """Eq. (1): N-level index of clipped activations, round half away."""
+    xc = jnp.clip(x, c_min, c_max)
+    scale = (levels - 1.0) / (c_max - c_min)
+    return jnp.floor((xc - c_min) * scale + 0.5)
+
+
+def fakequant(x, c_min, c_max, levels):
+    """Fused clip -> quantize -> dequantize (what the edge signals and the
+    cloud receives). Outer bins reconstruct exactly to c_min / c_max,
+    matching the paper's half-width boundary-bin quantizer."""
+    scale = (levels - 1.0) / (c_max - c_min)
+    q = quantize_index(x, c_min, c_max, levels)
+    return q / scale + c_min
+
+
+def moments(x):
+    """(sum, sum of squares) over all elements, f32 accumulation."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf), jnp.sum(xf * xf)
+
+
+def leaky_relu(x, slope=0.1):
+    return jnp.where(x >= 0, x, slope * x)

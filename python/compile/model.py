@@ -1,0 +1,226 @@
+"""L2: JAX forward passes for the three split collaborative-intelligence nets.
+
+Each network is split into an **edge** half (runs on the device, ends with
+the activation whose output the paper's lightweight codec compresses) and a
+**cloud** half (consumes the decoded feature tensor).  Both halves are
+AOT-lowered to HLO text by ``aot.py`` with the trained weights baked in as
+constants, and executed from Rust via PJRT — Python is never on the request
+path.
+
+Paper correspondence (DESIGN.md §2 substitutions):
+
+* ``ci_resnet`` ~ ResNet-50 split at layer 21: the split tensor is the
+  leaky-ReLU(0.1) applied after a residual shortcut-add, so its element
+  distribution has the asymmetric-Laplace-through-leaky-ReLU shape of the
+  paper's Fig. 3.  Three split depths (after residual stage 1/2/3) support
+  the paper's Fig. 6 multi-layer study.
+* ``ci_detect`` ~ YOLOv3 split at layer 12: leaky-ReLU trunk, grid-cell
+  detection head (objectness + bbox + class per cell).
+* ``ci_alex``  ~ AlexNet split at layer 4: plain-ReLU stack (one-sided
+  output distribution, c_min = 0 exactly).
+
+All convs are NHWC x HWIO -> NHWC.  Parameters are plain pytrees (dicts);
+initialisation is He-normal from a seeded numpy Generator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .data import DET_CLASSES, GRID
+
+LEAKY_SLOPE = 0.1
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def leaky_relu(x):
+    """The paper's Eq. (4): leaky_ReLU(x) = x if x >= 0 else 0.1 x."""
+    return jnp.where(x >= 0, x, LEAKY_SLOPE * x)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def conv(x, w, b, stride=1):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME", dimension_numbers=DN
+    )
+    return y + b
+
+
+def _he(rng: np.random.Generator, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def _conv_p(rng, kh, kw, cin, cout):
+    return {"w": _he(rng, (kh, kw, cin, cout)), "b": np.zeros((cout,), np.float32)}
+
+
+def _dense_p(rng, din, dout):
+    return {"w": _he(rng, (din, dout)), "b": np.zeros((dout,), np.float32)}
+
+
+# --------------------------------------------------------------------------
+# ci_resnet — classification, 32x32x3 -> 10 classes, leaky ReLU, 3 split taps
+# --------------------------------------------------------------------------
+
+RESNET_SPLITS = (1, 2, 3)
+RESNET_FEAT_SHAPES = {1: (16, 16, 32), 2: (16, 16, 32), 3: (8, 8, 64)}
+
+
+def init_resnet(seed: int = 11):
+    rng = np.random.default_rng(seed)
+    p = {
+        "stem": _conv_p(rng, 3, 3, 3, 16),
+        "down1": _conv_p(rng, 3, 3, 16, 32),
+        "res1a": _conv_p(rng, 3, 3, 32, 32),
+        "res1b": _conv_p(rng, 3, 3, 32, 32),
+        "res2a": _conv_p(rng, 3, 3, 32, 32),
+        "res2b": _conv_p(rng, 3, 3, 32, 32),
+        "down2": _conv_p(rng, 3, 3, 32, 64),
+        "res3a": _conv_p(rng, 3, 3, 64, 64),
+        "res3b": _conv_p(rng, 3, 3, 64, 64),
+        "down3": _conv_p(rng, 3, 3, 64, 128),
+        "res4a": _conv_p(rng, 3, 3, 128, 128),
+        "res4b": _conv_p(rng, 3, 3, 128, 128),
+        "head": _dense_p(rng, 128, 10),
+    }
+    return jax.tree_util.tree_map(jnp.asarray, p)
+
+
+def _res_block(x, pa, pb):
+    """conv-lrelu-conv + shortcut, then leaky ReLU — the split-layer shape
+    the paper models (shortcut-add feeding leaky ReLU)."""
+    h = leaky_relu(conv(x, pa["w"], pa["b"]))
+    h = conv(h, pb["w"], pb["b"])
+    return leaky_relu(x + h)
+
+
+def resnet_edge(p, x, split: int):
+    """Edge half up to and including split tap `split` in {1,2,3}."""
+    h = leaky_relu(conv(x, p["stem"]["w"], p["stem"]["b"]))
+    h = leaky_relu(conv(h, p["down1"]["w"], p["down1"]["b"], stride=2))  # 16x16x32
+    h = _res_block(h, p["res1a"], p["res1b"])
+    if split == 1:
+        return h
+    h = _res_block(h, p["res2a"], p["res2b"])
+    if split == 2:
+        return h
+    h = leaky_relu(conv(h, p["down2"]["w"], p["down2"]["b"], stride=2))  # 8x8x64
+    h = _res_block(h, p["res3a"], p["res3b"])
+    if split == 3:
+        return h
+    raise ValueError(f"bad split {split}")
+
+
+def resnet_cloud(p, f, split: int):
+    """Cloud half from split tap `split` to logits."""
+    h = f
+    if split == 1:
+        h = _res_block(h, p["res2a"], p["res2b"])
+    if split <= 2:
+        h = leaky_relu(conv(h, p["down2"]["w"], p["down2"]["b"], stride=2))
+        h = _res_block(h, p["res3a"], p["res3b"])
+    h = leaky_relu(conv(h, p["down3"]["w"], p["down3"]["b"], stride=2))  # 4x4x128
+    h = _res_block(h, p["res4a"], p["res4b"])
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def resnet_full(p, x, split: int = 2):
+    return resnet_cloud(p, resnet_edge(p, x, split), split)
+
+
+# --------------------------------------------------------------------------
+# ci_alex — classification, plain ReLU (AlexNet-layer-4 analogue)
+# --------------------------------------------------------------------------
+
+ALEX_FEAT_SHAPE = (8, 8, 64)
+
+
+def init_alex(seed: int = 13):
+    rng = np.random.default_rng(seed)
+    p = {
+        "c1": _conv_p(rng, 5, 5, 3, 32),
+        "c2": _conv_p(rng, 3, 3, 32, 48),
+        "c3": _conv_p(rng, 3, 3, 48, 64),
+        "c4": _conv_p(rng, 3, 3, 64, 96),
+        "c5": _conv_p(rng, 3, 3, 96, 96),
+        "head": _dense_p(rng, 96, 10),
+    }
+    return jax.tree_util.tree_map(jnp.asarray, p)
+
+
+def alex_edge(p, x):
+    h = relu(conv(x, p["c1"]["w"], p["c1"]["b"], stride=2))  # 16x16x32
+    h = relu(conv(h, p["c2"]["w"], p["c2"]["b"]))
+    h = relu(conv(h, p["c3"]["w"], p["c3"]["b"], stride=2))  # 8x8x64 split
+    return h
+
+
+def alex_cloud(p, f):
+    h = relu(conv(f, p["c4"]["w"], p["c4"]["b"], stride=2))  # 4x4x96
+    h = relu(conv(h, p["c5"]["w"], p["c5"]["b"]))
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def alex_full(p, x):
+    return alex_cloud(p, alex_edge(p, x))
+
+
+# --------------------------------------------------------------------------
+# ci_detect — grid detector, 64x64x3 -> 8x8x(1+4+3), leaky ReLU trunk
+# --------------------------------------------------------------------------
+
+DETECT_FEAT_SHAPE = (16, 16, 32)
+DET_OUT = 1 + 4 + DET_CLASSES
+
+
+def init_detect(seed: int = 17):
+    rng = np.random.default_rng(seed)
+    p = {
+        "c1": _conv_p(rng, 3, 3, 3, 16),
+        "c2": _conv_p(rng, 3, 3, 16, 32),
+        "r1a": _conv_p(rng, 3, 3, 32, 32),
+        "r1b": _conv_p(rng, 3, 3, 32, 32),
+        "c3": _conv_p(rng, 3, 3, 32, 64),
+        "r2a": _conv_p(rng, 3, 3, 64, 64),
+        "r2b": _conv_p(rng, 3, 3, 64, 64),
+        "head": _conv_p(rng, 1, 1, 64, DET_OUT),
+    }
+    return jax.tree_util.tree_map(jnp.asarray, p)
+
+
+def detect_edge(p, x):
+    h = leaky_relu(conv(x, p["c1"]["w"], p["c1"]["b"], stride=2))  # 32x32x16
+    h = leaky_relu(conv(h, p["c2"]["w"], p["c2"]["b"], stride=2))  # 16x16x32
+    h = _res_block(h, p["r1a"], p["r1b"])  # split tensor 16x16x32
+    return h
+
+
+def detect_cloud(p, f):
+    h = leaky_relu(conv(f, p["c3"]["w"], p["c3"]["b"], stride=2))  # 8x8x64
+    h = _res_block(h, p["r2a"], p["r2b"])
+    return conv(h, p["head"]["w"], p["head"]["b"])  # raw logits 8x8x8
+
+
+def detect_full(p, x):
+    return detect_cloud(p, detect_edge(p, x))
+
+
+def detect_decode(raw):
+    """Map raw head outputs to (obj prob, tx, ty, tw, th, class probs)."""
+    obj = jax.nn.sigmoid(raw[..., 0:1])
+    txy = jax.nn.sigmoid(raw[..., 1:3])
+    twh = jax.nn.sigmoid(raw[..., 3:5])
+    cls = jax.nn.softmax(raw[..., 5:], axis=-1)
+    return jnp.concatenate([obj, txy, twh, cls], axis=-1)
+
+
+assert GRID == 8, "detector head hard-codes an 8x8 grid"

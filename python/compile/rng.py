@@ -1,0 +1,61 @@
+"""Deterministic SplitMix64 PRNG, mirrored bit-for-bit by `rust/src/util/rng.rs`.
+
+The synthetic corpora (classification images, detection scenes) are generated
+on both sides of the language boundary: Python generates training batches at
+artifact-build time, Rust generates the *same* validation images on the
+request path.  Keeping the PRNG identical (and all derived quantities in
+f64 until the final f32 cast) makes the two corpora element-wise equal up to
+libm sin/cos ULP differences, which are far below the noise floor of the
+images themselves.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """SplitMix64 — tiny, fast, and trivial to replicate in Rust."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of entropy (matches Rust)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+    def next_u32_below(self, n: int) -> int:
+        """Unbiased-enough modulo draw (n is tiny in our uses)."""
+        return self.next_u64() % n
+
+
+def derive_seed(base: int, stream: int, index: int) -> int:
+    """Per-item seed derivation, identical in rust/src/util/rng.rs::derive_seed.
+
+    One SplitMix64 step over a mix of the base seed, a stream id (dataset
+    kind) and the item index, so items are independent and O(1) addressable.
+    """
+    s = (base ^ (stream * 0x9E3779B97F4A7C15) ^ (index * 0xD1B54A32D192ED03)) & MASK64
+    return SplitMix64(s).next_u64()
+
+
+def gaussian_pair(rng: SplitMix64) -> tuple[float, float]:
+    """Box-Muller; consumes exactly two f64 draws (mirrored in Rust)."""
+    u1 = rng.next_f64()
+    u2 = rng.next_f64()
+    if u1 < 1e-300:
+        u1 = 1e-300
+    r = np.sqrt(-2.0 * np.log(u1))
+    return r * np.cos(2.0 * np.pi * u2), r * np.sin(2.0 * np.pi * u2)

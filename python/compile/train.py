@@ -1,0 +1,156 @@
+"""Build-time training for the three collaborative-intelligence networks.
+
+Runs once inside ``make artifacts`` (via aot.py).  Hand-rolled Adam (optax
+is not available in this environment); a few hundred steps on the
+deterministic synthetic corpora is enough to reach >95% Top-1 on
+SynthImageNet and a usable detector on SynthScenes — the paper's
+experiments need a *well-trained* network whose accuracy degrades under
+feature quantization, not a SOTA one.
+
+Loss curves are written to ``artifacts/train_log_<net>.csv`` and summarised
+in EXPERIMENTS.md (end-to-end validation requirement).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import data, model
+
+TRAIN_SEED = 0xC0FFEE  # base seed for training corpora (val uses VAL_SEED)
+VAL_SEED = 0xBEEF
+
+
+# ----------------------------------------------------------------- optimiser
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------- losses
+def ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def detect_loss(raw, target):
+    """YOLO-style grid loss: BCE objectness everywhere; bbox MSE and class
+    CE only on responsible cells."""
+    obj_t = target[..., 0]
+    obj_logit = raw[..., 0]
+    bce = jnp.maximum(obj_logit, 0) - obj_logit * obj_t + jnp.log1p(
+        jnp.exp(-jnp.abs(obj_logit))
+    )
+    obj_loss = jnp.mean(bce)
+
+    mask = obj_t  # 1 where a box centre lives
+    n_pos = jnp.maximum(jnp.sum(mask), 1.0)
+    pred_box = jax.nn.sigmoid(raw[..., 1:5])
+    box_loss = jnp.sum(mask[..., None] * (pred_box - target[..., 1:5]) ** 2) / n_pos
+
+    logp = jax.nn.log_softmax(raw[..., 5:], axis=-1)
+    cls_loss = -jnp.sum(mask[..., None] * target[..., 5:] * logp) / n_pos
+    return obj_loss + 5.0 * box_loss + cls_loss
+
+
+# ------------------------------------------------------------- training loops
+def _train(params, loss_fn, batch_iter, steps, lr, log_every=20):
+    state = adam_init(params)
+    log = []
+
+    @jax.jit
+    def step(params, state, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        params, state = adam_update(params, grads, state, lr=lr)
+        return params, state, loss
+
+    for i in range(steps):
+        batch = next(batch_iter)
+        params, state, loss = step(params, state, *batch)
+        if i % log_every == 0 or i == steps - 1:
+            log.append((i, float(loss)))
+    return params, log
+
+
+def class_batches(base_seed, batch):
+    i = 0
+    while True:
+        xs, ys = data.gen_class_batch(base_seed, i, batch)
+        yield jnp.asarray(xs), jnp.asarray(ys)
+        i += batch
+
+
+def detect_batches(base_seed, batch):
+    i = 0
+    while True:
+        xs, ts, _ = data.gen_detect_batch(base_seed, i, batch)
+        yield jnp.asarray(xs), jnp.asarray(ts)
+        i += batch
+
+
+def train_resnet(steps=500, batch=64, lr=2e-3):
+    params = model.init_resnet()
+    loss = lambda p, x, y: ce_loss(model.resnet_full(p, x, split=2), y)
+    return _train(params, loss, class_batches(TRAIN_SEED, batch), steps, lr)
+
+
+def train_alex(steps=400, batch=64, lr=2e-3):
+    params = model.init_alex()
+    loss = lambda p, x, y: ce_loss(model.alex_full(p, x), y)
+    return _train(params, loss, class_batches(TRAIN_SEED, batch), steps, lr)
+
+
+def train_detect(steps=500, batch=32, lr=2e-3):
+    params = model.init_detect()
+    loss = lambda p, x, t: detect_loss(model.detect_full(p, x), t)
+    return _train(params, loss, detect_batches(TRAIN_SEED, batch), steps, lr)
+
+
+# ------------------------------------------------------------------ val evals
+def eval_class_top1(full_fn, params, n=512, batch=64, seed=VAL_SEED):
+    correct = 0
+    fwd = jax.jit(functools.partial(full_fn, params))
+    for s in range(0, n, batch):
+        xs, ys = data.gen_class_batch(seed, s, min(batch, n - s))
+        pred = np.asarray(jnp.argmax(fwd(jnp.asarray(xs)), axis=-1))
+        correct += int((pred == ys).sum())
+    return correct / n
+
+
+def split_tensor_stats(edge_fn, params, n=512, batch=64, seed=VAL_SEED, detect=False):
+    """Sample mean/var (and min/max) of the split-layer tensor over the
+    validation stream — the statistics the paper's model fit consumes."""
+    tot, tot2, cnt = 0.0, 0.0, 0
+    vmin, vmax = np.inf, -np.inf
+    fwd = jax.jit(functools.partial(edge_fn, params))
+    gen = data.gen_detect_batch if detect else data.gen_class_batch
+    for s in range(0, n, batch):
+        out = gen(seed, s, min(batch, n - s))
+        f = np.asarray(fwd(jnp.asarray(out[0])))
+        tot += float(f.sum())
+        tot2 += float((f.astype(np.float64) ** 2).sum())
+        cnt += f.size
+        vmin = min(vmin, float(f.min()))
+        vmax = max(vmax, float(f.max()))
+    mean = tot / cnt
+    var = tot2 / cnt - mean * mean
+    return {"mean": mean, "var": var, "min": vmin, "max": vmax, "count": cnt}

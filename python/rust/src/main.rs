@@ -1,0 +1,1 @@
+fn main() { println!("lwfc (cli wired later)"); }

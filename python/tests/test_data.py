@@ -1,0 +1,92 @@
+"""Synthetic corpora: determinism, ranges, label encoding.
+
+These properties are the cross-language contract with rust/src/data/ —
+Rust integration tests regenerate the same images and compare statistics.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+from compile.rng import SplitMix64, derive_seed
+
+
+class TestRng:
+    def test_splitmix_known_vector(self):
+        # Reference values for seed 0 (checked against the canonical
+        # SplitMix64 implementation); rust/src/util/rng.rs pins the same.
+        r = SplitMix64(0)
+        assert r.next_u64() == 0xE220A8397B1DCDAF
+        assert r.next_u64() == 0x6E789E6AA1B965F4
+        assert r.next_u64() == 0x06C45D188009454F
+
+    def test_f64_range(self):
+        r = SplitMix64(42)
+        vals = [r.next_f64() for _ in range(1000)]
+        assert all(0.0 <= v < 1.0 for v in vals)
+        assert 0.4 < float(np.mean(vals)) < 0.6
+
+    @given(st.integers(0, 2**63), st.integers(0, 100), st.integers(0, 10**6))
+    @settings(max_examples=50, deadline=None)
+    def test_derive_seed_deterministic(self, base, stream, idx):
+        assert derive_seed(base, stream, idx) == derive_seed(base, stream, idx)
+
+    def test_hash_noise_matches_scalar_path(self):
+        """Vectorised hash noise == scalar SplitMix64-derived noise."""
+        seed = 0xDEADBEEF
+        vec = data.hash_noise(seed, 7, 16)
+        for i in range(16):
+            s = (seed ^ (7 * 0x9E3779B97F4A7C15) ^ (i * 0xD1B54A32D192ED03)) & ((1 << 64) - 1)
+            u = SplitMix64(s).next_u64()
+            want = (u >> 11) * (1.0 / (1 << 53)) * 2.0 - 1.0
+            np.testing.assert_allclose(vec[i], want, rtol=0, atol=0)
+
+
+class TestClassCorpus:
+    def test_deterministic(self):
+        a, ca = data.gen_class_image(7, 123)
+        b, cb = data.gen_class_image(7, 123)
+        np.testing.assert_array_equal(a, b)
+        assert ca == cb == 123 % 10
+
+    def test_distinct_images(self):
+        a, _ = data.gen_class_image(7, 1)
+        b, _ = data.gen_class_image(7, 11)  # same class, different instance
+        assert np.abs(a - b).max() > 0.05
+
+    def test_shape_and_range(self):
+        img, _ = data.gen_class_image(7, 5)
+        assert img.shape == (32, 32, 3) and img.dtype == np.float32
+        assert -1.0 < img.min() and img.max() < 2.5
+
+    def test_batch_labels_cycle(self):
+        _, ys = data.gen_class_batch(7, 0, 20)
+        assert list(ys) == [i % 10 for i in range(20)]
+
+
+class TestDetectCorpus:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_boxes_in_bounds(self, idx):
+        img, boxes = data.gen_detect_scene(9, idx)
+        assert img.shape == (64, 64, 3)
+        assert 1 <= len(boxes) <= data.DET_MAX_OBJ
+        for cls, x, y, w, h in boxes:
+            assert 0 <= cls < data.DET_CLASSES
+            assert x >= 0 and y >= 0 and x + w <= 64 and y + h <= 64
+
+    def test_target_encoding_roundtrip(self):
+        _, boxes = data.gen_detect_scene(9, 4)
+        t = data.detect_target(boxes)
+        assert t.shape == (8, 8, 8)
+        assert t[..., 0].sum() <= len(boxes)  # centre collisions may merge
+        # every responsible cell encodes a box of plausible size
+        ys, xs = np.nonzero(t[..., 0])
+        for gy, gx in zip(ys, xs):
+            assert 0.0 < t[gy, gx, 3] <= 1.0 and 0.0 < t[gy, gx, 4] <= 1.0
+
+    def test_deterministic(self):
+        a, ba = data.gen_detect_scene(9, 77)
+        b, bb = data.gen_detect_scene(9, 77)
+        np.testing.assert_array_equal(a, b)
+        assert ba == bb

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes and quantizer parameters and asserts element-wise agreement
+with kernels/ref.py, which in turn is pinned to the paper's Eq. (1)
+semantics (round-half-away, boundary bins reconstruct to c_min/c_max).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import fakequant as fq
+from compile.kernels import moments as mom
+
+
+def arr(shape, lo=-8.0, hi=20.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.uniform(lo, hi, size=shape)).astype(np.float32)
+
+
+# ------------------------------------------------------------- ref semantics
+class TestRefSemantics:
+    def test_boundary_bins_reconstruct_clip_limits(self):
+        x = jnp.array([-100.0, 0.0, 10.0, 100.0], jnp.float32)
+        out = np.asarray(ref.fakequant(x, 0.0, 10.0, 4))
+        assert out[0] == 0.0 and out[1] == 0.0
+        assert out[2] == 10.0 and out[3] == 10.0
+
+    def test_round_half_away(self):
+        # N=11 over [0,10] => unit bins; 0.5 must round UP (away from zero),
+        # where numpy/jnp round() would give 0 (half-to-even).
+        out = np.asarray(ref.quantize_index(jnp.array([0.5], jnp.float32), 0.0, 10.0, 11))
+        assert out[0] == 1.0
+
+    def test_levels_count(self):
+        x = jnp.linspace(-1.0, 12.0, 10_000)
+        q = np.asarray(ref.quantize_index(x, 0.0, 10.0, 5))
+        assert set(np.unique(q)) == {0.0, 1.0, 2.0, 3.0, 4.0}
+
+    def test_half_width_outer_bins(self):
+        # With [0,9], N=4: delta=3. Values < delta/2=1.5 go to bin 0.
+        q = np.asarray(
+            ref.quantize_index(jnp.array([1.49, 1.51, 7.49, 7.51]), 0.0, 9.0, 4)
+        )
+        assert list(q) == [0.0, 1.0, 2.0, 3.0]
+
+    def test_leaky_relu_matches_paper_eq4(self):
+        x = jnp.array([-10.0, -1.0, 0.0, 3.0])
+        out = np.asarray(ref.leaky_relu(x))
+        np.testing.assert_allclose(out, [-1.0, -0.1, 0.0, 3.0], rtol=1e-6)
+
+
+# -------------------------------------------------------- kernel vs oracle
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 4),
+    cols=st.integers(1, 3),
+    c_max=st.floats(0.5, 30.0),
+    levels=st.integers(2, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fakequant_2d_matches_ref(rows, cols, c_max, levels, seed):
+    block = 8
+    x = jnp.asarray(arr((rows * block, cols * fq.LANES), seed=seed))
+    params = jnp.array([[0.0, c_max, (levels - 1.0) / c_max]], jnp.float32)
+    got = np.asarray(fq.fakequant_2d(x, params, block_rows=block))
+    want = np.asarray(ref.fakequant(x, 0.0, c_max, levels))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    c_min=st.floats(-4.0, 0.5),
+    width=st.floats(0.5, 25.0),
+    levels=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fakequant_generic_shape_matches_ref(n, c_min, width, levels, seed):
+    x = jnp.asarray(arr((n,), seed=seed))
+    got = np.asarray(fq.fakequant(x, c_min, c_min + width, levels))
+    want = np.asarray(ref.fakequant(x, c_min, c_min + width, levels))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fakequant_3d_tensor_shape_preserved():
+    x = jnp.asarray(arr((8, 16, 16, 32), seed=3))
+    out = fq.fakequant(x, 0.0, 9.0, 4)
+    assert out.shape == x.shape
+    assert len(np.unique(np.asarray(out))) <= 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 4),
+    cols=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moments_2d_matches_ref(rows, cols, seed):
+    block = 8
+    x = jnp.asarray(arr((rows * block, cols * mom.LANES), seed=seed))
+    s, s2 = mom.moments_2d(x, block_rows=block)
+    rs, rs2 = ref.moments(x)
+    np.testing.assert_allclose(float(s), float(rs), rtol=1e-4)
+    np.testing.assert_allclose(float(s2), float(rs2), rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 4000), seed=st.integers(0, 2**31 - 1))
+def test_moments_generic_matches_numpy(n, seed):
+    x = arr((n,), seed=seed)
+    s, s2 = mom.moments(jnp.asarray(x))
+    np.testing.assert_allclose(float(s), x.sum(), rtol=1e-4)
+    np.testing.assert_allclose(float(s2), (x.astype(np.float64) ** 2).sum(), rtol=1e-4)
+
+
+def test_fakequant_idempotent():
+    """Quantizing an already-quantized tensor is the identity."""
+    x = jnp.asarray(arr((1024,), seed=9))
+    once = fq.fakequant(x, 0.0, 10.0, 5)
+    twice = fq.fakequant(once, 0.0, 10.0, 5)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@pytest.mark.parametrize("levels", [2, 3, 4, 5, 8])
+def test_fakequant_distinct_levels(levels):
+    x = jnp.linspace(-2.0, 15.0, 4096).astype(jnp.float32)
+    out = np.unique(np.asarray(fq.fakequant(x, 0.0, 10.0, levels)))
+    assert len(out) == levels

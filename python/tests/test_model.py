@@ -1,0 +1,95 @@
+"""L2 contracts: shapes, edge∘cloud == full, split-layer distribution shape."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+
+
+@pytest.fixture(scope="module")
+def batch():
+    xs, ys = data.gen_class_batch(123, 0, 4)
+    return jnp.asarray(xs), ys
+
+
+@pytest.fixture(scope="module")
+def det_batch():
+    xs, ts, boxes = data.gen_detect_batch(123, 0, 4)
+    return jnp.asarray(xs), ts, boxes
+
+
+class TestResnet:
+    @pytest.mark.parametrize("split", model.RESNET_SPLITS)
+    def test_split_composition_equals_full(self, batch, split):
+        p = model.init_resnet()
+        x, _ = batch
+        full = model.resnet_full(p, x, split)
+        f = model.resnet_edge(p, x, split)
+        composed = model.resnet_cloud(p, f, split)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(composed), rtol=1e-5)
+
+    @pytest.mark.parametrize("split", model.RESNET_SPLITS)
+    def test_feature_shapes(self, batch, split):
+        p = model.init_resnet()
+        x, _ = batch
+        f = model.resnet_edge(p, x, split)
+        assert f.shape == (4,) + model.RESNET_FEAT_SHAPES[split]
+
+    def test_logit_shape(self, batch):
+        p = model.init_resnet()
+        x, _ = batch
+        assert model.resnet_full(p, x, 2).shape == (4, 10)
+
+    def test_split_layer_is_leaky(self, batch):
+        """Split tensor must contain scaled negatives (leaky ReLU output):
+        min < 0 and every negative value's pre-image magnitude * 0.1."""
+        p = model.init_resnet()
+        x, _ = batch
+        f = np.asarray(model.resnet_edge(p, x, 2))
+        assert f.min() < 0, "leaky split layer should emit negatives"
+        neg_frac = (f < 0).mean()
+        assert 0.05 < neg_frac < 0.95
+
+
+class TestAlex:
+    def test_composition_and_shapes(self, batch):
+        p = model.init_alex()
+        x, _ = batch
+        f = model.alex_edge(p, x)
+        assert f.shape == (4,) + model.ALEX_FEAT_SHAPE
+        np.testing.assert_allclose(
+            np.asarray(model.alex_full(p, x)),
+            np.asarray(model.alex_cloud(p, f)),
+            rtol=1e-5,
+        )
+
+    def test_split_layer_nonnegative(self, batch):
+        """Plain ReLU: c_min = 0 exactly (paper's AlexNet branch)."""
+        p = model.init_alex()
+        x, _ = batch
+        f = np.asarray(model.alex_edge(p, x))
+        assert f.min() >= 0.0
+
+
+class TestDetect:
+    def test_composition_and_shapes(self, det_batch):
+        p = model.init_detect()
+        x, _, _ = det_batch
+        f = model.detect_edge(p, x)
+        assert f.shape == (4,) + model.DETECT_FEAT_SHAPE
+        raw = model.detect_cloud(p, f)
+        assert raw.shape == (4, data.GRID, data.GRID, model.DET_OUT)
+
+    def test_decode_ranges(self, det_batch):
+        p = model.init_detect()
+        x, _, _ = det_batch
+        out = np.asarray(model.detect_decode(model.detect_full(p, x)))
+        assert (out[..., 0] >= 0).all() and (out[..., 0] <= 1).all()
+        np.testing.assert_allclose(out[..., 5:].sum(-1), 1.0, rtol=1e-5)
+
+    def test_split_layer_is_leaky(self, det_batch):
+        p = model.init_detect()
+        x, _, _ = det_batch
+        f = np.asarray(model.detect_edge(p, x))
+        assert f.min() < 0

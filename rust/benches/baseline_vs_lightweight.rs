@@ -1,0 +1,44 @@
+//! §III-E complexity comparison on identical content: lightweight codec
+//! vs the HEVC-SCC-like picture codec (encode side). The paper's claim is
+//! that the lightweight codec is >90% less complex; here both codecs are
+//! measured on the same feature-map-like tensors.
+
+use lwfc::baseline::{HevcLikeConfig, HevcLikeEncoder};
+use lwfc::codec::{Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::tensor::mosaic::{mosaic, PixelRange};
+use lwfc::tensor::Tensor;
+use lwfc::util::bench::{black_box, Bench};
+use lwfc::util::prop::Gen;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut g = Gen::new("b_vs_l", 0);
+    let (h, w, c) = (16usize, 16usize, 32usize);
+    let n = h * w * c;
+    let xs = g.activation_vec(n, 0.3);
+    let t = Tensor::new(&[h, w, c], xs.clone());
+    let range = PixelRange::of(&t);
+
+    let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, 4));
+    let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
+    b.run("lightweight/encode", Some(n as u64), || {
+        black_box(enc.encode(&xs).bytes.len())
+    });
+
+    for (label, ts) in [("ts", true), ("dct_only", false)] {
+        let cfg = HevcLikeConfig {
+            qp: 24,
+            transform_skip: ts,
+        };
+        let hevc = HevcLikeEncoder::new(cfg);
+        b.run(&format!("hevc_like/encode/{label}"), Some(n as u64), || {
+            let (pic, _) = mosaic(&t, range);
+            black_box(hevc.encode(&pic).bytes.len())
+        });
+    }
+
+    // Ratio summary (paper: lightweight <10% of HEVC complexity).
+    let light = b.find("lightweight/encode").unwrap().median_s;
+    let heavy = b.find("hevc_like/encode/ts").unwrap().median_s;
+    println!("\nlightweight/baseline wall-clock ratio: {:.2}% (paper claim: <10%)", 100.0 * light / heavy);
+}

@@ -1,0 +1,48 @@
+//! CABAC engine throughput (bins/s), encode and decode, skewed and
+//! uniform bins — the per-bin cost bounds the whole codec.
+
+use lwfc::codec::cabac::{CabacDecoder, CabacEncoder, Context};
+use lwfc::util::bench::{black_box, Bench};
+use lwfc::util::rng::SplitMix64;
+
+fn main() {
+    let mut b = Bench::new();
+    let n = 100_000usize;
+    let mut rng = SplitMix64::new(1);
+    let skewed: Vec<bool> = (0..n).map(|_| rng.next_u64() % 8 == 0).collect();
+    let uniform: Vec<bool> = (0..n).map(|_| rng.next_u64() & 1 == 1).collect();
+
+    for (label, bits) in [("skewed_p0.125", &skewed), ("uniform_p0.5", &uniform)] {
+        b.run(&format!("encode/{label}"), Some(n as u64), || {
+            let mut ctx = Context::default();
+            let mut enc = CabacEncoder::new();
+            for &bit in bits.iter() {
+                enc.encode(&mut ctx, bit);
+            }
+            black_box(enc.finish().len())
+        });
+        let mut ctx = Context::default();
+        let mut enc = CabacEncoder::new();
+        for &bit in bits.iter() {
+            enc.encode(&mut ctx, bit);
+        }
+        let bytes = enc.finish();
+        b.run(&format!("decode/{label}"), Some(n as u64), || {
+            let mut ctx = Context::default();
+            let mut dec = CabacDecoder::new(&bytes);
+            let mut acc = 0u32;
+            for _ in 0..n {
+                acc += dec.decode(&mut ctx) as u32;
+            }
+            black_box(acc)
+        });
+    }
+
+    b.run("encode/bypass", Some(n as u64), || {
+        let mut enc = CabacEncoder::new();
+        for &bit in uniform.iter() {
+            enc.encode_bypass(bit);
+        }
+        black_box(enc.finish().len())
+    });
+}

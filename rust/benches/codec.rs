@@ -1,0 +1,43 @@
+//! Lightweight-codec throughput: full encode (clip+quant+TU+CABAC) and
+//! decode, per level count, on activation-like tensors. This is the L3
+//! hot path — the §Perf targets in EXPERIMENTS.md come from here.
+
+use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::util::bench::{black_box, Bench};
+use lwfc::util::prop::Gen;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut g = Gen::new("codec_bench", 0);
+    let n = 8192usize; // one ci-resnet split tensor
+    let xs = g.activation_vec(n, 0.3);
+
+    println!("-- encode (8192-element split tensor) --");
+    for levels in [2usize, 4, 8] {
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, levels));
+        let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
+        b.run(&format!("encode/n{levels}"), Some(n as u64), || {
+            black_box(enc.encode(&xs).bytes.len())
+        });
+    }
+
+    println!("-- decode --");
+    for levels in [2usize, 4, 8] {
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, levels));
+        let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
+        let stream = enc.encode(&xs);
+        b.run(&format!("decode/n{levels}"), Some(n as u64), || {
+            black_box(decode(&stream.bytes, n).unwrap().0.len())
+        });
+    }
+
+    println!("-- fake-quant only (no entropy coding) --");
+    let q = UniformQuantizer::new(0.0, 1.5, 4);
+    b.run("fakequant/n4", Some(n as u64), || {
+        let mut acc = 0.0f32;
+        for &x in &xs {
+            acc += q.fake_quant(x);
+        }
+        black_box(acc)
+    });
+}

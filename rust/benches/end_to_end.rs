@@ -1,0 +1,53 @@
+//! End-to-end serving benchmark over the real artifacts: requests/s and
+//! per-stage time through edge fwd -> encode -> decode -> cloud fwd.
+//! Skips (exit 0) if `make artifacts` has not run.
+
+use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
+use lwfc::runtime::Manifest;
+
+fn main() {
+    let Ok(m) = Manifest::load(&Manifest::default_dir()) else {
+        println!("SKIP end_to_end bench: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let task = TaskKind::ClassifyResnet { split: 2 };
+    for workers in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            edge: EdgeConfig {
+                task,
+                quant: QuantSpec::Uniform {
+                    c_min: 0.0,
+                    c_max: 1.45,
+                    levels: 4,
+                },
+                val_seed: m.val_seed,
+                batch: m.serve_batch,
+                adaptive: None,
+            },
+            cloud: CloudConfig {
+                task,
+                val_seed: m.val_seed,
+                batch: m.serve_batch,
+                obj_threshold: 0.3,
+            },
+            edge_workers: workers,
+            requests: 512,
+            queue_capacity: 64,
+            first_index: 0,
+        };
+        match serve(&m, cfg) {
+            Ok(r) => println!(
+                "edge_workers={workers}: {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, top1 {:.4}, {:.3} bits/elem",
+                r.throughput_rps,
+                r.latency_p50_s * 1e3,
+                r.latency_p99_s * 1e3,
+                r.metric,
+                r.bits_per_element
+            ),
+            Err(e) => {
+                eprintln!("serve failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

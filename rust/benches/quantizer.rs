@@ -1,0 +1,39 @@
+//! Quantizer costs: Eq. (1) uniform indexing, ECQ (Algorithm 1) design
+//! time on 100-image training sets, and non-uniform indexing.
+
+use lwfc::codec::{design_ecq, EcqParams, UniformQuantizer};
+use lwfc::util::bench::{black_box, Bench};
+use lwfc::util::prop::Gen;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut g = Gen::new("quantizer_bench", 0);
+    let n = 8192usize;
+    let xs = g.activation_vec(n, 0.3);
+
+    let q = UniformQuantizer::new(0.0, 1.5, 4);
+    b.run("uniform/index", Some(n as u64), || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc += q.index(x) as u32;
+        }
+        black_box(acc)
+    });
+
+    // ECQ design on the paper's protocol scale: 100 images x 8192 elems.
+    let train = g.activation_vec(100 * 1024, 0.3); // trimmed for bench time
+    for levels in [2usize, 4] {
+        b.run(&format!("ecq/design/n{levels}"), Some(train.len() as u64), || {
+            black_box(design_ecq(&train, 0.0, 1.5, EcqParams::pinned(levels, 0.02)).iterations)
+        });
+    }
+
+    let d = design_ecq(&train, 0.0, 1.5, EcqParams::pinned(4, 0.02));
+    b.run("ecq/index", Some(n as u64), || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc += d.quantizer.index(x) as u32;
+        }
+        black_box(acc)
+    });
+}

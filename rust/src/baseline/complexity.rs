@@ -1,0 +1,73 @@
+//! §III-E complexity accounting: analytic per-element operation counts for
+//! the lightweight codec vs the measured per-picture counts of the
+//! picture-codec baseline.
+//!
+//! The paper argues from HM's class-level profile ([40, Table III]) that
+//! the lightweight codec is "well over 90% less complex than HEVC". Here
+//! both codecs are ours, so we can count directly: the lightweight
+//! element pipeline is 2 comparisons + 1 add + 2 multiplies + 1 round +
+//! ~b CABAC bins, while the baseline spends hundreds of multiply-adds per
+//! pixel on transforms, prediction, RD search and coefficient coding.
+
+use crate::baseline::hevc_like::OpCounts;
+
+/// Analytic op count per element of the lightweight codec (§III-E:
+/// "two in-place comparisons, one addition, two multiplications, and one
+/// rounding operation"), plus the expected CABAC bins/element for an
+/// N-level truncated-unary code with bin probabilities `p`.
+#[derive(Clone, Copy, Debug)]
+pub struct LightweightOps {
+    pub compares_per_elem: f64,
+    pub arith_per_elem: f64,
+    pub expected_bins_per_elem: f64,
+}
+
+impl LightweightOps {
+    pub fn for_levels(bin_probs: &[f64]) -> Self {
+        let expected_bins: f64 = bin_probs
+            .iter()
+            .enumerate()
+            .map(|(n, &p)| p * crate::codec::binarize::codeword_len(n, bin_probs.len()) as f64)
+            .sum();
+        Self {
+            compares_per_elem: 2.0,
+            arith_per_elem: 4.0, // 1 add + 2 mul + 1 round
+            expected_bins_per_elem: expected_bins,
+        }
+    }
+
+    pub fn total_per_elem(&self) -> f64 {
+        self.compares_per_elem + self.arith_per_elem + self.expected_bins_per_elem
+    }
+}
+
+/// Ops/element of a baseline-encoded picture.
+pub fn baseline_ops_per_element(ops: &OpCounts, elements: usize) -> f64 {
+    ops.total() as f64 / elements.max(1) as f64
+}
+
+/// The §III-E headline: fraction of baseline complexity needed by the
+/// lightweight codec (paper claims < 10%).
+pub fn relative_complexity(light: &LightweightOps, base: &OpCounts, elements: usize) -> f64 {
+    light.total_per_elem() / baseline_ops_per_element(base, elements)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lightweight_per_element_is_single_digit_ops() {
+        // Uniform 4-level code, activation-like skew.
+        let ops = LightweightOps::for_levels(&[0.7, 0.2, 0.07, 0.03]);
+        assert!(ops.total_per_elem() < 10.0);
+        // Expected bins: 0.7*1 + 0.2*2 + 0.07*3 + 0.03*3 = 1.4
+        assert!((ops.expected_bins_per_elem - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bins_bounded_by_worst_codeword() {
+        let ops = LightweightOps::for_levels(&[0.25; 4]);
+        assert!(ops.expected_bins_per_elem <= 3.0);
+    }
+}

@@ -1,0 +1,508 @@
+//! HEVC-SCC-like intra picture codec — the comparison baseline of the
+//! paper's Figs. 8–10 (HM 16.20 all-intra 4:0:0 with transform skip).
+//!
+//! This is a faithful *structural* stand-in built from the same toolchain
+//! classes the paper's complexity analysis cites (§III-E / [40, Table
+//! III]): intra DC prediction, 8x8 transform (`TComTrQuant`), dead-zone
+//! scalar quantization, zig-zag scan, and CABAC residual coding
+//! (`TEncSbac`/`TEncBinCABAC`) with significance/greater-1/remainder
+//! syntax. A per-block RD decision selects between the DCT and transform
+//! skip (the SCC tool the paper enables), and QP traces the rate curve.
+//!
+//! Substitution note (DESIGN.md §2): absolute HM numbers are not
+//! reproducible offline; what this baseline preserves is (a) a picture
+//! codec's rate-distortion behaviour on mosaicked feature maps, and
+//! (b) the ≥10x complexity gap to the lightweight codec.
+
+use super::transform::{zigzag, Dct8, N};
+use crate::codec::cabac::{CabacDecoder, CabacEncoder, Context};
+use crate::tensor::mosaic::Picture;
+
+/// Encoder configuration: QP follows the HEVC quantizer-step convention
+/// qstep = 2^((QP-4)/6).
+#[derive(Clone, Copy, Debug)]
+pub struct HevcLikeConfig {
+    pub qp: i32,
+    /// Enable the transform-skip RD choice (the SCC tool; when false every
+    /// block uses the DCT — the paper's "TS 4x4 only" ~ off for 8x8).
+    pub transform_skip: bool,
+}
+
+impl HevcLikeConfig {
+    pub fn qstep(&self) -> f32 {
+        2.0f32.powf((self.qp - 4) as f32 / 6.0)
+    }
+
+    /// HM-style lambda for mode decisions.
+    pub fn lambda(&self) -> f64 {
+        0.57 * 2.0f64.powf((self.qp - 12) as f64 / 3.0)
+    }
+}
+
+/// Op-count estimate per encoded picture (for the §III-E comparison).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCounts {
+    pub mults: u64,
+    pub adds: u64,
+    pub cabac_bins: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.mults + self.adds + self.cabac_bins
+    }
+}
+
+struct CoeffContexts {
+    coded_block: [Context; 2],
+    sig: [Context; 6],
+    gt1: [Context; 2],
+    ts_flag: Context,
+}
+
+impl CoeffContexts {
+    fn new() -> Self {
+        Self {
+            coded_block: [Context::default(); 2],
+            sig: [Context::default(); 6],
+            gt1: [Context::default(); 2],
+            ts_flag: Context::default(),
+        }
+    }
+
+    fn sig_ctx(&mut self, scan_pos: usize) -> &mut Context {
+        // Position-class context: earlier (low-frequency) positions are
+        // more likely significant.
+        let class = match scan_pos {
+            0 => 0,
+            1..=2 => 1,
+            3..=5 => 2,
+            6..=13 => 3,
+            14..=27 => 4,
+            _ => 5,
+        };
+        &mut self.sig[class]
+    }
+}
+
+/// Encoded picture bit-stream plus bookkeeping.
+pub struct EncodedPicture {
+    pub bytes: Vec<u8>,
+    pub ops: OpCounts,
+    pub blocks: usize,
+    pub ts_blocks: usize,
+}
+
+const DCT_MULTS_PER_BLOCK: u64 = 2 * (N * N * N) as u64 * 2; // fwd + inv (recon loop)
+const DCT_ADDS_PER_BLOCK: u64 = 2 * (N * N * (N - 1)) as u64 * 2;
+
+pub struct HevcLikeEncoder {
+    dct: Dct8,
+    zig: [usize; N * N],
+    pub config: HevcLikeConfig,
+}
+
+impl HevcLikeEncoder {
+    pub fn new(config: HevcLikeConfig) -> Self {
+        Self {
+            dct: Dct8::new(),
+            zig: zigzag(),
+            config,
+        }
+    }
+
+    /// Encode a monochrome picture; returns the bit-stream (decoder needs
+    /// width/height out of band, as with the paper's fixed mosaic shapes).
+    pub fn encode(&self, pic: &Picture) -> EncodedPicture {
+        assert!(pic.width % N == 0 && pic.height % N == 0, "pad pictures to 8x8");
+        let qstep = self.config.qstep();
+        let lambda = self.config.lambda();
+        let mut ctxs = CoeffContexts::new();
+        let mut enc = CabacEncoder::new();
+        let mut ops = OpCounts::default();
+        let mut recon = vec![0u8; pic.width * pic.height];
+        let (bw, bh) = (pic.width / N, pic.height / N);
+        let mut ts_blocks = 0usize;
+
+        for by in 0..bh {
+            for bx in 0..bw {
+                // ---- intra DC prediction from reconstructed border
+                let pred = dc_pred(&recon, pic.width, pic.height, bx, by);
+                let mut resid = [0.0f32; N * N];
+                for y in 0..N {
+                    for x in 0..N {
+                        let px = pic.at(bx * N + x, by * N + y) as f32;
+                        resid[y * N + x] = px - pred as f32;
+                    }
+                }
+                ops.adds += (N * N) as u64;
+
+                // ---- candidate 1: DCT path
+                let mut coeffs = [0.0f32; N * N];
+                self.dct.forward(&resid, &mut coeffs);
+                let q_dct = quantize(&coeffs, qstep);
+                let (d_dct, bits_dct) = self.rd_block(&q_dct, qstep, &resid, false);
+                ops.mults += DCT_MULTS_PER_BLOCK;
+                ops.adds += DCT_ADDS_PER_BLOCK;
+
+                // ---- candidate 2: transform skip
+                let (use_ts, q_final) = if self.config.transform_skip {
+                    let q_ts = quantize(&resid, qstep);
+                    let (d_ts, bits_ts) = self.rd_block(&q_ts, qstep, &resid, true);
+                    let cost_dct = d_dct + lambda * bits_dct;
+                    let cost_ts = d_ts + lambda * bits_ts;
+                    if cost_ts < cost_dct {
+                        (true, q_ts)
+                    } else {
+                        (false, q_dct)
+                    }
+                } else {
+                    (false, q_dct)
+                };
+                if use_ts {
+                    ts_blocks += 1;
+                }
+
+                // ---- entropy code the block
+                if self.config.transform_skip {
+                    enc.encode(&mut ctxs.ts_flag, use_ts);
+                    ops.cabac_bins += 1;
+                }
+                ops.cabac_bins += self.code_block(&mut enc, &mut ctxs, &q_final);
+
+                // ---- reconstruct for later predictions
+                let rec = self.reconstruct_block(&q_final, qstep, use_ts, pred);
+                for y in 0..N {
+                    for x in 0..N {
+                        recon[(by * N + y) * pic.width + bx * N + x] = rec[y * N + x];
+                    }
+                }
+            }
+        }
+        EncodedPicture {
+            bytes: enc.finish(),
+            ops,
+            blocks: bw * bh,
+            ts_blocks,
+        }
+    }
+
+    /// Distortion (SSE over the block) + bit estimate for RD decisions.
+    fn rd_block(&self, q: &[i32; N * N], qstep: f32, resid: &[f32; N * N], ts: bool) -> (f64, f64) {
+        // Distortion: reconstruct residual and compare.
+        let mut d = 0.0f64;
+        if ts {
+            for i in 0..N * N {
+                let r = q[i] as f32 * qstep;
+                let e = (resid[i] - r) as f64;
+                d += e * e;
+            }
+        } else {
+            let mut deq = [0.0f32; N * N];
+            for i in 0..N * N {
+                deq[i] = q[i] as f32 * qstep;
+            }
+            let mut rec = [0.0f32; N * N];
+            self.dct.inverse(&deq, &mut rec);
+            for i in 0..N * N {
+                let e = (resid[i] - rec[i]) as f64;
+                d += e * e;
+            }
+        }
+        // Bits: crude but monotone estimate (sig + magnitude bits).
+        let mut bits = 1.0f64;
+        for &c in q.iter() {
+            if c != 0 {
+                bits += 3.0 + 2.0 * ((c.unsigned_abs() as f64) + 1.0).log2();
+            } else {
+                bits += 0.4;
+            }
+        }
+        (d, bits)
+    }
+
+    /// CABAC residual syntax: coded_block_flag, then per zig-zag position
+    /// sig_flag; for significant coeffs gt1, remainder (EG0 bypass), sign
+    /// (bypass). Returns bins coded.
+    fn code_block(
+        &self,
+        enc: &mut CabacEncoder,
+        ctxs: &mut CoeffContexts,
+        q: &[i32; N * N],
+    ) -> u64 {
+        let any = q.iter().any(|&c| c != 0);
+        let mut bins = 1u64;
+        enc.encode(&mut ctxs.coded_block[0], any);
+        if !any {
+            return bins;
+        }
+        for (scan_pos, &pos) in self.zig.iter().enumerate() {
+            let c = q[pos];
+            let sig = c != 0;
+            enc.encode(ctxs.sig_ctx(scan_pos), sig);
+            bins += 1;
+            if sig {
+                let mag = c.unsigned_abs();
+                let gt1 = mag > 1;
+                enc.encode(&mut ctxs.gt1[0], gt1);
+                bins += 1;
+                if gt1 {
+                    bins += encode_eg0(enc, mag - 2);
+                }
+                enc.encode_bypass(c < 0);
+                bins += 1;
+            }
+        }
+        bins
+    }
+
+    fn reconstruct_block(&self, q: &[i32; N * N], qstep: f32, ts: bool, pred: u8) -> [u8; N * N] {
+        let mut deq = [0.0f32; N * N];
+        for i in 0..N * N {
+            deq[i] = q[i] as f32 * qstep;
+        }
+        let mut resid = [0.0f32; N * N];
+        if ts {
+            resid = deq;
+        } else {
+            self.dct.inverse(&deq, &mut resid);
+        }
+        let mut out = [0u8; N * N];
+        for i in 0..N * N {
+            out[i] = (pred as f32 + resid[i]).round().clamp(0.0, 255.0) as u8;
+        }
+        out
+    }
+}
+
+/// Dead-zone scalar quantizer (HM intra rounding offset ~ 1/3).
+fn quantize(coeffs: &[f32; N * N], qstep: f32) -> [i32; N * N] {
+    let mut q = [0i32; N * N];
+    for i in 0..N * N {
+        let v = coeffs[i] / qstep;
+        q[i] = (v.abs() + 1.0 / 3.0).floor() as i32 * v.signum() as i32;
+    }
+    q
+}
+
+fn dc_pred(recon: &[u8], width: usize, _height: usize, bx: usize, by: usize) -> u8 {
+    let (x0, y0) = (bx * N, by * N);
+    let mut sum = 0u32;
+    let mut cnt = 0u32;
+    if y0 > 0 {
+        for x in 0..N {
+            sum += recon[(y0 - 1) * width + x0 + x] as u32;
+            cnt += 1;
+        }
+    }
+    if x0 > 0 {
+        for y in 0..N {
+            sum += recon[(y0 + y) * width + x0 - 1] as u32;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 {
+        128
+    } else {
+        ((sum + cnt / 2) / cnt) as u8
+    }
+}
+
+fn encode_eg0(enc: &mut CabacEncoder, v: u32) -> u64 {
+    // Exp-Golomb order 0 in bypass bins.
+    let vv = v as u64 + 1;
+    let nbits = 64 - vv.leading_zeros() as u8;
+    enc.encode_bypass_bits(0, nbits - 1);
+    enc.encode_bypass_bits(vv, nbits);
+    (2 * nbits - 1) as u64
+}
+
+fn decode_eg0(dec: &mut CabacDecoder) -> u32 {
+    let mut zeros = 0u8;
+    while !dec.decode_bypass() {
+        zeros += 1;
+    }
+    let tail = dec.decode_bypass_bits(zeros);
+    ((1u64 << zeros) + tail - 1) as u32
+}
+
+/// Decode a picture produced by [`HevcLikeEncoder::encode`].
+pub fn decode(
+    bytes: &[u8],
+    width: usize,
+    height: usize,
+    config: HevcLikeConfig,
+) -> Result<Picture, String> {
+    if width % N != 0 || height % N != 0 {
+        return Err("picture dims must be multiples of 8".into());
+    }
+    let dct = Dct8::new();
+    let zig = zigzag();
+    let qstep = config.qstep();
+    let mut ctxs = CoeffContexts::new();
+    let mut dec = CabacDecoder::new(bytes);
+    let mut pic = Picture::new(width, height);
+    let (bw, bh) = (width / N, height / N);
+
+    for by in 0..bh {
+        for bx in 0..bw {
+            let pred = dc_pred(&pic.pixels, width, height, bx, by);
+            let use_ts = if config.transform_skip {
+                dec.decode(&mut ctxs.ts_flag)
+            } else {
+                false
+            };
+            // residual syntax
+            let mut q = [0i32; N * N];
+            let any = dec.decode(&mut ctxs.coded_block[0]);
+            if any {
+                for (scan_pos, &pos) in zig.iter().enumerate() {
+                    let sig = dec.decode(ctxs.sig_ctx(scan_pos));
+                    if sig {
+                        let gt1 = dec.decode(&mut ctxs.gt1[0]);
+                        let mag = if gt1 { decode_eg0(&mut dec) + 2 } else { 1 };
+                        let neg = dec.decode_bypass();
+                        q[pos] = if neg { -(mag as i32) } else { mag as i32 };
+                    }
+                }
+            }
+            // reconstruct
+            let mut deq = [0.0f32; N * N];
+            for i in 0..N * N {
+                deq[i] = q[i] as f32 * qstep;
+            }
+            let mut resid = [0.0f32; N * N];
+            if use_ts {
+                resid = deq;
+            } else {
+                dct.inverse(&deq, &mut resid);
+            }
+            for y in 0..N {
+                for x in 0..N {
+                    let v = (pred as f32 + resid[y * N + x]).round().clamp(0.0, 255.0) as u8;
+                    pic.set(bx * N + x, by * N + y, v);
+                }
+            }
+        }
+    }
+    Ok(pic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn test_picture(w: usize, h: usize, seed: u64) -> Picture {
+        // Feature-map-like content: smooth background + per-tile offsets +
+        // sparse bright spots.
+        let mut rng = SplitMix64::new(seed);
+        let mut pic = Picture::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let tile = ((x / 16) + (y / 16) * 7) as f64 * 9.0;
+                let smooth = 60.0 + 40.0 * ((x as f64 * 0.07).sin() + (y as f64 * 0.05).cos());
+                let spike = if rng.next_f64() < 0.02 { 120.0 } else { 0.0 };
+                pic.set(x, y, (tile + smooth + spike).clamp(0.0, 255.0) as u8);
+            }
+        }
+        pic
+    }
+
+    fn roundtrip(qp: i32, ts: bool) -> (f64, f64) {
+        let cfg = HevcLikeConfig {
+            qp,
+            transform_skip: ts,
+        };
+        let pic = test_picture(64, 64, 11);
+        let enc = HevcLikeEncoder::new(cfg);
+        let out = enc.encode(&pic);
+        let back = decode(&out.bytes, 64, 64, cfg).unwrap();
+        let mut sse = 0.0f64;
+        for i in 0..pic.pixels.len() {
+            let d = pic.pixels[i] as f64 - back.pixels[i] as f64;
+            sse += d * d;
+        }
+        let mse = sse / pic.pixels.len() as f64;
+        let bpp = out.bytes.len() as f64 * 8.0 / (64.0 * 64.0);
+        (mse, bpp)
+    }
+
+    #[test]
+    fn encoder_decoder_agree_bit_exactly_on_recon_path() {
+        // The decoder must produce the same picture the encoder's internal
+        // reconstruction loop used, else prediction drifts.
+        let cfg = HevcLikeConfig {
+            qp: 22,
+            transform_skip: true,
+        };
+        let pic = test_picture(32, 32, 5);
+        let enc = HevcLikeEncoder::new(cfg);
+        let out = enc.encode(&pic);
+        let dec1 = decode(&out.bytes, 32, 32, cfg).unwrap();
+        let dec2 = decode(&out.bytes, 32, 32, cfg).unwrap();
+        assert_eq!(dec1, dec2);
+    }
+
+    #[test]
+    fn quality_improves_with_lower_qp() {
+        let (mse_hi_qp, bpp_hi_qp) = roundtrip(34, true);
+        let (mse_lo_qp, bpp_lo_qp) = roundtrip(16, true);
+        assert!(mse_lo_qp < mse_hi_qp, "{mse_lo_qp} !< {mse_hi_qp}");
+        assert!(bpp_lo_qp > bpp_hi_qp, "{bpp_lo_qp} !> {bpp_hi_qp}");
+    }
+
+    #[test]
+    fn near_lossless_at_very_low_qp() {
+        let (mse, _) = roundtrip(1, true);
+        assert!(mse < 1.5, "mse {mse} at QP 1");
+    }
+
+    #[test]
+    fn transform_skip_helps_on_feature_like_content() {
+        // §IV-B: TS improves coding of non-camera content. At minimum it
+        // must never hurt (RD decision), and on spiky tiled content it
+        // should be chosen for a nontrivial share of blocks.
+        let cfg = HevcLikeConfig {
+            qp: 22,
+            transform_skip: true,
+        };
+        let pic = test_picture(64, 64, 13);
+        let out = HevcLikeEncoder::new(cfg).encode(&pic);
+        assert!(out.ts_blocks > 0, "transform skip never chosen");
+        let cfg_no = HevcLikeConfig {
+            qp: 22,
+            transform_skip: false,
+        };
+        let out_no = HevcLikeEncoder::new(cfg_no).encode(&pic);
+        // Compare distortion at (approximately) matched rate by comparing
+        // RD: with TS available the byte size shouldn't be much larger.
+        assert!(out.bytes.len() as f64 <= out_no.bytes.len() as f64 * 1.05);
+    }
+
+    #[test]
+    fn flat_picture_is_cheap() {
+        let cfg = HevcLikeConfig {
+            qp: 22,
+            transform_skip: true,
+        };
+        let mut pic = Picture::new(64, 64);
+        pic.pixels.fill(77);
+        let out = HevcLikeEncoder::new(cfg).encode(&pic);
+        assert!(out.bytes.len() < 80, "flat picture took {} bytes", out.bytes.len());
+        let back = decode(&out.bytes, 64, 64, cfg).unwrap();
+        assert!(back.pixels.iter().all(|&p| (p as i32 - 77).abs() <= 1));
+    }
+
+    #[test]
+    fn op_counts_scale_with_blocks() {
+        let cfg = HevcLikeConfig {
+            qp: 22,
+            transform_skip: false,
+        };
+        let small = HevcLikeEncoder::new(cfg).encode(&test_picture(32, 32, 1));
+        let large = HevcLikeEncoder::new(cfg).encode(&test_picture(64, 64, 1));
+        assert_eq!(small.blocks * 4, large.blocks);
+        assert!(large.ops.mults >= small.ops.mults * 4);
+    }
+}

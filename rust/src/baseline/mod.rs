@@ -1,0 +1,8 @@
+//! Picture-codec baseline (HEVC-SCC analogue) and the complexity
+//! accounting used for the paper's §III-E comparison.
+
+pub mod complexity;
+pub mod hevc_like;
+pub mod transform;
+
+pub use hevc_like::{decode as decode_picture, EncodedPicture, HevcLikeConfig, HevcLikeEncoder};

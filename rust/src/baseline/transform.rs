@@ -1,0 +1,191 @@
+//! 8x8 orthonormal DCT-II for the picture-codec baseline.
+//!
+//! HM uses integer approximations of this transform; the orthonormal
+//! float version has identical energy-compaction behaviour, which is what
+//! the rate-distortion comparison needs (DESIGN.md §2 substitutions).
+
+pub const N: usize = 8;
+
+/// DCT basis matrix C[k][n] = s(k)·cos(π(2n+1)k / 2N).
+fn basis() -> [[f32; N]; N] {
+    let mut c = [[0.0f32; N]; N];
+    for (k, row) in c.iter_mut().enumerate() {
+        let s = if k == 0 {
+            (1.0 / N as f64).sqrt()
+        } else {
+            (2.0 / N as f64).sqrt()
+        };
+        for (n, v) in row.iter_mut().enumerate() {
+            *v = (s * (std::f64::consts::PI * (2.0 * n as f64 + 1.0) * k as f64
+                / (2.0 * N as f64))
+                .cos()) as f32;
+        }
+    }
+    c
+}
+
+/// Precomputed transform (basis is tiny; build once per codec instance).
+pub struct Dct8 {
+    c: [[f32; N]; N],
+}
+
+impl Default for Dct8 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dct8 {
+    pub fn new() -> Self {
+        Self { c: basis() }
+    }
+
+    /// Forward 2-D DCT: Y = C · X · Cᵀ (row transform then column).
+    pub fn forward(&self, x: &[f32; N * N], out: &mut [f32; N * N]) {
+        let mut tmp = [0.0f32; N * N];
+        // rows: tmp = X · Cᵀ
+        for r in 0..N {
+            for k in 0..N {
+                let mut acc = 0.0;
+                for n in 0..N {
+                    acc += x[r * N + n] * self.c[k][n];
+                }
+                tmp[r * N + k] = acc;
+            }
+        }
+        // cols: out = C · tmp
+        for k in 0..N {
+            for col in 0..N {
+                let mut acc = 0.0;
+                for n in 0..N {
+                    acc += self.c[k][n] * tmp[n * N + col];
+                }
+                out[k * N + col] = acc;
+            }
+        }
+    }
+
+    /// Inverse 2-D DCT: X = Cᵀ · Y · C.
+    pub fn inverse(&self, y: &[f32; N * N], out: &mut [f32; N * N]) {
+        let mut tmp = [0.0f32; N * N];
+        for r in 0..N {
+            for n in 0..N {
+                let mut acc = 0.0;
+                for k in 0..N {
+                    acc += y[r * N + k] * self.c[k][n];
+                }
+                tmp[r * N + n] = acc;
+            }
+        }
+        for n in 0..N {
+            for col in 0..N {
+                let mut acc = 0.0;
+                for k in 0..N {
+                    acc += self.c[k][n] * tmp[k * N + col];
+                }
+                out[n * N + col] = acc;
+            }
+        }
+    }
+}
+
+/// Zig-zag scan order for an 8x8 block (low frequencies first).
+pub fn zigzag() -> [usize; N * N] {
+    let mut order = [0usize; N * N];
+    let mut idx = 0;
+    for s in 0..(2 * N - 1) {
+        let range: Vec<usize> = (0..N).filter(|&i| s >= i && s - i < N).collect();
+        let cells: Vec<(usize, usize)> = if s % 2 == 0 {
+            range.iter().rev().map(|&i| (i, s - i)).collect()
+        } else {
+            range.iter().map(|&i| (i, s - i)).collect()
+        };
+        for (r, c) in cells {
+            order[idx] = r * N + c;
+            idx += 1;
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn roundtrip_identity() {
+        let dct = Dct8::new();
+        let mut rng = SplitMix64::new(3);
+        let mut x = [0.0f32; 64];
+        for v in x.iter_mut() {
+            *v = rng.uniform(-128.0, 128.0) as f32;
+        }
+        let mut y = [0.0f32; 64];
+        let mut back = [0.0f32; 64];
+        dct.forward(&x, &mut y);
+        dct.inverse(&y, &mut back);
+        for i in 0..64 {
+            assert!((x[i] - back[i]).abs() < 1e-3, "i={i}: {} vs {}", x[i], back[i]);
+        }
+    }
+
+    #[test]
+    fn orthonormal_energy_preserved() {
+        let dct = Dct8::new();
+        let mut rng = SplitMix64::new(4);
+        let mut x = [0.0f32; 64];
+        for v in x.iter_mut() {
+            *v = rng.uniform(-1.0, 1.0) as f32;
+        }
+        let mut y = [0.0f32; 64];
+        dct.forward(&x, &mut y);
+        let ex: f32 = x.iter().map(|v| v * v).sum();
+        let ey: f32 = y.iter().map(|v| v * v).sum();
+        assert!((ex - ey).abs() < 1e-3 * ex, "{ex} vs {ey}");
+    }
+
+    #[test]
+    fn dc_of_flat_block() {
+        let dct = Dct8::new();
+        let x = [10.0f32; 64];
+        let mut y = [0.0f32; 64];
+        dct.forward(&x, &mut y);
+        assert!((y[0] - 80.0).abs() < 1e-3); // 10·N·(1/√N)·... = 10·8 = 80
+        for (i, &v) in y.iter().enumerate().skip(1) {
+            assert!(v.abs() < 1e-3, "AC {i} = {v}");
+        }
+    }
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let z = zigzag();
+        let mut seen = [false; 64];
+        for &i in &z {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert_eq!(z[0], 0);
+        assert_eq!(z[1], 1); // (0,1) comes before (1,0) on the first diagonal pair
+        assert_eq!(z[2], 8);
+        assert_eq!(z[63], 63);
+    }
+
+    #[test]
+    fn smooth_block_compacts_energy() {
+        // A horizontal ramp should put nearly all energy in the first row
+        // of coefficients.
+        let dct = Dct8::new();
+        let mut x = [0.0f32; 64];
+        for r in 0..8 {
+            for c in 0..8 {
+                x[r * 8 + c] = c as f32;
+            }
+        }
+        let mut y = [0.0f32; 64];
+        dct.forward(&x, &mut y);
+        let total: f32 = y.iter().map(|v| v * v).sum();
+        let first_row: f32 = y[..8].iter().map(|v| v * v).sum();
+        assert!(first_row > 0.999 * total);
+    }
+}

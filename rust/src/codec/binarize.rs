@@ -1,0 +1,123 @@
+//! Truncated-unary binarization (paper §III-D).
+//!
+//! A quantizer index `n` in `0..N` maps to `n` ones followed by a zero,
+//! except the maximum index `N-1` which is just `N-1` ones. Small indices
+//! (the dense mass near zero after clipping) get the shortest codewords.
+//!
+//! For a 4-level quantizer: 0→`0`, 1→`10`, 2→`110`, 3→`111`.
+
+/// Codeword length `b_n` of index `n` for an N-level truncated-unary code —
+/// the rate term of the modified ECQ design (Algorithm 1).
+#[inline]
+pub fn codeword_len(n: usize, levels: usize) -> usize {
+    debug_assert!(n < levels);
+    if n + 1 == levels {
+        n.max(1) // N-1 ones; for N=1 degenerate single symbol, 1 bit
+    } else {
+        n + 1
+    }
+}
+
+/// All codeword lengths for an N-level code.
+pub fn codeword_lens(levels: usize) -> Vec<usize> {
+    (0..levels).map(|n| codeword_len(n, levels)).collect()
+}
+
+/// Emit the truncated-unary bits of `n` via a per-position callback
+/// (position = index of the bit within the codeword, which is also the
+/// CABAC context id per the paper).
+#[inline]
+pub fn encode_tu(n: usize, levels: usize, mut emit: impl FnMut(usize, bool)) {
+    debug_assert!(n < levels && levels >= 2);
+    let ones = n;
+    for pos in 0..ones {
+        emit(pos, true);
+    }
+    if n + 1 != levels {
+        emit(ones, false);
+    }
+}
+
+/// Decode one truncated-unary symbol by pulling bits via a per-position
+/// callback until a zero or the maximum length is reached.
+#[inline]
+pub fn decode_tu(levels: usize, mut next: impl FnMut(usize) -> bool) -> usize {
+    debug_assert!(levels >= 2);
+    let mut n = 0usize;
+    while n + 1 < levels {
+        if next(n) {
+            n += 1;
+        } else {
+            break;
+        }
+    }
+    n
+}
+
+/// Number of CABAC contexts needed for an N-level code: one per bit
+/// position, and the longest codeword has N-1 bits.
+#[inline]
+pub fn num_contexts(levels: usize) -> usize {
+    (levels - 1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn bits_of(n: usize, levels: usize) -> Vec<bool> {
+        let mut v = Vec::new();
+        encode_tu(n, levels, |_pos, b| v.push(b));
+        v
+    }
+
+    #[test]
+    fn paper_example_4_level() {
+        // §III-D: n = {0,1,2,3} -> {0, 10, 110, 111}
+        assert_eq!(bits_of(0, 4), vec![false]);
+        assert_eq!(bits_of(1, 4), vec![true, false]);
+        assert_eq!(bits_of(2, 4), vec![true, true, false]);
+        assert_eq!(bits_of(3, 4), vec![true, true, true]);
+    }
+
+    #[test]
+    fn lens_match_emitted_bits() {
+        for levels in 2..=17 {
+            for n in 0..levels {
+                assert_eq!(
+                    bits_of(n, levels).len(),
+                    codeword_len(n, levels),
+                    "levels={levels} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn code_is_prefix_free_and_decodable() {
+        prop_check("tu_roundtrip", 200, |g| {
+            let levels = g.usize_in(2, 16);
+            let syms: Vec<usize> = (0..g.usize_in(1, 200)).map(|_| g.usize_in(0, levels - 1)).collect();
+            let mut stream = Vec::new();
+            for &s in &syms {
+                encode_tu(s, levels, |_p, b| stream.push(b));
+            }
+            let mut it = stream.into_iter();
+            for &s in &syms {
+                let got = decode_tu(levels, |_p| it.next().expect("stream underrun"));
+                crate::prop_assert!(got == s, "decoded {got} expected {s} (levels={levels})");
+            }
+            crate::prop_assert!(it.next().is_none(), "stream not fully consumed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn positions_are_context_ids() {
+        let mut positions = Vec::new();
+        encode_tu(2, 4, |pos, _b| positions.push(pos));
+        assert_eq!(positions, vec![0, 1, 2]);
+        assert_eq!(num_contexts(4), 3); // three contexts for the 2-bit example
+    }
+}

@@ -1,0 +1,184 @@
+//! Byte/bit stream primitives shared by the lightweight codec and the
+//! picture-codec baseline.
+
+/// MSB-first bit writer over a growable byte buffer.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.bytes.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    #[inline]
+    pub fn put_bits(&mut self, value: u64, count: u8) {
+        debug_assert!(count <= 64);
+        for i in (0..count).rev() {
+            self.put_bit((value >> i) & 1 == 1);
+        }
+    }
+
+    pub fn put_byte(&mut self, b: u8) {
+        self.put_bits(b as u64, 8);
+    }
+
+    /// Unsigned Exp-Golomb (k = 0), used by the baseline codec's headers.
+    pub fn put_ue(&mut self, v: u32) {
+        let vv = v as u64 + 1;
+        let nbits = 64 - vv.leading_zeros() as u8;
+        self.put_bits(0, nbits - 1);
+        self.put_bits(vv, nbits);
+    }
+
+    /// Signed Exp-Golomb: 0, 1, -1, 2, -2, ...
+    pub fn put_se(&mut self, v: i32) {
+        let mapped = if v <= 0 { (-2 * v) as u32 } else { (2 * v - 1) as u32 };
+        self.put_ue(mapped);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bytes.len() * 8 + self.nbits as usize
+    }
+
+    /// Pad with zero bits to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits != 0 {
+            self.put_bit(false);
+        }
+        self.bytes
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool, String> {
+        let byte = self.pos / 8;
+        if byte >= self.bytes.len() {
+            return Err("bitstream exhausted".into());
+        }
+        let bit = (self.bytes[byte] >> (7 - (self.pos % 8))) & 1;
+        self.pos += 1;
+        Ok(bit == 1)
+    }
+
+    #[inline]
+    pub fn get_bits(&mut self, count: u8) -> Result<u64, String> {
+        let mut v = 0u64;
+        for _ in 0..count {
+            v = (v << 1) | self.get_bit()? as u64;
+        }
+        Ok(v)
+    }
+
+    pub fn get_byte(&mut self) -> Result<u8, String> {
+        Ok(self.get_bits(8)? as u8)
+    }
+
+    pub fn get_ue(&mut self) -> Result<u32, String> {
+        let mut zeros = 0u8;
+        while !self.get_bit()? {
+            zeros += 1;
+            if zeros > 32 {
+                return Err("corrupt ue(v)".into());
+            }
+        }
+        let tail = self.get_bits(zeros)?;
+        Ok(((1u64 << zeros) + tail - 1) as u32)
+    }
+
+    pub fn get_se(&mut self) -> Result<i32, String> {
+        let u = self.get_ue()? as i64;
+        Ok(if u % 2 == 0 { (-u / 2) as i32 } else { ((u + 1) / 2) as i32 })
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn bits_roundtrip() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bit(true);
+        w.put_bits(0xABCD, 16);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4).unwrap(), 0b1011);
+        assert!(r.get_bit().unwrap());
+        assert_eq!(r.get_bits(16).unwrap(), 0xABCD);
+    }
+
+    #[test]
+    fn exp_golomb_roundtrip() {
+        prop_check("exp_golomb", 300, |g| {
+            let vals: Vec<u32> = (0..g.usize_in(1, 50)).map(|_| g.u64() as u32 >> 8).collect();
+            let svals: Vec<i32> = (0..g.usize_in(1, 50))
+                .map(|_| g.i64_in(-100_000, 100_000) as i32)
+                .collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                w.put_ue(v);
+            }
+            for &v in &svals {
+                w.put_se(v);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                crate::prop_assert!(r.get_ue().map_err(|e| e.to_string())? == v, "ue mismatch for {v}");
+            }
+            for &v in &svals {
+                crate::prop_assert!(r.get_se().map_err(|e| e.to_string())? == v, "se mismatch for {v}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exhaustion_is_error() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert!(r.get_bits(8).is_ok());
+        assert!(r.get_bit().is_err());
+    }
+
+    #[test]
+    fn ue_small_values_canonical() {
+        // ue(0)=1, ue(1)=010, ue(2)=011
+        let mut w = BitWriter::new();
+        w.put_ue(0);
+        w.put_ue(1);
+        w.put_ue(2);
+        assert_eq!(w.bit_len(), 1 + 3 + 3);
+    }
+}

@@ -1,0 +1,352 @@
+//! Modified entropy-constrained quantizer design (paper Algorithm 1).
+//!
+//! Entropy-constrained scalar quantization (Chou–Lookabaugh–Gray) adapted
+//! for clipped activations with two modifications (shaded steps in the
+//! paper's Algorithm 1):
+//!
+//! 1. **Boundary pinning** — the smallest and largest reconstruction
+//!    values are pinned to `c_min`/`c_max` every iteration, so decoded
+//!    activations span the full optimal clipping range (under coarse
+//!    quantization the DNN is very sensitive to that span, §III-C).
+//! 2. **Known codeword lengths** — the rate term uses the truncated-unary
+//!    codeword length `b_n` rather than `log2(p_n)`, since the binarization
+//!    is fixed.
+//!
+//! The Lagrangian in Step 3 is `(x - x̂_n)² + λ·b_n` (the paper prints a
+//! minus sign, but its own Step-6 threshold formula is the stationarity
+//! condition of the *plus* form — D + λR — which is what conventional
+//! ECQ minimizes, so we implement that).
+//!
+//! `design_conventional` (pinning disabled, centroids everywhere) is the
+//! baseline the paper compares against in Figs. 9–10.
+
+use super::binarize::codeword_lens;
+use super::uniform::clip;
+
+/// Non-uniform scalar quantizer: sorted reconstruction levels plus the
+/// decision thresholds between them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NonUniformQuantizer {
+    pub recon: Vec<f32>,
+    pub thresholds: Vec<f32>, // thresholds[i] separates bin i and i+1
+    pub c_min: f32,
+    pub c_max: f32,
+}
+
+impl NonUniformQuantizer {
+    pub fn levels(&self) -> usize {
+        self.recon.len()
+    }
+
+    /// Index of x: first bin whose upper threshold exceeds x (linear scan —
+    /// N ≤ 8 in all paper operating points, so this beats binary search).
+    #[inline]
+    pub fn index(&self, x: f32) -> u16 {
+        let xc = clip(x, self.c_min, self.c_max);
+        let mut n = 0u16;
+        for &t in &self.thresholds {
+            if xc >= t {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        n
+    }
+
+    #[inline]
+    pub fn reconstruct(&self, n: u16) -> f32 {
+        self.recon[n as usize]
+    }
+
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.reconstruct(self.index(x))
+    }
+}
+
+/// Design parameters for Algorithm 1.
+#[derive(Clone, Copy, Debug)]
+pub struct EcqParams {
+    pub levels: usize,
+    /// Lagrange multiplier λ: small → minimize distortion (bigger stream),
+    /// large → minimize rate (more distortion). Sweeps λ trace the RD curve.
+    pub lambda: f64,
+    /// Pin x̂_0 = c_min and x̂_{N-1} = c_max (the paper's modification).
+    pub pin_boundaries: bool,
+    pub max_iters: usize,
+    /// Stop when the relative cost reduction falls below this.
+    pub tol: f64,
+}
+
+impl EcqParams {
+    pub fn pinned(levels: usize, lambda: f64) -> Self {
+        Self {
+            levels,
+            lambda,
+            pin_boundaries: true,
+            max_iters: 100,
+            tol: 1e-6,
+        }
+    }
+
+    pub fn conventional(levels: usize, lambda: f64) -> Self {
+        Self {
+            pin_boundaries: false,
+            ..Self::pinned(levels, lambda)
+        }
+    }
+}
+
+/// Outcome of a design run (quantizer + cost trace for diagnostics).
+#[derive(Clone, Debug)]
+pub struct EcqDesign {
+    pub quantizer: NonUniformQuantizer,
+    pub iterations: usize,
+    pub final_cost: f64,
+}
+
+/// Algorithm 1: design an N-level quantizer from training samples.
+///
+/// `samples` are the activations of ~100 validation images in the paper;
+/// they are clipped to `[c_min, c_max]` in Step 1.
+pub fn design(samples: &[f32], c_min: f32, c_max: f32, params: EcqParams) -> EcqDesign {
+    let n_levels = params.levels;
+    assert!(n_levels >= 2, "need >= 2 levels");
+    assert!(c_max > c_min, "bad clip range");
+    assert!(!samples.is_empty(), "need training samples");
+
+    // Step 1: clip the training samples.
+    let clipped: Vec<f32> = samples.iter().map(|&x| clip(x, c_min, c_max)).collect();
+
+    // Rate term: known truncated-unary codeword lengths b_n.
+    let lens = codeword_lens(n_levels);
+    let lambda = params.lambda;
+
+    // Step 2: initialize reconstruction values uniformly.
+    let mut recon: Vec<f64> = (0..n_levels)
+        .map(|n| c_min as f64 + (c_max - c_min) as f64 * n as f64 / (n_levels - 1) as f64)
+        .collect();
+
+    let mut prev_cost = f64::INFINITY;
+    let mut iters = 0;
+    let mut cost = prev_cost;
+    let mut sums = vec![0.0f64; n_levels];
+    let mut counts = vec![0u64; n_levels];
+
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        // Step 3: assign samples to the bin minimizing (x - x̂_n)² + λ b_n.
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        counts.iter_mut().for_each(|c| *c = 0);
+        cost = 0.0;
+        for &x in &clipped {
+            let x = x as f64;
+            let mut best_n = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for (n, &r) in recon.iter().enumerate() {
+                let d = x - r;
+                let c = d * d + lambda * lens[n] as f64;
+                if c < best_cost {
+                    best_cost = c;
+                    best_n = n;
+                }
+            }
+            sums[best_n] += x;
+            counts[best_n] += 1;
+            cost += best_cost;
+        }
+        cost /= clipped.len() as f64;
+
+        // Step 4: recompute reconstruction values (centroids), with the
+        // outermost values pinned to the clip limits in the modified form.
+        for n in 0..n_levels {
+            let pinned_low = params.pin_boundaries && n == 0;
+            let pinned_high = params.pin_boundaries && n == n_levels - 1;
+            if pinned_low {
+                recon[n] = c_min as f64;
+            } else if pinned_high {
+                recon[n] = c_max as f64;
+            } else if counts[n] > 0 {
+                recon[n] = sums[n] / counts[n] as f64;
+            }
+            // Empty unpinned bins keep their previous value.
+        }
+        // Keep levels sorted (centroid updates preserve order when bins are
+        // ordered, but empty-bin carry-over can in principle collide).
+        recon.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // Step 5: stop when the cost reduction is below threshold.
+        if prev_cost.is_finite() && (prev_cost - cost).abs() <= params.tol * prev_cost.abs() {
+            break;
+        }
+        prev_cost = cost;
+    }
+
+    // Step 6: decision thresholds from the Lagrangian stationarity
+    // condition between adjacent bins.
+    let mut thresholds = Vec::with_capacity(n_levels - 1);
+    for n in 1..n_levels {
+        let (r0, r1) = (recon[n - 1], recon[n]);
+        let midpoint = 0.5 * (r0 + r1);
+        let gap = r1 - r0;
+        let t = if gap.abs() < 1e-12 {
+            midpoint
+        } else {
+            midpoint + lambda * (lens[n] as f64 - lens[n - 1] as f64) / (2.0 * gap)
+        };
+        // Thresholds must stay ordered and inside the clip range.
+        let lo = thresholds.last().copied().unwrap_or(c_min);
+        thresholds.push((t as f32).clamp(lo, c_max));
+    }
+
+    EcqDesign {
+        quantizer: NonUniformQuantizer {
+            recon: recon.iter().map(|&r| r as f32).collect(),
+            thresholds,
+            c_min,
+            c_max,
+        },
+        iterations: iters,
+        final_cost: cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::SplitMix64;
+
+    /// Activation-like samples: leaky-ReLU'd asymmetric Laplace.
+    fn activation_samples(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| {
+                let e = -rng.next_f64().max(1e-12).ln(); // Exp(1)
+                let x = if rng.next_f64() < 0.3 { -0.4 * e } else { 2.0 * e };
+                (if x < 0.0 { 0.1 * x } else { x }) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pinned_design_spans_clip_range() {
+        let xs = activation_samples(20_000, 1);
+        let d = design(&xs, 0.0, 8.0, EcqParams::pinned(4, 0.01));
+        let q = &d.quantizer;
+        assert_eq!(q.recon[0], 0.0);
+        assert_eq!(q.recon[3], 8.0);
+        assert!(q.recon.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn conventional_design_shrinks_span() {
+        // The paper's motivation for pinning: conventional ECQ puts the
+        // outer reconstruction at the bin centroid, strictly inside the
+        // clip range.
+        let xs = activation_samples(20_000, 2);
+        let d = design(&xs, 0.0, 8.0, EcqParams::conventional(4, 0.01));
+        let q = &d.quantizer;
+        assert!(q.recon[0] > 0.0, "low end should be a centroid > c_min");
+        assert!(q.recon[3] < 8.0, "high end should be a centroid < c_max");
+    }
+
+    #[test]
+    fn quantizer_maps_to_nearest_cost_bin() {
+        let xs = activation_samples(10_000, 3);
+        let d = design(&xs, 0.0, 6.0, EcqParams::pinned(4, 0.02));
+        let q = &d.quantizer;
+        let lens = codeword_lens(4);
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..2000 {
+            let x = rng.uniform(-1.0, 8.0) as f32;
+            let xc = clip(x, 0.0, 6.0) as f64;
+            let n = q.index(x) as usize;
+            let cost_n = (xc - q.recon[n] as f64).powi(2) + 0.02 * lens[n] as f64;
+            for (m, &r) in q.recon.iter().enumerate() {
+                let cost_m = (xc - r as f64).powi(2) + 0.02 * lens[m] as f64;
+                assert!(
+                    cost_n <= cost_m + 1e-6,
+                    "x={x}: bin {n} (cost {cost_n}) loses to bin {m} (cost {cost_m})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_zero_is_lloyd_max_like() {
+        // λ=0 reduces to MSE-only design: thresholds are midpoints.
+        let xs = activation_samples(20_000, 5);
+        let d = design(&xs, 0.0, 8.0, EcqParams::conventional(5, 0.0));
+        let q = &d.quantizer;
+        for n in 1..5 {
+            let mid = 0.5 * (q.recon[n - 1] + q.recon[n]);
+            assert!((q.thresholds[n - 1] - mid).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn larger_lambda_biases_toward_short_codewords() {
+        let xs = activation_samples(50_000, 6);
+        let count_bin0 = |lambda: f64| {
+            let d = design(&xs, 0.0, 8.0, EcqParams::pinned(4, lambda));
+            xs.iter().filter(|&&x| d.quantizer.index(x) == 0).count()
+        };
+        // Bin 0 has the shortest TU codeword (1 bit) — higher λ must not
+        // shrink its share.
+        assert!(count_bin0(1.0) >= count_bin0(0.001));
+    }
+
+    #[test]
+    fn design_converges() {
+        let xs = activation_samples(5000, 7);
+        let d = design(&xs, 0.0, 5.0, EcqParams::pinned(3, 0.05));
+        assert!(d.iterations < 100, "should converge before max_iters");
+        assert!(d.final_cost.is_finite());
+    }
+
+    #[test]
+    fn prop_design_invariants() {
+        prop_check("ecq_invariants", 30, |g| {
+            let n = g.usize_in(200, 3000);
+            let levels = g.usize_in(2, 8);
+            let lambda = g.f64_in(0.0, 0.5);
+            let c_max = g.f32_in(1.0, 12.0);
+            let pinned = g.bool();
+            let xs = g.activation_vec(n, 1.5);
+            let params = if pinned {
+                EcqParams::pinned(levels, lambda)
+            } else {
+                EcqParams::conventional(levels, lambda)
+            };
+            let d = design(&xs, 0.0, c_max, params);
+            let q = &d.quantizer;
+            crate::prop_assert!(q.recon.len() == levels, "level count");
+            crate::prop_assert!(
+                q.recon.windows(2).all(|w| w[0] <= w[1]),
+                "recon not sorted: {:?}",
+                q.recon
+            );
+            crate::prop_assert!(
+                q.thresholds.windows(2).all(|w| w[0] <= w[1]),
+                "thresholds not sorted"
+            );
+            crate::prop_assert!(
+                q.recon.iter().all(|&r| r >= 0.0 && r <= c_max),
+                "recon outside clip range"
+            );
+            if pinned {
+                crate::prop_assert!(q.recon[0] == 0.0, "low pin");
+                crate::prop_assert!(q.recon[levels - 1] == c_max, "high pin");
+            }
+            // Round-trip stability of the deployed quantizer.
+            for _ in 0..50 {
+                let x = g.f32_in(-2.0, c_max + 3.0);
+                let y = q.fake_quant(x);
+                crate::prop_assert!(q.fake_quant(y) == y, "not idempotent");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,292 @@
+//! Bit-stream side information (paper §IV: "the bit-streams also included
+//! side information needed by the decoder, e.g. c_min, c_max, N, and some
+//! dimensional parameters for object detection, which together comprised
+//! 24 bytes for object detection and 12 bytes for classification").
+//!
+//! Layout (little-endian), 12 bytes for classification:
+//!
+//! ```text
+//! 0     kind (low nibble: 0=classification, 1=detection)
+//!       | quantizer type (high nibble: 0=uniform, 1=entropy-constrained)
+//! 1     N, number of quantizer levels (2..=255)
+//! 2-5   c_min (f32)
+//! 6-9   c_max (f32)
+//! 10-11 source image width, height (u8 each — 32/64-px synthetic inputs)
+//! ```
+//!
+//! Detection appends 12 more bytes (total 24): network input width/height
+//! (u16), feature h/w/c (u16) used for bounding-box back-projection, and
+//! 2 reserved bytes.
+//!
+//! When the entropy-constrained quantizer is used, the N reconstruction
+//! values follow the fixed header as f32s (the paper's decoder knows them
+//! out-of-band from the design phase; we put them in-band and charge the
+//! bits to the stream — a conservative accounting difference recorded in
+//! EXPERIMENTS.md).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKind {
+    Classification,
+    Detection,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantKind {
+    Uniform,
+    EntropyConstrained,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Header {
+    pub kind: StreamKind,
+    pub quant: QuantKind,
+    pub levels: usize,
+    pub c_min: f32,
+    pub c_max: f32,
+    pub img_w: u8,
+    pub img_h: u8,
+    /// Detection-only extras (network input + feature dims).
+    pub det: Option<DetInfo>,
+    /// ECQ reconstruction table (present iff quant == EntropyConstrained).
+    pub recon: Option<Vec<f32>>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DetInfo {
+    pub net_w: u16,
+    pub net_h: u16,
+    pub feat_h: u16,
+    pub feat_w: u16,
+    pub feat_c: u16,
+}
+
+pub const CLS_HEADER_BYTES: usize = 12;
+pub const DET_HEADER_BYTES: usize = 24;
+
+impl Header {
+    pub fn fixed_len(&self) -> usize {
+        match self.kind {
+            StreamKind::Classification => CLS_HEADER_BYTES,
+            StreamKind::Detection => DET_HEADER_BYTES,
+        }
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        self.fixed_len() + self.recon.as_ref().map_or(0, |r| r.len() * 4)
+    }
+
+    pub fn write(&self, out: &mut Vec<u8>) {
+        let kind_nibble = match self.kind {
+            StreamKind::Classification => 0u8,
+            StreamKind::Detection => 1u8,
+        };
+        let quant_nibble = match self.quant {
+            QuantKind::Uniform => 0u8,
+            QuantKind::EntropyConstrained => 1u8,
+        };
+        out.push(kind_nibble | (quant_nibble << 4));
+        assert!(
+            (2..=255).contains(&self.levels),
+            "levels out of range: {}",
+            self.levels
+        );
+        out.push(self.levels as u8);
+        out.extend_from_slice(&self.c_min.to_le_bytes());
+        out.extend_from_slice(&self.c_max.to_le_bytes());
+        out.push(self.img_w);
+        out.push(self.img_h);
+        if self.kind == StreamKind::Detection {
+            let d = self.det.expect("detection header needs DetInfo");
+            out.extend_from_slice(&d.net_w.to_le_bytes());
+            out.extend_from_slice(&d.net_h.to_le_bytes());
+            out.extend_from_slice(&d.feat_h.to_le_bytes());
+            out.extend_from_slice(&d.feat_w.to_le_bytes());
+            out.extend_from_slice(&d.feat_c.to_le_bytes());
+            out.extend_from_slice(&[0, 0]); // reserved
+        }
+        match (&self.quant, &self.recon) {
+            (QuantKind::EntropyConstrained, Some(recon)) => {
+                assert_eq!(recon.len(), self.levels, "recon table size");
+                for &r in recon {
+                    out.extend_from_slice(&r.to_le_bytes());
+                }
+            }
+            (QuantKind::EntropyConstrained, None) => panic!("ECQ header needs recon table"),
+            (QuantKind::Uniform, Some(_)) => panic!("uniform header must not carry recon"),
+            (QuantKind::Uniform, None) => {}
+        }
+    }
+
+    pub fn read(bytes: &[u8]) -> Result<(Header, usize), String> {
+        let need = |n: usize| {
+            if bytes.len() < n {
+                Err(format!("header truncated: need {n} bytes, have {}", bytes.len()))
+            } else {
+                Ok(())
+            }
+        };
+        need(CLS_HEADER_BYTES)?;
+        let kind = match bytes[0] & 0x0F {
+            0 => StreamKind::Classification,
+            1 => StreamKind::Detection,
+            k => return Err(format!("bad stream kind {k}")),
+        };
+        let quant = match bytes[0] >> 4 {
+            0 => QuantKind::Uniform,
+            1 => QuantKind::EntropyConstrained,
+            q => return Err(format!("bad quantizer kind {q}")),
+        };
+        let levels = bytes[1] as usize;
+        if levels < 2 {
+            return Err(format!("bad level count {levels}"));
+        }
+        let f32_at =
+            |i: usize| f32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
+        let c_min = f32_at(2);
+        let c_max = f32_at(6);
+        if !(c_max > c_min) || !c_min.is_finite() || !c_max.is_finite() {
+            return Err(format!("bad clip range [{c_min}, {c_max}]"));
+        }
+        let img_w = bytes[10];
+        let img_h = bytes[11];
+        let mut off = CLS_HEADER_BYTES;
+        let det = if kind == StreamKind::Detection {
+            need(DET_HEADER_BYTES)?;
+            let u16_at = |i: usize| u16::from_le_bytes([bytes[i], bytes[i + 1]]);
+            let d = DetInfo {
+                net_w: u16_at(12),
+                net_h: u16_at(14),
+                feat_h: u16_at(16),
+                feat_w: u16_at(18),
+                feat_c: u16_at(20),
+            };
+            off = DET_HEADER_BYTES;
+            Some(d)
+        } else {
+            None
+        };
+        let recon = if quant == QuantKind::EntropyConstrained {
+            need(off + levels * 4)?;
+            let mut r = Vec::with_capacity(levels);
+            for n in 0..levels {
+                r.push(f32_at(off + n * 4));
+            }
+            off += levels * 4;
+            Some(r)
+        } else {
+            None
+        };
+        Ok((
+            Header {
+                kind,
+                quant,
+                levels,
+                c_min,
+                c_max,
+                img_w,
+                img_h,
+                det,
+                recon,
+            },
+            off,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cls_header() -> Header {
+        Header {
+            kind: StreamKind::Classification,
+            quant: QuantKind::Uniform,
+            levels: 4,
+            c_min: 0.0,
+            c_max: 9.03,
+            img_w: 32,
+            img_h: 32,
+            det: None,
+            recon: None,
+        }
+    }
+
+    #[test]
+    fn classification_is_12_bytes_as_in_paper() {
+        let h = cls_header();
+        let mut out = Vec::new();
+        h.write(&mut out);
+        assert_eq!(out.len(), 12);
+    }
+
+    #[test]
+    fn detection_is_24_bytes_as_in_paper() {
+        let h = Header {
+            kind: StreamKind::Detection,
+            det: Some(DetInfo {
+                net_w: 64,
+                net_h: 64,
+                feat_h: 16,
+                feat_w: 16,
+                feat_c: 32,
+            }),
+            img_w: 64,
+            img_h: 64,
+            ..cls_header()
+        };
+        let mut out = Vec::new();
+        h.write(&mut out);
+        assert_eq!(out.len(), 24);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let variants = vec![
+            cls_header(),
+            Header {
+                quant: QuantKind::EntropyConstrained,
+                recon: Some(vec![0.0, 1.5, 3.3, 9.03]),
+                ..cls_header()
+            },
+            Header {
+                kind: StreamKind::Detection,
+                levels: 2,
+                det: Some(DetInfo {
+                    net_w: 64,
+                    net_h: 64,
+                    feat_h: 16,
+                    feat_w: 16,
+                    feat_c: 32,
+                }),
+                quant: QuantKind::EntropyConstrained,
+                recon: Some(vec![0.0, 1.95]),
+                ..cls_header()
+            },
+        ];
+        for h in variants {
+            let mut out = Vec::new();
+            h.write(&mut out);
+            assert_eq!(out.len(), h.encoded_len());
+            let (back, consumed) = Header::read(&out).unwrap();
+            assert_eq!(back, h);
+            assert_eq!(consumed, out.len());
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_headers() {
+        assert!(Header::read(&[0u8; 4]).is_err()); // truncated
+        let mut out = Vec::new();
+        cls_header().write(&mut out);
+        out[0] = 0x07; // bad kind
+        assert!(Header::read(&out).is_err());
+        let mut out2 = Vec::new();
+        cls_header().write(&mut out2);
+        out2[1] = 1; // bad levels
+        assert!(Header::read(&out2).is_err());
+        let mut out3 = Vec::new();
+        cls_header().write(&mut out3);
+        out3[6..10].copy_from_slice(&f32::NEG_INFINITY.to_le_bytes()); // bad c_max
+        assert!(Header::read(&out3).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's lightweight feature codec (Fig. 1): clipping, coarse
+//! N-level quantization (uniform Eq. (1) or modified entropy-constrained
+//! Algorithm 1), truncated-unary binarization, and simplified CABAC with
+//! one context per bit position.
+//!
+//! Request-path code: everything here is allocation-conscious and
+//! branch-lean; see `rust/benches/codec.rs` for the throughput targets
+//! (§III-E complexity claims).
+
+pub mod binarize;
+pub mod bitstream;
+pub mod cabac;
+pub mod ecq;
+pub mod header;
+pub mod stream;
+pub mod uniform;
+
+pub use ecq::{design as design_ecq, EcqDesign, EcqParams, NonUniformQuantizer};
+pub use header::{DetInfo, Header, QuantKind, StreamKind};
+pub use stream::{decode, decode_indices, EncodedStream, Encoder, EncoderConfig, Quantizer};
+pub use uniform::{clip, UniformQuantizer};

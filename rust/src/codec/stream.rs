@@ -1,0 +1,371 @@
+//! Top-level lightweight codec: clip → quantize → truncated-unary
+//! binarization → CABAC (one context per bit position) → bit-stream with
+//! the paper's 12/24-byte side-information header (Fig. 1 pipeline).
+
+use super::binarize::{self, num_contexts};
+use super::cabac::{CabacDecoder, CabacEncoder, Context};
+use super::ecq::NonUniformQuantizer;
+use super::header::{DetInfo, Header, QuantKind, StreamKind};
+use super::uniform::UniformQuantizer;
+
+/// Either quantizer the codec can run (uniform Eq. (1) or Algorithm-1 ECQ).
+#[derive(Clone, Debug)]
+pub enum Quantizer {
+    Uniform(UniformQuantizer),
+    NonUniform(NonUniformQuantizer),
+}
+
+impl Quantizer {
+    pub fn levels(&self) -> usize {
+        match self {
+            Quantizer::Uniform(q) => q.levels,
+            Quantizer::NonUniform(q) => q.levels(),
+        }
+    }
+
+    pub fn c_min(&self) -> f32 {
+        match self {
+            Quantizer::Uniform(q) => q.c_min,
+            Quantizer::NonUniform(q) => q.c_min,
+        }
+    }
+
+    pub fn c_max(&self) -> f32 {
+        match self {
+            Quantizer::Uniform(q) => q.c_max,
+            Quantizer::NonUniform(q) => q.c_max,
+        }
+    }
+
+    #[inline]
+    pub fn index(&self, x: f32) -> u16 {
+        match self {
+            Quantizer::Uniform(q) => q.index(x),
+            Quantizer::NonUniform(q) => q.index(x),
+        }
+    }
+
+    #[inline]
+    pub fn reconstruct(&self, n: u16) -> f32 {
+        match self {
+            Quantizer::Uniform(q) => q.reconstruct(n),
+            Quantizer::NonUniform(q) => q.reconstruct(n),
+        }
+    }
+
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.reconstruct(self.index(x))
+    }
+}
+
+/// Static encoder configuration for one split-layer stream.
+#[derive(Clone, Debug)]
+pub struct EncoderConfig {
+    pub kind: StreamKind,
+    pub quantizer: Quantizer,
+    pub img_w: u8,
+    pub img_h: u8,
+    pub det: Option<DetInfo>,
+}
+
+impl EncoderConfig {
+    pub fn classification(quantizer: Quantizer, img: u8) -> Self {
+        Self {
+            kind: StreamKind::Classification,
+            quantizer,
+            img_w: img,
+            img_h: img,
+            det: None,
+        }
+    }
+
+    pub fn detection(quantizer: Quantizer, img: u8, det: DetInfo) -> Self {
+        Self {
+            kind: StreamKind::Detection,
+            quantizer,
+            img_w: img,
+            img_h: img,
+            det: Some(det),
+        }
+    }
+
+    fn header(&self) -> Header {
+        let (quant, recon) = match &self.quantizer {
+            Quantizer::Uniform(_) => (QuantKind::Uniform, None),
+            Quantizer::NonUniform(q) => (QuantKind::EntropyConstrained, Some(q.recon.clone())),
+        };
+        Header {
+            kind: self.kind,
+            quant,
+            levels: self.quantizer.levels(),
+            c_min: self.quantizer.c_min(),
+            c_max: self.quantizer.c_max(),
+            img_w: self.img_w,
+            img_h: self.img_h,
+            det: self.det,
+            recon,
+        }
+    }
+}
+
+/// Reusable encoder (owns scratch buffers; one per worker thread).
+pub struct Encoder {
+    pub config: EncoderConfig,
+    contexts: Vec<Context>,
+}
+
+/// An encoded feature tensor.
+#[derive(Clone, Debug)]
+pub struct EncodedStream {
+    pub bytes: Vec<u8>,
+    pub elements: usize,
+}
+
+impl EncodedStream {
+    /// Bits per feature-tensor element *including* the side-info header —
+    /// the paper's rate metric (§IV).
+    pub fn bits_per_element(&self) -> f64 {
+        self.bytes.len() as f64 * 8.0 / self.elements.max(1) as f64
+    }
+}
+
+impl Encoder {
+    pub fn new(config: EncoderConfig) -> Self {
+        let nctx = num_contexts(config.quantizer.levels());
+        Self {
+            config,
+            contexts: vec![Context::default(); nctx],
+        }
+    }
+
+    /// Encode one feature tensor into a standalone bit-stream.
+    /// Contexts reset per stream (streams must be independently decodable).
+    pub fn encode(&mut self, data: &[f32]) -> EncodedStream {
+        let levels = self.config.quantizer.levels();
+        let mut bytes = Vec::with_capacity(data.len() / 4 + 32);
+        self.config.header().write(&mut bytes);
+
+        self.contexts.iter_mut().for_each(|c| *c = Context::default());
+        let mut enc = CabacEncoder::new();
+        // Reserve the typical compressed size up front (≈1 bit/element)
+        // so the CABAC output buffer does not reallocate mid-stream.
+        enc.reserve(data.len() / 8 + 64);
+        let q = &self.config.quantizer;
+        // The hot loops below are monomorphic per quantizer kind and
+        // specialised for the 1-bit case (one context, one bin/element) —
+        // see EXPERIMENTS.md §Perf for the measured effect.
+        match q {
+            Quantizer::Uniform(u) if levels == 2 => {
+                let ctx = &mut self.contexts[0];
+                for &x in data {
+                    enc.encode(ctx, u.index(x) != 0);
+                }
+            }
+            Quantizer::Uniform(u) => {
+                for &x in data {
+                    let n = u.index(x) as usize;
+                    binarize::encode_tu(n, levels, |pos, bit| {
+                        enc.encode(&mut self.contexts[pos], bit)
+                    });
+                }
+            }
+            Quantizer::NonUniform(nu) => {
+                for &x in data {
+                    let n = nu.index(x) as usize;
+                    binarize::encode_tu(n, levels, |pos, bit| {
+                        enc.encode(&mut self.contexts[pos], bit)
+                    });
+                }
+            }
+        }
+        bytes.extend_from_slice(&enc.finish());
+        EncodedStream {
+            bytes,
+            elements: data.len(),
+        }
+    }
+}
+
+/// Decode a bit-stream produced by [`Encoder::encode`].
+///
+/// `elements` is the feature-tensor element count, known to both sides
+/// from the network architecture + split point (the header carries only
+/// what the paper's 12/24-byte side info carries).
+pub fn decode(bytes: &[u8], elements: usize) -> Result<(Vec<f32>, Header), String> {
+    let (header, off) = Header::read(bytes)?;
+    let levels = header.levels;
+    let recon_table: Vec<f32> = match (&header.quant, &header.recon) {
+        (QuantKind::Uniform, _) => {
+            UniformQuantizer::new(header.c_min, header.c_max, levels).levels_vec()
+        }
+        (QuantKind::EntropyConstrained, Some(r)) => r.clone(),
+        (QuantKind::EntropyConstrained, None) => unreachable!("Header::read enforces recon"),
+    };
+    let mut contexts = vec![Context::default(); num_contexts(levels)];
+    let mut dec = CabacDecoder::new(&bytes[off..]);
+    let mut out = Vec::with_capacity(elements);
+    for _ in 0..elements {
+        let n = binarize::decode_tu(levels, |pos| dec.decode(&mut contexts[pos]));
+        out.push(recon_table[n]);
+    }
+    Ok((out, header))
+}
+
+/// Decode to quantizer *indices* (for analysis tools and tests).
+pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header), String> {
+    let (header, off) = Header::read(bytes)?;
+    let mut contexts = vec![Context::default(); num_contexts(header.levels)];
+    let mut dec = CabacDecoder::new(&bytes[off..]);
+    let mut out = Vec::with_capacity(elements);
+    for _ in 0..elements {
+        out.push(binarize::decode_tu(header.levels, |pos| dec.decode(&mut contexts[pos])) as u16);
+    }
+    Ok((out, header))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::ecq::{design, EcqParams};
+    use crate::util::prop::prop_check;
+    use crate::util::rng::SplitMix64;
+
+    fn activations(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| {
+                let e = -rng.next_f64().max(1e-12).ln() * 2.0;
+                (if rng.next_f64() < 0.3 { -0.1 * e } else { e }) as f32
+            })
+            .collect()
+    }
+
+    fn uniform_cfg(levels: usize, c_max: f32) -> EncoderConfig {
+        EncoderConfig::classification(
+            Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels)),
+            32,
+        )
+    }
+
+    #[test]
+    fn roundtrip_equals_fake_quant() {
+        let xs = activations(10_000, 1);
+        for levels in [2, 3, 4, 5, 8] {
+            let cfg = uniform_cfg(levels, 6.0);
+            let q = cfg.quantizer.clone();
+            let mut enc = Encoder::new(cfg);
+            let stream = enc.encode(&xs);
+            let (decoded, header) = decode(&stream.bytes, xs.len()).unwrap();
+            assert_eq!(header.levels, levels);
+            for (i, (&x, &d)) in xs.iter().zip(&decoded).enumerate() {
+                assert_eq!(d, q.fake_quant(x), "element {i} levels {levels}");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_is_below_raw_bits_for_skewed_data() {
+        // Activations concentrate in low bins; entropy coding must beat
+        // ceil(log2(N)) substantially (paper: ~0.6-0.8 bits at N=4).
+        let xs = activations(65_536, 2);
+        let mut enc = Encoder::new(uniform_cfg(4, 6.0));
+        let stream = enc.encode(&xs);
+        let bpe = stream.bits_per_element();
+        assert!(bpe < 1.6, "bits/element {bpe} not < 1.6 for 2-bit quantizer");
+    }
+
+    #[test]
+    fn header_overhead_accounted() {
+        let xs = activations(100, 3);
+        let mut enc = Encoder::new(uniform_cfg(2, 3.0));
+        let stream = enc.encode(&xs);
+        assert!(stream.bytes.len() >= 12 + 5);
+        assert_eq!(stream.elements, 100);
+    }
+
+    #[test]
+    fn ecq_stream_roundtrip() {
+        let xs = activations(20_000, 4);
+        let d = design(&xs, 0.0, 6.0, EcqParams::pinned(4, 0.02));
+        let cfg = EncoderConfig::classification(Quantizer::NonUniform(d.quantizer.clone()), 32);
+        let mut enc = Encoder::new(cfg);
+        let stream = enc.encode(&xs);
+        let (decoded, header) = decode(&stream.bytes, xs.len()).unwrap();
+        assert_eq!(header.quant, QuantKind::EntropyConstrained);
+        assert_eq!(header.recon.as_ref().unwrap(), &d.quantizer.recon);
+        for (&x, &y) in xs.iter().zip(&decoded) {
+            assert_eq!(y, d.quantizer.fake_quant(x));
+        }
+    }
+
+    #[test]
+    fn detection_header_roundtrips() {
+        let xs = activations(4096, 5);
+        let det = DetInfo {
+            net_w: 64,
+            net_h: 64,
+            feat_h: 16,
+            feat_w: 16,
+            feat_c: 32,
+        };
+        let cfg = EncoderConfig::detection(
+            Quantizer::Uniform(UniformQuantizer::new(0.0, 3.2, 4)),
+            64,
+            det,
+        );
+        let mut enc = Encoder::new(cfg);
+        let stream = enc.encode(&xs);
+        let (_, header) = decode(&stream.bytes, xs.len()).unwrap();
+        assert_eq!(header.kind, StreamKind::Detection);
+        assert_eq!(header.det.unwrap(), det);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        // Encoding A then B must decode the same as encoding B alone
+        // (contexts reset per stream).
+        let a = activations(5000, 6);
+        let b = activations(5000, 7);
+        let mut enc = Encoder::new(uniform_cfg(4, 6.0));
+        let _ = enc.encode(&a);
+        let sb = enc.encode(&b);
+        let mut enc2 = Encoder::new(uniform_cfg(4, 6.0));
+        let sb2 = enc2.encode(&b);
+        assert_eq!(sb.bytes, sb2.bytes);
+    }
+
+    #[test]
+    fn prop_roundtrip_many_shapes() {
+        prop_check("stream_roundtrip", 25, |g| {
+            let n = g.usize_in(0, 5000);
+            let levels = g.usize_in(2, 9);
+            let c_max = g.f32_in(0.5, 12.0);
+            let xs = g.activation_vec(n, 2.0);
+            let cfg = uniform_cfg(levels, c_max);
+            let q = cfg.quantizer.clone();
+            let mut enc = Encoder::new(cfg);
+            let stream = enc.encode(&xs);
+            let (decoded, _) = decode(&stream.bytes, n).map_err(|e| e.to_string())?;
+            crate::prop_assert!(decoded.len() == n, "length");
+            for (i, (&x, &d)) in xs.iter().zip(&decoded).enumerate() {
+                crate::prop_assert!(
+                    d == q.fake_quant(x),
+                    "mismatch at {i}: {d} vs {} (n={n}, levels={levels})",
+                    q.fake_quant(x)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corrupt_stream_reports_error_not_panic() {
+        assert!(decode(&[1, 2, 3], 10).is_err());
+        let xs = activations(100, 8);
+        let mut enc = Encoder::new(uniform_cfg(4, 6.0));
+        let mut bytes = enc.encode(&xs).bytes;
+        bytes.truncate(11); // cut inside the header
+        assert!(decode(&bytes, 100).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Clipping and the paper's N-level uniform scalar quantizer (Eq. (1)).
+//!
+//! `Q(x) = round((clip(x) - c_min) / (c_max - c_min) * (N-1))`, rounding
+//! half away from zero. Reconstruction inverts the affine map, so the
+//! outermost bins (half-width Δ/2) reconstruct exactly to `c_min`/`c_max`
+//! — values clipped to the boundary incur no further quantization error
+//! (§III-B), unlike the mid-rise quantizer of ACIQ [23].
+//!
+//! N need not be a power of two (the index stream is entropy-coded, not
+//! stored at fixed bit-depth).
+
+/// Clip (clamp) to `[c_min, c_max]` — the paper's pre-quantization step.
+#[inline]
+pub fn clip(x: f32, c_min: f32, c_max: f32) -> f32 {
+    // NaN-safe: NaN maps to c_min rather than propagating into the
+    // quantizer index computation.
+    if x >= c_max {
+        c_max
+    } else if x <= c_min {
+        c_min
+    } else if x.is_nan() {
+        c_min
+    } else {
+        x
+    }
+}
+
+/// N-level uniform quantizer over a clipping range.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UniformQuantizer {
+    pub c_min: f32,
+    pub c_max: f32,
+    pub levels: usize,
+    scale: f32,     // (N-1) / (c_max - c_min)
+    inv_scale: f32, // (c_max - c_min) / (N-1)
+}
+
+impl UniformQuantizer {
+    pub fn new(c_min: f32, c_max: f32, levels: usize) -> Self {
+        assert!(levels >= 2, "need at least 2 levels (got {levels})");
+        assert!(
+            c_max > c_min && c_max.is_finite() && c_min.is_finite(),
+            "bad clip range [{c_min}, {c_max}]"
+        );
+        let scale = (levels - 1) as f32 / (c_max - c_min);
+        Self {
+            c_min,
+            c_max,
+            levels,
+            scale,
+            inv_scale: 1.0 / scale,
+        }
+    }
+
+    /// Interior bin width Δ = (c_max - c_min) / (N - 1).
+    pub fn delta(&self) -> f32 {
+        self.inv_scale
+    }
+
+    /// Eq. (1): quantizer index of (clipped) x, in `0..levels`.
+    #[inline(always)]
+    pub fn index(&self, x: f32) -> u16 {
+        let xc = clip(x, self.c_min, self.c_max);
+        // Argument is >= 0, so round-half-away == floor(v + 0.5).
+        ((xc - self.c_min) * self.scale + 0.5) as u16
+    }
+
+    /// Reconstruction value of index `n`.
+    #[inline]
+    pub fn reconstruct(&self, n: u16) -> f32 {
+        debug_assert!((n as usize) < self.levels);
+        if n as usize + 1 == self.levels {
+            self.c_max // exact, avoids f32 rounding drift at the top bin
+        } else {
+            self.c_min + n as f32 * self.inv_scale
+        }
+    }
+
+    /// Fused clip→quantize→dequantize (what the cloud half receives); the
+    /// Rust mirror of the L1 Pallas `fakequant` kernel.
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.reconstruct(self.index(x))
+    }
+
+    pub fn indices(&self, xs: &[f32], out: &mut Vec<u16>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.index(x)));
+    }
+
+    pub fn reconstruct_all(&self, idx: &[u16], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(idx.iter().map(|&n| self.reconstruct(n)));
+    }
+
+    /// Reconstruction levels (for header signaling / ECQ comparison).
+    pub fn levels_vec(&self) -> Vec<f32> {
+        (0..self.levels).map(|n| self.reconstruct(n as u16)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn eq1_example_values() {
+        // [0, 9], N=4: Δ=3; bins: [0,1.5)→0, [1.5,4.5)→1, [4.5,7.5)→2, rest→3
+        let q = UniformQuantizer::new(0.0, 9.0, 4);
+        assert_eq!(q.index(0.0), 0);
+        assert_eq!(q.index(1.49), 0);
+        assert_eq!(q.index(1.5), 1); // round half away
+        assert_eq!(q.index(4.49), 1);
+        assert_eq!(q.index(7.51), 3);
+        assert_eq!(q.index(100.0), 3);
+        assert_eq!(q.index(-5.0), 0);
+    }
+
+    #[test]
+    fn boundary_bins_reconstruct_clip_limits() {
+        let q = UniformQuantizer::new(-1.0, 7.0, 5);
+        assert_eq!(q.reconstruct(0), -1.0);
+        assert_eq!(q.reconstruct(4), 7.0);
+        assert_eq!(q.fake_quant(-100.0), -1.0);
+        assert_eq!(q.fake_quant(100.0), 7.0);
+    }
+
+    #[test]
+    fn nan_maps_to_c_min() {
+        let q = UniformQuantizer::new(0.0, 1.0, 2);
+        assert_eq!(q.index(f32::NAN), 0);
+        assert_eq!(q.fake_quant(f32::NAN), 0.0);
+    }
+
+    #[test]
+    fn fake_quant_is_idempotent_and_bounded() {
+        prop_check("uniform_idempotent", 100, |g| {
+            let c_min = g.f32_in(-4.0, 0.5);
+            let c_max = c_min + g.f32_in(0.2, 30.0);
+            let levels = g.usize_in(2, 64);
+            let q = UniformQuantizer::new(c_min, c_max, levels);
+            for _ in 0..100 {
+                let x = g.f32_in(-50.0, 50.0);
+                let y = q.fake_quant(x);
+                crate::prop_assert!(y >= c_min && y <= c_max, "out of range: {y}");
+                crate::prop_assert!(q.fake_quant(y) == y, "not idempotent at {x}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_delta() {
+        prop_check("uniform_error_bound", 60, |g| {
+            let c_max = g.f32_in(0.5, 20.0);
+            let levels = g.usize_in(2, 32);
+            let q = UniformQuantizer::new(0.0, c_max, levels);
+            for _ in 0..200 {
+                let x = g.f32_in(0.0, c_max);
+                let err = (q.fake_quant(x) - x).abs();
+                crate::prop_assert!(
+                    err <= q.delta() / 2.0 + 1e-5,
+                    "err {err} > delta/2 {} (x={x}, N={levels})",
+                    q.delta() / 2.0
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn indices_cover_all_levels() {
+        let q = UniformQuantizer::new(0.0, 10.0, 7);
+        let mut seen = vec![false; 7];
+        for i in 0..=1000 {
+            seen[q.index(i as f32 * 0.01 * 10.0) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "levels not all reachable");
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let q = UniformQuantizer::new(-2.0, 5.0, 9);
+        let mut prev = 0u16;
+        for i in 0..2000 {
+            let x = -3.0 + i as f32 * 0.005;
+            let n = q.index(x);
+            assert!(n >= prev, "index decreased at x={x}");
+            prev = n;
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Cloud worker: decodes compressed split-layer tensors, batches them,
+//! runs the cloud half via PJRT, and produces per-request outcomes.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::protocol::{CompressedItem, Outcome, TaskKind};
+use crate::codec;
+use crate::data;
+use crate::eval::{decode_grid, Detection};
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::tensor::Tensor;
+
+/// Static (Send) configuration for building a [`CloudWorker`] in-thread.
+#[derive(Clone, Debug)]
+pub struct CloudConfig {
+    pub task: TaskKind,
+    pub val_seed: u64,
+    pub batch: usize,
+    /// Detection objectness threshold.
+    pub obj_threshold: f32,
+}
+
+/// Timing breakdown accumulated by the cloud worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CloudTimes {
+    pub decode_s: f64,
+    pub infer_s: f64,
+    pub post_s: f64,
+    pub items: u64,
+}
+
+pub struct CloudWorker {
+    exe: Executable,
+    config: CloudConfig,
+    feature_shape: Vec<usize>, // batched [B, H, W, C]
+    grid: usize,
+    pub times: CloudTimes,
+}
+
+impl CloudWorker {
+    pub fn new(manifest: &Manifest, config: CloudConfig) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let (cloud_path, feature) = match config.task {
+            TaskKind::ClassifyResnet { split } => {
+                let s = manifest.resnet_split(split)?;
+                (&s.cloud, s.feature.clone())
+            }
+            TaskKind::ClassifyAlex => (&manifest.alex.cloud, manifest.alex.feature.clone()),
+            TaskKind::Detect => (&manifest.detect.cloud, manifest.detect.feature.clone()),
+        };
+        assert_eq!(feature[0], config.batch, "artifact batch mismatch");
+        Ok(Self {
+            exe: rt.load(cloud_path)?,
+            grid: manifest.detect_grid,
+            feature_shape: feature,
+            config,
+            times: CloudTimes::default(),
+        })
+    }
+
+    /// Decode + infer one batch of compressed items (≤ B, padded).
+    pub fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>> {
+        assert!(!items.is_empty() && items.len() <= self.config.batch);
+        let per_item: usize = self.feature_shape[1..].iter().product();
+
+        // --- bit-stream decode ------------------------------------------
+        let t0 = Instant::now();
+        let mut feat = Vec::with_capacity(self.config.batch * per_item);
+        for item in items {
+            let (values, _header) =
+                codec::decode(&item.bytes, item.elements).map_err(anyhow::Error::msg)?;
+            debug_assert_eq!(values.len(), per_item);
+            feat.extend_from_slice(&values);
+        }
+        for _ in items.len()..self.config.batch {
+            let tail = feat[feat.len() - per_item..].to_vec();
+            feat.extend_from_slice(&tail);
+        }
+        self.times.decode_s += t0.elapsed().as_secs_f64();
+
+        // --- cloud inference ----------------------------------------------
+        let t1 = Instant::now();
+        let out = self.exe.run1(&[&Tensor::new(&self.feature_shape, feat)])?;
+        self.times.infer_s += t1.elapsed().as_secs_f64();
+
+        // --- task decoding -------------------------------------------------
+        let t2 = Instant::now();
+        let mut outcomes = Vec::with_capacity(items.len());
+        match self.config.task {
+            TaskKind::Detect => {
+                let ch = out.shape()[3];
+                let per_out = self.grid * self.grid * ch;
+                for (i, item) in items.iter().enumerate() {
+                    let grid = &out.data()[i * per_out..(i + 1) * per_out];
+                    let detections: Vec<Detection> = decode_grid(
+                        item.image_index as usize,
+                        grid,
+                        self.grid,
+                        self.grid,
+                        self.config.obj_threshold,
+                    );
+                    outcomes.push(self.outcome(item, None, detections));
+                }
+            }
+            _ => {
+                let classes = out.shape()[1];
+                for (i, item) in items.iter().enumerate() {
+                    let row = &out.data()[i * classes..(i + 1) * classes];
+                    let mut best = 0usize;
+                    for (j, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = j;
+                        }
+                    }
+                    let label = data::synth_images::class_of(item.image_index);
+                    outcomes.push(self.outcome(item, Some(best == label), Vec::new()));
+                }
+            }
+        }
+        self.times.post_s += t2.elapsed().as_secs_f64();
+        self.times.items += items.len() as u64;
+        Ok(outcomes)
+    }
+
+    fn outcome(
+        &self,
+        item: &CompressedItem,
+        correct: Option<bool>,
+        detections: Vec<Detection>,
+    ) -> Outcome {
+        Outcome {
+            id: item.id,
+            image_index: item.image_index,
+            correct,
+            detections,
+            latency_s: item.arrived.elapsed().as_secs_f64(),
+            bits_per_element: item.bits_per_element(),
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Edge-device worker: captures frames (regenerates corpus images), runs
+//! the edge half of the network via PJRT, and compresses the split-layer
+//! tensor with the lightweight codec.
+//!
+//! Constructed *inside* its worker thread (the xla handles are not Send);
+//! one instance simulates one device.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::protocol::{CompressedItem, QuantSpec, Request, TaskKind};
+use super::stats::{AdaptiveClipController, AdaptiveConfig};
+use crate::codec::{DetInfo, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use crate::data;
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::tensor::Tensor;
+
+/// Static (Send) configuration for building an [`EdgeWorker`] in-thread.
+#[derive(Clone, Debug)]
+pub struct EdgeConfig {
+    pub task: TaskKind,
+    pub quant: QuantSpec,
+    pub val_seed: u64,
+    pub batch: usize,
+    /// Optional adaptive clip-range control (None = static range).
+    pub adaptive: Option<AdaptiveConfig>,
+}
+
+/// Timing breakdown accumulated by an edge worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeTimes {
+    pub datagen_s: f64,
+    pub infer_s: f64,
+    pub encode_s: f64,
+    pub items: u64,
+    pub bytes: u64,
+}
+
+pub struct EdgeWorker {
+    exe: Executable,
+    encoder: Encoder,
+    config: EdgeConfig,
+    input_shape: Vec<usize>,
+    feature_elems: usize,
+    adaptive: Option<AdaptiveClipController>,
+    pub times: EdgeTimes,
+}
+
+impl EdgeWorker {
+    /// Build inside the worker thread: creates its own PJRT client and
+    /// compiles the edge artifact.
+    pub fn new(manifest: &Manifest, config: EdgeConfig) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let (edge_path, feature, img): (&Path, &[usize], u8) = match config.task {
+            TaskKind::ClassifyResnet { split } => {
+                let s = manifest.resnet_split(split)?;
+                (&s.edge, &s.feature, data::IMG as u8)
+            }
+            TaskKind::ClassifyAlex => (&manifest.alex.edge, &manifest.alex.feature, data::IMG as u8),
+            TaskKind::Detect => (
+                &manifest.detect.edge,
+                &manifest.detect.feature,
+                data::DET_IMG as u8,
+            ),
+        };
+        let exe = rt.load(edge_path)?;
+        let quantizer = config.quant.materialize();
+        let enc_cfg = match config.task {
+            TaskKind::Detect => EncoderConfig::detection(
+                quantizer,
+                img,
+                DetInfo {
+                    net_w: data::DET_IMG as u16,
+                    net_h: data::DET_IMG as u16,
+                    feat_h: feature[1] as u16,
+                    feat_w: feature[2] as u16,
+                    feat_c: feature[3] as u16,
+                },
+            ),
+            _ => EncoderConfig::classification(quantizer, img),
+        };
+        let input_shape = match config.task {
+            TaskKind::Detect => vec![config.batch, data::DET_IMG, data::DET_IMG, 3],
+            _ => vec![config.batch, data::IMG, data::IMG, 3],
+        };
+        let adaptive = config
+            .adaptive
+            .map(|cfg| AdaptiveClipController::new(cfg, config.quant.c_max_hint()));
+        Ok(Self {
+            exe,
+            encoder: Encoder::new(enc_cfg),
+            feature_elems: feature[1..].iter().product(),
+            input_shape,
+            config,
+            adaptive,
+            times: EdgeTimes::default(),
+        })
+    }
+
+    pub fn feature_elements(&self) -> usize {
+        self.feature_elems
+    }
+
+    /// Process one batch of requests: returns a compressed item per
+    /// request. `requests.len()` may be < batch (padded internally).
+    pub fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
+        assert!(!requests.is_empty() && requests.len() <= self.config.batch);
+        let b = self.config.batch;
+
+        // --- data generation (the "camera") -----------------------------
+        let t0 = Instant::now();
+        let per_img: usize = self.input_shape[1..].iter().product();
+        let mut xs = Vec::with_capacity(b * per_img);
+        for r in requests {
+            match self.config.task {
+                TaskKind::Detect => xs.extend_from_slice(
+                    &data::gen_detect_scene(self.config.val_seed, r.image_index).pixels,
+                ),
+                _ => xs.extend_from_slice(
+                    &data::gen_class_image(self.config.val_seed, r.image_index).pixels,
+                ),
+            }
+        }
+        // Pad the batch by repeating the last item.
+        for _ in requests.len()..b {
+            let tail = xs[xs.len() - per_img..].to_vec();
+            xs.extend_from_slice(&tail);
+        }
+        let input = Tensor::new(&self.input_shape, xs);
+        self.times.datagen_s += t0.elapsed().as_secs_f64();
+
+        // --- edge inference ---------------------------------------------
+        let t1 = Instant::now();
+        let features = self.exe.run1(&[&input])?;
+        self.times.infer_s += t1.elapsed().as_secs_f64();
+
+        // --- adaptive statistics + codec --------------------------------
+        let t2 = Instant::now();
+        let feat = features.data();
+        let mut out = Vec::with_capacity(requests.len());
+        for (i, r) in requests.iter().enumerate() {
+            let item = &feat[i * self.feature_elems..(i + 1) * self.feature_elems];
+            if let Some(ctl) = &mut self.adaptive {
+                if ctl.observe(item) {
+                    // Refit: swap in the new uniform range.
+                    let levels = self.config.quant.levels();
+                    self.encoder.config.quantizer = Quantizer::Uniform(UniformQuantizer::new(
+                        0.0,
+                        ctl.c_max() as f32,
+                        levels,
+                    ));
+                }
+            }
+            let stream = self.encoder.encode(item);
+            self.times.bytes += stream.bytes.len() as u64;
+            out.push(CompressedItem {
+                id: r.id,
+                image_index: r.image_index,
+                bytes: stream.bytes,
+                elements: stream.elements,
+                arrived: r.arrived,
+                encoded: Instant::now(),
+            });
+        }
+        self.times.encode_s += t2.elapsed().as_secs_f64();
+        self.times.items += requests.len() as u64;
+        Ok(out)
+    }
+
+    /// Current clip maximum (moves under adaptive control).
+    pub fn current_c_max(&self) -> f32 {
+        self.encoder.config.quantizer.c_max()
+    }
+}
+
+impl QuantSpec {
+    fn c_max_hint(&self) -> f64 {
+        match self {
+            QuantSpec::Uniform { c_max, .. } => *c_max as f64,
+            QuantSpec::EntropyConstrained(q) => q.c_max as f64,
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Aggregated serving metrics: task quality, rate, latency percentiles,
+//! throughput, and per-stage time breakdown.
+
+use super::cloud::CloudTimes;
+use super::edge::EdgeTimes;
+use super::protocol::{Outcome, TaskKind};
+use crate::data;
+use crate::eval::{map_at_iou, Detection};
+use crate::util::timer::Percentiles;
+
+/// Final report of a [`super::server::serve`] run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub task: TaskKind,
+    pub requests: usize,
+    /// Top-1 accuracy (classification) or mAP@0.5 (detection).
+    pub metric: f64,
+    pub metric_name: &'static str,
+    pub bits_per_element: f64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    pub edge: EdgeTimes,
+    pub cloud: CloudTimes,
+}
+
+impl ServeReport {
+    pub fn aggregate(
+        task: TaskKind,
+        outcomes: Vec<Outcome>,
+        edge: EdgeTimes,
+        cloud: CloudTimes,
+        wall_s: f64,
+    ) -> Self {
+        Self::aggregate_with_seed(task, data::VAL_SEED, outcomes, edge, cloud, wall_s)
+    }
+
+    pub fn aggregate_with_seed(
+        task: TaskKind,
+        val_seed: u64,
+        outcomes: Vec<Outcome>,
+        edge: EdgeTimes,
+        cloud: CloudTimes,
+        wall_s: f64,
+    ) -> Self {
+        let n = outcomes.len();
+        let mut lat = Percentiles::default();
+        let mut bits = 0.0f64;
+        for o in &outcomes {
+            lat.push(o.latency_s);
+            bits += o.bits_per_element;
+        }
+        let (metric, metric_name) = match task {
+            TaskKind::Detect => {
+                // Re-derive ground truth for the served indices; detections
+                // carry corpus indices remapped to positional ids below.
+                let mut indices: Vec<u64> = outcomes.iter().map(|o| o.image_index).collect();
+                indices.sort_unstable();
+                indices.dedup();
+                let pos_of = |img: u64| indices.binary_search(&img).unwrap();
+                let gts: Vec<Vec<data::GtBox>> = indices
+                    .iter()
+                    .map(|&i| data::gen_detect_scene(val_seed, i).boxes)
+                    .collect();
+                let dets: Vec<Detection> = outcomes
+                    .iter()
+                    .flat_map(|o| {
+                        o.detections.iter().map(|d| Detection {
+                            image: pos_of(o.image_index),
+                            ..*d
+                        })
+                    })
+                    .collect();
+                (map_at_iou(&dets, &gts, 0.5), "mAP@0.5")
+            }
+            _ => {
+                let correct = outcomes
+                    .iter()
+                    .filter(|o| o.correct == Some(true))
+                    .count();
+                (correct as f64 / n.max(1) as f64, "top1")
+            }
+        };
+        ServeReport {
+            task,
+            requests: n,
+            metric,
+            metric_name,
+            bits_per_element: bits / n.max(1) as f64,
+            wall_s,
+            throughput_rps: n as f64 / wall_s.max(1e-12),
+            latency_p50_s: lat.quantile(0.50),
+            latency_p95_s: lat.quantile(0.95),
+            latency_p99_s: lat.quantile(0.99),
+            edge,
+            cloud,
+        }
+    }
+
+    /// Human-readable one-screen summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "task={} requests={} {}={:.4} rate={:.4} bits/elem\n\
+             wall={:.2}s throughput={:.1} req/s latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
+             edge: datagen={:.2}s infer={:.2}s encode={:.2}s ({} items, {} bytes)\n\
+             cloud: decode={:.2}s infer={:.2}s post={:.2}s ({} items)",
+            self.task,
+            self.requests,
+            self.metric_name,
+            self.metric,
+            self.bits_per_element,
+            self.wall_s,
+            self.throughput_rps,
+            self.latency_p50_s * 1e3,
+            self.latency_p95_s * 1e3,
+            self.latency_p99_s * 1e3,
+            self.edge.datagen_s,
+            self.edge.infer_s,
+            self.edge.encode_s,
+            self.edge.items,
+            self.edge.bytes,
+            self.cloud.decode_s,
+            self.cloud.infer_s,
+            self.cloud.post_s,
+            self.cloud.items,
+        )
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the collaborative-intelligence serving pipeline
+//! (paper Fig. 1) — simulated edge devices run the edge half + lightweight
+//! codec; a bounded "network" queue carries the bit-streams; the cloud
+//! worker decodes and finishes inference. Includes the adaptive clip-range
+//! controller of §III-E.
+
+pub mod cloud;
+pub mod edge;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod stats;
+
+pub use cloud::{CloudConfig, CloudWorker};
+pub use edge::{EdgeConfig, EdgeWorker};
+pub use metrics::ServeReport;
+pub use protocol::{CompressedItem, Outcome, QuantSpec, Request, TaskKind};
+pub use server::{serve, ServeConfig};
+pub use stats::{AdaptiveClipController, AdaptiveConfig};

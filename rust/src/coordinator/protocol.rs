@@ -1,0 +1,100 @@
+//! Wire types flowing through the edge → channel → cloud pipeline.
+//!
+//! `CompressedItem.bytes` is exactly what would travel over the network in
+//! a real deployment: the paper's 12/24-byte side-info header plus the
+//! CABAC payload. Everything upstream of it exists only on the edge
+//! device; everything downstream only in the cloud.
+
+use std::time::Instant;
+
+use crate::codec::{NonUniformQuantizer, Quantizer, UniformQuantizer};
+use crate::eval::Detection;
+
+/// Which split network a pipeline serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// ci_resnet classification, split tap 1/2/3.
+    ClassifyResnet { split: usize },
+    /// ci_alex classification (plain ReLU).
+    ClassifyAlex,
+    /// ci_detect object detection.
+    Detect,
+}
+
+impl TaskKind {
+    pub fn is_detection(&self) -> bool {
+        matches!(self, TaskKind::Detect)
+    }
+}
+
+/// Send-able quantizer specification (the xla handles are not Send, and
+/// neither choice needs them; workers materialize a [`Quantizer`] locally).
+#[derive(Clone, Debug)]
+pub enum QuantSpec {
+    Uniform {
+        c_min: f32,
+        c_max: f32,
+        levels: usize,
+    },
+    EntropyConstrained(NonUniformQuantizer),
+}
+
+impl QuantSpec {
+    pub fn materialize(&self) -> Quantizer {
+        match self {
+            QuantSpec::Uniform {
+                c_min,
+                c_max,
+                levels,
+            } => Quantizer::Uniform(UniformQuantizer::new(*c_min, *c_max, *levels)),
+            QuantSpec::EntropyConstrained(q) => Quantizer::NonUniform(q.clone()),
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        match self {
+            QuantSpec::Uniform { levels, .. } => *levels,
+            QuantSpec::EntropyConstrained(q) => q.levels(),
+        }
+    }
+}
+
+/// An inference request entering the system (the "frame" captured on the
+/// edge device, addressed by corpus index so both sides can regenerate it
+/// deterministically).
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub image_index: u64,
+    pub arrived: Instant,
+}
+
+/// A compressed split-layer tensor in flight from edge to cloud.
+#[derive(Clone, Debug)]
+pub struct CompressedItem {
+    pub id: u64,
+    pub image_index: u64,
+    pub bytes: Vec<u8>,
+    pub elements: usize,
+    pub arrived: Instant,
+    pub encoded: Instant,
+}
+
+impl CompressedItem {
+    pub fn bits_per_element(&self) -> f64 {
+        self.bytes.len() as f64 * 8.0 / self.elements.max(1) as f64
+    }
+}
+
+/// Final per-request outcome produced by the cloud worker.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub id: u64,
+    pub image_index: u64,
+    /// Classification: whether Top-1 matched the label.
+    pub correct: Option<bool>,
+    /// Detection: decoded detections for this image.
+    pub detections: Vec<Detection>,
+    pub latency_s: f64,
+    pub bits_per_element: f64,
+}

@@ -1,0 +1,177 @@
+//! Pipeline orchestrator: the end-to-end collaborative-intelligence
+//! serving loop.
+//!
+//! ```text
+//!  requests ─▶ [request queue] ─▶ edge workers (E threads, batch=B)
+//!                                   │ edge fwd → lightweight encode
+//!                                   ▼
+//!               [transit queue — "the network"] ─▶ cloud worker
+//!                                   │ decode → cloud fwd → outcome
+//!                                   ▼
+//!                               [outcomes]
+//! ```
+//!
+//! Bounded queues provide backpressure end to end; every stage thread
+//! owns its PJRT client (xla handles are not Send). This is the paper's
+//! Fig. 1 deployment with the codec on the wire.
+
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::cloud::{CloudConfig, CloudTimes, CloudWorker};
+use super::edge::{EdgeConfig, EdgeTimes, EdgeWorker};
+use super::metrics::ServeReport;
+use super::protocol::{CompressedItem, Outcome, Request, TaskKind};
+use crate::runtime::Manifest;
+use crate::util::threadpool::BoundedQueue;
+
+/// Whole-pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub edge: EdgeConfig,
+    pub cloud: CloudConfig,
+    /// Number of simulated edge devices (threads).
+    pub edge_workers: usize,
+    /// Total requests to run through the system.
+    pub requests: usize,
+    /// Request queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// First corpus index to serve (offset into the validation stream).
+    pub first_index: u64,
+}
+
+impl ServeConfig {
+    pub fn new(edge: EdgeConfig, cloud: CloudConfig) -> Self {
+        Self {
+            edge,
+            cloud,
+            edge_workers: 2,
+            requests: 256,
+            queue_capacity: 64,
+            first_index: 0,
+        }
+    }
+}
+
+/// Run the pipeline to completion and aggregate a report.
+pub fn serve(manifest: &Manifest, config: ServeConfig) -> Result<ServeReport> {
+    assert_eq!(config.edge.task, config.cloud.task, "edge/cloud task mismatch");
+    let batch = config.edge.batch;
+    let req_q: BoundedQueue<Request> = BoundedQueue::new(config.queue_capacity);
+    let transit_q: BoundedQueue<CompressedItem> = BoundedQueue::new(config.queue_capacity);
+    let out_q: BoundedQueue<Outcome> = BoundedQueue::new(config.queue_capacity.max(config.requests));
+
+    let started = Instant::now();
+    let report = thread::scope(|s| -> Result<ServeReport> {
+        // --- request generator ------------------------------------------
+        let gen_q = req_q.clone();
+        let n_req = config.requests;
+        let first = config.first_index;
+        s.spawn(move || {
+            for i in 0..n_req {
+                let r = Request {
+                    id: i as u64,
+                    image_index: first + i as u64,
+                    arrived: Instant::now(),
+                };
+                if gen_q.push(r).is_err() {
+                    break;
+                }
+            }
+            gen_q.close();
+        });
+
+        // --- edge workers -------------------------------------------------
+        let mut edge_handles = Vec::new();
+        for w in 0..config.edge_workers {
+            let in_q = req_q.clone();
+            let fwd_q = transit_q.clone();
+            let cfg = config.edge.clone();
+            let mani = manifest.clone();
+            edge_handles.push(s.spawn(move || -> Result<EdgeTimes> {
+                let mut worker = EdgeWorker::new(&mani, cfg)
+                    .map_err(|e| anyhow!("edge worker {w}: {e}"))?;
+                while let Some(reqs) = in_q.pop_up_to(batch) {
+                    for item in worker.process(&reqs)? {
+                        if fwd_q.push(item).is_err() {
+                            return Ok(worker.times);
+                        }
+                    }
+                }
+                Ok(worker.times)
+            }));
+        }
+
+        // --- cloud worker --------------------------------------------------
+        let cloud_in = transit_q.clone();
+        let cloud_out = out_q.clone();
+        let ccfg = config.cloud.clone();
+        let mani = manifest.clone();
+        let cloud_handle = s.spawn(move || -> Result<CloudTimes> {
+            let mut worker = CloudWorker::new(&mani, ccfg)?;
+            while let Some(items) = cloud_in.pop_up_to(batch) {
+                for o in worker.process(&items)? {
+                    if cloud_out.push(o).is_err() {
+                        return Ok(worker.times);
+                    }
+                }
+            }
+            Ok(worker.times)
+        });
+
+        // --- collect ---------------------------------------------------------
+        let mut outcomes = Vec::with_capacity(config.requests);
+        for _ in 0..config.requests {
+            match out_q.pop() {
+                Some(o) => outcomes.push(o),
+                None => break,
+            }
+        }
+
+        // Shut down: edge workers end when the request queue closes; close
+        // transit when they are all done.
+        let mut edge_times = EdgeTimes::default();
+        for h in edge_handles {
+            let t = h.join().map_err(|_| anyhow!("edge thread panicked"))??;
+            edge_times.datagen_s += t.datagen_s;
+            edge_times.infer_s += t.infer_s;
+            edge_times.encode_s += t.encode_s;
+            edge_times.items += t.items;
+            edge_times.bytes += t.bytes;
+        }
+        transit_q.close();
+        let cloud_times = cloud_handle
+            .join()
+            .map_err(|_| anyhow!("cloud thread panicked"))??;
+        out_q.close();
+
+        Ok(ServeReport::aggregate(
+            config.cloud.task,
+            outcomes,
+            edge_times,
+            cloud_times,
+            started.elapsed().as_secs_f64(),
+        ))
+    })?;
+    Ok(report)
+}
+
+/// TaskKind re-export context for report builders.
+pub use super::protocol::TaskKind as ServeTask;
+
+#[allow(unused)]
+fn _assert_send_config(c: ServeConfig) -> impl Send {
+    c
+}
+
+impl std::fmt::Display for TaskKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskKind::ClassifyResnet { split } => write!(f, "ci-resnet/s{split}"),
+            TaskKind::ClassifyAlex => write!(f, "ci-alex"),
+            TaskKind::Detect => write!(f, "ci-detect"),
+        }
+    }
+}

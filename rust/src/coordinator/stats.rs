@@ -1,0 +1,193 @@
+//! Adaptive clip-range controller (paper §III-E: "this codec is also
+//! amenable to adaptive operation if inference is performed in real time
+//! ... the measured statistics can adjust based on the most recent few
+//! hundred frames").
+//!
+//! Maintains a sliding window of split-layer moments (subsampled — the
+//! statistics need only a few hundred images to converge) and refits the
+//! asymmetric-Laplace model + optimal clipping range on a cadence.
+
+use crate::modeling::{fit, optimal_cmax, Activation};
+use crate::util::math::Welford;
+
+/// Configuration for the controller.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Refit after this many tensors.
+    pub refit_every: usize,
+    /// Keep at most this many window accumulations (sliding by reset).
+    pub window_tensors: usize,
+    /// Subsample stride over tensor elements (stats converge fast; there
+    /// is no need to touch every element on the hot path).
+    pub element_stride: usize,
+    /// Quantizer level count the clip range is optimized for.
+    pub levels: usize,
+    /// Split-layer activation family.
+    pub activation: Activation,
+    /// κ of the asymmetric-Laplace input model.
+    pub kappa: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            refit_every: 64,
+            window_tensors: 512,
+            element_stride: 7,
+            levels: 4,
+            activation: Activation::LeakyRelu { slope: 0.1 },
+            kappa: 0.5,
+        }
+    }
+}
+
+/// Running state of the adaptive controller.
+#[derive(Clone, Debug)]
+pub struct AdaptiveClipController {
+    pub config: AdaptiveConfig,
+    window: Welford,
+    tensors_seen: usize,
+    tensors_since_refit: usize,
+    c_max: f64,
+    pub refits: usize,
+}
+
+impl AdaptiveClipController {
+    pub fn new(config: AdaptiveConfig, initial_c_max: f64) -> Self {
+        Self {
+            config,
+            window: Welford::new(),
+            tensors_seen: 0,
+            tensors_since_refit: 0,
+            c_max: initial_c_max,
+            refits: 0,
+        }
+    }
+
+    /// Current clipping value the encoder should use.
+    pub fn c_max(&self) -> f64 {
+        self.c_max
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.window.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        self.window.variance()
+    }
+
+    /// Observe one (pre-quantization) feature tensor; maybe refit.
+    /// Returns `true` when the clip range was updated.
+    pub fn observe(&mut self, features: &[f32]) -> bool {
+        let stride = self.config.element_stride.max(1);
+        let mut i = (self.tensors_seen * 3) % stride; // rotate phase
+        while i < features.len() {
+            self.window.push(features[i] as f64);
+            i += stride;
+        }
+        self.tensors_seen += 1;
+        self.tensors_since_refit += 1;
+
+        if self.tensors_since_refit >= self.config.refit_every && self.window.count > 100 {
+            self.tensors_since_refit = 0;
+            let refitted = self.refit();
+            // Slide the window: restart accumulation after a few windows so
+            // drifting statistics age out.
+            if self.tensors_seen % self.config.window_tensors == 0 {
+                self.window = Welford::new();
+            }
+            return refitted;
+        }
+        false
+    }
+
+    fn refit(&mut self) -> bool {
+        let var = self.window.variance();
+        if var <= 1e-12 {
+            return false;
+        }
+        match fit(self.window.mean, var, self.config.kappa, self.config.activation) {
+            Ok(model) => {
+                let r = optimal_cmax(&model.pdf, 0.0, self.config.levels);
+                self.c_max = r.c_max;
+                self.refits += 1;
+                true
+            }
+            Err(_) => false, // keep last good range on a failed fit
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn leaky_samples(rng: &mut SplitMix64, n: usize, scale: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let e = -rng.next_f64().max(1e-12).ln() * scale;
+                (if rng.next_f64() < 0.3 { -0.1 * e } else { e }) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn adapts_to_scale_change() {
+        let cfg = AdaptiveConfig {
+            refit_every: 16,
+            ..Default::default()
+        };
+        let mut ctl = AdaptiveClipController::new(cfg, 1.0);
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..64 {
+            let t = leaky_samples(&mut rng, 2048, 1.0);
+            ctl.observe(&t);
+        }
+        let c_small = ctl.c_max();
+        assert!(ctl.refits > 0);
+
+        // Distribution scale x4 — the controller must widen the clip range.
+        let mut ctl2 = AdaptiveClipController::new(cfg, 1.0);
+        for _ in 0..64 {
+            let t = leaky_samples(&mut rng, 2048, 4.0);
+            ctl2.observe(&t);
+        }
+        assert!(
+            ctl2.c_max() > 2.5 * c_small,
+            "c_max didn't scale: {} vs {}",
+            ctl2.c_max(),
+            c_small
+        );
+    }
+
+    #[test]
+    fn no_refit_before_threshold() {
+        let cfg = AdaptiveConfig {
+            refit_every: 1000,
+            ..Default::default()
+        };
+        let mut ctl = AdaptiveClipController::new(cfg, 3.0);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..10 {
+            ctl.observe(&leaky_samples(&mut rng, 512, 1.0));
+        }
+        assert_eq!(ctl.refits, 0);
+        assert_eq!(ctl.c_max(), 3.0);
+    }
+
+    #[test]
+    fn degenerate_constant_stream_keeps_range() {
+        let cfg = AdaptiveConfig {
+            refit_every: 4,
+            ..Default::default()
+        };
+        let mut ctl = AdaptiveClipController::new(cfg, 2.0);
+        for _ in 0..16 {
+            ctl.observe(&vec![0.5f32; 1024]);
+        }
+        // Variance ~0 → refit declines, range unchanged.
+        assert_eq!(ctl.c_max(), 2.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Synthetic corpora — Rust mirror of `python/compile/data.py`.
+//!
+//! The Python side generates training batches at artifact-build time; this
+//! module regenerates the *same* images on the request path (validation,
+//! serving). The PRNG (`util::rng`), per-item seed derivation, draw order
+//! and all arithmetic (f64 until the final f32 cast) are kept in lockstep;
+//! `rust/tests/data_parity.rs` checks statistics against the manifest and
+//! the Python unit tests pin the same SplitMix64 vectors.
+//!
+//! DATA_VERSION must match `python/compile/data.py::DATA_VERSION`.
+
+pub mod synth_images;
+pub mod synth_scenes;
+
+pub use synth_images::{gen_class_batch, gen_class_image, ClassImage, IMG, NUM_CLASSES};
+pub use synth_scenes::{gen_detect_batch, gen_detect_scene, DetScene, GtBox, DET_CLASSES, DET_IMG};
+
+pub const DATA_VERSION: u32 = 1;
+
+pub const STREAM_CLS: u64 = 1;
+pub const STREAM_DET: u64 = 2;
+pub const NOISE_STREAM_CLS: u64 = 7;
+pub const NOISE_STREAM_DET: u64 = 8;
+
+/// Base seed of the validation corpora (python/compile/train.py VAL_SEED).
+pub const VAL_SEED: u64 = 0xBEEF;
+/// Base seed of the training corpora (unused in Rust, kept for reference).
+pub const TRAIN_SEED: u64 = 0xC0FFEE;

@@ -1,0 +1,126 @@
+//! SynthImageNet: 32x32x3, 10 classes (ImageNet stand-in).
+//!
+//! Class signal = primary grating orientation only (18° apart in class id,
+//! but spaced over a quarter-turn: c·π/20 ± 4°); everything else —
+//! frequency jitter, phase, a same-frequency distractor grating, blob,
+//! colour, contrast, brightness, heavy hash noise — is a nuisance
+//! variable. Mirrors `python/compile/data.py::gen_class_image` draw for
+//! draw (13 uniform draws, then the per-pixel hash-noise field).
+
+use super::{NOISE_STREAM_CLS, STREAM_CLS};
+use crate::util::rng::{derive_seed, hash_noise_at, SplitMix64};
+
+pub const IMG: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+
+/// One generated image (HWC f32) plus its label.
+#[derive(Clone, Debug)]
+pub struct ClassImage {
+    pub pixels: Vec<f32>, // IMG*IMG*3, HWC
+    pub label: usize,
+}
+
+pub fn class_of(index: u64) -> usize {
+    (index % NUM_CLASSES as u64) as usize
+}
+
+/// Generate image `index` of the corpus with base seed `base_seed`.
+pub fn gen_class_image(base_seed: u64, index: u64) -> ClassImage {
+    let c = class_of(index);
+    let seed = derive_seed(base_seed, STREAM_CLS, index);
+    let mut rng = SplitMix64::new(seed);
+
+    // Draw order contract — keep identical to data.py.
+    let theta = c as f64 * (std::f64::consts::PI / (2.0 * NUM_CLASSES as f64))
+        + rng.uniform(-0.07, 0.07);
+    let freq = 0.80 + rng.uniform(-0.05, 0.05);
+    let phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+    let d_theta = rng.uniform(0.0, std::f64::consts::PI);
+    let d_phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+    let blob_cx = rng.uniform(8.0, 24.0);
+    let blob_cy = rng.uniform(8.0, 24.0);
+    let blob_amp = rng.uniform(0.0, 0.35);
+    let col = [
+        rng.uniform(0.3, 1.0),
+        rng.uniform(0.3, 1.0),
+        rng.uniform(0.3, 1.0),
+    ];
+    let contrast = rng.uniform(0.6, 1.4);
+    let brightness = rng.uniform(-0.15, 0.15);
+
+    let (ct, st) = (theta.cos(), theta.sin());
+    let (cdt, sdt) = (d_theta.cos(), d_theta.sin());
+    let mut pixels = vec![0.0f32; IMG * IMG * 3];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let (xf, yf) = (x as f64, y as f64);
+            let g = (freq * (xf * ct + yf * st) + phase).sin();
+            let d = (freq * (xf * cdt + yf * sdt) + d_phase).sin();
+            let d2 = (xf - blob_cx).powi(2) + (yf - blob_cy).powi(2);
+            let blob = (-d2 / (2.0 * 4.5 * 4.5)).exp();
+            for ch in 0..3 {
+                let idx = (y * IMG + x) * 3 + ch;
+                let noise = hash_noise_at(seed, NOISE_STREAM_CLS, idx as u64);
+                // col reversed for the distractor (data.py: col[::-1]).
+                let v = 0.32 * g * col[ch] + 0.16 * d * col[2 - ch] + blob_amp * blob;
+                pixels[idx] = (0.5 + contrast * v + brightness + 0.30 * noise) as f32;
+            }
+        }
+    }
+    ClassImage { pixels, label: c }
+}
+
+/// Batch of `count` images starting at `start` (labels cycle mod 10).
+pub fn gen_class_batch(base_seed: u64, start: u64, count: usize) -> (Vec<f32>, Vec<usize>) {
+    let mut xs = Vec::with_capacity(count * IMG * IMG * 3);
+    let mut ys = Vec::with_capacity(count);
+    for i in 0..count {
+        let img = gen_class_image(base_seed, start + i as u64);
+        xs.extend_from_slice(&img.pixels);
+        ys.push(img.label);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = gen_class_image(7, 123);
+        let b = gen_class_image(7, 123);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.label, 3);
+    }
+
+    #[test]
+    fn labels_cycle() {
+        let (_, ys) = gen_class_batch(7, 0, 20);
+        assert_eq!(ys, (0..20).map(|i| i % 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pixel_range_sane() {
+        let img = gen_class_image(7, 5);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &p in &img.pixels {
+            lo = lo.min(p);
+            hi = hi.max(p);
+        }
+        assert!(lo > -1.5 && hi < 2.5, "range [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn different_instances_differ() {
+        let a = gen_class_image(7, 1);
+        let b = gen_class_image(7, 11); // same class, next instance
+        let max_diff = a
+            .pixels
+            .iter()
+            .zip(&b.pixels)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff > 0.05);
+    }
+}

@@ -1,0 +1,157 @@
+//! SynthScenes: 64x64x3 detection corpus (COCO stand-in).
+//!
+//! 1–3 geometric objects (square / circle / cross) on a noisy gradient
+//! background. Mirrors `python/compile/data.py::gen_detect_scene` draw
+//! for draw.
+
+use super::{NOISE_STREAM_DET, STREAM_DET};
+use crate::util::rng::{derive_seed, hash_noise_at, SplitMix64};
+
+pub const DET_IMG: usize = 64;
+pub const DET_CLASSES: usize = 3; // 0 square, 1 circle, 2 cross
+pub const DET_MAX_OBJ: u32 = 3;
+
+/// Per-class base colours, shared with data.py::DET_COLORS.
+pub const DET_COLORS: [[f64; 3]; 3] = [
+    [0.95, 0.25, 0.2],
+    [0.2, 0.55, 0.95],
+    [0.95, 0.85, 0.2],
+];
+
+/// Ground-truth box: top-left (x, y) and size (w, h) in pixels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GtBox {
+    pub class: usize,
+    pub x: f64,
+    pub y: f64,
+    pub w: f64,
+    pub h: f64,
+}
+
+/// A generated detection scene.
+#[derive(Clone, Debug)]
+pub struct DetScene {
+    pub pixels: Vec<f32>, // DET_IMG*DET_IMG*3, HWC
+    pub boxes: Vec<GtBox>,
+}
+
+pub fn gen_detect_scene(base_seed: u64, index: u64) -> DetScene {
+    let seed = derive_seed(base_seed, STREAM_DET, index);
+    let mut rng = SplitMix64::new(seed);
+
+    // Draw order contract — keep identical to data.py.
+    let grad_dir = rng.next_u32_below(2);
+    let grad_lo = rng.uniform(0.15, 0.35);
+    let grad_hi = rng.uniform(0.45, 0.65);
+    let n_obj = 1 + rng.next_u32_below(DET_MAX_OBJ);
+
+    let mut img = vec![0.0f64; DET_IMG * DET_IMG * 3];
+    for y in 0..DET_IMG {
+        for x in 0..DET_IMG {
+            let t = if grad_dir == 0 { x as f64 } else { y as f64 } / (DET_IMG - 1) as f64;
+            let v = grad_lo + (grad_hi - grad_lo) * t;
+            for ch in 0..3 {
+                img[(y * DET_IMG + x) * 3 + ch] = v;
+            }
+        }
+    }
+
+    let mut boxes = Vec::with_capacity(n_obj as usize);
+    for _ in 0..n_obj {
+        let cls = rng.next_u32_below(DET_CLASSES as u32) as usize;
+        let size = rng.uniform(12.0, 24.0);
+        let cx = rng.uniform(size / 2.0 + 2.0, DET_IMG as f64 - size / 2.0 - 2.0);
+        let cy = rng.uniform(size / 2.0 + 2.0, DET_IMG as f64 - size / 2.0 - 2.0);
+        let jit = rng.uniform(-0.1, 0.1);
+        let col = [
+            (DET_COLORS[cls][0] + jit).clamp(0.0, 1.0),
+            (DET_COLORS[cls][1] + jit).clamp(0.0, 1.0),
+            (DET_COLORS[cls][2] + jit).clamp(0.0, 1.0),
+        ];
+        let half = size / 2.0;
+        for y in 0..DET_IMG {
+            for x in 0..DET_IMG {
+                let (xf, yf) = (x as f64, y as f64);
+                let inside = match cls {
+                    0 => (xf - cx).abs() <= half && (yf - cy).abs() <= half,
+                    1 => (xf - cx).powi(2) + (yf - cy).powi(2) <= half * half,
+                    _ => {
+                        let th = size / 4.0;
+                        ((xf - cx).abs() <= th && (yf - cy).abs() <= half)
+                            || ((yf - cy).abs() <= th && (xf - cx).abs() <= half)
+                    }
+                };
+                if inside {
+                    for ch in 0..3 {
+                        img[(y * DET_IMG + x) * 3 + ch] = col[ch];
+                    }
+                }
+            }
+        }
+        boxes.push(GtBox {
+            class: cls,
+            x: cx - half,
+            y: cy - half,
+            w: size,
+            h: size,
+        });
+    }
+
+    let pixels = img
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v + 0.10 * hash_noise_at(seed, NOISE_STREAM_DET, i as u64)) as f32)
+        .collect();
+    DetScene { pixels, boxes }
+}
+
+/// Batch of scenes: flattened pixels plus per-scene ground truth.
+pub fn gen_detect_batch(base_seed: u64, start: u64, count: usize) -> (Vec<f32>, Vec<Vec<GtBox>>) {
+    let mut xs = Vec::with_capacity(count * DET_IMG * DET_IMG * 3);
+    let mut gts = Vec::with_capacity(count);
+    for i in 0..count {
+        let s = gen_detect_scene(base_seed, start + i as u64);
+        xs.extend_from_slice(&s.pixels);
+        gts.push(s.boxes);
+    }
+    (xs, gts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = gen_detect_scene(9, 77);
+        let b = gen_detect_scene(9, 77);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.boxes, b.boxes);
+    }
+
+    #[test]
+    fn boxes_in_bounds() {
+        for idx in 0..200 {
+            let s = gen_detect_scene(9, idx);
+            assert!(!s.boxes.is_empty() && s.boxes.len() <= DET_MAX_OBJ as usize);
+            for b in &s.boxes {
+                assert!(b.class < DET_CLASSES);
+                assert!(b.x >= 0.0 && b.y >= 0.0);
+                assert!(b.x + b.w <= DET_IMG as f64 && b.y + b.h <= DET_IMG as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn objects_are_visible() {
+        // The object colour must dominate the background near the centre.
+        let s = gen_detect_scene(9, 4);
+        let b = s.boxes[0];
+        let (cx, cy) = ((b.x + b.w / 2.0) as usize, (b.y + b.h / 2.0) as usize);
+        let px = &s.pixels[(cy * DET_IMG + cx) * 3..(cy * DET_IMG + cx) * 3 + 3];
+        let base = DET_COLORS[b.class];
+        for ch in 0..3 {
+            assert!((px[ch] as f64 - base[ch]).abs() < 0.35, "ch{ch}: {} vs {}", px[ch], base[ch]);
+        }
+    }
+}

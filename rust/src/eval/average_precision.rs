@@ -1,0 +1,282 @@
+//! COCO-style average precision at a fixed IoU threshold (the paper's
+//! mAP (IoU = 0.5) metric for YOLOv3, computed with the COCO API [43];
+//! we implement the same all-point-interpolated AP).
+
+use crate::data::synth_scenes::{GtBox, DET_CLASSES, DET_IMG};
+
+/// One decoded detection.
+#[derive(Clone, Copy, Debug)]
+pub struct Detection {
+    pub image: usize,
+    pub class: usize,
+    pub score: f32,
+    pub x: f32,
+    pub y: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+/// Intersection-over-union of two (x, y, w, h) boxes.
+pub fn iou(a: (f64, f64, f64, f64), b: (f64, f64, f64, f64)) -> f64 {
+    let (ax0, ay0, aw, ah) = a;
+    let (bx0, by0, bw, bh) = b;
+    let (ax1, ay1) = (ax0 + aw, ay0 + ah);
+    let (bx1, by1) = (bx0 + bw, by0 + bh);
+    let iw = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let ih = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = iw * ih;
+    let union = aw * ah + bw * bh - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Decode one image's 8x8x(1+4+3) *probability* grid (the cloud artifact
+/// applies sigmoid/softmax in-graph) into detections, with objectness
+/// threshold and greedy same-class NMS.
+pub fn decode_grid(
+    image: usize,
+    grid: &[f32],
+    gh: usize,
+    gw: usize,
+    obj_threshold: f32,
+) -> Vec<Detection> {
+    let ch = 1 + 4 + DET_CLASSES;
+    assert_eq!(grid.len(), gh * gw * ch);
+    let cell = DET_IMG as f32 / gw as f32;
+    let mut dets = Vec::new();
+    for gy in 0..gh {
+        for gx in 0..gw {
+            let v = &grid[(gy * gw + gx) * ch..(gy * gw + gx + 1) * ch];
+            let obj = v[0];
+            if obj < obj_threshold {
+                continue;
+            }
+            let (tx, ty, tw, th) = (v[1], v[2], v[3], v[4]);
+            let mut best_c = 0;
+            for c in 1..DET_CLASSES {
+                if v[5 + c] > v[5 + best_c] {
+                    best_c = c;
+                }
+            }
+            let cx = (gx as f32 + tx) * cell;
+            let cy = (gy as f32 + ty) * cell;
+            let (w, h) = (tw * DET_IMG as f32, th * DET_IMG as f32);
+            dets.push(Detection {
+                image,
+                class: best_c,
+                score: obj * v[5 + best_c],
+                x: cx - w / 2.0,
+                y: cy - h / 2.0,
+                w,
+                h,
+            });
+        }
+    }
+    nms(dets, 0.5)
+}
+
+fn nms(mut dets: Vec<Detection>, thr: f64) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::new();
+    'outer: for d in dets {
+        for k in &keep {
+            if k.class == d.class
+                && iou(
+                    (d.x as f64, d.y as f64, d.w as f64, d.h as f64),
+                    (k.x as f64, k.y as f64, k.w as f64, k.h as f64),
+                ) > thr
+            {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+    }
+    keep
+}
+
+/// AP for one class over a whole corpus (all-point interpolation).
+pub fn ap_at_iou(
+    class: usize,
+    detections: &[Detection],
+    gts: &[Vec<GtBox>],
+    iou_thr: f64,
+) -> f64 {
+    let n_gt: usize = gts
+        .iter()
+        .map(|g| g.iter().filter(|b| b.class == class).count())
+        .sum();
+    if n_gt == 0 {
+        return f64::NAN; // class absent from this corpus slice
+    }
+    let mut dets: Vec<&Detection> = detections.iter().filter(|d| d.class == class).collect();
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+
+    let mut matched: Vec<Vec<bool>> = gts.iter().map(|g| vec![false; g.len()]).collect();
+    let mut tp = Vec::with_capacity(dets.len());
+    for d in &dets {
+        let gt_list = &gts[d.image];
+        let mut best_iou = 0.0;
+        let mut best_j = None;
+        for (j, g) in gt_list.iter().enumerate() {
+            if g.class != class || matched[d.image][j] {
+                continue;
+            }
+            let i = iou(
+                (d.x as f64, d.y as f64, d.w as f64, d.h as f64),
+                (g.x, g.y, g.w, g.h),
+            );
+            if i > best_iou {
+                best_iou = i;
+                best_j = Some(j);
+            }
+        }
+        if best_iou >= iou_thr {
+            matched[d.image][best_j.unwrap()] = true;
+            tp.push(true);
+        } else {
+            tp.push(false);
+        }
+    }
+
+    // precision-recall sweep, all-point interpolation
+    let mut cum_tp = 0usize;
+    let mut precis = Vec::with_capacity(tp.len());
+    let mut recall = Vec::with_capacity(tp.len());
+    for (k, &is_tp) in tp.iter().enumerate() {
+        if is_tp {
+            cum_tp += 1;
+        }
+        precis.push(cum_tp as f64 / (k + 1) as f64);
+        recall.push(cum_tp as f64 / n_gt as f64);
+    }
+    // Make precision monotone non-increasing from the right.
+    for k in (0..precis.len().saturating_sub(1)).rev() {
+        precis[k] = precis[k].max(precis[k + 1]);
+    }
+    let mut ap = 0.0;
+    let mut prev_r = 0.0;
+    for k in 0..precis.len() {
+        ap += (recall[k] - prev_r) * precis[k];
+        prev_r = recall[k];
+    }
+    ap
+}
+
+/// Mean AP over all classes present in the ground truth.
+pub fn map_at_iou(detections: &[Detection], gts: &[Vec<GtBox>], iou_thr: f64) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for c in 0..DET_CLASSES {
+        let ap = ap_at_iou(c, detections, gts, iou_thr);
+        if !ap.is_nan() {
+            sum += ap;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gt(class: usize, x: f64, y: f64, s: f64) -> GtBox {
+        GtBox {
+            class,
+            x,
+            y,
+            w: s,
+            h: s,
+        }
+    }
+
+    fn det(image: usize, class: usize, score: f32, x: f32, y: f32, s: f32) -> Detection {
+        Detection {
+            image,
+            class,
+            score,
+            x,
+            y,
+            w: s,
+            h: s,
+        }
+    }
+
+    #[test]
+    fn iou_basics() {
+        assert!((iou((0.0, 0.0, 10.0, 10.0), (0.0, 0.0, 10.0, 10.0)) - 1.0).abs() < 1e-12);
+        assert_eq!(iou((0.0, 0.0, 10.0, 10.0), (20.0, 20.0, 5.0, 5.0)), 0.0);
+        let half = iou((0.0, 0.0, 10.0, 10.0), (0.0, 5.0, 10.0, 10.0));
+        assert!((half - 50.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_detections_give_ap_one() {
+        let gts = vec![vec![gt(0, 10.0, 10.0, 16.0)], vec![gt(0, 30.0, 30.0, 12.0)]];
+        let dets = vec![
+            det(0, 0, 0.9, 10.0, 10.0, 16.0),
+            det(1, 0, 0.8, 30.0, 30.0, 12.0),
+        ];
+        assert!((ap_at_iou(0, &dets, &gts, 0.5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn false_positive_lowers_ap() {
+        let gts = vec![vec![gt(0, 10.0, 10.0, 16.0)]];
+        let dets = vec![
+            det(0, 0, 0.95, 40.0, 40.0, 16.0), // confident miss
+            det(0, 0, 0.60, 10.0, 10.0, 16.0), // correct
+        ];
+        let ap = ap_at_iou(0, &dets, &gts, 0.5);
+        assert!((ap - 0.5).abs() < 1e-12, "ap {ap}");
+    }
+
+    #[test]
+    fn duplicate_detections_count_once() {
+        let gts = vec![vec![gt(1, 10.0, 10.0, 16.0)]];
+        let dets = vec![
+            det(0, 1, 0.9, 10.0, 10.0, 16.0),
+            det(0, 1, 0.8, 11.0, 10.0, 16.0), // duplicate — FP after match
+        ];
+        let ap = ap_at_iou(1, &dets, &gts, 0.5);
+        assert!((ap - 1.0).abs() < 1e-12, "first match carries full recall: {ap}");
+    }
+
+    #[test]
+    fn map_averages_present_classes() {
+        let gts = vec![vec![gt(0, 10.0, 10.0, 16.0), gt(1, 40.0, 40.0, 12.0)]];
+        let dets = vec![det(0, 0, 0.9, 10.0, 10.0, 16.0)]; // class 1 missed
+        let m = map_at_iou(&dets, &gts, 0.5);
+        assert!((m - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_grid_thresholds_and_boxes() {
+        let (gh, gw, ch) = (8usize, 8usize, 8usize);
+        let mut grid = vec![0.0f32; gh * gw * ch];
+        // Cell (3, 2): obj 0.9, centre offset (0.5, 0.5), size 16/64 = 0.25,
+        // class 1.
+        let base = (3 * gw + 2) * ch;
+        grid[base] = 0.9;
+        grid[base + 1] = 0.5;
+        grid[base + 2] = 0.5;
+        grid[base + 3] = 0.25;
+        grid[base + 4] = 0.25;
+        grid[base + 5] = 0.05;
+        grid[base + 6] = 0.9;
+        grid[base + 7] = 0.05;
+        let dets = decode_grid(0, &grid, gh, gw, 0.3);
+        assert_eq!(dets.len(), 1);
+        let d = dets[0];
+        assert_eq!(d.class, 1);
+        assert!((d.x - (2.5 * 8.0 - 8.0)).abs() < 1e-4);
+        assert!((d.w - 16.0).abs() < 1e-4);
+    }
+}

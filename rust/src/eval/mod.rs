@@ -1,0 +1,44 @@
+//! Task metrics: Top-1 accuracy (classification) and COCO-style AP@0.5
+//! (detection), plus rate–distortion bookkeeping for the experiment
+//! harness.
+
+pub mod average_precision;
+pub mod rd;
+
+pub use average_precision::{ap_at_iou, decode_grid, iou, map_at_iou, Detection};
+pub use rd::{RdCurve, RdPoint};
+
+/// Top-1 accuracy from per-item logits (row-major `[items, classes]`).
+pub fn top1(logits: &[f32], classes: usize, labels: &[usize]) -> f64 {
+    assert_eq!(logits.len(), classes * labels.len());
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_counts_correct_rows() {
+        let logits = vec![
+            0.1, 0.9, 0.0, // pred 1
+            2.0, 1.0, 0.5, // pred 0
+            0.0, 0.1, 0.2, // pred 2
+        ];
+        assert_eq!(top1(&logits, 3, &[1, 0, 0]), 2.0 / 3.0);
+        assert_eq!(top1(&logits, 3, &[1, 0, 2]), 1.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Rate–distortion bookkeeping: the (bits/element, accuracy) operating
+//! points the paper plots in Figs. 8-10.
+
+/// One operating point of a codec configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RdPoint {
+    /// Compressed size in bits per feature-tensor element, side info
+    /// included (the paper's rate metric).
+    pub bits_per_element: f64,
+    /// Task metric: Top-1 accuracy or mAP@0.5, in [0, 1].
+    pub metric: f64,
+    /// The quantizer level count N that produced this point (0 for the
+    /// picture-codec baseline, where QP is the knob).
+    pub levels: usize,
+    /// Auxiliary knob (c_max for uniform sweeps, lambda for ECQ, QP for
+    /// the baseline).
+    pub knob: f64,
+}
+
+/// A labelled RD curve.
+#[derive(Clone, Debug, Default)]
+pub struct RdCurve {
+    pub label: String,
+    pub points: Vec<RdPoint>,
+}
+
+impl RdCurve {
+    pub fn new(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: RdPoint) {
+        self.points.push(p);
+    }
+
+    /// Sort by rate (ascending) — plotting order.
+    pub fn sort_by_rate(&mut self) {
+        self.points
+            .sort_by(|a, b| a.bits_per_element.partial_cmp(&b.bits_per_element).unwrap());
+    }
+
+    /// Linear-interpolated metric at a given rate (for curve-vs-curve
+    /// comparisons like "lightweight beats baseline by up to X%").
+    pub fn metric_at_rate(&self, rate: f64) -> Option<f64> {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| a.bits_per_element.partial_cmp(&b.bits_per_element).unwrap());
+        if pts.is_empty() || rate < pts[0].bits_per_element || rate > pts.last().unwrap().bits_per_element
+        {
+            return None;
+        }
+        for w in pts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if rate >= a.bits_per_element && rate <= b.bits_per_element {
+                let t = if b.bits_per_element > a.bits_per_element {
+                    (rate - a.bits_per_element) / (b.bits_per_element - a.bits_per_element)
+                } else {
+                    0.0
+                };
+                return Some(a.metric + t * (b.metric - a.metric));
+            }
+        }
+        None
+    }
+
+    /// Max metric advantage of `self` over `other` across the overlapping
+    /// rate range (sampled).
+    pub fn max_gain_over(&self, other: &RdCurve, samples: usize) -> Option<f64> {
+        let lo = self
+            .points
+            .iter()
+            .chain(&other.points)
+            .map(|p| p.bits_per_element)
+            .fold(f64::INFINITY, f64::min);
+        let hi = self
+            .points
+            .iter()
+            .chain(&other.points)
+            .map(|p| p.bits_per_element)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut best: Option<f64> = None;
+        for i in 0..=samples {
+            let r = lo + (hi - lo) * i as f64 / samples as f64;
+            if let (Some(a), Some(b)) = (self.metric_at_rate(r), other.metric_at_rate(r)) {
+                let gain = a - b;
+                best = Some(best.map_or(gain, |g: f64| g.max(gain)));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(pts: &[(f64, f64)]) -> RdCurve {
+        let mut c = RdCurve::new("t");
+        for &(r, m) in pts {
+            c.push(RdPoint {
+                bits_per_element: r,
+                metric: m,
+                levels: 2,
+                knob: 0.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn interpolation_midpoint() {
+        let c = curve(&[(1.0, 0.5), (3.0, 0.9)]);
+        assert!((c.metric_at_rate(2.0).unwrap() - 0.7).abs() < 1e-12);
+        assert!(c.metric_at_rate(0.5).is_none());
+    }
+
+    #[test]
+    fn gain_detects_dominance() {
+        let a = curve(&[(1.0, 0.8), (2.0, 0.9)]);
+        let b = curve(&[(1.0, 0.7), (2.0, 0.85)]);
+        let g = a.max_gain_over(&b, 10).unwrap();
+        assert!((g - 0.1).abs() < 1e-9, "gain {g}");
+    }
+}

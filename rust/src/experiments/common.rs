@@ -1,0 +1,264 @@
+//! Shared drivers for the figure/table experiments.
+//!
+//! The expensive part of every sweep is inference. Each harness runs the
+//! edge half ONCE over the validation slice and caches the split-layer
+//! tensors; every operating point (c_max, N, λ, quantizer flavour) then
+//! only pays for a feature transform + the cloud half.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::codec::Quantizer;
+use crate::coordinator::TaskKind;
+use crate::data;
+use crate::eval::{decode_grid, map_at_iou, Detection};
+use crate::runtime::{Executable, Manifest, Runtime, SplitStats};
+use crate::tensor::Tensor;
+
+/// Experiment context: manifest + output directory + evaluation size.
+pub struct ExpCtx {
+    pub manifest: Manifest,
+    pub out_dir: PathBuf,
+    /// Validation images per operating point.
+    pub val_n: usize,
+    /// ECQ training images (paper: 100).
+    pub train_n: usize,
+}
+
+impl ExpCtx {
+    pub fn new(manifest: Manifest, out_dir: &Path, val_n: usize) -> Result<Self> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(Self {
+            manifest,
+            out_dir: out_dir.to_path_buf(),
+            val_n,
+            train_n: 100,
+        })
+    }
+
+    /// Write a CSV result file and echo its path.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+        let path = self.out_dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        println!("  wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+/// A validation slice with cached split-layer features.
+pub struct ValCache {
+    pub task: TaskKind,
+    pub features: Vec<f32>, // n * per_item
+    pub per_item: usize,
+    pub n: usize,
+    pub labels: Vec<usize>,          // classification
+    pub gts: Vec<Vec<data::GtBox>>,  // detection
+    cloud: Executable,
+    batch: usize,
+    feature_shape: Vec<usize>,
+    grid: usize,
+    pub stats: SplitStats,
+}
+
+impl ValCache {
+    /// Run the edge half over `n` validation items and cache the features.
+    pub fn build(m: &Manifest, task: TaskKind, n: usize) -> Result<ValCache> {
+        let rt = Runtime::cpu()?;
+        let (edge_path, cloud_path, feature, stats) = match task {
+            TaskKind::ClassifyResnet { split } => {
+                let s = m.resnet_split(split)?;
+                (&s.edge, &s.cloud, s.feature.clone(), s.stats)
+            }
+            TaskKind::ClassifyAlex => (
+                &m.alex.edge,
+                &m.alex.cloud,
+                m.alex.feature.clone(),
+                m.alex.stats,
+            ),
+            TaskKind::Detect => (
+                &m.detect.edge,
+                &m.detect.cloud,
+                m.detect.feature.clone(),
+                m.detect.stats,
+            ),
+        };
+        let edge = rt.load(edge_path).context("loading edge")?;
+        let cloud = rt.load(cloud_path).context("loading cloud")?;
+        let batch = feature[0];
+        let per_item: usize = feature[1..].iter().product();
+
+        let mut features = Vec::with_capacity(n * per_item);
+        let mut labels = Vec::new();
+        let mut gts = Vec::new();
+        for start in (0..n).step_by(batch) {
+            let count = batch.min(n - start);
+            let input = match task {
+                TaskKind::Detect => {
+                    let (mut xs, mut g) = data::gen_detect_batch(m.val_seed, start as u64, count);
+                    pad_batch(&mut xs, data::DET_IMG * data::DET_IMG * 3, count, batch);
+                    gts.append(&mut g);
+                    Tensor::new(&[batch, data::DET_IMG, data::DET_IMG, 3], xs)
+                }
+                _ => {
+                    let (mut xs, ys) = data::gen_class_batch(m.val_seed, start as u64, count);
+                    pad_batch(&mut xs, data::IMG * data::IMG * 3, count, batch);
+                    labels.extend_from_slice(&ys[..count]);
+                    Tensor::new(&[batch, data::IMG, data::IMG, 3], xs)
+                }
+            };
+            let feat = edge.run1(&[&input])?;
+            features.extend_from_slice(&feat.data()[..count * per_item]);
+        }
+        Ok(ValCache {
+            task,
+            features,
+            per_item,
+            n,
+            labels,
+            gts,
+            cloud,
+            batch,
+            feature_shape: feature,
+            grid: m.detect_grid,
+            stats,
+        })
+    }
+
+    /// Evaluate the task metric with an element-wise transform applied to
+    /// the cached features (identity transform = clean accuracy).
+    pub fn metric_with(&self, transform: impl Fn(f32) -> f32) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut detections: Vec<Detection> = Vec::new();
+        let mut buf = vec![0.0f32; self.batch * self.per_item];
+        for start in (0..self.n).step_by(self.batch) {
+            let count = self.batch.min(self.n - start);
+            for i in 0..count {
+                let src = &self.features[(start + i) * self.per_item..(start + i + 1) * self.per_item];
+                for (d, &s) in buf[i * self.per_item..(i + 1) * self.per_item]
+                    .iter_mut()
+                    .zip(src)
+                {
+                    *d = transform(s);
+                }
+            }
+            // Pad with copies of the last real item.
+            for i in count..self.batch {
+                let (a, b_slice) = buf.split_at_mut(i * self.per_item);
+                b_slice[..self.per_item]
+                    .copy_from_slice(&a[(count - 1) * self.per_item..count * self.per_item]);
+            }
+            let out = self
+                .cloud
+                .run1(&[&Tensor::new(&self.feature_shape, buf.clone())])?;
+            match self.task {
+                TaskKind::Detect => {
+                    let ch = out.shape()[3];
+                    let per_out = self.grid * self.grid * ch;
+                    for i in 0..count {
+                        detections.extend(decode_grid(
+                            start + i,
+                            &out.data()[i * per_out..(i + 1) * per_out],
+                            self.grid,
+                            self.grid,
+                            0.3,
+                        ));
+                    }
+                }
+                _ => {
+                    let classes = out.shape()[1];
+                    for i in 0..count {
+                        let row = &out.data()[i * classes..(i + 1) * classes];
+                        let mut best = 0usize;
+                        for (j, &v) in row.iter().enumerate() {
+                            if v > row[best] {
+                                best = j;
+                            }
+                        }
+                        if best == self.labels[start + i] {
+                            correct += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(match self.task {
+            TaskKind::Detect => map_at_iou(&detections, &self.gts, 0.5),
+            _ => correct as f64 / self.n as f64,
+        })
+    }
+
+    /// Metric with a quantizer in the loop.
+    pub fn metric_quantized(&self, q: &Quantizer) -> Result<f64> {
+        self.metric_with(|x| q.fake_quant(x))
+    }
+
+    /// Measured MSRE between original and transformed features.
+    pub fn msre_with(&self, transform: impl Fn(f32) -> f32) -> f64 {
+        let mut e = 0.0f64;
+        for &x in &self.features {
+            let d = (x - transform(x)) as f64;
+            e += d * d;
+        }
+        e / self.features.len().max(1) as f64
+    }
+
+    /// Sample moments of the cached features (for model fits on exactly
+    /// the evaluation slice).
+    pub fn moments(&self) -> (f64, f64) {
+        let n = self.features.len() as f64;
+        let mean: f64 = self.features.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 =
+            self.features.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    /// Largest feature value (sweep upper bounds).
+    pub fn max_value(&self) -> f32 {
+        self.features.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Features of the first `k` items (ECQ quantizer training set).
+    pub fn training_slice(&self, k: usize) -> &[f32] {
+        &self.features[..self.per_item * k.min(self.n)]
+    }
+}
+
+fn pad_batch(xs: &mut Vec<f32>, per_img: usize, count: usize, batch: usize) {
+    for _ in count..batch {
+        let tail = xs[xs.len() - per_img..].to_vec();
+        xs.extend_from_slice(&tail);
+    }
+}
+
+/// The activation/κ family a network's split layer belongs to.
+pub fn family_of(task: TaskKind) -> (crate::modeling::Activation, f64) {
+    match task {
+        TaskKind::ClassifyAlex => (crate::modeling::Activation::Relu, 1.0),
+        _ => (
+            crate::modeling::Activation::LeakyRelu { slope: crate::LEAKY_SLOPE },
+            0.5,
+        ),
+    }
+}
+
+/// Fit the split-layer model from cached-feature moments.
+pub fn fit_cache(cache: &ValCache) -> Result<crate::modeling::FittedModel> {
+    let (mean, var) = cache.moments();
+    let (act, kappa) = family_of(cache.task);
+    crate::modeling::fit(mean, var, kappa, act).map_err(anyhow::Error::msg)
+}
+
+/// Standard task list for per-network experiment loops.
+pub fn all_tasks() -> Vec<(&'static str, TaskKind)> {
+    vec![
+        ("resnet", TaskKind::ClassifyResnet { split: 2 }),
+        ("detect", TaskKind::Detect),
+        ("alex", TaskKind::ClassifyAlex),
+    ]
+}

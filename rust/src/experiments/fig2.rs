@@ -1,0 +1,65 @@
+//! Fig. 2 — effects of clipping and coarse quantization on task accuracy.
+//!
+//! For each network: sweep `c_max` (with `c_min = 0`) at several level
+//! counts N, reporting the task metric and the measured MSRE. Reproduces
+//! the paper's observations: a peak-accuracy plateau that narrows and
+//! shifts left as N shrinks, and min-MSRE ≉ max-accuracy for N ≤ 4.
+
+use anyhow::Result;
+
+use super::common::{all_tasks, ExpCtx, ValCache};
+use crate::codec::UniformQuantizer;
+
+pub const SWEEP_LEVELS: [usize; 5] = [2, 4, 8, 16, 32];
+
+pub fn sweep_cmax_grid(max_val: f32) -> Vec<f32> {
+    // Log-ish grid from 5% to 120% of the observed max.
+    let mut grid = Vec::new();
+    let lo = (0.05 * max_val).max(1e-3);
+    let hi = 1.2 * max_val;
+    let steps = 24;
+    for i in 0..=steps {
+        grid.push(lo * (hi / lo).powf(i as f32 / steps as f32));
+    }
+    grid
+}
+
+pub fn run(ctx: &ExpCtx, only: Option<&str>) -> Result<()> {
+    for (name, task) in all_tasks() {
+        if let Some(o) = only {
+            if o != name {
+                continue;
+            }
+        }
+        println!("[fig2] net={name} val_n={}", ctx.val_n);
+        let cache = ValCache::build(&ctx.manifest, task, ctx.val_n)?;
+        let clean = cache.metric_with(|x| x)?;
+        println!("  clean metric = {clean:.4}");
+
+        let grid = sweep_cmax_grid(cache.max_value());
+        let mut rows = Vec::new();
+        for &levels in &SWEEP_LEVELS {
+            let mut best = (0.0f64, 0.0f32);
+            for &c_max in &grid {
+                let q = UniformQuantizer::new(0.0, c_max, levels);
+                let metric = cache.metric_with(|x| q.fake_quant(x))?;
+                let msre = cache.msre_with(|x| q.fake_quant(x));
+                rows.push(format!("{levels},{c_max:.4},{metric:.5},{msre:.6}"));
+                if metric > best.0 {
+                    best = (metric, c_max);
+                }
+            }
+            println!(
+                "  N={levels:<2} best metric {:.4} at c_max {:.3}",
+                best.0, best.1
+            );
+        }
+        rows.push(format!("0,inf,{clean:.5},0.0")); // unquantized reference row
+        ctx.write_csv(
+            &format!("fig2_{name}.csv"),
+            "levels,c_max,metric,msre",
+            &rows,
+        )?;
+    }
+    Ok(())
+}

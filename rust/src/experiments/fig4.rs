@@ -1,0 +1,48 @@
+//! Fig. 4 — decomposition of the analytic reconstruction error into
+//! clipping error (monotone decreasing in c_max, independent of N) and
+//! quantization error, for the fitted model at N = 4.
+
+use anyhow::Result;
+
+use super::common::{fit_cache, ExpCtx, ValCache};
+use crate::coordinator::TaskKind;
+use crate::modeling::{clip_error, quant_error, total_error};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let cache = ValCache::build(&ctx.manifest, TaskKind::ClassifyResnet { split: 2 }, ctx.val_n)?;
+    let model = fit_cache(&cache)?;
+    let levels = 4usize;
+    let hi = 1.3 * cache.max_value() as f64;
+
+    let mut rows = Vec::new();
+    let steps = 120;
+    for i in 1..=steps {
+        let c = hi * i as f64 / steps as f64;
+        let eq = quant_error(&model.pdf, 0.0, c, levels);
+        let ec = clip_error(&model.pdf, 0.0, c);
+        rows.push(format!("{c:.4},{eq:.6},{ec:.6},{:.6}", eq + ec));
+    }
+    ctx.write_csv("fig4_resnet_n4.csv", "c_max,e_quant,e_clip,e_tot", &rows)?;
+
+    // Echo the paper's qualitative claims.
+    let (small, large) = (0.2 * hi, hi);
+    println!(
+        "[fig4] at c_max={small:.2}: e_clip {:.4} vs e_quant {:.4} (clipping dominates: {})",
+        clip_error(&model.pdf, 0.0, small),
+        quant_error(&model.pdf, 0.0, small, levels),
+        clip_error(&model.pdf, 0.0, small) > quant_error(&model.pdf, 0.0, small, levels)
+    );
+    println!(
+        "[fig4] at c_max={large:.2}: e_clip {:.4} vs e_quant {:.4} (quantization dominates: {})",
+        clip_error(&model.pdf, 0.0, large),
+        quant_error(&model.pdf, 0.0, large, levels),
+        clip_error(&model.pdf, 0.0, large) < quant_error(&model.pdf, 0.0, large, levels)
+    );
+    let opt = crate::modeling::optimal_cmax(&model.pdf, 0.0, levels);
+    println!(
+        "[fig4] argmin e_tot = {:.3} (e_tot {:.4})",
+        opt.c_max,
+        total_error(&model.pdf, 0.0, opt.c_max, levels)
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Fig. 5 — analytic e_tot vs measured reconstruction error for all three
+//! networks (Fig. 6 — the same comparison at the other ResNet split taps).
+//!
+//! The model is fitted from the sample mean/variance of the evaluation
+//! slice only (exactly what a deployed edge device could measure) and the
+//! closed-form e_tot(c_max) is compared against the empirically measured
+//! MSRE of the real quantizer on the real features.
+
+use anyhow::Result;
+
+use super::common::{fit_cache, ExpCtx, ValCache};
+use crate::codec::UniformQuantizer;
+use crate::coordinator::TaskKind;
+use crate::modeling::total_error;
+
+pub const LEVELS: [usize; 3] = [2, 4, 8];
+
+pub fn run_for(ctx: &ExpCtx, label: &str, task: TaskKind) -> Result<()> {
+    let cache = ValCache::build(&ctx.manifest, task, ctx.val_n)?;
+    let model = fit_cache(&cache)?;
+    let hi = 1.3 * cache.max_value();
+
+    let mut rows = Vec::new();
+    let steps = 40;
+    let mut worst_rel = 0.0f64;
+    for &levels in &LEVELS {
+        for i in 1..=steps {
+            let c = hi * i as f32 / steps as f32;
+            let analytic = total_error(&model.pdf, 0.0, c as f64, levels);
+            let q = UniformQuantizer::new(0.0, c, levels);
+            let measured = cache.msre_with(|x| q.fake_quant(x));
+            rows.push(format!("{levels},{c:.4},{analytic:.6},{measured:.6}"));
+            if measured > 1e-6 {
+                worst_rel = worst_rel.max(((analytic - measured) / measured).abs());
+            }
+        }
+        // Where do the minima fall?
+        let min_analytic = (1..=200)
+            .map(|i| hi as f64 * i as f64 / 200.0)
+            .min_by(|&a, &b| {
+                total_error(&model.pdf, 0.0, a, levels)
+                    .partial_cmp(&total_error(&model.pdf, 0.0, b, levels))
+                    .unwrap()
+            })
+            .unwrap();
+        let min_measured = (1..=200)
+            .map(|i| hi * i as f32 / 200.0)
+            .min_by(|&a, &b| {
+                let qa = UniformQuantizer::new(0.0, a, levels);
+                let qb = UniformQuantizer::new(0.0, b, levels);
+                cache
+                    .msre_with(|x| qa.fake_quant(x))
+                    .partial_cmp(&cache.msre_with(|x| qb.fake_quant(x)))
+                    .unwrap()
+            })
+            .unwrap();
+        println!(
+            "[fig5:{label}] N={levels}: argmin analytic {min_analytic:.3} vs measured {min_measured:.3}"
+        );
+    }
+    println!("[fig5:{label}] worst relative model error over sweep = {worst_rel:.3}");
+    ctx.write_csv(
+        &format!("fig5_{label}.csv"),
+        "levels,c_max,analytic_e_tot,measured_msre",
+        &rows,
+    )?;
+    Ok(())
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    run_for(ctx, "resnet_s2", TaskKind::ClassifyResnet { split: 2 })?;
+    run_for(ctx, "detect", TaskKind::Detect)?;
+    run_for(ctx, "alex", TaskKind::ClassifyAlex)?;
+    Ok(())
+}
+
+/// Fig. 6: the two other ResNet split taps.
+pub fn run_fig6(ctx: &ExpCtx) -> Result<()> {
+    run_for(ctx, "resnet_s1", TaskKind::ClassifyResnet { split: 1 })?;
+    run_for(ctx, "resnet_s3", TaskKind::ClassifyResnet { split: 3 })?;
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Fig. 7 + Table I — performance of empirical, model-based (c_min = 0 and
+//! unconstrained) and ACIQ clipping under uniform N-level quantization,
+//! N = 2..8.
+//!
+//! The empirical column grid-searches c_max on the evaluation slice (the
+//! paper's empirical optimum); the model columns come from minimizing the
+//! closed-form e_tot; ACIQ from Eq. (13) with b estimated from the data.
+
+use anyhow::Result;
+
+use super::common::{all_tasks, fit_cache, ExpCtx, ValCache};
+use super::fig2::sweep_cmax_grid;
+use crate::codec::UniformQuantizer;
+use crate::modeling::{aciq_cmax, estimate_b, optimal_cmax, optimal_range};
+
+pub const NS: [usize; 7] = [2, 3, 4, 5, 6, 7, 8];
+
+pub struct Fig7Row {
+    pub levels: usize,
+    pub empirical_cmax: f32,
+    pub empirical_metric: f64,
+    pub model_cmax: f64,
+    pub model_metric: f64,
+    pub model_cmin_u: f64,
+    pub model_cmax_u: f64,
+    pub model_metric_u: f64,
+    pub aciq_cmax: f64,
+    pub aciq_metric: f64,
+}
+
+pub fn run_net(ctx: &ExpCtx, name: &str) -> Result<Vec<Fig7Row>> {
+    let task = all_tasks()
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, t)| t)
+        .ok_or_else(|| anyhow::anyhow!("unknown net {name}"))?;
+    let cache = ValCache::build(&ctx.manifest, task, ctx.val_n)?;
+    let model = fit_cache(&cache)?;
+    let b = estimate_b(&cache.features);
+    let clean = cache.metric_with(|x| x)?;
+    println!("[fig7] net={name} clean={clean:.4} laplace-b={b:.4}");
+
+    let grid = sweep_cmax_grid(cache.max_value());
+    let mut rows = Vec::new();
+    for &levels in &NS {
+        // Empirical: best c_max on the val slice.
+        let mut emp = (f64::NEG_INFINITY, 0.0f32);
+        for &c in &grid {
+            let q = UniformQuantizer::new(0.0, c, levels);
+            let m = cache.metric_with(|x| q.fake_quant(x))?;
+            if m > emp.0 {
+                emp = (m, c);
+            }
+        }
+        // Model, c_min = 0.
+        let mc = optimal_cmax(&model.pdf, 0.0, levels);
+        let qm = UniformQuantizer::new(0.0, mc.c_max as f32, levels);
+        let m_metric = cache.metric_with(|x| qm.fake_quant(x))?;
+        // Model, unconstrained.
+        let mu = optimal_range(&model.pdf, levels);
+        let qu = UniformQuantizer::new(mu.c_min as f32, mu.c_max as f32, levels);
+        let u_metric = cache.metric_with(|x| qu.fake_quant(x))?;
+        // ACIQ.
+        let ac = aciq_cmax(b, levels);
+        let qa = UniformQuantizer::new(0.0, ac as f32, levels);
+        let a_metric = cache.metric_with(|x| qa.fake_quant(x))?;
+
+        println!(
+            "  N={levels}: empirical c={:.3} m={:.4} | model c={:.3} m={:.4} | unconstr [{:.3},{:.3}] m={:.4} | aciq c={:.3} m={:.4}",
+            emp.1, emp.0, mc.c_max, m_metric, mu.c_min, mu.c_max, u_metric, ac, a_metric
+        );
+        rows.push(Fig7Row {
+            levels,
+            empirical_cmax: emp.1,
+            empirical_metric: emp.0,
+            model_cmax: mc.c_max,
+            model_metric: m_metric,
+            model_cmin_u: mu.c_min,
+            model_cmax_u: mu.c_max,
+            model_metric_u: u_metric,
+            aciq_cmax: ac,
+            aciq_metric: a_metric,
+        });
+    }
+
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.4},{:.5},{:.4},{:.5},{:.4},{:.4},{:.5},{:.4},{:.5}",
+                r.levels,
+                r.empirical_cmax,
+                r.empirical_metric,
+                r.model_cmax,
+                r.model_metric,
+                r.model_cmin_u,
+                r.model_cmax_u,
+                r.model_metric_u,
+                r.aciq_cmax,
+                r.aciq_metric
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        &format!("fig7_table1_{name}.csv"),
+        "levels,emp_cmax,emp_metric,model_cmax,model_metric,u_cmin,u_cmax,u_metric,aciq_cmax,aciq_metric",
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+pub fn run(ctx: &ExpCtx, only: Option<&str>) -> Result<()> {
+    for (name, _) in all_tasks() {
+        if let Some(o) = only {
+            if o != name {
+                continue;
+            }
+        }
+        run_net(ctx, name)?;
+    }
+    Ok(())
+}
+
+/// Table I is the same data, printed in the paper's layout.
+pub fn run_table1(ctx: &ExpCtx) -> Result<()> {
+    println!("TABLE I — empirical and model-based optimal clipping ranges (this testbed)");
+    for (name, _) in all_tasks() {
+        let rows = run_net(ctx, name)?;
+        println!("\n  {name}: N | emp c_max | model c_max | model (c_min, c_max) unconstr | ACIQ c_max");
+        for r in &rows {
+            println!(
+                "  {:>6} | {:>9.3} | {:>11.3} | ({:>6.3}, {:>6.3}) | {:>9.3}",
+                r.levels, r.empirical_cmax, r.model_cmax, r.model_cmin_u, r.model_cmax_u, r.aciq_cmax
+            );
+        }
+    }
+    Ok(())
+}

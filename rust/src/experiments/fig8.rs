@@ -1,0 +1,175 @@
+//! Fig. 8 — full-system rate–distortion: task metric vs compressed
+//! bits/element for the lightweight codec (uniform quantization, model and
+//! empirical clipping) against the HEVC-SCC-like picture-codec baseline.
+//!
+//! Rates are real: every feature tensor is pushed through the complete
+//! encoder (header + CABAC payload); the baseline mosaics the channels to
+//! an 8-bit picture and pays its own side info (pixel range, 8 bytes).
+
+use anyhow::Result;
+
+use super::common::{fit_cache, ExpCtx, ValCache};
+use super::fig2::sweep_cmax_grid;
+use super::fig7::NS;
+use crate::baseline::{decode_picture, HevcLikeConfig, HevcLikeEncoder};
+use crate::codec::{Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use crate::coordinator::TaskKind;
+use crate::eval::{RdCurve, RdPoint};
+use crate::modeling::optimal_cmax;
+use crate::tensor::mosaic::{demosaic, mosaic, PixelRange};
+use crate::tensor::Tensor;
+
+pub const BASELINE_QPS: [i32; 7] = [40, 36, 32, 28, 24, 20, 16];
+
+/// Encode every cached item with a quantizer; mean bits/element (with the
+/// paper's 12/24-byte header).
+pub fn mean_rate(cache: &ValCache, q: &Quantizer) -> f64 {
+    let cfg = match cache.task {
+        TaskKind::Detect => EncoderConfig::detection(
+            q.clone(),
+            crate::data::DET_IMG as u8,
+            crate::codec::DetInfo {
+                net_w: crate::data::DET_IMG as u16,
+                net_h: crate::data::DET_IMG as u16,
+                feat_h: 16,
+                feat_w: 16,
+                feat_c: 32,
+            },
+        ),
+        _ => EncoderConfig::classification(q.clone(), crate::data::IMG as u8),
+    };
+    let mut enc = Encoder::new(cfg);
+    let mut bits = 0.0;
+    for i in 0..cache.n {
+        let item = &cache.features[i * cache.per_item..(i + 1) * cache.per_item];
+        bits += enc.encode(item).bits_per_element();
+    }
+    bits / cache.n as f64
+}
+
+/// Lightweight-codec RD curve with model-based clipping.
+pub fn lightweight_curve(cache: &ValCache, label: &str, use_model: bool) -> Result<RdCurve> {
+    let mut curve = RdCurve::new(label);
+    let model = if use_model { Some(fit_cache(cache)?) } else { None };
+    let grid = sweep_cmax_grid(cache.max_value());
+    for &levels in &NS {
+        let c_max = match &model {
+            Some(m) => optimal_cmax(&m.pdf, 0.0, levels).c_max as f32,
+            None => {
+                // Empirical: best metric over the sweep grid.
+                let mut best = (f64::NEG_INFINITY, grid[0]);
+                for &c in &grid {
+                    let q = UniformQuantizer::new(0.0, c, levels);
+                    let m = cache.metric_with(|x| q.fake_quant(x))?;
+                    if m > best.0 {
+                        best = (m, c);
+                    }
+                }
+                best.1
+            }
+        };
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels));
+        let metric = cache.metric_quantized(&q)?;
+        let rate = mean_rate(cache, &q);
+        println!("  [{label}] N={levels} c_max={c_max:.3}: {metric:.4} @ {rate:.3} b/elem");
+        curve.push(RdPoint {
+            bits_per_element: rate,
+            metric,
+            levels,
+            knob: c_max as f64,
+        });
+    }
+    curve.sort_by_rate();
+    Ok(curve)
+}
+
+/// Picture-codec baseline curve over a QP sweep.
+pub fn baseline_curve(cache: &ValCache, transform_skip: bool) -> Result<RdCurve> {
+    let (h, w, c) = feature_hwc(cache);
+    let mut curve = RdCurve::new(if transform_skip { "hevc_like_ts" } else { "hevc_like" });
+    for &qp in &BASELINE_QPS {
+        let cfg = HevcLikeConfig {
+            qp,
+            transform_skip,
+        };
+        let enc = HevcLikeEncoder::new(cfg);
+        let mut total_bits = 0.0f64;
+        // Decode-and-evaluate: transform features per item through the
+        // picture codec, then run the cloud half on the reconstruction.
+        let mut recon_all = vec![0.0f32; cache.features.len()];
+        for i in 0..cache.n {
+            let item = &cache.features[i * cache.per_item..(i + 1) * cache.per_item];
+            let t = Tensor::new(&[h, w, c], item.to_vec());
+            let range = PixelRange::of(&t);
+            let (pic, layout) = mosaic(&t, range);
+            let encoded = enc.encode(&pic);
+            total_bits += (encoded.bytes.len() as f64 + 8.0) * 8.0; // +8B range side info
+            let back = decode_picture(&encoded.bytes, pic.width, pic.height, cfg)
+                .map_err(anyhow::Error::msg)?;
+            let rt = demosaic(&back, &layout, range);
+            recon_all[i * cache.per_item..(i + 1) * cache.per_item].copy_from_slice(rt.data());
+        }
+        // Metric with the per-element substitution from the recon buffer.
+        let idx = std::cell::Cell::new(0usize);
+        let metric = cache.metric_with(|_x| {
+            let i = idx.get();
+            idx.set(i + 1);
+            recon_all[i]
+        })?;
+        let rate = total_bits / cache.features.len() as f64;
+        println!(
+            "  [baseline ts={transform_skip}] QP={qp}: {metric:.4} @ {rate:.3} b/elem"
+        );
+        curve.push(RdPoint {
+            bits_per_element: rate,
+            metric,
+            levels: 0,
+            knob: qp as f64,
+        });
+    }
+    curve.sort_by_rate();
+    Ok(curve)
+}
+
+fn feature_hwc(cache: &ValCache) -> (usize, usize, usize) {
+    match cache.task {
+        TaskKind::ClassifyAlex => (8, 8, 64),
+        _ => (16, 16, 32),
+    }
+}
+
+fn dump(ctx: &ExpCtx, name: &str, curves: &[RdCurve]) -> Result<()> {
+    let mut rows = Vec::new();
+    for c in curves {
+        for p in &c.points {
+            rows.push(format!(
+                "{},{:.4},{:.5},{},{:.4}",
+                c.label, p.bits_per_element, p.metric, p.levels, p.knob
+            ));
+        }
+    }
+    ctx.write_csv(name, "curve,bits_per_element,metric,levels,knob", &rows)?;
+    Ok(())
+}
+
+pub fn run_for(ctx: &ExpCtx, label: &str, task: TaskKind) -> Result<()> {
+    println!("[fig8] net={label}");
+    let cache = ValCache::build(&ctx.manifest, task, ctx.val_n)?;
+    let clean = cache.metric_with(|x| x)?;
+    println!("  clean = {clean:.4}");
+    let model = lightweight_curve(&cache, "lightweight_model", true)?;
+    let emp = lightweight_curve(&cache, "lightweight_empirical", false)?;
+    let base_ts = baseline_curve(&cache, true)?;
+    let base = baseline_curve(&cache, false)?;
+    if let Some(gain) = model.max_gain_over(&base_ts, 40) {
+        println!("  max lightweight-vs-baseline(TS) metric gain over shared rates: {gain:+.4}");
+    }
+    dump(ctx, &format!("fig8_{label}.csv"), &[model, emp, base_ts, base])?;
+    Ok(())
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    run_for(ctx, "resnet", TaskKind::ClassifyResnet { split: 2 })?;
+    run_for(ctx, "detect", TaskKind::Detect)?;
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §5),
+//! each regenerating the corresponding data series as CSV + console
+//! summary from the real artifacts.
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod sec3e;
+
+use anyhow::Result;
+use common::ExpCtx;
+
+/// Registry of runnable experiments.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig2", "clipping/quantization sweeps vs accuracy + MSRE (3 nets)"),
+    ("fig3", "split-layer distributions + fitted model overlay"),
+    ("fig4", "analytic e_quant / e_clip / e_tot decomposition (N=4)"),
+    ("fig5", "analytic e_tot vs measured error (3 nets)"),
+    ("fig6", "same as fig5 at ResNet split taps 1 and 3"),
+    ("fig7", "accuracy vs N: empirical / model / ACIQ clipping"),
+    ("table1", "optimal clipping ranges table (all methods, N=2..8)"),
+    ("fig8", "rate-distortion: lightweight vs picture-codec baseline"),
+    ("fig9", "ECQ pinned vs conventional RD (resnet + detect; figs 9-10)"),
+    ("sec3e", "complexity comparison: lightweight vs picture codec"),
+];
+
+/// Run one experiment by id (`all` runs everything in order).
+pub fn run(ctx: &ExpCtx, id: &str, net: Option<&str>) -> Result<()> {
+    match id {
+        "fig2" => fig2::run(ctx, net),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig5::run_fig6(ctx),
+        "fig7" => fig7::run(ctx, net),
+        "table1" => fig7::run_table1(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" | "fig10" => fig9::run(ctx),
+        "sec3e" => sec3e::run(ctx),
+        "all" => {
+            for (id, _) in EXPERIMENTS {
+                println!("==== {id} ====");
+                run(ctx, id, net)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment `{other}`; available: {}",
+            EXPERIMENTS.iter().map(|(i, _)| *i).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}

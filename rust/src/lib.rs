@@ -1,0 +1,31 @@
+//! # lwfc — Lightweight Compression of Intermediate Neural-Network Features
+//!
+//! Full-system reproduction of Cohen, Choi & Bajić, *"Lightweight
+//! Compression of Intermediate Neural Network Features for Collaborative
+//! Intelligence"* (IEEE OJCAS 2021, DOI 10.1109/OJCAS.2021.3072884).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the collaborative-intelligence coordinator:
+//!   edge device pool → lightweight codec → cloud workers, plus the
+//!   analytic clipping models, the entropy-constrained quantizer design,
+//!   the picture-codec baseline, and the experiment harness that
+//!   regenerates every figure and table of the paper.
+//! * **L2 (python/compile/model.py)** — JAX split networks, AOT-lowered to
+//!   HLO text artifacts executed via PJRT ([`runtime`]).
+//! * **L1 (python/compile/kernels/)** — Pallas fused fake-quantization and
+//!   moment kernels, lowered into the same artifacts.
+
+pub mod baseline;
+pub mod codec;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod modeling;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Leaky-ReLU negative-side slope used by all leaky networks in this repo
+/// and by the paper's ResNet-50 implementation (Eq. (4)).
+pub const LEAKY_SLOPE: f64 = 0.1;

@@ -1,0 +1,310 @@
+//! `lwfc` — command-line entry point for the lightweight feature
+//! compression system.
+//!
+//! ```text
+//! lwfc experiment <id> [--val N] [--out DIR] [--net NAME]   regenerate a paper figure/table
+//! lwfc serve [--net NAME] [--requests N] [--levels N] ...   run the edge→cloud pipeline
+//! lwfc fit-model [--mean X --var Y | --net NAME]            fit λ,μ + optimal clip ranges
+//! lwfc encode --input F --output F [--levels N ...]         compress a raw f32 tensor file
+//! lwfc decode --input F --output F --elements N             decompress to raw f32
+//! lwfc list                                                 list experiments
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use lwfc::codec::{decode as codec_decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
+use lwfc::experiments::{self, common::ExpCtx};
+use lwfc::modeling;
+use lwfc::runtime::Manifest;
+use lwfc::util::cli::Command;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "experiment" => cmd_experiment(rest),
+        "serve" => cmd_serve(rest),
+        "fit-model" => cmd_fit_model(rest),
+        "encode" => cmd_encode(rest),
+        "decode" => cmd_decode(rest),
+        "list" => {
+            println!("experiments:");
+            for (id, desc) in experiments::EXPERIMENTS {
+                println!("  {id:<8} {desc}");
+            }
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command `{other}`\n\n{}", usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "lwfc — lightweight compression of intermediate DNN features (OJCAS 2021 reproduction)
+
+commands:
+  experiment <id|all>   regenerate a paper figure/table (see `lwfc list`)
+  serve                 run the edge→cloud collaborative-intelligence pipeline
+  fit-model             fit the asymmetric-Laplace model + optimal clip ranges
+  encode / decode       compress / decompress raw f32 tensor files
+  list                  list available experiments
+
+run `lwfc <command> --help` for per-command options"
+}
+
+fn manifest_from(dir: &str) -> Result<Manifest> {
+    let path = if dir.is_empty() {
+        Manifest::default_dir()
+    } else {
+        PathBuf::from(dir)
+    };
+    Manifest::load(&path)
+}
+
+fn task_of(net: &str) -> Result<TaskKind> {
+    Ok(match net {
+        "resnet" | "resnet_s2" => TaskKind::ClassifyResnet { split: 2 },
+        "resnet_s1" => TaskKind::ClassifyResnet { split: 1 },
+        "resnet_s3" => TaskKind::ClassifyResnet { split: 3 },
+        "alex" => TaskKind::ClassifyAlex,
+        "detect" => TaskKind::Detect,
+        other => return Err(anyhow!("unknown net `{other}` (resnet[_s1|_s2|_s3], alex, detect)")),
+    })
+}
+
+fn cmd_experiment(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("lwfc experiment", "regenerate a paper figure/table")
+        .opt("val", "256", "validation images per operating point")
+        .opt("out", "results", "output directory for CSV files")
+        .opt("net", "", "restrict to one network where applicable")
+        .opt("artifacts", "", "artifact directory (default: ./artifacts)");
+    let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let id = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: lwfc experiment <id|all> (see `lwfc list`)"))?
+        .clone();
+    let manifest = manifest_from(a.get("artifacts"))?;
+    let ctx = ExpCtx::new(
+        manifest,
+        Path::new(a.get("out")),
+        a.get_usize("val").map_err(|e| anyhow!(e))?,
+    )?;
+    let net = a.get("net");
+    experiments::run(&ctx, &id, if net.is_empty() { None } else { Some(net) })
+}
+
+fn cmd_serve(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("lwfc serve", "run the collaborative-intelligence pipeline")
+        .opt("net", "resnet", "network: resnet[_s1|_s3], alex, detect")
+        .opt("requests", "256", "total requests")
+        .opt("levels", "4", "quantizer levels N")
+        .opt("c-max", "", "clip maximum (default: model-optimal)")
+        .opt("edge-workers", "2", "simulated edge devices")
+        .opt("artifacts", "", "artifact directory")
+        .flag("adaptive", "enable the adaptive clip-range controller");
+    let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let m = manifest_from(a.get("artifacts"))?;
+    let task = task_of(a.get("net"))?;
+    let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
+
+    let stats = match task {
+        TaskKind::ClassifyResnet { split } => m.resnet_split(split)?.stats,
+        TaskKind::ClassifyAlex => m.alex.stats,
+        TaskKind::Detect => m.detect.stats,
+    };
+    let c_max: f64 = if a.get("c-max").is_empty() {
+        let (act, kappa) = experiments::common::family_of(task);
+        let model = modeling::fit(stats.mean, stats.var, kappa, act).map_err(anyhow::Error::msg)?;
+        let c = modeling::optimal_cmax(&model.pdf, 0.0, levels).c_max;
+        println!(
+            "model-optimal c_max = {c:.4} (λ={:.4}, μ={:.4})",
+            model.input.lambda, model.input.mu
+        );
+        c
+    } else {
+        a.get_f64("c-max").map_err(|e| anyhow!(e))?
+    };
+
+    let cfg = ServeConfig {
+        edge: EdgeConfig {
+            task,
+            quant: QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: c_max as f32,
+                levels,
+            },
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            adaptive: a.has_flag("adaptive").then(|| lwfc::coordinator::AdaptiveConfig {
+                levels,
+                ..Default::default()
+            }),
+        },
+        cloud: CloudConfig {
+            task,
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            obj_threshold: 0.3,
+        },
+        edge_workers: a.get_usize("edge-workers").map_err(|e| anyhow!(e))?,
+        requests: a.get_usize("requests").map_err(|e| anyhow!(e))?,
+        queue_capacity: 64,
+        first_index: 0,
+    };
+    let report = serve(&m, cfg)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_fit_model(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("lwfc fit-model", "fit λ,μ and optimal clipping ranges")
+        .opt("mean", "", "sample mean (with --var; otherwise use --net stats)")
+        .opt("var", "", "sample variance")
+        .opt("net", "resnet", "network whose manifest stats to fit")
+        .opt("kappa", "", "asymmetry κ (default: 0.5 leaky / 1.0 relu)")
+        .opt("artifacts", "", "artifact directory")
+        .flag("relu", "use plain-ReLU pushforward (one-sided)");
+    let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+
+    let (mean, var, act, kappa) = if !a.get("mean").is_empty() {
+        let act = if a.has_flag("relu") {
+            modeling::Activation::Relu
+        } else {
+            modeling::Activation::LeakyRelu {
+                slope: lwfc::LEAKY_SLOPE,
+            }
+        };
+        let kappa = if a.get("kappa").is_empty() {
+            if a.has_flag("relu") {
+                1.0
+            } else {
+                0.5
+            }
+        } else {
+            a.get_f64("kappa").map_err(|e| anyhow!(e))?
+        };
+        (
+            a.get_f64("mean").map_err(|e| anyhow!(e))?,
+            a.get_f64("var").map_err(|e| anyhow!(e))?,
+            act,
+            kappa,
+        )
+    } else {
+        let m = manifest_from(a.get("artifacts"))?;
+        let task = task_of(a.get("net"))?;
+        let stats = match task {
+            TaskKind::ClassifyResnet { split } => m.resnet_split(split)?.stats,
+            TaskKind::ClassifyAlex => m.alex.stats,
+            TaskKind::Detect => m.detect.stats,
+        };
+        let (act, kappa) = experiments::common::family_of(task);
+        (stats.mean, stats.var, act, kappa)
+    };
+
+    let model = modeling::fit(mean, var, kappa, act).map_err(anyhow::Error::msg)?;
+    println!(
+        "fit: λ = {:.7}, μ = {:.7} (κ = {kappa}, {act:?})",
+        model.input.lambda, model.input.mu
+    );
+    println!(
+        "model mean = {:.6}, var = {:.6} (targets {mean:.6}, {var:.6})",
+        model.pdf.mean(),
+        model.pdf.variance()
+    );
+    println!("\n N | model c_max (c_min=0) | unconstrained [c_min, c_max] | e_tot");
+    for levels in 2..=8 {
+        let c = modeling::optimal_cmax(&model.pdf, 0.0, levels);
+        let u = modeling::optimal_range(&model.pdf, levels);
+        println!(
+            "{levels:>2} | {:>21.4} | [{:>8.4}, {:>8.4}] | {:.6}",
+            c.c_max, u.c_min, u.c_max, c.e_tot
+        );
+    }
+    Ok(())
+}
+
+fn read_f32_file(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("{path}: length not a multiple of 4"));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn cmd_encode(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("lwfc encode", "compress a raw little-endian f32 tensor file")
+        .req("input", "raw f32 input file")
+        .req("output", "bit-stream output file")
+        .opt("levels", "4", "quantizer levels N")
+        .opt("c-min", "0", "clip minimum")
+        .opt("c-max", "", "clip maximum (default: model fit from the data)");
+    let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let data = read_f32_file(a.get("input"))?;
+    let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
+    let c_min = a.get_f64("c-min").map_err(|e| anyhow!(e))? as f32;
+    let c_max = if a.get("c-max").is_empty() {
+        let n = data.len() as f64;
+        let mean = data.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        let model = modeling::fit_leaky(mean, var).map_err(anyhow::Error::msg)?;
+        let c = modeling::optimal_cmax(&model.pdf, c_min as f64, levels).c_max;
+        println!("model-optimal c_max = {c:.4}");
+        c as f32
+    } else {
+        a.get_f64("c-max").map_err(|e| anyhow!(e))? as f32
+    };
+    let q = Quantizer::Uniform(UniformQuantizer::new(c_min, c_max, levels));
+    let mut enc = Encoder::new(EncoderConfig::classification(q, 0));
+    let stream = enc.encode(&data);
+    std::fs::write(a.get("output"), &stream.bytes)?;
+    println!(
+        "{} elements -> {} bytes ({:.4} bits/element)",
+        stream.elements,
+        stream.bytes.len(),
+        stream.bits_per_element()
+    );
+    Ok(())
+}
+
+fn cmd_decode(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("lwfc decode", "decompress a lwfc bit-stream to raw f32")
+        .req("input", "bit-stream input file")
+        .req("output", "raw f32 output file")
+        .req("elements", "element count (from the tensor shape)");
+    let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let bytes = std::fs::read(a.get("input"))?;
+    let elements = a.get_usize("elements").map_err(|e| anyhow!(e))?;
+    let (values, header) = codec_decode(&bytes, elements).map_err(anyhow::Error::msg)?;
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in &values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(a.get("output"), &out)?;
+    println!(
+        "decoded {} elements (N={}, clip [{}, {}])",
+        values.len(),
+        header.levels,
+        header.c_min,
+        header.c_max
+    );
+    Ok(())
+}

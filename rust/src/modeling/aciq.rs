@@ -1,0 +1,102 @@
+//! ACIQ baseline (Banner et al. [22][23]; paper Eq. (13)).
+//!
+//! ACIQ assumes a Laplace density f(x) = 1/(2b)·e^{-|x|/b}, estimates b
+//! from the data, and picks the clipping value
+//!
+//! ```text
+//! c_max = b · W(12 · 2^{2M})            (Eq. 13)
+//! ```
+//!
+//! with W the Lambert W function and M the bit width. The paper extends
+//! it to non-integer bit widths via M = log2(N) so it can be compared at
+//! every N-level operating point.
+
+use crate::util::math::lambert_w0;
+
+/// Eq. (13) with M = log2(levels).
+pub fn aciq_cmax(b: f64, levels: usize) -> f64 {
+    assert!(levels >= 2);
+    assert!(b > 0.0);
+    let m = (levels as f64).log2();
+    b * lambert_w0(12.0 * (2.0f64).powf(2.0 * m))
+}
+
+/// Maximum-likelihood estimate of the Laplace diversity b from samples:
+/// mean absolute deviation about the (sample) mean. For ReLU'd data ACIQ
+/// uses the one-sided fit with c_min = 0; the same estimator applies.
+pub fn estimate_b(samples: &[f32]) -> f64 {
+    assert!(!samples.is_empty());
+    let n = samples.len() as f64;
+    let mean: f64 = samples.iter().map(|&x| x as f64).sum::<f64>() / n;
+    samples.iter().map(|&x| (x as f64 - mean).abs()).sum::<f64>() / n
+}
+
+/// b from a distribution's mean absolute deviation is awkward to get in
+/// closed form for the pushforward model; ACIQ in the paper is driven by
+/// the measured tensors, so the sample estimator above is the primary
+/// entry point. For tests: the exact b of a centered Laplace is 1/λ.
+pub fn b_of_centered_laplace(lambda: f64) -> f64 {
+    1.0 / lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn lambert_argument_grows_with_levels() {
+        // More levels → finer quantizer → wider optimal clip (same
+        // qualitative behaviour as the paper's model, Table I ACIQ column).
+        let mut prev = 0.0;
+        for n in 2..=8 {
+            let c = aciq_cmax(1.0, n);
+            assert!(c > prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn paper_table1_aciq_ratios() {
+        // Table I ACIQ c_max for ResNet-50: N=2 → 5.722, N=4 → 7.878,
+        // N=8 → 10.166. These are b·W(12·N²); the *ratios* are
+        // data-independent, so they pin our Eq. (13) implementation:
+        // W(48)/W(192) etc.
+        let r42 = aciq_cmax(1.0, 4) / aciq_cmax(1.0, 2);
+        let r82 = aciq_cmax(1.0, 8) / aciq_cmax(1.0, 2);
+        assert!((r42 - 7.878 / 5.722).abs() < 1e-3, "r42={r42}");
+        assert!((r82 - 10.166 / 5.722).abs() < 1e-3, "r82={r82}");
+        // And the implied b for ResNet-50 is consistent across rows.
+        let b2 = 5.722 / aciq_cmax(1.0, 2);
+        let b8 = 10.166 / aciq_cmax(1.0, 8);
+        assert!((b2 - b8).abs() < 0.01, "b2={b2} b8={b8}");
+    }
+
+    #[test]
+    fn estimate_b_recovers_laplace_diversity() {
+        // Sample a centered Laplace with b = 2.0.
+        let mut rng = SplitMix64::new(5);
+        let b = 2.0;
+        let xs: Vec<f32> = (0..400_000)
+            .map(|_| {
+                let e = -rng.next_f64().max(1e-300).ln() * b;
+                (if rng.next_f64() < 0.5 { -e } else { e }) as f32
+            })
+            .collect();
+        let est = estimate_b(&xs);
+        assert!((est - b).abs() < 0.02, "est {est}");
+    }
+
+    #[test]
+    fn aciq_exceeds_model_optimum_at_coarse_n() {
+        // §IV-A: "for quantizers having few levels, the c_max values from
+        // ACIQ are generally higher than our empirical and model-based
+        // values". Check against the paper's own Table I numbers.
+        let paper_model_n2 = 5.184;
+        let paper_aciq_n2 = 5.722;
+        assert!(paper_aciq_n2 > paper_model_n2);
+        // And with our implementation on the ResNet b implied by Table I:
+        let b = 5.722 / aciq_cmax(1.0, 2);
+        assert!(aciq_cmax(b, 2) > paper_model_n2);
+    }
+}

@@ -1,0 +1,398 @@
+//! Pushforward of the asymmetric-Laplace input model through the split
+//! layer's activation function (paper Eqs. (4)–(5), (8), (12)).
+//!
+//! The result is represented as a **piecewise-exponential density**
+//! (`coef · e^{rate·y}` on each interval) plus an optional point mass at
+//! zero (plain ReLU rectifies all negative inputs onto y=0). All the
+//! paper's downstream quantities — the moments used to fit (λ, μ)
+//! (Eqs. (6)–(7)), the clipping error (Eq. (10)) and the quantization
+//! error (Eq. (9)) — are closed-form integrals over this representation,
+//! so no numerical quadrature appears anywhere in the model path.
+
+use super::alaplace::AsymmetricLaplace;
+
+/// One density segment: f(y) = coef · e^{rate · y} for y ∈ [a, b).
+/// `a = -inf` / `b = +inf` are allowed when the integral converges
+/// (rate > 0 / rate < 0 respectively).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpSegment {
+    pub a: f64,
+    pub b: f64,
+    pub coef: f64,
+    pub rate: f64,
+}
+
+impl ExpSegment {
+    /// ∫_lo^hi coef·e^{rate·y} dy (clamped to the segment support).
+    pub fn mass(&self, lo: f64, hi: f64) -> f64 {
+        let (lo, hi) = (lo.max(self.a), hi.min(self.b));
+        if hi <= lo {
+            return 0.0;
+        }
+        let r = self.rate;
+        debug_assert!(r != 0.0);
+        self.coef / r * (exp_or_zero(r, hi) - exp_or_zero(r, lo))
+    }
+
+    /// ∫ coef·e^{rate·y} · (y - c)² dy over [lo, hi] ∩ [a, b) — the kernel
+    /// of Eqs. (9) and (10). Antiderivative:
+    /// e^{ry}·[ (y-c)²/r − 2(y-c)/r² + 2/r³ ].
+    pub fn sq_dev(&self, c: f64, lo: f64, hi: f64) -> f64 {
+        let (lo, hi) = (lo.max(self.a), hi.min(self.b));
+        if hi <= lo {
+            return 0.0;
+        }
+        let r = self.rate;
+        debug_assert!(r != 0.0);
+        let anti = |y: f64| {
+            if y.is_infinite() {
+                // converging end only (r<0 & y=+inf, or r>0 & y=-inf)
+                0.0
+            } else {
+                let d = y - c;
+                (r * y).exp() * (d * d / r - 2.0 * d / (r * r) + 2.0 / (r * r * r))
+            }
+        };
+        self.coef * (anti(hi) - anti(lo))
+    }
+
+    /// ∫ y · f dy over [lo, hi] ∩ support (for the mean).
+    pub fn first_moment(&self, lo: f64, hi: f64) -> f64 {
+        let (lo, hi) = (lo.max(self.a), hi.min(self.b));
+        if hi <= lo {
+            return 0.0;
+        }
+        let r = self.rate;
+        let anti = |y: f64| {
+            if y.is_infinite() {
+                0.0
+            } else {
+                (r * y).exp() * (y / r - 1.0 / (r * r))
+            }
+        };
+        self.coef * (anti(hi) - anti(lo))
+    }
+}
+
+fn exp_or_zero(rate: f64, y: f64) -> f64 {
+    if y.is_infinite() {
+        // rate>0 with y=-inf, or rate<0 with y=+inf — the converging end.
+        0.0
+    } else {
+        (rate * y).exp()
+    }
+}
+
+/// Piecewise-exponential PDF with an optional point mass (ReLU's rectified
+/// negative mass sits at y = 0).
+#[derive(Clone, Debug)]
+pub struct PiecewisePdf {
+    pub segments: Vec<ExpSegment>,
+    /// (location, probability mass)
+    pub point_mass: Option<(f64, f64)>,
+}
+
+impl PiecewisePdf {
+    /// Density at y (point mass excluded — it is not a density).
+    pub fn pdf(&self, y: f64) -> f64 {
+        for s in &self.segments {
+            if y >= s.a && y < s.b {
+                return s.coef * (s.rate * y).exp();
+            }
+        }
+        0.0
+    }
+
+    pub fn total_mass(&self) -> f64 {
+        let m: f64 = self.segments.iter().map(|s| s.mass(f64::NEG_INFINITY, f64::INFINITY)).sum();
+        m + self.point_mass.map_or(0.0, |(_, p)| p)
+    }
+
+    /// Closed-form mean (the generic form of paper Eq. (6)).
+    pub fn mean(&self) -> f64 {
+        let m: f64 = self
+            .segments
+            .iter()
+            .map(|s| s.first_moment(f64::NEG_INFINITY, f64::INFINITY))
+            .sum();
+        m + self.point_mass.map_or(0.0, |(loc, p)| loc * p)
+    }
+
+    /// Closed-form variance (the generic form of paper Eq. (7)), computed
+    /// as E[(Y-m)²] via the sq_dev antiderivative for numerical hygiene.
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        let v: f64 = self
+            .segments
+            .iter()
+            .map(|s| s.sq_dev(m, f64::NEG_INFINITY, f64::INFINITY))
+            .sum();
+        v + self.point_mass.map_or(0.0, |(loc, p)| (loc - m) * (loc - m) * p)
+    }
+
+    /// ∫ f(y)·(y-c)² over [lo, hi], point mass included when inside.
+    pub fn sq_dev(&self, c: f64, lo: f64, hi: f64) -> f64 {
+        let mut v: f64 = self.segments.iter().map(|s| s.sq_dev(c, lo, hi)).sum();
+        if let Some((loc, p)) = self.point_mass {
+            if loc >= lo && loc < hi {
+                v += p * (loc - c) * (loc - c);
+            }
+        }
+        v
+    }
+
+    /// Probability mass on [lo, hi).
+    pub fn mass(&self, lo: f64, hi: f64) -> f64 {
+        let mut m: f64 = self.segments.iter().map(|s| s.mass(lo, hi)).sum();
+        if let Some((loc, p)) = self.point_mass {
+            if loc >= lo && loc < hi {
+                m += p;
+            }
+        }
+        m
+    }
+}
+
+/// Activation function at the split layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Activation {
+    /// leaky_ReLU(x) = x for x ≥ 0, slope·x otherwise (paper Eq. (4),
+    /// slope = 0.1).
+    LeakyRelu { slope: f64 },
+    /// Plain ReLU: negative mass collapses to a point mass at 0.
+    Relu,
+}
+
+/// Pushforward of `input` through `act` (paper Eq. (5) generalized to any
+/// μ sign, slope, and κ).
+pub fn pushforward(input: &AsymmetricLaplace, act: Activation) -> PiecewisePdf {
+    let c = input.coef();
+    let (lambda, mu, kappa) = (input.lambda, input.mu, input.kappa);
+    // X-domain segments of the asymmetric Laplace:
+    //   (-inf, μ): coef = C·e^{-λμ/κ},  rate = λ/κ
+    //   [μ, +inf): coef = C·e^{λκμ},    rate = -λκ
+    let x_segments = [
+        ExpSegment {
+            a: f64::NEG_INFINITY,
+            b: mu,
+            coef: c * (-(lambda / kappa) * mu).exp(),
+            rate: lambda / kappa,
+        },
+        ExpSegment {
+            a: mu,
+            b: f64::INFINITY,
+            coef: c * (lambda * kappa * mu).exp(),
+            rate: -(lambda * kappa),
+        },
+    ];
+
+    match act {
+        Activation::LeakyRelu { slope } => {
+            assert!(slope > 0.0, "leaky slope must be > 0");
+            let mut segments = Vec::new();
+            for s in &x_segments {
+                // Negative part: y = slope·x  =>  f_Y(y) = f_X(y/slope)/slope.
+                let (xa, xb) = (s.a, s.b.min(0.0));
+                if xa < xb {
+                    segments.push(ExpSegment {
+                        a: if xa.is_infinite() { f64::NEG_INFINITY } else { slope * xa },
+                        b: slope * xb,
+                        coef: s.coef / slope,
+                        rate: s.rate / slope,
+                    });
+                }
+                // Positive part: identity.
+                let (xa, xb) = (s.a.max(0.0), s.b);
+                if xa < xb {
+                    segments.push(ExpSegment {
+                        a: xa,
+                        b: if xb.is_infinite() { f64::INFINITY } else { xb },
+                        coef: s.coef,
+                        rate: s.rate,
+                    });
+                }
+            }
+            segments.sort_by(|p, q| p.a.partial_cmp(&q.a).unwrap());
+            PiecewisePdf {
+                segments,
+                point_mass: None,
+            }
+        }
+        Activation::Relu => {
+            let p0 = input.cdf(0.0);
+            let segments = x_segments
+                .iter()
+                .filter(|s| s.b > 0.0)
+                .map(|s| ExpSegment {
+                    a: s.a.max(0.0),
+                    b: s.b,
+                    coef: s.coef,
+                    rate: s.rate,
+                })
+                .collect();
+            PiecewisePdf {
+                segments,
+                point_mass: Some((0.0, p0)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's fitted ResNet-50 layer-21 model (κ=0.5, slope 0.1).
+    pub fn paper_resnet() -> PiecewisePdf {
+        let d = AsymmetricLaplace::new(0.7716595, -1.4350621, 0.5);
+        pushforward(&d, Activation::LeakyRelu { slope: 0.1 })
+    }
+
+    /// The paper's fitted YOLOv3 layer-12 model.
+    pub fn paper_yolo() -> PiecewisePdf {
+        // λ, μ recovered from Eq. (12): coefficient 9.560 = 4λ·10·0.1 form;
+        // see modeling::fit tests for the solve from sample moments.
+        let d = AsymmetricLaplace::new(2.390, -0.30875, 0.5);
+        pushforward(&d, Activation::LeakyRelu { slope: 0.1 })
+    }
+
+    #[test]
+    fn resnet_pushforward_matches_paper_eq8() {
+        // Eq. (8):
+        //   3.087 e^{4(3.858y + 0.554)}   y < -0.144
+        //   3.087 e^{-(3.858y + 0.554)}   -0.144 ≤ y < 0
+        //   0.3087 e^{-(0.3858y + 0.554)} y ≥ 0
+        let pdf = paper_resnet();
+        assert_eq!(pdf.segments.len(), 3);
+        let eq8 = |y: f64| -> f64 {
+            if y < -0.1435 {
+                3.0866 * (4.0 * (3.8583 * y + 0.5537)).exp()
+            } else if y < 0.0 {
+                3.0866 * (-(3.8583 * y + 0.5537)).exp()
+            } else {
+                0.30866 * (-(0.38583 * y + 0.5537)).exp()
+            }
+        };
+        for &y in &[-0.5, -0.2, -0.1, -0.01, 0.0, 0.5, 2.0, 8.0] {
+            let (got, want) = (pdf.pdf(y), eq8(y));
+            assert!(
+                (got - want).abs() < 1e-3 * want.max(1e-6),
+                "y={y}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn yolo_pushforward_matches_paper_eq12() {
+        // Eq. (12): 9.560 e^{4(11.950y+0.369)} / 9.560 e^{-(11.950y+0.369)}
+        //           / 0.956 e^{-(1.195y+0.369)}
+        let pdf = paper_yolo();
+        let eq12 = |y: f64| -> f64 {
+            if y < -0.0309 {
+                9.560 * (4.0 * (11.950 * y + 0.369)).exp()
+            } else if y < 0.0 {
+                9.560 * (-(11.950 * y + 0.369)).exp()
+            } else {
+                0.9560 * (-(1.1950 * y + 0.369)).exp()
+            }
+        };
+        for &y in &[-0.2, -0.05, -0.01, 0.0, 0.3, 1.0, 3.0] {
+            let (got, want) = (pdf.pdf(y), eq12(y));
+            assert!(
+                (got - want).abs() < 2e-3 * want.max(1e-6),
+                "y={y}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn resnet_moments_match_paper_sample_stats() {
+        // The paper solved (λ, μ) so that Eqs. (6)-(7) equal the sample
+        // mean 1.1235656 and variance 4.9280124 — our closed forms must
+        // round-trip them.
+        let pdf = paper_resnet();
+        assert!((pdf.mean() - 1.1235656).abs() < 1e-4, "mean {}", pdf.mean());
+        assert!((pdf.variance() - 4.9280124).abs() < 1e-3, "var {}", pdf.variance());
+    }
+
+    #[test]
+    fn paper_eq6_closed_form_agrees() {
+        // Eq. (6): E[Y] = 0.1μ + (1/λ)[3/20 + (6/5)² e^{0.5λμ}] (κ=0.5,
+        // slope 0.1, μ<0).
+        let (l, m) = (0.7716595, -1.4350621);
+        let d = AsymmetricLaplace::new(l, m, 0.5);
+        let pdf = pushforward(&d, Activation::LeakyRelu { slope: 0.1 });
+        let eq6 = 0.1 * m + (1.0 / l) * (3.0 / 20.0 + (6.0f64 / 5.0).powi(2) * (0.5 * l * m).exp());
+        assert!((pdf.mean() - eq6).abs() < 1e-10, "{} vs {eq6}", pdf.mean());
+    }
+
+    #[test]
+    fn paper_eq7_closed_form_agrees() {
+        // Eq. (7): Var = (1/λ²)[(5.904 − 0.288λμ)e^{0.5λμ} − 2.0736e^{λμ}
+        //                + 0.0425] ... the constant 0.0425 is a rounding of
+        // 17/400 = 0.0425 exactly; check to the printed precision.
+        let (l, m) = (0.7716595, -1.4350621);
+        let d = AsymmetricLaplace::new(l, m, 0.5);
+        let pdf = pushforward(&d, Activation::LeakyRelu { slope: 0.1 });
+        let lm = l * m;
+        let eq7 = (1.0 / (l * l))
+            * ((5.904 - 0.288 * lm) * (0.5 * lm).exp() - 2.0736 * lm.exp() + 0.0425);
+        assert!(
+            (pdf.variance() - eq7).abs() < 2e-3,
+            "{} vs {eq7}",
+            pdf.variance()
+        );
+    }
+
+    #[test]
+    fn pushforward_conserves_mass_any_mu_sign() {
+        for &(l, m, k) in &[(0.77, -1.43, 0.5), (1.2, 0.8, 0.5), (2.0, 0.0, 1.0), (0.5, -3.0, 2.0)]
+        {
+            let d = AsymmetricLaplace::new(l, m, k);
+            for act in [Activation::LeakyRelu { slope: 0.1 }, Activation::Relu] {
+                let pdf = pushforward(&d, act);
+                let mass = pdf.total_mass();
+                assert!((mass - 1.0).abs() < 1e-9, "mass {mass} λ={l} μ={m} κ={k} {act:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_point_mass_is_negative_probability() {
+        let d = AsymmetricLaplace::new(1.0, -0.5, 1.0);
+        let pdf = pushforward(&d, Activation::Relu);
+        let (loc, p) = pdf.point_mass.unwrap();
+        assert_eq!(loc, 0.0);
+        assert!((p - d.cdf(0.0)).abs() < 1e-12);
+        assert!(pdf.pdf(-0.3) == 0.0, "no density below zero under ReLU");
+    }
+
+    #[test]
+    fn leaky_mean_greater_than_relu_mean_is_false_negatives_pull_down() {
+        // Sanity: leaky keeps scaled negatives, so its mean is below ReLU's.
+        let d = AsymmetricLaplace::new(0.9, -1.0, 0.5);
+        let leaky = pushforward(&d, Activation::LeakyRelu { slope: 0.1 });
+        let relu = pushforward(&d, Activation::Relu);
+        assert!(leaky.mean() < relu.mean());
+    }
+
+    #[test]
+    fn sq_dev_matches_numeric_quadrature() {
+        let pdf = paper_resnet();
+        let numeric = |c: f64, lo: f64, hi: f64| {
+            let n = 200_000;
+            let h = (hi - lo) / n as f64;
+            let f = |y: f64| pdf.pdf(y) * (y - c) * (y - c);
+            let mut s = 0.5 * (f(lo) + f(hi));
+            for i in 1..n {
+                s += f(lo + i as f64 * h);
+            }
+            s * h
+        };
+        for &(c, lo, hi) in &[(0.0, 0.0, 3.0), (5.0, 5.0, 40.0), (1.5, -1.0, 2.0)] {
+            let got = pdf.sq_dev(c, lo, hi);
+            let want = numeric(c, lo, hi);
+            assert!((got - want).abs() < 1e-4 * want.max(1e-3), "got {got} want {want}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Asymmetric Laplace distribution (paper Eq. (2)) — the model for the
+//! tensor values *input* to the split-layer activation function.
+//!
+//! ```text
+//! f_L(x) = λ/(κ + 1/κ) · { e^{ λ(x-μ)/κ }   if x < μ
+//!                        { e^{ -λκ(x-μ) }   if x ≥ μ
+//! ```
+//!
+//! κ controls asymmetry (κ=1 is the symmetric Laplace; the paper uses
+//! κ=0.5 for ResNet-50), μ is the mode (NOT the mean), λ > 0 the rate.
+
+/// Asymmetric Laplace parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsymmetricLaplace {
+    pub lambda: f64,
+    pub mu: f64,
+    pub kappa: f64,
+}
+
+impl AsymmetricLaplace {
+    pub fn new(lambda: f64, mu: f64, kappa: f64) -> Self {
+        assert!(lambda > 0.0, "lambda must be > 0 (got {lambda})");
+        assert!(kappa > 0.0, "kappa must be > 0 (got {kappa})");
+        Self { lambda, mu, kappa }
+    }
+
+    /// Normalizing coefficient λ/(κ + 1/κ) (0.4λ for κ=0.5, Eq. (3)).
+    pub fn coef(&self) -> f64 {
+        self.lambda / (self.kappa + 1.0 / self.kappa)
+    }
+
+    /// Eq. (2).
+    pub fn pdf(&self, x: f64) -> f64 {
+        let c = self.coef();
+        if x < self.mu {
+            c * ((self.lambda / self.kappa) * (x - self.mu)).exp()
+        } else {
+            c * (-(self.lambda * self.kappa) * (x - self.mu)).exp()
+        }
+    }
+
+    /// CDF (closed form from integrating Eq. (2)).
+    pub fn cdf(&self, x: f64) -> f64 {
+        let k2 = self.kappa * self.kappa;
+        if x < self.mu {
+            (k2 / (1.0 + k2)) * ((self.lambda / self.kappa) * (x - self.mu)).exp()
+        } else {
+            1.0 - (1.0 / (1.0 + k2)) * (-(self.lambda * self.kappa) * (x - self.mu)).exp()
+        }
+    }
+
+    /// Mean = μ + (1/κ - κ)/λ.
+    pub fn mean(&self) -> f64 {
+        self.mu + (1.0 / self.kappa - self.kappa) / self.lambda
+    }
+
+    /// Variance = (1/κ² + κ²)/λ².
+    pub fn variance(&self) -> f64 {
+        (1.0 / (self.kappa * self.kappa) + self.kappa * self.kappa)
+            / (self.lambda * self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn integrate(f: impl Fn(f64) -> f64, a: f64, b: f64, n: usize) -> f64 {
+        let h = (b - a) / n as f64;
+        let mut s = 0.5 * (f(a) + f(b));
+        for i in 1..n {
+            s += f(a + i as f64 * h);
+        }
+        s * h
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        for &(l, m, k) in &[(0.77, -1.43, 0.5), (1.0, 0.0, 1.0), (2.4, -0.3, 0.5), (0.5, 2.0, 1.7)] {
+            let d = AsymmetricLaplace::new(l, m, k);
+            let mass = integrate(|x| d.pdf(x), m - 60.0 / l, m + 60.0 / l, 400_000);
+            assert!((mass - 1.0).abs() < 1e-6, "mass {mass} for λ={l} μ={m} κ={k}");
+        }
+    }
+
+    #[test]
+    fn cdf_matches_numeric_integral() {
+        let d = AsymmetricLaplace::new(0.77, -1.43, 0.5);
+        for &x in &[-5.0, -1.43, -0.5, 0.0, 1.0, 4.0] {
+            let numeric = integrate(|t| d.pdf(t), -80.0, x, 400_000);
+            assert!((d.cdf(x) - numeric).abs() < 1e-5, "x={x}: {} vs {numeric}", d.cdf(x));
+        }
+    }
+
+    #[test]
+    fn moments_match_numeric() {
+        let d = AsymmetricLaplace::new(0.9, -1.2, 0.5);
+        let m1 = integrate(|x| x * d.pdf(x), -80.0, 120.0, 800_000);
+        let m2 = integrate(|x| x * x * d.pdf(x), -80.0, 120.0, 800_000);
+        assert!((d.mean() - m1).abs() < 1e-4, "mean {} vs {m1}", d.mean());
+        assert!(
+            (d.variance() - (m2 - m1 * m1)).abs() < 1e-3,
+            "var {} vs {}",
+            d.variance(),
+            m2 - m1 * m1
+        );
+    }
+
+    #[test]
+    fn kappa_one_is_symmetric() {
+        let d = AsymmetricLaplace::new(1.5, 0.7, 1.0);
+        assert_eq!(d.mean(), 0.7);
+        for &dx in &[0.3, 1.0, 2.5] {
+            assert!((d.pdf(0.7 + dx) - d.pdf(0.7 - dx)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn paper_resnet_coefficient() {
+        // Eq. (3): κ=0.5 gives coefficient 0.4λ.
+        let d = AsymmetricLaplace::new(0.7716595, -1.4350621, 0.5);
+        assert!((d.coef() - 0.4 * 0.7716595).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,157 @@
+//! Fit the asymmetric-Laplace input model from the *observed* split-layer
+//! statistics (paper §III-B): set the closed-form mean (Eq. (6)) and
+//! variance (Eq. (7)) of the activation-pushforward equal to the sample
+//! mean and variance, and solve for (λ, μ) numerically.
+//!
+//! This is the step the paper performs once per network/layer; the edge
+//! device only needs running mean/variance of its own output (§III-E:
+//! converges within a few hundred images).
+
+use super::activation::{pushforward, Activation, PiecewisePdf};
+use super::alaplace::AsymmetricLaplace;
+use crate::util::math::newton2;
+
+/// A fitted split-layer model.
+#[derive(Clone, Debug)]
+pub struct FittedModel {
+    pub input: AsymmetricLaplace,
+    pub activation: Activation,
+    pub pdf: PiecewisePdf,
+    /// Residual |mean error| + |var error| at the solution.
+    pub residual: f64,
+}
+
+/// Solve (λ, μ) such that the pushforward's mean/variance equal
+/// `sample_mean` / `sample_var`, for fixed κ and activation.
+///
+/// Solved in log-λ space (λ must stay positive) by damped Newton from a
+/// moment-matched initial guess; multiple restarts guard against the
+/// shallow basin at very small μ.
+pub fn fit(
+    sample_mean: f64,
+    sample_var: f64,
+    kappa: f64,
+    activation: Activation,
+) -> Result<FittedModel, String> {
+    assert!(sample_var > 0.0, "variance must be positive");
+    let g = |p: [f64; 2]| -> [f64; 2] {
+        let lambda = p[0].exp();
+        let mu = p[1];
+        let d = AsymmetricLaplace::new(lambda, mu, kappa);
+        let pdf = pushforward(&d, activation);
+        [pdf.mean() - sample_mean, pdf.variance() - sample_var]
+    };
+
+    // Initial guesses: the positive tail dominates both moments, so
+    // λ·κ ≈ 1/std is a good starting rate; μ starts slightly negative
+    // (the paper's fits all have μ < 0) with restarts on both sides.
+    let std = sample_var.sqrt();
+    let lam0 = (1.0 / (kappa * std)).max(1e-3);
+    let starts = [
+        [lam0.ln(), -0.5 * std],
+        [lam0.ln(), -0.1 * std],
+        [(lam0 * 2.0).ln(), -std],
+        [(lam0 * 0.5).ln(), -0.05 * std],
+        [lam0.ln(), 0.1 * std],
+    ];
+    let mut best: Option<([f64; 2], f64)> = None;
+    for start in starts {
+        if let Some(sol) = newton2(g, start, 1e-12, 200) {
+            let r = g(sol);
+            let res = r[0].abs() + r[1].abs();
+            if best.as_ref().map_or(true, |(_, b)| res < *b) {
+                best = Some((sol, res));
+            }
+            if res < 1e-9 {
+                break;
+            }
+        }
+    }
+    let (sol, residual) = best.ok_or_else(|| {
+        format!("fit failed for mean={sample_mean} var={sample_var} κ={kappa} {activation:?}")
+    })?;
+    let input = AsymmetricLaplace::new(sol[0].exp(), sol[1], kappa);
+    let pdf = pushforward(&input, activation);
+    Ok(FittedModel {
+        input,
+        activation,
+        pdf,
+        residual,
+    })
+}
+
+/// The paper's default model family for leaky-ReLU networks (κ = 0.5,
+/// slope 0.1 — ResNet-50 / YOLOv3).
+pub fn fit_leaky(sample_mean: f64, sample_var: f64) -> Result<FittedModel, String> {
+    fit(sample_mean, sample_var, 0.5, Activation::LeakyRelu { slope: 0.1 })
+}
+
+/// The paper's model for plain-ReLU networks (AlexNet): symmetric Laplace
+/// input (κ = 1) rectified at zero.
+pub fn fit_relu(sample_mean: f64, sample_var: f64) -> Result<FittedModel, String> {
+    fit(sample_mean, sample_var, 1.0, Activation::Relu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_paper_resnet_parameters() {
+        // §III-B: sample mean 1.1235656, variance 4.9280124 over the
+        // ImageNet validation set => λ = 0.7716595, μ = -1.4350621.
+        let m = fit_leaky(1.1235656, 4.9280124).unwrap();
+        assert!(
+            (m.input.lambda - 0.7716595).abs() < 1e-5,
+            "λ = {}",
+            m.input.lambda
+        );
+        assert!((m.input.mu - -1.4350621).abs() < 1e-5, "μ = {}", m.input.mu);
+        assert!(m.residual < 1e-8);
+    }
+
+    #[test]
+    fn recovers_paper_yolo_parameters() {
+        // §III-B: sample mean 0.4484323, variance 0.5742644 => Eq. (12),
+        // whose coefficients imply λ ≈ 2.390, μ ≈ -0.3088.
+        let m = fit_leaky(0.4484323, 0.5742644).unwrap();
+        assert!((m.input.lambda - 2.390).abs() < 2e-3, "λ = {}", m.input.lambda);
+        assert!((m.input.mu - -0.3088).abs() < 2e-3, "μ = {}", m.input.mu);
+    }
+
+    #[test]
+    fn fit_roundtrips_synthetic_parameters() {
+        // Generate moments from known (λ, μ), re-fit, compare.
+        for &(l, mu) in &[(0.5, -2.0), (1.5, -0.3), (3.0, -0.8), (0.9, -0.05)] {
+            let d = AsymmetricLaplace::new(l, mu, 0.5);
+            let pdf = pushforward(&d, Activation::LeakyRelu { slope: 0.1 });
+            let m = fit_leaky(pdf.mean(), pdf.variance()).unwrap();
+            assert!(
+                (m.input.lambda - l).abs() < 1e-6 * l.max(1.0),
+                "λ {} vs {l}",
+                m.input.lambda
+            );
+            assert!((m.input.mu - mu).abs() < 1e-6, "μ {} vs {mu}", m.input.mu);
+        }
+    }
+
+    #[test]
+    fn relu_fit_roundtrips() {
+        for &(l, mu) in &[(1.0, -0.5), (0.7, -1.2), (2.5, 0.3)] {
+            let d = AsymmetricLaplace::new(l, mu, 1.0);
+            let pdf = pushforward(&d, Activation::Relu);
+            let m = fit_relu(pdf.mean(), pdf.variance()).unwrap();
+            let refit = &m.pdf;
+            assert!((refit.mean() - pdf.mean()).abs() < 1e-8);
+            assert!((refit.variance() - pdf.variance()).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn fitted_pdf_is_normalized() {
+        let m = fit_leaky(0.09, 0.095).unwrap(); // our ci_resnet-scale stats
+        assert!((m.pdf.total_mass() - 1.0).abs() < 1e-9);
+        assert!((m.pdf.mean() - 0.09).abs() < 1e-9);
+        assert!((m.pdf.variance() - 0.095).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's analytic contribution (§III-B): asymmetric-Laplace model of
+//! split-layer activations, closed-form clipping/quantization error, and
+//! optimal clipping ranges — plus the ACIQ baseline it is compared against.
+
+pub mod aciq;
+pub mod activation;
+pub mod alaplace;
+pub mod error;
+pub mod fit;
+pub mod optimize;
+
+pub use aciq::{aciq_cmax, estimate_b};
+pub use activation::{pushforward, Activation, ExpSegment, PiecewisePdf};
+pub use alaplace::AsymmetricLaplace;
+pub use error::{clip_error, measured_msre, quant_error, total_error};
+pub use fit::{fit, fit_leaky, fit_relu, FittedModel};
+pub use optimize::{optimal_cmax, optimal_range, ClipRange};

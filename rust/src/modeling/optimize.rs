@@ -1,0 +1,224 @@
+//! Optimal clipping ranges by minimizing the closed-form e_tot
+//! (paper §III-B: "we can numerically solve for the optimal clipping
+//! range [c_min, c_max] by minimizing e_tot, or for the case when we
+//! want c_min to be zero, we can solve for c_max").
+
+use super::activation::PiecewisePdf;
+use super::error::total_error;
+use crate::util::math::grid_then_golden;
+
+/// Result of a clipping-range optimization.
+#[derive(Clone, Copy, Debug)]
+pub struct ClipRange {
+    pub c_min: f64,
+    pub c_max: f64,
+    pub e_tot: f64,
+}
+
+/// Search bounds for c_max derived from the model's scale. The positive
+/// tail has rate λκ (slowest-decaying segment); 30/rate covers ~e^-30 of
+/// the mass.
+fn cmax_upper_bound(pdf: &PiecewisePdf) -> f64 {
+    let slowest = pdf
+        .segments
+        .iter()
+        .filter(|s| s.rate < 0.0)
+        .map(|s| -s.rate)
+        .fold(f64::INFINITY, f64::min);
+    if slowest.is_finite() {
+        30.0 / slowest
+    } else {
+        100.0
+    }
+}
+
+/// Minimize e_tot over c_max with c_min fixed (the paper's Table I
+/// "c_min set to 0" columns, with c_min = 0).
+pub fn optimal_cmax(pdf: &PiecewisePdf, c_min: f64, levels: usize) -> ClipRange {
+    let hi = cmax_upper_bound(pdf).max(c_min + 1.0);
+    let lo = c_min + 1e-3;
+    let (c_max, e_tot) = grid_then_golden(
+        |c| total_error(pdf, c_min, c, levels),
+        lo,
+        hi,
+        256,
+        1e-7,
+    );
+    ClipRange { c_min, c_max, e_tot }
+}
+
+/// Minimize e_tot over both ends (the paper's "c_min unconstrained"
+/// columns) by coordinate descent, alternating 1-D golden-section
+/// minimizations; converges in a handful of rounds on these smooth
+/// objectives.
+pub fn optimal_range(pdf: &PiecewisePdf, levels: usize) -> ClipRange {
+    // c_min can only usefully go as low as the most negative support of
+    // the model (leaky tail); bound it by the symmetric heuristic.
+    let hi = cmax_upper_bound(pdf);
+    let cmin_lo = -0.2 * hi;
+    let mut c_min = 0.0;
+    let mut c_max = optimal_cmax(pdf, 0.0, levels).c_max;
+    let mut e_prev = f64::INFINITY;
+    for _ in 0..16 {
+        let (new_min, _) = grid_then_golden(
+            |a| total_error(pdf, a, c_max, levels),
+            cmin_lo,
+            c_max - 1e-3,
+            128,
+            1e-7,
+        );
+        c_min = new_min;
+        let (new_max, e) = grid_then_golden(
+            |b| total_error(pdf, c_min, b, levels),
+            c_min + 1e-3,
+            hi,
+            128,
+            1e-7,
+        );
+        c_max = new_max;
+        if (e_prev - e).abs() < 1e-10 * e.abs().max(1e-12) {
+            e_prev = e;
+            break;
+        }
+        e_prev = e;
+    }
+    ClipRange {
+        c_min,
+        c_max,
+        e_tot: e_prev,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modeling::activation::{pushforward, Activation};
+    use crate::modeling::alaplace::AsymmetricLaplace;
+    use crate::modeling::error::total_error;
+
+    fn paper_resnet() -> PiecewisePdf {
+        let d = AsymmetricLaplace::new(0.7716595, -1.4350621, 0.5);
+        pushforward(&d, Activation::LeakyRelu { slope: 0.1 })
+    }
+
+    fn paper_yolo() -> PiecewisePdf {
+        let d = AsymmetricLaplace::new(2.390, -0.30875, 0.5);
+        pushforward(&d, Activation::LeakyRelu { slope: 0.1 })
+    }
+
+    #[test]
+    fn table1_resnet_cmin0_model_column() {
+        // Paper Table I, ResNet-50, "c_min set to 0", model c_max:
+        // N=2: 5.184, N=3: 7.511, N=4: 9.036, N=5: 10.175, N=6: 11.084,
+        // N=7: 11.842, N=8: 12.492.
+        let pdf = paper_resnet();
+        let expect = [
+            (2, 5.184),
+            (3, 7.511),
+            (4, 9.036),
+            (5, 10.175),
+            (6, 11.084),
+            (7, 11.842),
+            (8, 12.492),
+        ];
+        for &(n, want) in &expect {
+            let got = optimal_cmax(&pdf, 0.0, n).c_max;
+            assert!(
+                (got - want).abs() < 0.01,
+                "N={n}: got {got:.3} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_yolo_cmin0_model_column() {
+        // Paper Table I, YOLOv3 model c_max: N=2: 1.674, N=4: 2.918,
+        // N=8: 4.033. (λ, μ back-derived from Eq. (12) to ~3 digits, so
+        // allow 0.02.)
+        let pdf = paper_yolo();
+        for &(n, want) in &[(2usize, 1.674f64), (4, 2.918), (8, 4.033)] {
+            let got = optimal_cmax(&pdf, 0.0, n).c_max;
+            assert!((got - want).abs() < 0.02, "N={n}: got {got:.3} want {want}");
+        }
+    }
+
+    #[test]
+    fn table1_resnet_unconstrained_column() {
+        // Paper Table I, ResNet-50 "c_min unconstrained": N=2 →
+        // (0.361, 5.544); N=4 → (0.053, 9.089); N=8 → (-0.065, 12.427).
+        let pdf = paper_resnet();
+        for &(n, want_min, want_max) in &[
+            (2usize, 0.361f64, 5.544f64),
+            (4, 0.053, 9.089),
+            (8, -0.065, 12.427),
+        ] {
+            let r = optimal_range(&pdf, n);
+            assert!(
+                (r.c_min - want_min).abs() < 0.02,
+                "N={n}: c_min {:.3} want {want_min}",
+                r.c_min
+            );
+            assert!(
+                (r.c_max - want_max).abs() < 0.03,
+                "N={n}: c_max {:.3} want {want_max}",
+                r.c_max
+            );
+        }
+    }
+
+    #[test]
+    fn optimal_cmax_grows_with_levels() {
+        // §III-A: "as the number of quantization levels is decreased, the
+        // optimal c_max decreases".
+        let pdf = paper_resnet();
+        let mut prev = 0.0;
+        for n in 2..=8 {
+            let c = optimal_cmax(&pdf, 0.0, n).c_max;
+            assert!(c > prev, "c_max not increasing at N={n}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn unconstrained_never_worse_than_constrained() {
+        let pdf = paper_resnet();
+        for n in [2usize, 3, 5, 8] {
+            let con = optimal_cmax(&pdf, 0.0, n);
+            let unc = optimal_range(&pdf, n);
+            assert!(
+                unc.e_tot <= con.e_tot + 1e-9,
+                "N={n}: unconstrained {Eu} > constrained {Ec}",
+                Eu = unc.e_tot,
+                Ec = con.e_tot
+            );
+        }
+    }
+
+    #[test]
+    fn interval_width_roughly_preserved_under_constraint() {
+        // Paper §IV-A: "[c_min, c_max] is shifted to [0, c_max - c_min]" —
+        // the constrained interval width is close to the unconstrained one.
+        let pdf = paper_resnet();
+        for n in [4usize, 6, 8] {
+            let con = optimal_cmax(&pdf, 0.0, n);
+            let unc = optimal_range(&pdf, n);
+            let w_con = con.c_max - con.c_min;
+            let w_unc = unc.c_max - unc.c_min;
+            assert!(
+                (w_con - w_unc).abs() < 0.12 * w_unc,
+                "N={n}: widths {w_con:.3} vs {w_unc:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn returned_minimum_is_local_min() {
+        let pdf = paper_yolo();
+        for n in [2usize, 4, 8] {
+            let r = optimal_cmax(&pdf, 0.0, n);
+            let e = |c: f64| total_error(&pdf, 0.0, c, n);
+            assert!(e(r.c_max) <= e(r.c_max * 1.02) + 1e-12);
+            assert!(e(r.c_max) <= e(r.c_max * 0.98) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: typed view of `artifacts/manifest.json` written by
+//! `python/compile/aot.py` (shapes, file names, split-layer statistics,
+//! training metadata).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Split-layer sample statistics measured at build time over the
+/// validation stream (the inputs to the paper's model fit).
+#[derive(Clone, Copy, Debug)]
+pub struct SplitStats {
+    pub mean: f64,
+    pub var: f64,
+    pub min: f64,
+    pub max: f64,
+    pub count: u64,
+}
+
+/// One network half pair (edge + cloud artifacts and the feature shape
+/// between them).
+#[derive(Clone, Debug)]
+pub struct SplitArtifacts {
+    pub edge: PathBuf,
+    pub cloud: PathBuf,
+    /// Batched feature shape [B, H, W, C].
+    pub feature: Vec<usize>,
+    pub stats: SplitStats,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub serve_batch: usize,
+    pub val_seed: u64,
+    /// ci_resnet split taps keyed by split id (1, 2, 3).
+    pub resnet_splits: Vec<(usize, SplitArtifacts)>,
+    pub resnet_top1: f64,
+    pub resnet_edge_b1: PathBuf,
+    pub resnet_cloud_b1: PathBuf,
+    pub resnet_edge_fq: PathBuf,
+    pub resnet_moments: PathBuf,
+    pub alex: SplitArtifacts,
+    pub alex_top1: f64,
+    pub detect: SplitArtifacts,
+    pub detect_grid: usize,
+}
+
+fn stats_of(j: &Json) -> Result<SplitStats> {
+    let f = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing stat {k}"))
+    };
+    Ok(SplitStats {
+        mean: f("mean")?,
+        var: f("var")?,
+        min: f("min")?,
+        max: f("max")?,
+        count: f("count")? as u64,
+    })
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("feature shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    /// Standard location used by the Makefile (`artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let path = |name: &Json| -> Result<PathBuf> {
+            Ok(dir.join(
+                name.as_str()
+                    .ok_or_else(|| anyhow!("artifact name not a string"))?,
+            ))
+        };
+
+        let resnet = j
+            .at(&["nets", "resnet"])
+            .ok_or_else(|| anyhow!("manifest missing resnet"))?;
+        let mut resnet_splits = Vec::new();
+        for (k, split) in resnet
+            .get("splits")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing resnet splits"))?
+        {
+            resnet_splits.push((
+                k.parse::<usize>().context("split key")?,
+                SplitArtifacts {
+                    edge: path(split.get("edge").ok_or_else(|| anyhow!("edge"))?)?,
+                    cloud: path(split.get("cloud").ok_or_else(|| anyhow!("cloud"))?)?,
+                    feature: shape_of(split.get("feature").ok_or_else(|| anyhow!("feature"))?)?,
+                    stats: stats_of(split.get("stats").ok_or_else(|| anyhow!("stats"))?)?,
+                },
+            ));
+        }
+        resnet_splits.sort_by_key(|(k, _)| *k);
+
+        let alex = j
+            .at(&["nets", "alex"])
+            .ok_or_else(|| anyhow!("manifest missing alex"))?;
+        let detect = j
+            .at(&["nets", "detect"])
+            .ok_or_else(|| anyhow!("manifest missing detect"))?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            serve_batch: j
+                .get("serve_batch")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("serve_batch"))?,
+            val_seed: j
+                .get("val_seed")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("val_seed"))? as u64,
+            resnet_top1: resnet
+                .get("top1_val512")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+            resnet_edge_b1: path(resnet.get("edge_b1").ok_or_else(|| anyhow!("edge_b1"))?)?,
+            resnet_cloud_b1: path(resnet.get("cloud_b1").ok_or_else(|| anyhow!("cloud_b1"))?)?,
+            resnet_edge_fq: path(resnet.get("edge_fq").ok_or_else(|| anyhow!("edge_fq"))?)?,
+            resnet_moments: path(resnet.get("moments").ok_or_else(|| anyhow!("moments"))?)?,
+            resnet_splits,
+            alex: SplitArtifacts {
+                edge: path(alex.get("edge").ok_or_else(|| anyhow!("alex edge"))?)?,
+                cloud: path(alex.get("cloud").ok_or_else(|| anyhow!("alex cloud"))?)?,
+                feature: shape_of(alex.get("feature").ok_or_else(|| anyhow!("alex feature"))?)?,
+                stats: stats_of(alex.get("stats").ok_or_else(|| anyhow!("alex stats"))?)?,
+            },
+            alex_top1: alex
+                .get("top1_val512")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+            detect: SplitArtifacts {
+                edge: path(detect.get("edge").ok_or_else(|| anyhow!("detect edge"))?)?,
+                cloud: path(detect.get("cloud").ok_or_else(|| anyhow!("detect cloud"))?)?,
+                feature: shape_of(detect.get("feature").ok_or_else(|| anyhow!("detect feature"))?)?,
+                stats: stats_of(detect.get("stats").ok_or_else(|| anyhow!("detect stats"))?)?,
+            },
+            detect_grid: detect.get("grid").and_then(Json::as_usize).unwrap_or(8),
+        })
+    }
+
+    /// Resnet split artifacts by split id.
+    pub fn resnet_split(&self, split: usize) -> Result<&SplitArtifacts> {
+        self.resnet_splits
+            .iter()
+            .find(|(k, _)| *k == split)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("no resnet split {split} in manifest"))
+    }
+
+    /// Feature elements per item (feature shape without the batch dim).
+    pub fn elements_per_item(feature: &[usize]) -> usize {
+        feature[1..].iter().product()
+    }
+}

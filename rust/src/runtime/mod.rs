@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT CPU client executing the AOT HLO-text artifacts
+//! produced by `python/compile/aot.py` (L1 Pallas kernels + L2 JAX models
+//! baked into self-contained executables). Python never runs here.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Manifest, SplitArtifacts, SplitStats};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,160 @@
+//! Dense f32 tensors (NHWC) plus the statistics and channel-mosaicking
+//! helpers the codec and experiments need.
+
+pub mod mosaic;
+pub mod stats;
+
+/// Dense f32 tensor with an NHWC-style shape. The codec treats tensors as
+//  flat element streams; shape matters for the runtime and the mosaicker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: (0..n).map(&mut f).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Split the leading (batch) dimension into per-item tensors.
+    pub fn unbatch(&self) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty());
+        let b = self.shape[0];
+        let item_shape: Vec<usize> = self.shape[1..].to_vec();
+        let stride: usize = item_shape.iter().product();
+        (0..b)
+            .map(|i| Tensor::new(&item_shape, self.data[i * stride..(i + 1) * stride].to_vec()))
+            .collect()
+    }
+
+    /// Concatenate per-item tensors into a batched tensor.
+    pub fn batch(items: &[Tensor]) -> Tensor {
+        assert!(!items.is_empty());
+        let item_shape = items[0].shape().to_vec();
+        for t in items {
+            assert_eq!(t.shape(), &item_shape[..], "ragged batch");
+        }
+        let mut shape = vec![items.len()];
+        shape.extend_from_slice(&item_shape);
+        let mut data = Vec::with_capacity(items.len() * items[0].len());
+        for t in items {
+            data.extend_from_slice(t.data());
+        }
+        Tensor::new(&shape, data)
+    }
+
+    /// Mean-square error against another tensor of identical shape.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_unbatch_roundtrip() {
+        let a = Tensor::from_fn(&[2, 3], |i| i as f32);
+        let b = Tensor::from_fn(&[2, 3], |i| (i * 10) as f32);
+        let batched = Tensor::batch(&[a.clone(), b.clone()]);
+        assert_eq!(batched.shape(), &[2, 2, 3]);
+        let items = batched.unbatch();
+        assert_eq!(items[0], a);
+        assert_eq!(items[1], b);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let t = Tensor::from_fn(&[4, 4], |i| (i as f32).sin());
+        assert_eq!(t.mse(&t), 0.0);
+    }
+
+    #[test]
+    fn argmax_finds_peak() {
+        let t = Tensor::new(&[5], vec![0.1, 3.0, -1.0, 2.9, 0.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Channel mosaicking: tile the channels of an HxWxC feature tensor into a
+//! single monochrome picture, the representation the paper feeds to
+//! HEVC-SCC (§IV-B: "quantized to 8 bits and mosaicked into an 832x832
+//! picture ... coded as all-Intra monochrome (4:0:0) 8-bit pictures").
+//!
+//! The picture-codec baseline (`baseline::hevc_like`) consumes this.
+
+use super::Tensor;
+
+/// 8-bit monochrome picture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Picture {
+    pub width: usize,
+    pub height: usize,
+    pub pixels: Vec<u8>, // row-major
+}
+
+impl Picture {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self {
+            width,
+            height,
+            pixels: vec![0; width * height],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> u8 {
+        self.pixels[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.pixels[y * self.width + x] = v;
+    }
+}
+
+/// Layout of a mosaic: `cols x rows` tiles of `h x w` channels each.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MosaicLayout {
+    pub ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl MosaicLayout {
+    /// Near-square tiling for `ch` channels of h x w.
+    pub fn for_feature(h: usize, w: usize, ch: usize) -> Self {
+        let mut cols = (ch as f64).sqrt().ceil() as usize;
+        cols = cols.max(1);
+        let rows = ch.div_ceil(cols);
+        Self { ch, h, w, cols, rows }
+    }
+
+    pub fn picture_size(&self) -> (usize, usize) {
+        (self.cols * self.w, self.rows * self.h)
+    }
+}
+
+/// Affine 8-bit quantization range for mosaicking (the paper pre-quantizes
+/// to 8 bits before handing pictures to HEVC; "given the fineness of the
+/// quantizer, clipping was not necessary" — we use the observed min/max).
+#[derive(Clone, Copy, Debug)]
+pub struct PixelRange {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl PixelRange {
+    pub fn of(t: &Tensor) -> Self {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in t.data() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+            return Self { lo: 0.0, hi: 1.0 };
+        }
+        Self { lo, hi }
+    }
+
+    #[inline]
+    pub fn to_u8(&self, v: f32) -> u8 {
+        let t = (v - self.lo) / (self.hi - self.lo);
+        (t.clamp(0.0, 1.0) * 255.0).round() as u8
+    }
+
+    #[inline]
+    pub fn from_u8(&self, p: u8) -> f32 {
+        self.lo + (p as f32 / 255.0) * (self.hi - self.lo)
+    }
+}
+
+/// Mosaic an HxWxC (HWC order) tensor into an 8-bit picture.
+pub fn mosaic(t: &Tensor, range: PixelRange) -> (Picture, MosaicLayout) {
+    let (h, w, ch) = match *t.shape() {
+        [h, w, c] => (h, w, c),
+        _ => panic!("mosaic expects an HxWxC tensor, got {:?}", t.shape()),
+    };
+    let layout = MosaicLayout::for_feature(h, w, ch);
+    let (pw, ph) = layout.picture_size();
+    let mut pic = Picture::new(pw, ph);
+    let data = t.data();
+    for c in 0..ch {
+        let (tx, ty) = (c % layout.cols, c / layout.cols);
+        for y in 0..h {
+            for x in 0..w {
+                let v = data[(y * w + x) * ch + c];
+                pic.set(tx * w + x, ty * h + y, range.to_u8(v));
+            }
+        }
+    }
+    (pic, layout)
+}
+
+/// Invert [`mosaic`]: reconstruct the float tensor from a decoded picture.
+pub fn demosaic(pic: &Picture, layout: &MosaicLayout, range: PixelRange) -> Tensor {
+    let MosaicLayout { ch, h, w, cols, .. } = *layout;
+    let mut data = vec![0.0f32; h * w * ch];
+    for c in 0..ch {
+        let (tx, ty) = (c % cols, c / cols);
+        for y in 0..h {
+            for x in 0..w {
+                data[(y * w + x) * ch + c] = range.from_u8(pic.at(tx * w + x, ty * h + y));
+            }
+        }
+    }
+    Tensor::new(&[h, w, ch], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_covers_all_channels() {
+        for ch in [1, 3, 32, 256, 512] {
+            let l = MosaicLayout::for_feature(16, 16, ch);
+            assert!(l.cols * l.rows >= ch, "ch={ch} layout={l:?}");
+        }
+    }
+
+    #[test]
+    fn mosaic_roundtrip_within_8bit_error() {
+        let t = Tensor::from_fn(&[16, 16, 32], |i| ((i as f32) * 0.37).sin() * 3.0 + 1.0);
+        let range = PixelRange::of(&t);
+        let (pic, layout) = mosaic(&t, range);
+        let back = demosaic(&pic, &layout, range);
+        assert_eq!(back.shape(), t.shape());
+        let max_step = (range.hi - range.lo) / 255.0;
+        for (a, b) in t.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= max_step * 0.5 + 1e-6, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn mosaic_positions_channels_independently() {
+        // Channel c constant = c; every tile must be flat with value c.
+        let ch = 8;
+        let t = Tensor::from_fn(&[4, 4, ch], |i| (i % ch) as f32);
+        let range = PixelRange { lo: 0.0, hi: (ch - 1) as f32 };
+        let (pic, layout) = mosaic(&t, range);
+        for c in 0..ch {
+            let (tx, ty) = (c % layout.cols, c / layout.cols);
+            let expect = range.to_u8(c as f32);
+            for y in 0..4 {
+                for x in 0..4 {
+                    assert_eq!(pic.at(tx * 4 + x, ty * 4 + y), expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_range_is_safe() {
+        let t = Tensor::zeros(&[2, 2, 1]);
+        let r = PixelRange::of(&t);
+        assert!(r.hi > r.lo);
+    }
+}

@@ -1,0 +1,192 @@
+//! Tensor statistics: moments (paper §III-B inputs), histograms (Fig. 3),
+//! and quantiles used to bound the clipping-range sweeps.
+
+use super::Tensor;
+use crate::util::math::Welford;
+
+/// Summary statistics of a feature-tensor stream.
+#[derive(Clone, Debug, Default)]
+pub struct TensorStats {
+    pub w: Welford,
+}
+
+impl TensorStats {
+    pub fn new() -> Self {
+        Self { w: Welford::new() }
+    }
+
+    pub fn push_tensor(&mut self, t: &Tensor) {
+        for &v in t.data() {
+            self.w.push(v as f64);
+        }
+    }
+
+    pub fn push_slice(&mut self, xs: &[f32]) {
+        for &v in xs {
+            self.w.push(v as f64);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        self.w.variance()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.w.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.w.max
+    }
+
+    pub fn count(&self) -> u64 {
+        self.w.count
+    }
+
+    pub fn merge(&mut self, other: &TensorStats) {
+        self.w.merge(&other.w);
+    }
+}
+
+/// Fixed-range histogram (the paper's Fig. 3 visualisation and a quantile
+/// estimator for sweep bounds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub below: u64,
+    pub above: u64,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            below: 0,
+            above: 0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            self.above += 1;
+        } else {
+            let bins = self.counts.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            let idx = idx.min(bins - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn push_slice(&mut self, xs: &[f32]) {
+        for &v in xs {
+            self.push(v as f64);
+        }
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.counts.len() as f64
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * self.bin_width()
+    }
+
+    /// Empirical density at bin i (count / (total * width)) — comparable to
+    /// a PDF, which is how Fig. 3(b) overlays the analytic model.
+    pub fn density(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts[i] as f64 / (self.total as f64 * self.bin_width())
+    }
+
+    /// Approximate quantile (inclusive of out-of-range mass).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return self.lo;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = self.below;
+        if acc >= target {
+            return self.lo;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.lo + (i as f64 + 1.0) * self.bin_width();
+            }
+        }
+        self.hi
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.lo, other.lo);
+        assert_eq!(self.hi, other.hi);
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.below += other.below;
+        self.above += other.above;
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn stats_match_naive() {
+        let t = Tensor::from_fn(&[100], |i| (i as f32 * 0.1).sin() * 2.0 + 0.5);
+        let mut s = TensorStats::new();
+        s.push_tensor(&t);
+        let xs: Vec<f64> = t.data().iter().map(|&v| v as f64).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((s.mean() - mean).abs() < 1e-10);
+        assert!((s.variance() - var).abs() < 1e-10);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_coverage() {
+        let mut h = Histogram::new(0.0, 1.0, 50);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..100_000 {
+            h.push(rng.next_f64() * 1.2); // ~1/6 of mass above hi
+        }
+        let integral: f64 = (0..50).map(|i| h.density(i) * h.bin_width()).sum();
+        let in_range = 1.0 - (h.above + h.below) as f64 / h.total as f64;
+        assert!((integral - in_range).abs() < 1e-12);
+        assert!((in_range - 1.0 / 1.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn quantile_uniform() {
+        let mut h = Histogram::new(0.0, 1.0, 1000);
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..200_000 {
+            h.push(rng.next_f64());
+        }
+        for q in [0.1, 0.5, 0.9, 0.999] {
+            assert!((h.quantile(q) - q).abs() < 0.01, "q={q} got {}", h.quantile(q));
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Minimal benchmarking harness (criterion is not available offline).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! median / mean / MAD over repeats, and derives throughput from a
+//! caller-supplied element count. Used by every target in `rust/benches/`
+//! (wired with `harness = false`).
+
+use std::time::Instant;
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub mad_s: f64,
+    pub iters: u64,
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.median_s)
+    }
+
+    pub fn report(&self) {
+        let thr = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Melem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kelem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} elem/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {:>12} ±{:<10} ({} iters){thr}",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            self.iters
+        );
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner: measures `f` (whose return value is black-boxed).
+pub struct Bench {
+    pub target_s: f64,
+    pub repeats: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor the libtest-style `--bench` / test-name args cargo passes.
+        Self {
+            target_s: std::env::var("LWFC_BENCH_TARGET_S")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.20),
+            repeats: 7,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure closure `f`; `elements` = work items per call for
+    /// throughput reporting.
+    pub fn run<T>(&mut self, name: &str, elements: Option<u64>, mut f: impl FnMut() -> T) {
+        // Warm up + calibrate.
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_s / self.repeats as f64 / once).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::with_capacity(self.repeats);
+        for _ in 0..self.repeats {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mad = samples
+            .iter()
+            .map(|s| (s - median).abs())
+            .sum::<f64>()
+            / samples.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            median_s: median,
+            mean_s: mean,
+            mad_s: mad,
+            iters,
+            elements,
+        };
+        r.report();
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn find(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+/// Optimization barrier (std::hint::black_box re-export for benches).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench {
+            target_s: 0.02,
+            repeats: 3,
+            results: Vec::new(),
+        };
+        b.run("spin", Some(1000), || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        let r = b.find("spin").unwrap();
+        assert!(r.median_s > 0.0);
+        assert!(r.throughput().unwrap() > 1e3);
+    }
+}

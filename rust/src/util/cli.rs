@@ -1,0 +1,235 @@
+//! Declarative command-line parsing (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments plus the spec used to parse them.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = spec.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, kind, spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw token stream. Unknown `--keys` are an error; `--help`
+    /// returns Err with the usage text.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} expects a value"))?,
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !args.values.contains_key(spec.name) {
+                return Err(format!("missing required option --{}\n\n{}", spec.name, self.usage()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("option --{key} not declared"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: expected integer ({e})"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: expected integer ({e})"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: expected number ({e})"))
+    }
+
+    pub fn get_list_usize(&self, key: &str) -> Result<Vec<usize>, String> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|e| format!("--{key}: bad list entry `{s}` ({e})"))
+            })
+            .collect()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .opt("net", "resnet", "network")
+            .opt("levels", "4", "quantizer levels")
+            .flag("verbose", "chatty")
+            .req("out", "output path")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let a = cmd().parse(sv(&["--out", "/tmp/x", "--levels=8"])).unwrap();
+        assert_eq!(a.get("net"), "resnet");
+        assert_eq!(a.get_usize("levels").unwrap(), 8);
+        assert_eq!(a.get("out"), "/tmp/x");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd()
+            .parse(sv(&["--verbose", "pos1", "--out", "o", "pos2"]))
+            .unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(sv(&["--levels", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(sv(&["--out", "o", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = cmd().parse(sv(&["--out", "o", "--levels", "2"])).unwrap();
+        assert_eq!(a.get_list_usize("levels").unwrap(), vec![2]);
+        let c = Command::new("t", "t").opt("ns", "2,3,4", "levels list");
+        let a = c.parse(sv(&[])).unwrap();
+        assert_eq!(a.get_list_usize("ns").unwrap(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cmd().parse(sv(&["--help"])).unwrap_err();
+        assert!(err.contains("--levels"));
+    }
+}

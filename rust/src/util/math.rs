@@ -1,0 +1,330 @@
+//! Numerical utilities: Lambert W, robust 1-D minimisation (golden-section
+//! with bracketing), Brent root finding, and a damped 2-variable Newton
+//! solver used to fit the asymmetric-Laplace parameters (λ, μ) from sample
+//! moments (paper Eqs. (6)–(7)).
+
+/// Principal branch W₀ of the Lambert W function (x ≥ 0 is all we need:
+/// ACIQ's argument `12·2^{2M}` is always positive). Halley iteration.
+pub fn lambert_w0(x: f64) -> f64 {
+    assert!(x >= 0.0, "lambert_w0 domain: x >= 0 (got {x})");
+    if x == 0.0 {
+        return 0.0;
+    }
+    // Initial guess: series near 0, log-based for large x.
+    let mut w = if x < std::f64::consts::E {
+        let l = (1.0 + x).ln();
+        l * (1.0 - l.ln() / (1.0 + l))
+    } else {
+        let l = x.ln();
+        l - l.ln() + l.ln() / l
+    };
+    for _ in 0..64 {
+        let ew = w.exp();
+        let f = w * ew - x;
+        let denom = ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0);
+        let dw = f / denom;
+        w -= dw;
+        if dw.abs() < 1e-14 * (1.0 + w.abs()) {
+            break;
+        }
+    }
+    w
+}
+
+/// Minimise a unimodal-enough `f` on `[lo, hi]` by golden-section search.
+/// Returns (argmin, min).
+pub fn golden_min<F: Fn(f64) -> f64>(f: F, lo: f64, hi: f64, tol: f64) -> (f64, f64) {
+    const INVPHI: f64 = 0.618_033_988_749_894_9;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - (b - a) * INVPHI;
+    let mut d = a + (b - a) * INVPHI;
+    let (mut fc, mut fd) = (f(c), f(d));
+    while (b - a).abs() > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - (b - a) * INVPHI;
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + (b - a) * INVPHI;
+            fd = f(d);
+        }
+    }
+    let xm = 0.5 * (a + b);
+    (xm, f(xm))
+}
+
+/// Minimise over a coarse grid then refine with golden-section — robust to
+/// the mild multimodality of e_tot(c_max) at very small N.
+pub fn grid_then_golden<F: Fn(f64) -> f64 + Copy>(
+    f: F,
+    lo: f64,
+    hi: f64,
+    grid: usize,
+    tol: f64,
+) -> (f64, f64) {
+    assert!(grid >= 3 && hi > lo);
+    let step = (hi - lo) / (grid - 1) as f64;
+    let mut best_i = 0usize;
+    let mut best_v = f64::INFINITY;
+    for i in 0..grid {
+        let v = f(lo + step * i as f64);
+        if v < best_v {
+            best_v = v;
+            best_i = i;
+        }
+    }
+    let a = lo + step * best_i.saturating_sub(1) as f64;
+    let b = (lo + step * (best_i + 1) as f64).min(hi);
+    golden_min(f, a, b, tol)
+}
+
+/// Brent's method for a root of `f` on a bracketing interval [a, b].
+pub fn brent_root<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, tol: f64) -> Option<f64> {
+    let (mut a, mut b) = (a, b);
+    let (mut fa, mut fb) = (f(a), f(b));
+    if fa * fb > 0.0 {
+        return None;
+    }
+    if fa.abs() < fb.abs() {
+        std::mem::swap(&mut a, &mut b);
+        std::mem::swap(&mut fa, &mut fb);
+    }
+    let (mut c, mut fc) = (a, fa);
+    let mut mflag = true;
+    let mut d = a;
+    for _ in 0..200 {
+        if fb.abs() < tol || (b - a).abs() < tol {
+            return Some(b);
+        }
+        let mut s = if fa != fc && fb != fc {
+            a * fb * fc / ((fa - fb) * (fa - fc))
+                + b * fa * fc / ((fb - fa) * (fb - fc))
+                + c * fa * fb / ((fc - fa) * (fc - fb))
+        } else {
+            b - fb * (b - a) / (fb - fa)
+        };
+        let lo = (3.0 * a + b) / 4.0;
+        let cond = !((lo.min(b)..=lo.max(b)).contains(&s))
+            || (mflag && (s - b).abs() >= (b - c).abs() / 2.0)
+            || (!mflag && (s - b).abs() >= (c - d).abs() / 2.0)
+            || (mflag && (b - c).abs() < tol)
+            || (!mflag && (c - d).abs() < tol);
+        if cond {
+            s = 0.5 * (a + b);
+            mflag = true;
+        } else {
+            mflag = false;
+        }
+        let fs = f(s);
+        d = c;
+        c = b;
+        fc = fb;
+        if fa * fs < 0.0 {
+            b = s;
+            fb = fs;
+        } else {
+            a = s;
+            fa = fs;
+        }
+        if fa.abs() < fb.abs() {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut fa, &mut fb);
+        }
+    }
+    Some(b)
+}
+
+/// Damped Newton for a 2-equation system `g(p) = 0` with finite-difference
+/// Jacobian. Used by `modeling::fit` to solve Eqs. (6)–(7) for (λ, μ).
+pub fn newton2<G: Fn([f64; 2]) -> [f64; 2]>(
+    g: G,
+    mut p: [f64; 2],
+    tol: f64,
+    max_iter: usize,
+) -> Option<[f64; 2]> {
+    for _ in 0..max_iter {
+        let f0 = g(p);
+        let n0 = f0[0].abs() + f0[1].abs();
+        if n0 < tol {
+            return Some(p);
+        }
+        let h0 = 1e-6 * (1.0 + p[0].abs());
+        let h1 = 1e-6 * (1.0 + p[1].abs());
+        let fx = g([p[0] + h0, p[1]]);
+        let fy = g([p[0], p[1] + h1]);
+        let j = [
+            [(fx[0] - f0[0]) / h0, (fy[0] - f0[0]) / h1],
+            [(fx[1] - f0[1]) / h0, (fy[1] - f0[1]) / h1],
+        ];
+        let det = j[0][0] * j[1][1] - j[0][1] * j[1][0];
+        if det.abs() < 1e-30 {
+            return None;
+        }
+        let dx = (f0[0] * j[1][1] - f0[1] * j[0][1]) / det;
+        let dy = (f0[1] * j[0][0] - f0[0] * j[1][0]) / det;
+        // Backtracking damping: halve the step until the residual shrinks.
+        let mut step = 1.0;
+        let mut accepted = false;
+        for _ in 0..30 {
+            let cand = [p[0] - step * dx, p[1] - step * dy];
+            let fc = g(cand);
+            if fc[0].is_finite() && fc[1].is_finite() && fc[0].abs() + fc[1].abs() < n0 {
+                p = cand;
+                accepted = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !accepted {
+            return None;
+        }
+    }
+    None
+}
+
+/// Numerically stable running mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub count: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, it: I) {
+        for x in it {
+            self.push(x);
+        }
+    }
+
+    /// Population variance (divide by n) — matches the paper's sample-moment
+    /// usage and the Python `split_tensor_stats`.
+    pub fn variance(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.m2 / self.count as f64
+        }
+    }
+
+    /// Merge two accumulators (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambert_w_identities() {
+        for &x in &[0.0, 0.5, 1.0, std::f64::consts::E, 10.0, 1e3, 1e6, 12.0 * 4096.0] {
+            let w = lambert_w0(x);
+            assert!((w * w.exp() - x).abs() < 1e-8 * (1.0 + x), "x={x} w={w}");
+        }
+        assert!((lambert_w0(1.0) - 0.567_143_290_409_783_8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, v) = golden_min(|x| (x - 3.2) * (x - 3.2) + 1.0, -10.0, 10.0, 1e-9);
+        assert!((x - 3.2).abs() < 1e-6);
+        assert!((v - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn grid_then_golden_escapes_local_min() {
+        // f has a shallow local min near 1 and the global min near 6.
+        let f = |x: f64| (x - 6.0).powi(2).min((x - 1.0).powi(2) + 5.0);
+        let (x, _) = grid_then_golden(f, 0.0, 10.0, 64, 1e-9);
+        assert!((x - 6.0).abs() < 1e-5, "x={x}");
+    }
+
+    #[test]
+    fn brent_finds_root() {
+        let r = brent_root(|x| x * x - 2.0, 0.0, 2.0, 1e-12).unwrap();
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-10);
+        assert!(brent_root(|x| x * x + 1.0, -1.0, 1.0, 1e-12).is_none());
+    }
+
+    #[test]
+    fn newton2_solves_linear_system() {
+        // x + y = 3, x - y = 1  =>  x=2, y=1
+        let sol = newton2(|p| [p[0] + p[1] - 3.0, p[0] - p[1] - 1.0], [0.0, 0.0], 1e-12, 50)
+            .unwrap();
+        assert!((sol[0] - 2.0).abs() < 1e-9 && (sol[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 0.37).sin() * 3.0 + 1.0).collect();
+        let mut w = Welford::new();
+        w.extend(xs.iter().copied());
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean - mean).abs() < 1e-10);
+        assert!((w.variance() - var).abs() < 1e-10);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_pass() {
+        let xs: Vec<f64> = (0..500).map(|i| (i as f64).sqrt()).collect();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        a.extend(xs[..200].iter().copied());
+        b.extend(xs[200..].iter().copied());
+        a.merge(&b);
+        let mut whole = Welford::new();
+        whole.extend(xs.iter().copied());
+        assert!((a.mean - whole.mean).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+        assert_eq!(a.count, whole.count);
+    }
+}

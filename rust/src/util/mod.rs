@@ -1,0 +1,13 @@
+//! Offline-substrate utilities: deterministic PRNG, numerical methods,
+//! CLI parsing, thread pool, JSON, and a property-testing harness —
+//! in-repo replacements for crates unavailable in this environment
+//! (see DESIGN.md "Dependency constraints").
+
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,145 @@
+//! Minimal property-testing harness (proptest is not available offline).
+//!
+//! Deterministic: case `i` of a test derives its generator seed from the
+//! test name and `i`, so failures are reproducible by name. On failure the
+//! harness reports the failing case index and seed.
+//!
+//! ```ignore
+//! prop_check("quantizer_roundtrip", 200, |g| {
+//!     let n = g.usize_in(2, 17);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::{derive_seed, SplitMix64};
+
+/// Generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn new(name: &str, case: u64) -> Self {
+        let base = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+        Self {
+            rng: SplitMix64::new(derive_seed(base, 0x5eed, case)),
+            case,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        lo + (self.rng.next_u64() % ((hi - lo) as u64 + 1)) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of f32 drawn from a mixture resembling post-activation data:
+    /// mostly small-positive exponential mass, some scaled negatives, rare
+    /// large outliers — the shapes the codec must survive.
+    pub fn activation_vec(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                let u = self.rng.next_f64();
+                let mag = -self.rng.next_f64().max(1e-12).ln() * scale as f64;
+                if u < 0.25 {
+                    (-0.1 * mag) as f32
+                } else if u < 0.97 {
+                    mag as f32
+                } else {
+                    (mag * 8.0) as f32
+                }
+            })
+            .collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `cases` deterministic cases of a property. Panics (test failure)
+/// with the case number and message on the first violated case.
+pub fn prop_check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen::new(name, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Assert helper producing a property-style error.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_per_case() {
+        let mut a = Gen::new("t", 3);
+        let mut b = Gen::new("t", 3);
+        assert_eq!(a.u64(), b.u64());
+        let mut c = Gen::new("t", 4);
+        assert_ne!(Gen::new("t", 3).u64(), c.u64());
+    }
+
+    #[test]
+    fn ranges_respected() {
+        prop_check("ranges", 100, |g| {
+            let v = g.usize_in(3, 9);
+            if !(3..=9).contains(&v) {
+                return Err(format!("usize_in out of range: {v}"));
+            }
+            let f = g.f64_in(-2.0, 5.0);
+            if !(-2.0..=5.0).contains(&f) {
+                return Err(format!("f64_in out of range: {f}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `boom` failed at case 0")]
+    fn failure_reports_case() {
+        prop_check("boom", 10, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,149 @@
+//! Deterministic SplitMix64 PRNG, mirrored bit-for-bit by
+//! `python/compile/rng.py`.
+//!
+//! The synthetic corpora are generated on both sides of the language
+//! boundary (Python at artifact-build time, Rust on the request path), so
+//! the generator, the per-item seed derivation and the per-pixel hash
+//! noise must match exactly. Keep the three constants and the draw order
+//! in sync with the Python module.
+
+/// SplitMix64 state. `next_u64` passes the canonical test vectors
+/// (seed 0 -> 0xE220A8397B1DCDAF, ...), pinned in unit tests here and in
+/// `python/tests/test_data.py`.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+pub const DERIVE: u64 = 0xD1B5_4A32_D192_ED03;
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        mix(self.state)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of entropy (matches Python).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Modulo draw; n is tiny in all our uses so bias is negligible and
+    /// the Python side uses the same formula.
+    #[inline]
+    pub fn next_u32_below(&mut self, n: u32) -> u32 {
+        (self.next_u64() % n as u64) as u32
+    }
+
+    /// Box-Muller pair; consumes exactly two f64 draws (mirrored in Python).
+    pub fn gaussian_pair(&mut self) -> (f64, f64) {
+        let mut u1 = self.next_f64();
+        let u2 = self.next_f64();
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let a = 2.0 * std::f64::consts::PI * u2;
+        (r * a.cos(), r * a.sin())
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.gaussian_pair().0
+    }
+}
+
+#[inline]
+fn mix(z: u64) -> u64 {
+    let z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    let z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Per-item seed derivation, identical to `python/compile/rng.py::derive_seed`.
+#[inline]
+pub fn derive_seed(base: u64, stream: u64, index: u64) -> u64 {
+    let s = base ^ stream.wrapping_mul(GOLDEN) ^ index.wrapping_mul(DERIVE);
+    SplitMix64::new(s).next_u64()
+}
+
+/// Per-pixel hash noise in [-1, 1): element `i` uses seed
+/// `mix(img_seed, stream, i)` — the vectorised formula in
+/// `python/compile/data.py::hash_noise`.
+#[inline]
+pub fn hash_noise_at(img_seed: u64, stream: u64, index: u64) -> f64 {
+    let s = img_seed ^ stream.wrapping_mul(GOLDEN) ^ index.wrapping_mul(DERIVE);
+    let u = SplitMix64::new(s).next_u64();
+    (u >> 11) as f64 * (1.0 / (1u64 << 53) as f64) * 2.0 - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_vectors() {
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(42);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 1000.0;
+        assert!((0.4..0.6).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn derive_seed_stable() {
+        assert_eq!(derive_seed(7, 1, 123), derive_seed(7, 1, 123));
+        assert_ne!(derive_seed(7, 1, 123), derive_seed(7, 1, 124));
+        assert_ne!(derive_seed(7, 1, 123), derive_seed(7, 2, 123));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = SplitMix64::new(3);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn hash_noise_range_and_determinism() {
+        for i in 0..100 {
+            let v = hash_noise_at(0xDEADBEEF, 7, i);
+            assert!((-1.0..1.0).contains(&v));
+            assert_eq!(v, hash_noise_at(0xDEADBEEF, 7, i));
+        }
+    }
+}

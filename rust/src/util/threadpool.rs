@@ -1,0 +1,262 @@
+//! Fixed-size worker pool over std threads (tokio is not available
+//! offline). Provides:
+//!
+//! * [`ThreadPool`] — scoped fork-join parallelism (`map_indexed`) used by
+//!   the experiment sweeps and the data generators;
+//! * [`BoundedQueue`] — an mpsc channel with backpressure used as the
+//!   stage-to-stage conduit of the coordinator pipeline (edge → scheduler →
+//!   cloud), the std-thread analogue of a bounded tokio mpsc.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Simple fork-join pool. Work items are claimed from a shared index so
+/// uneven item costs still balance.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn with_default_parallelism() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f(i)` for i in 0..n in parallel; results returned in order.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        if n == 0 {
+            return Vec::new();
+        }
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    **slots[i].lock().unwrap() = Some(v);
+                });
+            }
+        });
+        out.into_iter().map(|v| v.expect("worker filled slot")).collect()
+    }
+
+    /// Fold `f(i)` over 0..n with a per-worker accumulator merged by
+    /// `merge` — parallel reduction without allocation per item.
+    pub fn fold_indexed<A, F, M>(&self, n: usize, init: impl Fn() -> A + Sync, f: F, merge: M) -> A
+    where
+        A: Send,
+        F: Fn(&mut A, usize) + Sync,
+        M: Fn(A, A) -> A,
+    {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let accs = thread::scope(|s| {
+            let handles: Vec<_> = (0..self.workers.min(n.max(1)))
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut acc = init();
+                        loop {
+                            let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            f(&mut acc, i);
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        accs.into_iter().reduce(merge).unwrap_or_else(init)
+    }
+}
+
+/// Bounded MPMC queue with blocking push/pop and close semantics —
+/// the coordinator's backpressure primitive.
+pub struct BoundedQueue<T> {
+    inner: Arc<QueueInner<T>>,
+}
+
+struct QueueInner<T> {
+    state: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Arc::new(QueueInner {
+                state: Mutex::new(QueueState {
+                    items: VecDeque::with_capacity(capacity),
+                    closed: false,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity: capacity.max(1),
+            }),
+        }
+    }
+
+    /// Blocking push; returns Err(item) if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; None when the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Drain up to `max` items, waiting for at least one (batch pop used by
+    /// the batching scheduler). None when closed and drained.
+    pub fn pop_up_to(&self, max: usize) -> Option<Vec<T>> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if !st.items.is_empty() {
+                let take = st.items.len().min(max.max(1));
+                let batch: Vec<T> = st.items.drain(..take).collect();
+                self.inner.not_full.notify_all();
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map_indexed(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fold_indexed_sums() {
+        let pool = ThreadPool::new(3);
+        let total = pool.fold_indexed(1000, || 0u64, |acc, i| *acc += i as u64, |a, b| a + b);
+        assert_eq!(total, 499_500);
+    }
+
+    #[test]
+    fn queue_roundtrip_and_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let q2 = q.clone();
+        let producer = thread::spawn(move || {
+            for i in 0..100 {
+                q2.push(i).unwrap();
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn queue_backpressure_bounds_length() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(3)); // blocks until a pop
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_up_to_batches() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let batch = q.pop_up_to(4).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        q.close();
+        assert_eq!(q.pop_up_to(100).unwrap().len(), 6);
+        assert!(q.pop_up_to(4).is_none());
+    }
+}

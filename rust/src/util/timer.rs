@@ -1,0 +1,93 @@
+//! Wall-clock timing helpers shared by the benches and the coordinator's
+//! latency metrics.
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Online latency percentile tracker (stores samples; fine for the request
+/// volumes in this repo's experiments).
+#[derive(Default, Clone, Debug)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn push(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// q in [0,1]; nearest-rank on the sorted samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * (s.len() - 1) as f64).round() as usize).min(s.len() - 1);
+        s[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut p = Percentiles::default();
+        for i in (0..100).rev() {
+            p.push(i as f64);
+        }
+        assert_eq!(p.quantile(0.0), 0.0);
+        assert_eq!(p.quantile(1.0), 99.0);
+        assert!((p.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((p.mean() - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timer_is_monotonic() {
+        let t = Timer::new();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+}

@@ -1,0 +1,193 @@
+//! Cross-module property tests on the codec: end-to-end roundtrip
+//! invariants, rate monotonicity, ECQ-vs-uniform relationships, and
+//! failure injection on corrupted bit-streams.
+
+use lwfc::codec::{
+    decode, decode_indices, design_ecq, EcqParams, Encoder, EncoderConfig, Quantizer,
+    UniformQuantizer,
+};
+use lwfc::prop_assert;
+use lwfc::util::prop::{prop_check, Gen};
+
+fn uniform_cfg(levels: usize, c_max: f32) -> EncoderConfig {
+    EncoderConfig::classification(
+        Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels)),
+        32,
+    )
+}
+
+#[test]
+fn roundtrip_is_exactly_fake_quant_for_any_stream() {
+    prop_check("e2e_roundtrip", 40, |g: &mut Gen| {
+        let n = g.usize_in(1, 20_000);
+        let levels = g.usize_in(2, 12);
+        let c_max = g.f32_in(0.2, 20.0);
+        let scale = g.f32_in(0.05, 4.0);
+        let xs = g.activation_vec(n, scale);
+        let cfg = uniform_cfg(levels, c_max);
+        let q = cfg.quantizer.clone();
+        let mut enc = Encoder::new(cfg);
+        let stream = enc.encode(&xs);
+        let (out, _) = decode(&stream.bytes, n).map_err(|e| e.to_string())?;
+        for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+            prop_assert!(y == q.fake_quant(x), "elem {i} (n={n} N={levels})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decoded_indices_in_range_and_rate_reasonable() {
+    prop_check("indices_range", 30, |g: &mut Gen| {
+        let n = g.usize_in(64, 8192);
+        let levels = g.usize_in(2, 9);
+        let xs = g.activation_vec(n, 0.5);
+        let mut enc = Encoder::new(uniform_cfg(levels, 2.0));
+        let stream = enc.encode(&xs);
+        let (idx, header) = decode_indices(&stream.bytes, n).map_err(|e| e.to_string())?;
+        prop_assert!(header.levels == levels, "header levels");
+        prop_assert!(
+            idx.iter().all(|&i| (i as usize) < levels),
+            "index out of range"
+        );
+        // CABAC + TU can never exceed (N-1) bits/element by much, and the
+        // header adds 96 bits total.
+        let bound = (levels - 1) as f64 + 0.1 + 96.0 / n as f64;
+        prop_assert!(
+            stream.bits_per_element() < bound,
+            "rate {} over bound {bound}",
+            stream.bits_per_element()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn more_levels_never_decrease_reconstruction_quality() {
+    prop_check("levels_monotone_mse", 20, |g: &mut Gen| {
+        let xs = g.activation_vec(10_000, 0.4);
+        let c_max = g.f32_in(1.0, 6.0);
+        let mut prev_mse = f64::INFINITY;
+        for levels in [2usize, 4, 8, 16, 32] {
+            let q = UniformQuantizer::new(0.0, c_max, levels);
+            let mse: f64 = xs
+                .iter()
+                .map(|&x| {
+                    let c = x.clamp(0.0, c_max); // distortion vs *clipped* signal
+                    ((c - q.fake_quant(x)) as f64).powi(2)
+                })
+                .sum::<f64>()
+                / xs.len() as f64;
+            prop_assert!(
+                mse <= prev_mse + 1e-12,
+                "MSE increased at N={levels}: {mse} > {prev_mse}"
+            );
+            prev_mse = mse;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ecq_lambda_sweep_trades_rate_for_distortion() {
+    prop_check("ecq_rd_tradeoff", 10, |g: &mut Gen| {
+        let train = g.activation_vec(30_000, 0.4);
+        let test = g.activation_vec(8_192, 0.4);
+        let mut prev_rate = f64::INFINITY;
+        for lambda in [0.0, 0.01, 0.1, 1.0] {
+            let d = design_ecq(&train, 0.0, 2.0, EcqParams::pinned(4, lambda));
+            let q = Quantizer::NonUniform(d.quantizer);
+            let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
+            let rate = enc.encode(&test).bits_per_element();
+            // Rate must be non-increasing in λ (up to CABAC adaptivity
+            // noise, allow 3%).
+            prop_assert!(
+                rate <= prev_rate * 1.03,
+                "rate {rate} > prev {prev_rate} at λ={lambda}"
+            );
+            prev_rate = rate;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pinned_ecq_spans_range_conventional_does_not() {
+    prop_check("ecq_span", 15, |g: &mut Gen| {
+        let train = g.activation_vec(20_000, 0.5);
+        let c_max = g.f32_in(1.0, 4.0);
+        let levels = g.usize_in(3, 6);
+        let p = design_ecq(&train, 0.0, c_max, EcqParams::pinned(levels, 0.02)).quantizer;
+        let c = design_ecq(&train, 0.0, c_max, EcqParams::conventional(levels, 0.02)).quantizer;
+        prop_assert!(p.recon[0] == 0.0 && p.recon[levels - 1] == c_max, "pin broken");
+        prop_assert!(
+            c.recon[levels - 1] < c_max,
+            "conventional top centroid should sit below c_max"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_streams_never_panic() {
+    prop_check("corruption", 60, |g: &mut Gen| {
+        let n = g.usize_in(16, 2048);
+        let xs = g.activation_vec(n, 0.5);
+        let mut enc = Encoder::new(uniform_cfg(4, 2.0));
+        let mut bytes = enc.encode(&xs).bytes;
+        match g.usize_in(0, 2) {
+            0 => {
+                // truncate anywhere
+                let cut = g.usize_in(0, bytes.len());
+                bytes.truncate(cut);
+            }
+            1 => {
+                // flip a random byte
+                if !bytes.is_empty() {
+                    let i = g.usize_in(0, bytes.len() - 1);
+                    bytes[i] ^= g.u64() as u8 | 1;
+                }
+            }
+            _ => {
+                // random garbage of the same length
+                for b in bytes.iter_mut() {
+                    *b = g.u64() as u8;
+                }
+            }
+        }
+        // Must return Ok (CABAC is self-synchronizing to *some* indices) or
+        // Err — but never panic, and any Ok result must be in-range.
+        if let Ok((vals, header)) = decode(&bytes, xs.len()) {
+            prop_assert!(vals.len() == xs.len(), "length after corruption");
+            for &v in &vals {
+                prop_assert!(
+                    v >= header.c_min && v <= header.c_max,
+                    "decoded value {v} outside [{}, {}]",
+                    header.c_min,
+                    header.c_max
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_single_element_streams() {
+    for n in [0usize, 1, 2] {
+        let xs = vec![0.7f32; n];
+        let mut enc = Encoder::new(uniform_cfg(4, 2.0));
+        let stream = enc.encode(&xs);
+        let (out, _) = decode(&stream.bytes, n).unwrap();
+        assert_eq!(out.len(), n);
+    }
+}
+
+#[test]
+fn rate_reflects_entropy_not_levels() {
+    // All-zeros tensor at N=8 must cost far less than 3 bits/element.
+    let xs = vec![0.0f32; 8192];
+    let mut enc = Encoder::new(uniform_cfg(8, 2.0));
+    let bpe = enc.encode(&xs).bits_per_element();
+    assert!(bpe < 0.1, "constant tensor cost {bpe} bits/element");
+}

@@ -1,0 +1,129 @@
+//! Model ↔ measurement agreement over the real artifacts: the paper's
+//! central claims, asserted as tests rather than just plotted.
+
+use lwfc::codec::UniformQuantizer;
+use lwfc::coordinator::TaskKind;
+use lwfc::experiments::common::{fit_cache, ValCache};
+use lwfc::modeling::{optimal_cmax, total_error};
+use lwfc::runtime::Manifest;
+
+fn cache_for(task: TaskKind, n: usize) -> Option<ValCache> {
+    let m = Manifest::load(&Manifest::default_dir())
+        .map_err(|e| eprintln!("SKIP: {e}"))
+        .ok()?;
+    Some(ValCache::build(&m, task, n).unwrap())
+}
+
+#[test]
+fn analytic_error_tracks_measured_error_resnet() {
+    // Fig. 5(a): the analytic e_tot curve must track the measured MSRE
+    // within ~15% across the clipping range of interest, for N ∈ {2,4,8}.
+    let Some(cache) = cache_for(TaskKind::ClassifyResnet { split: 2 }, 128) else {
+        return;
+    };
+    let model = fit_cache(&cache).unwrap();
+    let hi = cache.max_value();
+    for levels in [2usize, 4, 8] {
+        for i in 1..=8 {
+            let c = hi * i as f32 / 8.0;
+            let analytic = total_error(&model.pdf, 0.0, c as f64, levels);
+            let q = UniformQuantizer::new(0.0, c, levels);
+            let measured = cache.msre_with(|x| q.fake_quant(x));
+            // The paper's own Fig. 5(b)/(c) show the curves "do not overlap
+            // exactly"; what matters is tracking the minimum. 25% pointwise.
+            assert!(
+                (analytic - measured).abs() < 0.25 * measured.max(1e-4),
+                "N={levels} c={c}: analytic {analytic} vs measured {measured}"
+            );
+        }
+    }
+}
+
+#[test]
+fn model_clipping_recovers_peak_accuracy_at_n4() {
+    // Fig. 7: at N >= 4 the model-based c_max must be within 1% of the
+    // empirically best accuracy (the paper's headline for fine-enough N).
+    let Some(cache) = cache_for(TaskKind::ClassifyResnet { split: 2 }, 256) else {
+        return;
+    };
+    let model = fit_cache(&cache).unwrap();
+    for levels in [4usize, 6, 8] {
+        let c_model = optimal_cmax(&model.pdf, 0.0, levels).c_max as f32;
+        let qm = UniformQuantizer::new(0.0, c_model, levels);
+        let acc_model = cache.metric_with(|x| qm.fake_quant(x)).unwrap();
+
+        let mut acc_best = 0.0f64;
+        let hi = cache.max_value();
+        for i in 1..=32 {
+            let c = hi * i as f32 / 32.0;
+            let q = UniformQuantizer::new(0.0, c, levels);
+            acc_best = acc_best.max(cache.metric_with(|x| q.fake_quant(x)).unwrap());
+        }
+        assert!(
+            acc_best - acc_model <= 0.01 + 1e-9,
+            "N={levels}: model acc {acc_model} vs best {acc_best}"
+        );
+    }
+}
+
+#[test]
+fn coarse_quantization_without_clipping_destroys_accuracy() {
+    // §III intro example: quantizing to 3 bits over the raw range (no
+    // clipping, c_max = observed max) costs real accuracy, while the
+    // model-clipped 3-bit quantizer recovers it.
+    let Some(cache) = cache_for(TaskKind::ClassifyResnet { split: 2 }, 256) else {
+        return;
+    };
+    let clean = cache.metric_with(|x| x).unwrap();
+    let raw_max = cache.max_value();
+    let q_raw = UniformQuantizer::new(0.0, raw_max, 8);
+    let acc_raw = cache.metric_with(|x| q_raw.fake_quant(x)).unwrap();
+
+    let model = fit_cache(&cache).unwrap();
+    let c = optimal_cmax(&model.pdf, 0.0, 8).c_max as f32;
+    let q_clip = UniformQuantizer::new(0.0, c, 8);
+    let acc_clip = cache.metric_with(|x| q_clip.fake_quant(x)).unwrap();
+
+    assert!(
+        acc_clip >= acc_raw,
+        "clipping should not hurt: clipped {acc_clip} vs raw {acc_raw}"
+    );
+    assert!(
+        clean - acc_clip < 0.01 + 1e-9,
+        "model-clipped 3-bit should be within 1% of clean ({acc_clip} vs {clean})"
+    );
+}
+
+#[test]
+fn one_bit_quantization_is_feasible_with_model_clipping() {
+    // §IV-A: 1-bit quantization remains usable (paper: ~5% loss on
+    // ResNet-50; our substitute networks are smaller, allow <= 12%).
+    let Some(cache) = cache_for(TaskKind::ClassifyResnet { split: 2 }, 256) else {
+        return;
+    };
+    let clean = cache.metric_with(|x| x).unwrap();
+    let model = fit_cache(&cache).unwrap();
+    let c = optimal_cmax(&model.pdf, 0.0, 2).c_max as f32;
+    let q = UniformQuantizer::new(0.0, c, 2);
+    let acc = cache.metric_with(|x| q.fake_quant(x)).unwrap();
+    assert!(
+        clean - acc <= 0.12,
+        "1-bit loss too large: {acc} vs clean {clean}"
+    );
+}
+
+#[test]
+fn detection_map_survives_2bit_quantization() {
+    let Some(cache) = cache_for(TaskKind::Detect, 96) else {
+        return;
+    };
+    let clean = cache.metric_with(|x| x).unwrap();
+    let model = fit_cache(&cache).unwrap();
+    let c = optimal_cmax(&model.pdf, 0.0, 4).c_max as f32;
+    let q = UniformQuantizer::new(0.0, c, 4);
+    let quant = cache.metric_with(|x| q.fake_quant(x)).unwrap();
+    assert!(
+        clean - quant <= 0.05,
+        "detect mAP loss at N=4: {quant} vs clean {clean}"
+    );
+}

@@ -1,0 +1,249 @@
+//! Integration tests over the real artifacts: PJRT execution, Python↔Rust
+//! data parity, codec-in-the-loop accuracy, and the serving pipeline.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise).
+
+use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::coordinator::{
+    serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind,
+};
+use lwfc::data;
+use lwfc::eval::top1;
+use lwfc::runtime::{Manifest, Runtime};
+use lwfc::tensor::Tensor;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+/// Run edge+cloud over `n` validation images with an optional quantizer in
+/// the middle; return top-1 accuracy.
+fn classify_accuracy(m: &Manifest, split: usize, quant: Option<&Quantizer>, n: usize) -> f64 {
+    let rt = Runtime::cpu().unwrap();
+    let s = m.resnet_split(split).unwrap();
+    let edge = rt.load(&s.edge).unwrap();
+    let cloud = rt.load(&s.cloud).unwrap();
+    let b = m.serve_batch;
+    let per_item: usize = s.feature[1..].iter().product();
+
+    let mut logits_all = Vec::new();
+    let mut labels_all = Vec::new();
+    for start in (0..n).step_by(b) {
+        let count = b.min(n - start);
+        let (mut xs, ys) = data::gen_class_batch(m.val_seed, start as u64, count);
+        for _ in count..b {
+            let tail = xs[xs.len() - 32 * 32 * 3..].to_vec();
+            xs.extend_from_slice(&tail);
+        }
+        let input = Tensor::new(&[b, 32, 32, 3], xs);
+        let mut feat = edge.run1(&[&input]).unwrap();
+        if let Some(q) = quant {
+            for v in feat.data_mut() {
+                *v = q.fake_quant(*v);
+            }
+        }
+        let logits = cloud.run1(&[&feat]).unwrap();
+        let classes = logits.shape()[1];
+        logits_all.extend_from_slice(&logits.data()[..count * classes]);
+        labels_all.extend_from_slice(&ys[..count]);
+    }
+    top1(&logits_all, 10, &labels_all)
+}
+
+#[test]
+fn clean_accuracy_matches_python_build() {
+    // Python measured top-1 over its own val stream at build time; the
+    // Rust data generator + runtime must land within noise of it (data
+    // parity means same images up to libm ULPs).
+    let Some(m) = manifest() else { return };
+    let acc = classify_accuracy(&m, 2, None, 256);
+    assert!(
+        (acc - m.resnet_top1).abs() < 0.05,
+        "rust-side clean accuracy {acc} vs python {top}",
+        top = m.resnet_top1
+    );
+}
+
+#[test]
+fn fakequant_artifact_matches_rust_quantizer() {
+    // The L1 Pallas fakequant kernel (lowered into resnet_edge_fq) must
+    // agree element-wise with the Rust UniformQuantizer — one quantizer
+    // definition across all three layers.
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let s = m.resnet_split(2).unwrap();
+    let edge = rt.load(&s.edge).unwrap();
+    let edge_fq = rt.load(&m.resnet_edge_fq).unwrap();
+    let b = m.serve_batch;
+
+    let (xs, _) = data::gen_class_batch(m.val_seed, 0, b);
+    let input = Tensor::new(&[b, 32, 32, 3], xs);
+    let feat = edge.run1(&[&input]).unwrap();
+
+    let (c_min, c_max, levels) = (0.0f32, 1.2f32, 4usize);
+    let q = UniformQuantizer::new(c_min, c_max, levels);
+    let scale = (levels - 1) as f32 / (c_max - c_min);
+    let params = Tensor::new(&[1, 3], vec![c_min, c_max, scale]);
+    let fq_out = edge_fq.run1(&[&input, &params]).unwrap();
+
+    assert_eq!(fq_out.shape(), feat.shape());
+    let mut max_err = 0.0f32;
+    for (i, (&raw, &kq)) in feat.data().iter().zip(fq_out.data()).enumerate() {
+        let rq = q.fake_quant(raw);
+        let err = (rq - kq).abs();
+        if err > max_err {
+            max_err = err;
+        }
+        assert!(
+            err < 1e-5,
+            "element {i}: kernel {kq} vs rust {rq} (raw {raw})"
+        );
+    }
+    eprintln!("fakequant parity max_err = {max_err}");
+}
+
+#[test]
+fn moments_artifact_matches_welford() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let s = m.resnet_split(2).unwrap();
+    let edge = rt.load(&s.edge).unwrap();
+    let moments = rt.load(&m.resnet_moments).unwrap();
+    let b = m.serve_batch;
+
+    let (xs, _) = data::gen_class_batch(m.val_seed, 64, b);
+    let input = Tensor::new(&[b, 32, 32, 3], xs);
+    let feat = edge.run1(&[&input]).unwrap();
+    let outs = moments.run(&[&feat]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let (sum_k, sumsq_k) = (outs[0].data()[0] as f64, outs[1].data()[0] as f64);
+
+    let sum: f64 = feat.data().iter().map(|&v| v as f64).sum();
+    let sumsq: f64 = feat.data().iter().map(|&v| (v as f64) * (v as f64)).sum();
+    assert!((sum_k - sum).abs() < 1e-2 * sum.abs().max(1.0), "{sum_k} vs {sum}");
+    assert!((sumsq_k - sumsq).abs() < 1e-2 * sumsq.max(1.0), "{sumsq_k} vs {sumsq}");
+}
+
+#[test]
+fn quantized_pipeline_through_bitstream_preserves_accuracy() {
+    // Full codec in the loop (encode → bytes → decode) at N=4 with a
+    // near-optimal clip range: accuracy must stay within 2% of clean.
+    let Some(m) = manifest() else { return };
+    let s = m.resnet_split(2).unwrap();
+
+    // Model-based c_max from the manifest's build-time stats.
+    let model = lwfc::modeling::fit_leaky(s.stats.mean, s.stats.var).unwrap();
+    let c_max = lwfc::modeling::optimal_cmax(&model.pdf, 0.0, 4).c_max as f32;
+
+    let q = Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, 4));
+    let clean = classify_accuracy(&m, 2, None, 128);
+    let quant = classify_accuracy(&m, 2, Some(&q), 128);
+    assert!(
+        clean - quant < 0.02 + 1e-9,
+        "N=4 model-clipped accuracy dropped too far: {quant} vs clean {clean} (c_max {c_max})"
+    );
+}
+
+#[test]
+fn bitstream_roundtrip_on_real_features() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let s = m.resnet_split(2).unwrap();
+    let edge = rt.load(&s.edge).unwrap();
+    let b = m.serve_batch;
+    let per_item: usize = s.feature[1..].iter().product();
+
+    let (xs, _) = data::gen_class_batch(m.val_seed, 0, b);
+    let feat = edge.run1(&[&Tensor::new(&[b, 32, 32, 3], xs)]).unwrap();
+
+    let q = UniformQuantizer::new(0.0, 1.2, 4);
+    let mut enc = Encoder::new(EncoderConfig::classification(Quantizer::Uniform(q), 32));
+    for i in 0..b {
+        let item = &feat.data()[i * per_item..(i + 1) * per_item];
+        let stream = enc.encode(item);
+        let (decoded, _) = decode(&stream.bytes, per_item).unwrap();
+        for (j, (&x, &y)) in item.iter().zip(&decoded).enumerate() {
+            assert_eq!(y, q.fake_quant(x), "item {i} elem {j}");
+        }
+        // Coarse quantization of real features must compress well below
+        // the raw 2 bits (paper: 0.6-0.8 bits/element at N=4).
+        let bpe = stream.bits_per_element();
+        assert!(bpe < 2.0, "bits/element {bpe}");
+    }
+}
+
+#[test]
+fn serving_pipeline_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let s = m.resnet_split(2).unwrap();
+    let task = TaskKind::ClassifyResnet { split: 2 };
+    let cfg = ServeConfig {
+        edge: EdgeConfig {
+            task,
+            quant: QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: 1.2,
+                levels: 4,
+            },
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            adaptive: None,
+        },
+        cloud: CloudConfig {
+            task,
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            obj_threshold: 0.3,
+        },
+        edge_workers: 2,
+        requests: 64,
+        queue_capacity: 32,
+        first_index: 0,
+    };
+    let report = serve(&m, cfg).unwrap();
+    eprintln!("{}", report.summary());
+    assert_eq!(report.requests, 64);
+    assert!(report.metric > 0.75, "served accuracy {}", report.metric);
+    assert!(report.bits_per_element > 0.0 && report.bits_per_element < 2.5);
+    assert!(report.throughput_rps > 1.0);
+    let _ = s;
+}
+
+#[test]
+fn detect_pipeline_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let task = TaskKind::Detect;
+    let cfg = ServeConfig {
+        edge: EdgeConfig {
+            task,
+            quant: QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: 1.0,
+                levels: 8,
+            },
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            adaptive: None,
+        },
+        cloud: CloudConfig {
+            task,
+            val_seed: m.val_seed,
+            batch: m.serve_batch,
+            obj_threshold: 0.3,
+        },
+        edge_workers: 1,
+        requests: 48,
+        queue_capacity: 32,
+        first_index: 0,
+    };
+    let report = serve(&m, cfg).unwrap();
+    eprintln!("{}", report.summary());
+    assert!(report.metric > 0.3, "mAP@0.5 {} too low", report.metric);
+}
