@@ -38,12 +38,14 @@ fn run_task(m: &Manifest, task: TaskKind, levels: usize, requests: usize) -> any
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: None,
+            threads: 2,
         },
         cloud: CloudConfig {
             task,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             obj_threshold: 0.3,
+            threads: 2,
         },
         edge_workers: 2,
         requests,

@@ -1,10 +1,17 @@
 //! Lightweight-codec throughput: full encode (clip+quant+TU+CABAC) and
-//! decode, per level count, on activation-like tensors. This is the L3
-//! hot path — the §Perf targets in EXPERIMENTS.md come from here.
+//! decode, per level count, on activation-like tensors — plus the tiled
+//! batched codec on a paper-scale 256x56x56 tensor, single-thread vs
+//! N-thread. This is the L3 hot path.
+//!
+//! Writes a machine-readable baseline to `BENCH_codec.json` (override the
+//! path with `LWFC_BENCH_JSON`; set it to `-` to skip the write) so later
+//! PRs have a perf trajectory to compare against.
 
-use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::{batch, decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
 use lwfc::util::bench::{black_box, Bench};
+use lwfc::util::json::{num, s, Json};
 use lwfc::util::prop::Gen;
+use lwfc::util::threadpool::ThreadPool;
 
 fn main() {
     let mut b = Bench::new();
@@ -40,4 +47,79 @@ fn main() {
         }
         black_box(acc)
     });
+
+    // ---- batched codec: 256x56x56 tensor, thread scaling ----------------
+    let big_n = 256 * 56 * 56; // 802,816 elements — the acceptance tensor
+    let big = g.activation_vec(big_n, 0.3);
+    let cfg = EncoderConfig::classification(
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, 4)),
+        32,
+    );
+
+    println!("-- batched encode (256x56x56, N=4) --");
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        b.run(
+            &format!("batched_encode/t{threads}"),
+            Some(big_n as u64),
+            || {
+                black_box(
+                    batch::encode_batched(&cfg, &big, batch::DEFAULT_TILE_ELEMS, &pool)
+                        .bytes
+                        .len(),
+                )
+            },
+        );
+    }
+
+    println!("-- batched decode (256x56x56, N=4) --");
+    let encoded = batch::encode_batched(&cfg, &big, batch::DEFAULT_TILE_ELEMS, &ThreadPool::new(4));
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        b.run(
+            &format!("batched_decode/t{threads}"),
+            Some(big_n as u64),
+            || black_box(batch::decode_batched(&encoded.bytes, &pool).unwrap().0.len()),
+        );
+    }
+
+    let speedup = |a: &str, z: &str| -> Option<f64> {
+        Some(b.find(a)?.median_s / b.find(z)?.median_s)
+    };
+    if let Some(sx) = speedup("batched_encode/t1", "batched_encode/t4") {
+        println!("\nbatched encode speedup t4 vs t1: {sx:.2}x (target: >= 2x)");
+    }
+    if let Some(sx) = speedup("batched_decode/t1", "batched_decode/t4") {
+        println!("batched decode speedup t4 vs t1: {sx:.2}x");
+    }
+
+    // ---- machine-readable baseline --------------------------------------
+    // Default to the committed baseline at the repo root (one level above
+    // the cargo package), independent of the bench's working directory.
+    let json_path = std::env::var("LWFC_BENCH_JSON").unwrap_or_else(|_| {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|repo_root| repo_root.join("BENCH_codec.json"))
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_codec.json"))
+            .to_string_lossy()
+            .into_owned()
+    });
+    if json_path != "-" {
+        let meta = vec![
+            ("bench", s("codec")),
+            ("tensor", s("256x56x56 f32 activations, N=4, tile 16384")),
+            (
+                "encode_speedup_t4_vs_t1",
+                speedup("batched_encode/t1", "batched_encode/t4").map_or(Json::Null, num),
+            ),
+            (
+                "decode_speedup_t4_vs_t1",
+                speedup("batched_decode/t1", "batched_decode/t4").map_or(Json::Null, num),
+            ),
+        ];
+        match b.write_json(std::path::Path::new(&json_path), meta) {
+            Ok(()) => println!("wrote {json_path}"),
+            Err(e) => eprintln!("could not write {json_path}: {e}"),
+        }
+    }
 }

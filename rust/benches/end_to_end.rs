@@ -1,17 +1,54 @@
-//! End-to-end serving benchmark over the real artifacts: requests/s and
-//! per-stage time through edge fwd -> encode -> decode -> cloud fwd.
-//! Skips (exit 0) if `make artifacts` has not run.
+//! End-to-end pipeline benchmarks.
+//!
+//! Part 1 (always runs): the codec leg of the pipeline — batched encode →
+//! wire bytes → batched decode on a paper-scale 256x56x56 feature tensor,
+//! single-thread vs N-thread, reporting the scaling curve.
+//!
+//! Part 2 (needs `make artifacts`; skips cleanly otherwise): the full
+//! serving stack (edge fwd → encode → queue → decode → cloud fwd),
+//! requests/s across edge-worker and codec-thread counts.
 
+use lwfc::codec::{batch, EncoderConfig, Quantizer, UniformQuantizer};
 use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
 use lwfc::runtime::Manifest;
+use lwfc::util::bench::{black_box, Bench};
+use lwfc::util::prop::Gen;
+use lwfc::util::threadpool::ThreadPool;
 
-fn main() {
-    let Ok(m) = Manifest::load(&Manifest::default_dir()) else {
-        println!("SKIP end_to_end bench: no artifacts (run `make artifacts`)");
-        return;
-    };
+fn codec_pipeline_bench() {
+    let mut b = Bench::new();
+    let mut g = Gen::new("e2e_codec_pipeline", 0);
+    let elements = 256 * 56 * 56; // the acceptance tensor: 256 x 56 x 56
+    let xs = g.activation_vec(elements, 0.3);
+    let cfg = EncoderConfig::classification(
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, 4)),
+        32,
+    );
+
+    println!("-- batched encode+decode round-trip (256x56x56) --");
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        b.run(
+            &format!("roundtrip/t{threads}"),
+            Some(elements as u64),
+            || {
+                let s = batch::encode_batched(&cfg, &xs, batch::DEFAULT_TILE_ELEMS, &pool);
+                let (out, _) = batch::decode_batched(&s.bytes, &pool).unwrap();
+                black_box(out.len())
+            },
+        );
+    }
+    if let (Some(t1), Some(t4)) = (b.find("roundtrip/t1"), b.find("roundtrip/t4")) {
+        println!(
+            "round-trip speedup t4/t1 = {:.2}x",
+            t1.median_s / t4.median_s
+        );
+    }
+}
+
+fn serving_bench(m: &Manifest) {
     let task = TaskKind::ClassifyResnet { split: 2 };
-    for workers in [1usize, 2, 4] {
+    for (workers, codec_threads) in [(1usize, 1usize), (2, 1), (2, 4), (4, 4)] {
         let cfg = ServeConfig {
             edge: EdgeConfig {
                 task,
@@ -23,21 +60,23 @@ fn main() {
                 val_seed: m.val_seed,
                 batch: m.serve_batch,
                 adaptive: None,
+                threads: codec_threads,
             },
             cloud: CloudConfig {
                 task,
                 val_seed: m.val_seed,
                 batch: m.serve_batch,
                 obj_threshold: 0.3,
+                threads: codec_threads,
             },
             edge_workers: workers,
             requests: 512,
             queue_capacity: 64,
             first_index: 0,
         };
-        match serve(&m, cfg) {
+        match serve(m, cfg) {
             Ok(r) => println!(
-                "edge_workers={workers}: {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, top1 {:.4}, {:.3} bits/elem",
+                "edge_workers={workers} codec_threads={codec_threads}: {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, top1 {:.4}, {:.3} bits/elem",
                 r.throughput_rps,
                 r.latency_p50_s * 1e3,
                 r.latency_p99_s * 1e3,
@@ -49,5 +88,13 @@ fn main() {
                 std::process::exit(1);
             }
         }
+    }
+}
+
+fn main() {
+    codec_pipeline_bench();
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => serving_bench(&m),
+        Err(_) => println!("SKIP serving bench: no artifacts (run `make artifacts`)"),
     }
 }

@@ -7,6 +7,7 @@
 //! branch-lean; see `rust/benches/codec.rs` for the throughput targets
 //! (§III-E complexity claims).
 
+pub mod batch;
 pub mod binarize;
 pub mod bitstream;
 pub mod cabac;
@@ -15,7 +16,11 @@ pub mod header;
 pub mod stream;
 pub mod uniform;
 
+pub use batch::{
+    decode_any, decode_batched, decode_batched_tolerant, encode_batched, BatchReport,
+    BatchedStream, DEFAULT_TILE_ELEMS,
+};
 pub use ecq::{design as design_ecq, EcqDesign, EcqParams, NonUniformQuantizer};
-pub use header::{DetInfo, Header, QuantKind, StreamKind};
+pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind};
 pub use stream::{decode, decode_indices, EncodedStream, Encoder, EncoderConfig, Quantizer};
 pub use uniform::{clip, UniformQuantizer};

@@ -11,6 +11,7 @@ use crate::data;
 use crate::eval::{decode_grid, Detection};
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 /// Static (Send) configuration for building a [`CloudWorker`] in-thread.
 #[derive(Clone, Debug)]
@@ -20,6 +21,9 @@ pub struct CloudConfig {
     pub batch: usize,
     /// Detection objectness threshold.
     pub obj_threshold: f32,
+    /// Codec threads for parallel substream decode (batched containers
+    /// decode tile-parallel; legacy single streams ignore this).
+    pub threads: usize,
 }
 
 /// Timing breakdown accumulated by the cloud worker.
@@ -36,6 +40,7 @@ pub struct CloudWorker {
     config: CloudConfig,
     feature_shape: Vec<usize>, // batched [B, H, W, C]
     grid: usize,
+    pool: ThreadPool,
     pub times: CloudTimes,
 }
 
@@ -55,6 +60,7 @@ impl CloudWorker {
             exe: rt.load(cloud_path)?,
             grid: manifest.detect_grid,
             feature_shape: feature,
+            pool: ThreadPool::new(config.threads.max(1)),
             config,
             times: CloudTimes::default(),
         })
@@ -69,8 +75,12 @@ impl CloudWorker {
         let t0 = Instant::now();
         let mut feat = Vec::with_capacity(self.config.batch * per_item);
         for item in items {
+            // `decode_any` sniffs the wire format: tiled multi-substream
+            // containers decode tile-parallel on the worker's pool, legacy
+            // single streams fall through to the sequential decoder.
             let (values, _header) =
-                codec::decode(&item.bytes, item.elements).map_err(anyhow::Error::msg)?;
+                codec::decode_any(&item.bytes, item.elements, &self.pool)
+                    .map_err(anyhow::Error::msg)?;
             debug_assert_eq!(values.len(), per_item);
             feat.extend_from_slice(&values);
         }

@@ -12,10 +12,14 @@ use anyhow::Result;
 
 use super::protocol::{CompressedItem, QuantSpec, Request, TaskKind};
 use super::stats::{AdaptiveClipController, AdaptiveConfig};
-use crate::codec::{DetInfo, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use crate::codec::{
+    encode_batched, DetInfo, Encoder, EncoderConfig, Quantizer, UniformQuantizer,
+    DEFAULT_TILE_ELEMS,
+};
 use crate::data;
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 /// Static (Send) configuration for building an [`EdgeWorker`] in-thread.
 #[derive(Clone, Debug)]
@@ -26,6 +30,10 @@ pub struct EdgeConfig {
     pub batch: usize,
     /// Optional adaptive clip-range control (None = static range).
     pub adaptive: Option<AdaptiveConfig>,
+    /// Codec threads per edge device. 1 = legacy single-stream wire format;
+    /// > 1 = tiled multi-substream container encoded on a worker-local
+    /// [`ThreadPool`] (`codec::batch`).
+    pub threads: usize,
 }
 
 /// Timing breakdown accumulated by an edge worker.
@@ -45,6 +53,8 @@ pub struct EdgeWorker {
     input_shape: Vec<usize>,
     feature_elems: usize,
     adaptive: Option<AdaptiveClipController>,
+    /// Present iff `config.threads > 1`: drives batched tile encoding.
+    pool: Option<ThreadPool>,
     pub times: EdgeTimes,
 }
 
@@ -88,6 +98,7 @@ impl EdgeWorker {
         let adaptive = config
             .adaptive
             .map(|cfg| AdaptiveClipController::new(cfg, config.quant.c_max_hint()));
+        let pool = (config.threads > 1).then(|| ThreadPool::new(config.threads));
         Ok(Self {
             exe,
             encoder: Encoder::new(enc_cfg),
@@ -95,6 +106,7 @@ impl EdgeWorker {
             input_shape,
             config,
             adaptive,
+            pool,
             times: EdgeTimes::default(),
         })
     }
@@ -153,13 +165,22 @@ impl EdgeWorker {
                     ));
                 }
             }
-            let stream = self.encoder.encode(item);
-            self.times.bytes += stream.bytes.len() as u64;
+            let (bytes, elements) = match &self.pool {
+                Some(pool) => {
+                    let s = encode_batched(&self.encoder.config, item, DEFAULT_TILE_ELEMS, pool);
+                    (s.bytes, s.elements)
+                }
+                None => {
+                    let s = self.encoder.encode(item);
+                    (s.bytes, s.elements)
+                }
+            };
+            self.times.bytes += bytes.len() as u64;
             out.push(CompressedItem {
                 id: r.id,
                 image_index: r.image_index,
-                bytes: stream.bytes,
-                elements: stream.elements,
+                bytes,
+                elements,
                 arrived: r.arrived,
                 encoded: Instant::now(),
             });

@@ -14,6 +14,13 @@
 //! Bounded queues provide backpressure end to end; every stage thread
 //! owns its PJRT client (xla handles are not Send). This is the paper's
 //! Fig. 1 deployment with the codec on the wire.
+//!
+//! Codec parallelism: when `EdgeConfig::threads > 1` each edge device
+//! encodes its split tensor as a tiled multi-substream container
+//! (`codec::batch`) on a worker-local thread pool, and the cloud worker
+//! decodes the tiles in parallel (`CloudConfig::threads`). The wire format
+//! is self-describing — the cloud ingest path accepts batched containers
+//! and legacy single streams interchangeably.
 
 use std::thread;
 use std::time::Instant;

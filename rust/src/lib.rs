@@ -4,12 +4,13 @@
 //! Compression of Intermediate Neural Network Features for Collaborative
 //! Intelligence"* (IEEE OJCAS 2021, DOI 10.1109/OJCAS.2021.3072884).
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (build/test/bench commands in `rust/README.md`):
 //! * **L3 (this crate)** — the collaborative-intelligence coordinator:
-//!   edge device pool → lightweight codec → cloud workers, plus the
-//!   analytic clipping models, the entropy-constrained quantizer design,
-//!   the picture-codec baseline, and the experiment harness that
-//!   regenerates every figure and table of the paper.
+//!   edge device pool → lightweight codec (single-stream or thread-parallel
+//!   tiled batches, [`codec::batch`]) → cloud workers, plus the analytic
+//!   clipping models, the entropy-constrained quantizer design, the
+//!   picture-codec baseline, and the experiment harness that regenerates
+//!   every figure and table of the paper.
 //! * **L2 (python/compile/model.py)** — JAX split networks, AOT-lowered to
 //!   HLO text artifacts executed via PJRT ([`runtime`]).
 //! * **L1 (python/compile/kernels/)** — Pallas fused fake-quantization and

@@ -3,22 +3,25 @@
 //!
 //! ```text
 //! lwfc experiment <id> [--val N] [--out DIR] [--net NAME]   regenerate a paper figure/table
-//! lwfc serve [--net NAME] [--requests N] [--levels N] ...   run the edge→cloud pipeline
+//! lwfc serve [--net NAME] [--requests N] [--threads N] ...  run the edge→cloud pipeline
 //! lwfc fit-model [--mean X --var Y | --net NAME]            fit λ,μ + optimal clip ranges
-//! lwfc encode --input F --output F [--levels N ...]         compress a raw f32 tensor file
-//! lwfc decode --input F --output F --elements N             decompress to raw f32
+//! lwfc encode --input F --output F [--threads N ...]        compress a raw f32 tensor file
+//! lwfc decode --input F --output F [--elements N]           decompress to raw f32
 //! lwfc list                                                 list experiments
 //! ```
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
-use lwfc::codec::{decode as codec_decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::{
+    batch, decode as codec_decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer,
+};
 use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
 use lwfc::experiments::{self, common::ExpCtx};
 use lwfc::modeling;
 use lwfc::runtime::Manifest;
 use lwfc::util::cli::Command;
+use lwfc::util::threadpool::ThreadPool;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -116,12 +119,14 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt("levels", "4", "quantizer levels N")
         .opt("c-max", "", "clip maximum (default: model-optimal)")
         .opt("edge-workers", "2", "simulated edge devices")
+        .opt("threads", "1", "codec threads per worker (tiled batched codec when > 1)")
         .opt("artifacts", "", "artifact directory")
         .flag("adaptive", "enable the adaptive clip-range controller");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let m = manifest_from(a.get("artifacts"))?;
     let task = task_of(a.get("net"))?;
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
+    let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
 
     let stats = match task {
         TaskKind::ClassifyResnet { split } => m.resnet_split(split)?.stats,
@@ -155,12 +160,14 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
                 levels,
                 ..Default::default()
             }),
+            threads,
         },
         cloud: CloudConfig {
             task,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             obj_threshold: 0.3,
+            threads,
         },
         edge_workers: a.get_usize("edge-workers").map_err(|e| anyhow!(e))?,
         requests: a.get_usize("requests").map_err(|e| anyhow!(e))?,
@@ -256,7 +263,9 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
         .req("output", "bit-stream output file")
         .opt("levels", "4", "quantizer levels N")
         .opt("c-min", "0", "clip minimum")
-        .opt("c-max", "", "clip maximum (default: model fit from the data)");
+        .opt("c-max", "", "clip maximum (default: model fit from the data)")
+        .opt("threads", "1", "encode threads (writes the tiled batched container when > 1)")
+        .opt("tile", "16384", "tile size in elements for the batched container");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let data = read_f32_file(a.get("input"))?;
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
@@ -272,15 +281,28 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     } else {
         a.get_f64("c-max").map_err(|e| anyhow!(e))? as f32
     };
+    let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
+    let tile = a.get_usize("tile").map_err(|e| anyhow!(e))?.max(1);
     let q = Quantizer::Uniform(UniformQuantizer::new(c_min, c_max, levels));
-    let mut enc = Encoder::new(EncoderConfig::classification(q, 0));
-    let stream = enc.encode(&data);
-    std::fs::write(a.get("output"), &stream.bytes)?;
+    let cfg = EncoderConfig::classification(q, 0);
+    let (bytes, elements, substreams, bpe) = if threads > 1 {
+        let pool = ThreadPool::new(threads);
+        let s = batch::encode_batched(&cfg, &data, tile, &pool);
+        let bpe = s.bits_per_element();
+        (s.bytes, s.elements, s.substreams, bpe)
+    } else {
+        let mut enc = Encoder::new(cfg);
+        let s = enc.encode(&data);
+        let bpe = s.bits_per_element();
+        (s.bytes, s.elements, 1, bpe)
+    };
+    std::fs::write(a.get("output"), &bytes)?;
     println!(
-        "{} elements -> {} bytes ({:.4} bits/element)",
-        stream.elements,
-        stream.bytes.len(),
-        stream.bits_per_element()
+        "{} elements -> {} bytes ({bpe:.4} bits/element, {} substream{})",
+        elements,
+        bytes.len(),
+        substreams,
+        if substreams == 1 { "" } else { "s" }
     );
     Ok(())
 }
@@ -289,11 +311,27 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
     let cmd = Command::new("lwfc decode", "decompress a lwfc bit-stream to raw f32")
         .req("input", "bit-stream input file")
         .req("output", "raw f32 output file")
-        .req("elements", "element count (from the tensor shape)");
+        .opt(
+            "elements",
+            "0",
+            "element count (required for legacy single streams; batched containers are self-describing)",
+        )
+        .opt("threads", "1", "decode threads for batched containers");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let bytes = std::fs::read(a.get("input"))?;
-    let elements = a.get_usize("elements").map_err(|e| anyhow!(e))?;
-    let (values, header) = codec_decode(&bytes, elements).map_err(anyhow::Error::msg)?;
+    let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
+    let (values, header) = if lwfc::codec::is_batched(&bytes) {
+        let pool = ThreadPool::new(threads);
+        batch::decode_batched(&bytes, &pool).map_err(anyhow::Error::msg)?
+    } else {
+        let elements = a.get_usize("elements").map_err(|e| anyhow!(e))?;
+        if elements == 0 {
+            return Err(anyhow!(
+                "--elements is required to decode a legacy single-stream file"
+            ));
+        }
+        codec_decode(&bytes, elements).map_err(anyhow::Error::msg)?
+    };
     let mut out = Vec::with_capacity(values.len() * 4);
     for v in &values {
         out.extend_from_slice(&v.to_le_bytes());

@@ -123,7 +123,47 @@ impl Bench {
     pub fn find(&self, name: &str) -> Option<&BenchResult> {
         self.results.iter().find(|r| r.name == name)
     }
+
+    /// Serialize all measured results (plus caller metadata) as JSON — the
+    /// machine-readable perf baseline committed as `BENCH_codec.json`.
+    pub fn to_json(&self, meta: Vec<(&str, Json)>) -> Json {
+        let results = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    let mut fields = vec![
+                        ("name", json_s(&r.name)),
+                        ("median_s", Json::Num(r.median_s)),
+                        ("mean_s", Json::Num(r.mean_s)),
+                        ("mad_s", Json::Num(r.mad_s)),
+                        ("iters", Json::Num(r.iters as f64)),
+                    ];
+                    if let Some(e) = r.elements {
+                        fields.push(("elements", Json::Num(e as f64)));
+                    }
+                    if let Some(t) = r.throughput() {
+                        fields.push(("elements_per_s", Json::Num(t)));
+                    }
+                    json_obj(fields)
+                })
+                .collect(),
+        );
+        let mut top = meta;
+        top.push(("results", results));
+        json_obj(top)
+    }
+
+    /// Write `to_json` output to a file, pretty-printed.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        meta: Vec<(&str, Json)>,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(meta).to_string_pretty() + "\n")
+    }
 }
+
+use crate::util::json::{obj as json_obj, s as json_s, Json};
 
 /// Optimization barrier (std::hint::black_box re-export for benches).
 #[inline]

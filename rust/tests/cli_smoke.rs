@@ -1,0 +1,191 @@
+//! CLI smoke tests: run the real `lwfc` binary (`CARGO_BIN_EXE_lwfc`) on
+//! temp files and check `list`, `encode`, and `decode` end to end, in both
+//! the legacy single-stream and the tiled batched wire formats.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use lwfc::codec::UniformQuantizer;
+
+fn lwfc() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_lwfc"))
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lwfc_cli_smoke_{}_{name}", std::process::id()));
+    p
+}
+
+fn write_f32(path: &Path, xs: &[f32]) {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).unwrap();
+}
+
+fn read_f32(path: &Path) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn test_tensor(n: usize) -> Vec<f32> {
+    // Deterministic activation-like values spanning below/inside/above the
+    // clip range used in the tests.
+    (0..n)
+        .map(|i| ((i as f32 * 0.377).sin() * 4.0 + 2.0) * if i % 13 == 0 { -0.25 } else { 1.0 })
+        .collect()
+}
+
+#[test]
+fn list_prints_experiments() {
+    let out = lwfc().arg("list").output().unwrap();
+    assert!(out.status.success(), "list failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fig2"), "missing fig2 in: {stdout}");
+    assert!(stdout.contains("sec3e"), "missing sec3e in: {stdout}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = lwfc().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown command"), "stderr: {stderr}");
+}
+
+#[test]
+fn encode_decode_roundtrip_single_stream() {
+    let n = 4096usize;
+    let xs = test_tensor(n);
+    let input = temp_path("single.f32");
+    let stream = temp_path("single.lwfc");
+    let output = temp_path("single.out.f32");
+    write_f32(&input, &xs);
+
+    let enc = lwfc()
+        .args(["encode", "--input"])
+        .arg(&input)
+        .arg("--output")
+        .arg(&stream)
+        .args(["--levels", "4", "--c-min", "0", "--c-max", "6"])
+        .output()
+        .unwrap();
+    assert!(
+        enc.status.success(),
+        "encode failed: {}",
+        String::from_utf8_lossy(&enc.stderr)
+    );
+
+    let dec = lwfc()
+        .args(["decode", "--input"])
+        .arg(&stream)
+        .arg("--output")
+        .arg(&output)
+        .args(["--elements", &n.to_string()])
+        .output()
+        .unwrap();
+    assert!(
+        dec.status.success(),
+        "decode failed: {}",
+        String::from_utf8_lossy(&dec.stderr)
+    );
+
+    let got = read_f32(&output);
+    let q = UniformQuantizer::new(0.0, 6.0, 4);
+    assert_eq!(got.len(), n);
+    for (i, (&x, &y)) in xs.iter().zip(&got).enumerate() {
+        assert_eq!(y, q.fake_quant(x), "element {i}");
+    }
+    for p in [input, stream, output] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn encode_decode_roundtrip_batched() {
+    let n = 40_000usize;
+    let xs = test_tensor(n);
+    let input = temp_path("batched.f32");
+    let stream = temp_path("batched.lwfc");
+    let output = temp_path("batched.out.f32");
+    write_f32(&input, &xs);
+
+    let enc = lwfc()
+        .args(["encode", "--input"])
+        .arg(&input)
+        .arg("--output")
+        .arg(&stream)
+        .args(["--levels", "4", "--c-min", "0", "--c-max", "6"])
+        .args(["--threads", "4", "--tile", "4096"])
+        .output()
+        .unwrap();
+    assert!(
+        enc.status.success(),
+        "batched encode failed: {}",
+        String::from_utf8_lossy(&enc.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&enc.stdout);
+    assert!(stdout.contains("substreams"), "stdout: {stdout}");
+
+    // Batched containers are self-describing: no --elements needed.
+    let dec = lwfc()
+        .args(["decode", "--input"])
+        .arg(&stream)
+        .arg("--output")
+        .arg(&output)
+        .args(["--threads", "4"])
+        .output()
+        .unwrap();
+    assert!(
+        dec.status.success(),
+        "batched decode failed: {}",
+        String::from_utf8_lossy(&dec.stderr)
+    );
+
+    let got = read_f32(&output);
+    let q = UniformQuantizer::new(0.0, 6.0, 4);
+    assert_eq!(got.len(), n);
+    for (i, (&x, &y)) in xs.iter().zip(&got).enumerate() {
+        assert_eq!(y, q.fake_quant(x), "element {i}");
+    }
+    for p in [input, stream, output] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn decode_legacy_without_elements_is_an_error() {
+    let n = 256usize;
+    let xs = test_tensor(n);
+    let input = temp_path("noelem.f32");
+    let stream = temp_path("noelem.lwfc");
+    write_f32(&input, &xs);
+    let enc = lwfc()
+        .args(["encode", "--input"])
+        .arg(&input)
+        .arg("--output")
+        .arg(&stream)
+        .args(["--levels", "4", "--c-max", "6"])
+        .output()
+        .unwrap();
+    assert!(enc.status.success());
+
+    let dec = lwfc()
+        .args(["decode", "--input"])
+        .arg(&stream)
+        .arg("--output")
+        .arg(&temp_path("noelem.out.f32"))
+        .output()
+        .unwrap();
+    assert!(!dec.status.success(), "decode without --elements must fail");
+    let stderr = String::from_utf8_lossy(&dec.stderr);
+    assert!(stderr.contains("--elements"), "stderr: {stderr}");
+    for p in [input, stream] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -3,11 +3,12 @@
 //! failure injection on corrupted bit-streams.
 
 use lwfc::codec::{
-    decode, decode_indices, design_ecq, EcqParams, Encoder, EncoderConfig, Quantizer,
+    batch, decode, decode_indices, design_ecq, EcqParams, Encoder, EncoderConfig, Quantizer,
     UniformQuantizer,
 };
 use lwfc::prop_assert;
 use lwfc::util::prop::{prop_check, Gen};
+use lwfc::util::threadpool::ThreadPool;
 
 fn uniform_cfg(levels: usize, c_max: f32) -> EncoderConfig {
     EncoderConfig::classification(
@@ -190,4 +191,159 @@ fn rate_reflects_entropy_not_levels() {
     let mut enc = Encoder::new(uniform_cfg(8, 2.0));
     let bpe = enc.encode(&xs).bits_per_element();
     assert!(bpe < 0.1, "constant tensor cost {bpe} bits/element");
+}
+
+#[test]
+fn batched_decode_equals_sequential_fake_quant_for_any_shape() {
+    // The tentpole equivalence property: for ANY tensor, tile size and
+    // thread count, batched decode output is bit-identical to the
+    // single-stream fake-quant path.
+    prop_check("batch_equivalence", 30, |g: &mut Gen| {
+        let n = g.usize_in(0, 60_000);
+        let levels = g.usize_in(2, 10);
+        let c_max = g.f32_in(0.3, 12.0);
+        let tile = g.usize_in(1, 8_000);
+        let threads = g.usize_in(1, 8);
+        let scale = g.f32_in(0.1, 2.0);
+        let xs = g.activation_vec(n, scale);
+        let cfg = uniform_cfg(levels, c_max);
+        let q = cfg.quantizer.clone();
+        let pool = ThreadPool::new(threads);
+
+        let batched = batch::encode_batched(&cfg, &xs, tile, &pool);
+        prop_assert!(
+            batched.substreams == n.div_ceil(tile.max(1)),
+            "substream count {} for n={n} tile={tile}",
+            batched.substreams
+        );
+        if n == 0 {
+            prop_assert!(
+                batch::decode_batched(&batched.bytes, &pool).is_err(),
+                "empty container must not decode to a header"
+            );
+            return Ok(());
+        }
+        let (out, header) =
+            batch::decode_batched(&batched.bytes, &pool).map_err(|e| e.to_string())?;
+        prop_assert!(header.levels == levels, "header levels");
+        prop_assert!(out.len() == n, "length {} != {n}", out.len());
+        for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+            prop_assert!(
+                y == q.fake_quant(x),
+                "elem {i}: {y} != fake_quant {} (n={n} tile={tile} threads={threads})",
+                q.fake_quant(x)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_bytes_do_not_depend_on_thread_count() {
+    prop_check("batch_determinism", 10, |g: &mut Gen| {
+        let n = g.usize_in(1, 20_000);
+        let tile = g.usize_in(16, 4_000);
+        let xs = g.activation_vec(n, 0.5);
+        let cfg = uniform_cfg(4, 2.0);
+        let a = batch::encode_batched(&cfg, &xs, tile, &ThreadPool::new(1));
+        let b = batch::encode_batched(&cfg, &xs, tile, &ThreadPool::new(g.usize_in(2, 8)));
+        prop_assert!(a.bytes == b.bytes, "bytes differ across thread counts (n={n})");
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_substream_directory_is_rejected_never_panics() {
+    // Failure injection on the container metadata: any single corrupted
+    // byte in the prelude or in the structural directory fields must turn
+    // strict decode into Err (checksum-field flips may instead surface as
+    // per-substream corruption); nothing may panic.
+    prop_check("batch_dir_corruption", 60, |g: &mut Gen| {
+        let n = g.usize_in(64, 8_000);
+        let tile = g.usize_in(32, 1_024);
+        let xs = g.activation_vec(n, 0.5);
+        let cfg = uniform_cfg(4, 2.0);
+        let pool = ThreadPool::new(g.usize_in(1, 4));
+        let encoded = batch::encode_batched(&cfg, &xs, tile, &pool);
+
+        let dir_len = lwfc::codec::header::BATCH_PRELUDE_BYTES
+            + encoded.substreams * lwfc::codec::header::DIR_ENTRY_BYTES;
+        let i = g.usize_in(0, dir_len - 1);
+        let mut bad = encoded.bytes.clone();
+        bad[i] ^= (g.u64() as u8) | 1;
+
+        let in_checksum_field = i >= lwfc::codec::header::BATCH_PRELUDE_BYTES
+            && (i - lwfc::codec::header::BATCH_PRELUDE_BYTES)
+                % lwfc::codec::header::DIR_ENTRY_BYTES
+                >= 8;
+        let strict = batch::decode_batched(&bad, &pool);
+        prop_assert!(
+            strict.is_err(),
+            "corrupt metadata byte {i} accepted by strict decode (n={n} tile={tile})"
+        );
+        if in_checksum_field {
+            // A flipped checksum damages exactly one substream; the
+            // tolerant decoder must isolate it and keep the tensor shape.
+            let (out, report) =
+                batch::decode_batched_tolerant(&bad, &pool).map_err(|e| e.to_string())?;
+            prop_assert!(out.len() == n, "tolerant length {}", out.len());
+            let victim = (i - lwfc::codec::header::BATCH_PRELUDE_BYTES)
+                / lwfc::codec::header::DIR_ENTRY_BYTES;
+            prop_assert!(
+                report.corrupted == vec![victim],
+                "expected substream {victim} corrupted, got {:?}",
+                report.corrupted
+            );
+        } else {
+            // Structural damage: the whole container is unreadable, even
+            // tolerantly — but still an Err, not a panic.
+            prop_assert!(
+                batch::decode_batched_tolerant(&bad, &pool).is_err(),
+                "structural corruption at byte {i} not rejected"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_payload_is_isolated_to_its_substream() {
+    prop_check("batch_payload_corruption", 40, |g: &mut Gen| {
+        let n = g.usize_in(256, 10_000);
+        let tile = g.usize_in(64, 1_024);
+        let xs = g.activation_vec(n, 0.5);
+        let cfg = uniform_cfg(4, 2.0);
+        let q = cfg.quantizer.clone();
+        let pool = ThreadPool::new(2);
+        let encoded = batch::encode_batched(&cfg, &xs, tile, &pool);
+
+        let dir_len = lwfc::codec::header::BATCH_PRELUDE_BYTES
+            + encoded.substreams * lwfc::codec::header::DIR_ENTRY_BYTES;
+        let i = g.usize_in(dir_len, encoded.bytes.len() - 1);
+        let mut bad = encoded.bytes.clone();
+        bad[i] ^= (g.u64() as u8) | 1;
+
+        prop_assert!(
+            batch::decode_batched(&bad, &pool).is_err(),
+            "payload flip at {i} accepted by strict decode"
+        );
+        let (out, report) =
+            batch::decode_batched_tolerant(&bad, &pool).map_err(|e| e.to_string())?;
+        prop_assert!(out.len() == n, "tolerant decode length");
+        prop_assert!(
+            report.corrupted.len() == 1,
+            "exactly one substream should fail, got {:?}",
+            report.corrupted
+        );
+        let victim = report.corrupted[0];
+        for (j, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+            if j / tile != victim {
+                prop_assert!(
+                    y == q.fake_quant(x),
+                    "healthy element {j} perturbed (victim {victim})"
+                );
+            }
+        }
+        Ok(())
+    });
 }

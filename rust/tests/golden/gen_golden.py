@@ -1,0 +1,324 @@
+#!/usr/bin/env python3
+"""Generate the golden bit-stream fixtures for tests/golden_bitstreams.rs.
+
+This is a line-by-line port of the Rust encoder pipeline
+(rust/src/codec/{cabac,binarize,uniform,ecq,header}.rs): clip -> N-level
+quantization -> truncated-unary binarization -> LZMA-style binary range
+coder with 11-bit adaptive contexts -> 12-byte classification header.
+
+All arithmetic is integer (CABAC) or exactly-emulated IEEE f32
+(quantizer): a product/sum of two f32 values is exact in f64, so rounding
+the f64 result back to f32 reproduces Rust's f32 op bit-for-bit. Input
+values are additionally kept >= 1e-3 away from every quantizer decision
+boundary so no representation subtlety can flip an index.
+
+Run from this directory:  python3 gen_golden.py
+"""
+
+import struct
+
+PROB_BITS = 11
+PROB_ONE = 1 << PROB_BITS  # 2048
+PROB_INIT = PROB_ONE // 2  # 1024
+ADAPT_SHIFT = 5
+TOP = 1 << 24
+MASK32 = 0xFFFFFFFF
+
+
+def f32(x):
+    """Round a Python float to the nearest IEEE-754 binary32 value."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+class Context:
+    __slots__ = ("p0",)
+
+    def __init__(self):
+        self.p0 = PROB_INIT
+
+    def update(self, bit):
+        if bit:
+            self.p0 -= self.p0 >> ADAPT_SHIFT
+        else:
+            self.p0 += (PROB_ONE - self.p0) >> ADAPT_SHIFT
+
+
+class CabacEncoder:
+    def __init__(self):
+        self.low = 0
+        self.range = MASK32
+        self.cache = 0
+        self.cache_size = 1
+        self.out = bytearray()
+
+    def shift_low(self):
+        if (self.low & MASK32) < 0xFF000000 or (self.low >> 32) != 0:
+            carry = (self.low >> 32) & 0xFF
+            temp = self.cache
+            while True:
+                self.out.append((temp + carry) & 0xFF)
+                temp = 0xFF
+                self.cache_size -= 1
+                if self.cache_size == 0:
+                    break
+            self.cache = (self.low >> 24) & 0xFF
+        self.cache_size += 1
+        self.low = ((self.low & MASK32) << 8) & MASK32
+
+    def encode(self, ctx, bit):
+        bound = (self.range >> PROB_BITS) * ctx.p0  # always < 2^32
+        if not bit:
+            self.range = bound
+        else:
+            self.low += bound
+            self.range -= bound
+        ctx.update(bit)
+        while self.range < TOP:
+            self.range = (self.range << 8) & MASK32
+            self.shift_low()
+
+    def finish(self):
+        for _ in range(5):
+            self.shift_low()
+        return bytes(self.out)
+
+
+class CabacDecoder:
+    def __init__(self, data):
+        self.data = data
+        self.pos = 1  # first byte is the encoder's initial cache (0)
+        self.code = 0
+        self.range = MASK32
+        for _ in range(4):
+            self.code = ((self.code << 8) | self.next_byte()) & MASK32
+
+    def next_byte(self):
+        b = self.data[self.pos] if self.pos < len(self.data) else 0
+        self.pos += 1
+        return b
+
+    def decode(self, ctx):
+        bound = (self.range >> PROB_BITS) * ctx.p0
+        if self.code < bound:
+            self.range = bound
+            bit = False
+        else:
+            self.code -= bound
+            self.range -= bound
+            bit = True
+        ctx.update(bit)
+        while self.range < TOP:
+            self.range = (self.range << 8) & MASK32
+            self.code = ((self.code << 8) | self.next_byte()) & MASK32
+        return bit
+
+
+def num_contexts(levels):
+    return max(levels - 1, 1)
+
+
+def encode_tu(n, levels, emit):
+    for pos in range(n):
+        emit(pos, True)
+    if n + 1 != levels:
+        emit(n, False)
+
+
+def decode_tu(levels, next_bit):
+    n = 0
+    while n + 1 < levels:
+        if next_bit(n):
+            n += 1
+        else:
+            break
+    return n
+
+
+def clip(x, c_min, c_max):
+    if x >= c_max:
+        return c_max
+    if x <= c_min:
+        return c_min
+    return x  # NaN never appears in the fixtures
+
+
+def uniform_index(x, c_min, c_max, levels):
+    """Rust UniformQuantizer::index with exact f32 emulation."""
+    scale = f32((levels - 1) / (c_max - c_min))
+    xc = clip(f32(x), f32(c_min), f32(c_max))
+    v = f32(f32((xc - f32(c_min)) * scale) + 0.5)
+    return int(v)  # truncation; argument is >= 0
+
+
+def ecq_index(x, recon, thresholds, c_min, c_max):
+    xc = clip(f32(x), f32(c_min), f32(c_max))
+    n = 0
+    for t in thresholds:
+        if xc >= f32(t):
+            n += 1
+        else:
+            break
+    return n
+
+
+def header_bytes(quant_kind, levels, c_min, c_max, img, recon=None):
+    out = bytearray()
+    out.append(0x00 | (quant_kind << 4))  # classification | quant nibble
+    out.append(levels)
+    out += struct.pack("<f", c_min)
+    out += struct.pack("<f", c_max)
+    out.append(img)
+    out.append(img)
+    if quant_kind == 1:
+        assert recon is not None and len(recon) == levels
+        for r in recon:
+            out += struct.pack("<f", r)
+    return bytes(out)
+
+
+def encode_stream(indices, levels, head):
+    ctxs = [Context() for _ in range(num_contexts(levels))]
+    enc = CabacEncoder()
+    for n in indices:
+        encode_tu(n, levels, lambda pos, bit: enc.encode(ctxs[pos], bit))
+    return head + enc.finish()
+
+
+def decode_stream_indices(payload, levels, count):
+    """Decode CABAC payload (header already stripped) back to indices."""
+    ctxs = [Context() for _ in range(num_contexts(levels))]
+    dec = CabacDecoder(payload)
+    return [decode_tu(levels, lambda pos: dec.decode(ctxs[pos])) for _ in range(count)]
+
+
+# --------------------------------------------------------------------------
+# Port self-checks (mirror rust/src/codec/cabac.rs unit-test pins).
+# --------------------------------------------------------------------------
+
+def self_check():
+    # Hand-derived micro-vector: one `false` bit with a fresh context.
+    # bound = (0xFFFFFFFF >> 11) * 1024 = 0x7FFFFC00; range stays >= TOP,
+    # finish emits the zero cache then four zero low bytes.
+    e = CabacEncoder()
+    e.encode(Context(), False)
+    assert e.finish() == b"\x00\x00\x00\x00\x00", "micro-vector false"
+
+    # Encode/decode roundtrip, multi-context, mixed skew.
+    import random
+
+    rng = random.Random(1234)
+    bits = [rng.random() < 0.2 for _ in range(20000)]
+    ctxs = [Context() for _ in range(3)]
+    enc = CabacEncoder()
+    for i, b in enumerate(bits):
+        enc.encode(ctxs[i % 3], b)
+    data = enc.finish()
+    dctxs = [Context() for _ in range(3)]
+    dec = CabacDecoder(data)
+    for i, b in enumerate(bits):
+        assert dec.decode(dctxs[i % 3]) == b, f"roundtrip bit {i}"
+
+    # Constant stream nearly free (Rust test: 100k zeros < 350 bytes).
+    ctx = Context()
+    enc = CabacEncoder()
+    for _ in range(100000):
+        enc.encode(ctx, False)
+    n = len(enc.finish())
+    assert n < 350, f"constant stream took {n} bytes"
+
+    # Skewed stream compresses (Rust test: p=1/16 under 0.40 bits/bit).
+    rng = random.Random(8)
+    ctx = Context()
+    enc = CabacEncoder()
+    nbits = 64000
+    for _ in range(nbits):
+        enc.encode(ctx, rng.randrange(16) == 0)
+    bpb = len(enc.finish()) * 8.0 / nbits
+    assert bpb < 0.40, f"bits/bit {bpb}"
+
+    # TU matches the paper's 4-level example: 0,10,110,111.
+    for n, want in [(0, [False]), (1, [True, False]), (2, [True, True, False]), (3, [True, True, True])]:
+        got = []
+        encode_tu(n, 4, lambda _p, b: got.append(b))
+        assert got == want, f"TU {n}"
+
+    print("self-checks passed")
+
+
+# --------------------------------------------------------------------------
+# Fixture generation.
+# --------------------------------------------------------------------------
+
+def gen_inputs(seed, n, boundaries, lo, hi, margin=1e-3):
+    """Deterministic activation-like f32 values, all >= margin away from
+    every quantizer decision boundary (after f32 rounding)."""
+    import random
+
+    rng = random.Random(seed)
+    out = []
+    while len(out) < n:
+        u = rng.random()
+        if u < 0.15:
+            x = -rng.random() * 1.5  # below range -> clips to c_min
+        elif u < 0.25:
+            x = hi + rng.random() * 3.0  # above range -> clips to c_max
+        else:
+            x = rng.random() * (hi - lo) + lo
+        xf = f32(x)
+        if all(abs(xf - b) > margin for b in boundaries):
+            out.append(xf)
+    return out
+
+
+def write_fixture(stem, values, stream):
+    with open(stem + ".f32", "wb") as f:
+        for v in values:
+            f.write(struct.pack("<f", v))
+    with open(stem + ".lwfc", "wb") as f:
+        f.write(stream)
+    print(f"{stem}: {len(values)} elements -> {len(stream)} bytes")
+
+
+def main():
+    self_check()
+
+    n = 512
+    img = 32
+
+    # ---- uniform, N=4, clip [0, 6]: boundaries at 1, 3, 5 ----------------
+    c_min, c_max, levels = 0.0, 6.0, 4
+    xs = gen_inputs(42, n, [1.0, 3.0, 5.0], c_min, c_max)
+    idx = [uniform_index(x, c_min, c_max, levels) for x in xs]
+    assert set(idx) == {0, 1, 2, 3}, "fixture must exercise every level"
+    head = header_bytes(0, levels, c_min, c_max, img)
+    stream = encode_stream(idx, levels, head)
+    assert decode_stream_indices(stream[len(head):], levels, n) == idx
+    write_fixture("uniform_n4", xs, stream)
+
+    # ---- uniform, N=2 (the specialized 1-bit encoder arm): boundary 3 ----
+    c_min, c_max, levels = 0.0, 6.0, 2
+    xs = gen_inputs(43, n, [3.0], c_min, c_max)
+    idx = [uniform_index(x, c_min, c_max, levels) for x in xs]
+    assert set(idx) == {0, 1}
+    head = header_bytes(0, levels, c_min, c_max, img)
+    stream = encode_stream(idx, levels, head)
+    assert decode_stream_indices(stream[len(head):], levels, n) == idx
+    write_fixture("uniform_n2", xs, stream)
+
+    # ---- entropy-constrained, N=4: hand-pinned design ---------------------
+    # recon/thresholds chosen like a pinned Algorithm-1 output (x̂_0 = c_min,
+    # x̂_3 = c_max); exact f32 values so both sides agree bit-for-bit.
+    c_min, c_max, levels = 0.0, 6.0, 4
+    recon = [0.0, 1.0, 2.5, 6.0]
+    thresholds = [0.5, 1.75, 4.25]
+    xs = gen_inputs(44, n, thresholds, c_min, c_max)
+    idx = [ecq_index(x, recon, thresholds, c_min, c_max) for x in xs]
+    assert set(idx) == {0, 1, 2, 3}
+    head = header_bytes(1, levels, c_min, c_max, img, recon)
+    stream = encode_stream(idx, levels, head)
+    assert decode_stream_indices(stream[len(head):], levels, n) == idx
+    write_fixture("ecq_n4", xs, stream)
+
+
+if __name__ == "__main__":
+    main()

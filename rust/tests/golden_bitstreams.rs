@@ -1,0 +1,112 @@
+//! Golden bit-stream vectors: the wire format is pinned byte-for-byte so
+//! codec refactors cannot silently change it. Fixtures live in
+//! `tests/golden/` (raw little-endian f32 input, expected encoded bytes)
+//! and were produced by `tests/golden/gen_golden.py`, a line-by-line port
+//! of this codec with its own self-checks.
+//!
+//! Three vectors cover the three encoder paths: the generic truncated-unary
+//! path (uniform N=4), the specialized 1-bit path (uniform N=2), and the
+//! entropy-constrained path with an in-band reconstruction table (ECQ N=4).
+
+use lwfc::codec::{
+    decode, decode_indices, Encoder, EncoderConfig, NonUniformQuantizer, QuantKind, Quantizer,
+    UniformQuantizer,
+};
+
+fn f32_le(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0);
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Assert: encoding `input` with `quantizer` reproduces `expected` exactly,
+/// and decoding `expected` reproduces element-wise fake-quant of `input`.
+fn check_golden(name: &str, input: &[u8], expected: &[u8], quantizer: Quantizer) {
+    let xs = f32_le(input);
+    let q = quantizer.clone();
+
+    let mut enc = Encoder::new(EncoderConfig::classification(quantizer, 32));
+    let stream = enc.encode(&xs);
+    assert_eq!(
+        stream.bytes, expected,
+        "{name}: encoded bytes diverge from the golden vector — the wire \
+         format changed. If intentional, regenerate tests/golden/ via \
+         gen_golden.py and bump the container/codec version."
+    );
+
+    let (decoded, header) = decode(expected, xs.len()).unwrap();
+    assert_eq!(decoded.len(), xs.len(), "{name}: decoded length");
+    assert_eq!(header.levels, q.levels(), "{name}: header levels");
+    for (i, (&x, &y)) in xs.iter().zip(&decoded).enumerate() {
+        assert_eq!(y, q.fake_quant(x), "{name}: element {i}");
+    }
+}
+
+#[test]
+fn golden_uniform_n4() {
+    check_golden(
+        "uniform_n4",
+        include_bytes!("golden/uniform_n4.f32"),
+        include_bytes!("golden/uniform_n4.lwfc"),
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 6.0, 4)),
+    );
+}
+
+#[test]
+fn golden_uniform_n2_specialized_one_bit_path() {
+    check_golden(
+        "uniform_n2",
+        include_bytes!("golden/uniform_n2.f32"),
+        include_bytes!("golden/uniform_n2.lwfc"),
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 6.0, 2)),
+    );
+}
+
+#[test]
+fn golden_ecq_n4() {
+    // Hand-pinned Algorithm-1-style design (x̂_0 = c_min, x̂_{N-1} = c_max);
+    // must match gen_golden.py exactly.
+    let q = NonUniformQuantizer {
+        recon: vec![0.0, 1.0, 2.5, 6.0],
+        thresholds: vec![0.5, 1.75, 4.25],
+        c_min: 0.0,
+        c_max: 6.0,
+    };
+    check_golden(
+        "ecq_n4",
+        include_bytes!("golden/ecq_n4.f32"),
+        include_bytes!("golden/ecq_n4.lwfc"),
+        Quantizer::NonUniform(q),
+    );
+}
+
+#[test]
+fn golden_ecq_header_carries_recon_table() {
+    let expected = include_bytes!("golden/ecq_n4.lwfc");
+    let n = include_bytes!("golden/ecq_n4.f32").len() / 4;
+    let (_, header) = decode_indices(expected, n).unwrap();
+    assert_eq!(header.quant, QuantKind::EntropyConstrained);
+    assert_eq!(header.recon.as_deref(), Some(&[0.0f32, 1.0, 2.5, 6.0][..]));
+    assert_eq!(header.c_min, 0.0);
+    assert_eq!(header.c_max, 6.0);
+}
+
+#[test]
+fn golden_vectors_exercise_every_level() {
+    // A golden vector that misses a level would under-pin the format.
+    let n = include_bytes!("golden/uniform_n4.f32").len() / 4;
+    let (idx, _) = decode_indices(include_bytes!("golden/uniform_n4.lwfc"), n).unwrap();
+    let mut seen = [false; 4];
+    for &i in &idx {
+        seen[i as usize] = true;
+    }
+    assert!(seen.iter().all(|&s| s), "levels missing from uniform_n4: {seen:?}");
+}
+
+#[test]
+fn golden_streams_reject_truncation() {
+    let bytes = include_bytes!("golden/uniform_n4.lwfc");
+    assert!(decode(&bytes[..8], 512).is_err(), "truncated header accepted");
+}

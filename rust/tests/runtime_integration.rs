@@ -195,12 +195,14 @@ fn serving_pipeline_end_to_end() {
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: None,
+            threads: 2,
         },
         cloud: CloudConfig {
             task,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             obj_threshold: 0.3,
+            threads: 2,
         },
         edge_workers: 2,
         requests: 64,
@@ -231,12 +233,14 @@ fn detect_pipeline_end_to_end() {
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: None,
+            threads: 2,
         },
         cloud: CloudConfig {
             task,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             obj_threshold: 0.3,
+            threads: 2,
         },
         edge_workers: 1,
         requests: 48,

@@ -1,0 +1,191 @@
+//! Integration tests for the concurrency substrate the batched codec and
+//! the coordinator pipeline run on: `ThreadPool::map_indexed` ordering,
+//! `fold_indexed` merge correctness, and `BoundedQueue` behaviour under
+//! producer/consumer contention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use lwfc::util::threadpool::{BoundedQueue, ThreadPool};
+
+#[test]
+fn map_indexed_preserves_order_under_uneven_work() {
+    // Items deliberately take wildly different times; results must still
+    // land at their own index.
+    let pool = ThreadPool::new(8);
+    let out = pool.map_indexed(200, |i| {
+        if i % 7 == 0 {
+            thread::sleep(Duration::from_micros(200));
+        }
+        i * 3 + 1
+    });
+    assert_eq!(out, (0..200).map(|i| i * 3 + 1).collect::<Vec<_>>());
+}
+
+#[test]
+fn map_indexed_visits_every_index_exactly_once() {
+    let pool = ThreadPool::new(4);
+    let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+    let _ = pool.map_indexed(500, |i| hits[i].fetch_add(1, Ordering::SeqCst));
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} visited wrong count");
+    }
+}
+
+#[test]
+fn map_indexed_edge_sizes() {
+    let pool = ThreadPool::new(4);
+    assert_eq!(pool.map_indexed(0, |i| i), Vec::<usize>::new());
+    assert_eq!(pool.map_indexed(1, |i| i + 9), vec![9]);
+    // More workers than items.
+    assert_eq!(ThreadPool::new(16).map_indexed(3, |i| i), vec![0, 1, 2]);
+    // Degenerate pool size clamps to 1 worker.
+    assert_eq!(ThreadPool::new(0).workers(), 1);
+}
+
+#[test]
+fn fold_indexed_matches_serial_reduction() {
+    let pool = ThreadPool::new(5);
+    let total = pool.fold_indexed(
+        10_000,
+        || 0u64,
+        |acc, i| *acc += (i as u64) * (i as u64),
+        |a, b| a + b,
+    );
+    let serial: u64 = (0..10_000u64).map(|i| i * i).sum();
+    assert_eq!(total, serial);
+}
+
+#[test]
+fn fold_indexed_merge_handles_nontrivial_accumulators() {
+    // (count, min, max) accumulator — merge must combine partial windows
+    // correctly, the same shape the Welford merge in the coordinator uses.
+    let pool = ThreadPool::new(3);
+    let (count, min, max) = pool.fold_indexed(
+        777,
+        || (0usize, usize::MAX, 0usize),
+        |acc, i| {
+            acc.0 += 1;
+            acc.1 = acc.1.min(i);
+            acc.2 = acc.2.max(i);
+        },
+        |a, b| (a.0 + b.0, a.1.min(b.1), a.2.max(b.2)),
+    );
+    assert_eq!((count, min, max), (777, 0, 776));
+}
+
+#[test]
+fn fold_indexed_empty_returns_init() {
+    let pool = ThreadPool::new(4);
+    assert_eq!(pool.fold_indexed(0, || 41u32, |_, _| {}, |a, _| a), 41);
+}
+
+#[test]
+fn queue_mpmc_contention_delivers_every_item_once() {
+    const PRODUCERS: usize = 4;
+    const CONSUMERS: usize = 3;
+    const PER_PRODUCER: usize = 2_000;
+
+    let q: BoundedQueue<usize> = BoundedQueue::new(8); // tight: forces blocking
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let q = q.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..PER_PRODUCER {
+                q.push(p * PER_PRODUCER + i).unwrap();
+            }
+        }));
+    }
+    let seen = Arc::new(
+        (0..PRODUCERS * PER_PRODUCER)
+            .map(|_| AtomicUsize::new(0))
+            .collect::<Vec<_>>(),
+    );
+    let mut consumers = Vec::new();
+    for _ in 0..CONSUMERS {
+        let q = q.clone();
+        let seen = Arc::clone(&seen);
+        consumers.push(thread::spawn(move || {
+            let mut got = 0usize;
+            while let Some(v) = q.pop() {
+                seen[v].fetch_add(1, Ordering::SeqCst);
+                got += 1;
+            }
+            got
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    q.close();
+    let total: usize = consumers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, PRODUCERS * PER_PRODUCER);
+    for (v, s) in seen.iter().enumerate() {
+        assert_eq!(s.load(Ordering::SeqCst), 1, "item {v} delivered wrong count");
+    }
+}
+
+#[test]
+fn queue_capacity_is_respected_under_pressure() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(4);
+    let q2 = q.clone();
+    let producer = thread::spawn(move || {
+        for i in 0..1_000 {
+            q2.push(i).unwrap();
+        }
+        q2.close();
+    });
+    let mut count = 0;
+    while let Some(_v) = q.pop() {
+        // Sampled invariant: the queue never holds more than its capacity.
+        assert!(q.len() <= 4, "queue over capacity: {}", q.len());
+        count += 1;
+    }
+    producer.join().unwrap();
+    assert_eq!(count, 1_000);
+}
+
+#[test]
+fn close_unblocks_producers_and_consumers() {
+    // Blocked producer gets its item back on close.
+    let q: BoundedQueue<u32> = BoundedQueue::new(1);
+    q.push(1).unwrap();
+    let q2 = q.clone();
+    let blocked_push = thread::spawn(move || q2.push(2));
+    thread::sleep(Duration::from_millis(20));
+    q.close();
+    assert_eq!(blocked_push.join().unwrap(), Err(2));
+
+    // Blocked consumer wakes with None once closed and drained.
+    let q: BoundedQueue<u32> = BoundedQueue::new(1);
+    let q2 = q.clone();
+    let blocked_pop = thread::spawn(move || q2.pop());
+    thread::sleep(Duration::from_millis(20));
+    q.close();
+    assert_eq!(blocked_pop.join().unwrap(), None);
+
+    // Push after close is rejected.
+    assert_eq!(q.push(7), Err(7));
+}
+
+#[test]
+fn pop_up_to_batches_under_contention() {
+    let q: BoundedQueue<usize> = BoundedQueue::new(64);
+    let q2 = q.clone();
+    let producer = thread::spawn(move || {
+        for i in 0..5_000 {
+            q2.push(i).unwrap();
+        }
+        q2.close();
+    });
+    let mut got = Vec::new();
+    while let Some(mut batch) = q.pop_up_to(17) {
+        assert!(!batch.is_empty() && batch.len() <= 17);
+        got.append(&mut batch);
+    }
+    producer.join().unwrap();
+    // Single consumer: FIFO order is preserved across batches.
+    assert_eq!(got, (0..5_000).collect::<Vec<_>>());
+}
