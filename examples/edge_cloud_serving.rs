@@ -11,7 +11,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example edge_cloud_serving`
 
-use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
+use lwfc::coordinator::{
+    serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
+};
 use lwfc::experiments::common::family_of;
 use lwfc::modeling::{fit, optimal_cmax};
 use lwfc::runtime::Manifest;
@@ -51,6 +53,7 @@ fn run_task(m: &Manifest, task: TaskKind, levels: usize, requests: usize) -> any
         requests,
         queue_capacity: 64,
         first_index: 0,
+        transport: TransportKind::Loopback,
     };
     let report = serve(m, cfg)?;
     println!("{}", report.summary());

@@ -9,7 +9,9 @@
 //! requests/s across edge-worker and codec-thread counts.
 
 use lwfc::codec::{batch, EncoderConfig, Quantizer, UniformQuantizer};
-use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
+use lwfc::coordinator::{
+    serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
+};
 use lwfc::runtime::Manifest;
 use lwfc::util::bench::{black_box, Bench};
 use lwfc::util::prop::Gen;
@@ -73,6 +75,7 @@ fn serving_bench(m: &Manifest) {
             requests: 512,
             queue_capacity: 64,
             first_index: 0,
+            transport: TransportKind::Loopback,
         };
         match serve(m, cfg) {
             Ok(r) => println!(

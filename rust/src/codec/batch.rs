@@ -35,10 +35,28 @@ use crate::util::threadpool::ThreadPool;
 pub const DEFAULT_TILE_ELEMS: usize = 16_384;
 
 /// Pre-allocation cap (elements, = 64 MiB of f32) applied to sizes read
-/// from an untrusted container directory — decode output still grows to
-/// the true size, but a crafted count cannot abort the process via one
-/// giant up-front allocation.
-const MAX_PREALLOC_ELEMS: usize = 16 * 1024 * 1024;
+/// from an untrusted container directory or taken off the wire — decode
+/// output still grows to the true size, but a crafted count cannot abort
+/// the process via one giant up-front allocation.
+pub(crate) const MAX_PREALLOC_ELEMS: usize = 16 * 1024 * 1024;
+
+/// Plausibility bound relating a stream's claimed element count to its
+/// payload size: the adaptive coder bottoms out near ~0.0007 bits/bin,
+/// i.e. ~11,350 elements/byte at full saturation, so a claim beyond
+/// 16384× the payload bytes is a crafted count, not a compressed
+/// stream. Enforced container-wide *before* any decode or fill
+/// allocation — both the strict and the tolerant path reject such a
+/// container outright (a tolerant fill of `entry.elements` values would
+/// otherwise let one crafted entry allocate up to 4 Gi floats) — and
+/// reused by `coordinator::net` to vet element counts arriving off the
+/// wire before they reach a decoder.
+pub const MAX_ELEMS_PER_PAYLOAD_BYTE: u64 = 16_384;
+
+/// Hard cap on a single tile's element count (applied on encode): keeps
+/// every directory field comfortably inside `u32` — worst-case
+/// truncated-unary output is < 32 bytes/element at the 255-level ceiling,
+/// so `byte_len` stays below 2^31.
+pub const MAX_TILE_ELEMS: usize = 1 << 26;
 
 /// An encoded multi-substream container.
 #[derive(Clone, Debug)]
@@ -82,13 +100,19 @@ fn tile_count(total: usize, tile_elems: usize) -> usize {
 /// tiles encoded concurrently on `pool`. Each worker invocation builds its
 /// own [`Encoder`] (contexts are per-stream state), so the output bytes
 /// are independent of scheduling.
+///
+/// `tile_elems` is clamped to [1, [`MAX_TILE_ELEMS`]] so every directory
+/// field fits `u32`. An empty tensor encodes as one empty substream —
+/// the container stays decodable (the tile carries the codec header), so
+/// encode→decode round-trips for every input.
 pub fn encode_batched(
     config: &EncoderConfig,
     data: &[f32],
     tile_elems: usize,
     pool: &ThreadPool,
 ) -> BatchedStream {
-    let n_tiles = tile_count(data.len(), tile_elems);
+    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
+    let n_tiles = tile_count(data.len(), tile_elems).max(1);
     let tiles: Vec<EncodedStream> = pool.map_indexed(n_tiles, |i| {
         let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
         let mut enc = Encoder::new(config.clone());
@@ -98,8 +122,8 @@ pub fn encode_batched(
     let entries: Vec<SubstreamEntry> = tiles
         .iter()
         .map(|t| SubstreamEntry {
-            elements: t.elements as u32,
-            byte_len: t.bytes.len() as u32,
+            elements: u32::try_from(t.elements).expect("tile element count exceeds u32"),
+            byte_len: u32::try_from(t.bytes.len()).expect("tile byte length exceeds u32"),
             checksum: substream_checksum(&t.bytes),
         })
         .collect();
@@ -131,6 +155,24 @@ fn payload_ranges(dir: &SubstreamDirectory, payload_off: usize) -> Vec<(usize, u
     ranges
 }
 
+/// Container-wide plausibility validation of a parsed directory. Runs
+/// before any substream is decoded (or fill-allocated): an entry whose
+/// element claim cannot correspond to a real compressed stream condemns
+/// the whole container — its directory is forged or damaged beyond the
+/// per-substream checksums' reach, so even the tolerant decoder must not
+/// trust any of its counts.
+fn validate_entries(dir: &SubstreamDirectory) -> Result<(), String> {
+    for (i, e) in dir.entries.iter().enumerate() {
+        if e.elements as u64 > (e.byte_len as u64).saturating_mul(MAX_ELEMS_PER_PAYLOAD_BYTE) {
+            return Err(format!(
+                "substream {i}: implausible element count {} for a {}-byte substream",
+                e.elements, e.byte_len
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn decode_tile(
     bytes: &[u8],
     entry: &SubstreamEntry,
@@ -144,12 +186,10 @@ fn decode_tile(
             entry.checksum
         ));
     }
-    // Plausibility bound: the adaptive coder bottoms out near ~0.0007
-    // bits/bin, i.e. ~11,350 elements/byte at full saturation, so a claimed
-    // count beyond 16384x the payload size is a crafted directory, not a
-    // compressed stream — reject it before decoding/allocating a bogus
-    // giant tile.
-    if entry.elements as usize > payload.len().saturating_mul(16384) {
+    // Plausibility re-check against the actual payload slice (the
+    // container-level [`validate_entries`] has already vetted the
+    // directory; this guards the same invariant per tile).
+    if entry.elements as u64 > (payload.len() as u64).saturating_mul(MAX_ELEMS_PER_PAYLOAD_BYTE) {
         return Err(format!(
             "implausible element count {} for a {}-byte substream",
             entry.elements,
@@ -161,9 +201,12 @@ fn decode_tile(
 
 /// Strict parallel decode: every substream must validate and decode, else
 /// the whole container is rejected. Returns the reconstructed tensor and
-/// the header of the first substream (all tiles share one codec config).
+/// the header of the first substream (all tiles share one codec config) —
+/// an empty tensor round-trips because [`encode_batched`] always emits at
+/// least one (possibly empty) substream carrying the header.
 pub fn decode_batched(bytes: &[u8], pool: &ThreadPool) -> Result<(Vec<f32>, Header), String> {
     let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
+    validate_entries(&dir)?;
     let ranges = payload_ranges(&dir, payload_off);
     let tiles: Vec<Result<(Vec<f32>, Header), String>> = pool.map_indexed(dir.entries.len(), |i| {
         decode_tile(bytes, &dir.entries[i], ranges[i])
@@ -188,6 +231,7 @@ pub fn decode_batched(bytes: &[u8], pool: &ThreadPool) -> Result<(Vec<f32>, Head
 /// inspection, tests).
 pub fn batched_elements(bytes: &[u8]) -> Result<usize, String> {
     let (dir, _) = SubstreamDirectory::read(bytes)?;
+    validate_entries(&dir)?;
     Ok(dir.total_elements as usize)
 }
 
@@ -201,6 +245,10 @@ pub fn decode_batched_tolerant(
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, BatchReport), String> {
     let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
+    // Implausible directories are a container-level error even here: the
+    // tolerant path fills `entry.elements` values per corrupt tile, so a
+    // forged count must never reach the fill loop.
+    validate_entries(&dir)?;
     let ranges = payload_ranges(&dir, payload_off);
     let tiles: Vec<Result<(Vec<f32>, Header), String>> = pool.map_indexed(dir.entries.len(), |i| {
         decode_tile(bytes, &dir.entries[i], ranges[i])
@@ -312,19 +360,53 @@ mod tests {
 
     #[test]
     fn empty_and_tiny_tensors() {
+        // Every legitimately encoded tensor decodes — including the empty
+        // one, which ships a single empty substream so the container still
+        // carries a codec header.
         let pool = ThreadPool::new(3);
         for n in [0usize, 1, 2, 5] {
             let xs = activations(n, 4);
             let batched = encode_batched(&cfg(4, 2.0), &xs, 2, &pool);
-            if n == 0 {
-                assert_eq!(batched.substreams, 0);
-                assert!(decode_batched(&batched.bytes, &pool).is_err(), "no header");
-                assert_eq!(batched_elements(&batched.bytes).unwrap(), 0);
-                continue;
-            }
-            let (out, _) = decode_batched(&batched.bytes, &pool).unwrap();
+            assert_eq!(batched.substreams, n.div_ceil(2).max(1));
+            assert_eq!(batched_elements(&batched.bytes).unwrap(), n);
+            let (out, header) = decode_batched(&batched.bytes, &pool).unwrap();
             assert_eq!(out.len(), n);
+            assert_eq!(header.levels, 4);
+            // decode_any agrees (the cloud ingest path).
+            let (any, _) = decode_any(&batched.bytes, n, &pool).unwrap();
+            assert_eq!(any, out);
         }
+    }
+
+    #[test]
+    fn implausible_directory_is_a_container_error_not_an_allocation() {
+        // Craft a container whose directory claims u32::MAX elements for a
+        // tiny payload, with a matching prelude total and a *valid*
+        // checksum: the strict path must reject it, and the tolerant path
+        // must refuse to fill 4 Gi values (it previously trusted
+        // `entry.elements` after the strict decode failed).
+        let payload = vec![0u8; 16];
+        let dir = SubstreamDirectory {
+            total_elements: u32::MAX as u64,
+            entries: vec![SubstreamEntry {
+                elements: u32::MAX,
+                byte_len: payload.len() as u32,
+                checksum: substream_checksum(&payload),
+            }],
+        };
+        let mut bytes = Vec::new();
+        dir.write(&mut bytes);
+        bytes.extend_from_slice(&payload);
+
+        let pool = ThreadPool::new(2);
+        let strict = decode_batched(&bytes, &pool);
+        assert!(strict.is_err(), "strict accepted a forged directory");
+        let tolerant = decode_batched_tolerant(&bytes, &pool);
+        assert!(
+            tolerant.is_err(),
+            "tolerant decode must treat an implausible entry as a container-level error"
+        );
+        assert!(batched_elements(&bytes).is_err());
     }
 
     #[test]

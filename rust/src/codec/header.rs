@@ -255,10 +255,12 @@ impl SubstreamDirectory {
     }
 
     pub fn write(&self, out: &mut Vec<u8>) {
+        let count =
+            u32::try_from(self.entries.len()).expect("substream count exceeds u32 directory field");
         out.extend_from_slice(&BATCH_MAGIC);
         out.push(BATCH_VERSION);
         out.push(0); // reserved
-        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        out.extend_from_slice(&count.to_le_bytes());
         out.extend_from_slice(&self.total_elements.to_le_bytes());
         for e in &self.entries {
             out.extend_from_slice(&e.elements.to_le_bytes());
@@ -301,6 +303,10 @@ impl SubstreamDirectory {
             ));
         }
         let mut entries = Vec::with_capacity(count);
+        // Checked accumulation: ~2^32 max-valued entries would overflow
+        // u64 (a debug-build panic on crafted input). Unreachable for any
+        // directory that physically fits in memory, but untrusted-input
+        // arithmetic stays checked on principle.
         let mut elem_sum: u64 = 0;
         let mut byte_sum: u64 = 0;
         for i in 0..count {
@@ -313,8 +319,12 @@ impl SubstreamDirectory {
                 byte_len: u32_at(off + 4),
                 checksum: u32_at(off + 8),
             };
-            elem_sum += e.elements as u64;
-            byte_sum += e.byte_len as u64;
+            elem_sum = elem_sum
+                .checked_add(e.elements as u64)
+                .ok_or("directory element counts overflow u64")?;
+            byte_sum = byte_sum
+                .checked_add(e.byte_len as u64)
+                .ok_or("directory byte lengths overflow u64")?;
             entries.push(e);
         }
         if elem_sum != total_elements {

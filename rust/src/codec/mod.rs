@@ -18,7 +18,7 @@ pub mod uniform;
 
 pub use batch::{
     decode_any, decode_batched, decode_batched_tolerant, encode_batched, BatchReport,
-    BatchedStream, DEFAULT_TILE_ELEMS,
+    BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS,
 };
 pub use ecq::{design as design_ecq, EcqDesign, EcqParams, NonUniformQuantizer};
 pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind};

@@ -204,7 +204,10 @@ pub fn decode(bytes: &[u8], elements: usize) -> Result<(Vec<f32>, Header), Strin
     };
     let mut contexts = vec![Context::default(); num_contexts(levels)];
     let mut dec = CabacDecoder::new(&bytes[off..]);
-    let mut out = Vec::with_capacity(elements);
+    // `elements` may come from an untrusted wire frame or container
+    // directory: cap the up-front allocation (output still grows to the
+    // true size).
+    let mut out = Vec::with_capacity(elements.min(super::batch::MAX_PREALLOC_ELEMS));
     for _ in 0..elements {
         let n = binarize::decode_tu(levels, |pos| dec.decode(&mut contexts[pos]));
         out.push(recon_table[n]);
@@ -217,7 +220,7 @@ pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header
     let (header, off) = Header::read(bytes)?;
     let mut contexts = vec![Context::default(); num_contexts(header.levels)];
     let mut dec = CabacDecoder::new(&bytes[off..]);
-    let mut out = Vec::with_capacity(elements);
+    let mut out = Vec::with_capacity(elements.min(super::batch::MAX_PREALLOC_ELEMS));
     for _ in 0..elements {
         out.push(binarize::decode_tu(header.levels, |pos| dec.decode(&mut contexts[pos])) as u16);
     }

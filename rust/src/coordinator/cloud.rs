@@ -5,6 +5,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::net::{WireItem, WireOutcome};
 use super::protocol::{CompressedItem, Outcome, TaskKind};
 use crate::codec;
 use crate::data;
@@ -132,6 +133,20 @@ impl CloudWorker {
         self.times.post_s += t2.elapsed().as_secs_f64();
         self.times.items += items.len() as u64;
         Ok(outcomes)
+    }
+
+    /// Serve one item received off the wire (daemon mode): re-stamp its
+    /// arrival locally, run it as a single-item batch, and answer with one
+    /// outcome frame. The edge side re-stamps latency from its own clock,
+    /// so the locally measured `latency_s` only covers cloud compute.
+    pub fn process_wire(&mut self, item: WireItem) -> Result<WireOutcome> {
+        let item = item.into_item(Instant::now());
+        let outcomes = self.process(std::slice::from_ref(&item))?;
+        let outcome = outcomes
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("cloud worker produced no outcome"))?;
+        Ok(WireOutcome::from_outcome(&outcome))
     }
 
     fn outcome(

@@ -196,6 +196,104 @@ impl EdgeWorker {
     }
 }
 
+/// Standalone edge-node parameters (`lwfc edge --connect`).
+#[derive(Clone, Debug)]
+pub struct EdgeNodeConfig {
+    /// Cloud daemon address, e.g. `"127.0.0.1:7878"`.
+    pub connect: String,
+    /// Total requests to stream.
+    pub requests: usize,
+    /// In-flight window: items on the wire without an outcome yet.
+    pub window: usize,
+    /// First corpus index to serve.
+    pub first_index: u64,
+    pub retry: super::net::RetryPolicy,
+}
+
+/// Run one edge device against a live cloud daemon over TCP: capture →
+/// edge inference → lightweight encode → `LWFN` item frames out, outcome
+/// frames back. Outcome latency is measured on this side (capture →
+/// outcome received, both wire legs included). Returns the standard serve
+/// report with client-side transport stats attached.
+pub fn run_edge_node(
+    manifest: &Manifest,
+    config: EdgeConfig,
+    node: &EdgeNodeConfig,
+) -> Result<super::metrics::ServeReport> {
+    use std::collections::HashMap;
+    use std::time::Instant as StdInstant;
+
+    use super::cloud::CloudTimes;
+    use super::metrics::{ServeReport, TransportStats};
+    use super::net::{EdgeClient, WireItem};
+    use super::protocol::{Outcome, Request};
+
+    let task = config.task;
+    let val_seed = config.val_seed;
+    let batch = config.batch.max(1);
+    let mut worker = EdgeWorker::new(manifest, config)?;
+    let mut client = EdgeClient::connect(&node.connect, task, node.window, node.retry)?;
+
+    let started = StdInstant::now();
+    let mut arrivals: HashMap<u64, StdInstant> = HashMap::new();
+    let mut outcomes: Vec<Outcome> = Vec::with_capacity(node.requests);
+    let mut collect = |wire: Vec<super::net::WireOutcome>,
+                       arrivals: &mut HashMap<u64, StdInstant>| {
+        for wo in wire {
+            let mut o = wo.into_outcome();
+            if let Some(arrived) = arrivals.remove(&o.id) {
+                o.latency_s = arrived.elapsed().as_secs_f64();
+            }
+            outcomes.push(o);
+        }
+    };
+
+    let mut next = 0usize;
+    while next < node.requests {
+        let count = batch.min(node.requests - next);
+        let requests: Vec<Request> = (0..count)
+            .map(|k| {
+                let id = (next + k) as u64;
+                let arrived = StdInstant::now();
+                arrivals.insert(id, arrived);
+                Request {
+                    id,
+                    image_index: node.first_index + id,
+                    arrived,
+                }
+            })
+            .collect();
+        next += count;
+        for item in worker.process(&requests)? {
+            let got = client.send(WireItem::from_item(&item))?;
+            collect(got, &mut arrivals);
+        }
+    }
+    let (rest, stats) = client.finish()?;
+    collect(rest, &mut arrivals);
+
+    let mut report = ServeReport::aggregate_with_seed(
+        task,
+        val_seed,
+        outcomes,
+        worker.times,
+        CloudTimes::default(),
+        started.elapsed().as_secs_f64(),
+    );
+    report.transport = TransportStats {
+        name: "tcp-client",
+        bytes_sent: stats.bytes_sent,
+        bytes_received: stats.bytes_received,
+        items: stats.items_sent,
+        outcomes: stats.outcomes_received,
+        reconnects: stats.reconnects,
+        rtt_p50_s: stats.rtt.quantile(0.50),
+        rtt_p95_s: stats.rtt.quantile(0.95),
+        rtt_p99_s: stats.rtt.quantile(0.99),
+    };
+    Ok(report)
+}
+
 impl QuantSpec {
     fn c_max_hint(&self) -> f64 {
         match self {

@@ -8,6 +8,32 @@ use crate::data;
 use crate::eval::{map_at_iou, Detection};
 use crate::util::timer::Percentiles;
 
+/// Per-connection accounting of the transit stage (loopback queue or TCP
+/// socket), aggregated over a serve run.
+#[derive(Clone, Debug, Default)]
+pub struct TransportStats {
+    /// Transport implementation ("loopback", "tcp"); empty = not recorded.
+    pub name: &'static str,
+    /// Bytes written to the wire, frame headers included (0 for loopback —
+    /// items never serialize).
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub items: u64,
+    pub outcomes: u64,
+    pub reconnects: u64,
+    /// Send→outcome round-trip latency percentiles (seconds); empty for
+    /// loopback, where items are handed over by reference.
+    pub rtt_p50_s: f64,
+    pub rtt_p95_s: f64,
+    pub rtt_p99_s: f64,
+}
+
+impl TransportStats {
+    pub fn is_recorded(&self) -> bool {
+        !self.name.is_empty()
+    }
+}
+
 /// Final report of a [`super::server::serve`] run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -24,6 +50,9 @@ pub struct ServeReport {
     pub latency_p99_s: f64,
     pub edge: EdgeTimes,
     pub cloud: CloudTimes,
+    /// Transit-stage accounting; default (unrecorded) when the caller did
+    /// not run through a [`super::transport::Transport`].
+    pub transport: TransportStats,
 }
 
 impl ServeReport {
@@ -96,11 +125,32 @@ impl ServeReport {
             latency_p99_s: lat.quantile(0.99),
             edge,
             cloud,
+            transport: TransportStats::default(),
         }
     }
 
     /// Human-readable one-screen summary.
     pub fn summary(&self) -> String {
+        let mut s = self.summary_core();
+        if self.transport.is_recorded() {
+            s.push_str(&format!(
+                "\ntransport: {} tx={}B rx={}B items={} outcomes={} reconnects={} \
+                 rtt p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+                self.transport.name,
+                self.transport.bytes_sent,
+                self.transport.bytes_received,
+                self.transport.items,
+                self.transport.outcomes,
+                self.transport.reconnects,
+                self.transport.rtt_p50_s * 1e3,
+                self.transport.rtt_p95_s * 1e3,
+                self.transport.rtt_p99_s * 1e3,
+            ));
+        }
+        s
+    }
+
+    fn summary_core(&self) -> String {
         format!(
             "task={} requests={} {}={:.4} rate={:.4} bits/elem\n\
              wall={:.2}s throughput={:.1} req/s latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\

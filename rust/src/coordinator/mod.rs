@@ -1,19 +1,28 @@
 //! L3 coordinator: the collaborative-intelligence serving pipeline
-//! (paper Fig. 1) — simulated edge devices run the edge half + lightweight
-//! codec; a bounded "network" queue carries the bit-streams; the cloud
-//! worker decodes and finishes inference. Includes the adaptive clip-range
-//! controller of §III-E.
+//! (paper Fig. 1) — edge devices run the edge half + lightweight codec; a
+//! [`transport::Transport`] carries the bit-streams (in-process loopback
+//! queues or a real TCP wire, [`net`]); the cloud worker decodes and
+//! finishes inference. Includes the adaptive clip-range controller of
+//! §III-E and a standalone multi-client cloud daemon / edge client pair
+//! (`lwfc serve --listen` / `lwfc edge --connect`).
 
 pub mod cloud;
 pub mod edge;
 pub mod metrics;
+pub mod net;
 pub mod protocol;
 pub mod server;
 pub mod stats;
+pub mod transport;
 
 pub use cloud::{CloudConfig, CloudWorker};
-pub use edge::{EdgeConfig, EdgeWorker};
-pub use metrics::ServeReport;
+pub use edge::{run_edge_node, EdgeConfig, EdgeNodeConfig, EdgeWorker};
+pub use metrics::{ServeReport, TransportStats};
+pub use net::{CloudDaemon, EdgeClient, RetryPolicy, WireItem, WireOutcome};
 pub use protocol::{CompressedItem, Outcome, QuantSpec, Request, TaskKind};
-pub use server::{serve, ServeConfig};
+pub use server::{
+    build_transport, run_pipeline, serve, CloudStage, EdgeStage, PipelineConfig, PipelineOutput,
+    ServeConfig,
+};
 pub use stats::{AdaptiveClipController, AdaptiveConfig};
+pub use transport::{LoopbackTransport, TcpTransport, Transport, TransportKind};

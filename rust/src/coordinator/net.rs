@@ -1,0 +1,867 @@
+//! Real edge↔cloud network transport (paper Fig. 1: the edge device
+//! streams compressed split-layer features to a cloud host over an actual
+//! wire, not an in-process queue).
+//!
+//! ## Wire format
+//!
+//! Every message is one length-prefixed binary frame (little-endian):
+//!
+//! ```text
+//! 0-3    magic "LWFN"
+//! 4      protocol version (1)
+//! 5      frame kind (0 = compressed item, 1 = outcome)
+//! 6      task code (TaskKind::code — both peers must serve the same net)
+//! 7      reserved (must be 0)
+//! 8-15   request id (u64)
+//! 16-23  image index (u64)
+//! 24-27  payload length (u32)
+//! 28-    payload
+//! ```
+//!
+//! An **item** payload is `elements (u64)` followed by the codec bytes
+//! exactly as produced by the encoder — the self-describing `LWFB` batched
+//! container or a legacy single stream; the framing layer never inspects
+//! them. An **outcome** payload is `flags (u8: bit0 = has top-1 verdict,
+//! bit1 = verdict)`, `bits_per_element (f64)`, `latency_s (f64)`,
+//! `detection count (u32)`, then 24 bytes per detection
+//! (`class u32, score/x/y/w/h f32`).
+//!
+//! ## Roles
+//!
+//! * [`CloudDaemon`] — multi-client cloud host: accepts concurrent edge
+//!   connections, each handled on a [`TaskPool`] worker that builds its own
+//!   stage (xla handles are not Send) and answers item frames with outcome
+//!   frames in order. A client half-close (EOF after `shutdown(Write)`)
+//!   drains whatever is in flight before the daemon closes its side.
+//! * [`EdgeClient`] — windowed, pipelined client with
+//!   reconnect-on-failure: unacknowledged items are kept in a pending set
+//!   and re-sent after a reconnect, so a dropped connection degrades to
+//!   duplicate (idempotent) work instead of lost requests.
+//!
+//! Everything here is `std::net` only — no async runtime, no new
+//! dependencies.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::protocol::{CompressedItem, Outcome, TaskKind};
+use crate::codec::batch::MAX_ELEMS_PER_PAYLOAD_BYTE;
+use crate::eval::Detection;
+use crate::util::threadpool::TaskPool;
+use crate::util::timer::Percentiles;
+
+pub const NET_MAGIC: [u8; 4] = *b"LWFN";
+pub const NET_VERSION: u8 = 1;
+pub const FRAME_HEADER_BYTES: usize = 28;
+/// Upper bound on a frame payload accepted from the wire. A compressed
+/// split-layer tensor is a few kilobytes; 256 MiB rejects crafted lengths
+/// before they become allocations.
+pub const MAX_FRAME_PAYLOAD: usize = 256 * 1024 * 1024;
+/// Serialized size of one detection in an outcome payload.
+pub const DET_WIRE_BYTES: usize = 24;
+
+/// A compressed item as it travels on the wire (no `Instant`s — those are
+/// host-local and re-stamped on receipt).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireItem {
+    pub id: u64,
+    pub image_index: u64,
+    pub elements: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl WireItem {
+    pub fn from_item(item: &CompressedItem) -> Self {
+        Self {
+            id: item.id,
+            image_index: item.image_index,
+            elements: item.elements as u64,
+            bytes: item.bytes.clone(),
+        }
+    }
+
+    /// Rebuild a pipeline item on the receiving host; `arrived` is the
+    /// receiver-local timestamp to charge latency from.
+    pub fn into_item(self, arrived: Instant) -> CompressedItem {
+        CompressedItem {
+            id: self.id,
+            image_index: self.image_index,
+            elements: self.elements as usize,
+            bytes: self.bytes,
+            arrived,
+            encoded: arrived,
+        }
+    }
+}
+
+/// An outcome as it travels on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireOutcome {
+    pub id: u64,
+    pub image_index: u64,
+    pub correct: Option<bool>,
+    pub latency_s: f64,
+    pub bits_per_element: f64,
+    pub detections: Vec<Detection>,
+}
+
+impl WireOutcome {
+    pub fn from_outcome(o: &Outcome) -> Self {
+        Self {
+            id: o.id,
+            image_index: o.image_index,
+            correct: o.correct,
+            latency_s: o.latency_s,
+            bits_per_element: o.bits_per_element,
+            detections: o.detections.clone(),
+        }
+    }
+
+    pub fn into_outcome(self) -> Outcome {
+        Outcome {
+            id: self.id,
+            image_index: self.image_index,
+            correct: self.correct,
+            detections: self.detections,
+            latency_s: self.latency_s,
+            bits_per_element: self.bits_per_element,
+        }
+    }
+}
+
+/// One parsed frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Item(WireItem),
+    Outcome(WireOutcome),
+}
+
+fn proto_err(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn frame_header(
+    kind: u8,
+    task: TaskKind,
+    id: u64,
+    image_index: u64,
+    payload_len: usize,
+) -> io::Result<[u8; FRAME_HEADER_BYTES]> {
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(proto_err(format!(
+            "frame payload {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte wire limit"
+        )));
+    }
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    header[..4].copy_from_slice(&NET_MAGIC);
+    header[4] = NET_VERSION;
+    header[5] = kind;
+    header[6] = task.code();
+    header[7] = 0;
+    header[8..16].copy_from_slice(&id.to_le_bytes());
+    header[16..24].copy_from_slice(&image_index.to_le_bytes());
+    header[24..28].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    Ok(header)
+}
+
+/// Serialize one item frame straight from a borrowed item — the codec
+/// bytes are written as-is, never copied into an intermediate buffer.
+/// Returns the number of bytes written (header + payload).
+pub fn write_item_frame(w: &mut impl Write, task: TaskKind, item: &WireItem) -> io::Result<usize> {
+    let payload_len = 8 + item.bytes.len();
+    let header = frame_header(0, task, item.id, item.image_index, payload_len)?;
+    w.write_all(&header)?;
+    w.write_all(&item.elements.to_le_bytes())?;
+    w.write_all(&item.bytes)?;
+    Ok(FRAME_HEADER_BYTES + payload_len)
+}
+
+/// Serialize one outcome frame from a borrowed outcome.
+pub fn write_outcome_frame(
+    w: &mut impl Write,
+    task: TaskKind,
+    o: &WireOutcome,
+) -> io::Result<usize> {
+    let mut p = Vec::with_capacity(21 + o.detections.len() * DET_WIRE_BYTES);
+    let flags = match o.correct {
+        None => 0u8,
+        Some(false) => 1,
+        Some(true) => 3,
+    };
+    p.push(flags);
+    p.extend_from_slice(&o.latency_s.to_le_bytes());
+    p.extend_from_slice(&o.bits_per_element.to_le_bytes());
+    p.extend_from_slice(&(o.detections.len() as u32).to_le_bytes());
+    for d in &o.detections {
+        p.extend_from_slice(&(d.class as u32).to_le_bytes());
+        p.extend_from_slice(&d.score.to_le_bytes());
+        p.extend_from_slice(&d.x.to_le_bytes());
+        p.extend_from_slice(&d.y.to_le_bytes());
+        p.extend_from_slice(&d.w.to_le_bytes());
+        p.extend_from_slice(&d.h.to_le_bytes());
+    }
+    let header = frame_header(1, task, o.id, o.image_index, p.len())?;
+    w.write_all(&header)?;
+    w.write_all(&p)?;
+    Ok(FRAME_HEADER_BYTES + p.len())
+}
+
+/// Serialize one frame. Returns the number of bytes written (header +
+/// payload) so callers can account wire traffic.
+pub fn write_frame(w: &mut impl Write, task: TaskKind, frame: &Frame) -> io::Result<usize> {
+    match frame {
+        Frame::Item(item) => write_item_frame(w, task, item),
+        Frame::Outcome(o) => write_outcome_frame(w, task, o),
+    }
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF at a frame boundary (the
+/// peer's half-close); anything else that cuts a frame short is an error.
+/// `expect_task` rejects frames from a peer serving a different network.
+pub fn read_frame(
+    r: &mut impl Read,
+    expect_task: Option<TaskKind>,
+) -> io::Result<Option<(TaskKind, Frame)>> {
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    // Hand-rolled read_exact that distinguishes EOF-at-boundary.
+    let mut filled = 0usize;
+    while filled < header.len() {
+        match r.read(&mut header[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(proto_err(format!(
+                    "connection closed mid-frame ({filled} of {FRAME_HEADER_BYTES} header bytes)"
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if header[..4] != NET_MAGIC {
+        return Err(proto_err("bad frame magic".into()));
+    }
+    if header[4] != NET_VERSION {
+        return Err(proto_err(format!("unsupported protocol version {}", header[4])));
+    }
+    if header[7] != 0 {
+        return Err(proto_err(format!("nonzero reserved byte {}", header[7])));
+    }
+    let task = TaskKind::from_code(header[6]).map_err(proto_err)?;
+    if let Some(expect) = expect_task {
+        if task != expect {
+            return Err(proto_err(format!(
+                "peer serves {task}, this side serves {expect}"
+            )));
+        }
+    }
+    let id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let image_index = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(header[24..28].try_into().unwrap()) as usize;
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(proto_err(format!(
+            "frame payload {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte wire limit"
+        )));
+    }
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    let frame = match header[5] {
+        0 => {
+            if payload.len() < 8 {
+                return Err(proto_err("item payload shorter than its element count".into()));
+            }
+            let elements = u64::from_le_bytes(payload[..8].try_into().unwrap());
+            // Same plausibility bound the batched container enforces on
+            // its directory: an element claim no compressed stream could
+            // carry is rejected here, before it can reach a decoder's
+            // `Vec::with_capacity` (a crafted tiny frame claiming 2^60
+            // elements would otherwise abort the receiving daemon).
+            let codec_bytes = (payload.len() - 8) as u64;
+            if elements > codec_bytes.saturating_mul(MAX_ELEMS_PER_PAYLOAD_BYTE) {
+                return Err(proto_err(format!(
+                    "implausible element count {elements} for a {codec_bytes}-byte payload"
+                )));
+            }
+            Frame::Item(WireItem {
+                id,
+                image_index,
+                elements,
+                bytes: payload.split_off(8),
+            })
+        }
+        1 => {
+            if payload.len() < 21 {
+                return Err(proto_err("outcome payload truncated".into()));
+            }
+            let correct = match payload[0] {
+                0 => None,
+                1 => Some(false),
+                3 => Some(true),
+                flags => return Err(proto_err(format!("bad outcome flags {flags:#04x}"))),
+            };
+            let latency_s = f64::from_le_bytes(payload[1..9].try_into().unwrap());
+            let bits_per_element = f64::from_le_bytes(payload[9..17].try_into().unwrap());
+            let n_det = u32::from_le_bytes(payload[17..21].try_into().unwrap()) as usize;
+            if payload.len() != 21 + n_det * DET_WIRE_BYTES {
+                return Err(proto_err(format!(
+                    "outcome carries {} payload bytes for {n_det} detections",
+                    payload.len()
+                )));
+            }
+            let mut detections = Vec::with_capacity(n_det);
+            for k in 0..n_det {
+                let at = 21 + k * DET_WIRE_BYTES;
+                let f32_at = |o: usize| {
+                    f32::from_le_bytes(payload[at + o..at + o + 4].try_into().unwrap())
+                };
+                detections.push(Detection {
+                    image: image_index as usize,
+                    class: u32::from_le_bytes(payload[at..at + 4].try_into().unwrap()) as usize,
+                    score: f32_at(4),
+                    x: f32_at(8),
+                    y: f32_at(12),
+                    w: f32_at(16),
+                    h: f32_at(20),
+                });
+            }
+            Frame::Outcome(WireOutcome {
+                id,
+                image_index,
+                correct,
+                latency_s,
+                bits_per_element,
+                detections,
+            })
+        }
+        k => return Err(proto_err(format!("unknown frame kind {k}"))),
+    };
+    Ok(Some((task, frame)))
+}
+
+// ---------------------------------------------------------------------------
+// Cloud daemon
+
+/// Shared counters for a running [`CloudDaemon`].
+#[derive(Debug, Default)]
+struct DaemonCounters {
+    connections: AtomicU64,
+    items: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// Aggregate accounting of a daemon's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct DaemonReport {
+    pub connections: u64,
+    pub items: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Per-connection failures (a failed connection does not stop the
+    /// daemon; the client reconnects and retries).
+    pub errors: Vec<String>,
+}
+
+/// Multi-client cloud host: accepts edge connections and answers item
+/// frames with outcome frames. Connection handling runs on a [`TaskPool`],
+/// and each handler is built *inside* its connection task by the factory —
+/// the same not-`Send` discipline as the in-process pipeline workers.
+pub struct CloudDaemon {
+    addr: SocketAddr,
+    task: TaskKind,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    counters: Arc<DaemonCounters>,
+    errors: Arc<Mutex<Vec<String>>>,
+}
+
+impl CloudDaemon {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting. For every
+    /// connection, `handler_factory(conn_id)` builds a fresh handler that
+    /// maps each received item to one outcome.
+    pub fn start<HF, H>(
+        addr: &str,
+        task: TaskKind,
+        conn_workers: usize,
+        handler_factory: HF,
+    ) -> Result<CloudDaemon>
+    where
+        HF: Fn(u64) -> Result<H> + Send + Sync + 'static,
+        H: FnMut(WireItem) -> Result<WireOutcome>,
+    {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding cloud daemon to {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(DaemonCounters::default());
+        let errors = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_shutdown = Arc::clone(&shutdown);
+        let accept_counters = Arc::clone(&counters);
+        let accept_errors = Arc::clone(&errors);
+        let factory = Arc::new(handler_factory);
+        let accept_thread = std::thread::spawn(move || {
+            let conn_workers = conn_workers.max(1);
+            let pool = TaskPool::new(conn_workers);
+            // Handler jobs live for a connection's whole lifetime, so a
+            // connection beyond the pool's capacity would be accepted by
+            // the OS and then starve silently (the client would hang with
+            // no I/O error). Refuse it instead: an immediate close makes
+            // the client's reconnect-with-backoff machinery fire loudly.
+            let active = Arc::new(AtomicU64::new(0));
+            let mut next_conn = 0u64;
+            for incoming in listener.incoming() {
+                if accept_shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match incoming {
+                    Ok(s) => s,
+                    Err(e) => {
+                        accept_errors.lock().unwrap().push(format!("accept: {e}"));
+                        continue;
+                    }
+                };
+                if active.load(Ordering::SeqCst) >= conn_workers as u64 {
+                    accept_errors.lock().unwrap().push(format!(
+                        "refused a connection: all {conn_workers} handlers busy"
+                    ));
+                    drop(stream);
+                    continue;
+                }
+                let conn_id = next_conn;
+                next_conn += 1;
+                accept_counters.connections.fetch_add(1, Ordering::Relaxed);
+                active.fetch_add(1, Ordering::SeqCst);
+                let factory = Arc::clone(&factory);
+                let counters = Arc::clone(&accept_counters);
+                let errors = Arc::clone(&accept_errors);
+                let active = Arc::clone(&active);
+                pool.execute(move || {
+                    if let Err(e) =
+                        serve_connection(stream, task, conn_id, factory.as_ref(), &counters)
+                    {
+                        errors.lock().unwrap().push(format!("connection {conn_id}: {e:#}"));
+                    }
+                    active.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            // TaskPool drop joins in-flight connection handlers, so a
+            // shutdown drains gracefully.
+            drop(pool);
+        });
+
+        Ok(CloudDaemon {
+            addr: local,
+            task,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            counters,
+            errors,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn task(&self) -> TaskKind {
+        self.task
+    }
+
+    /// Stop accepting, drain in-flight connections, and report.
+    pub fn shutdown(mut self) -> DaemonReport {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        DaemonReport {
+            connections: self.counters.connections.load(Ordering::Relaxed),
+            items: self.counters.items.load(Ordering::Relaxed),
+            bytes_in: self.counters.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.counters.bytes_out.load(Ordering::Relaxed),
+            errors: self.errors.lock().unwrap().clone(),
+        }
+    }
+
+    /// Block forever serving requests (CLI daemon mode).
+    pub fn run_forever(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection<HF, H>(
+    mut stream: TcpStream,
+    task: TaskKind,
+    conn_id: u64,
+    factory: &HF,
+    counters: &DaemonCounters,
+) -> Result<()>
+where
+    HF: Fn(u64) -> Result<H>,
+    H: FnMut(WireItem) -> Result<WireOutcome>,
+{
+    stream.set_nodelay(true).ok();
+    let mut handler = factory(conn_id)?;
+    let mut writer = stream.try_clone()?;
+    loop {
+        let frame = read_frame(&mut stream, Some(task))?;
+        let Some((_, frame)) = frame else {
+            // Peer half-closed: everything already answered inline, so the
+            // in-flight set is empty — close our side and finish.
+            let _ = writer.shutdown(Shutdown::Write);
+            return Ok(());
+        };
+        let Frame::Item(item) = frame else {
+            return Err(anyhow!("edge peer sent an outcome frame"));
+        };
+        counters
+            .bytes_in
+            .fetch_add((FRAME_HEADER_BYTES + 8 + item.bytes.len()) as u64, Ordering::Relaxed);
+        counters.items.fetch_add(1, Ordering::Relaxed);
+        let outcome = handler(item)?;
+        let n = write_outcome_frame(&mut writer, task, &outcome)?;
+        counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Edge client
+
+/// Reconnect policy for [`EdgeClient`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Connection attempts per (re)connect before giving up.
+    pub attempts: u32,
+    /// Sleep between attempts (grows linearly: `backoff * attempt`).
+    pub backoff: Duration,
+    /// Total reconnect cycles over the client's lifetime. Bounds the
+    /// re-send loop: a poison item the cloud deterministically rejects
+    /// drops the connection on every delivery, and without this cap the
+    /// client would reconnect and re-send it forever.
+    pub max_reconnects: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 5,
+            backoff: Duration::from_millis(20),
+            max_reconnects: 16,
+        }
+    }
+}
+
+/// Client-side accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ClientStats {
+    pub items_sent: u64,
+    pub outcomes_received: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub reconnects: u64,
+    /// Send→outcome round-trip times (wire both ways + cloud compute).
+    pub rtt: Percentiles,
+}
+
+/// Windowed pipelined edge client over one TCP connection.
+///
+/// Up to `window` items ride the wire unacknowledged; past that, `send`
+/// blocks reading outcomes (the daemon answers in order per connection).
+/// Any send/receive failure triggers a reconnect and a re-send of every
+/// pending item — at-least-once delivery, deduplicated by request id.
+pub struct EdgeClient {
+    addr: String,
+    task: TaskKind,
+    window: usize,
+    retry: RetryPolicy,
+    stream: TcpStream,
+    pending: HashMap<u64, (WireItem, Instant)>,
+    /// Send order of pending ids, for in-order re-send after reconnect.
+    pending_order: Vec<u64>,
+    pub stats: ClientStats,
+}
+
+impl EdgeClient {
+    pub fn connect(addr: &str, task: TaskKind, window: usize, retry: RetryPolicy) -> Result<Self> {
+        let stream = connect_with_retry(addr, retry)?;
+        Ok(Self {
+            addr: addr.to_string(),
+            task,
+            window: window.max(1),
+            retry,
+            stream,
+            pending: HashMap::new(),
+            pending_order: Vec::new(),
+            stats: ClientStats::default(),
+        })
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        if self.stats.reconnects >= self.retry.max_reconnects as u64 {
+            return Err(anyhow!(
+                "giving up after {} reconnects with {} items still unacknowledged",
+                self.stats.reconnects,
+                self.pending.len()
+            ));
+        }
+        self.stats.reconnects += 1;
+        self.stream = connect_with_retry(&self.addr, self.retry)?;
+        // Re-send everything unacknowledged, oldest first.
+        for id in self.pending_order.clone() {
+            let (item, _) = &self.pending[&id];
+            let n = write_item_frame(&mut self.stream, self.task, item)?;
+            self.stats.bytes_sent += n as u64;
+        }
+        Ok(())
+    }
+
+    /// Read one outcome frame, reconnecting (and re-sending pending items)
+    /// on failure. Returns None only when the peer cleanly half-closed and
+    /// nothing is pending.
+    fn read_outcome(&mut self) -> Result<Option<WireOutcome>> {
+        loop {
+            match read_frame(&mut self.stream, Some(self.task)) {
+                Ok(Some((_, Frame::Outcome(o)))) => {
+                    self.stats.bytes_received +=
+                        (FRAME_HEADER_BYTES + 21 + o.detections.len() * DET_WIRE_BYTES) as u64;
+                    if let Some((_, sent_at)) = self.pending.remove(&o.id) {
+                        self.pending_order.retain(|&id| id != o.id);
+                        self.stats.outcomes_received += 1;
+                        self.stats.rtt.push(sent_at.elapsed().as_secs_f64());
+                        return Ok(Some(o));
+                    }
+                    // Duplicate after a re-send race: drop silently.
+                }
+                Ok(Some((_, Frame::Item(_)))) => {
+                    return Err(anyhow!("cloud peer sent an item frame"));
+                }
+                Ok(None) => {
+                    if self.pending.is_empty() {
+                        return Ok(None);
+                    }
+                    // Daemon dropped us with work outstanding: reconnect
+                    // and let the re-sent items produce fresh outcomes.
+                    self.reconnect()?;
+                }
+                Err(_) => self.reconnect()?,
+            }
+        }
+    }
+
+    /// Send one item; returns any outcomes that had to be read to keep the
+    /// in-flight window bounded.
+    pub fn send(&mut self, item: WireItem) -> Result<Vec<WireOutcome>> {
+        let id = item.id;
+        self.pending.insert(id, (item, Instant::now()));
+        self.pending_order.push(id);
+        self.stats.items_sent += 1;
+        // Serialize straight out of the pending set — the payload is
+        // never copied; the set keeps the only owned copy for re-sends.
+        let written = {
+            let (item, _) = &self.pending[&id];
+            write_item_frame(&mut self.stream, self.task, item)
+        };
+        match written {
+            Ok(n) => self.stats.bytes_sent += n as u64,
+            Err(_) => self.reconnect()?,
+        }
+        let mut out = Vec::new();
+        while self.in_flight() > self.window {
+            match self.read_outcome()? {
+                Some(o) => out.push(o),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Graceful shutdown: half-close the write side, then drain every
+    /// outstanding outcome before returning the final stats.
+    pub fn finish(mut self) -> Result<(Vec<WireOutcome>, ClientStats)> {
+        let _ = self.stream.shutdown(Shutdown::Write);
+        let mut out = Vec::new();
+        while !self.pending.is_empty() {
+            match self.read_outcome()? {
+                Some(o) => out.push(o),
+                None => break,
+            }
+        }
+        if !self.pending.is_empty() {
+            return Err(anyhow!(
+                "{} items never produced an outcome",
+                self.pending.len()
+            ));
+        }
+        Ok((out, self.stats))
+    }
+}
+
+fn connect_with_retry(addr: &str, retry: RetryPolicy) -> Result<TcpStream> {
+    let mut last_err: Option<io::Error> = None;
+    for attempt in 0..retry.attempts.max(1) {
+        if attempt > 0 {
+            std::thread::sleep(retry.backoff * attempt);
+        }
+        let resolved = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("resolving {addr}: {e}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+        match TcpStream::connect(resolved) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(anyhow!(
+        "connecting to {addr} failed after {} attempts: {}",
+        retry.attempts.max(1),
+        last_err.map(|e| e.to_string()).unwrap_or_default()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> TaskKind {
+        TaskKind::ClassifyResnet { split: 2 }
+    }
+
+    fn sample_item() -> WireItem {
+        WireItem {
+            id: 7,
+            image_index: 123,
+            elements: 4096,
+            bytes: vec![0xAB; 37],
+        }
+    }
+
+    fn sample_outcome() -> WireOutcome {
+        WireOutcome {
+            id: 7,
+            image_index: 123,
+            correct: Some(true),
+            latency_s: 0.0125,
+            bits_per_element: 0.71,
+            detections: vec![Detection {
+                image: 123,
+                class: 2,
+                score: 0.9,
+                x: 1.0,
+                y: 2.0,
+                w: 3.0,
+                h: 4.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn item_frame_roundtrips() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, task(), &Frame::Item(sample_item())).unwrap();
+        assert_eq!(n, buf.len());
+        assert_eq!(n, FRAME_HEADER_BYTES + 8 + 37);
+        let (t, frame) = read_frame(&mut buf.as_slice(), Some(task())).unwrap().unwrap();
+        assert_eq!(t, task());
+        assert_eq!(frame, Frame::Item(sample_item()));
+    }
+
+    #[test]
+    fn outcome_frame_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TaskKind::Detect, &Frame::Outcome(sample_outcome())).unwrap();
+        let (_, frame) = read_frame(&mut buf.as_slice(), None).unwrap().unwrap();
+        assert_eq!(frame, Frame::Outcome(sample_outcome()));
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean_mid_frame_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, task(), &Frame::Item(sample_item())).unwrap();
+        assert!(read_frame(&mut &buf[..0], None).unwrap().is_none());
+        assert!(read_frame(&mut &buf[..10], None).is_err());
+        assert!(read_frame(&mut &buf[..FRAME_HEADER_BYTES + 3], None).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_task_and_mismatched_task() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, task(), &Frame::Item(sample_item())).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_frame(&mut bad.as_slice(), None).is_err());
+
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(read_frame(&mut bad.as_slice(), None).is_err());
+
+        let mut bad = buf.clone();
+        bad[6] = 0xFF;
+        assert!(read_frame(&mut bad.as_slice(), None).is_err());
+
+        assert!(read_frame(&mut buf.as_slice(), Some(TaskKind::Detect)).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_payload_claim() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, task(), &Frame::Item(sample_item())).unwrap();
+        buf[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn rejects_implausible_element_claim_before_any_decoder_sees_it() {
+        // A crafted frame claiming 2^60 elements for a tiny payload must
+        // die at the framing layer — the legacy decoder would otherwise
+        // Vec::with_capacity it.
+        let forged = WireItem {
+            id: 1,
+            image_index: 1,
+            elements: 1 << 60,
+            bytes: vec![0u8; 16],
+        };
+        let mut buf = Vec::new();
+        write_item_frame(&mut buf, task(), &forged).unwrap();
+        let err = read_frame(&mut buf.as_slice(), None).unwrap_err();
+        assert!(
+            err.to_string().contains("implausible"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn task_codes_roundtrip() {
+        for t in [
+            TaskKind::ClassifyResnet { split: 1 },
+            TaskKind::ClassifyResnet { split: 2 },
+            TaskKind::ClassifyResnet { split: 3 },
+            TaskKind::ClassifyAlex,
+            TaskKind::Detect,
+        ] {
+            assert_eq!(TaskKind::from_code(t.code()).unwrap(), t);
+        }
+        assert!(TaskKind::from_code(0x00).is_err());
+        assert!(TaskKind::from_code(0x10).is_err());
+    }
+}

@@ -25,6 +25,29 @@ impl TaskKind {
     pub fn is_detection(&self) -> bool {
         matches!(self, TaskKind::Detect)
     }
+
+    /// One-byte wire code carried in every [`super::net`] frame header so
+    /// both peers can verify they serve the same split network.
+    pub fn code(&self) -> u8 {
+        match self {
+            TaskKind::ClassifyResnet { split } => 0x10 | (*split as u8 & 0x0F),
+            TaskKind::ClassifyAlex => 0x20,
+            TaskKind::Detect => 0x30,
+        }
+    }
+
+    /// Inverse of [`TaskKind::code`]; rejects unknown codes (untrusted
+    /// network input).
+    pub fn from_code(code: u8) -> Result<TaskKind, String> {
+        match code {
+            0x11..=0x13 => Ok(TaskKind::ClassifyResnet {
+                split: (code & 0x0F) as usize,
+            }),
+            0x20 => Ok(TaskKind::ClassifyAlex),
+            0x30 => Ok(TaskKind::Detect),
+            other => Err(format!("unknown task code {other:#04x}")),
+        }
+    }
 }
 
 /// Send-able quantizer specification (the xla handles are not Send, and

@@ -5,15 +5,33 @@
 //!  requests ─▶ [request queue] ─▶ edge workers (E threads, batch=B)
 //!                                   │ edge fwd → lightweight encode
 //!                                   ▼
-//!               [transit queue — "the network"] ─▶ cloud worker
-//!                                   │ decode → cloud fwd → outcome
+//!                      [Transport — "the network"] ─▶ cloud worker
+//!                items ─────────────────────────▶      │ decode →
+//!                outcomes ◀─────────────────────        cloud fwd
+//!                                   │
 //!                                   ▼
-//!                               [outcomes]
+//!                               [collector]
 //! ```
 //!
-//! Bounded queues provide backpressure end to end; every stage thread
-//! owns its PJRT client (xla handles are not Send). This is the paper's
-//! Fig. 1 deployment with the codec on the wire.
+//! The transit stage is a [`Transport`] trait: the in-process
+//! [`LoopbackTransport`] (bounded queues, the default for benches and
+//! artifact tests) or [`TcpTransport`], which runs the same pipeline
+//! through a real localhost TCP socket pair using the `LWFN` wire frames
+//! of [`super::net`]. Bounded queues / TCP flow control provide
+//! backpressure end to end; every stage thread builds its own worker
+//! in-thread (xla handles are not Send).
+//!
+//! Stage logic is generic over [`EdgeStage`] / [`CloudStage`], so the
+//! orchestration (including its shutdown ordering) is testable with
+//! synthetic codec-only stages — no artifacts needed.
+//!
+//! ## Shutdown & failure ordering
+//!
+//! A supervisor joins the stages in pipeline order and closes each
+//! direction as its producers finish, so the collector always terminates:
+//! worker errors surface as `Err` from [`serve`] instead of a hang (the
+//! collect loop previously waited for `requests` outcomes that a failed
+//! worker would never produce).
 //!
 //! Codec parallelism: when `EdgeConfig::threads > 1` each edge device
 //! encodes its split tensor as a tiled multi-substream container
@@ -22,6 +40,7 @@
 //! is self-describing — the cloud ingest path accepts batched containers
 //! and legacy single streams interchangeably.
 
+use std::sync::Mutex;
 use std::thread;
 use std::time::Instant;
 
@@ -31,8 +50,47 @@ use super::cloud::{CloudConfig, CloudTimes, CloudWorker};
 use super::edge::{EdgeConfig, EdgeTimes, EdgeWorker};
 use super::metrics::ServeReport;
 use super::protocol::{CompressedItem, Outcome, Request, TaskKind};
+use super::transport::{LoopbackTransport, TcpTransport, Transport, TransportKind};
 use crate::runtime::Manifest;
 use crate::util::threadpool::BoundedQueue;
+
+/// One edge device's request→compressed-item stage. Implementations are
+/// built *inside* their worker thread by a factory (xla handles are not
+/// Send).
+pub trait EdgeStage {
+    fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>>;
+    fn times(&self) -> EdgeTimes {
+        EdgeTimes::default()
+    }
+}
+
+/// The cloud's compressed-item→outcome stage.
+pub trait CloudStage {
+    fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>>;
+    fn times(&self) -> CloudTimes {
+        CloudTimes::default()
+    }
+}
+
+impl EdgeStage for EdgeWorker {
+    fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
+        EdgeWorker::process(self, requests)
+    }
+
+    fn times(&self) -> EdgeTimes {
+        self.times
+    }
+}
+
+impl CloudStage for CloudWorker {
+    fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>> {
+        CloudWorker::process(self, items)
+    }
+
+    fn times(&self) -> CloudTimes {
+        self.times
+    }
+}
 
 /// Whole-pipeline configuration.
 #[derive(Clone, Debug)]
@@ -47,6 +105,8 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// First corpus index to serve (offset into the validation stream).
     pub first_index: u64,
+    /// Transit stage implementation (loopback queues or localhost TCP).
+    pub transport: TransportKind,
 }
 
 impl ServeConfig {
@@ -58,20 +118,55 @@ impl ServeConfig {
             requests: 256,
             queue_capacity: 64,
             first_index: 0,
+            transport: TransportKind::Loopback,
         }
     }
 }
 
-/// Run the pipeline to completion and aggregate a report.
-pub fn serve(manifest: &Manifest, config: ServeConfig) -> Result<ServeReport> {
-    assert_eq!(config.edge.task, config.cloud.task, "edge/cloud task mismatch");
-    let batch = config.edge.batch;
-    let req_q: BoundedQueue<Request> = BoundedQueue::new(config.queue_capacity);
-    let transit_q: BoundedQueue<CompressedItem> = BoundedQueue::new(config.queue_capacity);
-    let out_q: BoundedQueue<Outcome> = BoundedQueue::new(config.queue_capacity.max(config.requests));
+/// Orchestration-only subset of [`ServeConfig`], consumed by
+/// [`run_pipeline`] (which neither knows nor cares how stages are built).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub edge_workers: usize,
+    pub requests: usize,
+    pub batch: usize,
+    pub queue_capacity: usize,
+    pub first_index: u64,
+}
 
-    let started = Instant::now();
-    let report = thread::scope(|s| -> Result<ServeReport> {
+/// Everything a pipeline run produces besides the report aggregation.
+#[derive(Debug, Default)]
+pub struct PipelineOutput {
+    pub outcomes: Vec<Outcome>,
+    pub edge_times: EdgeTimes,
+    pub cloud_times: CloudTimes,
+}
+
+/// Run the generic pipeline to completion.
+///
+/// `edge_factory(w)` / `cloud_factory()` build the stages inside their
+/// worker threads. The collector stops as soon as `requests` outcomes
+/// arrived *or* the outcome direction closed — a supervisor thread joins
+/// the stages in pipeline order (edge → transit close → cloud → outcome
+/// close), so a stage returning `Err` mid-run shuts the whole pipeline
+/// down and surfaces the error instead of deadlocking the collector.
+pub fn run_pipeline<E, C, EF, CF>(
+    config: &PipelineConfig,
+    transport: &dyn Transport,
+    edge_factory: EF,
+    cloud_factory: CF,
+) -> Result<PipelineOutput>
+where
+    E: EdgeStage,
+    C: CloudStage,
+    EF: Fn(usize) -> Result<E> + Sync,
+    CF: FnOnce() -> Result<C> + Send,
+{
+    let batch = config.batch.max(1);
+    let req_q: BoundedQueue<Request> = BoundedQueue::new(config.queue_capacity.max(1));
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    let output = thread::scope(|s| -> Result<PipelineOutput> {
         // --- request generator ------------------------------------------
         let gen_q = req_q.clone();
         let n_req = config.requests;
@@ -92,76 +187,180 @@ pub fn serve(manifest: &Manifest, config: ServeConfig) -> Result<ServeReport> {
 
         // --- edge workers -------------------------------------------------
         let mut edge_handles = Vec::new();
-        for w in 0..config.edge_workers {
+        for w in 0..config.edge_workers.max(1) {
             let in_q = req_q.clone();
-            let fwd_q = transit_q.clone();
-            let cfg = config.edge.clone();
-            let mani = manifest.clone();
+            let edge_factory = &edge_factory;
             edge_handles.push(s.spawn(move || -> Result<EdgeTimes> {
-                let mut worker = EdgeWorker::new(&mani, cfg)
-                    .map_err(|e| anyhow!("edge worker {w}: {e}"))?;
+                let mut stage = edge_factory(w)?;
                 while let Some(reqs) = in_q.pop_up_to(batch) {
-                    for item in worker.process(&reqs)? {
-                        if fwd_q.push(item).is_err() {
-                            return Ok(worker.times);
+                    for item in stage.process(&reqs)? {
+                        if transport.send_item(item).is_err() {
+                            // Transit shut down (e.g. the cloud stage
+                            // died); stop gracefully — the supervisor
+                            // reports the root cause.
+                            return Ok(stage.times());
                         }
                     }
                 }
-                Ok(worker.times)
+                Ok(stage.times())
             }));
         }
 
         // --- cloud worker --------------------------------------------------
-        let cloud_in = transit_q.clone();
-        let cloud_out = out_q.clone();
-        let ccfg = config.cloud.clone();
-        let mani = manifest.clone();
         let cloud_handle = s.spawn(move || -> Result<CloudTimes> {
-            let mut worker = CloudWorker::new(&mani, ccfg)?;
-            while let Some(items) = cloud_in.pop_up_to(batch) {
-                for o in worker.process(&items)? {
-                    if cloud_out.push(o).is_err() {
-                        return Ok(worker.times);
+            let run = move || -> Result<CloudTimes> {
+                let mut stage = cloud_factory()?;
+                while let Some(items) = transport.recv_items(batch) {
+                    for o in stage.process(&items)? {
+                        if transport.send_outcome(o).is_err() {
+                            return Ok(stage.times());
+                        }
                     }
                 }
+                Ok(stage.times())
+            };
+            let result = run();
+            if result.is_err() {
+                // Unblock edge senders before surfacing the error, or
+                // they would block forever pushing into a full transit.
+                transport.close_items();
             }
-            Ok(worker.times)
+            result
         });
 
-        // --- collect ---------------------------------------------------------
+        // --- supervisor: join in pipeline order, close as we go -----------
+        let sup_req_q = req_q.clone();
+        let errors_ref = &errors;
+        let supervisor = s.spawn(move || -> (EdgeTimes, CloudTimes) {
+            let mut edge_times = EdgeTimes::default();
+            for (w, h) in edge_handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(t)) => {
+                        edge_times.datagen_s += t.datagen_s;
+                        edge_times.infer_s += t.infer_s;
+                        edge_times.encode_s += t.encode_s;
+                        edge_times.items += t.items;
+                        edge_times.bytes += t.bytes;
+                    }
+                    Ok(Err(e)) => errors_ref
+                        .lock()
+                        .unwrap()
+                        .push(format!("edge worker {w}: {e:#}")),
+                    Err(_) => errors_ref
+                        .lock()
+                        .unwrap()
+                        .push(format!("edge worker {w} panicked")),
+                }
+            }
+            // If every edge worker died early the generator may still be
+            // blocked pushing; closing the request queue unblocks it.
+            sup_req_q.close();
+            transport.close_items();
+            let cloud_times = match cloud_handle.join() {
+                Ok(Ok(t)) => t,
+                Ok(Err(e)) => {
+                    errors_ref
+                        .lock()
+                        .unwrap()
+                        .push(format!("cloud worker: {e:#}"));
+                    CloudTimes::default()
+                }
+                Err(_) => {
+                    errors_ref
+                        .lock()
+                        .unwrap()
+                        .push("cloud worker panicked".to_string());
+                    CloudTimes::default()
+                }
+            };
+            transport.close_outcomes();
+            (edge_times, cloud_times)
+        });
+
+        // --- collect (this thread) ----------------------------------------
         let mut outcomes = Vec::with_capacity(config.requests);
         for _ in 0..config.requests {
-            match out_q.pop() {
+            match transport.recv_outcome() {
                 Some(o) => outcomes.push(o),
-                None => break,
+                None => break, // closed by the supervisor: a stage failed
             }
         }
 
-        // Shut down: edge workers end when the request queue closes; close
-        // transit when they are all done.
-        let mut edge_times = EdgeTimes::default();
-        for h in edge_handles {
-            let t = h.join().map_err(|_| anyhow!("edge thread panicked"))??;
-            edge_times.datagen_s += t.datagen_s;
-            edge_times.infer_s += t.infer_s;
-            edge_times.encode_s += t.encode_s;
-            edge_times.items += t.items;
-            edge_times.bytes += t.bytes;
-        }
-        transit_q.close();
-        let cloud_times = cloud_handle
+        let (edge_times, cloud_times) = supervisor
             .join()
-            .map_err(|_| anyhow!("cloud thread panicked"))??;
-        out_q.close();
-
-        Ok(ServeReport::aggregate(
-            config.cloud.task,
+            .map_err(|_| anyhow!("pipeline supervisor panicked"))?;
+        Ok(PipelineOutput {
             outcomes,
             edge_times,
             cloud_times,
-            started.elapsed().as_secs_f64(),
-        ))
+        })
     })?;
+
+    let mut errs = errors.into_inner().unwrap();
+    // A torn wire (socket error, malformed frame) closes the transit
+    // queues and lets the stages wind down "cleanly" — surface it so a
+    // truncated run cannot masquerade as success.
+    if let Some(e) = transport.take_error() {
+        errs.push(format!("transport: {e}"));
+    }
+    if !errs.is_empty() {
+        return Err(anyhow!("pipeline failed: {}", errs.join("; ")));
+    }
+    Ok(output)
+}
+
+/// Build the transport selected by `config`.
+pub fn build_transport(config: &ServeConfig) -> Result<Box<dyn Transport>> {
+    let out_capacity = config.queue_capacity.max(config.requests);
+    Ok(match config.transport {
+        TransportKind::Loopback => Box::new(LoopbackTransport::new(
+            config.queue_capacity.max(1),
+            out_capacity,
+        )),
+        TransportKind::Tcp => Box::new(TcpTransport::loopback(
+            config.edge.task,
+            config.queue_capacity.max(1),
+            out_capacity,
+        )?),
+    })
+}
+
+/// Run the pipeline to completion with the real PJRT-backed workers and
+/// aggregate a report.
+pub fn serve(manifest: &Manifest, config: ServeConfig) -> Result<ServeReport> {
+    assert_eq!(config.edge.task, config.cloud.task, "edge/cloud task mismatch");
+    let transport = build_transport(&config)?;
+    let pcfg = PipelineConfig {
+        edge_workers: config.edge_workers,
+        requests: config.requests,
+        batch: config.edge.batch,
+        queue_capacity: config.queue_capacity,
+        first_index: config.first_index,
+    };
+    let edge_cfg = config.edge.clone();
+    let cloud_cfg = config.cloud.clone();
+    let edge_manifest = manifest.clone();
+    let cloud_manifest = manifest.clone();
+
+    let started = Instant::now();
+    let output = run_pipeline(
+        &pcfg,
+        transport.as_ref(),
+        move |w| {
+            EdgeWorker::new(&edge_manifest, edge_cfg.clone())
+                .map_err(|e| anyhow!("building edge worker {w}: {e:#}"))
+        },
+        move || CloudWorker::new(&cloud_manifest, cloud_cfg),
+    )?;
+
+    let mut report = ServeReport::aggregate(
+        config.cloud.task,
+        output.outcomes,
+        output.edge_times,
+        output.cloud_times,
+        started.elapsed().as_secs_f64(),
+    );
+    report.transport = transport.stats();
     Ok(report)
 }
 

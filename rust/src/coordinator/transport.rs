@@ -1,0 +1,493 @@
+//! The transit stage of the serving pipeline as a swappable trait: items
+//! flow edge→cloud, outcomes flow cloud→edge, and both directions have
+//! close-and-drain semantics.
+//!
+//! Two implementations:
+//!
+//! * [`LoopbackTransport`] — the original in-process [`BoundedQueue`]
+//!   pair. Zero-copy, no serialization; still the default for benches and
+//!   artifact tests.
+//! * [`TcpTransport`] — the same contract over a real localhost TCP socket
+//!   pair using the [`super::net`] frame format, so the full pipeline
+//!   exercises an actual wire (serialize → kernel → deserialize) with
+//!   TCP flow control acting as the backpressure bound. Outcome latency is
+//!   re-stamped on the edge side from a pending-id map, so reported
+//!   latencies include both wire legs.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::TransportStats;
+use super::net::{read_frame, write_item_frame, write_outcome_frame, Frame, WireItem, WireOutcome};
+use super::protocol::{CompressedItem, Outcome, TaskKind};
+use crate::util::threadpool::BoundedQueue;
+use crate::util::timer::Percentiles;
+
+/// Which transit stage a [`super::server::ServeConfig`] runs through.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process bounded queues (no serialization).
+    #[default]
+    Loopback,
+    /// A real localhost TCP socket pair carrying `LWFN` frames.
+    Tcp,
+}
+
+/// The transit stage: how compressed items reach the cloud worker and how
+/// outcomes come back. All methods are callable from any pipeline thread.
+pub trait Transport: Send + Sync {
+    /// Forward one item toward the cloud. `Err` means the transit stage
+    /// has shut down (receiver gone) — senders should stop gracefully.
+    fn send_item(&self, item: CompressedItem) -> Result<(), ()>;
+    /// Signal that no more items will be sent; wakes blocked receivers
+    /// once the in-flight items drain.
+    fn close_items(&self);
+    /// Receive up to `max` items, blocking for at least one; `None` when
+    /// the item direction is closed and drained.
+    fn recv_items(&self, max: usize) -> Option<Vec<CompressedItem>>;
+
+    /// Send one outcome back toward the collector.
+    fn send_outcome(&self, outcome: Outcome) -> Result<(), ()>;
+    /// Signal that no more outcomes will be sent.
+    fn close_outcomes(&self);
+    /// Receive one outcome; `None` when closed and drained.
+    fn recv_outcome(&self) -> Option<Outcome>;
+
+    fn stats(&self) -> TransportStats;
+
+    /// A transit-layer failure recorded during the run (e.g. a socket
+    /// error or malformed frame that tore a direction down mid-stream).
+    /// [`super::server::run_pipeline`] surfaces it as a pipeline error so
+    /// wire failures cannot masquerade as a short-but-successful run.
+    fn take_error(&self) -> Option<String> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback
+
+/// The original in-process transit: a bounded item queue and an outcome
+/// queue sized so the cloud worker never blocks on a slow collector.
+pub struct LoopbackTransport {
+    transit: BoundedQueue<CompressedItem>,
+    out: BoundedQueue<Outcome>,
+    items: AtomicU64,
+    outcomes: AtomicU64,
+}
+
+impl LoopbackTransport {
+    pub fn new(transit_capacity: usize, outcome_capacity: usize) -> Self {
+        Self {
+            transit: BoundedQueue::new(transit_capacity),
+            out: BoundedQueue::new(outcome_capacity),
+            items: AtomicU64::new(0),
+            outcomes: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn send_item(&self, item: CompressedItem) -> Result<(), ()> {
+        self.items.fetch_add(1, Ordering::Relaxed);
+        self.transit.push(item).map_err(|_| ())
+    }
+
+    fn close_items(&self) {
+        self.transit.close();
+    }
+
+    fn recv_items(&self, max: usize) -> Option<Vec<CompressedItem>> {
+        self.transit.pop_up_to(max)
+    }
+
+    fn send_outcome(&self, outcome: Outcome) -> Result<(), ()> {
+        self.outcomes.fetch_add(1, Ordering::Relaxed);
+        self.out.push(outcome).map_err(|_| ())
+    }
+
+    fn close_outcomes(&self) {
+        self.out.close();
+    }
+
+    fn recv_outcome(&self) -> Option<Outcome> {
+        self.out.pop()
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            name: "loopback",
+            items: self.items.load(Ordering::Relaxed),
+            outcomes: self.outcomes.load(Ordering::Relaxed),
+            ..TransportStats::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+
+struct TcpShared {
+    transit: BoundedQueue<CompressedItem>,
+    out: BoundedQueue<Outcome>,
+    /// id → (original arrival stamp, wire-send stamp): outcome latency and
+    /// RTT are both measured on the edge side, covering both wire legs.
+    pending: Mutex<HashMap<u64, (Instant, Instant)>>,
+    wire: Mutex<WireCounters>,
+    /// First mid-run socket/protocol failure either reader hit; surfaced
+    /// through [`Transport::take_error`] so a torn wire fails the run.
+    error: Mutex<Option<String>>,
+}
+
+impl TcpShared {
+    fn record_error(&self, err: String) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(err);
+        }
+    }
+}
+
+#[derive(Default)]
+struct WireCounters {
+    bytes_sent: u64,
+    bytes_received: u64,
+    items: u64,
+    outcomes: u64,
+    rtt: Percentiles,
+}
+
+/// In-process pipeline transit over a real localhost TCP socket pair.
+///
+/// The edge side serializes each item into an `LWFN` frame; a reader
+/// thread on the cloud side deserializes into a bounded queue (when the
+/// queue fills, the reader stalls and TCP flow control pushes back on the
+/// senders). Outcomes travel the reverse direction the same way.
+pub struct TcpTransport {
+    task: TaskKind,
+    shared: Arc<TcpShared>,
+    /// Edge side: writes item frames.
+    edge_tx: Mutex<TcpStream>,
+    /// Cloud side: writes outcome frames.
+    cloud_tx: Mutex<TcpStream>,
+    /// Duplicated handles for `shutdown()` only — kept OUTSIDE the write
+    /// mutexes so close_items/close_outcomes never wait on a writer that
+    /// is itself blocked on TCP backpressure (`TcpStream::shutdown` takes
+    /// `&self` and unblocks that very writer).
+    edge_shutdown: TcpStream,
+    cloud_shutdown: TcpStream,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl TcpTransport {
+    /// Bind an ephemeral localhost port and connect both ends.
+    pub fn loopback(task: TaskKind, capacity: usize, outcome_capacity: usize) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| anyhow!("binding loopback transport: {e}"))?;
+        let addr = listener.local_addr()?;
+        // Localhost connect completes via the listen backlog without a
+        // concurrent accept, so this is safe single-threaded.
+        let edge_stream = TcpStream::connect(addr)?;
+        let (cloud_stream, _) = listener.accept()?;
+        edge_stream.set_nodelay(true).ok();
+        cloud_stream.set_nodelay(true).ok();
+
+        let shared = Arc::new(TcpShared {
+            transit: BoundedQueue::new(capacity),
+            out: BoundedQueue::new(outcome_capacity),
+            pending: Mutex::new(HashMap::new()),
+            wire: Mutex::new(WireCounters::default()),
+            error: Mutex::new(None),
+        });
+
+        // Cloud-side ingest: item frames → transit queue.
+        let ingest = {
+            let shared = Arc::clone(&shared);
+            let mut rd = cloud_stream.try_clone()?;
+            std::thread::spawn(move || {
+                loop {
+                    match read_frame(&mut rd, Some(task)) {
+                        Ok(Some((_, Frame::Item(wi)))) => {
+                            let n = super::net::FRAME_HEADER_BYTES + 8 + wi.bytes.len();
+                            shared.wire.lock().unwrap().bytes_received += n as u64;
+                            if shared.transit.push(wi.into_item(Instant::now())).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(Some(_)) => {
+                            shared.record_error("item wire carried an outcome frame".into());
+                            break;
+                        }
+                        Ok(None) => break, // clean half-close
+                        Err(e) => {
+                            shared.record_error(format!("item wire: {e}"));
+                            break;
+                        }
+                    }
+                }
+                shared.transit.close();
+            })
+        };
+
+        // Edge-side ingest: outcome frames → out queue, latency re-stamp.
+        let egress = {
+            let shared = Arc::clone(&shared);
+            let mut rd = edge_stream.try_clone()?;
+            std::thread::spawn(move || {
+                loop {
+                    match read_frame(&mut rd, Some(task)) {
+                        Ok(Some((_, Frame::Outcome(wo)))) => {
+                            let n = super::net::FRAME_HEADER_BYTES
+                                + 21
+                                + wo.detections.len() * super::net::DET_WIRE_BYTES;
+                            shared.wire.lock().unwrap().bytes_received += n as u64;
+                            let mut outcome = wo.into_outcome();
+                            if let Some((arrived, sent)) =
+                                shared.pending.lock().unwrap().remove(&outcome.id)
+                            {
+                                outcome.latency_s = arrived.elapsed().as_secs_f64();
+                                let mut w = shared.wire.lock().unwrap();
+                                w.rtt.push(sent.elapsed().as_secs_f64());
+                                w.outcomes += 1;
+                            }
+                            if shared.out.push(outcome).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(Some(_)) => {
+                            shared.record_error("outcome wire carried an item frame".into());
+                            break;
+                        }
+                        Ok(None) => break, // clean half-close
+                        Err(e) => {
+                            shared.record_error(format!("outcome wire: {e}"));
+                            break;
+                        }
+                    }
+                }
+                shared.out.close();
+            })
+        };
+
+        let edge_shutdown = edge_stream.try_clone()?;
+        let cloud_shutdown = cloud_stream.try_clone()?;
+        Ok(Self {
+            task,
+            shared,
+            edge_tx: Mutex::new(edge_stream),
+            cloud_tx: Mutex::new(cloud_stream),
+            edge_shutdown,
+            cloud_shutdown,
+            readers: Mutex::new(vec![ingest, egress]),
+        })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send_item(&self, item: CompressedItem) -> Result<(), ()> {
+        let id = item.id;
+        let arrived = item.arrived;
+        // Move the codec bytes onto the wire representation — no copy.
+        let wire = WireItem {
+            id,
+            image_index: item.image_index,
+            elements: item.elements as u64,
+            bytes: item.bytes,
+        };
+        self.shared
+            .pending
+            .lock()
+            .unwrap()
+            .insert(id, (arrived, Instant::now()));
+        let mut tx = self.edge_tx.lock().unwrap();
+        match write_item_frame(&mut *tx, self.task, &wire) {
+            Ok(n) => {
+                let mut w = self.shared.wire.lock().unwrap();
+                w.bytes_sent += n as u64;
+                w.items += 1;
+                Ok(())
+            }
+            Err(_) => {
+                self.shared.pending.lock().unwrap().remove(&id);
+                Err(())
+            }
+        }
+    }
+
+    fn close_items(&self) {
+        // Half-close via the dedicated shutdown handle — NOT through the
+        // edge_tx mutex, which a backpressure-stalled send_item may hold
+        // indefinitely (the shutdown is precisely what unblocks it). The
+        // cloud-side reader drains what is already on the wire, then sees
+        // EOF and closes the transit queue.
+        let _ = self.edge_shutdown.shutdown(Shutdown::Write);
+    }
+
+    fn recv_items(&self, max: usize) -> Option<Vec<CompressedItem>> {
+        self.shared.transit.pop_up_to(max)
+    }
+
+    fn send_outcome(&self, outcome: Outcome) -> Result<(), ()> {
+        let wire = WireOutcome {
+            id: outcome.id,
+            image_index: outcome.image_index,
+            correct: outcome.correct,
+            latency_s: outcome.latency_s,
+            bits_per_element: outcome.bits_per_element,
+            detections: outcome.detections,
+        };
+        let mut tx = self.cloud_tx.lock().unwrap();
+        match write_outcome_frame(&mut *tx, self.task, &wire) {
+            Ok(n) => {
+                self.shared.wire.lock().unwrap().bytes_sent += n as u64;
+                Ok(())
+            }
+            Err(_) => Err(()),
+        }
+    }
+
+    fn close_outcomes(&self) {
+        let _ = self.cloud_shutdown.shutdown(Shutdown::Write);
+    }
+
+    fn stats(&self) -> TransportStats {
+        let w = self.shared.wire.lock().unwrap();
+        TransportStats {
+            name: "tcp",
+            bytes_sent: w.bytes_sent,
+            bytes_received: w.bytes_received,
+            items: w.items,
+            outcomes: w.outcomes,
+            reconnects: 0,
+            rtt_p50_s: w.rtt.quantile(0.50),
+            rtt_p95_s: w.rtt.quantile(0.95),
+            rtt_p99_s: w.rtt.quantile(0.99),
+        }
+    }
+
+    fn take_error(&self) -> Option<String> {
+        self.shared.error.lock().unwrap().take()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Close both queues so reader threads blocked in push() exit, then
+        // both sockets (via the lock-free shutdown handles) so reader
+        // threads blocked in read() exit.
+        self.shared.transit.close();
+        self.shared.out.close();
+        let _ = self.edge_shutdown.shutdown(Shutdown::Both);
+        let _ = self.cloud_shutdown.shutdown(Shutdown::Both);
+        for h in self.readers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn item(id: u64) -> CompressedItem {
+        CompressedItem {
+            id,
+            image_index: id + 100,
+            bytes: vec![id as u8; 64],
+            elements: 256,
+            arrived: Instant::now(),
+            encoded: Instant::now(),
+        }
+    }
+
+    fn outcome_of(i: &CompressedItem) -> Outcome {
+        Outcome {
+            id: i.id,
+            image_index: i.image_index,
+            correct: Some(true),
+            detections: Vec::new(),
+            latency_s: 0.0,
+            bits_per_element: i.bits_per_element(),
+        }
+    }
+
+    fn roundtrip(transport: &dyn Transport, n: u64) -> Vec<Outcome> {
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for id in 0..n {
+                    transport.send_item(item(id)).unwrap();
+                }
+                transport.close_items();
+            });
+            s.spawn(|| {
+                while let Some(items) = transport.recv_items(4) {
+                    for i in &items {
+                        transport.send_outcome(outcome_of(i)).unwrap();
+                    }
+                }
+                transport.close_outcomes();
+            });
+            let mut got = Vec::new();
+            while let Some(o) = transport.recv_outcome() {
+                got.push(o);
+            }
+            got
+        })
+    }
+
+    #[test]
+    fn loopback_roundtrips_all_items() {
+        let t = LoopbackTransport::new(8, 64);
+        let mut got = roundtrip(&t, 40);
+        got.sort_by_key(|o| o.id);
+        assert_eq!(got.len(), 40);
+        assert!(got.iter().enumerate().all(|(k, o)| o.id == k as u64));
+        assert_eq!(t.stats().items, 40);
+    }
+
+    #[test]
+    fn tcp_roundtrips_all_items_and_counts_wire_bytes() {
+        let t = TcpTransport::loopback(TaskKind::ClassifyAlex, 8, 64).unwrap();
+        let mut got = roundtrip(&t, 40);
+        got.sort_by_key(|o| o.id);
+        assert_eq!(got.len(), 40);
+        assert!(got.iter().enumerate().all(|(k, o)| o.id == k as u64));
+        let stats = t.stats();
+        assert_eq!(stats.items, 40);
+        assert_eq!(stats.outcomes, 40);
+        // 40 item frames + 40 outcome frames crossed the wire.
+        assert!(stats.bytes_sent > 40 * 64, "sent {}", stats.bytes_sent);
+        assert!(stats.bytes_received > 40 * 64);
+        assert!(stats.rtt_p50_s >= 0.0 && stats.rtt_p99_s >= stats.rtt_p50_s);
+        // Latency was re-stamped on the edge side and is therefore small
+        // but positive.
+        assert!(got.iter().all(|o| o.latency_s > 0.0 && o.latency_s < 30.0));
+    }
+
+    #[test]
+    fn tcp_send_after_close_items_fails_cleanly() {
+        let t = TcpTransport::loopback(TaskKind::ClassifyAlex, 4, 4).unwrap();
+        t.close_items();
+        // The write half is shut down; the next send must surface Err
+        // rather than panic or hang (the first write may still land in the
+        // kernel buffer on some platforms, so allow one success).
+        let mut failed = false;
+        for id in 0..64 {
+            if t.send_item(item(id)).is_err() {
+                failed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(failed, "sends kept succeeding after close_items");
+        t.close_outcomes();
+        assert!(t.recv_outcome().is_none());
+    }
+}

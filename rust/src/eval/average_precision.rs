@@ -5,7 +5,7 @@
 use crate::data::synth_scenes::{GtBox, DET_CLASSES, DET_IMG};
 
 /// One decoded detection.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Detection {
     pub image: usize,
     pub class: usize,

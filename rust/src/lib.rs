@@ -7,10 +7,13 @@
 //! Three-layer architecture (build/test/bench commands in `rust/README.md`):
 //! * **L3 (this crate)** — the collaborative-intelligence coordinator:
 //!   edge device pool → lightweight codec (single-stream or thread-parallel
-//!   tiled batches, [`codec::batch`]) → cloud workers, plus the analytic
-//!   clipping models, the entropy-constrained quantizer design, the
-//!   picture-codec baseline, and the experiment harness that regenerates
-//!   every figure and table of the paper.
+//!   tiled batches, [`codec::batch`]) → transit ([`coordinator::transport`]:
+//!   in-process loopback queues or a real TCP wire, with a standalone
+//!   multi-client cloud daemon / edge client pair in [`coordinator::net`])
+//!   → cloud workers, plus the analytic clipping models, the
+//!   entropy-constrained quantizer design, the picture-codec baseline, and
+//!   the experiment harness that regenerates every figure and table of the
+//!   paper.
 //! * **L2 (python/compile/model.py)** — JAX split networks, AOT-lowered to
 //!   HLO text artifacts executed via PJRT ([`runtime`]).
 //! * **L1 (python/compile/kernels/)** — Pallas fused fake-quantization and

@@ -4,6 +4,8 @@
 //! ```text
 //! lwfc experiment <id> [--val N] [--out DIR] [--net NAME]   regenerate a paper figure/table
 //! lwfc serve [--net NAME] [--requests N] [--threads N] ...  run the edge→cloud pipeline
+//! lwfc serve --listen ADDR [--conns N] ...                  run the cloud half as a TCP daemon
+//! lwfc edge --connect ADDR [--requests N] ...               run an edge device against a daemon
 //! lwfc fit-model [--mean X --var Y | --net NAME]            fit λ,μ + optimal clip ranges
 //! lwfc encode --input F --output F [--threads N ...]        compress a raw f32 tensor file
 //! lwfc decode --input F --output F [--elements N]           decompress to raw f32
@@ -16,7 +18,10 @@ use anyhow::{anyhow, Context, Result};
 use lwfc::codec::{
     batch, decode as codec_decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer,
 };
-use lwfc::coordinator::{serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind};
+use lwfc::coordinator::{
+    run_edge_node, serve, CloudConfig, CloudDaemon, EdgeConfig, EdgeNodeConfig, QuantSpec,
+    RetryPolicy, ServeConfig, TaskKind, TransportKind,
+};
 use lwfc::experiments::{self, common::ExpCtx};
 use lwfc::modeling;
 use lwfc::runtime::Manifest;
@@ -35,6 +40,7 @@ fn main() {
     let result = match cmd.as_str() {
         "experiment" => cmd_experiment(rest),
         "serve" => cmd_serve(rest),
+        "edge" => cmd_edge(rest),
         "fit-model" => cmd_fit_model(rest),
         "encode" => cmd_encode(rest),
         "decode" => cmd_decode(rest),
@@ -63,6 +69,11 @@ fn usage() -> &'static str {
 commands:
   experiment <id|all>   regenerate a paper figure/table (see `lwfc list`)
   serve                 run the edge→cloud collaborative-intelligence pipeline
+                        (in-process; --transport tcp routes the transit stage
+                        through a real localhost socket, --listen ADDR runs
+                        the cloud half as a standalone TCP daemon)
+  edge                  run an edge device against a cloud daemon
+                        (edge --connect HOST:PORT, see serve --listen)
   fit-model             fit the asymmetric-Laplace model + optimal clip ranges
   encode / decode       compress / decompress raw f32 tensor files
   list                  list available experiments
@@ -112,6 +123,34 @@ fn cmd_experiment(raw: Vec<String>) -> Result<()> {
     experiments::run(&ctx, &id, if net.is_empty() { None } else { Some(net) })
 }
 
+/// Resolve the clip maximum: explicit `--c-max`, else model-optimal from
+/// the manifest's build-time split statistics.
+fn resolve_c_max(
+    m: &Manifest,
+    task: TaskKind,
+    levels: usize,
+    c_max_arg: &str,
+) -> Result<f64> {
+    if !c_max_arg.is_empty() {
+        return c_max_arg
+            .parse()
+            .map_err(|e| anyhow!("--c-max: expected number ({e})"));
+    }
+    let stats = match task {
+        TaskKind::ClassifyResnet { split } => m.resnet_split(split)?.stats,
+        TaskKind::ClassifyAlex => m.alex.stats,
+        TaskKind::Detect => m.detect.stats,
+    };
+    let (act, kappa) = experiments::common::family_of(task);
+    let model = modeling::fit(stats.mean, stats.var, kappa, act).map_err(anyhow::Error::msg)?;
+    let c = modeling::optimal_cmax(&model.pdf, 0.0, levels).c_max;
+    println!(
+        "model-optimal c_max = {c:.4} (λ={:.4}, μ={:.4})",
+        model.input.lambda, model.input.mu
+    );
+    Ok(c)
+}
+
 fn cmd_serve(raw: Vec<String>) -> Result<()> {
     let cmd = Command::new("lwfc serve", "run the collaborative-intelligence pipeline")
         .opt("net", "resnet", "network: resnet[_s1|_s3], alex, detect")
@@ -120,6 +159,18 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt("c-max", "", "clip maximum (default: model-optimal)")
         .opt("edge-workers", "2", "simulated edge devices")
         .opt("threads", "1", "codec threads per worker (tiled batched codec when > 1)")
+        .opt(
+            "transport",
+            "loopback",
+            "transit stage: loopback (in-process queues) or tcp (real localhost socket)",
+        )
+        .opt(
+            "listen",
+            "",
+            "run the cloud half as a TCP daemon on this address (e.g. 0.0.0.0:7878) \
+             instead of the in-process pipeline",
+        )
+        .opt("conns", "4", "concurrent connection handlers in --listen mode")
         .opt("artifacts", "", "artifact directory")
         .flag("adaptive", "enable the adaptive clip-range controller");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
@@ -128,24 +179,39 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
 
-    let stats = match task {
-        TaskKind::ClassifyResnet { split } => m.resnet_split(split)?.stats,
-        TaskKind::ClassifyAlex => m.alex.stats,
-        TaskKind::Detect => m.detect.stats,
-    };
-    let c_max: f64 = if a.get("c-max").is_empty() {
-        let (act, kappa) = experiments::common::family_of(task);
-        let model = modeling::fit(stats.mean, stats.var, kappa, act).map_err(anyhow::Error::msg)?;
-        let c = modeling::optimal_cmax(&model.pdf, 0.0, levels).c_max;
-        println!(
-            "model-optimal c_max = {c:.4} (λ={:.4}, μ={:.4})",
-            model.input.lambda, model.input.mu
-        );
-        c
-    } else {
-        a.get_f64("c-max").map_err(|e| anyhow!(e))?
+    let cloud_cfg = CloudConfig {
+        task,
+        val_seed: m.val_seed,
+        batch: m.serve_batch,
+        obj_threshold: 0.3,
+        threads,
     };
 
+    // --- daemon mode -----------------------------------------------------
+    if !a.get("listen").is_empty() {
+        let conns = a.get_usize("conns").map_err(|e| anyhow!(e))?.max(1);
+        let daemon = CloudDaemon::start(a.get("listen"), task, conns, move |conn| {
+            // One CloudWorker per connection, built inside its handler
+            // task (xla handles are not Send).
+            let mut worker = lwfc::coordinator::CloudWorker::new(&m, cloud_cfg.clone())?;
+            eprintln!("connection {conn}: cloud worker ready");
+            Ok(move |item| worker.process_wire(item))
+        })?;
+        println!(
+            "cloud daemon for {task} listening on {} ({conns} connection handlers); Ctrl-C to stop",
+            daemon.local_addr()
+        );
+        daemon.run_forever();
+        return Ok(());
+    }
+
+    // --- in-process pipeline ---------------------------------------------
+    let transport = match a.get("transport") {
+        "loopback" => TransportKind::Loopback,
+        "tcp" => TransportKind::Tcp,
+        other => return Err(anyhow!("--transport must be loopback or tcp, got `{other}`")),
+    };
+    let c_max = resolve_c_max(&m, task, levels, a.get("c-max"))?;
     let cfg = ServeConfig {
         edge: EdgeConfig {
             task,
@@ -162,19 +228,59 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
             }),
             threads,
         },
-        cloud: CloudConfig {
-            task,
-            val_seed: m.val_seed,
-            batch: m.serve_batch,
-            obj_threshold: 0.3,
-            threads,
-        },
+        cloud: cloud_cfg,
         edge_workers: a.get_usize("edge-workers").map_err(|e| anyhow!(e))?,
         requests: a.get_usize("requests").map_err(|e| anyhow!(e))?,
         queue_capacity: 64,
         first_index: 0,
+        transport,
     };
     let report = serve(&m, cfg)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_edge(raw: Vec<String>) -> Result<()> {
+    let cmd = Command::new("lwfc edge", "run an edge device against a cloud daemon")
+        .req("connect", "cloud daemon address (host:port, see `lwfc serve --listen`)")
+        .opt("net", "resnet", "network: resnet[_s1|_s3], alex, detect")
+        .opt("requests", "256", "total requests to stream")
+        .opt("levels", "4", "quantizer levels N")
+        .opt("c-max", "", "clip maximum (default: model-optimal)")
+        .opt("threads", "1", "codec threads (tiled batched codec when > 1)")
+        .opt("window", "8", "in-flight items on the wire before blocking on outcomes")
+        .opt("first-index", "0", "first corpus index to serve")
+        .opt("retries", "5", "connection attempts per (re)connect")
+        .opt("artifacts", "", "artifact directory");
+    let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let m = manifest_from(a.get("artifacts"))?;
+    let task = task_of(a.get("net"))?;
+    let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
+    let c_max = resolve_c_max(&m, task, levels, a.get("c-max"))?;
+
+    let edge_cfg = EdgeConfig {
+        task,
+        quant: QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: c_max as f32,
+            levels,
+        },
+        val_seed: m.val_seed,
+        batch: m.serve_batch,
+        adaptive: None,
+        threads: a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1),
+    };
+    let node = EdgeNodeConfig {
+        connect: a.get("connect").to_string(),
+        requests: a.get_usize("requests").map_err(|e| anyhow!(e))?,
+        window: a.get_usize("window").map_err(|e| anyhow!(e))?.max(1),
+        first_index: a.get_u64("first-index").map_err(|e| anyhow!(e))?,
+        retry: RetryPolicy {
+            attempts: a.get_usize("retries").map_err(|e| anyhow!(e))?.max(1) as u32,
+            ..RetryPolicy::default()
+        },
+    };
+    let report = run_edge_node(&m, edge_cfg, &node)?;
     println!("{}", report.summary());
     Ok(())
 }

@@ -3,11 +3,14 @@
 //!
 //! * [`ThreadPool`] — scoped fork-join parallelism (`map_indexed`) used by
 //!   the experiment sweeps and the data generators;
+//! * [`TaskPool`] — long-lived workers executing dynamically submitted
+//!   closures (the cloud daemon's per-connection handlers);
 //! * [`BoundedQueue`] — an mpsc channel with backpressure used as the
 //!   stage-to-stage conduit of the coordinator pipeline (edge → scheduler →
 //!   cloud), the std-thread analogue of a bounded tokio mpsc.
 
 use std::collections::VecDeque;
+use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -88,6 +91,78 @@ impl ThreadPool {
             handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
         });
         accs.into_iter().reduce(merge).unwrap_or_else(init)
+    }
+}
+
+/// Long-lived worker pool executing dynamically submitted closures —
+/// unlike [`ThreadPool`]'s fork-join `map_indexed`, jobs arrive one at a
+/// time with no known count (e.g. accepted network connections). Dropping
+/// the pool closes the job channel and joins the workers, so in-flight
+/// jobs always finish.
+pub struct TaskPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl TaskPool {
+    pub fn new(workers: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    // Hold the receiver lock only while waiting, not while
+                    // running the job, so workers drain the channel in
+                    // parallel.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // all senders dropped
+                    };
+                    // A panicking job must not kill the worker — the pool
+                    // would silently lose capacity for the rest of its
+                    // life (e.g. a daemon that stops serving connections).
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; it runs on the first free worker. Jobs submitted
+    /// after the pool started shutting down are silently dropped (the
+    /// sender is gone).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Box::new(job));
+        }
+    }
+
+    /// Close the job channel and wait for every queued + running job.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -213,6 +288,51 @@ mod tests {
         let pool = ThreadPool::new(3);
         let total = pool.fold_indexed(1000, || 0u64, |acc, i| *acc += i as u64, |a, b| a + b);
         assert_eq!(total, 499_500);
+    }
+
+    #[test]
+    fn task_pool_runs_every_job_before_join() {
+        let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let pool = TaskPool::new(4);
+        for _ in 0..200 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_jobs() {
+        let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let pool = TaskPool::new(1); // single worker: one panic would kill the pool
+        pool.execute(|| panic!("job panic must not take the worker down"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn task_pool_drop_drains_in_flight_jobs() {
+        let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new(2);
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    thread::sleep(std::time::Duration::from_micros(200));
+                    c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                });
+            }
+        } // drop joins
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 50);
     }
 
     #[test]

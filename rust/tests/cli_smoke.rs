@@ -159,6 +159,71 @@ fn encode_decode_roundtrip_batched() {
 }
 
 #[test]
+fn encode_decode_roundtrip_empty_batched() {
+    // A zero-element tensor must survive the batched container round trip
+    // (the container ships one empty substream carrying the codec header).
+    let input = temp_path("empty.f32");
+    let stream = temp_path("empty.lwfc");
+    let output = temp_path("empty.out.f32");
+    write_f32(&input, &[]);
+
+    let enc = lwfc()
+        .args(["encode", "--input"])
+        .arg(&input)
+        .arg("--output")
+        .arg(&stream)
+        .args(["--levels", "4", "--c-min", "0", "--c-max", "6"])
+        .args(["--threads", "2", "--tile", "64"])
+        .output()
+        .unwrap();
+    assert!(
+        enc.status.success(),
+        "empty encode failed: {}",
+        String::from_utf8_lossy(&enc.stderr)
+    );
+
+    let dec = lwfc()
+        .args(["decode", "--input"])
+        .arg(&stream)
+        .arg("--output")
+        .arg(&output)
+        .output()
+        .unwrap();
+    assert!(
+        dec.status.success(),
+        "empty decode failed: {}",
+        String::from_utf8_lossy(&dec.stderr)
+    );
+    assert_eq!(read_f32(&output).len(), 0);
+    for p in [input, stream, output] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn serve_and_edge_advertise_network_modes() {
+    // `--help` exits non-zero by design (usage goes through the error
+    // path); what matters is that the network modes are documented.
+    let serve = lwfc().args(["serve", "--help"]).output().unwrap();
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&serve.stdout),
+        String::from_utf8_lossy(&serve.stderr)
+    );
+    assert!(text.contains("--listen"), "serve help: {text}");
+    assert!(text.contains("--transport"), "serve help: {text}");
+
+    let edge = lwfc().args(["edge", "--help"]).output().unwrap();
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&edge.stdout),
+        String::from_utf8_lossy(&edge.stderr)
+    );
+    assert!(text.contains("--connect"), "edge help: {text}");
+    assert!(text.contains("--window"), "edge help: {text}");
+}
+
+#[test]
 fn decode_legacy_without_elements_is_an_error() {
     let n = 256usize;
     let xs = test_tensor(n);

@@ -212,17 +212,12 @@ fn batched_decode_equals_sequential_fake_quant_for_any_shape() {
 
         let batched = batch::encode_batched(&cfg, &xs, tile, &pool);
         prop_assert!(
-            batched.substreams == n.div_ceil(tile.max(1)),
+            batched.substreams == n.div_ceil(tile.max(1)).max(1),
             "substream count {} for n={n} tile={tile}",
             batched.substreams
         );
-        if n == 0 {
-            prop_assert!(
-                batch::decode_batched(&batched.bytes, &pool).is_err(),
-                "empty container must not decode to a header"
-            );
-            return Ok(());
-        }
+        // Every legitimately encoded container decodes — the empty tensor
+        // ships one empty substream so its header survives the round trip.
         let (out, header) =
             batch::decode_batched(&batched.bytes, &pool).map_err(|e| e.to_string())?;
         prop_assert!(header.levels == levels, "header levels");
@@ -302,6 +297,53 @@ fn corrupted_substream_directory_is_rejected_never_panics() {
                 "structural corruption at byte {i} not rejected"
             );
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn implausible_directory_claims_are_container_errors_for_every_decoder() {
+    // A forged directory entry whose element count cannot correspond to a
+    // real compressed stream (elements > 16384 × payload bytes, checksum
+    // deliberately valid so only the plausibility bound can catch it) must
+    // be rejected by the strict decoder, the tolerant decoder (which would
+    // otherwise fill `elements` values — up to 4 Gi per entry), and the
+    // count-only reader that guards `decode_any`.
+    prop_check("batch_implausible_dir", 40, |g: &mut Gen| {
+        let n = g.usize_in(64, 4_096);
+        let tile = g.usize_in(32, 512);
+        let xs = g.activation_vec(n, 0.5);
+        let pool = ThreadPool::new(g.usize_in(1, 4));
+        let encoded = batch::encode_batched(&uniform_cfg(4, 2.0), &xs, tile, &pool);
+
+        // Rewrite one directory entry in place: huge element claim, same
+        // byte_len and checksum, prelude total patched to keep the sums
+        // consistent (so only plausibility validation can reject it).
+        let (dir, _) = lwfc::codec::header::SubstreamDirectory::read(&encoded.bytes)
+            .map_err(|e| e.to_string())?;
+        let victim = g.usize_in(0, dir.entries.len() - 1);
+        let forged_elems: u32 =
+            (dir.entries[victim].byte_len.saturating_mul(16_385)).max(1 << 30);
+        let new_total = dir.total_elements - dir.entries[victim].elements as u64
+            + forged_elems as u64;
+        let mut bad = encoded.bytes.clone();
+        bad[10..18].copy_from_slice(&new_total.to_le_bytes());
+        let entry_off = lwfc::codec::header::BATCH_PRELUDE_BYTES
+            + victim * lwfc::codec::header::DIR_ENTRY_BYTES;
+        bad[entry_off..entry_off + 4].copy_from_slice(&forged_elems.to_le_bytes());
+
+        prop_assert!(
+            batch::decode_batched(&bad, &pool).is_err(),
+            "strict decode accepted a forged element claim (victim {victim})"
+        );
+        prop_assert!(
+            batch::decode_batched_tolerant(&bad, &pool).is_err(),
+            "tolerant decode must not fill a forged element claim (victim {victim})"
+        );
+        prop_assert!(
+            batch::batched_elements(&bad).is_err(),
+            "count-only reader accepted a forged directory"
+        );
         Ok(())
     });
 }

@@ -1,0 +1,451 @@
+//! Integration tests for the TCP edge↔cloud transport and the pipeline's
+//! failure semantics — all with synthetic codec-only stages, so they run
+//! without artifacts or the `xla` feature:
+//!
+//! * a cloud daemon + ≥2 concurrent edge clients over real localhost TCP
+//!   sockets, with the wire payloads verified byte-for-byte against the
+//!   in-process loopback transport;
+//! * `run_pipeline` over [`TcpTransport`] agreeing with
+//!   [`LoopbackTransport`] outcome-for-outcome;
+//! * a forced mid-run worker error terminating the pipeline with `Err`
+//!   instead of hanging the collector (guarded by a watchdog timeout);
+//! * `EdgeClient` reconnect-and-resend after the daemon drops a
+//!   connection mid-stream.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use lwfc::codec::{batch, decode_any, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::coordinator::{
+    run_pipeline, CloudDaemon, CloudStage, CompressedItem, EdgeClient, EdgeStage,
+    LoopbackTransport, Outcome, PipelineConfig, Request, RetryPolicy, TaskKind, TcpTransport,
+    Transport, WireItem, WireOutcome,
+};
+use lwfc::util::prop::Gen;
+use lwfc::util::threadpool::ThreadPool;
+
+const ELEMS: usize = 2_048;
+const TILE: usize = 512;
+const TASK: TaskKind = TaskKind::ClassifyAlex;
+
+type PayloadMap = Arc<Mutex<HashMap<u64, Vec<u8>>>>;
+
+fn enc_config() -> EncoderConfig {
+    EncoderConfig::classification(
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4)),
+        32,
+    )
+}
+
+/// The deterministic "sensor capture" both sides regenerate from the
+/// corpus index.
+fn tensor_for(image_index: u64) -> Vec<f32> {
+    Gen::new("net_transport", image_index).activation_vec(ELEMS, 0.5)
+}
+
+/// Encode one request exactly the way every party in these tests does —
+/// shared so client-side and pipeline-side bytes are identical by
+/// construction and any wire-level divergence is detectable.
+fn encode_item(image_index: u64, pool: &ThreadPool) -> (Vec<u8>, usize) {
+    let xs = tensor_for(image_index);
+    let s = batch::encode_batched(&enc_config(), &xs, TILE, pool);
+    (s.bytes, s.elements)
+}
+
+/// Decode + verify one item; `Some(true)` iff the reconstruction equals
+/// the fake-quantized source tensor.
+fn verify_item(bytes: &[u8], elements: usize, image_index: u64, pool: &ThreadPool) -> Result<bool> {
+    let (values, _) = decode_any(bytes, elements, pool).map_err(anyhow::Error::msg)?;
+    let q = enc_config().quantizer;
+    let expect: Vec<f32> = tensor_for(image_index).iter().map(|&x| q.fake_quant(x)).collect();
+    Ok(values == expect)
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic pipeline stages (no PJRT)
+
+struct SynthEdge {
+    pool: ThreadPool,
+    fail_after: Option<usize>,
+    processed: usize,
+}
+
+impl SynthEdge {
+    fn new(fail_after: Option<usize>) -> Self {
+        Self {
+            pool: ThreadPool::new(2),
+            fail_after,
+            processed: 0,
+        }
+    }
+}
+
+impl EdgeStage for SynthEdge {
+    fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
+        let mut out = Vec::with_capacity(requests.len());
+        for r in requests {
+            if let Some(limit) = self.fail_after {
+                if self.processed >= limit {
+                    return Err(anyhow!("synthetic edge failure after {limit} items"));
+                }
+            }
+            self.processed += 1;
+            let (bytes, elements) = encode_item(r.image_index, &self.pool);
+            out.push(CompressedItem {
+                id: r.id,
+                image_index: r.image_index,
+                bytes,
+                elements,
+                arrived: r.arrived,
+                encoded: std::time::Instant::now(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+struct SynthCloud {
+    pool: ThreadPool,
+    fail_after: Option<usize>,
+    processed: usize,
+    /// Wire payloads exactly as this stage received them, by image index.
+    seen: Option<PayloadMap>,
+}
+
+impl SynthCloud {
+    fn new(fail_after: Option<usize>, seen: Option<PayloadMap>) -> Self {
+        Self {
+            pool: ThreadPool::new(2),
+            fail_after,
+            processed: 0,
+            seen,
+        }
+    }
+}
+
+impl CloudStage for SynthCloud {
+    fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>> {
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            if let Some(limit) = self.fail_after {
+                if self.processed >= limit {
+                    return Err(anyhow!("synthetic cloud failure after {limit} items"));
+                }
+            }
+            self.processed += 1;
+            if let Some(seen) = &self.seen {
+                seen.lock().unwrap().insert(item.image_index, item.bytes.clone());
+            }
+            let correct = verify_item(&item.bytes, item.elements, item.image_index, &self.pool)?;
+            out.push(Outcome {
+                id: item.id,
+                image_index: item.image_index,
+                correct: Some(correct),
+                detections: Vec::new(),
+                latency_s: item.arrived.elapsed().as_secs_f64(),
+                bits_per_element: item.bits_per_element(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn pipeline_config(requests: usize) -> PipelineConfig {
+    PipelineConfig {
+        edge_workers: 2,
+        requests,
+        batch: 4,
+        queue_capacity: 8,
+        first_index: 0,
+    }
+}
+
+/// Watchdog: a pipeline-hang regression turns into a test failure, not a
+/// stuck test runner.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(_) => panic!("timed out after {secs}s — the pipeline hung instead of terminating"),
+    }
+}
+
+fn run_synthetic(
+    transport: &dyn Transport,
+    requests: usize,
+    seen: Option<PayloadMap>,
+) -> Result<Vec<Outcome>> {
+    let out = run_pipeline(
+        &pipeline_config(requests),
+        transport,
+        |_w| Ok(SynthEdge::new(None)),
+        move || Ok(SynthCloud::new(None, seen)),
+    )?;
+    Ok(out.outcomes)
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+
+#[test]
+fn tcp_pipeline_matches_loopback_byte_for_byte() {
+    with_timeout(120, || {
+        let n = 32;
+        let loop_seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
+        let tcp_seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
+
+        let loopback = LoopbackTransport::new(8, 64);
+        let mut a = run_synthetic(&loopback, n, Some(Arc::clone(&loop_seen))).unwrap();
+
+        let tcp = TcpTransport::loopback(TASK, 8, 64).unwrap();
+        let mut b = run_synthetic(&tcp, n, Some(Arc::clone(&tcp_seen))).unwrap();
+
+        a.sort_by_key(|o| o.id);
+        b.sort_by_key(|o| o.id);
+        assert_eq!(a.len(), n);
+        assert_eq!(b.len(), n);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.image_index, y.image_index);
+            assert_eq!(x.correct, Some(true));
+            assert_eq!(y.correct, Some(true));
+            assert_eq!(x.bits_per_element, y.bits_per_element);
+        }
+        // The cloud stage saw identical codec bytes through both transits.
+        let la = loop_seen.lock().unwrap();
+        let lb = tcp_seen.lock().unwrap();
+        assert_eq!(la.len(), n);
+        assert_eq!(*la, *lb, "wire payloads diverged between loopback and tcp");
+
+        let stats = tcp.stats();
+        assert_eq!(stats.items, n as u64);
+        assert_eq!(stats.outcomes, n as u64);
+        assert!(stats.bytes_sent > 0 && stats.bytes_received > 0);
+    });
+}
+
+#[test]
+fn cloud_daemon_serves_two_edge_clients_and_matches_loopback_payloads() {
+    with_timeout(120, || {
+        let n_per_client = 16u64;
+        let n_clients = 2u64;
+        let total = (n_per_client * n_clients) as usize;
+
+        // Reference run: the same corpus range through the in-process
+        // loopback pipeline, recording what the cloud stage received.
+        let loop_seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
+        let loopback = LoopbackTransport::new(8, 64);
+        let ref_outcomes = run_synthetic(&loopback, total, Some(Arc::clone(&loop_seen))).unwrap();
+        assert_eq!(ref_outcomes.len(), total);
+
+        // Live daemon: handler decodes + verifies, recording the payload
+        // bytes exactly as they came off the socket.
+        let daemon_seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
+        let handler_seen = Arc::clone(&daemon_seen);
+        let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 4, move |_conn| {
+            let pool = ThreadPool::new(2);
+            let seen = Arc::clone(&handler_seen);
+            Ok(move |item: WireItem| -> Result<WireOutcome> {
+                seen.lock().unwrap().insert(item.image_index, item.bytes.clone());
+                let correct =
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &pool)?;
+                Ok(WireOutcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(correct),
+                    latency_s: 0.0,
+                    bits_per_element: item.bytes.len() as f64 * 8.0
+                        / (item.elements as f64).max(1.0),
+                    detections: Vec::new(),
+                })
+            })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        // ≥2 concurrent edge clients splitting the corpus range.
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || -> (u64, Vec<WireOutcome>) {
+                let pool = ThreadPool::new(2);
+                let mut client =
+                    EdgeClient::connect(&addr, TASK, 4, RetryPolicy::default()).unwrap();
+                let mut got = Vec::new();
+                for k in 0..n_per_client {
+                    let image_index = c * n_per_client + k;
+                    let id = image_index; // globally unique across clients
+                    let (bytes, elements) = encode_item(image_index, &pool);
+                    got.extend(
+                        client
+                            .send(WireItem {
+                                id,
+                                image_index,
+                                elements: elements as u64,
+                                bytes,
+                            })
+                            .unwrap(),
+                    );
+                }
+                let (rest, stats) = client.finish().unwrap();
+                got.extend(rest);
+                assert_eq!(stats.items_sent, n_per_client);
+                assert_eq!(stats.outcomes_received, n_per_client);
+                assert!(stats.bytes_sent > 0 && stats.bytes_received > 0);
+                (c, got)
+            }));
+        }
+        let mut all: Vec<WireOutcome> = Vec::new();
+        for j in joins {
+            let (_, got) = j.join().unwrap();
+            all.extend(got);
+        }
+        let report = daemon.shutdown();
+
+        // Every item produced a verified outcome.
+        all.sort_by_key(|o| o.id);
+        assert_eq!(all.len(), total);
+        for (k, o) in all.iter().enumerate() {
+            assert_eq!(o.id, k as u64);
+            assert_eq!(o.correct, Some(true), "request {k} failed verification");
+        }
+        assert!(report.connections >= n_clients, "report: {report:?}");
+        assert_eq!(report.items, total as u64);
+        assert!(report.errors.is_empty(), "daemon errors: {:?}", report.errors);
+
+        // Acceptance: what crossed the real TCP wire is byte-for-byte what
+        // crossed the in-process loopback queue.
+        let daemon_map = daemon_seen.lock().unwrap();
+        let loop_map = loop_seen.lock().unwrap();
+        assert_eq!(daemon_map.len(), total);
+        assert_eq!(
+            *daemon_map, *loop_map,
+            "TCP wire payloads diverged from the loopback transport"
+        );
+    });
+}
+
+#[test]
+fn failing_edge_worker_terminates_serve_with_err() {
+    with_timeout(60, || {
+        let loopback = LoopbackTransport::new(8, 64);
+        let result = run_pipeline(
+            &pipeline_config(32),
+            &loopback,
+            // Worker 0 dies after 3 items; worker 1 is healthy. Before the
+            // supervisor refactor this deadlocked the collector, which
+            // waited forever for outcomes the dead worker never produced.
+            |w| Ok(SynthEdge::new((w == 0).then_some(3))),
+            || Ok(SynthCloud::new(None, None)),
+        );
+        let err = result.expect_err("pipeline must fail when an edge worker errors");
+        assert!(
+            format!("{err:#}").contains("edge worker"),
+            "unexpected error: {err:#}"
+        );
+    });
+}
+
+#[test]
+fn failing_cloud_worker_terminates_serve_with_err_on_both_transports() {
+    with_timeout(120, || {
+        for tcp in [false, true] {
+            let transport: Box<dyn Transport> = if tcp {
+                Box::new(TcpTransport::loopback(TASK, 8, 64).unwrap())
+            } else {
+                Box::new(LoopbackTransport::new(8, 64))
+            };
+            let result = run_pipeline(
+                &pipeline_config(32),
+                transport.as_ref(),
+                |_w| Ok(SynthEdge::new(None)),
+                || Ok(SynthCloud::new(Some(5), None)),
+            );
+            let err = result.expect_err("pipeline must fail when the cloud worker errors");
+            assert!(
+                format!("{err:#}").contains("cloud worker"),
+                "unexpected error (tcp={tcp}): {err:#}"
+            );
+        }
+    });
+}
+
+#[test]
+fn edge_client_reconnects_and_resends_after_connection_drop() {
+    with_timeout(120, || {
+        let n = 10u64;
+        // The first connection dies after 2 items (handler error drops the
+        // socket); later connections are healthy.
+        let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 2, move |conn| {
+            let pool = ThreadPool::new(1);
+            let mut handled = 0u32;
+            Ok(move |item: WireItem| -> Result<WireOutcome> {
+                if conn == 0 {
+                    handled += 1;
+                    if handled > 2 {
+                        return Err(anyhow!("injected connection failure"));
+                    }
+                }
+                let correct =
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &pool)?;
+                Ok(WireOutcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(correct),
+                    latency_s: 0.0,
+                    bits_per_element: 0.0,
+                    detections: Vec::new(),
+                })
+            })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        let pool = ThreadPool::new(2);
+        let retry = RetryPolicy {
+            attempts: 10,
+            backoff: Duration::from_millis(5),
+            ..RetryPolicy::default()
+        };
+        let mut client = EdgeClient::connect(&addr, TASK, 4, retry).unwrap();
+        let mut got = Vec::new();
+        for id in 0..n {
+            let (bytes, elements) = encode_item(id, &pool);
+            got.extend(
+                client
+                    .send(WireItem {
+                        id,
+                        image_index: id,
+                        elements: elements as u64,
+                        bytes,
+                    })
+                    .unwrap(),
+            );
+        }
+        let (rest, stats) = client.finish().unwrap();
+        got.extend(rest);
+        let report = daemon.shutdown();
+
+        got.sort_by_key(|o| o.id);
+        assert_eq!(got.len(), n as usize, "every item must eventually resolve");
+        for (k, o) in got.iter().enumerate() {
+            assert_eq!(o.id, k as u64);
+            assert_eq!(o.correct, Some(true));
+        }
+        assert!(
+            stats.reconnects >= 1,
+            "client never reconnected: {stats:?}"
+        );
+        assert!(
+            report.connections >= 2,
+            "daemon saw {} connections, expected a reconnect",
+            report.connections
+        );
+        assert!(!report.errors.is_empty(), "injected failure not recorded");
+    });
+}

@@ -5,7 +5,7 @@
 
 use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
 use lwfc::coordinator::{
-    serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind,
+    serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
 };
 use lwfc::data;
 use lwfc::eval::top1;
@@ -208,13 +208,32 @@ fn serving_pipeline_end_to_end() {
         requests: 64,
         queue_capacity: 32,
         first_index: 0,
+        transport: TransportKind::Loopback,
     };
-    let report = serve(&m, cfg).unwrap();
+    let report = serve(&m, cfg.clone()).unwrap();
     eprintln!("{}", report.summary());
     assert_eq!(report.requests, 64);
     assert!(report.metric > 0.75, "served accuracy {}", report.metric);
     assert!(report.bits_per_element > 0.0 && report.bits_per_element < 2.5);
     assert!(report.throughput_rps > 1.0);
+
+    // The same pipeline through a real localhost TCP socket pair must
+    // produce identical task quality and record wire traffic.
+    let tcp_cfg = ServeConfig {
+        transport: TransportKind::Tcp,
+        ..cfg
+    };
+    let tcp_report = serve(&m, tcp_cfg).unwrap();
+    eprintln!("{}", tcp_report.summary());
+    assert_eq!(tcp_report.requests, 64);
+    assert!(
+        (tcp_report.metric - report.metric).abs() < 1e-9,
+        "tcp metric {} != loopback {}",
+        tcp_report.metric,
+        report.metric
+    );
+    assert_eq!(tcp_report.transport.name, "tcp");
+    assert!(tcp_report.transport.bytes_sent > 0);
     let _ = s;
 }
 
@@ -246,6 +265,7 @@ fn detect_pipeline_end_to_end() {
         requests: 48,
         queue_capacity: 32,
         first_index: 0,
+        transport: TransportKind::Loopback,
     };
     let report = serve(&m, cfg).unwrap();
     eprintln!("{}", report.summary());
