@@ -11,6 +11,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example edge_cloud_serving`
 
+use lwfc::codec::EntropyKind;
 use lwfc::coordinator::{
     serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
 };
@@ -37,6 +38,7 @@ fn run_task(m: &Manifest, task: TaskKind, levels: usize, requests: usize) -> any
                 c_max: c_max as f32,
                 levels,
             },
+            entropy: EntropyKind::Cabac,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: None,

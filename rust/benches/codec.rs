@@ -1,13 +1,16 @@
-//! Lightweight-codec throughput: full encode (clip+quant+TU+CABAC) and
+//! Lightweight-codec throughput: full encode (clip+quant+TU+entropy) and
 //! decode, per level count, on activation-like tensors — plus the tiled
 //! batched codec on a paper-scale 256x56x56 tensor, single-thread vs
-//! N-thread. This is the L3 hot path.
+//! N-thread, and a CABAC-vs-rANS backend comparison (throughput and
+//! bits/element) on the same tensor. This is the L3 hot path.
 //!
 //! Writes a machine-readable baseline to `BENCH_codec.json` (override the
 //! path with `LWFC_BENCH_JSON`; set it to `-` to skip the write) so later
 //! PRs have a perf trajectory to compare against.
 
-use lwfc::codec::{batch, decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::{
+    batch, decode, Encoder, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer,
+};
 use lwfc::util::bench::{black_box, Bench};
 use lwfc::util::json::{num, s, Json};
 use lwfc::util::prop::Gen;
@@ -83,9 +86,49 @@ fn main() {
         );
     }
 
+    // ---- entropy backends head to head (256x56x56, N=4) -----------------
+    println!("-- entropy backends (256x56x56, N=4, single stream) --");
+    let mut bpe = std::collections::BTreeMap::new();
+    for kind in [EntropyKind::Cabac, EntropyKind::Rans] {
+        let kcfg = cfg.clone().with_entropy(kind);
+        let mut enc = Encoder::new(kcfg);
+        b.run(&format!("entropy_encode/{kind}"), Some(big_n as u64), || {
+            black_box(enc.encode(&big).bytes.len())
+        });
+        let stream = enc.encode(&big);
+        bpe.insert(kind.to_string(), stream.bits_per_element());
+        println!("   {kind}: {:.4} bits/element", stream.bits_per_element());
+        b.run(&format!("entropy_decode/{kind}"), Some(big_n as u64), || {
+            black_box(decode(&stream.bytes, big_n).unwrap().0.len())
+        });
+    }
+
+    println!("-- batched rans (256x56x56, N=4) --");
+    let rans_cfg = cfg.clone().with_entropy(EntropyKind::Rans);
+    for threads in [1usize, 4] {
+        let pool = ThreadPool::new(threads);
+        b.run(
+            &format!("batched_encode_rans/t{threads}"),
+            Some(big_n as u64),
+            || {
+                black_box(
+                    batch::encode_batched(&rans_cfg, &big, batch::DEFAULT_TILE_ELEMS, &pool)
+                        .bytes
+                        .len(),
+                )
+            },
+        );
+    }
+
     let speedup = |a: &str, z: &str| -> Option<f64> {
         Some(b.find(a)?.median_s / b.find(z)?.median_s)
     };
+    if let Some(sx) = speedup("entropy_encode/cabac", "entropy_encode/rans") {
+        println!("\nrANS encode speedup vs CABAC: {sx:.2}x");
+    }
+    if let Some(sx) = speedup("entropy_decode/cabac", "entropy_decode/rans") {
+        println!("rANS decode speedup vs CABAC: {sx:.2}x");
+    }
     if let Some(sx) = speedup("batched_encode/t1", "batched_encode/t4") {
         println!("\nbatched encode speedup t4 vs t1: {sx:.2}x (target: >= 2x)");
     }
@@ -115,6 +158,22 @@ fn main() {
             (
                 "decode_speedup_t4_vs_t1",
                 speedup("batched_decode/t1", "batched_decode/t4").map_or(Json::Null, num),
+            ),
+            (
+                "rans_encode_speedup_vs_cabac",
+                speedup("entropy_encode/cabac", "entropy_encode/rans").map_or(Json::Null, num),
+            ),
+            (
+                "rans_decode_speedup_vs_cabac",
+                speedup("entropy_decode/cabac", "entropy_decode/rans").map_or(Json::Null, num),
+            ),
+            (
+                "bits_per_element_cabac",
+                bpe.get("cabac").copied().map_or(Json::Null, num),
+            ),
+            (
+                "bits_per_element_rans",
+                bpe.get("rans").copied().map_or(Json::Null, num),
             ),
         ];
         match b.write_json(std::path::Path::new(&json_path), meta) {

@@ -8,7 +8,7 @@
 //! serving stack (edge fwd → encode → queue → decode → cloud fwd),
 //! requests/s across edge-worker and codec-thread counts.
 
-use lwfc::codec::{batch, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::{batch, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer};
 use lwfc::coordinator::{
     serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
 };
@@ -28,23 +28,37 @@ fn codec_pipeline_bench() {
     );
 
     println!("-- batched encode+decode round-trip (256x56x56) --");
-    for threads in [1usize, 2, 4, 8] {
-        let pool = ThreadPool::new(threads);
-        b.run(
-            &format!("roundtrip/t{threads}"),
-            Some(elements as u64),
-            || {
-                let s = batch::encode_batched(&cfg, &xs, batch::DEFAULT_TILE_ELEMS, &pool);
-                let (out, _) = batch::decode_batched(&s.bytes, &pool).unwrap();
-                black_box(out.len())
-            },
-        );
+    for entropy in [EntropyKind::Cabac, EntropyKind::Rans] {
+        let ecfg = cfg.clone().with_entropy(entropy);
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            b.run(
+                &format!("roundtrip_{entropy}/t{threads}"),
+                Some(elements as u64),
+                || {
+                    let s = batch::encode_batched(&ecfg, &xs, batch::DEFAULT_TILE_ELEMS, &pool);
+                    let (out, _) = batch::decode_batched(&s.bytes, &pool).unwrap();
+                    black_box(out.len())
+                },
+            );
+        }
+        let s = batch::encode_batched(&ecfg, &xs, batch::DEFAULT_TILE_ELEMS, &ThreadPool::new(4));
+        println!("   {entropy}: {:.4} bits/element on the wire", s.bits_per_element());
     }
-    if let (Some(t1), Some(t4)) = (b.find("roundtrip/t1"), b.find("roundtrip/t4")) {
-        println!(
-            "round-trip speedup t4/t1 = {:.2}x",
-            t1.median_s / t4.median_s
+    for entropy in ["cabac", "rans"] {
+        let (t1, t4) = (
+            b.find(&format!("roundtrip_{entropy}/t1")),
+            b.find(&format!("roundtrip_{entropy}/t4")),
         );
+        if let (Some(t1), Some(t4)) = (t1, t4) {
+            println!(
+                "{entropy} round-trip speedup t4/t1 = {:.2}x",
+                t1.median_s / t4.median_s
+            );
+        }
+    }
+    if let (Some(c), Some(r)) = (b.find("roundtrip_cabac/t4"), b.find("roundtrip_rans/t4")) {
+        println!("rANS round-trip speedup vs CABAC (t4) = {:.2}x", c.median_s / r.median_s);
     }
 }
 
@@ -59,6 +73,7 @@ fn serving_bench(m: &Manifest) {
                     c_max: 1.45,
                     levels: 4,
                 },
+                entropy: EntropyKind::Cabac,
                 val_seed: m.val_seed,
                 batch: m.serve_batch,
                 adaptive: None,

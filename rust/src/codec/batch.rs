@@ -5,10 +5,14 @@
 //!
 //! Why tiles work: the paper's predecessor on tiled feature-tensor coding
 //! (arXiv:2105.06002) observes that intermediate tensors decompose into
-//! independently-codable regions; our CABAC contexts reset per stream
-//! anyway (streams must be independently decodable), so a tile boundary
-//! costs only one 12/24-byte header + the ~5-byte CABAC flush. At the
-//! default tile size that is < 0.01 bits/element of overhead.
+//! independently-codable regions; all entropy-coder state resets per
+//! stream anyway (streams must be independently decodable), so a tile
+//! boundary costs one 12/24-byte header + the entropy stage's flush (~5
+//! bytes for CABAC; frequency tables + two 4-byte states for rANS). At
+//! the default tile size that is < 0.02 bits/element of overhead. The
+//! container prelude records the configured entropy backend; each tile's
+//! own header carries it too, so mixed decoders need no out-of-band
+//! signal.
 //!
 //! Guarantees:
 //! * **Bit-exact reconstruction parity** — for any tensor, tile size and
@@ -40,17 +44,33 @@ pub const DEFAULT_TILE_ELEMS: usize = 16_384;
 /// the process via one giant up-front allocation.
 pub(crate) const MAX_PREALLOC_ELEMS: usize = 16 * 1024 * 1024;
 
-/// Plausibility bound relating a stream's claimed element count to its
-/// payload size: the adaptive coder bottoms out near ~0.0007 bits/bin,
-/// i.e. ~11,350 elements/byte at full saturation, so a claim beyond
-/// 16384× the payload bytes is a crafted count, not a compressed
-/// stream. Enforced container-wide *before* any decode or fill
-/// allocation — both the strict and the tolerant path reject such a
-/// container outright (a tolerant fill of `entry.elements` values would
-/// otherwise let one crafted entry allocate up to 4 Gi floats) — and
-/// reused by `coordinator::net` to vet element counts arriving off the
-/// wire before they reach a decoder.
-pub const MAX_ELEMS_PER_PAYLOAD_BYTE: u64 = 16_384;
+/// Plausibility bounds relating a stream's claimed element count to its
+/// payload size, per entropy backend. The adaptive CABAC bottoms out near
+/// ~0.0007 bits/bin (~11,350 elements/byte at full saturation), so a
+/// CABAC claim beyond 16384× the payload bytes is a crafted count; the
+/// static rANS tables bottom out at log2(4096/4095) ≈ 0.00035 bits/bin
+/// (~22,700 elements/byte for a fully skewed 1-bit code), bounded by
+/// 32768×. Enforced *before* any decode or fill allocation — both the
+/// strict and the tolerant container path reject violations outright (a
+/// tolerant fill of `entry.elements` values would otherwise let one
+/// crafted entry allocate up to 4 Gi floats) — and reused by
+/// `coordinator::net` to vet element counts arriving off the wire before
+/// they reach a decoder. Validation picks the tight bound when it can
+/// see the backend (tile header, frame advertisement) and falls back to
+/// the worst case over backends when it cannot; CABAC matters most here
+/// because its decoder has no integrity check and will happily fabricate
+/// the whole claimed count.
+pub const MAX_ELEMS_PER_PAYLOAD_BYTE_CABAC: u64 = 16_384;
+pub const MAX_ELEMS_PER_PAYLOAD_BYTE: u64 = 32_768;
+
+/// The plausibility bound for a known backend (`None` = unknown: the
+/// conservative worst case over backends).
+pub fn max_elems_per_payload_byte(kind: Option<crate::codec::EntropyKind>) -> u64 {
+    match kind {
+        Some(crate::codec::EntropyKind::Cabac) => MAX_ELEMS_PER_PAYLOAD_BYTE_CABAC,
+        Some(crate::codec::EntropyKind::Rans) | None => MAX_ELEMS_PER_PAYLOAD_BYTE,
+    }
+}
 
 /// Hard cap on a single tile's element count (applied on encode): keeps
 /// every directory field comfortably inside `u32` — worst-case
@@ -129,6 +149,7 @@ pub fn encode_batched(
         .collect();
     let dir = SubstreamDirectory {
         total_elements: data.len() as u64,
+        entropy: config.entropy,
         entries,
     };
     let payload_len: usize = tiles.iter().map(|t| t.bytes.len()).sum();
@@ -162,8 +183,13 @@ fn payload_ranges(dir: &SubstreamDirectory, payload_off: usize) -> Vec<(usize, u
 /// per-substream checksums' reach, so even the tolerant decoder must not
 /// trust any of its counts.
 fn validate_entries(dir: &SubstreamDirectory) -> Result<(), String> {
+    // The container-level backend claim picks the bound here; each tile is
+    // re-checked below against the backend its own header names, so a
+    // forged rans-labeled container full of CABAC tiles still meets the
+    // tight CABAC bound before its tiles decode.
+    let bound = max_elems_per_payload_byte(Some(dir.entropy));
     for (i, e) in dir.entries.iter().enumerate() {
-        if e.elements as u64 > (e.byte_len as u64).saturating_mul(MAX_ELEMS_PER_PAYLOAD_BYTE) {
+        if e.elements as u64 > (e.byte_len as u64).saturating_mul(bound) {
             return Err(format!(
                 "substream {i}: implausible element count {} for a {}-byte substream",
                 e.elements, e.byte_len
@@ -186,10 +212,13 @@ fn decode_tile(
             entry.checksum
         ));
     }
-    // Plausibility re-check against the actual payload slice (the
-    // container-level [`validate_entries`] has already vetted the
-    // directory; this guards the same invariant per tile).
-    if entry.elements as u64 > (payload.len() as u64).saturating_mul(MAX_ELEMS_PER_PAYLOAD_BYTE) {
+    // Plausibility re-check against the actual payload slice, bounded by
+    // the backend the tile's own header names (the container-level
+    // [`validate_entries`] has already vetted the directory against the
+    // container's claim; the tile header is what decides which decoder
+    // runs, so it picks the bound that decoder must be protected by).
+    let bound = max_elems_per_payload_byte(crate::codec::sniff_entropy(payload));
+    if entry.elements as u64 > (payload.len() as u64).saturating_mul(bound) {
         return Err(format!(
             "implausible element count {} for a {}-byte substream",
             entry.elements,
@@ -388,6 +417,7 @@ mod tests {
         let payload = vec![0u8; 16];
         let dir = SubstreamDirectory {
             total_elements: u32::MAX as u64,
+            entropy: crate::codec::EntropyKind::Cabac,
             entries: vec![SubstreamEntry {
                 elements: u32::MAX,
                 byte_len: payload.len() as u32,
@@ -438,6 +468,32 @@ mod tests {
                 assert_eq!(out[i], clean[i], "healthy element {i} perturbed");
             }
         }
+    }
+
+    #[test]
+    fn batched_rans_container_roundtrips_and_signals_backend() {
+        use crate::codec::entropy::{sniff, EntropyKind};
+        let xs = activations(20_000, 7);
+        let pool = ThreadPool::new(3);
+        let c = cfg(4, 2.0).with_entropy(EntropyKind::Rans);
+        let q = c.quantizer.clone();
+        let batched = encode_batched(&c, &xs, 2048, &pool);
+        assert_eq!(sniff(&batched.bytes), Some(EntropyKind::Rans));
+        let (dir, _) = SubstreamDirectory::read(&batched.bytes).unwrap();
+        assert_eq!(dir.entropy, EntropyKind::Rans);
+        let (out, header) = decode_batched(&batched.bytes, &pool).unwrap();
+        assert_eq!(header.entropy, EntropyKind::Rans);
+        for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+            assert_eq!(y, q.fake_quant(x), "element {i}");
+        }
+        // Tile payload corruption is detected for rANS tiles exactly like
+        // CABAC ones (checksums are backend-agnostic).
+        let mut bad = batched.bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x5A;
+        assert!(decode_batched(&bad, &pool).is_err());
+        let (_, report) = decode_batched_tolerant(&bad, &pool).unwrap();
+        assert_eq!(report.corrupted.len(), 1);
     }
 
     #[test]

@@ -6,13 +6,20 @@
 //! Layout (little-endian), 12 bytes for classification:
 //!
 //! ```text
-//! 0     kind (low nibble: 0=classification, 1=detection)
-//!       | quantizer type (high nibble: 0=uniform, 1=entropy-constrained)
+//! 0     bits 0-3: kind (0=classification, 1=detection)
+//!       bits 4-5: quantizer type (0=uniform, 1=entropy-constrained)
+//!       bits 6-7: entropy backend (0=CABAC, 1=interleaved rANS)
 //! 1     N, number of quantizer levels (2..=255)
 //! 2-5   c_min (f32)
 //! 6-9   c_max (f32)
 //! 10-11 source image width, height (u8 each — 32/64-px synthetic inputs)
 //! ```
+//!
+//! Format history: header v1 defined byte 0 as two nibbles (kind, quant),
+//! both ≤ 1 in every stream ever written — so bits 6–7 were always zero.
+//! The v2 bump reinterprets those bits as the entropy-backend id
+//! ([`super::entropy::EntropyKind`]); legacy streams therefore parse as
+//! backend 0 (CABAC) and decode byte-identically.
 //!
 //! Detection appends 12 more bytes (total 24): network input width/height
 //! (u16), feature h/w/c (u16) used for bounding-box back-projection, and
@@ -23,6 +30,8 @@
 //! out-of-band from the design phase; we put them in-band and charge the
 //! bits to the stream — a conservative accounting difference recorded in
 //! EXPERIMENTS.md).
+
+use super::entropy::EntropyKind;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StreamKind {
@@ -40,6 +49,9 @@ pub enum QuantKind {
 pub struct Header {
     pub kind: StreamKind,
     pub quant: QuantKind,
+    /// Entropy backend the payload was coded with (byte 0, bits 6–7;
+    /// legacy streams carry 0 = CABAC there).
+    pub entropy: EntropyKind,
     pub levels: usize,
     pub c_min: f32,
     pub c_max: f32,
@@ -80,11 +92,11 @@ impl Header {
             StreamKind::Classification => 0u8,
             StreamKind::Detection => 1u8,
         };
-        let quant_nibble = match self.quant {
+        let quant_bits = match self.quant {
             QuantKind::Uniform => 0u8,
             QuantKind::EntropyConstrained => 1u8,
         };
-        out.push(kind_nibble | (quant_nibble << 4));
+        out.push(kind_nibble | (quant_bits << 4) | (self.entropy.id() << 6));
         assert!(
             (2..=255).contains(&self.levels),
             "levels out of range: {}",
@@ -131,11 +143,12 @@ impl Header {
             1 => StreamKind::Detection,
             k => return Err(format!("bad stream kind {k}")),
         };
-        let quant = match bytes[0] >> 4 {
+        let quant = match (bytes[0] >> 4) & 0x03 {
             0 => QuantKind::Uniform,
             1 => QuantKind::EntropyConstrained,
             q => return Err(format!("bad quantizer kind {q}")),
         };
+        let entropy = EntropyKind::from_id(bytes[0] >> 6)?;
         let levels = bytes[1] as usize;
         if levels < 2 {
             return Err(format!("bad level count {levels}"));
@@ -180,6 +193,7 @@ impl Header {
             Header {
                 kind,
                 quant,
+                entropy,
                 levels,
                 c_min,
                 c_max,
@@ -204,17 +218,26 @@ impl Header {
 //
 // ```text
 // 0-3    magic "LWFB"
-// 4      container version (1)
-// 5      reserved (must be 0)
+// 4      container version (2; version-1 containers still parse)
+// 5      v2: container entropy-backend id (0=CABAC, 1=rANS)
+//        v1: reserved (must be 0 — which is also the CABAC id)
 // 6-9    substream count (u32 LE)
 // 10-17  total element count (u64 LE)
 // then per substream (12 bytes each):
 //   elements (u32 LE) | byte length (u32 LE) | FNV-1a checksum (u32 LE)
 // then the concatenated substream payloads.
 // ```
+//
+// The container-level backend id is what `encode_batched` was configured
+// with; it lets tools report the backend without decoding a tile. Each
+// tile is a complete stream whose own header also carries the id, and the
+// decoder trusts the tiles (they are checksummed; the prelude byte is
+// advisory).
 
 pub const BATCH_MAGIC: [u8; 4] = *b"LWFB";
-pub const BATCH_VERSION: u8 = 1;
+pub const BATCH_VERSION: u8 = 2;
+/// Oldest container version this decoder still reads.
+pub const BATCH_MIN_VERSION: u8 = 1;
 pub const BATCH_PRELUDE_BYTES: usize = 18;
 pub const DIR_ENTRY_BYTES: usize = 12;
 
@@ -246,6 +269,9 @@ pub struct SubstreamEntry {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SubstreamDirectory {
     pub total_elements: u64,
+    /// Container-level entropy backend (prelude byte 5; v1 containers
+    /// parse as CABAC).
+    pub entropy: EntropyKind,
     pub entries: Vec<SubstreamEntry>,
 }
 
@@ -259,7 +285,7 @@ impl SubstreamDirectory {
             u32::try_from(self.entries.len()).expect("substream count exceeds u32 directory field");
         out.extend_from_slice(&BATCH_MAGIC);
         out.push(BATCH_VERSION);
-        out.push(0); // reserved
+        out.push(self.entropy.id());
         out.extend_from_slice(&count.to_le_bytes());
         out.extend_from_slice(&self.total_elements.to_le_bytes());
         for e in &self.entries {
@@ -270,9 +296,12 @@ impl SubstreamDirectory {
     }
 
     /// Parse and structurally validate a directory; returns the directory
-    /// and the payload offset. Every prelude/directory byte is semantic, so
-    /// any single corrupted byte here is detected (the per-substream
-    /// checksums cover the payload region).
+    /// and the payload offset. Every count/length byte is cross-validated,
+    /// so corruption there is detected; since the v1/v2 tolerance, bytes
+    /// 4-5 admit a few valid alternatives (a version flip to 1, a backend
+    /// flip between the defined ids) — those only relabel the container,
+    /// and the per-substream checksums plus each tile's own header still
+    /// guard what actually decodes.
     pub fn read(bytes: &[u8]) -> Result<(SubstreamDirectory, usize), String> {
         if bytes.len() < BATCH_PRELUDE_BYTES {
             return Err(format!(
@@ -283,12 +312,18 @@ impl SubstreamDirectory {
         if bytes[..4] != BATCH_MAGIC {
             return Err("bad batch magic".into());
         }
-        if bytes[4] != BATCH_VERSION {
+        if !(BATCH_MIN_VERSION..=BATCH_VERSION).contains(&bytes[4]) {
             return Err(format!("unsupported batch version {}", bytes[4]));
         }
-        if bytes[5] != 0 {
-            return Err(format!("nonzero reserved byte {}", bytes[5]));
-        }
+        let entropy = if bytes[4] == 1 {
+            // v1 predates the backend field: byte 5 was reserved-zero.
+            if bytes[5] != 0 {
+                return Err(format!("nonzero reserved byte {}", bytes[5]));
+            }
+            EntropyKind::Cabac
+        } else {
+            EntropyKind::from_id(bytes[5])?
+        };
         let count = u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
         let total_elements = u64::from_le_bytes([
             bytes[10], bytes[11], bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17],
@@ -341,6 +376,7 @@ impl SubstreamDirectory {
         Ok((
             SubstreamDirectory {
                 total_elements,
+                entropy,
                 entries,
             },
             dir_end,
@@ -356,6 +392,7 @@ mod tests {
         Header {
             kind: StreamKind::Classification,
             quant: QuantKind::Uniform,
+            entropy: EntropyKind::Cabac,
             levels: 4,
             c_min: 0.0,
             c_max: 9.03,
@@ -404,6 +441,16 @@ mod tests {
                 ..cls_header()
             },
             Header {
+                entropy: EntropyKind::Rans,
+                ..cls_header()
+            },
+            Header {
+                entropy: EntropyKind::Rans,
+                quant: QuantKind::EntropyConstrained,
+                recon: Some(vec![0.0, 1.5, 3.3, 9.03]),
+                ..cls_header()
+            },
+            Header {
                 kind: StreamKind::Detection,
                 levels: 2,
                 det: Some(DetInfo {
@@ -443,6 +490,34 @@ mod tests {
         cls_header().write(&mut out3);
         out3[6..10].copy_from_slice(&f32::NEG_INFINITY.to_le_bytes()); // bad c_max
         assert!(Header::read(&out3).is_err());
+        let mut out4 = Vec::new();
+        cls_header().write(&mut out4);
+        out4[0] |= 0x80; // backend id 2: not a defined entropy backend
+        assert!(Header::read(&out4).is_err());
+    }
+
+    #[test]
+    fn legacy_v1_byte0_parses_as_cabac() {
+        // A header written before the backend field existed has zeros in
+        // bits 6-7 of byte 0; it must parse as CABAC with nothing else
+        // reinterpreted — the legacy golden bitstreams pin this end to end.
+        let mut out = Vec::new();
+        cls_header().write(&mut out);
+        assert_eq!(out[0] >> 6, 0, "CABAC header must keep legacy bits 6-7 zero");
+        let (h, _) = Header::read(&out).unwrap();
+        assert_eq!(h.entropy, EntropyKind::Cabac);
+
+        let mut rans = Vec::new();
+        Header {
+            entropy: EntropyKind::Rans,
+            ..cls_header()
+        }
+        .write(&mut rans);
+        assert_eq!(rans[0] >> 6, 1);
+        assert_eq!(Header::read(&rans).unwrap().0.entropy, EntropyKind::Rans);
+        // Everything below the backend bits is unchanged by the bump.
+        assert_eq!(rans[0] & 0x3F, out[0] & 0x3F);
+        assert_eq!(rans[1..], out[1..]);
     }
 
     fn sample_directory() -> (SubstreamDirectory, Vec<u8>) {
@@ -458,6 +533,7 @@ mod tests {
             .collect();
         let dir = SubstreamDirectory {
             total_elements: entries.iter().map(|e| e.elements as u64).sum(),
+            entropy: EntropyKind::Cabac,
             entries,
         };
         let mut bytes = Vec::new();
@@ -478,10 +554,47 @@ mod tests {
     }
 
     #[test]
+    fn directory_versioning_v1_parses_v2_carries_backend() {
+        // A v1 container (written before the backend field) parses as
+        // CABAC; a v2 container round-trips either backend id; a v2
+        // container with an undefined id is rejected.
+        let (dir, mut bytes) = sample_directory();
+        bytes[4] = 1; // rewrite the prelude to container v1
+        assert_eq!(bytes[5], 0, "sample CABAC directory should have id 0");
+        let (v1, _) = SubstreamDirectory::read(&bytes).unwrap();
+        assert_eq!(v1.entropy, EntropyKind::Cabac);
+        assert_eq!(v1.entries, dir.entries);
+
+        let rans_dir = SubstreamDirectory {
+            entropy: EntropyKind::Rans,
+            ..dir.clone()
+        };
+        let mut rbytes = Vec::new();
+        rans_dir.write(&mut rbytes);
+        rbytes.extend_from_slice(&bytes[dir.encoded_len()..]); // same payloads
+        assert_eq!(rbytes[4], BATCH_VERSION);
+        assert_eq!(rbytes[5], 1);
+        let (back, _) = SubstreamDirectory::read(&rbytes).unwrap();
+        assert_eq!(back, rans_dir);
+
+        // v1 with a nonzero reserved byte stays an error (pre-bump rule).
+        let mut bad = bytes.clone();
+        bad[5] = 1;
+        assert!(SubstreamDirectory::read(&bad).is_err());
+        // v2 with an out-of-range backend id is an error.
+        let mut bad2 = rbytes.clone();
+        bad2[5] = 2;
+        assert!(SubstreamDirectory::read(&bad2).is_err());
+    }
+
+    #[test]
     fn directory_detects_any_corrupt_structural_byte() {
-        // Every prelude/elements/byte_len byte is cross-validated by read();
-        // checksum-field flips are caught later, when the batch decoder
-        // compares the stored checksum against the payload.
+        // Count/length bytes are cross-validated by read(); checksum-field
+        // flips are caught later, when the batch decoder compares the
+        // stored checksum against the payload. The 0x41 flip below lands
+        // on invalid values for bytes 4-5 too; flips between *valid*
+        // version/backend ids merely relabel the container (see
+        // directory_versioning_v1_parses_v2_carries_backend).
         let (dir, bytes) = sample_directory();
         for i in 0..dir.encoded_len() {
             let in_checksum_field = i >= BATCH_PRELUDE_BYTES

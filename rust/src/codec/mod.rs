@@ -1,17 +1,20 @@
 //! The paper's lightweight feature codec (Fig. 1): clipping, coarse
 //! N-level quantization (uniform Eq. (1) or modified entropy-constrained
-//! Algorithm 1), truncated-unary binarization, and simplified CABAC with
-//! one context per bit position.
+//! Algorithm 1), truncated-unary binarization, and a pluggable entropy
+//! stage with one context per bit position — the paper's simplified
+//! CABAC, or a two-way interleaved rANS coder with static in-band
+//! frequency tables ([`entropy`]).
 //!
 //! Request-path code: everything here is allocation-conscious and
 //! branch-lean; see `rust/benches/codec.rs` for the throughput targets
-//! (§III-E complexity claims).
+//! (§III-E complexity claims) and the CABAC-vs-rANS comparison.
 
 pub mod batch;
 pub mod binarize;
 pub mod bitstream;
 pub mod cabac;
 pub mod ecq;
+pub mod entropy;
 pub mod header;
 pub mod stream;
 pub mod uniform;
@@ -21,6 +24,7 @@ pub use batch::{
     BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS,
 };
 pub use ecq::{design as design_ecq, EcqDesign, EcqParams, NonUniformQuantizer};
+pub use entropy::{backend_for, sniff as sniff_entropy, EntropyBackend, EntropyKind};
 pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind};
 pub use stream::{decode, decode_indices, EncodedStream, Encoder, EncoderConfig, Quantizer};
 pub use uniform::{clip, UniformQuantizer};

@@ -1,10 +1,10 @@
 //! Top-level lightweight codec: clip → quantize → truncated-unary
-//! binarization → CABAC (one context per bit position) → bit-stream with
+//! binarization → entropy stage (one context per bit position; adaptive
+//! CABAC or interleaved rANS, see [`super::entropy`]) → bit-stream with
 //! the paper's 12/24-byte side-information header (Fig. 1 pipeline).
 
-use super::binarize::{self, num_contexts};
-use super::cabac::{CabacDecoder, CabacEncoder, Context};
 use super::ecq::NonUniformQuantizer;
+use super::entropy::{backend_for, EntropyBackend, EntropyKind};
 use super::header::{DetInfo, Header, QuantKind, StreamKind};
 use super::uniform::UniformQuantizer;
 
@@ -64,6 +64,9 @@ impl Quantizer {
 pub struct EncoderConfig {
     pub kind: StreamKind,
     pub quantizer: Quantizer,
+    /// Entropy backend for the payload (default CABAC — the paper's
+    /// coder; see [`super::entropy`] for the trade-off).
+    pub entropy: EntropyKind,
     pub img_w: u8,
     pub img_h: u8,
     pub det: Option<DetInfo>,
@@ -74,6 +77,7 @@ impl EncoderConfig {
         Self {
             kind: StreamKind::Classification,
             quantizer,
+            entropy: EntropyKind::Cabac,
             img_w: img,
             img_h: img,
             det: None,
@@ -84,10 +88,17 @@ impl EncoderConfig {
         Self {
             kind: StreamKind::Detection,
             quantizer,
+            entropy: EntropyKind::Cabac,
             img_w: img,
             img_h: img,
             det: Some(det),
         }
+    }
+
+    /// Select the entropy backend (builder-style).
+    pub fn with_entropy(mut self, entropy: EntropyKind) -> Self {
+        self.entropy = entropy;
+        self
     }
 
     fn header(&self) -> Header {
@@ -98,6 +109,7 @@ impl EncoderConfig {
         Header {
             kind: self.kind,
             quant,
+            entropy: self.entropy,
             levels: self.quantizer.levels(),
             c_min: self.quantizer.c_min(),
             c_max: self.quantizer.c_max(),
@@ -112,7 +124,7 @@ impl EncoderConfig {
 /// Reusable encoder (owns scratch buffers; one per worker thread).
 pub struct Encoder {
     pub config: EncoderConfig,
-    contexts: Vec<Context>,
+    backend: Box<dyn EntropyBackend>,
 }
 
 /// An encoded feature tensor.
@@ -132,54 +144,25 @@ impl EncodedStream {
 
 impl Encoder {
     pub fn new(config: EncoderConfig) -> Self {
-        let nctx = num_contexts(config.quantizer.levels());
-        Self {
-            config,
-            contexts: vec![Context::default(); nctx],
-        }
+        let backend = backend_for(config.entropy);
+        Self { config, backend }
     }
 
-    /// Encode one feature tensor into a standalone bit-stream.
-    /// Contexts reset per stream (streams must be independently decodable).
+    /// Encode one feature tensor into a standalone bit-stream. All
+    /// entropy-coder state resets per stream (streams must be
+    /// independently decodable); the hot loops live in the backend and
+    /// stay monomorphic per quantizer kind.
     pub fn encode(&mut self, data: &[f32]) -> EncodedStream {
-        let levels = self.config.quantizer.levels();
+        // `config` is deliberately pub (the adaptive clip controller swaps
+        // quantizers mid-run); honor an entropy swap the same way — the
+        // header id and the payload must never disagree.
+        if self.backend.kind() != self.config.entropy {
+            self.backend = backend_for(self.config.entropy);
+        }
         let mut bytes = Vec::with_capacity(data.len() / 4 + 32);
         self.config.header().write(&mut bytes);
-
-        self.contexts.iter_mut().for_each(|c| *c = Context::default());
-        let mut enc = CabacEncoder::new();
-        // Reserve the typical compressed size up front (≈1 bit/element)
-        // so the CABAC output buffer does not reallocate mid-stream.
-        enc.reserve(data.len() / 8 + 64);
-        let q = &self.config.quantizer;
-        // The hot loops below are monomorphic per quantizer kind and
-        // specialised for the 1-bit case (one context, one bin/element) —
-        // see EXPERIMENTS.md §Perf for the measured effect.
-        match q {
-            Quantizer::Uniform(u) if levels == 2 => {
-                let ctx = &mut self.contexts[0];
-                for &x in data {
-                    enc.encode(ctx, u.index(x) != 0);
-                }
-            }
-            Quantizer::Uniform(u) => {
-                for &x in data {
-                    let n = u.index(x) as usize;
-                    binarize::encode_tu(n, levels, |pos, bit| {
-                        enc.encode(&mut self.contexts[pos], bit)
-                    });
-                }
-            }
-            Quantizer::NonUniform(nu) => {
-                for &x in data {
-                    let n = nu.index(x) as usize;
-                    binarize::encode_tu(n, levels, |pos, bit| {
-                        enc.encode(&mut self.contexts[pos], bit)
-                    });
-                }
-            }
-        }
-        bytes.extend_from_slice(&enc.finish());
+        self.backend
+            .encode_payload(&self.config.quantizer, data, &mut bytes);
         EncodedStream {
             bytes,
             elements: data.len(),
@@ -202,29 +185,26 @@ pub fn decode(bytes: &[u8], elements: usize) -> Result<(Vec<f32>, Header), Strin
         (QuantKind::EntropyConstrained, Some(r)) => r.clone(),
         (QuantKind::EntropyConstrained, None) => unreachable!("Header::read enforces recon"),
     };
-    let mut contexts = vec![Context::default(); num_contexts(levels)];
-    let mut dec = CabacDecoder::new(&bytes[off..]);
+    // The header names the backend (legacy streams carry the CABAC id).
+    // Both backends decode straight into f32 output (no intermediate
+    // index buffer — this is the cloud worker's per-tile hot path), and
     // `elements` may come from an untrusted wire frame or container
-    // directory: cap the up-front allocation (output still grows to the
-    // true size).
-    let mut out = Vec::with_capacity(elements.min(super::batch::MAX_PREALLOC_ELEMS));
-    for _ in 0..elements {
-        let n = binarize::decode_tu(levels, |pos| dec.decode(&mut contexts[pos]));
-        out.push(recon_table[n]);
-    }
+    // directory: the backend caps its up-front allocation (output still
+    // grows to the true size).
+    let out = backend_for(header.entropy).decode_payload_f32(
+        &bytes[off..],
+        levels,
+        elements,
+        &recon_table,
+    )?;
     Ok((out, header))
 }
 
 /// Decode to quantizer *indices* (for analysis tools and tests).
 pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header), String> {
     let (header, off) = Header::read(bytes)?;
-    let mut contexts = vec![Context::default(); num_contexts(header.levels)];
-    let mut dec = CabacDecoder::new(&bytes[off..]);
-    let mut out = Vec::with_capacity(elements.min(super::batch::MAX_PREALLOC_ELEMS));
-    for _ in 0..elements {
-        out.push(binarize::decode_tu(header.levels, |pos| dec.decode(&mut contexts[pos])) as u16);
-    }
-    Ok((out, header))
+    let idx = backend_for(header.entropy).decode_payload(&bytes[off..], header.levels, elements)?;
+    Ok((idx, header))
 }
 
 #[cfg(test)]
@@ -363,6 +343,35 @@ mod tests {
     }
 
     #[test]
+    fn rans_stream_roundtrip_and_header_signal() {
+        let xs = activations(12_000, 9);
+        for levels in [2, 3, 4, 8] {
+            let cfg = uniform_cfg(levels, 6.0).with_entropy(EntropyKind::Rans);
+            let q = cfg.quantizer.clone();
+            let mut enc = Encoder::new(cfg);
+            let stream = enc.encode(&xs);
+            let (decoded, header) = decode(&stream.bytes, xs.len()).unwrap();
+            assert_eq!(header.entropy, EntropyKind::Rans);
+            assert_eq!(header.levels, levels);
+            for (i, (&x, &d)) in xs.iter().zip(&decoded).enumerate() {
+                assert_eq!(d, q.fake_quant(x), "element {i} levels {levels}");
+            }
+        }
+    }
+
+    #[test]
+    fn rans_streams_are_independent_and_deterministic() {
+        let a = activations(5000, 10);
+        let b = activations(5000, 11);
+        let mut enc = Encoder::new(uniform_cfg(4, 6.0).with_entropy(EntropyKind::Rans));
+        let _ = enc.encode(&a);
+        let sb = enc.encode(&b);
+        let mut enc2 = Encoder::new(uniform_cfg(4, 6.0).with_entropy(EntropyKind::Rans));
+        let sb2 = enc2.encode(&b);
+        assert_eq!(sb.bytes, sb2.bytes);
+    }
+
+    #[test]
     fn corrupt_stream_reports_error_not_panic() {
         assert!(decode(&[1, 2, 3], 10).is_err());
         let xs = activations(100, 8);
@@ -370,5 +379,12 @@ mod tests {
         let mut bytes = enc.encode(&xs).bytes;
         bytes.truncate(11); // cut inside the header
         assert!(decode(&bytes, 100).is_err());
+        // A truncated rANS payload is an error too (CABAC tolerates
+        // trailing-zero reads; rANS verifies consumption + final state).
+        let mut enc = Encoder::new(uniform_cfg(4, 6.0).with_entropy(EntropyKind::Rans));
+        let full = enc.encode(&xs).bytes;
+        let mut cut = full.clone();
+        cut.truncate(full.len() - 3);
+        assert!(decode(&cut, 100).is_err());
     }
 }

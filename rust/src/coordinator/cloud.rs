@@ -34,6 +34,13 @@ pub struct CloudTimes {
     pub infer_s: f64,
     pub post_s: f64,
     pub items: u64,
+    /// Items decoded per entropy backend (the wire is self-describing, so
+    /// one cloud worker can serve mixed CABAC/rANS edge devices — these
+    /// counters make that mix observable in the serve report). One item =
+    /// one wire payload; a batched container counts once however many
+    /// tiles it holds.
+    pub cabac_items: u64,
+    pub rans_items: u64,
 }
 
 pub struct CloudWorker {
@@ -78,10 +85,15 @@ impl CloudWorker {
         for item in items {
             // `decode_any` sniffs the wire format: tiled multi-substream
             // containers decode tile-parallel on the worker's pool, legacy
-            // single streams fall through to the sequential decoder.
-            let (values, _header) =
+            // single streams fall through to the sequential decoder. The
+            // stream header names its entropy backend.
+            let (values, header) =
                 codec::decode_any(&item.bytes, item.elements, &self.pool)
                     .map_err(anyhow::Error::msg)?;
+            match header.entropy {
+                codec::EntropyKind::Cabac => self.times.cabac_items += 1,
+                codec::EntropyKind::Rans => self.times.rans_items += 1,
+            }
             debug_assert_eq!(values.len(), per_item);
             feat.extend_from_slice(&values);
         }

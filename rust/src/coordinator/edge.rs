@@ -13,7 +13,7 @@ use anyhow::Result;
 use super::protocol::{CompressedItem, QuantSpec, Request, TaskKind};
 use super::stats::{AdaptiveClipController, AdaptiveConfig};
 use crate::codec::{
-    encode_batched, DetInfo, Encoder, EncoderConfig, Quantizer, UniformQuantizer,
+    encode_batched, DetInfo, Encoder, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer,
     DEFAULT_TILE_ELEMS,
 };
 use crate::data;
@@ -26,6 +26,10 @@ use crate::util::threadpool::ThreadPool;
 pub struct EdgeConfig {
     pub task: TaskKind,
     pub quant: QuantSpec,
+    /// Entropy backend this device encodes with (CABAC or rANS). The
+    /// stream headers are self-describing, so devices with different
+    /// backends can share one cloud worker (mixed-backend serving).
+    pub entropy: EntropyKind,
     pub val_seed: u64,
     pub batch: usize,
     /// Optional adaptive clip-range control (None = static range).
@@ -90,7 +94,8 @@ impl EdgeWorker {
                 },
             ),
             _ => EncoderConfig::classification(quantizer, img),
-        };
+        }
+        .with_entropy(config.entropy);
         let input_shape = match config.task {
             TaskKind::Detect => vec![config.batch, data::DET_IMG, data::DET_IMG, 3],
             _ => vec![config.batch, data::IMG, data::IMG, 3],

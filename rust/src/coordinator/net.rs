@@ -8,10 +8,12 @@
 //!
 //! ```text
 //! 0-3    magic "LWFN"
-//! 4      protocol version (1)
+//! 4      protocol version (2; version-1 frames still parse)
 //! 5      frame kind (0 = compressed item, 1 = outcome)
 //! 6      task code (TaskKind::code — both peers must serve the same net)
-//! 7      reserved (must be 0)
+//! 7      v2 item frames: entropy-backend advertisement
+//!        (0 = unspecified, 1 = CABAC, 2 = rANS);
+//!        v1 frames and all outcome frames: reserved (must be 0)
 //! 8-15   request id (u64)
 //! 16-23  image index (u64)
 //! 24-27  payload length (u32)
@@ -20,8 +22,12 @@
 //!
 //! An **item** payload is `elements (u64)` followed by the codec bytes
 //! exactly as produced by the encoder — the self-describing `LWFB` batched
-//! container or a legacy single stream; the framing layer never inspects
-//! them. An **outcome** payload is `flags (u8: bit0 = has top-1 verdict,
+//! container or a legacy single stream; the framing layer never decodes
+//! them. The writer stamps byte 7 by sniffing the codec bytes' header, and
+//! the reader cross-checks a nonzero advertisement against the same sniff,
+//! so a frame whose label disagrees with its payload dies at the framing
+//! layer (mixed CABAC/rANS clients stay cheap to account without
+//! decoding). An **outcome** payload is `flags (u8: bit0 = has top-1 verdict,
 //! bit1 = verdict)`, `bits_per_element (f64)`, `latency_s (f64)`,
 //! `detection count (u32)`, then 24 bytes per detection
 //! (`class u32, score/x/y/w/h f32`).
@@ -52,13 +58,16 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::protocol::{CompressedItem, Outcome, TaskKind};
-use crate::codec::batch::MAX_ELEMS_PER_PAYLOAD_BYTE;
+use crate::codec::batch::max_elems_per_payload_byte;
+use crate::codec::{sniff_entropy, EntropyKind};
 use crate::eval::Detection;
 use crate::util::threadpool::TaskPool;
 use crate::util::timer::Percentiles;
 
 pub const NET_MAGIC: [u8; 4] = *b"LWFN";
-pub const NET_VERSION: u8 = 1;
+pub const NET_VERSION: u8 = 2;
+/// Oldest protocol version this reader still accepts.
+pub const NET_MIN_VERSION: u8 = 1;
 pub const FRAME_HEADER_BYTES: usize = 28;
 /// Upper bound on a frame payload accepted from the wire. A compressed
 /// split-layer tensor is a few kilobytes; 256 MiB rejects crafted lengths
@@ -147,9 +156,16 @@ fn proto_err(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
 }
 
+/// Byte-7 advertisement for an item's codec bytes: 0 = unspecified
+/// (unsniffable or legacy writer), else `EntropyKind::id() + 1`.
+fn entropy_hint_of(codec_bytes: &[u8]) -> u8 {
+    sniff_entropy(codec_bytes).map_or(0, |k| k.id() + 1)
+}
+
 fn frame_header(
     kind: u8,
     task: TaskKind,
+    entropy_hint: u8,
     id: u64,
     image_index: u64,
     payload_len: usize,
@@ -164,7 +180,7 @@ fn frame_header(
     header[4] = NET_VERSION;
     header[5] = kind;
     header[6] = task.code();
-    header[7] = 0;
+    header[7] = entropy_hint;
     header[8..16].copy_from_slice(&id.to_le_bytes());
     header[16..24].copy_from_slice(&image_index.to_le_bytes());
     header[24..28].copy_from_slice(&(payload_len as u32).to_le_bytes());
@@ -176,7 +192,8 @@ fn frame_header(
 /// Returns the number of bytes written (header + payload).
 pub fn write_item_frame(w: &mut impl Write, task: TaskKind, item: &WireItem) -> io::Result<usize> {
     let payload_len = 8 + item.bytes.len();
-    let header = frame_header(0, task, item.id, item.image_index, payload_len)?;
+    let hint = entropy_hint_of(&item.bytes);
+    let header = frame_header(0, task, hint, item.id, item.image_index, payload_len)?;
     w.write_all(&header)?;
     w.write_all(&item.elements.to_le_bytes())?;
     w.write_all(&item.bytes)?;
@@ -207,7 +224,7 @@ pub fn write_outcome_frame(
         p.extend_from_slice(&d.w.to_le_bytes());
         p.extend_from_slice(&d.h.to_le_bytes());
     }
-    let header = frame_header(1, task, o.id, o.image_index, p.len())?;
+    let header = frame_header(1, task, 0, o.id, o.image_index, p.len())?;
     w.write_all(&header)?;
     w.write_all(&p)?;
     Ok(FRAME_HEADER_BYTES + p.len())
@@ -248,10 +265,15 @@ pub fn read_frame(
     if header[..4] != NET_MAGIC {
         return Err(proto_err("bad frame magic".into()));
     }
-    if header[4] != NET_VERSION {
+    if !(NET_MIN_VERSION..=NET_VERSION).contains(&header[4]) {
         return Err(proto_err(format!("unsupported protocol version {}", header[4])));
     }
-    if header[7] != 0 {
+    // Byte 7: v1 frames and outcome frames reserve it as zero; v2 item
+    // frames may advertise the payload's entropy backend (cross-checked
+    // against the payload below).
+    let entropy_hint = header[7];
+    let hint_allowed = header[4] >= 2 && header[5] == 0;
+    if entropy_hint != 0 && !hint_allowed {
         return Err(proto_err(format!("nonzero reserved byte {}", header[7])));
     }
     let task = TaskKind::from_code(header[6]).map_err(proto_err)?;
@@ -282,18 +304,37 @@ pub fn read_frame(
             // its directory: an element claim no compressed stream could
             // carry is rejected here, before it can reach a decoder's
             // `Vec::with_capacity` (a crafted tiny frame claiming 2^60
-            // elements would otherwise abort the receiving daemon).
+            // elements would otherwise abort the receiving daemon). The
+            // payload's own self-description picks the per-backend bound
+            // — CABAC's decoder has no integrity check, so CABAC-labeled
+            // payloads get the tight 16384× cap.
             let codec_bytes = (payload.len() - 8) as u64;
-            if elements > codec_bytes.saturating_mul(MAX_ELEMS_PER_PAYLOAD_BYTE) {
+            let bound = max_elems_per_payload_byte(sniff_entropy(&payload[8..]));
+            if elements > codec_bytes.saturating_mul(bound) {
                 return Err(proto_err(format!(
                     "implausible element count {elements} for a {codec_bytes}-byte payload"
                 )));
+            }
+            let bytes = payload.split_off(8);
+            // A nonzero advertisement must agree with the payload's own
+            // self-description — a relabeled frame is a protocol error,
+            // not something to discover deep inside a decoder.
+            if entropy_hint != 0 {
+                let advertised = EntropyKind::from_id(entropy_hint - 1)
+                    .map_err(|e| proto_err(format!("entropy advertisement: {e}")))?;
+                let actual = sniff_entropy(&bytes);
+                if actual != Some(advertised) {
+                    return Err(proto_err(format!(
+                        "frame advertises entropy backend `{advertised}` but payload \
+                         sniffs as {actual:?}"
+                    )));
+                }
             }
             Frame::Item(WireItem {
                 id,
                 image_index,
                 elements,
-                bytes: payload.split_off(8),
+                bytes,
             })
         }
         1 => {
@@ -820,6 +861,58 @@ mod tests {
         assert!(read_frame(&mut bad.as_slice(), None).is_err());
 
         assert!(read_frame(&mut buf.as_slice(), Some(TaskKind::Detect)).is_err());
+    }
+
+    #[test]
+    fn item_frames_advertise_their_entropy_backend() {
+        use crate::codec::{Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+        let xs: Vec<f32> = (0..256).map(|i| (i % 7) as f32 * 0.3).collect();
+        for (kind, want_hint) in [(EntropyKind::Cabac, 1u8), (EntropyKind::Rans, 2u8)] {
+            let cfg = EncoderConfig::classification(
+                Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4)),
+                32,
+            )
+            .with_entropy(kind);
+            let stream = Encoder::new(cfg).encode(&xs);
+            let item = WireItem {
+                id: 9,
+                image_index: 9,
+                elements: xs.len() as u64,
+                bytes: stream.bytes,
+            };
+            let mut buf = Vec::new();
+            write_item_frame(&mut buf, task(), &item).unwrap();
+            assert_eq!(buf[4], NET_VERSION);
+            assert_eq!(buf[7], want_hint, "hint for {kind}");
+            let (_, frame) = read_frame(&mut buf.as_slice(), Some(task())).unwrap().unwrap();
+            assert_eq!(frame, Frame::Item(item));
+
+            // Relabeling the frame (advertisement disagrees with the
+            // payload's own header) is a protocol error.
+            let mut bad = buf.clone();
+            bad[7] = if want_hint == 1 { 2 } else { 1 };
+            let err = read_frame(&mut bad.as_slice(), None).unwrap_err();
+            assert!(err.to_string().contains("advertises"), "got: {err}");
+            // An undefined advertisement code is rejected outright.
+            let mut bad = buf.clone();
+            bad[7] = 3;
+            assert!(read_frame(&mut bad.as_slice(), None).is_err());
+        }
+        // Unsniffable payloads are stamped "unspecified" (0) and accepted.
+        let mut buf = Vec::new();
+        write_item_frame(&mut buf, task(), &sample_item()).unwrap();
+        assert_eq!(buf[7], 0);
+    }
+
+    #[test]
+    fn v1_frames_still_parse_but_may_not_carry_a_hint() {
+        let mut buf = Vec::new();
+        write_item_frame(&mut buf, task(), &sample_item()).unwrap();
+        buf[4] = 1; // downgrade to protocol v1 (byte 7 already 0)
+        let (_, frame) = read_frame(&mut buf.as_slice(), Some(task())).unwrap().unwrap();
+        assert_eq!(frame, Frame::Item(sample_item()));
+        buf[7] = 1; // v1 never defined byte 7: reserved-zero only
+        assert!(read_frame(&mut buf.as_slice(), None).is_err());
     }
 
     #[test]

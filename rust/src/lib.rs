@@ -7,7 +7,8 @@
 //! Three-layer architecture (build/test/bench commands in `rust/README.md`):
 //! * **L3 (this crate)** — the collaborative-intelligence coordinator:
 //!   edge device pool → lightweight codec (single-stream or thread-parallel
-//!   tiled batches, [`codec::batch`]) → transit ([`coordinator::transport`]:
+//!   tiled batches, [`codec::batch`]; pluggable CABAC/rANS entropy stage,
+//!   [`codec::entropy`]) → transit ([`coordinator::transport`]:
 //!   in-process loopback queues or a real TCP wire, with a standalone
 //!   multi-client cloud daemon / edge client pair in [`coordinator::net`])
 //!   → cloud workers, plus the analytic clipping models, the

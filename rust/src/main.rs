@@ -16,7 +16,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 use lwfc::codec::{
-    batch, decode as codec_decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer,
+    batch, decode as codec_decode, Encoder, EncoderConfig, EntropyKind, Quantizer,
+    UniformQuantizer,
 };
 use lwfc::coordinator::{
     run_edge_node, serve, CloudConfig, CloudDaemon, EdgeConfig, EdgeNodeConfig, QuantSpec,
@@ -90,6 +91,10 @@ fn manifest_from(dir: &str) -> Result<Manifest> {
     Manifest::load(&path)
 }
 
+fn entropy_of(s: &str) -> Result<EntropyKind> {
+    EntropyKind::parse(s).map_err(|e| anyhow!("--entropy: {e}"))
+}
+
 fn task_of(net: &str) -> Result<TaskKind> {
     Ok(match net {
         "resnet" | "resnet_s2" => TaskKind::ClassifyResnet { split: 2 },
@@ -160,6 +165,12 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt("edge-workers", "2", "simulated edge devices")
         .opt("threads", "1", "codec threads per worker (tiled batched codec when > 1)")
         .opt(
+            "entropy",
+            "cabac",
+            "entropy backend the edge devices encode with: cabac (adaptive, best rate) \
+             or rans (interleaved rANS, static tables, fastest); decode auto-detects",
+        )
+        .opt(
             "transport",
             "loopback",
             "transit stage: loopback (in-process queues) or tcp (real localhost socket)",
@@ -220,6 +231,7 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
                 c_max: c_max as f32,
                 levels,
             },
+            entropy: entropy_of(a.get("entropy"))?,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: a.has_flag("adaptive").then(|| lwfc::coordinator::AdaptiveConfig {
@@ -248,6 +260,12 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         .opt("levels", "4", "quantizer levels N")
         .opt("c-max", "", "clip maximum (default: model-optimal)")
         .opt("threads", "1", "codec threads (tiled batched codec when > 1)")
+        .opt(
+            "entropy",
+            "cabac",
+            "entropy backend this device encodes with: cabac or rans \
+             (the cloud daemon auto-detects, so mixed fleets are fine)",
+        )
         .opt("window", "8", "in-flight items on the wire before blocking on outcomes")
         .opt("first-index", "0", "first corpus index to serve")
         .opt("retries", "5", "connection attempts per (re)connect")
@@ -265,6 +283,7 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
             c_max: c_max as f32,
             levels,
         },
+        entropy: entropy_of(a.get("entropy"))?,
         val_seed: m.val_seed,
         batch: m.serve_batch,
         adaptive: None,
@@ -371,7 +390,13 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
         .opt("c-min", "0", "clip minimum")
         .opt("c-max", "", "clip maximum (default: model fit from the data)")
         .opt("threads", "1", "encode threads (writes the tiled batched container when > 1)")
-        .opt("tile", "16384", "tile size in elements for the batched container");
+        .opt("tile", "16384", "tile size in elements for the batched container")
+        .opt(
+            "entropy",
+            "cabac",
+            "entropy backend: cabac (adaptive, best rate) or rans \
+             (interleaved rANS with static tables, fastest)",
+        );
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let data = read_f32_file(a.get("input"))?;
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
@@ -389,8 +414,9 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     };
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
     let tile = a.get_usize("tile").map_err(|e| anyhow!(e))?.max(1);
+    let entropy = entropy_of(a.get("entropy"))?;
     let q = Quantizer::Uniform(UniformQuantizer::new(c_min, c_max, levels));
-    let cfg = EncoderConfig::classification(q, 0);
+    let cfg = EncoderConfig::classification(q, 0).with_entropy(entropy);
     let (bytes, elements, substreams, bpe) = if threads > 1 {
         let pool = ThreadPool::new(threads);
         let s = batch::encode_batched(&cfg, &data, tile, &pool);
@@ -404,7 +430,7 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     };
     std::fs::write(a.get("output"), &bytes)?;
     println!(
-        "{} elements -> {} bytes ({bpe:.4} bits/element, {} substream{})",
+        "{} elements -> {} bytes ({bpe:.4} bits/element, {} substream{}, {entropy} entropy)",
         elements,
         bytes.len(),
         substreams,
@@ -422,7 +448,13 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
             "0",
             "element count (required for legacy single streams; batched containers are self-describing)",
         )
-        .opt("threads", "1", "decode threads for batched containers");
+        .opt("threads", "1", "decode threads for batched containers")
+        .opt(
+            "entropy",
+            "",
+            "expected entropy backend (cabac or rans): fail if the stream was encoded \
+             with a different one (default: auto-detect from the stream header)",
+        );
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let bytes = std::fs::read(a.get("input"))?;
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
@@ -438,17 +470,27 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
         }
         codec_decode(&bytes, elements).map_err(anyhow::Error::msg)?
     };
+    if !a.get("entropy").is_empty() {
+        let expect = entropy_of(a.get("entropy"))?;
+        if header.entropy != expect {
+            return Err(anyhow!(
+                "stream was encoded with the {} backend, --entropy asked for {expect}",
+                header.entropy
+            ));
+        }
+    }
     let mut out = Vec::with_capacity(values.len() * 4);
     for v in &values {
         out.extend_from_slice(&v.to_le_bytes());
     }
     std::fs::write(a.get("output"), &out)?;
     println!(
-        "decoded {} elements (N={}, clip [{}, {}])",
+        "decoded {} elements (N={}, clip [{}, {}], {} entropy)",
         values.len(),
         header.levels,
         header.c_min,
-        header.c_max
+        header.c_max,
+        header.entropy
     );
     Ok(())
 }

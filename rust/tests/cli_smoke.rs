@@ -159,6 +159,80 @@ fn encode_decode_roundtrip_batched() {
 }
 
 #[test]
+fn encode_rans_decode_auto_detects() {
+    // `--entropy rans` at encode time; decode carries no flag and must
+    // auto-detect the backend from the stream header (both the legacy
+    // single-stream layout and the batched container).
+    for threads in ["1", "4"] {
+        let n = 20_000usize;
+        let xs = test_tensor(n);
+        let input = temp_path(&format!("rans{threads}.f32"));
+        let stream = temp_path(&format!("rans{threads}.lwfc"));
+        let output = temp_path(&format!("rans{threads}.out.f32"));
+        write_f32(&input, &xs);
+
+        let enc = lwfc()
+            .args(["encode", "--input"])
+            .arg(&input)
+            .arg("--output")
+            .arg(&stream)
+            .args(["--levels", "4", "--c-min", "0", "--c-max", "6"])
+            .args(["--entropy", "rans", "--threads", threads, "--tile", "4096"])
+            .output()
+            .unwrap();
+        assert!(
+            enc.status.success(),
+            "rans encode failed: {}",
+            String::from_utf8_lossy(&enc.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&enc.stdout);
+        assert!(stdout.contains("rans entropy"), "stdout: {stdout}");
+
+        let mut dec_cmd = lwfc();
+        dec_cmd
+            .args(["decode", "--input"])
+            .arg(&stream)
+            .arg("--output")
+            .arg(&output);
+        if threads == "1" {
+            dec_cmd.args(["--elements", &n.to_string()]);
+        }
+        let dec = dec_cmd.output().unwrap();
+        assert!(
+            dec.status.success(),
+            "rans decode failed: {}",
+            String::from_utf8_lossy(&dec.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&dec.stdout);
+        assert!(stdout.contains("rans entropy"), "decode stdout: {stdout}");
+
+        let got = read_f32(&output);
+        let q = UniformQuantizer::new(0.0, 6.0, 4);
+        assert_eq!(got.len(), n);
+        for (i, (&x, &y)) in xs.iter().zip(&got).enumerate() {
+            assert_eq!(y, q.fake_quant(x), "element {i} (threads {threads})");
+        }
+
+        // Pinning the wrong backend with --entropy is a hard error.
+        let bad = lwfc()
+            .args(["decode", "--input"])
+            .arg(&stream)
+            .arg("--output")
+            .arg(&output)
+            .args(["--elements", &n.to_string(), "--entropy", "cabac"])
+            .output()
+            .unwrap();
+        assert!(!bad.status.success(), "--entropy cabac accepted a rans stream");
+        let stderr = String::from_utf8_lossy(&bad.stderr);
+        assert!(stderr.contains("rans"), "stderr: {stderr}");
+
+        for p in [input, stream, output] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[test]
 fn encode_decode_roundtrip_empty_batched() {
     // A zero-element tensor must survive the batched container round trip
     // (the container ships one empty substream carrying the codec header).
@@ -212,6 +286,7 @@ fn serve_and_edge_advertise_network_modes() {
     );
     assert!(text.contains("--listen"), "serve help: {text}");
     assert!(text.contains("--transport"), "serve help: {text}");
+    assert!(text.contains("--entropy"), "serve help: {text}");
 
     let edge = lwfc().args(["edge", "--help"]).output().unwrap();
     let text = format!(
@@ -221,6 +296,16 @@ fn serve_and_edge_advertise_network_modes() {
     );
     assert!(text.contains("--connect"), "edge help: {text}");
     assert!(text.contains("--window"), "edge help: {text}");
+    assert!(text.contains("--entropy"), "edge help: {text}");
+
+    let encode = lwfc().args(["encode", "--help"]).output().unwrap();
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&encode.stdout),
+        String::from_utf8_lossy(&encode.stderr)
+    );
+    assert!(text.contains("--entropy"), "encode help: {text}");
+    assert!(text.contains("rans"), "encode help: {text}");
 }
 
 #[test]

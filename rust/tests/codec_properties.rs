@@ -304,11 +304,11 @@ fn corrupted_substream_directory_is_rejected_never_panics() {
 #[test]
 fn implausible_directory_claims_are_container_errors_for_every_decoder() {
     // A forged directory entry whose element count cannot correspond to a
-    // real compressed stream (elements > 16384 × payload bytes, checksum
-    // deliberately valid so only the plausibility bound can catch it) must
-    // be rejected by the strict decoder, the tolerant decoder (which would
-    // otherwise fill `elements` values — up to 4 Gi per entry), and the
-    // count-only reader that guards `decode_any`.
+    // real compressed stream (elements > MAX_ELEMS_PER_PAYLOAD_BYTE ×
+    // payload bytes, checksum deliberately valid so only the plausibility
+    // bound can catch it) must be rejected by the strict decoder, the
+    // tolerant decoder (which would otherwise fill `elements` values — up
+    // to 4 Gi per entry), and the count-only reader guarding `decode_any`.
     prop_check("batch_implausible_dir", 40, |g: &mut Gen| {
         let n = g.usize_in(64, 4_096);
         let tile = g.usize_in(32, 512);
@@ -322,8 +322,9 @@ fn implausible_directory_claims_are_container_errors_for_every_decoder() {
         let (dir, _) = lwfc::codec::header::SubstreamDirectory::read(&encoded.bytes)
             .map_err(|e| e.to_string())?;
         let victim = g.usize_in(0, dir.entries.len() - 1);
+        let over = lwfc::codec::batch::MAX_ELEMS_PER_PAYLOAD_BYTE as u32 + 1;
         let forged_elems: u32 =
-            (dir.entries[victim].byte_len.saturating_mul(16_385)).max(1 << 30);
+            (dir.entries[victim].byte_len.saturating_mul(over)).max(1 << 30);
         let new_total = dir.total_elements - dir.entries[victim].elements as u64
             + forged_elems as u64;
         let mut bad = encoded.bytes.clone();

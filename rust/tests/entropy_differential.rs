@@ -1,0 +1,347 @@
+//! Cross-backend differential tests: CABAC and interleaved rANS are two
+//! independent implementations of the same entropy stage, so for ANY
+//! tensor, clip range and level count they must round-trip to identical
+//! quantizer indices, report consistent rates, and disagree only in
+//! payload bytes. Corruption robustness is asymmetric by design — CABAC
+//! self-synchronizes to *some* in-range indices, while rANS carries
+//! integrity checks (final-state + full-consumption) and must turn
+//! truncated or corrupted payloads into `Err`, never a panic.
+//!
+//! Also covers the serving-path acceptance: a rANS-encoded stream
+//! round-trips through the pipeline over a real localhost TCP transport
+//! (the `lwfc` CLI leg lives in `cli_smoke.rs`).
+
+use lwfc::codec::{
+    batch, decode, decode_indices, design_ecq, EcqParams, Encoder, EncoderConfig, EntropyKind,
+    Quantizer, UniformQuantizer,
+};
+use lwfc::prop_assert;
+use lwfc::util::prop::{prop_check, Gen};
+use lwfc::util::threadpool::ThreadPool;
+
+fn uniform_cfg(levels: usize, c_max: f32, entropy: EntropyKind) -> EncoderConfig {
+    EncoderConfig::classification(
+        Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels)),
+        32,
+    )
+    .with_entropy(entropy)
+}
+
+/// Encode `xs` with both backends and return the two streams.
+fn encode_both(levels: usize, c_max: f32, xs: &[f32]) -> (Vec<u8>, Vec<u8>) {
+    let cabac = Encoder::new(uniform_cfg(levels, c_max, EntropyKind::Cabac)).encode(xs);
+    let rans = Encoder::new(uniform_cfg(levels, c_max, EntropyKind::Rans)).encode(xs);
+    (cabac.bytes, rans.bytes)
+}
+
+#[test]
+fn backends_roundtrip_to_identical_indices() {
+    prop_check("diff_identical_indices", 40, |g: &mut Gen| {
+        let n = g.usize_in(0, 20_000);
+        let levels = *g.choice(&[2usize, 3, 4, 8]);
+        let c_max = g.f32_in(0.2, 12.0);
+        let scale = g.f32_in(0.05, 3.0);
+        let xs = g.activation_vec(n, scale);
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels));
+
+        let (cb, rb) = encode_both(levels, c_max, &xs);
+        let (ci, ch) = decode_indices(&cb, n).map_err(|e| e.to_string())?;
+        let (ri, rh) = decode_indices(&rb, n).map_err(|e| e.to_string())?;
+        prop_assert!(ch.entropy == EntropyKind::Cabac, "cabac header backend");
+        prop_assert!(rh.entropy == EntropyKind::Rans, "rans header backend");
+        prop_assert!(ci == ri, "index mismatch (n={n} levels={levels})");
+        // Both agree with the quantizer applied directly.
+        for (i, &x) in xs.iter().enumerate() {
+            prop_assert!(
+                ci[i] == q.index(x),
+                "decoded index diverges from quantizer at {i}"
+            );
+        }
+        // And the reconstructions agree value-for-value.
+        let (cv, _) = decode(&cb, n).map_err(|e| e.to_string())?;
+        let (rv, _) = decode(&rb, n).map_err(|e| e.to_string())?;
+        prop_assert!(cv == rv, "reconstruction mismatch (n={n} levels={levels})");
+        Ok(())
+    });
+}
+
+#[test]
+fn backends_report_consistent_bits_per_element() {
+    prop_check("diff_bpe", 25, |g: &mut Gen| {
+        let n = g.usize_in(64, 30_000);
+        let levels = *g.choice(&[2usize, 3, 4, 8]);
+        let xs = g.activation_vec(n, 0.4);
+        for entropy in [EntropyKind::Cabac, EntropyKind::Rans] {
+            let stream = Encoder::new(uniform_cfg(levels, 2.0, entropy)).encode(&xs);
+            let bpe = stream.bits_per_element();
+            // The reported metric is exactly stream size over elements …
+            let expect = stream.bytes.len() as f64 * 8.0 / n as f64;
+            prop_assert!(bpe == expect, "bpe metric inconsistent for {entropy}");
+            // … and stays below the raw TU ceiling plus side info (tables
+            // + states for rANS; the 12-byte header for both).
+            let side = 12.0 + 2.0 * (levels - 1) as f64 + 8.0 + 5.0;
+            let bound = (levels - 1) as f64 + 0.1 + side * 8.0 / n as f64;
+            prop_assert!(
+                bpe < bound,
+                "{entropy} rate {bpe} over bound {bound} (n={n} levels={levels})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn backends_agree_on_ecq_streams() {
+    prop_check("diff_ecq", 10, |g: &mut Gen| {
+        let train = g.activation_vec(20_000, 0.4);
+        let xs = g.activation_vec(8_192, 0.4);
+        let levels = g.usize_in(3, 6);
+        let d = design_ecq(&train, 0.0, 2.0, EcqParams::pinned(levels, 0.02));
+        let base = EncoderConfig::classification(Quantizer::NonUniform(d.quantizer.clone()), 32);
+        let cb = Encoder::new(base.clone()).encode(&xs);
+        let rb = Encoder::new(base.with_entropy(EntropyKind::Rans)).encode(&xs);
+        let (ci, _) = decode_indices(&cb.bytes, xs.len()).map_err(|e| e.to_string())?;
+        let (ri, rh) = decode_indices(&rb.bytes, xs.len()).map_err(|e| e.to_string())?;
+        prop_assert!(ci == ri, "ECQ index mismatch (levels={levels})");
+        prop_assert!(
+            rh.recon.as_ref() == Some(&d.quantizer.recon),
+            "rANS ECQ header lost the recon table"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupt_or_truncated_rans_streams_error_not_panic() {
+    prop_check("diff_rans_corruption", 60, |g: &mut Gen| {
+        let n = g.usize_in(16, 4_000);
+        let levels = *g.choice(&[2usize, 3, 4, 8]);
+        let xs = g.activation_vec(n, 0.5);
+        let mut enc = Encoder::new(uniform_cfg(levels, 2.0, EntropyKind::Rans));
+        let bytes = enc.encode(&xs).bytes;
+
+        // Any truncation of the payload region is a guaranteed error: the
+        // decoder consumes exactly the bytes the encoder emitted, so a
+        // shorter stream either starves renormalization or fails the
+        // final-state / consumption checks.
+        let cut = g.usize_in(12, bytes.len() - 1);
+        prop_assert!(
+            decode(&bytes[..cut], n).is_err(),
+            "rANS truncation to {cut}/{} accepted (n={n} levels={levels})",
+            bytes.len()
+        );
+
+        // A corrupted byte anywhere must never panic; it either errors
+        // (the common case — table validation, state bound, final-state
+        // check) or, for a flip the checks cannot see (e.g. the table
+        // entry of a bit position the data never uses), decodes to the
+        // same in-range shape.
+        let i = g.usize_in(12, bytes.len() - 1);
+        let mut bad = bytes.clone();
+        bad[i] ^= (g.u64() as u8) | 1;
+        if let Ok((vals, header)) = decode(&bad, n) {
+            prop_assert!(vals.len() == n, "corrupt decode changed length");
+            for &v in &vals {
+                prop_assert!(
+                    v >= header.c_min && v <= header.c_max,
+                    "corrupt decode out of range: {v}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rans_initial_state_corruption_is_always_detected() {
+    // The 8 bytes after the frequency table are the two decoder states;
+    // flipping any of them derails the state walk, and landing back on
+    // exactly [RANS_LOWER, RANS_LOWER] afterwards is a ~2^-46 accident —
+    // deterministic inputs make this assertion stable.
+    let mut g = Gen::new("rans_state_corruption", 0);
+    let xs = g.activation_vec(2_048, 0.5);
+    let mut enc = Encoder::new(uniform_cfg(4, 2.0, EntropyKind::Rans));
+    let bytes = enc.encode(&xs).bytes;
+    let state_off = 12 + 2 * 3; // header + 3-position table
+    for i in state_off..state_off + 8 {
+        for flip in [0x01u8, 0x80, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[i] ^= flip;
+            assert!(
+                decode(&bad, xs.len()).is_err(),
+                "state byte {i} flipped by {flip:#04x} went undetected"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_containers_are_differential_too() {
+    prop_check("diff_batched", 15, |g: &mut Gen| {
+        let n = g.usize_in(0, 30_000);
+        let tile = g.usize_in(64, 4_096);
+        let levels = *g.choice(&[2usize, 3, 4, 8]);
+        let xs = g.activation_vec(n, 0.5);
+        let pool = ThreadPool::new(g.usize_in(1, 4));
+        let ccfg = uniform_cfg(levels, 2.0, EntropyKind::Cabac);
+        let rcfg = uniform_cfg(levels, 2.0, EntropyKind::Rans);
+        let cb = batch::encode_batched(&ccfg, &xs, tile, &pool);
+        let rb = batch::encode_batched(&rcfg, &xs, tile, &pool);
+        let (cv, ch) = batch::decode_batched(&cb.bytes, &pool).map_err(|e| e.to_string())?;
+        let (rv, rh) = batch::decode_batched(&rb.bytes, &pool).map_err(|e| e.to_string())?;
+        prop_assert!(cv == rv, "batched reconstruction mismatch (n={n} tile={tile})");
+        prop_assert!(ch.entropy == EntropyKind::Cabac && rh.entropy == EntropyKind::Rans, "headers");
+        // Containers advertise their backend without decoding a tile.
+        prop_assert!(
+            lwfc::codec::sniff_entropy(&rb.bytes) == Some(EntropyKind::Rans),
+            "container sniff"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serving-path acceptance: rANS over a real TCP transport
+
+mod tcp_path {
+    use std::time::Duration;
+
+    use anyhow::Result;
+    use lwfc::codec::{batch, decode_any, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer};
+    use lwfc::coordinator::{
+        run_pipeline, CloudStage, CompressedItem, EdgeStage, Outcome, PipelineConfig, Request,
+        TaskKind, TcpTransport, Transport,
+    };
+    use lwfc::util::prop::Gen;
+    use lwfc::util::threadpool::ThreadPool;
+
+    const ELEMS: usize = 2_048;
+    const TILE: usize = 512;
+
+    fn cfg(entropy: EntropyKind) -> EncoderConfig {
+        EncoderConfig::classification(
+            Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4)),
+            32,
+        )
+        .with_entropy(entropy)
+    }
+
+    fn tensor_for(image_index: u64) -> Vec<f32> {
+        Gen::new("entropy_tcp", image_index).activation_vec(ELEMS, 0.5)
+    }
+
+    /// Edge stage encoding every other request with the other backend —
+    /// one device fleet, mixed backends, one wire.
+    struct MixedEdge {
+        pool: ThreadPool,
+    }
+
+    impl EdgeStage for MixedEdge {
+        fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
+            let mut out = Vec::with_capacity(requests.len());
+            for r in requests {
+                let entropy = if r.image_index % 2 == 0 {
+                    EntropyKind::Rans
+                } else {
+                    EntropyKind::Cabac
+                };
+                let xs = tensor_for(r.image_index);
+                let s = batch::encode_batched(&cfg(entropy), &xs, TILE, &self.pool);
+                out.push(CompressedItem {
+                    id: r.id,
+                    image_index: r.image_index,
+                    bytes: s.bytes,
+                    elements: s.elements,
+                    arrived: r.arrived,
+                    encoded: std::time::Instant::now(),
+                });
+            }
+            Ok(out)
+        }
+    }
+
+    /// Cloud stage verifying the reconstruction against the regenerated
+    /// tensor and the header against the expected per-item backend.
+    struct VerifyCloud {
+        pool: ThreadPool,
+    }
+
+    impl CloudStage for VerifyCloud {
+        fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>> {
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                let (values, header) = decode_any(&item.bytes, item.elements, &self.pool)
+                    .map_err(anyhow::Error::msg)?;
+                let want = if item.image_index % 2 == 0 {
+                    EntropyKind::Rans
+                } else {
+                    EntropyKind::Cabac
+                };
+                let q = cfg(want).quantizer;
+                let expect: Vec<f32> =
+                    tensor_for(item.image_index).iter().map(|&x| q.fake_quant(x)).collect();
+                out.push(Outcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(header.entropy == want && values == expect),
+                    detections: Vec::new(),
+                    latency_s: item.arrived.elapsed().as_secs_f64(),
+                    bits_per_element: item.bits_per_element(),
+                });
+            }
+            Ok(out)
+        }
+    }
+
+    fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = tx.send(f());
+        });
+        match rx.recv_timeout(Duration::from_secs(secs)) {
+            Ok(v) => v,
+            Err(_) => panic!("timed out after {secs}s — the pipeline hung"),
+        }
+    }
+
+    #[test]
+    fn mixed_backend_streams_roundtrip_over_tcp() {
+        with_timeout(120, || {
+            let n = 24;
+            let transport = TcpTransport::loopback(TaskKind::ClassifyAlex, 8, 64).unwrap();
+            let out = run_pipeline(
+                &PipelineConfig {
+                    edge_workers: 2,
+                    requests: n,
+                    batch: 4,
+                    queue_capacity: 8,
+                    first_index: 0,
+                },
+                &transport,
+                |_w| {
+                    Ok(MixedEdge {
+                        pool: ThreadPool::new(2),
+                    })
+                },
+                || {
+                    Ok(VerifyCloud {
+                        pool: ThreadPool::new(2),
+                    })
+                },
+            )
+            .unwrap();
+            assert_eq!(out.outcomes.len(), n);
+            for o in &out.outcomes {
+                assert_eq!(
+                    o.correct,
+                    Some(true),
+                    "request {} failed wire round-trip verification",
+                    o.id
+                );
+            }
+            let stats = transport.stats();
+            assert_eq!(stats.items, n as u64);
+            assert!(stats.bytes_sent > 0 && stats.bytes_received > 0);
+        });
+    }
+}

@@ -2,9 +2,17 @@
 """Generate the golden bit-stream fixtures for tests/golden_bitstreams.rs.
 
 This is a line-by-line port of the Rust encoder pipeline
-(rust/src/codec/{cabac,binarize,uniform,ecq,header}.rs): clip -> N-level
-quantization -> truncated-unary binarization -> LZMA-style binary range
-coder with 11-bit adaptive contexts -> 12-byte classification header.
+(rust/src/codec/{cabac,entropy,binarize,uniform,ecq,header}.rs): clip ->
+N-level quantization -> truncated-unary binarization -> entropy stage ->
+12-byte classification header. Both entropy backends are ported: the
+LZMA-style binary range coder with 11-bit adaptive contexts (CABAC), and
+the two-way interleaved rANS coder with static 12-bit per-bit-position
+frequency tables signaled in-band (header byte 0 bits 6-7 carry the
+backend id: 0 = CABAC, 1 = rANS).
+
+The rANS fixtures reuse the CABAC fixtures' .f32 inputs (same tensors,
+two backends), so each rans_*.lwfc is directly differential against its
+legacy counterpart.
 
 All arithmetic is integer (CABAC) or exactly-emulated IEEE f32
 (quantizer): a product/sum of two f32 values is exact in f64, so rounding
@@ -113,6 +121,131 @@ class CabacDecoder:
         return bit
 
 
+# --------------------------------------------------------------------------
+# Interleaved rANS (port of rust/src/codec/entropy.rs RansBackend).
+# --------------------------------------------------------------------------
+
+RANS_SCALE_BITS = 12
+RANS_SCALE = 1 << RANS_SCALE_BITS  # 4096
+RANS_LOWER = 1 << 23
+
+
+def rans_freq_table(hist, levels):
+    """Per-position P(bit=0) scaled to [1, 4095], exactly as the Rust
+    freq_table: position pos sees a one for every index > pos and a zero
+    for every index == pos."""
+    nctx = max(levels - 1, 1)
+    ones = 0
+    rev = []
+    for pos in range(nctx - 1, -1, -1):
+        ones += hist[pos + 1]
+        zeros = hist[pos]
+        total = zeros + ones
+        if total == 0:
+            p = RANS_SCALE // 2
+        else:
+            p = (zeros * RANS_SCALE + total // 2) // total
+        rev.append(min(max(p, 1), RANS_SCALE - 1))
+    return list(reversed(rev))
+
+
+def rans_start_freq(p0, bit):
+    return (p0, RANS_SCALE - p0) if bit else (0, p0)
+
+
+def rans_encode_bit(state, buf, p0, bit):
+    start, freq = rans_start_freq(p0, bit)
+    x_max = ((RANS_LOWER >> RANS_SCALE_BITS) << 8) * freq
+    x = state
+    while x >= x_max:
+        buf.append(x & 0xFF)
+        x >>= 8
+    return ((x // freq) << RANS_SCALE_BITS) + (x % freq) + start
+
+
+def rans_encode_payload(indices, levels):
+    """Static tables (u16 LE each) + two initial u32 LE states + the
+    interleaved byte stream. Bit i of the forward TU bit sequence uses
+    state i & 1; encoding runs the decoder program in exact reverse."""
+    nctx = max(levels - 1, 1)
+    hist = [0] * levels
+    for n in indices:
+        hist[n] += 1
+    p0 = rans_freq_table(hist, levels)
+    out = bytearray()
+    for p in p0:
+        out += struct.pack("<H", p)
+    total_bits = sum(hist[pos] + sum(hist[pos + 1:]) for pos in range(nctx))
+    buf = bytearray()
+    states = [RANS_LOWER, RANS_LOWER]
+    bi = total_bits
+    for n in reversed(indices):
+        if n + 1 != levels:
+            bi -= 1
+            states[bi & 1] = rans_encode_bit(states[bi & 1], buf, p0[n], False)
+        for pos in range(n - 1, -1, -1):
+            bi -= 1
+            states[bi & 1] = rans_encode_bit(states[bi & 1], buf, p0[pos], True)
+    assert bi == 0, "bit accounting mismatch"
+    buf += states[1].to_bytes(4, "big")
+    buf += states[0].to_bytes(4, "big")
+    buf.reverse()
+    out += buf
+    return bytes(out)
+
+
+class RansError(Exception):
+    pass
+
+
+def rans_decode_payload(payload, levels, elements):
+    """Mirror of RansBackend::decode_payload, including every error path
+    (truncation, bad tables, final-state and full-consumption checks)."""
+    nctx = max(levels - 1, 1)
+    table_len = nctx * 2
+    if len(payload) < table_len + 8:
+        raise RansError("payload truncated: header")
+    p0 = []
+    for t in range(nctx):
+        (v,) = struct.unpack_from("<H", payload, 2 * t)
+        if v == 0 or v >= RANS_SCALE:
+            raise RansError(f"frequency {v} out of range")
+        p0.append(v)
+    states = [
+        struct.unpack_from("<I", payload, table_len)[0],
+        struct.unpack_from("<I", payload, table_len + 4)[0],
+    ]
+    if any(s < RANS_LOWER for s in states):
+        raise RansError("initial state below bound")
+    pos = table_len + 8
+    bi = 0
+    out = []
+    for _ in range(elements):
+        n = 0
+        while n + 1 < levels:
+            k = bi & 1
+            bi += 1
+            p = p0[n]
+            s = states[k] & (RANS_SCALE - 1)
+            bit = s >= p
+            start, freq = rans_start_freq(p, bit)
+            states[k] = freq * (states[k] >> RANS_SCALE_BITS) + s - start
+            while states[k] < RANS_LOWER:
+                if pos >= len(payload):
+                    raise RansError("payload truncated mid-stream")
+                states[k] = (states[k] << 8) | payload[pos]
+                pos += 1
+            if not bit:
+                break
+            n += 1
+        out.append(n)
+    if states != [RANS_LOWER, RANS_LOWER]:
+        raise RansError("final-state check failed")
+    if pos != len(payload):
+        raise RansError("unconsumed trailing bytes")
+    return out
+
+
 def num_contexts(levels):
     return max(levels - 1, 1)
 
@@ -161,9 +294,10 @@ def ecq_index(x, recon, thresholds, c_min, c_max):
     return n
 
 
-def header_bytes(quant_kind, levels, c_min, c_max, img, recon=None):
+def header_bytes(quant_kind, levels, c_min, c_max, img, recon=None, backend=0):
     out = bytearray()
-    out.append(0x00 | (quant_kind << 4))  # classification | quant nibble
+    # classification | quant bits 4-5 | entropy backend bits 6-7
+    out.append(0x00 | (quant_kind << 4) | (backend << 6))
     out.append(levels)
     out += struct.pack("<f", c_min)
     out += struct.pack("<f", c_max)
@@ -242,6 +376,54 @@ def self_check():
         encode_tu(n, 4, lambda _p, b: got.append(b))
         assert got == want, f"TU {n}"
 
+    # ---- rANS self-checks (the Rust backend is a transliteration of the
+    # functions above, so these runs executably validate its algorithm) ----
+    import random
+
+    for seed, levels, n in [
+        (1, 2, 0), (2, 2, 1), (3, 2, 5000), (4, 3, 777), (5, 4, 20000),
+        (6, 8, 10000), (7, 5, 1), (8, 16, 3000), (9, 4, 2),
+    ]:
+        rng = random.Random(seed)
+        # Skewed toward low indices, like clipped activations.
+        idx = [min(int(rng.expovariate(1.2)), levels - 1) for _ in range(n)]
+        payload = rans_encode_payload(idx, levels)
+        assert rans_decode_payload(payload, levels, n) == idx, \
+            f"rANS roundtrip failed (seed={seed} levels={levels} n={n})"
+        # Truncation at every prefix must error, never mis-decode.
+        for cut in range(len(payload)):
+            try:
+                got = rans_decode_payload(payload[:cut], levels, n)
+            except RansError:
+                continue
+            assert False, f"truncation to {cut} decoded {len(got)} symbols"
+        # Element overcount / undercount must error via the final-state or
+        # consumption checks.
+        for bad_n in [n + 1, n + 97]:
+            try:
+                rans_decode_payload(payload, levels, bad_n)
+                assert False, f"overcount {bad_n} accepted"
+            except RansError:
+                pass
+        if n > 0:
+            try:
+                rans_decode_payload(payload, levels, n - 1)
+                assert False, "undercount accepted"
+            except RansError:
+                pass
+
+    # Degenerate single-bin streams exercise the [1, 4095] clamps.
+    for idx in ([0] * 4096, [1] * 4096, [3] * 4096):
+        payload = rans_encode_payload(idx, 4)
+        assert rans_decode_payload(payload, 4, len(idx)) == idx
+
+    # Static tables must still compress skewed data well below raw cost.
+    rng = random.Random(99)
+    idx = [min(int(rng.expovariate(2.0)), 3) for _ in range(65536)]
+    payload = rans_encode_payload(idx, 4)
+    bpe = len(payload) * 8.0 / len(idx)
+    assert bpe < 1.6, f"rANS bits/element {bpe}"
+
     print("self-checks passed")
 
 
@@ -279,6 +461,16 @@ def write_fixture(stem, values, stream):
     print(f"{stem}: {len(values)} elements -> {len(stream)} bytes")
 
 
+def write_rans_fixture(stem, idx, levels, head):
+    """rANS twin of a CABAC fixture: same .f32 input (not rewritten), new
+    rans_<stem>.lwfc with the backend-1 header."""
+    stream = head + rans_encode_payload(idx, levels)
+    assert rans_decode_payload(stream[len(head):], levels, len(idx)) == idx
+    with open("rans_" + stem + ".lwfc", "wb") as f:
+        f.write(stream)
+    print(f"rans_{stem}: {len(idx)} elements -> {len(stream)} bytes")
+
+
 def main():
     self_check()
 
@@ -294,6 +486,9 @@ def main():
     stream = encode_stream(idx, levels, head)
     assert decode_stream_indices(stream[len(head):], levels, n) == idx
     write_fixture("uniform_n4", xs, stream)
+    write_rans_fixture(
+        "uniform_n4", idx, levels, header_bytes(0, levels, c_min, c_max, img, backend=1)
+    )
 
     # ---- uniform, N=2 (the specialized 1-bit encoder arm): boundary 3 ----
     c_min, c_max, levels = 0.0, 6.0, 2
@@ -304,6 +499,9 @@ def main():
     stream = encode_stream(idx, levels, head)
     assert decode_stream_indices(stream[len(head):], levels, n) == idx
     write_fixture("uniform_n2", xs, stream)
+    write_rans_fixture(
+        "uniform_n2", idx, levels, header_bytes(0, levels, c_min, c_max, img, backend=1)
+    )
 
     # ---- entropy-constrained, N=4: hand-pinned design ---------------------
     # recon/thresholds chosen like a pinned Algorithm-1 output (x̂_0 = c_min,
@@ -318,6 +516,9 @@ def main():
     stream = encode_stream(idx, levels, head)
     assert decode_stream_indices(stream[len(head):], levels, n) == idx
     write_fixture("ecq_n4", xs, stream)
+    write_rans_fixture(
+        "ecq_n4", idx, levels, header_bytes(1, levels, c_min, c_max, img, recon, backend=1)
+    )
 
 
 if __name__ == "__main__":

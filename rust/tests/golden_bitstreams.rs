@@ -4,13 +4,18 @@
 //! and were produced by `tests/golden/gen_golden.py`, a line-by-line port
 //! of this codec with its own self-checks.
 //!
-//! Three vectors cover the three encoder paths: the generic truncated-unary
-//! path (uniform N=4), the specialized 1-bit path (uniform N=2), and the
-//! entropy-constrained path with an in-band reconstruction table (ECQ N=4).
+//! Six vectors cover both entropy backends over the three encoder paths:
+//! the generic truncated-unary path (uniform N=4), the specialized 1-bit
+//! CABAC path (uniform N=2), and the entropy-constrained path with an
+//! in-band reconstruction table (ECQ N=4) — each as a legacy CABAC stream
+//! (header backend bits 0, pre-bump byte layout) and as a `rans_*` twin
+//! over the *same* `.f32` input with the rANS backend id in the header.
+//! The CABAC fixtures predate the header version bump, so they double as
+//! the proof that legacy streams still decode byte-exactly.
 
 use lwfc::codec::{
-    decode, decode_indices, Encoder, EncoderConfig, NonUniformQuantizer, QuantKind, Quantizer,
-    UniformQuantizer,
+    decode, decode_indices, Encoder, EncoderConfig, EntropyKind, NonUniformQuantizer, QuantKind,
+    Quantizer, UniformQuantizer,
 };
 
 fn f32_le(bytes: &[u8]) -> Vec<f32> {
@@ -21,13 +26,20 @@ fn f32_le(bytes: &[u8]) -> Vec<f32> {
         .collect()
 }
 
-/// Assert: encoding `input` with `quantizer` reproduces `expected` exactly,
-/// and decoding `expected` reproduces element-wise fake-quant of `input`.
-fn check_golden(name: &str, input: &[u8], expected: &[u8], quantizer: Quantizer) {
+/// Assert: encoding `input` with `quantizer` under `entropy` reproduces
+/// `expected` exactly, the header signals the backend, and decoding
+/// `expected` reproduces element-wise fake-quant of `input`.
+fn check_golden_with(
+    name: &str,
+    input: &[u8],
+    expected: &[u8],
+    quantizer: Quantizer,
+    entropy: EntropyKind,
+) {
     let xs = f32_le(input);
     let q = quantizer.clone();
 
-    let mut enc = Encoder::new(EncoderConfig::classification(quantizer, 32));
+    let mut enc = Encoder::new(EncoderConfig::classification(quantizer, 32).with_entropy(entropy));
     let stream = enc.encode(&xs);
     assert_eq!(
         stream.bytes, expected,
@@ -39,9 +51,14 @@ fn check_golden(name: &str, input: &[u8], expected: &[u8], quantizer: Quantizer)
     let (decoded, header) = decode(expected, xs.len()).unwrap();
     assert_eq!(decoded.len(), xs.len(), "{name}: decoded length");
     assert_eq!(header.levels, q.levels(), "{name}: header levels");
+    assert_eq!(header.entropy, entropy, "{name}: header backend");
     for (i, (&x, &y)) in xs.iter().zip(&decoded).enumerate() {
         assert_eq!(y, q.fake_quant(x), "{name}: element {i}");
     }
+}
+
+fn check_golden(name: &str, input: &[u8], expected: &[u8], quantizer: Quantizer) {
+    check_golden_with(name, input, expected, quantizer, EntropyKind::Cabac);
 }
 
 #[test]
@@ -68,18 +85,114 @@ fn golden_uniform_n2_specialized_one_bit_path() {
 fn golden_ecq_n4() {
     // Hand-pinned Algorithm-1-style design (x̂_0 = c_min, x̂_{N-1} = c_max);
     // must match gen_golden.py exactly.
-    let q = NonUniformQuantizer {
-        recon: vec![0.0, 1.0, 2.5, 6.0],
-        thresholds: vec![0.5, 1.75, 4.25],
-        c_min: 0.0,
-        c_max: 6.0,
-    };
     check_golden(
         "ecq_n4",
         include_bytes!("golden/ecq_n4.f32"),
         include_bytes!("golden/ecq_n4.lwfc"),
-        Quantizer::NonUniform(q),
+        Quantizer::NonUniform(pinned_ecq()),
     );
+}
+
+fn pinned_ecq() -> NonUniformQuantizer {
+    NonUniformQuantizer {
+        recon: vec![0.0, 1.0, 2.5, 6.0],
+        thresholds: vec![0.5, 1.75, 4.25],
+        c_min: 0.0,
+        c_max: 6.0,
+    }
+}
+
+#[test]
+fn golden_rans_uniform_n4() {
+    check_golden_with(
+        "rans_uniform_n4",
+        include_bytes!("golden/uniform_n4.f32"),
+        include_bytes!("golden/rans_uniform_n4.lwfc"),
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 6.0, 4)),
+        EntropyKind::Rans,
+    );
+}
+
+#[test]
+fn golden_rans_uniform_n2() {
+    check_golden_with(
+        "rans_uniform_n2",
+        include_bytes!("golden/uniform_n2.f32"),
+        include_bytes!("golden/rans_uniform_n2.lwfc"),
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 6.0, 2)),
+        EntropyKind::Rans,
+    );
+}
+
+#[test]
+fn golden_rans_ecq_n4_with_in_band_recon_table() {
+    check_golden_with(
+        "rans_ecq_n4",
+        include_bytes!("golden/ecq_n4.f32"),
+        include_bytes!("golden/rans_ecq_n4.lwfc"),
+        Quantizer::NonUniform(pinned_ecq()),
+        EntropyKind::Rans,
+    );
+    // The recon table rides in-band exactly like the CABAC variant.
+    let expected = include_bytes!("golden/rans_ecq_n4.lwfc");
+    let n = include_bytes!("golden/ecq_n4.f32").len() / 4;
+    let (_, header) = decode_indices(expected, n).unwrap();
+    assert_eq!(header.quant, QuantKind::EntropyConstrained);
+    assert_eq!(header.entropy, EntropyKind::Rans);
+    assert_eq!(header.recon.as_deref(), Some(&[0.0f32, 1.0, 2.5, 6.0][..]));
+}
+
+#[test]
+fn rans_and_cabac_goldens_decode_to_identical_indices() {
+    // The rANS fixtures reuse the CABAC fixtures' inputs, so the two
+    // backends' golden streams must agree index-for-index.
+    for (name, legacy, rans, n) in [
+        (
+            "uniform_n4",
+            &include_bytes!("golden/uniform_n4.lwfc")[..],
+            &include_bytes!("golden/rans_uniform_n4.lwfc")[..],
+            include_bytes!("golden/uniform_n4.f32").len() / 4,
+        ),
+        (
+            "uniform_n2",
+            &include_bytes!("golden/uniform_n2.lwfc")[..],
+            &include_bytes!("golden/rans_uniform_n2.lwfc")[..],
+            include_bytes!("golden/uniform_n2.f32").len() / 4,
+        ),
+        (
+            "ecq_n4",
+            &include_bytes!("golden/ecq_n4.lwfc")[..],
+            &include_bytes!("golden/rans_ecq_n4.lwfc")[..],
+            include_bytes!("golden/ecq_n4.f32").len() / 4,
+        ),
+    ] {
+        let (a, ha) = decode_indices(legacy, n).unwrap();
+        let (b, hb) = decode_indices(rans, n).unwrap();
+        assert_eq!(ha.entropy, EntropyKind::Cabac, "{name}: legacy backend");
+        assert_eq!(hb.entropy, EntropyKind::Rans, "{name}: rans backend");
+        assert_eq!(a, b, "{name}: backends decode different indices");
+    }
+}
+
+#[test]
+fn legacy_goldens_predate_the_backend_field() {
+    // Byte 0 bits 6-7 of every pre-bump fixture are zero — the bits the
+    // v2 header reinterprets as the backend id. This is the pin that the
+    // version bump kept legacy streams decoding unchanged.
+    for bytes in [
+        &include_bytes!("golden/uniform_n4.lwfc")[..],
+        &include_bytes!("golden/uniform_n2.lwfc")[..],
+        &include_bytes!("golden/ecq_n4.lwfc")[..],
+    ] {
+        assert_eq!(bytes[0] >> 6, 0);
+    }
+    for bytes in [
+        &include_bytes!("golden/rans_uniform_n4.lwfc")[..],
+        &include_bytes!("golden/rans_uniform_n2.lwfc")[..],
+        &include_bytes!("golden/rans_ecq_n4.lwfc")[..],
+    ] {
+        assert_eq!(bytes[0] >> 6, 1);
+    }
 }
 
 #[test]
@@ -109,4 +222,9 @@ fn golden_vectors_exercise_every_level() {
 fn golden_streams_reject_truncation() {
     let bytes = include_bytes!("golden/uniform_n4.lwfc");
     assert!(decode(&bytes[..8], 512).is_err(), "truncated header accepted");
+    // rANS payload truncation is detected anywhere, not just in the header.
+    let rans = include_bytes!("golden/rans_uniform_n4.lwfc");
+    for cut in [8, 20, rans.len() - 1] {
+        assert!(decode(&rans[..cut], 512).is_err(), "rANS cut at {cut} accepted");
+    }
 }

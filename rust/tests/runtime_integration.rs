@@ -192,6 +192,7 @@ fn serving_pipeline_end_to_end() {
                 c_max: 1.2,
                 levels: 4,
             },
+            entropy: lwfc::codec::EntropyKind::Cabac,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: None,
@@ -249,6 +250,7 @@ fn detect_pipeline_end_to_end() {
                 c_max: 1.0,
                 levels: 8,
             },
+            entropy: lwfc::codec::EntropyKind::Rans,
             val_seed: m.val_seed,
             batch: m.serve_batch,
             adaptive: None,
