@@ -9,8 +9,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example adaptive_stream`
 
-use lwfc::codec::{Encoder, EncoderConfig, Quantizer, UniformQuantizer};
-use lwfc::coordinator::{AdaptiveClipController, AdaptiveConfig};
+use lwfc::codec::{Encoder, EncoderConfig, QuantSpec};
+use lwfc::coordinator::{kind_preserving_designer, AdaptiveConfig, OnlineDesignController};
 use lwfc::data;
 use lwfc::modeling::{fit_leaky, optimal_cmax};
 use lwfc::runtime::{Manifest, Runtime};
@@ -32,21 +32,22 @@ fn main() -> anyhow::Result<()> {
     let c0 = optimal_cmax(&model0.pdf, 0.0, LEVELS).c_max;
     println!("initial model c_max = {c0:.4}");
 
-    let mut static_enc = Encoder::new(EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, c0 as f32, LEVELS)),
-        32,
-    ));
-    let mut adaptive_enc = Encoder::new(EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, c0 as f32, LEVELS)),
-        32,
-    ));
-    let mut controller = AdaptiveClipController::new(
-        AdaptiveConfig {
-            levels: LEVELS,
-            refit_every: 32,
-            ..Default::default()
-        },
-        c0,
+    let spec0 = QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: c0 as f32,
+        levels: LEVELS,
+    };
+    let mut static_enc = Encoder::new(EncoderConfig::classification(spec0.clone(), 32));
+    let mut adaptive_enc = Encoder::new(EncoderConfig::classification(spec0.clone(), 32));
+    let acfg = AdaptiveConfig {
+        levels: LEVELS,
+        refit_every: 32,
+        ..Default::default()
+    };
+    let mut controller = OnlineDesignController::new(
+        acfg,
+        kind_preserving_designer(&spec0, lwfc::codec::DesignKind::Model, &acfg),
+        spec0,
     );
 
     // Drift schedule: three phases of feature gain.
@@ -73,12 +74,10 @@ fn main() -> anyhow::Result<()> {
                 let mut recon = vec![0.0f32; b * per_item];
                 for i in 0..b {
                     let item = &scaled[i * per_item..(i + 1) * per_item];
-                    if which == 1 && controller.observe(item) {
-                        enc.config.quantizer = Quantizer::Uniform(UniformQuantizer::new(
-                            0.0,
-                            controller.c_max() as f32,
-                            LEVELS,
-                        ));
+                    if which == 1 {
+                        if let Some(spec) = controller.observe(item) {
+                            enc.config.quant = spec;
+                        }
                     }
                     let stream = enc.encode(item);
                     bits[which] += stream.bits_per_element();

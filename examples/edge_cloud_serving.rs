@@ -41,6 +41,8 @@ fn run_task(m: &Manifest, task: TaskKind, levels: usize, requests: usize) -> any
             entropy: EntropyKind::Cabac,
             val_seed: m.val_seed,
             batch: m.serve_batch,
+            design: lwfc::codec::DesignKind::Static,
+            granularity: lwfc::codec::ClipGranularity::Stream,
             adaptive: None,
             threads: 2,
         },

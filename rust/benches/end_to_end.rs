@@ -76,6 +76,8 @@ fn serving_bench(m: &Manifest) {
                 entropy: EntropyKind::Cabac,
                 val_seed: m.val_seed,
                 batch: m.serve_batch,
+                design: lwfc::codec::DesignKind::Static,
+                granularity: lwfc::codec::ClipGranularity::Stream,
                 adaptive: None,
                 threads: codec_threads,
             },

@@ -25,6 +25,7 @@
 //!   the directory; [`decode_batched_tolerant`] decodes the healthy tiles
 //!   and reports the corrupted ones instead of failing the whole tensor.
 
+use super::design::{design_or, QuantDesigner, QuantSpec};
 use super::header::{
     is_batched, substream_checksum, SubstreamDirectory, SubstreamEntry,
 };
@@ -139,6 +140,48 @@ pub fn encode_batched(
         enc.encode(&data[lo..hi])
     });
 
+    seal_container(config, data.len(), tiles, None)
+}
+
+/// Encode `data` as a **container-v3** batched stream with one freshly
+/// designed quantizer per tile: each worker runs `designer` over its
+/// tile's statistics/samples before encoding, so tensors with
+/// heterogeneous per-tile dynamic ranges stop paying for one global clip
+/// range (the paper's §III-B optimization, online, at tile scope). The
+/// per-tile [`QuantSpec`]s are recorded in the container directory and
+/// cross-checked against each tile's own stream header at decode time.
+///
+/// Degenerate tiles (constant values, too few samples) fall back to
+/// `config.quant`, so this encodes every input [`encode_batched`] does.
+/// Determinism holds exactly as for [`encode_batched`]: the design
+/// depends only on the tile's data, never on scheduling.
+pub fn encode_batched_designed(
+    config: &EncoderConfig,
+    designer: &dyn QuantDesigner,
+    data: &[f32],
+    tile_elems: usize,
+    pool: &ThreadPool,
+) -> BatchedStream {
+    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
+    let n_tiles = tile_count(data.len(), tile_elems).max(1);
+    let tiles: Vec<(EncodedStream, QuantSpec)> = pool.map_indexed(n_tiles, |i| {
+        let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
+        let spec = design_or(designer, &data[lo..hi], &config.quant);
+        let mut enc = Encoder::new(config.clone().with_quant(spec.clone()));
+        (enc.encode(&data[lo..hi]), spec)
+    });
+    let (tiles, specs): (Vec<EncodedStream>, Vec<QuantSpec>) = tiles.into_iter().unzip();
+    seal_container(config, data.len(), tiles, Some(specs))
+}
+
+/// Assemble encoded tiles (+ optional per-tile specs) into a container.
+fn seal_container(
+    config: &EncoderConfig,
+    elements: usize,
+    tiles: Vec<EncodedStream>,
+    specs: Option<Vec<QuantSpec>>,
+) -> BatchedStream {
+    let n_tiles = tiles.len();
     let entries: Vec<SubstreamEntry> = tiles
         .iter()
         .map(|t| SubstreamEntry {
@@ -148,9 +191,10 @@ pub fn encode_batched(
         })
         .collect();
     let dir = SubstreamDirectory {
-        total_elements: data.len() as u64,
+        total_elements: elements as u64,
         entropy: config.entropy,
         entries,
+        specs,
     };
     let payload_len: usize = tiles.iter().map(|t| t.bytes.len()).sum();
     let mut bytes = Vec::with_capacity(dir.encoded_len() + payload_len);
@@ -160,7 +204,7 @@ pub fn encode_batched(
     }
     BatchedStream {
         bytes,
-        elements: data.len(),
+        elements,
         substreams: n_tiles,
     }
 }
@@ -203,6 +247,7 @@ fn decode_tile(
     bytes: &[u8],
     entry: &SubstreamEntry,
     range: (usize, usize),
+    spec: Option<&QuantSpec>,
 ) -> Result<(Vec<f32>, Header), String> {
     let payload = &bytes[range.0..range.1];
     let got = substream_checksum(payload);
@@ -225,20 +270,71 @@ fn decode_tile(
             payload.len()
         ));
     }
-    decode_stream(payload, entry.elements as usize)
+    let (values, header) = decode_stream(payload, entry.elements as usize)?;
+    // Container v3: the directory's designed spec and the tile's own
+    // stream header describe the same quantizer twice. Every field the
+    // header carries must agree — kind, levels, clip range, and the full
+    // ECQ reconstruction table — so a directory rewritten after the fact
+    // cannot re-label what this tile *reconstructs to*. (The spec's ECQ
+    // decision thresholds have no header counterpart — the decoder never
+    // needs them — so they are only structurally validated at parse time;
+    // a consumer re-encoding with `dir.specs` trusts the container for
+    // them.) f32 fields compare by bits: both sides round-tripped through
+    // the same little-endian serialization.
+    if let Some(spec) = spec {
+        let same_f32 = |a: f32, b: f32| a.to_bits() == b.to_bits();
+        let matches = spec.kind() == header.quant
+            && spec.levels() == header.levels
+            && same_f32(spec.c_min(), header.c_min)
+            && same_f32(spec.c_max(), header.c_max)
+            && match (spec, &header.recon) {
+                (QuantSpec::EntropyConstrained(q), Some(recon)) => {
+                    q.recon.len() == recon.len()
+                        && q.recon
+                            .iter()
+                            .zip(recon)
+                            .all(|(&a, &b)| same_f32(a, b))
+                }
+                (QuantSpec::Uniform { .. }, None) => true,
+                _ => false,
+            };
+        if !matches {
+            return Err(format!(
+                "tile header disagrees with the directory quant spec \
+                 (spec {:?} N={} [{}, {}] vs header {:?} N={} [{}, {}])",
+                spec.kind(),
+                spec.levels(),
+                spec.c_min(),
+                spec.c_max(),
+                header.quant,
+                header.levels,
+                header.c_min,
+                header.c_max,
+            ));
+        }
+    }
+    Ok((values, header))
+}
+
+/// Per-tile spec accessor for decode loops (`None` below v3).
+fn spec_of(dir: &SubstreamDirectory, i: usize) -> Option<&QuantSpec> {
+    dir.specs.as_ref().map(|s| &s[i])
 }
 
 /// Strict parallel decode: every substream must validate and decode, else
 /// the whole container is rejected. Returns the reconstructed tensor and
-/// the header of the first substream (all tiles share one codec config) —
-/// an empty tensor round-trips because [`encode_batched`] always emits at
-/// least one (possibly empty) substream carrying the header.
+/// the header of the first substream — for spec-less containers all tiles
+/// share one codec config; a v3 container's tiles may each carry their own
+/// designed quantizer, so the returned header describes tile 0 only (the
+/// directory's spec block has the full per-tile picture). An empty tensor
+/// round-trips because [`encode_batched`] always emits at least one
+/// (possibly empty) substream carrying the header.
 pub fn decode_batched(bytes: &[u8], pool: &ThreadPool) -> Result<(Vec<f32>, Header), String> {
     let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
     validate_entries(&dir)?;
     let ranges = payload_ranges(&dir, payload_off);
     let tiles: Vec<Result<(Vec<f32>, Header), String>> = pool.map_indexed(dir.entries.len(), |i| {
-        decode_tile(bytes, &dir.entries[i], ranges[i])
+        decode_tile(bytes, &dir.entries[i], ranges[i], spec_of(&dir, i))
     });
     // Capacity from the directory is untrusted input: cap the pre-allocation
     // so a crafted count cannot force a huge up-front allocation (the vec
@@ -265,10 +361,13 @@ pub fn batched_elements(bytes: &[u8]) -> Result<usize, String> {
 }
 
 /// Tolerant parallel decode: corrupted substreams are replaced by a
-/// constant fill (the clip minimum, taken from a *healthy* tile's header
-/// since all tiles share one codec config; 0.0 when no tile survived) and
-/// reported, so one damaged tile does not take down the tensor — the
-/// paper's coarse reconstructions degrade gracefully under tile loss.
+/// constant fill and reported, so one damaged tile does not take down the
+/// tensor — the paper's coarse reconstructions degrade gracefully under
+/// tile loss. The fill is the corrupt tile's own clip minimum when the
+/// container carries per-tile quant specs (v3 — the spec block passed
+/// structural validation even if the tile payload did not); otherwise the
+/// clip minimum of a *healthy* tile's header (all spec-less tiles share
+/// one codec config; 0.0 when no tile survived).
 pub fn decode_batched_tolerant(
     bytes: &[u8],
     pool: &ThreadPool,
@@ -280,11 +379,11 @@ pub fn decode_batched_tolerant(
     validate_entries(&dir)?;
     let ranges = payload_ranges(&dir, payload_off);
     let tiles: Vec<Result<(Vec<f32>, Header), String>> = pool.map_indexed(dir.entries.len(), |i| {
-        decode_tile(bytes, &dir.entries[i], ranges[i])
+        decode_tile(bytes, &dir.entries[i], ranges[i], spec_of(&dir, i))
     });
-    // Never derive the fill from a tile that failed its checksum — its
-    // header bytes are exactly what corruption may have hit.
-    let fill = tiles
+    // Never derive the shared fill from a tile that failed its checksum —
+    // its header bytes are exactly what corruption may have hit.
+    let shared_fill = tiles
         .iter()
         .find_map(|t| t.as_ref().ok().map(|(_, h)| h.c_min))
         .unwrap_or(0.0);
@@ -297,6 +396,7 @@ pub fn decode_batched_tolerant(
         match tile {
             Ok((vals, _)) => out.extend_from_slice(&vals),
             Err(_) => {
+                let fill = spec_of(&dir, i).map_or(shared_fill, |s| s.c_min());
                 out.extend(std::iter::repeat(fill).take(dir.entries[i].elements as usize));
                 report.corrupted.push(i);
             }
@@ -415,15 +515,15 @@ mod tests {
         // must refuse to fill 4 Gi values (it previously trusted
         // `entry.elements` after the strict decode failed).
         let payload = vec![0u8; 16];
-        let dir = SubstreamDirectory {
-            total_elements: u32::MAX as u64,
-            entropy: crate::codec::EntropyKind::Cabac,
-            entries: vec![SubstreamEntry {
+        let dir = SubstreamDirectory::plain(
+            u32::MAX as u64,
+            crate::codec::EntropyKind::Cabac,
+            vec![SubstreamEntry {
                 elements: u32::MAX,
                 byte_len: payload.len() as u32,
                 checksum: substream_checksum(&payload),
             }],
-        };
+        );
         let mut bytes = Vec::new();
         dir.write(&mut bytes);
         bytes.extend_from_slice(&payload);
@@ -476,7 +576,7 @@ mod tests {
         let xs = activations(20_000, 7);
         let pool = ThreadPool::new(3);
         let c = cfg(4, 2.0).with_entropy(EntropyKind::Rans);
-        let q = c.quantizer.clone();
+        let q = c.quantizer();
         let batched = encode_batched(&c, &xs, 2048, &pool);
         assert_eq!(sniff(&batched.bytes), Some(EntropyKind::Rans));
         let (dir, _) = SubstreamDirectory::read(&batched.bytes).unwrap();
@@ -494,6 +594,90 @@ mod tests {
         assert!(decode_batched(&bad, &pool).is_err());
         let (_, report) = decode_batched_tolerant(&bad, &pool).unwrap();
         assert_eq!(report.corrupted.len(), 1);
+    }
+
+    #[test]
+    fn designed_container_roundtrips_with_per_tile_specs() {
+        use crate::codec::design::{ModelOptimalDesigner, QuantSpec};
+        // Tiles with very different scales: the designer must give each
+        // its own range, and decode must still be exact per-tile
+        // fake-quant of the designed spec.
+        let mut xs = Vec::new();
+        let mut g = Gen::new("designed_batch", 1);
+        for scale in [0.3f32, 4.0, 0.3, 4.0] {
+            xs.extend(g.activation_vec(2048, scale));
+        }
+        let pool = ThreadPool::new(3);
+        let c = cfg(4, 2.0);
+        let designer = ModelOptimalDesigner::leaky(4);
+        let batched = encode_batched_designed(&c, &designer, &xs, 2048, &pool);
+
+        let (dir, _) = SubstreamDirectory::read(&batched.bytes).unwrap();
+        let specs = dir.specs.as_ref().expect("v3 container carries specs");
+        assert_eq!(specs.len(), 4);
+        assert!(
+            specs[0].c_max() < 0.5 * specs[1].c_max(),
+            "small-scale tile must get a smaller range: {:?} vs {:?}",
+            specs[0],
+            specs[1]
+        );
+
+        let (out, _) = decode_batched(&batched.bytes, &pool).unwrap();
+        assert_eq!(out.len(), xs.len());
+        for (t, spec) in specs.iter().enumerate() {
+            let q = spec.materialize();
+            for k in 0..2048 {
+                let i = t * 2048 + k;
+                assert_eq!(out[i], q.fake_quant(xs[i]), "tile {t} element {k}");
+            }
+        }
+        // Deterministic across pool sizes, like the plain path.
+        let again = encode_batched_designed(&c, &designer, &xs, 2048, &ThreadPool::new(8));
+        assert_eq!(batched.bytes, again.bytes);
+        // decode_any takes the v3 container through the ingest path too.
+        let (any, _) = decode_any(&batched.bytes, xs.len(), &pool).unwrap();
+        assert_eq!(any, out);
+        // Degenerate input falls back to the static spec.
+        let flat = vec![0.25f32; 4096];
+        let fb = encode_batched_designed(&c, &designer, &flat, 2048, &pool);
+        let (fdir, _) = SubstreamDirectory::read(&fb.bytes).unwrap();
+        for spec in fdir.specs.unwrap() {
+            assert_eq!(spec, QuantSpec::from(c.quantizer()));
+        }
+    }
+
+    #[test]
+    fn designed_container_detects_spec_header_mismatch() {
+        use crate::codec::design::ModelOptimalDesigner;
+        let mut g = Gen::new("designed_mismatch", 2);
+        let mut xs = g.activation_vec(2048, 0.3);
+        xs.extend(g.activation_vec(2048, 4.0));
+        let pool = ThreadPool::new(2);
+        let designer = ModelOptimalDesigner::leaky(4);
+        let batched = encode_batched_designed(&cfg(4, 2.0), &designer, &xs, 2048, &pool);
+        let (dir, payload_off) = SubstreamDirectory::read(&batched.bytes).unwrap();
+
+        // Swap the two tiles' directory specs (structurally valid records,
+        // wrong tiles): every tile now disagrees with its own header, and
+        // strict decode must reject rather than trust either side.
+        let specs = dir.specs.clone().unwrap();
+        let mut forged_dir = dir.clone();
+        forged_dir.specs = Some(vec![specs[1].clone(), specs[0].clone()]);
+        let mut forged = Vec::new();
+        forged_dir.write(&mut forged);
+        assert_eq!(forged.len(), payload_off, "swap must not change layout");
+        forged.extend_from_slice(&batched.bytes[payload_off..]);
+        let err = decode_batched(&forged, &pool).unwrap_err();
+        assert!(
+            err.contains("disagrees with the directory quant spec"),
+            "unexpected error: {err}"
+        );
+        // The tolerant path reports both tiles instead of decoding them
+        // under the wrong quantizer, filling with each spec's own c_min.
+        let (vals, report) = decode_batched_tolerant(&forged, &pool).unwrap();
+        assert_eq!(report.corrupted, vec![0, 1]);
+        assert_eq!(vals[0], specs[1].c_min());
+        assert_eq!(vals[2048], specs[0].c_min());
     }
 
     #[test]

@@ -1,0 +1,806 @@
+//! First-class quantizer **design stage** (paper §III-B + Algorithm 1 as a
+//! runtime capability).
+//!
+//! The paper computes *optimal* clipping ranges from an activation error
+//! model, yet a codec that takes one hand-picked `[c_min, c_max]` per
+//! stream never exercises that math online. This module promotes quantizer
+//! construction to a pluggable pipeline stage:
+//!
+//! ```text
+//! tensor ──▶ tensor::stats (moments / samples) ──▶ QuantDesigner ──▶ QuantSpec
+//!                                                                      │
+//!                                      Encoder / container v3 ◀────────┘
+//! ```
+//!
+//! A [`QuantDesigner`] consumes streaming statistics (and, for
+//! histogram-based designers, the raw samples) of whatever scope the
+//! caller chooses — a whole stream or a single tile — and produces a
+//! [`QuantSpec`]: a serializable, `Send` description of the quantizer the
+//! encoder should materialize. Three designers ship:
+//!
+//! * [`StaticDesigner`] — returns a fixed spec (today's behavior, and the
+//!   fallback every caller keeps for degenerate inputs).
+//! * [`ModelOptimalDesigner`] — fits the §III-B asymmetric-Laplace
+//!   pushforward from sample moments ([`crate::modeling::fit`]) and solves
+//!   for the optimal clipping range ([`crate::modeling::optimal_cmax`] /
+//!   [`crate::modeling::optimal_range`]); with `signed_cmin` the range may
+//!   go negative, as the paper's leaky-ReLU Table I columns do.
+//! * [`EcqDesigner`] — the paper's modified entropy-constrained
+//!   quantization (Algorithm 1) run on a bounded sample histogram
+//!   ([`crate::codec::ecq::design_from_histogram`]) over a model-optimal
+//!   clipping range.
+//!
+//! [`QuantSpec`] also serializes (`write`/`read`) so batched containers
+//! can record one designed quantizer **per tile** in their directory
+//! (container v3, see [`super::header`]): tensors with heterogeneous
+//! per-tile dynamic ranges stop paying for one global range.
+
+use super::ecq::{design_from_histogram, EcqParams, NonUniformQuantizer};
+use super::header::QuantKind;
+use super::stream::Quantizer;
+use super::uniform::UniformQuantizer;
+use crate::modeling::{fit, optimal_cmax, optimal_range, Activation};
+use crate::tensor::stats::{Histogram, TensorStats};
+
+/// Serializable, `Send` description of a quantizer — what a designer
+/// outputs, what container-v3 directory entries carry, and what workers
+/// materialize into a [`Quantizer`] locally (the xla handles are not
+/// Send, and neither variant needs them).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantSpec {
+    Uniform {
+        c_min: f32,
+        c_max: f32,
+        levels: usize,
+    },
+    EntropyConstrained(NonUniformQuantizer),
+}
+
+impl QuantSpec {
+    pub fn materialize(&self) -> Quantizer {
+        match self {
+            QuantSpec::Uniform {
+                c_min,
+                c_max,
+                levels,
+            } => Quantizer::Uniform(UniformQuantizer::new(*c_min, *c_max, *levels)),
+            QuantSpec::EntropyConstrained(q) => Quantizer::NonUniform(q.clone()),
+        }
+    }
+
+    pub fn kind(&self) -> QuantKind {
+        match self {
+            QuantSpec::Uniform { .. } => QuantKind::Uniform,
+            QuantSpec::EntropyConstrained(_) => QuantKind::EntropyConstrained,
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        match self {
+            QuantSpec::Uniform { levels, .. } => *levels,
+            QuantSpec::EntropyConstrained(q) => q.levels(),
+        }
+    }
+
+    pub fn c_min(&self) -> f32 {
+        match self {
+            QuantSpec::Uniform { c_min, .. } => *c_min,
+            QuantSpec::EntropyConstrained(q) => q.c_min,
+        }
+    }
+
+    pub fn c_max(&self) -> f32 {
+        match self {
+            QuantSpec::Uniform { c_max, .. } => *c_max,
+            QuantSpec::EntropyConstrained(q) => q.c_max,
+        }
+    }
+
+    // --- container-v3 spec records ---------------------------------------
+    //
+    // ```text
+    // 0      kind (0 = uniform, 1 = entropy-constrained)
+    // 1      N, number of levels (2..=255)
+    // 2-5    c_min (f32 LE)
+    // 6-9    c_max (f32 LE)
+    // kind 1 only:
+    //   10..          N reconstruction values (f32 LE each)
+    //   10+4N..       N-1 decision thresholds (f32 LE each)
+    // ```
+
+    pub const FIXED_RECORD_BYTES: usize = 10;
+
+    /// Serialized record length.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            QuantSpec::Uniform { .. } => Self::FIXED_RECORD_BYTES,
+            QuantSpec::EntropyConstrained(q) => {
+                Self::FIXED_RECORD_BYTES + q.levels() * 4 + (q.levels() - 1) * 4
+            }
+        }
+    }
+
+    /// Append the spec record to `out`.
+    pub fn write(&self, out: &mut Vec<u8>) {
+        let levels = self.levels();
+        assert!((2..=255).contains(&levels), "levels out of range: {levels}");
+        out.push(match self {
+            QuantSpec::Uniform { .. } => 0u8,
+            QuantSpec::EntropyConstrained(_) => 1u8,
+        });
+        out.push(levels as u8);
+        out.extend_from_slice(&self.c_min().to_le_bytes());
+        out.extend_from_slice(&self.c_max().to_le_bytes());
+        if let QuantSpec::EntropyConstrained(q) = self {
+            assert_eq!(q.thresholds.len(), levels - 1, "threshold count");
+            for &r in &q.recon {
+                out.extend_from_slice(&r.to_le_bytes());
+            }
+            for &t in &q.thresholds {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+    }
+
+    /// Parse one spec record from untrusted container bytes; returns the
+    /// spec and the record length consumed. Every structural rule a
+    /// legitimate designer output satisfies is enforced here, so a
+    /// corrupted or oversized record is rejected before any tile decodes.
+    pub fn read(bytes: &[u8]) -> Result<(QuantSpec, usize), String> {
+        if bytes.len() < Self::FIXED_RECORD_BYTES {
+            return Err(format!(
+                "quant-spec record truncated: need {} bytes, have {}",
+                Self::FIXED_RECORD_BYTES,
+                bytes.len()
+            ));
+        }
+        let kind = bytes[0];
+        let levels = bytes[1] as usize;
+        if levels < 2 {
+            return Err(format!("quant-spec level count {levels} out of range"));
+        }
+        let f32_at =
+            |i: usize| f32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
+        let c_min = f32_at(2);
+        let c_max = f32_at(6);
+        if !c_min.is_finite() || !c_max.is_finite() || !(c_max > c_min) {
+            return Err(format!("quant-spec clip range [{c_min}, {c_max}] invalid"));
+        }
+        match kind {
+            0 => Ok((
+                QuantSpec::Uniform {
+                    c_min,
+                    c_max,
+                    levels,
+                },
+                Self::FIXED_RECORD_BYTES,
+            )),
+            1 => {
+                let need = Self::FIXED_RECORD_BYTES + levels * 4 + (levels - 1) * 4;
+                if bytes.len() < need {
+                    return Err(format!(
+                        "quant-spec record truncated: ECQ N={levels} needs {need} bytes, have {}",
+                        bytes.len()
+                    ));
+                }
+                let mut recon = Vec::with_capacity(levels);
+                for n in 0..levels {
+                    recon.push(f32_at(Self::FIXED_RECORD_BYTES + n * 4));
+                }
+                let toff = Self::FIXED_RECORD_BYTES + levels * 4;
+                let mut thresholds = Vec::with_capacity(levels - 1);
+                for n in 0..levels - 1 {
+                    thresholds.push(f32_at(toff + n * 4));
+                }
+                let in_range = |v: f32| v.is_finite() && v >= c_min && v <= c_max;
+                if !recon.iter().all(|&r| in_range(r))
+                    || !recon.windows(2).all(|w| w[0] <= w[1])
+                {
+                    return Err("quant-spec reconstruction values invalid".into());
+                }
+                if !thresholds.iter().all(|&t| in_range(t))
+                    || !thresholds.windows(2).all(|w| w[0] <= w[1])
+                {
+                    return Err("quant-spec thresholds invalid".into());
+                }
+                Ok((
+                    QuantSpec::EntropyConstrained(NonUniformQuantizer {
+                        recon,
+                        thresholds,
+                        c_min,
+                        c_max,
+                    }),
+                    need,
+                ))
+            }
+            other => Err(format!("unknown quant-spec kind {other}")),
+        }
+    }
+}
+
+impl From<Quantizer> for QuantSpec {
+    fn from(q: Quantizer) -> Self {
+        match q {
+            Quantizer::Uniform(u) => QuantSpec::Uniform {
+                c_min: u.c_min,
+                c_max: u.c_max,
+                levels: u.levels,
+            },
+            Quantizer::NonUniform(n) => QuantSpec::EntropyConstrained(n),
+        }
+    }
+}
+
+impl From<UniformQuantizer> for QuantSpec {
+    fn from(u: UniformQuantizer) -> Self {
+        QuantSpec::Uniform {
+            c_min: u.c_min,
+            c_max: u.c_max,
+            levels: u.levels,
+        }
+    }
+}
+
+impl From<NonUniformQuantizer> for QuantSpec {
+    fn from(n: NonUniformQuantizer) -> Self {
+        QuantSpec::EntropyConstrained(n)
+    }
+}
+
+/// Which designer builds the quantizer(s) — the CLI's `--design` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DesignKind {
+    /// Use the configured spec as-is (no online design).
+    #[default]
+    Static,
+    /// §III-B model-optimal clipping range (uniform quantizer).
+    Model,
+    /// Algorithm-1 entropy-constrained design on a sample histogram.
+    Ecq,
+}
+
+impl DesignKind {
+    pub fn parse(s: &str) -> Result<DesignKind, String> {
+        match s {
+            "static" => Ok(DesignKind::Static),
+            "model" => Ok(DesignKind::Model),
+            "ecq" => Ok(DesignKind::Ecq),
+            other => Err(format!("unknown designer `{other}` (static, model, ecq)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DesignKind::Static => "static",
+            DesignKind::Model => "model",
+            DesignKind::Ecq => "ecq",
+        }
+    }
+}
+
+impl std::fmt::Display for DesignKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scope a designed clip range applies to — the CLI's `--clip-granularity`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClipGranularity {
+    /// One quantizer per stream (windowed re-design on the edge).
+    #[default]
+    Stream,
+    /// One quantizer per container tile (container v3).
+    Tile,
+}
+
+impl ClipGranularity {
+    pub fn parse(s: &str) -> Result<ClipGranularity, String> {
+        match s {
+            "stream" => Ok(ClipGranularity::Stream),
+            "tile" => Ok(ClipGranularity::Tile),
+            other => Err(format!("unknown clip granularity `{other}` (stream, tile)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClipGranularity::Stream => "stream",
+            ClipGranularity::Tile => "tile",
+        }
+    }
+}
+
+impl std::fmt::Display for ClipGranularity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Minimum observations before a statistical designer will commit to a
+/// range (moments of fewer samples are noise).
+pub const MIN_DESIGN_SAMPLES: u64 = 32;
+
+/// A quantizer design policy: statistics in, [`QuantSpec`] out.
+///
+/// `stats` are streaming moments of the design scope (a stream window or
+/// one tile); `samples` are raw values from the same scope for designers
+/// that need an empirical distribution (ECQ's histogram). Designers are
+/// stateless and shared across worker threads (`Sync`); failures are
+/// `Err`, and every caller keeps a static fallback spec, so a degenerate
+/// scope (constant tile, too few samples) can never take down an encode.
+pub trait QuantDesigner: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn design(&self, stats: &TensorStats, samples: &[f32]) -> Result<QuantSpec, String>;
+}
+
+/// Today's behavior as a designer: always the configured spec.
+#[derive(Clone, Debug)]
+pub struct StaticDesigner {
+    pub spec: QuantSpec,
+}
+
+impl StaticDesigner {
+    pub fn new(spec: QuantSpec) -> Self {
+        Self { spec }
+    }
+}
+
+impl QuantDesigner for StaticDesigner {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn design(&self, _stats: &TensorStats, _samples: &[f32]) -> Result<QuantSpec, String> {
+        Ok(self.spec.clone())
+    }
+}
+
+/// §III-B model-optimal clipping range: fit the asymmetric-Laplace
+/// pushforward to the observed moments, then minimize the closed-form
+/// total error over the clip range.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelOptimalDesigner {
+    pub levels: usize,
+    pub activation: Activation,
+    /// Asymmetry κ of the input model (paper: 0.5 leaky, 1.0 ReLU).
+    pub kappa: f64,
+    /// Optimize both range ends ([`optimal_range`], the paper's
+    /// "c_min unconstrained" columns — may go negative under leaky
+    /// activations); `false` pins `c_min = 0` ([`optimal_cmax`]).
+    pub signed_cmin: bool,
+    /// Guaranteed negative span as a fraction of the designed `c_max`:
+    /// the designed `c_min` is at most `-neg_span · c_max`. `0.0` (the
+    /// default) imposes nothing; the online controller sets it from the
+    /// configured spec's own `c_min/c_max` ratio so a signed range stays
+    /// signed across re-designs even when the unconstrained optimum lands
+    /// at ≥ 0 (at small N the paper's Table I optima do — e.g. +0.053 for
+    /// ResNet-50 at N=4).
+    pub neg_span: f32,
+}
+
+impl ModelOptimalDesigner {
+    /// The paper's leaky-ReLU family (κ = 0.5, slope 0.1), signed range.
+    pub fn leaky(levels: usize) -> Self {
+        Self {
+            levels,
+            activation: Activation::LeakyRelu {
+                slope: crate::LEAKY_SLOPE,
+            },
+            kappa: 0.5,
+            signed_cmin: true,
+            neg_span: 0.0,
+        }
+    }
+
+    /// Plain-ReLU family (κ = 1): activations are non-negative, so the
+    /// range stays pinned at `c_min = 0`.
+    pub fn relu(levels: usize) -> Self {
+        Self {
+            levels,
+            activation: Activation::Relu,
+            kappa: 1.0,
+            signed_cmin: false,
+            neg_span: 0.0,
+        }
+    }
+
+    /// Solve the clipping range for `stats` (shared with [`EcqDesigner`]).
+    fn solve_range(&self, stats: &TensorStats) -> Result<(f32, f32), String> {
+        if stats.count() < MIN_DESIGN_SAMPLES {
+            return Err(format!("{} samples: too few to design from", stats.count()));
+        }
+        let var = stats.variance();
+        if var <= 1e-12 || !var.is_finite() {
+            return Err(format!("degenerate variance {var}"));
+        }
+        let model = fit(stats.mean(), var, self.kappa, self.activation)?;
+        let r = if self.signed_cmin {
+            optimal_range(&model.pdf, self.levels)
+        } else {
+            optimal_cmax(&model.pdf, 0.0, self.levels)
+        };
+        // Clip limits beyond the observed support are pure loss: they
+        // widen Δ without reducing clipping error. (The model can
+        // overshoot when the data is not Laplace-like.) Note the signed
+        // solver's c_min is *unconstrained*, exactly as in the paper's
+        // Table I: it may be negative (leaky tails) or positive (a tile
+        // whose whole dynamic range sits above zero — the offset case
+        // per-tile design exists for).
+        let c_max = r.c_max.min(stats.max()) as f32;
+        let mut c_min = if self.signed_cmin {
+            r.c_min.max(stats.min()) as f32
+        } else {
+            0.0
+        };
+        if self.signed_cmin && self.neg_span > 0.0 && c_max > 0.0 {
+            c_min = c_min.min(-self.neg_span * c_max);
+        }
+        if !(c_max > c_min) || !c_max.is_finite() || !c_min.is_finite() {
+            return Err(format!("designed range [{c_min}, {c_max}] degenerate"));
+        }
+        Ok((c_min, c_max))
+    }
+}
+
+impl QuantDesigner for ModelOptimalDesigner {
+    fn name(&self) -> &'static str {
+        "model"
+    }
+
+    fn design(&self, stats: &TensorStats, _samples: &[f32]) -> Result<QuantSpec, String> {
+        let (c_min, c_max) = self.solve_range(stats)?;
+        Ok(QuantSpec::Uniform {
+            c_min,
+            c_max,
+            levels: self.levels,
+        })
+    }
+}
+
+/// Algorithm 1 as an online designer: model-optimal clipping range, then
+/// the modified entropy-constrained design run on a bounded histogram of
+/// the scope's samples (bin centers weighted by counts — the per-tile
+/// cost is O(bins · N · iters) regardless of tile size).
+#[derive(Clone, Copy, Debug)]
+pub struct EcqDesigner {
+    /// Range selection (also supplies levels/activation/κ).
+    pub model: ModelOptimalDesigner,
+    /// Lagrange multiplier λ of the rate term.
+    pub lambda: f64,
+    /// Histogram resolution the design runs on.
+    pub bins: usize,
+}
+
+impl EcqDesigner {
+    pub fn new(model: ModelOptimalDesigner) -> Self {
+        Self {
+            model,
+            lambda: 0.02,
+            bins: 256,
+        }
+    }
+}
+
+impl QuantDesigner for EcqDesigner {
+    fn name(&self) -> &'static str {
+        "ecq"
+    }
+
+    fn design(&self, stats: &TensorStats, samples: &[f32]) -> Result<QuantSpec, String> {
+        if samples.is_empty() {
+            return Err("no samples to design from".into());
+        }
+        // Model-optimal range when the fit succeeds; the observed support
+        // as the fallback (Algorithm 1 itself only needs *a* range, and
+        // stretching an offset tile's range down to zero would waste a
+        // pinned reconstruction level where no sample lands).
+        let (c_min, c_max) = self.model.solve_range(stats).or_else(|_| {
+            let (lo, hi) = (stats.min() as f32, stats.max() as f32);
+            if hi > lo && lo.is_finite() && hi.is_finite() {
+                Ok((lo, hi))
+            } else {
+                Err(format!("degenerate sample support [{lo}, {hi}]"))
+            }
+        })?;
+        let hist = Histogram::from_slice(c_min as f64, c_max as f64, self.bins.max(2), samples);
+        let d = design_from_histogram(
+            &hist,
+            c_min,
+            c_max,
+            EcqParams::pinned(self.model.levels, self.lambda),
+        );
+        Ok(QuantSpec::EntropyConstrained(d.quantizer))
+    }
+}
+
+/// Build the designer selected by `kind`, sized for `base`:
+/// levels come from the base spec, the activation family from the caller,
+/// and [`DesignKind::Static`] returns the base spec unchanged. This is
+/// the factory the CLI and the edge worker share.
+pub fn designer_for(
+    kind: DesignKind,
+    base: &QuantSpec,
+    activation: Activation,
+    kappa: f64,
+) -> Box<dyn QuantDesigner> {
+    let signed = matches!(activation, Activation::LeakyRelu { .. });
+    let model = ModelOptimalDesigner {
+        levels: base.levels(),
+        activation,
+        kappa,
+        signed_cmin: signed,
+        neg_span: 0.0,
+    };
+    match kind {
+        DesignKind::Static => Box::new(StaticDesigner::new(base.clone())),
+        DesignKind::Model => Box::new(model),
+        DesignKind::Ecq => Box::new(EcqDesigner::new(model)),
+    }
+}
+
+/// Run `designer` over `samples`, falling back to `fallback` when the
+/// scope is degenerate — the per-tile hot-path helper.
+pub fn design_or(
+    designer: &dyn QuantDesigner,
+    samples: &[f32],
+    fallback: &QuantSpec,
+) -> QuantSpec {
+    designer
+        .design(&TensorStats::from_slice(samples), samples)
+        .unwrap_or_else(|_| fallback.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+
+    fn leaky_samples(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        Gen::new("design_unit", seed).activation_vec(n, scale)
+    }
+
+    fn stats_of(xs: &[f32]) -> TensorStats {
+        TensorStats::from_slice(xs)
+    }
+
+    #[test]
+    fn spec_roundtrips_through_records() {
+        let specs = [
+            QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: 6.0,
+                levels: 4,
+            },
+            QuantSpec::Uniform {
+                c_min: -0.25,
+                c_max: 9.03,
+                levels: 255,
+            },
+            QuantSpec::EntropyConstrained(NonUniformQuantizer {
+                recon: vec![0.0, 1.0, 2.5, 6.0],
+                thresholds: vec![0.5, 1.75, 4.25],
+                c_min: 0.0,
+                c_max: 6.0,
+            }),
+        ];
+        for spec in specs {
+            let mut out = Vec::new();
+            spec.write(&mut out);
+            assert_eq!(out.len(), spec.encoded_len());
+            let (back, used) = QuantSpec::read(&out).unwrap();
+            assert_eq!(back, spec);
+            assert_eq!(used, out.len());
+            // Records are self-delimiting inside a larger block.
+            out.push(0xAB);
+            let (back2, used2) = QuantSpec::read(&out).unwrap();
+            assert_eq!(back2, spec);
+            assert_eq!(used2, out.len() - 1);
+        }
+    }
+
+    #[test]
+    fn spec_read_rejects_corruption() {
+        // Truncation at every prefix of both record kinds.
+        for spec in [
+            QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: 6.0,
+                levels: 4,
+            },
+            QuantSpec::EntropyConstrained(NonUniformQuantizer {
+                recon: vec![0.0, 1.0, 2.5, 6.0],
+                thresholds: vec![0.5, 1.75, 4.25],
+                c_min: 0.0,
+                c_max: 6.0,
+            }),
+        ] {
+            let mut bytes = Vec::new();
+            spec.write(&mut bytes);
+            for cut in 0..bytes.len() {
+                assert!(
+                    QuantSpec::read(&bytes[..cut]).is_err(),
+                    "truncation to {cut} accepted"
+                );
+            }
+            // Bad kind, bad levels, broken range.
+            let mut bad = bytes.clone();
+            bad[0] = 7;
+            assert!(QuantSpec::read(&bad).is_err());
+            let mut bad = bytes.clone();
+            bad[1] = 1;
+            assert!(QuantSpec::read(&bad).is_err());
+            let mut bad = bytes.clone();
+            bad[6..10].copy_from_slice(&f32::NAN.to_le_bytes());
+            assert!(QuantSpec::read(&bad).is_err());
+        }
+        // ECQ recon out of range / unsorted is structural corruption.
+        let ecq = QuantSpec::EntropyConstrained(NonUniformQuantizer {
+            recon: vec![0.0, 1.0, 2.5, 6.0],
+            thresholds: vec![0.5, 1.75, 4.25],
+            c_min: 0.0,
+            c_max: 6.0,
+        });
+        let mut bytes = Vec::new();
+        ecq.write(&mut bytes);
+        let mut bad = bytes.clone();
+        bad[10..14].copy_from_slice(&20.0f32.to_le_bytes()); // recon[0] > c_max, unsorted
+        assert!(QuantSpec::read(&bad).is_err());
+    }
+
+    #[test]
+    fn static_designer_is_identity() {
+        let spec = QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 3.0,
+            levels: 4,
+        };
+        let d = StaticDesigner::new(spec.clone());
+        let xs = leaky_samples(1000, 1.0, 1);
+        assert_eq!(d.design(&stats_of(&xs), &xs).unwrap(), spec);
+    }
+
+    #[test]
+    fn model_designer_tracks_scale() {
+        let d = ModelOptimalDesigner::leaky(4);
+        let small = leaky_samples(20_000, 0.5, 2);
+        let large = leaky_samples(20_000, 4.0, 3);
+        let s1 = d.design(&stats_of(&small), &small).unwrap();
+        let s2 = d.design(&stats_of(&large), &large).unwrap();
+        assert!(
+            s2.c_max() > 2.0 * s1.c_max(),
+            "c_max must scale with the data: {} vs {}",
+            s2.c_max(),
+            s1.c_max()
+        );
+        // Zero-mode leaky data: the unconstrained c_min stays near zero
+        // (paper Table I: ±0.07 at c_max ≈ 9-12).
+        assert!(s1.c_min().abs() <= 0.2 * s1.c_max(), "{s1:?}");
+        assert!(s2.c_min().abs() <= 0.2 * s2.c_max(), "{s2:?}");
+        assert_eq!(s1.levels(), 4);
+    }
+
+    #[test]
+    fn model_designer_supports_negative_cmin_for_leaky_data() {
+        // Strongly negative-tailed data: the unconstrained optimum puts
+        // c_min below zero (paper Table I, "c_min unconstrained", N=8).
+        let mut g = Gen::new("design_neg", 4);
+        let xs: Vec<f32> = (0..30_000)
+            .map(|_| {
+                let e = -(g.f64_in(1e-12, 1.0)).ln() * 2.0;
+                (if g.bool() { -0.4 * e } else { e }) as f32
+            })
+            .collect();
+        let d = ModelOptimalDesigner {
+            levels: 8,
+            ..ModelOptimalDesigner::leaky(8)
+        };
+        let spec = d.design(&stats_of(&xs), &xs).unwrap();
+        assert!(
+            spec.c_min() < 0.0,
+            "expected negative c_min, got {}",
+            spec.c_min()
+        );
+        assert!(spec.c_max() > 0.0);
+    }
+
+    #[test]
+    fn model_designer_finds_offset_ranges() {
+        // A tile whose entire dynamic range sits well above zero (e.g. a
+        // feature-map region with a large bias) must get a range anchored
+        // near its support, not one stretched down to zero — this is the
+        // heterogeneous-range win per-tile design exists for.
+        let base = leaky_samples(20_000, 0.5, 8);
+        let xs: Vec<f32> = base.iter().map(|&x| x + 12.0).collect();
+        let d = ModelOptimalDesigner::leaky(4);
+        let spec = d.design(&stats_of(&xs), &xs).unwrap();
+        assert!(
+            spec.c_min() > 6.0,
+            "offset tile should keep c_min near its support: {spec:?}"
+        );
+        assert!(spec.c_max() > spec.c_min() && spec.c_max() < 40.0);
+    }
+
+    #[test]
+    fn model_designer_rejects_degenerate_scopes() {
+        let d = ModelOptimalDesigner::leaky(4);
+        let constant = vec![0.5f32; 4096];
+        assert!(d.design(&stats_of(&constant), &constant).is_err());
+        let tiny = leaky_samples(4, 1.0, 5);
+        assert!(d.design(&stats_of(&tiny), &tiny).is_err());
+        // design_or falls back instead of failing.
+        let fb = QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 2.0,
+            levels: 4,
+        };
+        assert_eq!(design_or(&d, &constant, &fb), fb);
+    }
+
+    #[test]
+    fn model_designer_never_exceeds_observed_support() {
+        let d = ModelOptimalDesigner::leaky(4);
+        let xs = leaky_samples(10_000, 1.0, 6);
+        let stats = stats_of(&xs);
+        let spec = d.design(&stats, &xs).unwrap();
+        assert!(spec.c_max() as f64 <= stats.max() + 1e-6);
+        assert!(spec.c_min() as f64 >= stats.min() - 1e-6);
+    }
+
+    #[test]
+    fn ecq_designer_produces_pinned_nonuniform() {
+        let d = EcqDesigner::new(ModelOptimalDesigner::leaky(4));
+        let xs = leaky_samples(30_000, 1.5, 7);
+        let spec = d.design(&stats_of(&xs), &xs).unwrap();
+        match &spec {
+            QuantSpec::EntropyConstrained(q) => {
+                assert_eq!(q.levels(), 4);
+                assert_eq!(q.recon[0], q.c_min, "low boundary pinned");
+                assert_eq!(q.recon[3], q.c_max, "high boundary pinned");
+                assert!(q.recon.windows(2).all(|w| w[0] <= w[1]));
+            }
+            other => panic!("expected ECQ spec, got {other:?}"),
+        }
+        // The designed spec serializes (container v3 depends on it).
+        let mut out = Vec::new();
+        spec.write(&mut out);
+        assert_eq!(QuantSpec::read(&out).unwrap().0, spec);
+    }
+
+    #[test]
+    fn ecq_designer_survives_model_fit_failure() {
+        // Two-point data defeats the Laplace fit but has a usable support.
+        let mut xs = vec![0.0f32; 500];
+        xs.extend(vec![4.0f32; 500]);
+        let d = EcqDesigner::new(ModelOptimalDesigner::leaky(2));
+        let spec = d.design(&stats_of(&xs), &xs).unwrap();
+        assert_eq!(spec.levels(), 2);
+        assert!(spec.c_max() >= 3.9);
+    }
+
+    #[test]
+    fn designer_factory_matches_kinds() {
+        let base = QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 5.0,
+            levels: 4,
+        };
+        let act = Activation::LeakyRelu { slope: 0.1 };
+        for (kind, name) in [
+            (DesignKind::Static, "static"),
+            (DesignKind::Model, "model"),
+            (DesignKind::Ecq, "ecq"),
+        ] {
+            let d = designer_for(kind, &base, act, 0.5);
+            assert_eq!(d.name(), name);
+        }
+        assert_eq!(DesignKind::parse("model").unwrap(), DesignKind::Model);
+        assert!(DesignKind::parse("nope").is_err());
+        assert_eq!(
+            ClipGranularity::parse("tile").unwrap(),
+            ClipGranularity::Tile
+        );
+        assert!(ClipGranularity::parse("voxel").is_err());
+    }
+}

@@ -38,11 +38,23 @@ impl NonUniformQuantizer {
         self.recon.len()
     }
 
-    /// Index of x: first bin whose upper threshold exceeds x (linear scan —
-    /// N ≤ 8 in all paper operating points, so this beats binary search).
+    /// Threshold count above which [`Self::index`] switches from a linear
+    /// scan to binary search. At the paper's N ≤ 8 the scan wins (no
+    /// branch mispredictions, everything in registers); large-N designed
+    /// quantizers (see [`super::design`]) must not pay O(N) per element.
+    pub const LINEAR_SCAN_MAX_THRESHOLDS: usize = 16;
+
+    /// Index of x: number of decision thresholds ≤ x. Linear scan for the
+    /// paper's small N, binary search (`partition_point`) beyond
+    /// [`Self::LINEAR_SCAN_MAX_THRESHOLDS`] — both count the same prefix
+    /// of the sorted threshold vector, so they are interchangeable
+    /// (pinned by a unit test and the `nonuniform_index` bench rows).
     #[inline]
     pub fn index(&self, x: f32) -> u16 {
         let xc = clip(x, self.c_min, self.c_max);
+        if self.thresholds.len() > Self::LINEAR_SCAN_MAX_THRESHOLDS {
+            return self.thresholds.partition_point(|&t| xc >= t) as u16;
+        }
         let mut n = 0u16;
         for &t in &self.thresholds {
             if xc >= t {
@@ -109,15 +121,62 @@ pub struct EcqDesign {
 /// Algorithm 1: design an N-level quantizer from training samples.
 ///
 /// `samples` are the activations of ~100 validation images in the paper;
-/// they are clipped to `[c_min, c_max]` in Step 1.
+/// they are clipped to `[c_min, c_max]` in Step 1. This is the
+/// unit-weight case of [`design_weighted`] (one point per sample), which
+/// is arithmetically identical — every weight is exactly 1.0.
 pub fn design(samples: &[f32], c_min: f32, c_max: f32, params: EcqParams) -> EcqDesign {
+    assert!(!samples.is_empty(), "need training samples");
+    // Step 1: clip the training samples.
+    let points: Vec<(f64, f64)> = samples
+        .iter()
+        .map(|&x| (clip(x, c_min, c_max) as f64, 1.0))
+        .collect();
+    design_weighted(&points, c_min, c_max, params)
+}
+
+/// Algorithm 1 on a sample *histogram*: each populated bin contributes
+/// its center weighted by its count, and the out-of-range mass sits at
+/// the clip limits (exactly where clipping puts it). This makes the
+/// online per-tile design cost O(bins · N · iters) independent of tile
+/// size — the form [`super::design::EcqDesigner`] runs on the hot path.
+pub fn design_from_histogram(
+    hist: &crate::tensor::stats::Histogram,
+    c_min: f32,
+    c_max: f32,
+    params: EcqParams,
+) -> EcqDesign {
+    let mut points: Vec<(f64, f64)> = Vec::with_capacity(hist.counts.len() + 2);
+    if hist.below > 0 {
+        points.push((c_min as f64, hist.below as f64));
+    }
+    for (i, &c) in hist.counts.iter().enumerate() {
+        if c > 0 {
+            // Centers always lie inside [lo, hi); clamp to the design
+            // range in case the histogram was built over a wider span.
+            let x = hist.bin_center(i).clamp(c_min as f64, c_max as f64);
+            points.push((x, c as f64));
+        }
+    }
+    if hist.above > 0 {
+        points.push((c_max as f64, hist.above as f64));
+    }
+    design_weighted(&points, c_min, c_max, params)
+}
+
+/// Algorithm 1 over weighted points `(x, w)` with `x` already clipped to
+/// `[c_min, c_max]` and `w > 0`.
+pub fn design_weighted(
+    points: &[(f64, f64)],
+    c_min: f32,
+    c_max: f32,
+    params: EcqParams,
+) -> EcqDesign {
     let n_levels = params.levels;
     assert!(n_levels >= 2, "need >= 2 levels");
     assert!(c_max > c_min, "bad clip range");
-    assert!(!samples.is_empty(), "need training samples");
-
-    // Step 1: clip the training samples.
-    let clipped: Vec<f32> = samples.iter().map(|&x| clip(x, c_min, c_max)).collect();
+    assert!(!points.is_empty(), "need training points");
+    let total_weight: f64 = points.iter().map(|&(_, w)| w).sum();
+    assert!(total_weight > 0.0, "need positive total weight");
 
     // Rate term: known truncated-unary codeword lengths b_n.
     let lens = codeword_lens(n_levels);
@@ -132,16 +191,15 @@ pub fn design(samples: &[f32], c_min: f32, c_max: f32, params: EcqParams) -> Ecq
     let mut iters = 0;
     let mut cost = prev_cost;
     let mut sums = vec![0.0f64; n_levels];
-    let mut counts = vec![0u64; n_levels];
+    let mut weights = vec![0.0f64; n_levels];
 
     for it in 0..params.max_iters {
         iters = it + 1;
-        // Step 3: assign samples to the bin minimizing (x - x̂_n)² + λ b_n.
+        // Step 3: assign points to the bin minimizing (x - x̂_n)² + λ b_n.
         sums.iter_mut().for_each(|s| *s = 0.0);
-        counts.iter_mut().for_each(|c| *c = 0);
+        weights.iter_mut().for_each(|w| *w = 0.0);
         cost = 0.0;
-        for &x in &clipped {
-            let x = x as f64;
+        for &(x, w) in points {
             let mut best_n = 0usize;
             let mut best_cost = f64::INFINITY;
             for (n, &r) in recon.iter().enumerate() {
@@ -152,11 +210,11 @@ pub fn design(samples: &[f32], c_min: f32, c_max: f32, params: EcqParams) -> Ecq
                     best_n = n;
                 }
             }
-            sums[best_n] += x;
-            counts[best_n] += 1;
-            cost += best_cost;
+            sums[best_n] += x * w;
+            weights[best_n] += w;
+            cost += best_cost * w;
         }
-        cost /= clipped.len() as f64;
+        cost /= total_weight;
 
         // Step 4: recompute reconstruction values (centroids), with the
         // outermost values pinned to the clip limits in the modified form.
@@ -167,8 +225,8 @@ pub fn design(samples: &[f32], c_min: f32, c_max: f32, params: EcqParams) -> Ecq
                 recon[n] = c_min as f64;
             } else if pinned_high {
                 recon[n] = c_max as f64;
-            } else if counts[n] > 0 {
-                recon[n] = sums[n] / counts[n] as f64;
+            } else if weights[n] > 0.0 {
+                recon[n] = sums[n] / weights[n];
             }
             // Empty unpinned bins keep their previous value.
         }
@@ -304,6 +362,107 @@ mod tests {
         let d = design(&xs, 0.0, 5.0, EcqParams::pinned(3, 0.05));
         assert!(d.iterations < 100, "should converge before max_iters");
         assert!(d.final_cost.is_finite());
+    }
+
+    #[test]
+    fn binary_search_index_matches_linear_scan() {
+        // Above LINEAR_SCAN_MAX_THRESHOLDS the index path switches to
+        // partition_point; both must count the same threshold prefix for
+        // every input, including exact-threshold hits, duplicates, and
+        // out-of-range values.
+        let linear_index = |q: &NonUniformQuantizer, x: f32| -> u16 {
+            let xc = clip(x, q.c_min, q.c_max);
+            let mut n = 0u16;
+            for &t in &q.thresholds {
+                if xc >= t {
+                    n += 1;
+                } else {
+                    break;
+                }
+            }
+            n
+        };
+        let mut rng = SplitMix64::new(11);
+        for levels in [17usize, 32, 64, 255] {
+            let xs = activation_samples(4000, levels as u64);
+            let d = design(&xs, 0.0, 8.0, EcqParams::pinned(levels, 0.001));
+            let q = &d.quantizer;
+            assert!(q.thresholds.len() > NonUniformQuantizer::LINEAR_SCAN_MAX_THRESHOLDS);
+            for _ in 0..4000 {
+                let x = rng.uniform(-2.0, 10.0) as f32;
+                assert_eq!(q.index(x), linear_index(q, x), "x={x} levels={levels}");
+            }
+            for &t in &q.thresholds {
+                assert_eq!(q.index(t), linear_index(q, t), "exact threshold {t}");
+            }
+        }
+        // Duplicate thresholds (a collapsed design) agree too.
+        let q = NonUniformQuantizer {
+            recon: (0..20).map(|i| i as f32 * 0.25).collect(),
+            thresholds: {
+                let mut t: Vec<f32> = (0..19).map(|i| (i as f32 * 0.25).min(2.0)).collect();
+                t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                t
+            },
+            c_min: 0.0,
+            c_max: 4.75,
+        };
+        for i in 0..200 {
+            let x = i as f32 * 0.03 - 0.5;
+            assert_eq!(q.index(x), linear_index(&q, x), "duplicate thresholds at {x}");
+        }
+    }
+
+    #[test]
+    fn histogram_design_approximates_sample_design() {
+        // A fine histogram carries nearly the sample distribution, so the
+        // weighted design must land close to the exact per-sample design.
+        let xs = activation_samples(40_000, 21);
+        let (c_min, c_max) = (0.0f32, 8.0f32);
+        let exact = design(&xs, c_min, c_max, EcqParams::pinned(4, 0.02));
+        let mut hist = crate::tensor::stats::Histogram::new(c_min as f64, c_max as f64, 512);
+        hist.push_slice(&xs);
+        let binned = design_from_histogram(&hist, c_min, c_max, EcqParams::pinned(4, 0.02));
+        let bw = hist.bin_width() as f32;
+        for (a, b) in exact.quantizer.recon.iter().zip(&binned.quantizer.recon) {
+            assert!(
+                (a - b).abs() <= 4.0 * bw,
+                "recon drift {a} vs {b} (bin width {bw})"
+            );
+        }
+        // Pinning survives the weighted path.
+        assert_eq!(binned.quantizer.recon[0], c_min);
+        assert_eq!(binned.quantizer.recon[3], c_max);
+    }
+
+    #[test]
+    fn histogram_design_places_outlier_mass_at_clip_limits() {
+        // All mass out of range: below lands at c_min, above at c_max.
+        let mut hist = crate::tensor::stats::Histogram::new(1.0, 3.0, 16);
+        for _ in 0..100 {
+            hist.push(-5.0);
+            hist.push(50.0);
+        }
+        let d = design_from_histogram(&hist, 1.0, 3.0, EcqParams::conventional(2, 0.0));
+        // Conventional (unpinned) centroids sit exactly on the two masses.
+        assert!((d.quantizer.recon[0] - 1.0).abs() < 1e-6);
+        assert!((d.quantizer.recon[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_weight_design_is_bitwise_identical_to_sample_design() {
+        // `design` routes through `design_weighted` with weight 1.0; the
+        // arithmetic must be exactly what the per-sample loop did.
+        let xs = activation_samples(10_000, 22);
+        let d = design(&xs, 0.0, 7.0, EcqParams::pinned(5, 0.03));
+        let points: Vec<(f64, f64)> = xs
+            .iter()
+            .map(|&x| (clip(x, 0.0, 7.0) as f64, 1.0))
+            .collect();
+        let w = design_weighted(&points, 0.0, 7.0, EcqParams::pinned(5, 0.03));
+        assert_eq!(d.quantizer, w.quantizer);
+        assert_eq!(d.iterations, w.iterations);
+        assert_eq!(d.final_cost.to_bits(), w.final_cost.to_bits());
     }
 
     #[test]

@@ -218,13 +218,18 @@ impl Header {
 //
 // ```text
 // 0-3    magic "LWFB"
-// 4      container version (2; version-1 containers still parse)
-// 5      v2: container entropy-backend id (0=CABAC, 1=rANS)
+// 4      container version (2 or 3; version-1 containers still parse)
+// 5      v2+: container entropy-backend id (0=CABAC, 1=rANS)
 //        v1: reserved (must be 0 — which is also the CABAC id)
 // 6-9    substream count (u32 LE)
 // 10-17  total element count (u64 LE)
 // then per substream (12 bytes each):
 //   elements (u32 LE) | byte length (u32 LE) | FNV-1a checksum (u32 LE)
+// v3 only — per-tile quantizer design block, one self-delimiting
+// [`crate::codec::design::QuantSpec`] record per substream, in substream
+// order (kind, levels, clip range, and the full ECQ tables when
+// non-uniform — see `QuantSpec::write`):
+//   spec record 0 | spec record 1 | ...
 // then the concatenated substream payloads.
 // ```
 //
@@ -233,9 +238,21 @@ impl Header {
 // tile is a complete stream whose own header also carries the id, and the
 // decoder trusts the tiles (they are checksummed; the prelude byte is
 // advisory).
+//
+// Version history: v1 predates the entropy-backend field; v2 added it in
+// prelude byte 5; v3 adds the per-tile quant-spec block, written only by
+// the per-tile design path (`codec::batch::encode_batched_designed`) —
+// spec-less containers still serialize as v2, byte-identical with every
+// container written since PR 1. The v3 spec block is cross-checked
+// against each tile's own stream header at decode time, so a forged
+// directory cannot re-label a tile's quantizer.
 
 pub const BATCH_MAGIC: [u8; 4] = *b"LWFB";
-pub const BATCH_VERSION: u8 = 2;
+/// Newest container version this codec reads and writes.
+pub const BATCH_VERSION: u8 = 3;
+/// Spec-less container version ([`SubstreamDirectory`]s without per-tile
+/// quantizer designs serialize as this, unchanged from PR 1).
+pub const BATCH_VERSION_PLAIN: u8 = 2;
 /// Oldest container version this decoder still reads.
 pub const BATCH_MIN_VERSION: u8 = 1;
 pub const BATCH_PRELUDE_BYTES: usize = 18;
@@ -266,25 +283,62 @@ pub struct SubstreamEntry {
 }
 
 /// Parsed container prelude + directory.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SubstreamDirectory {
     pub total_elements: u64,
     /// Container-level entropy backend (prelude byte 5; v1 containers
     /// parse as CABAC).
     pub entropy: EntropyKind,
     pub entries: Vec<SubstreamEntry>,
+    /// Per-tile designed quantizers (container v3): exactly one spec per
+    /// entry, in substream order. `None` for v1/v2 containers and for
+    /// encodes without per-tile design — those serialize as
+    /// [`BATCH_VERSION_PLAIN`], byte-identical to pre-v3 output.
+    pub specs: Option<Vec<crate::codec::design::QuantSpec>>,
 }
 
 impl SubstreamDirectory {
+    /// A directory without per-tile quantizer specs (the common case; v2
+    /// on the wire).
+    pub fn plain(
+        total_elements: u64,
+        entropy: EntropyKind,
+        entries: Vec<SubstreamEntry>,
+    ) -> Self {
+        Self {
+            total_elements,
+            entropy,
+            entries,
+            specs: None,
+        }
+    }
+
+    fn specs_len(&self) -> usize {
+        self.specs
+            .as_ref()
+            .map_or(0, |s| s.iter().map(|q| q.encoded_len()).sum())
+    }
+
     pub fn encoded_len(&self) -> usize {
-        BATCH_PRELUDE_BYTES + self.entries.len() * DIR_ENTRY_BYTES
+        BATCH_PRELUDE_BYTES + self.entries.len() * DIR_ENTRY_BYTES + self.specs_len()
     }
 
     pub fn write(&self, out: &mut Vec<u8>) {
         let count =
             u32::try_from(self.entries.len()).expect("substream count exceeds u32 directory field");
+        if let Some(specs) = &self.specs {
+            assert_eq!(
+                specs.len(),
+                self.entries.len(),
+                "per-tile spec block needs exactly one spec per substream"
+            );
+        }
         out.extend_from_slice(&BATCH_MAGIC);
-        out.push(BATCH_VERSION);
+        out.push(if self.specs.is_some() {
+            BATCH_VERSION
+        } else {
+            BATCH_VERSION_PLAIN
+        });
         out.push(self.entropy.id());
         out.extend_from_slice(&count.to_le_bytes());
         out.extend_from_slice(&self.total_elements.to_le_bytes());
@@ -292,6 +346,11 @@ impl SubstreamDirectory {
             out.extend_from_slice(&e.elements.to_le_bytes());
             out.extend_from_slice(&e.byte_len.to_le_bytes());
             out.extend_from_slice(&e.checksum.to_le_bytes());
+        }
+        if let Some(specs) = &self.specs {
+            for spec in specs {
+                spec.write(out);
+            }
         }
     }
 
@@ -324,16 +383,17 @@ impl SubstreamDirectory {
         } else {
             EntropyKind::from_id(bytes[5])?
         };
+        let version = bytes[4];
         let count = u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
         let total_elements = u64::from_le_bytes([
             bytes[10], bytes[11], bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17],
         ]);
-        let dir_end = BATCH_PRELUDE_BYTES
+        let entries_end = BATCH_PRELUDE_BYTES
             .checked_add(count.checked_mul(DIR_ENTRY_BYTES).ok_or("directory overflow")?)
             .ok_or("directory overflow")?;
-        if bytes.len() < dir_end {
+        if bytes.len() < entries_end {
             return Err(format!(
-                "batched stream truncated: directory needs {dir_end} bytes, have {}",
+                "batched stream truncated: directory needs {entries_end} bytes, have {}",
                 bytes.len()
             ));
         }
@@ -367,6 +427,26 @@ impl SubstreamDirectory {
                 "directory element counts sum to {elem_sum}, prelude says {total_elements}"
             ));
         }
+        // v3: the per-tile quantizer design block sits between the entries
+        // and the payloads — exactly one self-delimiting spec record per
+        // substream. A record that fails structural validation (bad kind,
+        // impossible levels, broken range/tables) or runs past the buffer
+        // is a container-level error: nothing decodes from a container
+        // whose design block cannot be trusted.
+        let mut off = entries_end;
+        let specs = if version >= 3 {
+            let mut specs = Vec::with_capacity(count);
+            for i in 0..count {
+                let (spec, used) = crate::codec::design::QuantSpec::read(&bytes[off..])
+                    .map_err(|e| format!("substream {i} quant spec: {e}"))?;
+                off += used;
+                specs.push(spec);
+            }
+            Some(specs)
+        } else {
+            None
+        };
+        let dir_end = off;
         if byte_sum != (bytes.len() - dir_end) as u64 {
             return Err(format!(
                 "directory byte lengths sum to {byte_sum}, payload is {} bytes",
@@ -378,6 +458,7 @@ impl SubstreamDirectory {
                 total_elements,
                 entropy,
                 entries,
+                specs,
             },
             dir_end,
         ))
@@ -531,11 +612,11 @@ mod tests {
                 checksum: substream_checksum(p),
             })
             .collect();
-        let dir = SubstreamDirectory {
-            total_elements: entries.iter().map(|e| e.elements as u64).sum(),
-            entropy: EntropyKind::Cabac,
+        let dir = SubstreamDirectory::plain(
+            entries.iter().map(|e| e.elements as u64).sum(),
+            EntropyKind::Cabac,
             entries,
-        };
+        );
         let mut bytes = Vec::new();
         dir.write(&mut bytes);
         for p in &payloads {
@@ -572,7 +653,10 @@ mod tests {
         let mut rbytes = Vec::new();
         rans_dir.write(&mut rbytes);
         rbytes.extend_from_slice(&bytes[dir.encoded_len()..]); // same payloads
-        assert_eq!(rbytes[4], BATCH_VERSION);
+        assert_eq!(
+            rbytes[4], BATCH_VERSION_PLAIN,
+            "spec-less containers must keep writing version 2"
+        );
         assert_eq!(rbytes[5], 1);
         let (back, _) = SubstreamDirectory::read(&rbytes).unwrap();
         assert_eq!(back, rans_dir);
@@ -609,6 +693,75 @@ mod tests {
                 "flip at metadata byte {i} went undetected"
             );
         }
+    }
+
+    fn sample_v3_directory() -> (SubstreamDirectory, Vec<u8>) {
+        use crate::codec::design::QuantSpec;
+        use crate::codec::NonUniformQuantizer;
+        let (mut dir, bytes) = sample_directory();
+        let payloads = bytes[dir.encoded_len()..].to_vec();
+        dir.specs = Some(vec![
+            QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: 6.0,
+                levels: 4,
+            },
+            QuantSpec::Uniform {
+                c_min: -0.25,
+                c_max: 1.5,
+                levels: 4,
+            },
+            QuantSpec::EntropyConstrained(NonUniformQuantizer {
+                recon: vec![0.0, 1.0, 2.5, 6.0],
+                thresholds: vec![0.5, 1.75, 4.25],
+                c_min: 0.0,
+                c_max: 6.0,
+            }),
+        ]);
+        let mut v3 = Vec::new();
+        dir.write(&mut v3);
+        v3.extend_from_slice(&payloads);
+        (dir, v3)
+    }
+
+    #[test]
+    fn v3_directory_roundtrips_per_tile_specs() {
+        let (dir, bytes) = sample_v3_directory();
+        assert_eq!(bytes[4], BATCH_VERSION);
+        assert!(is_batched(&bytes));
+        let (back, off) = SubstreamDirectory::read(&bytes).unwrap();
+        assert_eq!(back, dir);
+        assert_eq!(off, dir.encoded_len());
+        assert_eq!(back.specs.as_ref().unwrap().len(), back.entries.len());
+    }
+
+    #[test]
+    fn v3_spec_block_corruption_is_a_container_error() {
+        let (dir, bytes) = sample_v3_directory();
+        let specs_start = BATCH_PRELUDE_BYTES + dir.entries.len() * DIR_ENTRY_BYTES;
+
+        // Truncation anywhere inside the spec block (drop the payload and
+        // cut the container mid-spec): never parses.
+        for cut in specs_start..dir.encoded_len() {
+            assert!(
+                SubstreamDirectory::read(&bytes[..cut]).is_err(),
+                "container cut at spec byte {cut} accepted"
+            );
+        }
+        // A bad spec kind is rejected outright.
+        let mut bad = bytes.clone();
+        bad[specs_start] = 9;
+        assert!(SubstreamDirectory::read(&bad).is_err());
+        // An oversized level count makes the record claim more table bytes
+        // than exist (and desynchronizes the payload accounting).
+        let mut bad = bytes.clone();
+        bad[specs_start] = 1; // uniform record re-labeled ECQ: tables missing
+        bad[specs_start + 1] = 255;
+        assert!(SubstreamDirectory::read(&bad).is_err());
+        // A broken clip range in any record is structural corruption.
+        let mut bad = bytes.clone();
+        bad[specs_start + 6..specs_start + 10].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(SubstreamDirectory::read(&bad).is_err());
     }
 
     #[test]

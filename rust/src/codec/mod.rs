@@ -1,9 +1,11 @@
-//! The paper's lightweight feature codec (Fig. 1): clipping, coarse
-//! N-level quantization (uniform Eq. (1) or modified entropy-constrained
-//! Algorithm 1), truncated-unary binarization, and a pluggable entropy
-//! stage with one context per bit position — the paper's simplified
-//! CABAC, or a two-way interleaved rANS coder with static in-band
-//! frequency tables ([`entropy`]).
+//! The paper's lightweight feature codec (Fig. 1): a pluggable quantizer
+//! **design stage** ([`design`]: static, §III-B model-optimal clip
+//! ranges, or Algorithm-1 ECQ — per stream or per tile), then clipping,
+//! coarse N-level quantization (uniform Eq. (1) or the designed
+//! non-uniform quantizer), truncated-unary binarization, and a pluggable
+//! entropy stage with one context per bit position — the paper's
+//! simplified CABAC, or a two-way interleaved rANS coder with static
+//! in-band frequency tables ([`entropy`]).
 //!
 //! Request-path code: everything here is allocation-conscious and
 //! branch-lean; see `rust/benches/codec.rs` for the throughput targets
@@ -13,6 +15,7 @@ pub mod batch;
 pub mod binarize;
 pub mod bitstream;
 pub mod cabac;
+pub mod design;
 pub mod ecq;
 pub mod entropy;
 pub mod header;
@@ -20,11 +23,18 @@ pub mod stream;
 pub mod uniform;
 
 pub use batch::{
-    decode_any, decode_batched, decode_batched_tolerant, encode_batched, BatchReport,
-    BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS,
+    decode_any, decode_batched, decode_batched_tolerant, encode_batched,
+    encode_batched_designed, BatchReport, BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS,
 };
-pub use ecq::{design as design_ecq, EcqDesign, EcqParams, NonUniformQuantizer};
+pub use design::{
+    design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner, ModelOptimalDesigner,
+    QuantDesigner, QuantSpec, StaticDesigner,
+};
+pub use ecq::{
+    design as design_ecq, design_from_histogram, design_weighted, EcqDesign, EcqParams,
+    NonUniformQuantizer,
+};
 pub use entropy::{backend_for, sniff as sniff_entropy, EntropyBackend, EntropyKind};
-pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind};
+pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind, SubstreamDirectory};
 pub use stream::{decode, decode_indices, EncodedStream, Encoder, EncoderConfig, Quantizer};
 pub use uniform::{clip, UniformQuantizer};

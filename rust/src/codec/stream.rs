@@ -3,6 +3,7 @@
 //! CABAC or interleaved rANS, see [`super::entropy`]) → bit-stream with
 //! the paper's 12/24-byte side-information header (Fig. 1 pipeline).
 
+use super::design::QuantSpec;
 use super::ecq::NonUniformQuantizer;
 use super::entropy::{backend_for, EntropyBackend, EntropyKind};
 use super::header::{DetInfo, Header, QuantKind, StreamKind};
@@ -60,10 +61,18 @@ impl Quantizer {
 }
 
 /// Static encoder configuration for one split-layer stream.
+///
+/// The quantizer is carried as a *designed* [`QuantSpec`] — the output of
+/// the [`super::design`] stage (or a hand-written spec, today's
+/// behavior). The [`Encoder`] materializes it into a [`Quantizer`] once
+/// and rebuilds only when the spec changes, so swapping a freshly
+/// designed spec mid-run (the edge's windowed re-design) is just a field
+/// assignment.
 #[derive(Clone, Debug)]
 pub struct EncoderConfig {
     pub kind: StreamKind,
-    pub quantizer: Quantizer,
+    /// Designed quantizer specification (see [`super::design`]).
+    pub quant: QuantSpec,
     /// Entropy backend for the payload (default CABAC — the paper's
     /// coder; see [`super::entropy`] for the trade-off).
     pub entropy: EntropyKind,
@@ -73,10 +82,10 @@ pub struct EncoderConfig {
 }
 
 impl EncoderConfig {
-    pub fn classification(quantizer: Quantizer, img: u8) -> Self {
+    pub fn classification(quant: impl Into<QuantSpec>, img: u8) -> Self {
         Self {
             kind: StreamKind::Classification,
-            quantizer,
+            quant: quant.into(),
             entropy: EntropyKind::Cabac,
             img_w: img,
             img_h: img,
@@ -84,10 +93,10 @@ impl EncoderConfig {
         }
     }
 
-    pub fn detection(quantizer: Quantizer, img: u8, det: DetInfo) -> Self {
+    pub fn detection(quant: impl Into<QuantSpec>, img: u8, det: DetInfo) -> Self {
         Self {
             kind: StreamKind::Detection,
-            quantizer,
+            quant: quant.into(),
             entropy: EntropyKind::Cabac,
             img_w: img,
             img_h: img,
@@ -101,18 +110,32 @@ impl EncoderConfig {
         self
     }
 
+    /// Replace the quantizer spec (builder-style).
+    pub fn with_quant(mut self, quant: impl Into<QuantSpec>) -> Self {
+        self.quant = quant.into();
+        self
+    }
+
+    /// Materialize the configured spec (tests and one-shot callers; the
+    /// [`Encoder`] caches its own copy).
+    pub fn quantizer(&self) -> Quantizer {
+        self.quant.materialize()
+    }
+
     fn header(&self) -> Header {
-        let (quant, recon) = match &self.quantizer {
-            Quantizer::Uniform(_) => (QuantKind::Uniform, None),
-            Quantizer::NonUniform(q) => (QuantKind::EntropyConstrained, Some(q.recon.clone())),
+        let (quant, recon) = match &self.quant {
+            QuantSpec::Uniform { .. } => (QuantKind::Uniform, None),
+            QuantSpec::EntropyConstrained(q) => {
+                (QuantKind::EntropyConstrained, Some(q.recon.clone()))
+            }
         };
         Header {
             kind: self.kind,
             quant,
             entropy: self.entropy,
-            levels: self.quantizer.levels(),
-            c_min: self.quantizer.c_min(),
-            c_max: self.quantizer.c_max(),
+            levels: self.quant.levels(),
+            c_min: self.quant.c_min(),
+            c_max: self.quant.c_max(),
             img_w: self.img_w,
             img_h: self.img_h,
             det: self.det,
@@ -125,6 +148,10 @@ impl EncoderConfig {
 pub struct Encoder {
     pub config: EncoderConfig,
     backend: Box<dyn EntropyBackend>,
+    /// Materialized form of `config.quant`, rebuilt when the spec changes.
+    quantizer: Quantizer,
+    /// The spec `quantizer` was materialized from.
+    spec_cache: QuantSpec,
 }
 
 /// An encoded feature tensor.
@@ -145,7 +172,20 @@ impl EncodedStream {
 impl Encoder {
     pub fn new(config: EncoderConfig) -> Self {
         let backend = backend_for(config.entropy);
-        Self { config, backend }
+        let quantizer = config.quant.materialize();
+        let spec_cache = config.quant.clone();
+        Self {
+            config,
+            backend,
+            quantizer,
+            spec_cache,
+        }
+    }
+
+    /// The materialized quantizer currently driving `encode` (refreshed
+    /// from `config.quant` at the top of every encode call).
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.quantizer
     }
 
     /// Encode one feature tensor into a standalone bit-stream. All
@@ -153,16 +193,19 @@ impl Encoder {
     /// independently decodable); the hot loops live in the backend and
     /// stay monomorphic per quantizer kind.
     pub fn encode(&mut self, data: &[f32]) -> EncodedStream {
-        // `config` is deliberately pub (the adaptive clip controller swaps
-        // quantizers mid-run); honor an entropy swap the same way — the
-        // header id and the payload must never disagree.
+        // `config` is deliberately pub (the online design controller swaps
+        // freshly designed specs mid-run); honor spec and entropy swaps
+        // here — the header and the payload must never disagree.
         if self.backend.kind() != self.config.entropy {
             self.backend = backend_for(self.config.entropy);
         }
+        if self.spec_cache != self.config.quant {
+            self.quantizer = self.config.quant.materialize();
+            self.spec_cache = self.config.quant.clone();
+        }
         let mut bytes = Vec::with_capacity(data.len() / 4 + 32);
         self.config.header().write(&mut bytes);
-        self.backend
-            .encode_payload(&self.config.quantizer, data, &mut bytes);
+        self.backend.encode_payload(&self.quantizer, data, &mut bytes);
         EncodedStream {
             bytes,
             elements: data.len(),
@@ -236,7 +279,7 @@ mod tests {
         let xs = activations(10_000, 1);
         for levels in [2, 3, 4, 5, 8] {
             let cfg = uniform_cfg(levels, 6.0);
-            let q = cfg.quantizer.clone();
+            let q = cfg.quantizer();
             let mut enc = Encoder::new(cfg);
             let stream = enc.encode(&xs);
             let (decoded, header) = decode(&stream.bytes, xs.len()).unwrap();
@@ -326,7 +369,7 @@ mod tests {
             let c_max = g.f32_in(0.5, 12.0);
             let xs = g.activation_vec(n, 2.0);
             let cfg = uniform_cfg(levels, c_max);
-            let q = cfg.quantizer.clone();
+            let q = cfg.quantizer();
             let mut enc = Encoder::new(cfg);
             let stream = enc.encode(&xs);
             let (decoded, _) = decode(&stream.bytes, n).map_err(|e| e.to_string())?;
@@ -347,7 +390,7 @@ mod tests {
         let xs = activations(12_000, 9);
         for levels in [2, 3, 4, 8] {
             let cfg = uniform_cfg(levels, 6.0).with_entropy(EntropyKind::Rans);
-            let q = cfg.quantizer.clone();
+            let q = cfg.quantizer();
             let mut enc = Encoder::new(cfg);
             let stream = enc.encode(&xs);
             let (decoded, header) = decode(&stream.bytes, xs.len()).unwrap();

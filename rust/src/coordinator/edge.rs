@@ -2,6 +2,14 @@
 //! the edge half of the network via PJRT, and compresses the split-layer
 //! tensor with the lightweight codec.
 //!
+//! Quantizer construction is a first-class design stage here
+//! ([`crate::codec::design`]): at stream granularity an
+//! [`OnlineDesignController`] re-designs the spec on a windowed cadence
+//! (kind-preserving — an ECQ or signed-range spec never degrades to
+//! `Uniform(0, c_max)`); at tile granularity every container tile gets
+//! its own freshly designed quantizer (`encode_batched_designed`,
+//! container v3).
+//!
 //! Constructed *inside* its worker thread (the xla handles are not Send);
 //! one instance simulates one device.
 
@@ -11,12 +19,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::protocol::{CompressedItem, QuantSpec, Request, TaskKind};
-use super::stats::{AdaptiveClipController, AdaptiveConfig};
+use super::stats::{kind_preserving_designer, AdaptiveConfig, OnlineDesignController};
 use crate::codec::{
-    encode_batched, DetInfo, Encoder, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer,
-    DEFAULT_TILE_ELEMS,
+    designer_for, encode_batched, encode_batched_designed, ClipGranularity, DesignKind, DetInfo,
+    Encoder, EncoderConfig, EntropyKind, QuantDesigner, DEFAULT_TILE_ELEMS,
 };
 use crate::data;
+use crate::modeling::Activation;
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
@@ -30,14 +39,77 @@ pub struct EdgeConfig {
     /// stream headers are self-describing, so devices with different
     /// backends can share one cloud worker (mixed-backend serving).
     pub entropy: EntropyKind,
+    /// Quantizer designer (`--design`): [`DesignKind::Static`] uses
+    /// `quant` as-is; `Model`/`Ecq` design online from the stream's own
+    /// statistics (windowed at stream granularity, per tile at tile
+    /// granularity).
+    pub design: DesignKind,
+    /// Design scope (`--clip-granularity`): one spec per stream, or one
+    /// per container tile (forces the batched container, v3).
+    pub granularity: ClipGranularity,
     pub val_seed: u64,
     pub batch: usize,
-    /// Optional adaptive clip-range control (None = static range).
+    /// Optional windowed re-design control (None = design once / static).
+    /// Implied (with defaults) by a non-static `design` at stream
+    /// granularity.
     pub adaptive: Option<AdaptiveConfig>,
     /// Codec threads per edge device. 1 = legacy single-stream wire format;
     /// > 1 = tiled multi-substream container encoded on a worker-local
-    /// [`ThreadPool`] (`codec::batch`).
+    /// [`ThreadPool`] (`codec::batch`). Tile-granularity design always
+    /// encodes the tiled container, whatever the thread count.
     pub threads: usize,
+}
+
+impl EdgeConfig {
+    /// The activation family + κ of this task's split layer (paper
+    /// §III-B: leaky κ=0.5 for the conv nets, plain ReLU κ=1 for alex).
+    pub fn model_family(task: TaskKind) -> (Activation, f64) {
+        match task {
+            TaskKind::ClassifyAlex => (Activation::Relu, 1.0),
+            _ => (
+                Activation::LeakyRelu {
+                    slope: crate::LEAKY_SLOPE,
+                },
+                0.5,
+            ),
+        }
+    }
+
+    /// The adaptive config this edge device would re-design under: the
+    /// explicit one if set, else defaults sized to the configured spec.
+    fn adaptive_config(&self) -> AdaptiveConfig {
+        let (activation, kappa) = Self::model_family(self.task);
+        self.adaptive.unwrap_or(AdaptiveConfig {
+            levels: self.quant.levels(),
+            activation,
+            kappa,
+            ..AdaptiveConfig::default()
+        })
+    }
+
+    /// What the serve report should say about this device's design stage:
+    /// unrecorded when no design runs at all (fully static), and the
+    /// *active* designer otherwise — under the legacy `--adaptive` flag
+    /// with `--design static`, the kind-preserving controller actually
+    /// runs a model (uniform spec) or ecq (ECQ spec) designer, and the
+    /// report must not claim "static" while the clip range is moving.
+    pub fn design_info(&self) -> super::metrics::DesignInfo {
+        if self.design == DesignKind::Static && self.adaptive.is_none() {
+            return super::metrics::DesignInfo::default();
+        }
+        let designer = if self.design == DesignKind::Static {
+            match &self.quant {
+                QuantSpec::EntropyConstrained(_) => "ecq",
+                QuantSpec::Uniform { .. } => "model",
+            }
+        } else {
+            self.design.name()
+        };
+        super::metrics::DesignInfo {
+            designer,
+            granularity: self.granularity.name(),
+        }
+    }
 }
 
 /// Timing breakdown accumulated by an edge worker.
@@ -46,8 +118,15 @@ pub struct EdgeTimes {
     pub datagen_s: f64,
     pub infer_s: f64,
     pub encode_s: f64,
+    /// Time spent in the quantizer design stage (windowed controller
+    /// observation + refits; per-tile design time is part of `encode_s`).
+    pub design_s: f64,
     pub items: u64,
     pub bytes: u64,
+    /// Stream-granularity re-designs applied to the encoder.
+    pub redesigns: u64,
+    /// Tiles encoded under a per-tile designed quantizer.
+    pub tile_designs: u64,
 }
 
 pub struct EdgeWorker {
@@ -56,8 +135,11 @@ pub struct EdgeWorker {
     config: EdgeConfig,
     input_shape: Vec<usize>,
     feature_elems: usize,
-    adaptive: Option<AdaptiveClipController>,
-    /// Present iff `config.threads > 1`: drives batched tile encoding.
+    /// Windowed stream-granularity re-design (kind-preserving).
+    controller: Option<OnlineDesignController>,
+    /// Tile-granularity designer: every container tile gets its own spec.
+    tile_designer: Option<Box<dyn QuantDesigner>>,
+    /// Present when batched (tiled) encoding is active.
     pool: Option<ThreadPool>,
     pub times: EdgeTimes,
 }
@@ -80,10 +162,9 @@ impl EdgeWorker {
             ),
         };
         let exe = rt.load(edge_path)?;
-        let quantizer = config.quant.materialize();
         let enc_cfg = match config.task {
             TaskKind::Detect => EncoderConfig::detection(
-                quantizer,
+                config.quant.clone(),
                 img,
                 DetInfo {
                     net_w: data::DET_IMG as u16,
@@ -93,24 +174,42 @@ impl EdgeWorker {
                     feat_c: feature[3] as u16,
                 },
             ),
-            _ => EncoderConfig::classification(quantizer, img),
+            _ => EncoderConfig::classification(config.quant.clone(), img),
         }
         .with_entropy(config.entropy);
         let input_shape = match config.task {
             TaskKind::Detect => vec![config.batch, data::DET_IMG, data::DET_IMG, 3],
             _ => vec![config.batch, data::IMG, data::IMG, 3],
         };
-        let adaptive = config
-            .adaptive
-            .map(|cfg| AdaptiveClipController::new(cfg, config.quant.c_max_hint()));
-        let pool = (config.threads > 1).then(|| ThreadPool::new(config.threads));
+        let acfg = config.adaptive_config();
+        // Stream-granularity re-design runs whenever the caller asked for
+        // adaptivity (legacy `--adaptive`) or for a non-static designer at
+        // stream scope; the controller preserves the spec's kind and sign.
+        let controller = (config.adaptive.is_some()
+            || (config.design != DesignKind::Static
+                && config.granularity == ClipGranularity::Stream))
+            .then(|| {
+                OnlineDesignController::new(
+                    acfg,
+                    kind_preserving_designer(&config.quant, config.design, &acfg),
+                    config.quant.clone(),
+                )
+            });
+        // Tile-granularity design encodes container v3 with one designed
+        // spec per tile (the batched container regardless of threads).
+        let tile_designer = (config.design != DesignKind::Static
+            && config.granularity == ClipGranularity::Tile)
+            .then(|| designer_for(config.design, &config.quant, acfg.activation, acfg.kappa));
+        let pool = (config.threads > 1 || tile_designer.is_some())
+            .then(|| ThreadPool::new(config.threads.max(1)));
         Ok(Self {
             exe,
             encoder: Encoder::new(enc_cfg),
             feature_elems: feature[1..].iter().product(),
             input_shape,
             config,
-            adaptive,
+            controller,
+            tile_designer,
             pool,
             times: EdgeTimes::default(),
         })
@@ -153,29 +252,42 @@ impl EdgeWorker {
         let features = self.exe.run1(&[&input])?;
         self.times.infer_s += t1.elapsed().as_secs_f64();
 
-        // --- adaptive statistics + codec --------------------------------
+        // --- quantizer design + codec -----------------------------------
         let t2 = Instant::now();
+        let mut batch_design_s = 0.0f64;
         let feat = features.data();
         let mut out = Vec::with_capacity(requests.len());
         for (i, r) in requests.iter().enumerate() {
             let item = &feat[i * self.feature_elems..(i + 1) * self.feature_elems];
-            if let Some(ctl) = &mut self.adaptive {
-                if ctl.observe(item) {
-                    // Refit: swap in the new uniform range.
-                    let levels = self.config.quant.levels();
-                    self.encoder.config.quantizer = Quantizer::Uniform(UniformQuantizer::new(
-                        0.0,
-                        ctl.c_max() as f32,
-                        levels,
-                    ));
+            if let Some(ctl) = &mut self.controller {
+                let td = Instant::now();
+                if let Some(spec) = ctl.observe(item) {
+                    // Windowed re-design: hand the encoder the fresh spec
+                    // (kind- and sign-preserving by construction); it
+                    // re-materializes the quantizer on its next encode.
+                    self.encoder.config.quant = spec;
+                    self.times.redesigns += 1;
                 }
+                batch_design_s += td.elapsed().as_secs_f64();
             }
-            let (bytes, elements) = match &self.pool {
-                Some(pool) => {
+            let (bytes, elements) = match (&self.tile_designer, &self.pool) {
+                (Some(designer), Some(pool)) => {
+                    let s = encode_batched_designed(
+                        &self.encoder.config,
+                        designer.as_ref(),
+                        item,
+                        DEFAULT_TILE_ELEMS,
+                        pool,
+                    );
+                    self.times.tile_designs += s.substreams as u64;
+                    (s.bytes, s.elements)
+                }
+                (Some(_), None) => unreachable!("tile design always builds a pool"),
+                (None, Some(pool)) => {
                     let s = encode_batched(&self.encoder.config, item, DEFAULT_TILE_ELEMS, pool);
                     (s.bytes, s.elements)
                 }
-                None => {
+                (None, None) => {
                     let s = self.encoder.encode(item);
                     (s.bytes, s.elements)
                 }
@@ -190,14 +302,23 @@ impl EdgeWorker {
                 encoded: Instant::now(),
             });
         }
-        self.times.encode_s += t2.elapsed().as_secs_f64();
+        // Stage times stay disjoint: the controller's observe/refit time
+        // is design_s, everything else in this block is encode_s.
+        self.times.design_s += batch_design_s;
+        self.times.encode_s += t2.elapsed().as_secs_f64() - batch_design_s;
         self.times.items += requests.len() as u64;
         Ok(out)
     }
 
-    /// Current clip maximum (moves under adaptive control).
+    /// Current clip maximum (moves under online re-design).
     pub fn current_c_max(&self) -> f32 {
-        self.encoder.config.quantizer.c_max()
+        self.encoder.config.quant.c_max()
+    }
+
+    /// The spec the stream encoder currently uses (tile-granularity tiles
+    /// carry their own, recorded in the container directory).
+    pub fn current_spec(&self) -> &QuantSpec {
+        &self.encoder.config.quant
     }
 }
 
@@ -236,6 +357,7 @@ pub fn run_edge_node(
     let task = config.task;
     let val_seed = config.val_seed;
     let batch = config.batch.max(1);
+    let design_info = config.design_info();
     let mut worker = EdgeWorker::new(manifest, config)?;
     let mut client = EdgeClient::connect(&node.connect, task, node.window, node.retry)?;
 
@@ -296,14 +418,6 @@ pub fn run_edge_node(
         rtt_p95_s: stats.rtt.quantile(0.95),
         rtt_p99_s: stats.rtt.quantile(0.99),
     };
+    report.design = design_info;
     Ok(report)
-}
-
-impl QuantSpec {
-    fn c_max_hint(&self) -> f64 {
-        match self {
-            QuantSpec::Uniform { c_max, .. } => *c_max as f64,
-            QuantSpec::EntropyConstrained(q) => q.c_max as f64,
-        }
-    }
 }

@@ -34,6 +34,33 @@ impl TransportStats {
     }
 }
 
+/// Which quantizer design stage a serve run used (reported so operators
+/// can see the designer/granularity a rate number was produced under; the
+/// per-item counters live in [`EdgeTimes`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DesignInfo {
+    /// Designer name ("static", "model", "ecq"); empty = not recorded.
+    pub designer: &'static str,
+    /// Design scope ("stream", "tile").
+    pub granularity: &'static str,
+}
+
+impl DesignInfo {
+    pub fn of(
+        design: crate::codec::DesignKind,
+        granularity: crate::codec::ClipGranularity,
+    ) -> Self {
+        Self {
+            designer: design.name(),
+            granularity: granularity.name(),
+        }
+    }
+
+    pub fn is_recorded(&self) -> bool {
+        !self.designer.is_empty()
+    }
+}
+
 /// Final report of a [`super::server::serve`] run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -53,6 +80,9 @@ pub struct ServeReport {
     /// Transit-stage accounting; default (unrecorded) when the caller did
     /// not run through a [`super::transport::Transport`].
     pub transport: TransportStats,
+    /// Quantizer design stage this run used; default (unrecorded) for
+    /// callers that aggregate outcomes without an edge config.
+    pub design: DesignInfo,
 }
 
 impl ServeReport {
@@ -126,12 +156,23 @@ impl ServeReport {
             edge,
             cloud,
             transport: TransportStats::default(),
+            design: DesignInfo::default(),
         }
     }
 
     /// Human-readable one-screen summary.
     pub fn summary(&self) -> String {
         let mut s = self.summary_core();
+        if self.design.is_recorded() {
+            s.push_str(&format!(
+                "\ndesign: {} granularity={} redesigns={} tile_designs={} ({:.2}s)",
+                self.design.designer,
+                self.design.granularity,
+                self.edge.redesigns,
+                self.edge.tile_designs,
+                self.edge.design_s,
+            ));
+        }
         if self.transport.is_recorded() {
             s.push_str(&format!(
                 "\ntransport: {} tx={}B rx={}B items={} outcomes={} reconnects={} \

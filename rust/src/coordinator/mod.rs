@@ -17,12 +17,12 @@ pub mod transport;
 
 pub use cloud::{CloudConfig, CloudWorker};
 pub use edge::{run_edge_node, EdgeConfig, EdgeNodeConfig, EdgeWorker};
-pub use metrics::{ServeReport, TransportStats};
+pub use metrics::{DesignInfo, ServeReport, TransportStats};
 pub use net::{CloudDaemon, EdgeClient, RetryPolicy, WireItem, WireOutcome};
 pub use protocol::{CompressedItem, Outcome, QuantSpec, Request, TaskKind};
 pub use server::{
     build_transport, run_pipeline, serve, CloudStage, EdgeStage, PipelineConfig, PipelineOutput,
     ServeConfig,
 };
-pub use stats::{AdaptiveClipController, AdaptiveConfig};
+pub use stats::{kind_preserving_designer, AdaptiveConfig, OnlineDesignController};
 pub use transport::{LoopbackTransport, TcpTransport, Transport, TransportKind};

@@ -7,8 +7,14 @@
 
 use std::time::Instant;
 
-use crate::codec::{NonUniformQuantizer, Quantizer, UniformQuantizer};
 use crate::eval::Detection;
+
+/// Send-able quantizer specification, re-exported from the codec's design
+/// stage (it moved there when quantizer construction became a first-class
+/// pipeline stage — see [`crate::codec::design`]; workers still
+/// materialize a `Quantizer` locally because the xla handles are not
+/// Send, and neither spec variant needs them).
+pub use crate::codec::design::QuantSpec;
 
 /// Which split network a pipeline serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,38 +52,6 @@ impl TaskKind {
             0x20 => Ok(TaskKind::ClassifyAlex),
             0x30 => Ok(TaskKind::Detect),
             other => Err(format!("unknown task code {other:#04x}")),
-        }
-    }
-}
-
-/// Send-able quantizer specification (the xla handles are not Send, and
-/// neither choice needs them; workers materialize a [`Quantizer`] locally).
-#[derive(Clone, Debug)]
-pub enum QuantSpec {
-    Uniform {
-        c_min: f32,
-        c_max: f32,
-        levels: usize,
-    },
-    EntropyConstrained(NonUniformQuantizer),
-}
-
-impl QuantSpec {
-    pub fn materialize(&self) -> Quantizer {
-        match self {
-            QuantSpec::Uniform {
-                c_min,
-                c_max,
-                levels,
-            } => Quantizer::Uniform(UniformQuantizer::new(*c_min, *c_max, *levels)),
-            QuantSpec::EntropyConstrained(q) => Quantizer::NonUniform(q.clone()),
-        }
-    }
-
-    pub fn levels(&self) -> usize {
-        match self {
-            QuantSpec::Uniform { levels, .. } => *levels,
-            QuantSpec::EntropyConstrained(q) => q.levels(),
         }
     }
 }

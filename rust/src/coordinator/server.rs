@@ -239,8 +239,11 @@ where
                         edge_times.datagen_s += t.datagen_s;
                         edge_times.infer_s += t.infer_s;
                         edge_times.encode_s += t.encode_s;
+                        edge_times.design_s += t.design_s;
                         edge_times.items += t.items;
                         edge_times.bytes += t.bytes;
+                        edge_times.redesigns += t.redesigns;
+                        edge_times.tile_designs += t.tile_designs;
                     }
                     Ok(Err(e)) => errors_ref
                         .lock()
@@ -361,6 +364,7 @@ pub fn serve(manifest: &Manifest, config: ServeConfig) -> Result<ServeReport> {
         started.elapsed().as_secs_f64(),
     );
     report.transport = transport.stats();
+    report.design = config.edge.design_info();
     Ok(report)
 }
 

@@ -1,26 +1,41 @@
-//! Adaptive clip-range controller (paper §III-E: "this codec is also
-//! amenable to adaptive operation if inference is performed in real time
-//! ... the measured statistics can adjust based on the most recent few
-//! hundred frames").
+//! Online quantizer (re-)design controller (paper §III-E: "this codec is
+//! also amenable to adaptive operation if inference is performed in real
+//! time ... the measured statistics can adjust based on the most recent
+//! few hundred frames").
 //!
-//! Maintains a sliding window of split-layer moments (subsampled — the
-//! statistics need only a few hundred images to converge) and refits the
-//! asymmetric-Laplace model + optimal clipping range on a cadence.
+//! Maintains a sliding window of split-layer statistics (subsampled — the
+//! statistics need only a few hundred images to converge) plus a bounded
+//! sample reservoir, and on a cadence re-runs a
+//! [`QuantDesigner`](crate::codec::design::QuantDesigner) to produce a
+//! fresh [`QuantSpec`] for the encoder.
+//!
+//! This replaces the original `AdaptiveClipController`, which hard-coded
+//! `c_min = 0` and rebuilt a `Uniform` quantizer on every refit — so an
+//! edge device configured with an entropy-constrained (Algorithm 1)
+//! quantizer, or a signed leaky-ReLU clip range, was silently downgraded
+//! to `Uniform(0.0, c_max)` on its first refit. The controller is now
+//! **kind-preserving by construction**: the designer it runs is chosen
+//! from the *current spec* (uniform → model-optimal range, signed when
+//! the range or activation family is signed; ECQ → Algorithm 1 on the
+//! reservoir histogram), and a failed design keeps the last good spec.
 
-use crate::modeling::{fit, optimal_cmax, Activation};
-use crate::util::math::Welford;
+use crate::codec::design::{
+    DesignKind, EcqDesigner, ModelOptimalDesigner, QuantDesigner, QuantSpec,
+};
+use crate::modeling::Activation;
+use crate::tensor::stats::TensorStats;
 
 /// Configuration for the controller.
 #[derive(Clone, Copy, Debug)]
 pub struct AdaptiveConfig {
-    /// Refit after this many tensors.
+    /// Re-design after this many tensors.
     pub refit_every: usize,
     /// Keep at most this many window accumulations (sliding by reset).
     pub window_tensors: usize,
     /// Subsample stride over tensor elements (stats converge fast; there
     /// is no need to touch every element on the hot path).
     pub element_stride: usize,
-    /// Quantizer level count the clip range is optimized for.
+    /// Quantizer level count the design is optimized for.
     pub levels: usize,
     /// Split-layer activation family.
     pub activation: Activation,
@@ -41,80 +56,147 @@ impl Default for AdaptiveConfig {
     }
 }
 
-/// Running state of the adaptive controller.
-#[derive(Clone, Debug)]
-pub struct AdaptiveClipController {
+/// Cap on the sample reservoir backing histogram-based re-designs (ECQ).
+/// Overwritten cyclically, so the reservoir always holds the most recent
+/// subsampled values without unbounded growth.
+const RESERVOIR_CAP: usize = 32_768;
+
+/// Pick the designer that preserves the *shape* of `initial` across
+/// refits:
+///
+/// * an entropy-constrained spec re-designs through Algorithm 1 — never
+///   through the uniform path, whatever the CLI asked for;
+/// * a spec with a signed (negative) `c_min` re-designs with the
+///   unconstrained-range solver AND a guaranteed negative span
+///   (`neg_span` = the configured `|c_min|/c_max` ratio), so the range
+///   stays signed even when the model optimum lands at `c_min ≥ 0`;
+/// * a zero-based uniform spec under [`DesignKind::Static`] keeps the
+///   legacy `c_min = 0` semantics; an explicit `--design model|ecq`
+///   additionally unlocks the signed solver for leaky-ReLU families.
+pub fn kind_preserving_designer(
+    initial: &QuantSpec,
+    design: DesignKind,
+    config: &AdaptiveConfig,
+) -> Box<dyn QuantDesigner> {
+    let configured_signed = initial.c_min() < 0.0;
+    let signed = configured_signed
+        || (design != DesignKind::Static
+            && matches!(config.activation, Activation::LeakyRelu { .. }));
+    let neg_span = if configured_signed && initial.c_max() > 0.0 {
+        -initial.c_min() / initial.c_max()
+    } else {
+        0.0
+    };
+    let model = ModelOptimalDesigner {
+        levels: initial.levels(),
+        activation: config.activation,
+        kappa: config.kappa,
+        signed_cmin: signed,
+        neg_span,
+    };
+    match (initial, design) {
+        (QuantSpec::EntropyConstrained(_), _) | (QuantSpec::Uniform { .. }, DesignKind::Ecq) => {
+            Box::new(EcqDesigner::new(model))
+        }
+        (QuantSpec::Uniform { .. }, _) => Box::new(model),
+    }
+}
+
+/// Running state of the online design controller.
+pub struct OnlineDesignController {
     pub config: AdaptiveConfig,
-    window: Welford,
+    designer: Box<dyn QuantDesigner>,
+    window: TensorStats,
+    reservoir: Vec<f32>,
+    reservoir_cursor: usize,
     tensors_seen: usize,
     tensors_since_refit: usize,
-    c_max: f64,
+    spec: QuantSpec,
     pub refits: usize,
 }
 
-impl AdaptiveClipController {
-    pub fn new(config: AdaptiveConfig, initial_c_max: f64) -> Self {
+impl OnlineDesignController {
+    /// `designer` decides what a refit produces; use
+    /// [`kind_preserving_designer`] unless a caller has special needs.
+    pub fn new(config: AdaptiveConfig, designer: Box<dyn QuantDesigner>, initial: QuantSpec) -> Self {
         Self {
             config,
-            window: Welford::new(),
+            designer,
+            window: TensorStats::new(),
+            reservoir: Vec::new(),
+            reservoir_cursor: 0,
             tensors_seen: 0,
             tensors_since_refit: 0,
-            c_max: initial_c_max,
+            spec: initial,
             refits: 0,
         }
     }
 
-    /// Current clipping value the encoder should use.
+    /// The spec the encoder should currently use.
+    pub fn spec(&self) -> &QuantSpec {
+        &self.spec
+    }
+
+    /// Current clipping maximum (moves under adaptive control).
     pub fn c_max(&self) -> f64 {
-        self.c_max
+        self.spec.c_max() as f64
     }
 
     pub fn mean(&self) -> f64 {
-        self.window.mean
+        self.window.mean()
     }
 
     pub fn variance(&self) -> f64 {
         self.window.variance()
     }
 
-    /// Observe one (pre-quantization) feature tensor; maybe refit.
-    /// Returns `true` when the clip range was updated.
-    pub fn observe(&mut self, features: &[f32]) -> bool {
+    /// Observe one (pre-quantization) feature tensor; on the refit
+    /// cadence, re-run the designer over the window and return the fresh
+    /// spec (`None` when nothing changed — off-cadence, too little data,
+    /// or a failed design, which keeps the last good spec).
+    pub fn observe(&mut self, features: &[f32]) -> Option<QuantSpec> {
         let stride = self.config.element_stride.max(1);
         let mut i = (self.tensors_seen * 3) % stride; // rotate phase
         while i < features.len() {
-            self.window.push(features[i] as f64);
+            let v = features[i];
+            self.window.push(v);
+            if self.reservoir.len() < RESERVOIR_CAP {
+                self.reservoir.push(v);
+            } else {
+                self.reservoir[self.reservoir_cursor] = v;
+                self.reservoir_cursor = (self.reservoir_cursor + 1) % RESERVOIR_CAP;
+            }
             i += stride;
         }
         self.tensors_seen += 1;
         self.tensors_since_refit += 1;
 
-        if self.tensors_since_refit >= self.config.refit_every && self.window.count > 100 {
+        if self.tensors_since_refit >= self.config.refit_every && self.window.count() > 100 {
             self.tensors_since_refit = 0;
             let refitted = self.refit();
             // Slide the window: restart accumulation after a few windows so
-            // drifting statistics age out.
+            // drifting statistics age out (the reservoir keeps rolling).
             if self.tensors_seen % self.config.window_tensors == 0 {
-                self.window = Welford::new();
+                self.window = TensorStats::new();
             }
             return refitted;
         }
-        false
+        None
     }
 
-    fn refit(&mut self) -> bool {
-        let var = self.window.variance();
-        if var <= 1e-12 {
-            return false;
-        }
-        match fit(self.window.mean, var, self.config.kappa, self.config.activation) {
-            Ok(model) => {
-                let r = optimal_cmax(&model.pdf, 0.0, self.config.levels);
-                self.c_max = r.c_max;
+    fn refit(&mut self) -> Option<QuantSpec> {
+        match self.designer.design(&self.window, &self.reservoir) {
+            Ok(spec) => {
+                // Kind preservation (never ECQ → uniform) is the
+                // *designer's* contract — [`kind_preserving_designer`]
+                // guarantees it, and its tests pin it. The controller
+                // itself accepts whatever its designer produces, since
+                // custom designers are an advertised seam.
+                self.spec = spec.clone();
                 self.refits += 1;
-                true
+                Some(spec)
             }
-            Err(_) => false, // keep last good range on a failed fit
+            Err(_) => None, // keep last good design on a failed fit
         }
     }
 }
@@ -122,6 +204,8 @@ impl AdaptiveClipController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::design::StaticDesigner;
+    use crate::codec::{design_ecq, EcqParams, QuantKind};
     use crate::util::rng::SplitMix64;
 
     fn leaky_samples(rng: &mut SplitMix64, n: usize, scale: f64) -> Vec<f32> {
@@ -133,13 +217,26 @@ mod tests {
             .collect()
     }
 
+    fn uniform(c_min: f32, c_max: f32, levels: usize) -> QuantSpec {
+        QuantSpec::Uniform {
+            c_min,
+            c_max,
+            levels,
+        }
+    }
+
+    fn controller(cfg: AdaptiveConfig, initial: QuantSpec) -> OnlineDesignController {
+        let designer = kind_preserving_designer(&initial, DesignKind::Static, &cfg);
+        OnlineDesignController::new(cfg, designer, initial)
+    }
+
     #[test]
     fn adapts_to_scale_change() {
         let cfg = AdaptiveConfig {
             refit_every: 16,
             ..Default::default()
         };
-        let mut ctl = AdaptiveClipController::new(cfg, 1.0);
+        let mut ctl = controller(cfg, uniform(0.0, 1.0, 4));
         let mut rng = SplitMix64::new(2);
         for _ in 0..64 {
             let t = leaky_samples(&mut rng, 2048, 1.0);
@@ -149,7 +246,7 @@ mod tests {
         assert!(ctl.refits > 0);
 
         // Distribution scale x4 — the controller must widen the clip range.
-        let mut ctl2 = AdaptiveClipController::new(cfg, 1.0);
+        let mut ctl2 = controller(cfg, uniform(0.0, 1.0, 4));
         for _ in 0..64 {
             let t = leaky_samples(&mut rng, 2048, 4.0);
             ctl2.observe(&t);
@@ -168,10 +265,10 @@ mod tests {
             refit_every: 1000,
             ..Default::default()
         };
-        let mut ctl = AdaptiveClipController::new(cfg, 3.0);
+        let mut ctl = controller(cfg, uniform(0.0, 3.0, 4));
         let mut rng = SplitMix64::new(3);
         for _ in 0..10 {
-            ctl.observe(&leaky_samples(&mut rng, 512, 1.0));
+            assert!(ctl.observe(&leaky_samples(&mut rng, 512, 1.0)).is_none());
         }
         assert_eq!(ctl.refits, 0);
         assert_eq!(ctl.c_max(), 3.0);
@@ -183,11 +280,103 @@ mod tests {
             refit_every: 4,
             ..Default::default()
         };
-        let mut ctl = AdaptiveClipController::new(cfg, 2.0);
+        let mut ctl = controller(cfg, uniform(0.0, 2.0, 4));
         for _ in 0..16 {
-            ctl.observe(&vec![0.5f32; 1024]);
+            assert!(ctl.observe(&vec![0.5f32; 1024]).is_none());
         }
-        // Variance ~0 → refit declines, range unchanged.
+        // Variance ~0 → design declines, range unchanged.
         assert_eq!(ctl.c_max(), 2.0);
+        assert_eq!(ctl.refits, 0);
+    }
+
+    #[test]
+    fn refit_preserves_ecq_kind_and_signed_cmin() {
+        // THE downgrade-bug regression: an entropy-constrained spec over a
+        // negative-min tensor stream must re-design to another
+        // entropy-constrained spec whose range still covers the negative
+        // tail — never to Uniform(0.0, c_max).
+        let mut rng = SplitMix64::new(7);
+        let train = leaky_samples(&mut rng, 20_000, 2.0);
+        let initial = QuantSpec::EntropyConstrained(
+            design_ecq(&train, -0.5, 6.0, EcqParams::pinned(4, 0.02)).quantizer,
+        );
+        assert!(initial.c_min() < 0.0);
+
+        let cfg = AdaptiveConfig {
+            refit_every: 8,
+            ..Default::default()
+        };
+        let mut ctl = controller(cfg, initial);
+        let mut refit_specs = Vec::new();
+        for _ in 0..64 {
+            let t = leaky_samples(&mut rng, 4096, 2.0);
+            if let Some(spec) = ctl.observe(&t) {
+                refit_specs.push(spec);
+            }
+        }
+        assert!(!refit_specs.is_empty(), "controller never refitted");
+        for spec in &refit_specs {
+            assert_eq!(
+                spec.kind(),
+                QuantKind::EntropyConstrained,
+                "refit downgraded the quantizer kind: {spec:?}"
+            );
+            assert!(
+                spec.c_min() < 0.0,
+                "refit lost the signed clip minimum: {spec:?}"
+            );
+            assert_eq!(spec.levels(), 4);
+        }
+        assert_eq!(ctl.spec().kind(), QuantKind::EntropyConstrained);
+    }
+
+    #[test]
+    fn refit_preserves_signed_uniform_cmin() {
+        // A signed uniform range (leaky-ReLU family) keeps a negative
+        // c_min across refits — 30% of the stream's mass is negative.
+        let cfg = AdaptiveConfig {
+            refit_every: 16,
+            ..Default::default()
+        };
+        let mut ctl = controller(cfg, uniform(-0.3, 4.0, 8));
+        let mut rng = SplitMix64::new(9);
+        let mut saw_refit = false;
+        for _ in 0..64 {
+            if let Some(spec) = ctl.observe(&leaky_samples(&mut rng, 4096, 2.0)) {
+                saw_refit = true;
+                assert!(matches!(spec, QuantSpec::Uniform { .. }));
+                assert!(
+                    spec.c_min() < 0.0,
+                    "signed uniform refit snapped back to c_min = 0: {spec:?}"
+                );
+            }
+        }
+        assert!(saw_refit);
+    }
+
+    #[test]
+    fn custom_designer_is_respected() {
+        // A static designer makes the controller a no-op refitter — the
+        // seam callers can use to pin behavior in tests.
+        let cfg = AdaptiveConfig {
+            refit_every: 4,
+            ..Default::default()
+        };
+        let spec = uniform(0.0, 5.0, 4);
+        let mut ctl = OnlineDesignController::new(
+            cfg,
+            Box::new(StaticDesigner::new(spec.clone())),
+            spec.clone(),
+        );
+        let mut rng = SplitMix64::new(11);
+        let mut refits = 0;
+        for _ in 0..16 {
+            if let Some(s) = ctl.observe(&leaky_samples(&mut rng, 1024, 3.0)) {
+                assert_eq!(s, spec);
+                refits += 1;
+            }
+        }
+        assert!(refits > 0);
+        assert_eq!(ctl.spec(), &spec);
     }
 }

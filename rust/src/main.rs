@@ -16,8 +16,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 use lwfc::codec::{
-    batch, decode as codec_decode, Encoder, EncoderConfig, EntropyKind, Quantizer,
-    UniformQuantizer,
+    batch, decode as codec_decode, design_or, designer_for, ClipGranularity, DesignKind, Encoder,
+    EncoderConfig, EntropyKind, SubstreamDirectory,
 };
 use lwfc::coordinator::{
     run_edge_node, serve, CloudConfig, CloudDaemon, EdgeConfig, EdgeNodeConfig, QuantSpec,
@@ -77,6 +77,9 @@ commands:
                         (edge --connect HOST:PORT, see serve --listen)
   fit-model             fit the asymmetric-Laplace model + optimal clip ranges
   encode / decode       compress / decompress raw f32 tensor files
+                        (encode/serve/edge take --design {static,model,ecq} and
+                        --clip-granularity {stream,tile}: online quantizer design
+                        from stream statistics, optionally one per container tile)
   list                  list available experiments
 
 run `lwfc <command> --help` for per-command options"
@@ -94,6 +97,34 @@ fn manifest_from(dir: &str) -> Result<Manifest> {
 fn entropy_of(s: &str) -> Result<EntropyKind> {
     EntropyKind::parse(s).map_err(|e| anyhow!("--entropy: {e}"))
 }
+
+fn design_of(s: &str) -> Result<DesignKind> {
+    DesignKind::parse(s).map_err(|e| anyhow!("--design: {e}"))
+}
+
+fn granularity_of(s: &str) -> Result<ClipGranularity> {
+    ClipGranularity::parse(s).map_err(|e| anyhow!("--clip-granularity: {e}"))
+}
+
+/// Per-tile granularity without a designer is a usage error everywhere
+/// (encode, serve, edge): a static range per tile is just the batched
+/// container, and silently running stream-static while reporting
+/// granularity=tile would mislead the operator.
+fn check_design_combo(design: DesignKind, granularity: ClipGranularity) -> Result<()> {
+    if granularity == ClipGranularity::Tile && design == DesignKind::Static {
+        return Err(anyhow!(
+            "--clip-granularity tile needs --design model or ecq \
+             (a static range per tile is just the batched container)"
+        ));
+    }
+    Ok(())
+}
+
+const DESIGN_HELP: &str = "quantizer designer: static (use the configured range), \
+     model (fit the paper's activation model and solve the optimal clip range online), \
+     or ecq (Algorithm-1 entropy-constrained design on a sample histogram)";
+const GRANULARITY_HELP: &str = "design scope: stream (one quantizer per stream, windowed \
+     re-design) or tile (one designed quantizer per container tile, container v3)";
 
 fn task_of(net: &str) -> Result<TaskKind> {
     Ok(match net {
@@ -182,13 +213,18 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
              instead of the in-process pipeline",
         )
         .opt("conns", "4", "concurrent connection handlers in --listen mode")
+        .opt("design", "static", DESIGN_HELP)
+        .opt("clip-granularity", "stream", GRANULARITY_HELP)
         .opt("artifacts", "", "artifact directory")
-        .flag("adaptive", "enable the adaptive clip-range controller");
+        .flag("adaptive", "enable windowed online re-design of the clip range");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let m = manifest_from(a.get("artifacts"))?;
     let task = task_of(a.get("net"))?;
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
+    let design = design_of(a.get("design"))?;
+    let granularity = granularity_of(a.get("clip-granularity"))?;
+    check_design_combo(design, granularity)?;
 
     let cloud_cfg = CloudConfig {
         task,
@@ -234,9 +270,16 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
             entropy: entropy_of(a.get("entropy"))?,
             val_seed: m.val_seed,
             batch: m.serve_batch,
-            adaptive: a.has_flag("adaptive").then(|| lwfc::coordinator::AdaptiveConfig {
-                levels,
-                ..Default::default()
+            design,
+            granularity,
+            adaptive: a.has_flag("adaptive").then(|| {
+                let (activation, kappa) = EdgeConfig::model_family(task);
+                lwfc::coordinator::AdaptiveConfig {
+                    levels,
+                    activation,
+                    kappa,
+                    ..Default::default()
+                }
             }),
             threads,
         },
@@ -269,12 +312,17 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         .opt("window", "8", "in-flight items on the wire before blocking on outcomes")
         .opt("first-index", "0", "first corpus index to serve")
         .opt("retries", "5", "connection attempts per (re)connect")
+        .opt("design", "static", DESIGN_HELP)
+        .opt("clip-granularity", "stream", GRANULARITY_HELP)
         .opt("artifacts", "", "artifact directory");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let m = manifest_from(a.get("artifacts"))?;
     let task = task_of(a.get("net"))?;
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
     let c_max = resolve_c_max(&m, task, levels, a.get("c-max"))?;
+    let design = design_of(a.get("design"))?;
+    let granularity = granularity_of(a.get("clip-granularity"))?;
+    check_design_combo(design, granularity)?;
 
     let edge_cfg = EdgeConfig {
         task,
@@ -286,6 +334,8 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         entropy: entropy_of(a.get("entropy"))?,
         val_seed: m.val_seed,
         batch: m.serve_batch,
+        design,
+        granularity,
         adaptive: None,
         threads: a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1),
     };
@@ -391,6 +441,8 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
         .opt("c-max", "", "clip maximum (default: model fit from the data)")
         .opt("threads", "1", "encode threads (writes the tiled batched container when > 1)")
         .opt("tile", "16384", "tile size in elements for the batched container")
+        .opt("design", "static", DESIGN_HELP)
+        .opt("clip-granularity", "stream", GRANULARITY_HELP)
         .opt(
             "entropy",
             "cabac",
@@ -400,6 +452,9 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let data = read_f32_file(a.get("input"))?;
     let levels = a.get_usize("levels").map_err(|e| anyhow!(e))?;
+    let design = design_of(a.get("design"))?;
+    let granularity = granularity_of(a.get("clip-granularity"))?;
+    check_design_combo(design, granularity)?;
     let c_min = a.get_f64("c-min").map_err(|e| anyhow!(e))? as f32;
     let c_max = if a.get("c-max").is_empty() {
         let n = data.len() as f64;
@@ -415,22 +470,61 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
     let tile = a.get_usize("tile").map_err(|e| anyhow!(e))?.max(1);
     let entropy = entropy_of(a.get("entropy"))?;
-    let q = Quantizer::Uniform(UniformQuantizer::new(c_min, c_max, levels));
-    let cfg = EncoderConfig::classification(q, 0).with_entropy(entropy);
-    let (bytes, elements, substreams, bpe) = if threads > 1 {
-        let pool = ThreadPool::new(threads);
-        let s = batch::encode_batched(&cfg, &data, tile, &pool);
-        let bpe = s.bits_per_element();
-        (s.bytes, s.elements, s.substreams, bpe)
-    } else {
-        let mut enc = Encoder::new(cfg);
-        let s = enc.encode(&data);
-        let bpe = s.bits_per_element();
-        (s.bytes, s.elements, 1, bpe)
+    // The hand-picked/model-fit range is the base spec: what `static`
+    // encodes with, and what non-static designers fall back to on
+    // degenerate scopes.
+    let base = QuantSpec::Uniform {
+        c_min,
+        c_max,
+        levels,
+    };
+    let (activation, kappa) = (
+        modeling::Activation::LeakyRelu {
+            slope: lwfc::LEAKY_SLOPE,
+        },
+        0.5,
+    );
+    let designer = designer_for(design, &base, activation, kappa);
+    let cfg = EncoderConfig::classification(base.clone(), 0).with_entropy(entropy);
+    let (bytes, elements, substreams, bpe) = match granularity {
+        ClipGranularity::Tile => {
+            // Per-tile design writes the v3 container whatever the thread
+            // count (a pool of one is fine).
+            let pool = ThreadPool::new(threads);
+            let s = batch::encode_batched_designed(&cfg, designer.as_ref(), &data, tile, &pool);
+            let bpe = s.bits_per_element();
+            (s.bytes, s.elements, s.substreams, bpe)
+        }
+        ClipGranularity::Stream => {
+            let cfg = if design == DesignKind::Static {
+                cfg
+            } else {
+                let spec = design_or(designer.as_ref(), &data, &base);
+                println!(
+                    "designed ({design}): N={} clip [{:.4}, {:.4}]",
+                    spec.levels(),
+                    spec.c_min(),
+                    spec.c_max()
+                );
+                cfg.with_quant(spec)
+            };
+            if threads > 1 {
+                let pool = ThreadPool::new(threads);
+                let s = batch::encode_batched(&cfg, &data, tile, &pool);
+                let bpe = s.bits_per_element();
+                (s.bytes, s.elements, s.substreams, bpe)
+            } else {
+                let mut enc = Encoder::new(cfg);
+                let s = enc.encode(&data);
+                let bpe = s.bits_per_element();
+                (s.bytes, s.elements, 1, bpe)
+            }
+        }
     };
     std::fs::write(a.get("output"), &bytes)?;
     println!(
-        "{} elements -> {} bytes ({bpe:.4} bits/element, {} substream{}, {entropy} entropy)",
+        "{} elements -> {} bytes ({bpe:.4} bits/element, {} substream{}, {entropy} entropy, \
+         {design} design @ {granularity})",
         elements,
         bytes.len(),
         substreams,
@@ -459,6 +553,18 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
     let bytes = std::fs::read(a.get("input"))?;
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
     let (values, header) = if lwfc::codec::is_batched(&bytes) {
+        // Informational only, so the extra directory walk is limited to
+        // v3 containers (version byte 3+ means a per-tile spec block).
+        if bytes.len() > 4 && bytes[4] >= 3 {
+            let (dir, _) = SubstreamDirectory::read(&bytes).map_err(anyhow::Error::msg)?;
+            if let Some(specs) = &dir.specs {
+                println!(
+                    "container v3: {} per-tile designed quantizer{}",
+                    specs.len(),
+                    if specs.len() == 1 { "" } else { "s" }
+                );
+            }
+        }
         let pool = ThreadPool::new(threads);
         batch::decode_batched(&bytes, &pool).map_err(anyhow::Error::msg)?
     } else {

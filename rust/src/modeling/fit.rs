@@ -53,6 +53,10 @@ pub fn fit(
         [(lam0 * 2.0).ln(), -std],
         [(lam0 * 0.5).ln(), -0.05 * std],
         [lam0.ln(), 0.1 * std],
+        // Mean-anchored start: scopes whose whole dynamic range sits far
+        // above zero (offset tiles in the per-tile design stage) need
+        // μ ≈ mean, which the zero-neighborhood starts may not reach.
+        [lam0.ln(), sample_mean],
     ];
     let mut best: Option<([f64; 2], f64)> = None;
     for start in starts {
@@ -132,6 +136,27 @@ mod tests {
                 m.input.lambda
             );
             assert!((m.input.mu - mu).abs() < 1e-6, "μ {} vs {mu}", m.input.mu);
+        }
+    }
+
+    #[test]
+    fn fit_roundtrips_offset_scopes() {
+        // Per-tile design scopes can sit entirely above zero (offset
+        // tiles); the mean-anchored restart must recover large-μ models.
+        for &(l, mu) in &[(1.4, 12.0), (0.9, 6.5), (2.2, 20.0)] {
+            let d = AsymmetricLaplace::new(l, mu, 0.5);
+            let pdf = pushforward(&d, Activation::LeakyRelu { slope: 0.1 });
+            let m = fit_leaky(pdf.mean(), pdf.variance()).unwrap();
+            assert!(
+                (m.input.mu - mu).abs() < 1e-4 * mu,
+                "μ {} vs {mu}",
+                m.input.mu
+            );
+            assert!(
+                (m.input.lambda - l).abs() < 1e-4 * l,
+                "λ {} vs {l}",
+                m.input.lambda
+            );
         }
     }
 

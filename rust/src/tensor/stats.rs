@@ -15,6 +15,19 @@ impl TensorStats {
         Self { w: Welford::new() }
     }
 
+    /// Moments of one slice in a single pass (the per-tile design scope
+    /// of [`crate::codec::design`]).
+    pub fn from_slice(xs: &[f32]) -> Self {
+        let mut s = Self::new();
+        s.push_slice(xs);
+        s
+    }
+
+    #[inline]
+    pub fn push(&mut self, v: f32) {
+        self.w.push(v as f64);
+    }
+
     pub fn push_tensor(&mut self, t: &Tensor) {
         for &v in t.data() {
             self.w.push(v as f64);
@@ -65,6 +78,14 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Histogram of one slice over `[lo, hi)` (out-of-range mass lands in
+    /// `below`/`above`, which the ECQ designer places at the clip limits).
+    pub fn from_slice(lo: f64, hi: f64, bins: usize, xs: &[f32]) -> Self {
+        let mut h = Self::new(lo, hi, bins);
+        h.push_slice(xs);
+        h
+    }
+
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Self {

@@ -275,6 +275,93 @@ fn encode_decode_roundtrip_empty_batched() {
 }
 
 #[test]
+fn encode_tile_design_writes_v3_and_decodes() {
+    // `--design model --clip-granularity tile` writes the v3 container
+    // (one designed quantizer per tile); decode is self-describing and
+    // reports the per-tile specs. Heterogeneous input so the design is
+    // non-trivial.
+    let n = 12_288usize;
+    let xs: Vec<f32> = (0..n)
+        .map(|i| {
+            let base = ((i as f32 * 0.377).sin().abs()) * 1.5;
+            base + [0.0f32, 6.0, 12.0][(i / 4096) % 3]
+        })
+        .collect();
+    let input = temp_path("tiledesign.f32");
+    let stream = temp_path("tiledesign.lwfc");
+    let output = temp_path("tiledesign.out.f32");
+    write_f32(&input, &xs);
+
+    let enc = lwfc()
+        .args(["encode", "--input"])
+        .arg(&input)
+        .arg("--output")
+        .arg(&stream)
+        .args(["--levels", "4", "--c-max", "20", "--tile", "4096"])
+        .args(["--design", "model", "--clip-granularity", "tile"])
+        .output()
+        .unwrap();
+    assert!(
+        enc.status.success(),
+        "tile-design encode failed: {}",
+        String::from_utf8_lossy(&enc.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&enc.stdout);
+    assert!(stdout.contains("model design @ tile"), "stdout: {stdout}");
+    let blob = std::fs::read(&stream).unwrap();
+    assert_eq!(&blob[..4], b"LWFB");
+    assert_eq!(blob[4], 3, "per-tile design must write container v3");
+
+    let dec = lwfc()
+        .args(["decode", "--input"])
+        .arg(&stream)
+        .arg("--output")
+        .arg(&output)
+        .output()
+        .unwrap();
+    assert!(
+        dec.status.success(),
+        "tile-design decode failed: {}",
+        String::from_utf8_lossy(&dec.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&dec.stdout);
+    assert!(
+        stdout.contains("per-tile designed quantizer"),
+        "decode stdout: {stdout}"
+    );
+    let got = read_f32(&output);
+    assert_eq!(got.len(), n);
+    // Per-tile ranges track the offsets: each tile's reconstructions stay
+    // near its own support instead of spanning [0, 20].
+    for (t, offset) in [(0usize, 0.0f32), (1, 6.0), (2, 12.0)] {
+        for i in t * 4096..(t + 1) * 4096 {
+            assert!(
+                (got[i] - xs[i]).abs() < 1.2,
+                "tile {t} (offset {offset}) element {i}: {} vs {}",
+                got[i],
+                xs[i]
+            );
+        }
+    }
+
+    // Static design at tile granularity is a usage error.
+    let bad = lwfc()
+        .args(["encode", "--input"])
+        .arg(&input)
+        .arg("--output")
+        .arg(&stream)
+        .args(["--levels", "4", "--c-max", "20"])
+        .args(["--clip-granularity", "tile"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success(), "static tile design must be rejected");
+
+    for p in [input, stream, output] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
 fn serve_and_edge_advertise_network_modes() {
     // `--help` exits non-zero by design (usage goes through the error
     // path); what matters is that the network modes are documented.

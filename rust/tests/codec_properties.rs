@@ -26,7 +26,7 @@ fn roundtrip_is_exactly_fake_quant_for_any_stream() {
         let scale = g.f32_in(0.05, 4.0);
         let xs = g.activation_vec(n, scale);
         let cfg = uniform_cfg(levels, c_max);
-        let q = cfg.quantizer.clone();
+        let q = cfg.quantizer();
         let mut enc = Encoder::new(cfg);
         let stream = enc.encode(&xs);
         let (out, _) = decode(&stream.bytes, n).map_err(|e| e.to_string())?;
@@ -207,7 +207,7 @@ fn batched_decode_equals_sequential_fake_quant_for_any_shape() {
         let scale = g.f32_in(0.1, 2.0);
         let xs = g.activation_vec(n, scale);
         let cfg = uniform_cfg(levels, c_max);
-        let q = cfg.quantizer.clone();
+        let q = cfg.quantizer();
         let pool = ThreadPool::new(threads);
 
         let batched = batch::encode_batched(&cfg, &xs, tile, &pool);
@@ -356,7 +356,7 @@ fn corrupted_payload_is_isolated_to_its_substream() {
         let tile = g.usize_in(64, 1_024);
         let xs = g.activation_vec(n, 0.5);
         let cfg = uniform_cfg(4, 2.0);
-        let q = cfg.quantizer.clone();
+        let q = cfg.quantizer();
         let pool = ThreadPool::new(2);
         let encoded = batch::encode_batched(&cfg, &xs, tile, &pool);
 

@@ -1,0 +1,332 @@
+//! Quantizer design stage, end to end: per-tile container-v3 property
+//! tests (tile-designed decode equals the per-tile fake-quant reference
+//! bit-exactly; corrupted/oversized spec records are container-level
+//! errors), kind-preserving online re-design, and the rate/accuracy
+//! acceptance claim — on a tensor with heterogeneous per-tile dynamic
+//! ranges, per-tile model design beats every global static range that
+//! reaches the same fake-quant MSE.
+
+use lwfc::codec::{
+    batch, decode, design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner,
+    EncoderConfig, EntropyKind, ModelOptimalDesigner, QuantDesigner, QuantKind, QuantSpec,
+    SubstreamDirectory,
+};
+use lwfc::modeling::Activation;
+use lwfc::tensor::stats::TensorStats;
+use lwfc::util::prop::{prop_check, Gen};
+use lwfc::util::threadpool::ThreadPool;
+
+fn base_cfg(levels: usize, c_max: f32) -> EncoderConfig {
+    EncoderConfig::classification(
+        QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max,
+            levels,
+        },
+        32,
+    )
+}
+
+/// A tensor whose tiles have very different dynamic ranges (scales cycle
+/// per tile) — the workload per-tile design exists for.
+fn heterogeneous_tensor(g: &mut Gen, tiles: usize, tile_elems: usize) -> Vec<f32> {
+    let scales = [0.25f32, 1.0, 6.0];
+    let mut xs = Vec::with_capacity(tiles * tile_elems);
+    for t in 0..tiles {
+        xs.extend(g.activation_vec(tile_elems, scales[t % scales.len()]));
+    }
+    xs
+}
+
+fn fake_quant_mse(xs: &[f32], decoded: &[f32]) -> f64 {
+    assert_eq!(xs.len(), decoded.len());
+    xs.iter()
+        .zip(decoded)
+        .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
+        .sum::<f64>()
+        / xs.len().max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Container v3 property tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tile_designed_decode_equals_per_tile_reference() {
+    // For any tensor / tile size / thread count / designer, a v3 container
+    // decodes to exactly what materializing each directory spec and
+    // fake-quantizing its tile's inputs produces — bit-exact, element by
+    // element. This is the per-tile generalization of the batched codec's
+    // reconstruction-parity guarantee.
+    prop_check("tile_designed_reference", 12, |g| {
+        let tile_elems = g.usize_in(64, 1500);
+        let tiles = g.usize_in(1, 6);
+        let levels = g.usize_in(2, 8);
+        let threads = g.usize_in(1, 6);
+        let ecq = g.bool();
+        let xs = heterogeneous_tensor(g, tiles, tile_elems);
+        let pool = ThreadPool::new(threads);
+        let cfg = base_cfg(levels, 4.0);
+        let model = ModelOptimalDesigner {
+            levels,
+            ..ModelOptimalDesigner::leaky(levels)
+        };
+        let designer: Box<dyn QuantDesigner> = if ecq {
+            Box::new(EcqDesigner::new(model))
+        } else {
+            Box::new(model)
+        };
+        let s = batch::encode_batched_designed(&cfg, designer.as_ref(), &xs, tile_elems, &pool);
+
+        let (dir, _) = SubstreamDirectory::read(&s.bytes).map_err(|e| e.to_string())?;
+        let specs = dir.specs.clone().ok_or("designed container must be v3")?;
+        lwfc::prop_assert!(
+            specs.len() == xs.len().div_ceil(tile_elems).max(1),
+            "one spec per tile"
+        );
+        let (out, _) = batch::decode_batched(&s.bytes, &pool).map_err(|e| e.to_string())?;
+        lwfc::prop_assert!(out.len() == xs.len(), "length");
+        for (t, spec) in specs.iter().enumerate() {
+            let q = spec.materialize();
+            let lo = t * tile_elems;
+            let hi = (lo + tile_elems).min(xs.len());
+            for i in lo..hi {
+                lwfc::prop_assert!(
+                    out[i] == q.fake_quant(xs[i]),
+                    "tile {t} element {i}: {} vs {}",
+                    out[i],
+                    q.fake_quant(xs[i])
+                );
+            }
+        }
+        // The designed bytes are deterministic across thread counts.
+        let again =
+            batch::encode_batched_designed(&cfg, designer.as_ref(), &xs, tile_elems, &ThreadPool::new(1));
+        lwfc::prop_assert!(again.bytes == s.bytes, "scheduling-dependent bytes");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupted_spec_records_are_container_errors() {
+    // Any structural corruption of the v3 spec block — truncation, a bad
+    // kind, an oversized level count, a broken range — must fail
+    // SubstreamDirectory::read (and therefore both decode paths) before
+    // any tile is decoded or fill-allocated.
+    prop_check("spec_block_corruption", 10, |g| {
+        let tile_elems = g.usize_in(100, 800);
+        let xs = heterogeneous_tensor(g, 3, tile_elems);
+        let pool = ThreadPool::new(2);
+        let cfg = base_cfg(4, 4.0);
+        let designer = ModelOptimalDesigner::leaky(4);
+        let s = batch::encode_batched_designed(&cfg, &designer, &xs, tile_elems, &pool);
+        let (dir, payload_off) = SubstreamDirectory::read(&s.bytes).map_err(|e| e.to_string())?;
+        let specs_start = dir.encoded_len() - dir.specs.as_ref().unwrap()
+            .iter()
+            .map(|q| q.encoded_len())
+            .sum::<usize>();
+
+        // Truncating anywhere inside the spec block is fatal.
+        let cut = g.usize_in(specs_start, payload_off - 1);
+        lwfc::prop_assert!(
+            SubstreamDirectory::read(&s.bytes[..cut]).is_err(),
+            "cut at {cut} accepted"
+        );
+        // An undefined spec kind is fatal.
+        let mut bad = s.bytes.clone();
+        bad[specs_start] = 0x41;
+        lwfc::prop_assert!(batch::decode_batched(&bad, &pool).is_err(), "bad kind");
+        lwfc::prop_assert!(
+            batch::decode_batched_tolerant(&bad, &pool).is_err(),
+            "tolerant accepted bad kind"
+        );
+        // An oversized ECQ level claim runs the record past the container.
+        let mut bad = s.bytes.clone();
+        bad[specs_start] = 1;
+        bad[specs_start + 1] = 255;
+        lwfc::prop_assert!(
+            batch::decode_batched(&bad, &pool).is_err(),
+            "oversized spec accepted"
+        );
+        // A non-finite clip bound is fatal.
+        let mut bad = s.bytes.clone();
+        bad[specs_start + 6..specs_start + 10].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        lwfc::prop_assert!(
+            batch::decode_batched(&bad, &pool).is_err(),
+            "non-finite range accepted"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn ecq_tile_design_roundtrips_with_in_band_tables() {
+    // Per-tile ECQ: every directory spec is entropy-constrained, the tile
+    // stream headers carry the recon tables, and reconstruction is exact.
+    let mut g = Gen::new("ecq_tiles", 0);
+    let xs = heterogeneous_tensor(&mut g, 4, 3000);
+    let pool = ThreadPool::new(3);
+    let cfg = base_cfg(4, 4.0);
+    let designer = EcqDesigner::new(ModelOptimalDesigner::leaky(4));
+    let s = batch::encode_batched_designed(&cfg, &designer, &xs, 3000, &pool);
+    let (dir, _) = SubstreamDirectory::read(&s.bytes).unwrap();
+    for spec in dir.specs.as_ref().unwrap() {
+        assert_eq!(spec.kind(), QuantKind::EntropyConstrained);
+        assert_eq!(spec.levels(), 4);
+    }
+    let (out, header) = batch::decode_batched(&s.bytes, &pool).unwrap();
+    assert_eq!(header.quant, QuantKind::EntropyConstrained);
+    for (t, spec) in dir.specs.as_ref().unwrap().iter().enumerate() {
+        let q = spec.materialize();
+        for k in 0..3000 {
+            let i = t * 3000 + k;
+            assert_eq!(out[i], q.fake_quant(xs[i]), "tile {t} element {k}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: rate/accuracy win on heterogeneous per-tile ranges
+// ---------------------------------------------------------------------------
+
+/// A tensor whose tiles share scale but sit at different operating points
+/// (offsets) — heterogeneous per-tile *dynamic ranges* with no single
+/// tile dominating the error budget. This is the workload where one
+/// global clip range must stretch across the union of supports while
+/// per-tile design anchors each range at its own tile.
+fn offset_tensor(g: &mut Gen, tiles: usize, tile_elems: usize) -> Vec<f32> {
+    let offsets = [0.0f32, 6.0, 12.0];
+    let mut xs = Vec::with_capacity(tiles * tile_elems);
+    for t in 0..tiles {
+        let o = offsets[t % offsets.len()];
+        xs.extend(g.activation_vec(tile_elems, 0.5).into_iter().map(|x| x + o));
+    }
+    xs
+}
+
+#[test]
+fn tile_model_design_dominates_global_static_at_matched_mse() {
+    // The acceptance claim: on a synthetic tensor with heterogeneous
+    // per-tile dynamic ranges, `--clip-granularity tile --design model`
+    // achieves strictly lower bits/element than the global static range
+    // at equal-or-lower fake-quant MSE. Concretely: sweep global static
+    // operating points (one model-designed range for the whole stream —
+    // today's default encode — at N ∈ 2..=128, both zero-based and
+    // signed ranges); the per-tile N=4 point must sit on the Pareto
+    // frontier — every static point that reaches its MSE spends strictly
+    // more bits, and no static point beats it on both axes.
+    let mut g = Gen::new("rd_acceptance", 0);
+    let tile_elems = 2048;
+    let xs = offset_tensor(&mut g, 6, tile_elems);
+    let pool = ThreadPool::new(4);
+    let cfg = base_cfg(4, 16.0);
+
+    let designer = ModelOptimalDesigner::leaky(4);
+    let tiled = batch::encode_batched_designed(&cfg, &designer, &xs, tile_elems, &pool);
+    let (out, _) = batch::decode_batched(&tiled.bytes, &pool).unwrap();
+    let bpe_tile = tiled.bits_per_element();
+    let mse_tile = fake_quant_mse(&xs, &out);
+    // The per-tile design must actually have designed something: specs
+    // anchored at three different offsets.
+    let (dir, _) = SubstreamDirectory::read(&tiled.bytes).unwrap();
+    let specs = dir.specs.unwrap();
+    assert!(
+        specs[2].c_min() > specs[1].c_min() + 2.0
+            && specs[1].c_min() > specs[0].c_min() + 2.0,
+        "per-tile ranges should track the offsets: {specs:?}"
+    );
+
+    let stats = TensorStats::from_slice(&xs);
+    let mut matched_any = false;
+    for levels in [2usize, 4, 8, 16, 32, 64, 128] {
+        for signed in [false, true] {
+            // A global static range: the same model over whole-tensor
+            // statistics, encoded as today's default single stream.
+            let global = ModelOptimalDesigner {
+                levels,
+                signed_cmin: signed,
+                ..ModelOptimalDesigner::leaky(levels)
+            }
+            .design(&stats, &xs)
+            .expect("global design");
+            let q = global.materialize();
+            let mut enc =
+                lwfc::codec::Encoder::new(base_cfg(levels, 16.0).with_quant(global.clone()));
+            let s = enc.encode(&xs);
+            let bpe_s = s.bits_per_element();
+            let mse_s = xs
+                .iter()
+                .map(|&x| (x as f64 - q.fake_quant(x) as f64).powi(2))
+                .sum::<f64>()
+                / xs.len() as f64;
+            if mse_s <= mse_tile {
+                matched_any = true;
+                assert!(
+                    bpe_s > bpe_tile,
+                    "global static N={levels} (signed={signed}) dominates tile design: \
+                     {bpe_s:.4} bits/elem at mse {mse_s:.6} vs tile {bpe_tile:.4} at {mse_tile:.6}"
+                );
+            }
+        }
+    }
+    assert!(
+        matched_any,
+        "no global static point reached the tile-design MSE {mse_tile:.6} — \
+         comparison is vacuous, widen the static sweep"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Designer plumbing end to end (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_design_matches_designer_output() {
+    // `design_or` + a single-stream encode is exactly what the CLI's
+    // `--design model --clip-granularity stream` path runs.
+    let mut g = Gen::new("stream_design", 0);
+    let xs = g.activation_vec(20_000, 1.5);
+    let base = QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 9.0,
+        levels: 4,
+    };
+    let designer = designer_for(
+        DesignKind::Model,
+        &base,
+        Activation::LeakyRelu { slope: 0.1 },
+        0.5,
+    );
+    let spec = design_or(designer.as_ref(), &xs, &base);
+    assert_ne!(spec, base, "designer should improve on the hand-picked range");
+    let mut enc = lwfc::codec::Encoder::new(
+        EncoderConfig::classification(spec.clone(), 32).with_entropy(EntropyKind::Rans),
+    );
+    let s = enc.encode(&xs);
+    let (decoded, header) = decode(&s.bytes, xs.len()).unwrap();
+    assert_eq!(header.entropy, EntropyKind::Rans);
+    assert_eq!(header.levels, spec.levels());
+    let q = spec.materialize();
+    for (i, (&x, &y)) in xs.iter().zip(&decoded).enumerate() {
+        assert_eq!(y, q.fake_quant(x), "element {i}");
+    }
+}
+
+#[test]
+fn granularity_and_design_parse_roundtrip() {
+    for (s, k) in [
+        ("static", DesignKind::Static),
+        ("model", DesignKind::Model),
+        ("ecq", DesignKind::Ecq),
+    ] {
+        assert_eq!(DesignKind::parse(s).unwrap(), k);
+        assert_eq!(k.name(), s);
+    }
+    for (s, gnl) in [
+        ("stream", ClipGranularity::Stream),
+        ("tile", ClipGranularity::Tile),
+    ] {
+        assert_eq!(ClipGranularity::parse(s).unwrap(), gnl);
+        assert_eq!(gnl.name(), s);
+    }
+}

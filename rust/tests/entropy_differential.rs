@@ -277,7 +277,7 @@ mod tcp_path {
                 } else {
                     EntropyKind::Cabac
                 };
-                let q = cfg(want).quantizer;
+                let q = cfg(want).quantizer();
                 let expect: Vec<f32> =
                     tensor_for(item.image_index).iter().map(|&x| q.fake_quant(x)).collect();
                 out.push(Outcome {

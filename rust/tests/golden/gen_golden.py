@@ -428,6 +428,81 @@ def self_check():
 
 
 # --------------------------------------------------------------------------
+# Batched container (port of rust/src/codec/{header,batch}.rs).
+# --------------------------------------------------------------------------
+
+def fnv1a(data):
+    h = 0x811C9DC5
+    for b in data:
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def spec_record_uniform(cmin, cmax, levels):
+    return bytes([0, levels]) + struct.pack("<f", cmin) + struct.pack("<f", cmax)
+
+
+def spec_record_ecq(cmin, cmax, recon, thresholds):
+    out = bytearray([1, len(recon)])
+    out += struct.pack("<f", cmin)
+    out += struct.pack("<f", cmax)
+    for r in recon:
+        out += struct.pack("<f", r)
+    for t in thresholds:
+        out += struct.pack("<f", t)
+    return bytes(out)
+
+
+def container_bytes(tiles, entropy_id=0, specs=None):
+    """tiles: [(elements, payload_bytes)]; specs: v3 per-tile spec records
+    (None = v2, byte-identical to the pre-v3 writer)."""
+    out = bytearray(b"LWFB")
+    out.append(3 if specs is not None else 2)
+    out.append(entropy_id)
+    out += struct.pack("<I", len(tiles))
+    out += struct.pack("<Q", sum(e for e, _ in tiles))
+    for e, p in tiles:
+        out += struct.pack("<I", e)
+        out += struct.pack("<I", len(p))
+        out += struct.pack("<I", fnv1a(p))
+    if specs is not None:
+        for srec in specs:
+            out += srec
+    for _, p in tiles:
+        out += p
+    return bytes(out)
+
+
+def container_self_check(blob, tile_plan):
+    """Re-parse a generated container and decode every tile back to the
+    expected indices. tile_plan: [(indices, levels, head_len)]."""
+    assert blob[:4] == b"LWFB"
+    version = blob[4]
+    count = struct.unpack_from("<I", blob, 6)[0]
+    total = struct.unpack_from("<Q", blob, 10)[0]
+    assert count == len(tile_plan)
+    entries = []
+    off = 18
+    for _ in range(count):
+        e, bl, ck = struct.unpack_from("<III", blob, off)
+        entries.append((e, bl, ck))
+        off += 12
+    if version >= 3:
+        for _ in range(count):  # skip self-delimiting spec records
+            kind, levels = blob[off], blob[off + 1]
+            off += 10 + (levels * 4 + (levels - 1) * 4 if kind == 1 else 0)
+    assert total == sum(e for e, _, _ in entries)
+    for (e, bl, ck), (idx, levels, head_len) in zip(entries, tile_plan):
+        payload = blob[off:off + bl]
+        off += bl
+        assert e == len(idx) and ck == fnv1a(payload)
+        got = decode_stream_indices(payload[head_len:], levels, len(idx))
+        assert got == idx, "container tile mis-decodes"
+    assert off == len(blob)
+
+
+# --------------------------------------------------------------------------
 # Fixture generation.
 # --------------------------------------------------------------------------
 
@@ -452,12 +527,19 @@ def gen_inputs(seed, n, boundaries, lo, hi, margin=1e-3):
     return out
 
 
+# Generated fixture bytes, keyed by filename. In write mode they are
+# saved to disk; in --check mode they are byte-compared against the
+# committed files (CI runs this so the fixtures stay executably verified).
+OUTPUTS = {}
+
+
+def emit(name, blob):
+    OUTPUTS[name] = bytes(blob)
+
+
 def write_fixture(stem, values, stream):
-    with open(stem + ".f32", "wb") as f:
-        for v in values:
-            f.write(struct.pack("<f", v))
-    with open(stem + ".lwfc", "wb") as f:
-        f.write(stream)
+    emit(stem + ".f32", b"".join(struct.pack("<f", v) for v in values))
+    emit(stem + ".lwfc", stream)
     print(f"{stem}: {len(values)} elements -> {len(stream)} bytes")
 
 
@@ -466,12 +548,66 @@ def write_rans_fixture(stem, idx, levels, head):
     rans_<stem>.lwfc with the backend-1 header."""
     stream = head + rans_encode_payload(idx, levels)
     assert rans_decode_payload(stream[len(head):], levels, len(idx)) == idx
-    with open("rans_" + stem + ".lwfc", "wb") as f:
-        f.write(stream)
+    emit("rans_" + stem + ".lwfc", stream)
     print(f"rans_{stem}: {len(idx)} elements -> {len(stream)} bytes")
 
 
-def main():
+def gen_containers(xs, img):
+    """Container fixtures over the uniform_n4 input values `xs`:
+
+    * batch_v2_uniform_n4.lwfb — spec-less v2 container, 4 uniform tiles.
+      Pins that the refactored encode path still writes v2 byte-identically
+      (the Rust test re-encodes and compares).
+    * batch_v3_mixed.lwfb — v3 container whose directory carries one quant
+      spec per tile (two different uniform ranges + one ECQ with in-band
+      tables). Pins the v3 layout and the per-tile decode semantics.
+    """
+    n = len(xs)
+
+    # ---- v2: uniform [0,6] N=4, tile 128 -> 4 tiles ----------------------
+    c_min, c_max, levels, tile = 0.0, 6.0, 4, 128
+    tiles = []
+    plan = []
+    for lo in range(0, n, tile):
+        part = xs[lo:lo + tile]
+        idx = [uniform_index(x, c_min, c_max, levels) for x in part]
+        head = header_bytes(0, levels, c_min, c_max, img)
+        tiles.append((len(part), encode_stream(idx, levels, head)))
+        plan.append((idx, levels, len(head)))
+    blob = container_bytes(tiles)
+    container_self_check(blob, plan)
+    emit("batch_v2_uniform_n4.lwfb", blob)
+    print(f"batch_v2_uniform_n4: {n} elements -> {len(blob)} bytes")
+
+    # ---- v3: per-tile quant specs (200 + 200 + 112 elements) -------------
+    recon = [0.0, 1.0, 2.5, 6.0]
+    thresholds = [0.5, 1.75, 4.25]
+    cuts = [(0, 200), (200, 400), (400, n)]
+    tile_specs = [
+        ("uniform", 0.0, 6.0),
+        ("uniform", 0.0, 2.0),
+        ("ecq", 0.0, 6.0),
+    ]
+    tiles, plan, specs = [], [], []
+    for (lo, hi), (kind, cm, cx) in zip(cuts, tile_specs):
+        part = xs[lo:hi]
+        if kind == "uniform":
+            idx = [uniform_index(x, cm, cx, 4) for x in part]
+            head = header_bytes(0, 4, cm, cx, img)
+            specs.append(spec_record_uniform(cm, cx, 4))
+        else:
+            idx = [ecq_index(x, recon, thresholds, cm, cx) for x in part]
+            head = header_bytes(1, 4, cm, cx, img, recon)
+            specs.append(spec_record_ecq(cm, cx, recon, thresholds))
+        tiles.append((len(part), encode_stream(idx, 4, head)))
+        plan.append((idx, 4, len(head)))
+    blob = container_bytes(tiles, specs=specs)
+    container_self_check(blob, plan)
+    emit("batch_v3_mixed.lwfb", blob)
+    print(f"batch_v3_mixed: {n} elements -> {len(blob)} bytes")
+
+
+def main(check=False):
     self_check()
 
     n = 512
@@ -520,6 +656,38 @@ def main():
         "ecq_n4", idx, levels, header_bytes(1, levels, c_min, c_max, img, recon, backend=1)
     )
 
+    # ---- batched container fixtures (v2 spec-less + v3 per-tile specs),
+    # built over the uniform_n4 input values --------------------------------
+    xs_n4 = gen_inputs(42, n, [1.0, 3.0, 5.0], 0.0, 6.0)
+    gen_containers(xs_n4, img)
+
+    # ---- write or verify --------------------------------------------------
+    import os
+    here = os.path.dirname(os.path.abspath(__file__))
+    failures = []
+    for name, blob in OUTPUTS.items():
+        path = os.path.join(here, name)
+        if check:
+            try:
+                with open(path, "rb") as f:
+                    on_disk = f.read()
+            except FileNotFoundError:
+                failures.append(f"{name}: missing on disk")
+                continue
+            if on_disk != blob:
+                failures.append(
+                    f"{name}: committed fixture differs from generator output "
+                    f"({len(on_disk)} vs {len(blob)} bytes)"
+                )
+        else:
+            with open(path, "wb") as f:
+                f.write(blob)
+    if check:
+        if failures:
+            raise SystemExit("FIXTURE CHECK FAILED:\n  " + "\n  ".join(failures))
+        print(f"fixture check passed ({len(OUTPUTS)} files byte-identical)")
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(check="--check" in sys.argv[1:])

@@ -219,6 +219,94 @@ fn golden_vectors_exercise_every_level() {
 }
 
 #[test]
+fn golden_v2_container_encode_and_decode_are_pinned() {
+    // The spec-less batched container must keep writing version 2
+    // byte-identically through the design-stage refactor: re-encoding the
+    // uniform_n4 input with the same config reproduces the committed
+    // fixture exactly, and the fixture decodes to element-wise fake-quant.
+    use lwfc::codec::{batch, EncoderConfig, SubstreamDirectory};
+    use lwfc::util::threadpool::ThreadPool;
+    let xs = f32_le(include_bytes!("golden/uniform_n4.f32"));
+    let expected = include_bytes!("golden/batch_v2_uniform_n4.lwfb");
+    let q = UniformQuantizer::new(0.0, 6.0, 4);
+    let cfg = EncoderConfig::classification(Quantizer::Uniform(q), 32);
+    let pool = ThreadPool::new(3);
+    let s = batch::encode_batched(&cfg, &xs, 128, &pool);
+    assert_eq!(
+        s.bytes, expected,
+        "batch_v2: container bytes diverge from the golden vector — the \
+         v2 wire format changed. If intentional, regenerate tests/golden/ \
+         via gen_golden.py and bump the container version."
+    );
+    let (dir, _) = SubstreamDirectory::read(expected).unwrap();
+    assert_eq!(expected[4], 2, "spec-less containers are version 2");
+    assert!(dir.specs.is_none());
+    assert_eq!(dir.entries.len(), 4);
+    let (out, header) = batch::decode_batched(expected, &pool).unwrap();
+    assert_eq!(header.levels, 4);
+    for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+        assert_eq!(y, q.fake_quant(x), "batch_v2 element {i}");
+    }
+}
+
+#[test]
+fn golden_v3_container_decodes_per_tile_specs() {
+    // The v3 fixture (written by gen_golden.py's independent port) carries
+    // three tiles under three different quantizers — two uniform ranges
+    // and one ECQ with in-band tables. The directory specs must parse to
+    // exactly those quantizers, and decode must equal per-tile fake-quant
+    // of the committed input.
+    use lwfc::codec::{batch, NonUniformQuantizer, QuantSpec, SubstreamDirectory};
+    use lwfc::util::threadpool::ThreadPool;
+    let xs = f32_le(include_bytes!("golden/uniform_n4.f32"));
+    let blob = include_bytes!("golden/batch_v3_mixed.lwfb");
+    assert_eq!(blob[4], 3, "per-tile fixture is container v3");
+    let (dir, _) = SubstreamDirectory::read(blob).unwrap();
+    let specs = dir.specs.as_ref().expect("v3 carries specs");
+    let want = [
+        QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 6.0,
+            levels: 4,
+        },
+        QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 2.0,
+            levels: 4,
+        },
+        QuantSpec::EntropyConstrained(NonUniformQuantizer {
+            recon: vec![0.0, 1.0, 2.5, 6.0],
+            thresholds: vec![0.5, 1.75, 4.25],
+            c_min: 0.0,
+            c_max: 6.0,
+        }),
+    ];
+    assert_eq!(specs[..], want[..]);
+    let pool = ThreadPool::new(2);
+    let (out, _) = batch::decode_batched(blob, &pool).unwrap();
+    assert_eq!(out.len(), xs.len());
+    let bounds = [(0usize, 200usize), (200, 400), (400, 512)];
+    for (spec, (lo, hi)) in want.iter().zip(bounds) {
+        let q = spec.materialize();
+        for i in lo..hi {
+            assert_eq!(out[i], q.fake_quant(xs[i]), "element {i}");
+        }
+    }
+    // Tolerant decode of a corrupted middle tile fills with that tile's
+    // own spec c_min and leaves the others exact.
+    let (dir2, payload_off) = SubstreamDirectory::read(blob).unwrap();
+    let mut bad = blob.to_vec();
+    let t1_off = payload_off + dir2.entries[0].byte_len as usize;
+    bad[t1_off + 14] ^= 0x3C; // inside tile 1's payload
+    assert!(batch::decode_batched(&bad, &pool).is_err());
+    let (vals, report) = batch::decode_batched_tolerant(&bad, &pool).unwrap();
+    assert_eq!(report.corrupted, vec![1]);
+    assert_eq!(vals[200], 0.0, "fill from tile 1's spec c_min");
+    assert_eq!(vals[..200], out[..200]);
+    assert_eq!(vals[400..], out[400..]);
+}
+
+#[test]
 fn golden_streams_reject_truncation() {
     let bytes = include_bytes!("golden/uniform_n4.lwfc");
     assert!(decode(&bytes[..8], 512).is_err(), "truncated header accepted");

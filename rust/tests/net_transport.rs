@@ -58,7 +58,7 @@ fn encode_item(image_index: u64, pool: &ThreadPool) -> (Vec<u8>, usize) {
 /// the fake-quantized source tensor.
 fn verify_item(bytes: &[u8], elements: usize, image_index: u64, pool: &ThreadPool) -> Result<bool> {
     let (values, _) = decode_any(bytes, elements, pool).map_err(anyhow::Error::msg)?;
-    let q = enc_config().quantizer;
+    let q = enc_config().quantizer();
     let expect: Vec<f32> = tensor_for(image_index).iter().map(|&x| q.fake_quant(x)).collect();
     Ok(values == expect)
 }

@@ -195,6 +195,8 @@ fn serving_pipeline_end_to_end() {
             entropy: lwfc::codec::EntropyKind::Cabac,
             val_seed: m.val_seed,
             batch: m.serve_batch,
+            design: lwfc::codec::DesignKind::Static,
+            granularity: lwfc::codec::ClipGranularity::Stream,
             adaptive: None,
             threads: 2,
         },
@@ -253,6 +255,8 @@ fn detect_pipeline_end_to_end() {
             entropy: lwfc::codec::EntropyKind::Rans,
             val_seed: m.val_seed,
             batch: m.serve_batch,
+            design: lwfc::codec::DesignKind::Static,
+            granularity: lwfc::codec::ClipGranularity::Stream,
             adaptive: None,
             threads: 2,
         },
