@@ -9,12 +9,12 @@
 //!
 //! Run: `make artifacts && cargo run --release --example adaptive_stream`
 
-use lwfc::codec::{Encoder, EncoderConfig, QuantSpec};
 use lwfc::coordinator::{kind_preserving_designer, AdaptiveConfig, OnlineDesignController};
 use lwfc::data;
 use lwfc::modeling::{fit_leaky, optimal_cmax};
 use lwfc::runtime::{Manifest, Runtime};
 use lwfc::tensor::Tensor;
+use lwfc::{CodecBuilder, QuantSpec};
 
 const LEVELS: usize = 4;
 
@@ -37,8 +37,16 @@ fn main() -> anyhow::Result<()> {
         c_max: c0 as f32,
         levels: LEVELS,
     };
-    let mut static_enc = Encoder::new(EncoderConfig::classification(spec0.clone(), 32));
-    let mut adaptive_enc = Encoder::new(EncoderConfig::classification(spec0.clone(), 32));
+    // Two sessions, one static and one re-designed online via
+    // `Codec::set_quant`; both decode with a reused buffer.
+    let session = |spec: QuantSpec| {
+        CodecBuilder::new(spec)
+            .image_size(32)
+            .expect_elements(per_item)
+            .build()
+    };
+    let mut static_enc = session(spec0.clone());
+    let mut adaptive_enc = session(spec0.clone());
     let acfg = AdaptiveConfig {
         levels: LEVELS,
         refit_every: 32,
@@ -72,17 +80,17 @@ fn main() -> anyhow::Result<()> {
 
             for (which, enc) in [&mut static_enc, &mut adaptive_enc].into_iter().enumerate() {
                 let mut recon = vec![0.0f32; b * per_item];
+                let mut vals = Vec::new();
                 for i in 0..b {
                     let item = &scaled[i * per_item..(i + 1) * per_item];
                     if which == 1 {
                         if let Some(spec) = controller.observe(item) {
-                            enc.config.quant = spec;
+                            enc.set_quant(spec);
                         }
                     }
                     let stream = enc.encode(item);
                     bits[which] += stream.bits_per_element();
-                    let (vals, _) =
-                        lwfc::codec::decode(&stream.bytes, per_item).map_err(anyhow::Error::msg)?;
+                    enc.decode_into(&stream.bytes, &mut vals)?;
                     recon[i * per_item..(i + 1) * per_item].copy_from_slice(&vals);
                 }
                 // Undo the gain before the cloud half (receiver-side AGC),

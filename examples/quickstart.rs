@@ -8,10 +8,11 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::UniformQuantizer;
 use lwfc::modeling::{fit_leaky, optimal_cmax};
 use lwfc::runtime::{Manifest, Runtime};
 use lwfc::tensor::Tensor;
+use lwfc::CodecBuilder;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(&Manifest::default_dir())?;
@@ -39,10 +40,15 @@ fn main() -> anyhow::Result<()> {
     let clip = optimal_cmax(&model.pdf, 0.0, levels);
     println!("model-optimal clip range for N={levels}: [0, {:.4}]", clip.c_max);
 
-    // 4. Encode -> bit-stream -> decode.
+    // 4. One codec session: encode -> bit-stream -> decode. The session
+    //    owns backend + scratch; `expect_elements` is the decode contract
+    //    for the non-self-describing single-stream format.
     let q = UniformQuantizer::new(0.0, clip.c_max as f32, levels);
-    let mut enc = Encoder::new(EncoderConfig::classification(Quantizer::Uniform(q), 32));
-    let stream = enc.encode(item);
+    let mut codec = CodecBuilder::new(q)
+        .image_size(32)
+        .expect_elements(item.len())
+        .build();
+    let stream = codec.encode(item);
     println!(
         "encoded {} elements -> {} bytes = {:.3} bits/element (12-byte header included)",
         stream.elements,
@@ -50,10 +56,11 @@ fn main() -> anyhow::Result<()> {
         stream.bits_per_element()
     );
 
-    let (decoded, header) = decode(&stream.bytes, item.len()).map_err(anyhow::Error::msg)?;
+    let decoded = codec.decode(&stream.bytes)?;
+    let header = decoded.info.header.as_ref().expect("clean decode has a header");
     let mse: f64 = item
         .iter()
-        .zip(&decoded)
+        .zip(&decoded.values)
         .map(|(&a, &b)| ((a - b) as f64).powi(2))
         .sum::<f64>()
         / n;

@@ -4,11 +4,12 @@
 //! measured on the same feature-map-like tensors.
 
 use lwfc::baseline::{HevcLikeConfig, HevcLikeEncoder};
-use lwfc::codec::{Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::UniformQuantizer;
 use lwfc::tensor::mosaic::{mosaic, PixelRange};
 use lwfc::tensor::Tensor;
 use lwfc::util::bench::{black_box, Bench};
 use lwfc::util::prop::Gen;
+use lwfc::CodecBuilder;
 
 fn main() {
     let mut b = Bench::new();
@@ -19,10 +20,11 @@ fn main() {
     let t = Tensor::new(&[h, w, c], xs.clone());
     let range = PixelRange::of(&t);
 
-    let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, 4));
-    let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
+    let mut codec = CodecBuilder::new(UniformQuantizer::new(0.0, 1.5, 4))
+        .image_size(32)
+        .build();
     b.run("lightweight/encode", Some(n as u64), || {
-        black_box(enc.encode(&xs).bytes.len())
+        black_box(codec.encode(&xs).bytes.len())
     });
 
     for (label, ts) in [("ts", true), ("dct_only", false)] {

@@ -1,21 +1,39 @@
 //! Lightweight-codec throughput: full encode (clip+quant+TU+entropy) and
 //! decode, per level count, on activation-like tensors — plus the tiled
 //! batched codec on a paper-scale 256x56x56 tensor, single-thread vs
-//! N-thread, and a CABAC-vs-rANS backend comparison (throughput and
-//! bits/element) on the same tensor. This is the L3 hot path.
+//! N-thread, a CABAC-vs-rANS backend comparison (throughput and
+//! bits/element), and the serving hot path's `decode_into` buffer reuse
+//! vs a fresh allocation per decode. This is the L3 hot path, exercised
+//! through the `Codec` façade (the API the serving layer uses).
 //!
 //! Writes a machine-readable baseline to `BENCH_codec.json` (override the
 //! path with `LWFC_BENCH_JSON`; set it to `-` to skip the write) so later
 //! PRs have a perf trajectory to compare against.
 
 use lwfc::codec::{
-    batch, decode, design_ecq, EcqParams, Encoder, EncoderConfig, EntropyKind,
-    ModelOptimalDesigner, QuantDesigner, Quantizer, UniformQuantizer,
+    design_ecq, EcqParams, EntropyKind, ModelOptimalDesigner, QuantDesigner, UniformQuantizer,
+    DEFAULT_TILE_ELEMS,
 };
 use lwfc::util::bench::{black_box, Bench};
 use lwfc::util::json::{num, s, Json};
 use lwfc::util::prop::Gen;
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{Codec, CodecBuilder, QuantSpec};
+
+fn uniform(levels: usize, c_max: f32) -> QuantSpec {
+    QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max,
+        levels,
+    }
+}
+
+fn session(quant: impl Into<QuantSpec>, threads: usize, elements: usize) -> Codec {
+    CodecBuilder::new(quant)
+        .image_size(32)
+        .threads(threads)
+        .expect_elements(elements)
+        .build()
+}
 
 fn main() {
     let mut b = Bench::new();
@@ -25,20 +43,18 @@ fn main() {
 
     println!("-- encode (8192-element split tensor) --");
     for levels in [2usize, 4, 8] {
-        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, levels));
-        let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
+        let mut codec = session(uniform(levels, 1.5), 1, n);
         b.run(&format!("encode/n{levels}"), Some(n as u64), || {
-            black_box(enc.encode(&xs).bytes.len())
+            black_box(codec.encode(&xs).bytes.len())
         });
     }
 
     println!("-- decode --");
     for levels in [2usize, 4, 8] {
-        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, levels));
-        let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
-        let stream = enc.encode(&xs);
+        let mut codec = session(uniform(levels, 1.5), 1, n);
+        let stream = codec.encode(&xs);
         b.run(&format!("decode/n{levels}"), Some(n as u64), || {
-            black_box(decode(&stream.bytes, n).unwrap().0.len())
+            black_box(codec.decode(&stream.bytes).unwrap().values.len())
         });
     }
 
@@ -69,69 +85,77 @@ fn main() {
     // ---- batched codec: 256x56x56 tensor, thread scaling ----------------
     let big_n = 256 * 56 * 56; // 802,816 elements — the acceptance tensor
     let big = g.activation_vec(big_n, 0.3);
-    let cfg = EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, 4)),
-        32,
-    );
 
     println!("-- batched encode (256x56x56, N=4) --");
     for threads in [1usize, 2, 4, 8] {
-        let pool = ThreadPool::new(threads);
+        let mut codec = batched_session(threads, big_n);
         b.run(
             &format!("batched_encode/t{threads}"),
             Some(big_n as u64),
-            || {
-                black_box(
-                    batch::encode_batched(&cfg, &big, batch::DEFAULT_TILE_ELEMS, &pool)
-                        .bytes
-                        .len(),
-                )
-            },
+            || black_box(codec.encode(&big).bytes.len()),
         );
     }
 
     println!("-- batched decode (256x56x56, N=4) --");
-    let encoded = batch::encode_batched(&cfg, &big, batch::DEFAULT_TILE_ELEMS, &ThreadPool::new(4));
+    let encoded = batched_session(4, big_n).encode(&big);
     for threads in [1usize, 2, 4, 8] {
-        let pool = ThreadPool::new(threads);
+        let mut codec = batched_session(threads, big_n);
         b.run(
             &format!("batched_decode/t{threads}"),
             Some(big_n as u64),
-            || black_box(batch::decode_batched(&encoded.bytes, &pool).unwrap().0.len()),
+            || black_box(codec.decode(&encoded.bytes).unwrap().values.len()),
         );
+    }
+
+    // ---- serving hot path: decode_into buffer reuse vs fresh alloc ------
+    println!("-- decode_into reuse vs per-call allocation (t4 container, N=4) --");
+    {
+        let mut codec = batched_session(4, big_n);
+        b.run("decode_alloc/n4", Some(big_n as u64), || {
+            black_box(codec.decode(&encoded.bytes).unwrap().values.len())
+        });
+        let mut codec = batched_session(4, big_n);
+        let mut buf: Vec<f32> = Vec::new();
+        b.run("decode_into_reuse/n4", Some(big_n as u64), || {
+            codec.decode_into(&encoded.bytes, &mut buf).unwrap();
+            black_box(buf.len())
+        });
     }
 
     // ---- entropy backends head to head (256x56x56, N=4) -----------------
     println!("-- entropy backends (256x56x56, N=4, single stream) --");
     let mut bpe = std::collections::BTreeMap::new();
     for kind in [EntropyKind::Cabac, EntropyKind::Rans] {
-        let kcfg = cfg.clone().with_entropy(kind);
-        let mut enc = Encoder::new(kcfg);
+        let mut codec = CodecBuilder::new(uniform(4, 1.5))
+            .image_size(32)
+            .entropy(kind)
+            .expect_elements(big_n)
+            .build();
         b.run(&format!("entropy_encode/{kind}"), Some(big_n as u64), || {
-            black_box(enc.encode(&big).bytes.len())
+            black_box(codec.encode(&big).bytes.len())
         });
-        let stream = enc.encode(&big);
+        let stream = codec.encode(&big);
         bpe.insert(kind.to_string(), stream.bits_per_element());
         println!("   {kind}: {:.4} bits/element", stream.bits_per_element());
         b.run(&format!("entropy_decode/{kind}"), Some(big_n as u64), || {
-            black_box(decode(&stream.bytes, big_n).unwrap().0.len())
+            black_box(codec.decode(&stream.bytes).unwrap().values.len())
         });
     }
 
     println!("-- batched rans (256x56x56, N=4) --");
-    let rans_cfg = cfg.clone().with_entropy(EntropyKind::Rans);
     for threads in [1usize, 4] {
-        let pool = ThreadPool::new(threads);
+        // force_container: the t1 row must measure the container format
+        // (like the CABAC rows), not the single-stream fallback.
+        let mut codec = CodecBuilder::new(uniform(4, 1.5))
+            .image_size(32)
+            .entropy(EntropyKind::Rans)
+            .threads(threads)
+            .force_container()
+            .build();
         b.run(
             &format!("batched_encode_rans/t{threads}"),
             Some(big_n as u64),
-            || {
-                black_box(
-                    batch::encode_batched(&rans_cfg, &big, batch::DEFAULT_TILE_ELEMS, &pool)
-                        .bytes
-                        .len(),
-                )
-            },
+            || black_box(codec.encode(&big).bytes.len()),
         );
     }
 
@@ -140,14 +164,13 @@ fn main() {
     // tensor whose tiles sit at heterogeneous operating points — the
     // workload the design stage exists for -------------------------------
     println!("-- quantizer design (offset-heterogeneous 48-tile tensor, N=4) --");
-    let tile_elems = batch::DEFAULT_TILE_ELEMS;
+    let tile_elems = DEFAULT_TILE_ELEMS;
     let offsets = [0.0f32, 6.0, 12.0];
     let mut hetero = Vec::with_capacity(48 * tile_elems);
     for t in 0..48 {
         let o = offsets[t % offsets.len()];
         hetero.extend(g.activation_vec(tile_elems, 0.5).into_iter().map(|x| x + o));
     }
-    let pool4 = ThreadPool::new(4);
     let mse_of = |decoded: &[f32]| -> f64 {
         hetero
             .iter()
@@ -166,23 +189,23 @@ fn main() {
     .design(&stats, &hetero)
     .expect("global design");
     let gq = global.materialize();
-    let static_cfg = EncoderConfig::classification(global, 32);
-    let mut enc = Encoder::new(static_cfg.clone());
-    let static_stream = enc.encode(&hetero);
+    let mut static_codec = session(global.clone(), 1, hetero.len());
+    let static_stream = static_codec.encode(&hetero);
     let bpe_static = static_stream.bits_per_element();
     let mse_static = mse_of(&hetero.iter().map(|&x| gq.fake_quant(x)).collect::<Vec<_>>());
 
-    let designer = ModelOptimalDesigner::leaky(4);
+    let mut tile_codec = CodecBuilder::new(global.clone())
+        .image_size(32)
+        .threads(4)
+        .tile_elems(tile_elems)
+        .tile_designer(Box::new(ModelOptimalDesigner::leaky(4)))
+        .build();
     b.run("design_encode/tile_model", Some(hetero.len() as u64), || {
-        black_box(
-            batch::encode_batched_designed(&static_cfg, &designer, &hetero, tile_elems, &pool4)
-                .bytes
-                .len(),
-        )
+        black_box(tile_codec.encode(&hetero).bytes.len())
     });
-    let tiled = batch::encode_batched_designed(&static_cfg, &designer, &hetero, tile_elems, &pool4);
+    let tiled = tile_codec.encode(&hetero);
     let bpe_tile = tiled.bits_per_element();
-    let mse_tile = mse_of(&batch::decode_batched(&tiled.bytes, &pool4).unwrap().0);
+    let mse_tile = mse_of(&tile_codec.decode(&tiled.bytes).unwrap().values);
     println!(
         "   static global range (single stream): {bpe_static:.4} bits/element, mse {mse_static:.6}\n   \
          per-tile model design (container v3): {bpe_tile:.4} bits/element, mse {mse_tile:.6}"
@@ -201,8 +224,7 @@ fn main() {
         .design(&stats, &hetero)
         .expect("global design");
         let dq = d.materialize();
-        let mut encn = Encoder::new(EncoderConfig::classification(d, 32));
-        let stream_n = encn.encode(&hetero);
+        let stream_n = session(d, 1, hetero.len()).encode(&hetero);
         let msen = mse_of(&hetero.iter().map(|&x| dq.fake_quant(x)).collect::<Vec<_>>());
         if msen <= mse_tile {
             matched = Some((levels, stream_n.bits_per_element(), msen));
@@ -233,6 +255,9 @@ fn main() {
     }
     if let Some(sx) = speedup("batched_decode/t1", "batched_decode/t4") {
         println!("batched decode speedup t4 vs t1: {sx:.2}x");
+    }
+    if let Some(sx) = speedup("decode_alloc/n4", "decode_into_reuse/n4") {
+        println!("decode_into buffer-reuse speedup vs fresh alloc: {sx:.2}x");
     }
 
     // ---- machine-readable baseline --------------------------------------
@@ -266,6 +291,12 @@ fn main() {
                 "rans_decode_speedup_vs_cabac",
                 speedup("entropy_decode/cabac", "entropy_decode/rans").map_or(Json::Null, num),
             ),
+            // Serving hot path: fresh-allocation decode over reused-buffer
+            // decode_into (> 1.0 means the reuse wins).
+            (
+                "decode_into_reuse_speedup",
+                speedup("decode_alloc/n4", "decode_into_reuse/n4").map_or(Json::Null, num),
+            ),
             (
                 "bits_per_element_cabac",
                 bpe.get("cabac").copied().map_or(Json::Null, num),
@@ -289,4 +320,26 @@ fn main() {
             Err(e) => eprintln!("could not write {json_path}: {e}"),
         }
     }
+}
+
+/// A batched session: always the tiled container (the pool has
+/// `threads` workers; the container format does not depend on the pool,
+/// so `t1` measures single-worker container throughput, not the
+/// single-stream format).
+fn batched_session(threads: usize, elements: usize) -> Codec {
+    // `threads(1)` would select the single-stream format; a tile designer
+    // also forces the container, but changes the bytes. The honest t1
+    // container measurement drives the same engine with a 1-worker pool —
+    // which `.threads(1)` cannot express — so we pin the container format
+    // with `.force_container()`.
+    CodecBuilder::new(QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 1.5,
+        levels: 4,
+    })
+    .image_size(32)
+    .threads(threads)
+    .force_container()
+    .expect_elements(elements)
+    .build()
 }

@@ -2,47 +2,58 @@
 //!
 //! Part 1 (always runs): the codec leg of the pipeline — batched encode →
 //! wire bytes → batched decode on a paper-scale 256x56x56 feature tensor,
-//! single-thread vs N-thread, reporting the scaling curve.
+//! single-thread vs N-thread, reporting the scaling curve — plus a
+//! serve-loop simulation of the cloud worker's steady state (decode a
+//! stream of wire items) comparing a fresh allocation per item against
+//! the `Codec::decode_into` reused buffer.
 //!
 //! Part 2 (needs `make artifacts`; skips cleanly otherwise): the full
 //! serving stack (edge fwd → encode → queue → decode → cloud fwd),
 //! requests/s across edge-worker and codec-thread counts.
 
-use lwfc::codec::{batch, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer};
+use lwfc::codec::EntropyKind;
 use lwfc::coordinator::{
     serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
 };
 use lwfc::runtime::Manifest;
 use lwfc::util::bench::{black_box, Bench};
 use lwfc::util::prop::Gen;
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{Codec, CodecBuilder};
+
+fn batched_session(entropy: EntropyKind, threads: usize) -> Codec {
+    CodecBuilder::new(QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 1.5,
+        levels: 4,
+    })
+    .image_size(32)
+    .entropy(entropy)
+    .threads(threads)
+    .force_container()
+    .build()
+}
 
 fn codec_pipeline_bench() {
     let mut b = Bench::new();
     let mut g = Gen::new("e2e_codec_pipeline", 0);
     let elements = 256 * 56 * 56; // the acceptance tensor: 256 x 56 x 56
     let xs = g.activation_vec(elements, 0.3);
-    let cfg = EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, 1.5, 4)),
-        32,
-    );
 
     println!("-- batched encode+decode round-trip (256x56x56) --");
     for entropy in [EntropyKind::Cabac, EntropyKind::Rans] {
-        let ecfg = cfg.clone().with_entropy(entropy);
         for threads in [1usize, 2, 4, 8] {
-            let pool = ThreadPool::new(threads);
+            let mut codec = batched_session(entropy, threads);
             b.run(
                 &format!("roundtrip_{entropy}/t{threads}"),
                 Some(elements as u64),
                 || {
-                    let s = batch::encode_batched(&ecfg, &xs, batch::DEFAULT_TILE_ELEMS, &pool);
-                    let (out, _) = batch::decode_batched(&s.bytes, &pool).unwrap();
-                    black_box(out.len())
+                    let s = codec.encode(&xs);
+                    let out = codec.decode(&s.bytes).unwrap();
+                    black_box(out.values.len())
                 },
             );
         }
-        let s = batch::encode_batched(&ecfg, &xs, batch::DEFAULT_TILE_ELEMS, &ThreadPool::new(4));
+        let s = batched_session(entropy, 4).encode(&xs);
         println!("   {entropy}: {:.4} bits/element on the wire", s.bits_per_element());
     }
     for entropy in ["cabac", "rans"] {
@@ -59,6 +70,45 @@ fn codec_pipeline_bench() {
     }
     if let (Some(c), Some(r)) = (b.find("roundtrip_cabac/t4"), b.find("roundtrip_rans/t4")) {
         println!("rANS round-trip speedup vs CABAC (t4) = {:.2}x", c.median_s / r.median_s);
+    }
+
+    // ---- serve-loop steady state: the cloud worker's decode leg ---------
+    // A fleet of wire items (8 distinct tensors, cycled) decoded back to
+    // back, the way `CloudWorker::process` drains a batch: `serve_alloc`
+    // builds a fresh output vector per item (the pre-façade behavior),
+    // `serve_reuse` drains the same items through one `decode_into`
+    // scratch buffer.
+    println!("-- serve-loop decode: fresh alloc vs decode_into reuse (t4) --");
+    let item_elems = 64 * 56 * 56;
+    let items: Vec<Vec<u8>> = (0..8u64)
+        .map(|i| {
+            let tensor = Gen::new("e2e_serve_items", i).activation_vec(item_elems, 0.3);
+            batched_session(EntropyKind::Cabac, 4).encode(&tensor).bytes
+        })
+        .collect();
+    let mut codec = batched_session(EntropyKind::Cabac, 4);
+    b.run("serve_decode_alloc/t4", Some((8 * item_elems) as u64), || {
+        let mut total = 0usize;
+        for bytes in &items {
+            total += codec.decode(bytes).unwrap().values.len();
+        }
+        black_box(total)
+    });
+    let mut codec = batched_session(EntropyKind::Cabac, 4);
+    let mut scratch: Vec<f32> = Vec::new();
+    b.run("serve_decode_reuse/t4", Some((8 * item_elems) as u64), || {
+        let mut total = 0usize;
+        for bytes in &items {
+            codec.decode_into(bytes, &mut scratch).unwrap();
+            total += scratch.len();
+        }
+        black_box(total)
+    });
+    if let (Some(a), Some(r)) = (b.find("serve_decode_alloc/t4"), b.find("serve_decode_reuse/t4")) {
+        println!(
+            "serve-loop decode_into reuse speedup = {:.2}x",
+            a.median_s / r.median_s
+        );
     }
 }
 

@@ -1,0 +1,767 @@
+//! The unified `Codec` façade — the one public API of the lightweight
+//! codec.
+//!
+//! The paper's pitch is *simplicity*; four generations of growth
+//! (batching, entropy backends, quantizer design) had spread the public
+//! surface over ~10 free functions with per-call allocations and stringly
+//! errors. This module collapses them into a builder-configured session:
+//!
+//! ```no_run
+//! use lwfc::{Codec, CodecBuilder, QuantSpec};
+//!
+//! let mut codec: Codec = CodecBuilder::new(QuantSpec::Uniform {
+//!     c_min: 0.0,
+//!     c_max: 6.0,
+//!     levels: 4,
+//! })
+//! .threads(4)
+//! .expect_elements(802_816)
+//! .build();
+//!
+//! let encoded = codec.encode(&vec![0.5f32; 802_816]);
+//! let mut buf = Vec::new();
+//! // Serving hot path: the output buffer is reused across calls, and
+//! // container tiles decode in parallel straight into disjoint slots of
+//! // it — the output is sized once, never concatenated per tile.
+//! let info = codec.decode_into(&encoded.bytes, &mut buf).unwrap();
+//! assert_eq!(info.elements, 802_816);
+//! ```
+//!
+//! A [`Codec`] owns its thread pool, entropy backend, and scratch
+//! buffers; its configuration is immutable after [`CodecBuilder::build`]
+//! except through [`Codec::set_quant`] (the online re-design path), so a
+//! stream's header and payload can never describe different quantizers
+//! or backends. Format detection (legacy single stream vs. container
+//! v1–v3, CABAC vs. rANS) is internal — see [`sniff`], the one
+//! implementation every ingest path shares.
+
+#![deny(missing_docs)]
+
+use super::batch::{
+    decode_container_into, encode_batched_designed_impl, encode_batched_designed_to_impl,
+    encode_batched_impl, encode_batched_to_impl, max_elems_per_payload_byte, MAX_PREALLOC_ELEMS,
+};
+use super::design::{designer_for, DesignKind, QuantDesigner, QuantSpec};
+use super::entropy::EntropyKind;
+use super::error::CodecError;
+use super::header::{is_batched, DetInfo, Header};
+use super::stream::{
+    decode_indices_impl, decode_stream_into, decode_stream_owned, Encoder, EncoderConfig,
+};
+use crate::modeling::Activation;
+use crate::util::threadpool::ThreadPool;
+
+// ---------------------------------------------------------------------------
+// Format sniffing
+
+/// Wire-format family of a byte buffer, by magic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamFormat {
+    /// A standalone bit-stream (the paper's 12/24-byte header + payload).
+    /// Not self-describing: the element count comes from the caller.
+    SingleStream,
+    /// An `LWFB` multi-substream container (self-describing).
+    Container {
+        /// Container version byte: 1–3 in any valid container (3 carries
+        /// per-tile quant specs). A buffer carrying only the 4-byte magic
+        /// reports 0 here ("too short to tell"); the decoder rejects such
+        /// fragments as truncated either way.
+        version: u8,
+    },
+}
+
+/// What [`sniff`] learned about a byte buffer without decoding it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FormatInfo {
+    /// Single stream or batched container.
+    pub format: StreamFormat,
+    /// The entropy backend the bytes advertise. For a single stream this
+    /// is read from the header bits that *select the decoder* (byte 0,
+    /// bits 6–7 — authoritative); for a container it is the prelude's
+    /// advisory claim (each tile's own header re-states it
+    /// authoritatively). `None` when the bytes are too short or carry an
+    /// undefined id.
+    pub entropy: Option<EntropyKind>,
+    /// The element-count plausibility bound (elements per payload byte)
+    /// that validation of this buffer must use — see
+    /// [`crate::codec::batch::MAX_ELEMS_PER_PAYLOAD_BYTE_CABAC`]. The
+    /// rule, applied identically by the wire frame reader, the container
+    /// directory validator, and the per-tile re-check: **authoritative**
+    /// header bits pick the tight per-backend bound; **advisory** bits
+    /// (a container prelude — it never selects a decoder) fall back to
+    /// the conservative worst case over backends.
+    pub plausibility_bound: u64,
+}
+
+/// Classify a byte buffer: single stream vs. container (by magic), which
+/// entropy backend it advertises, and which plausibility bound its
+/// element claims must satisfy. This is the **only** format/backend
+/// sniffer — the cloud ingest path, the wire-frame validator in
+/// `coordinator::net`, and the container decoder all call it, so the
+/// same header bits drive every path.
+pub fn sniff(bytes: &[u8]) -> FormatInfo {
+    if is_batched(bytes) {
+        let version = bytes.get(4).copied().unwrap_or(0);
+        let entropy = bytes.get(5).and_then(|&b| EntropyKind::from_id(b).ok());
+        FormatInfo {
+            format: StreamFormat::Container { version },
+            entropy,
+            // The prelude byte is advisory — tiles carry their own
+            // authoritative header, re-checked tile by tile before their
+            // decoder runs — so container-scope validation gets the
+            // conservative bound.
+            plausibility_bound: max_elems_per_payload_byte(None),
+        }
+    } else {
+        let entropy = bytes.first().and_then(|&b| EntropyKind::from_id(b >> 6).ok());
+        FormatInfo {
+            format: StreamFormat::SingleStream,
+            entropy,
+            // Byte 0 selects the decoder that will actually run: its
+            // backend's tight bound applies.
+            plausibility_bound: max_elems_per_payload_byte(entropy),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+
+/// Fluent builder for a [`Codec`] session.
+///
+/// Everything is chosen up front — quantizer spec, entropy backend, tile
+/// size, threads, per-tile designer, tolerance policy — and frozen at
+/// [`CodecBuilder::build`]. Migration from the deprecated free
+/// functions: `encode_batched(cfg, data, tile, pool)` becomes
+/// `CodecBuilder::new(spec).threads(n).tile_elems(tile).build().encode(data)`,
+/// and `decode_any(bytes, elements, pool)` becomes
+/// `...expect_elements(elements).build().decode(bytes)`.
+pub struct CodecBuilder {
+    config: EncoderConfig,
+    tile_elems: usize,
+    threads: usize,
+    tile_designer: Option<Box<dyn QuantDesigner>>,
+    tolerant: bool,
+    expect_elements: Option<usize>,
+    force_container: bool,
+}
+
+impl CodecBuilder {
+    /// Start a builder for a classification stream under `quant` (a
+    /// [`QuantSpec`], or anything convertible — a `Quantizer`, a
+    /// `UniformQuantizer`, a `NonUniformQuantizer`).
+    pub fn new(quant: impl Into<QuantSpec>) -> Self {
+        Self {
+            config: EncoderConfig::classification(quant, 0),
+            tile_elems: super::batch::DEFAULT_TILE_ELEMS,
+            threads: 1,
+            tile_designer: None,
+            tolerant: false,
+            expect_elements: None,
+            force_container: false,
+        }
+    }
+
+    /// Source-image side length recorded in the stream header (the
+    /// paper's 32/64-px synthetic inputs; purely informational).
+    pub fn image_size(mut self, px: u8) -> Self {
+        self.config.img_w = px;
+        self.config.img_h = px;
+        self
+    }
+
+    /// Mark the stream as an object-detection stream carrying `det`
+    /// (network input + feature dims for bounding-box back-projection;
+    /// the header grows to the paper's 24-byte detection layout).
+    pub fn detection(mut self, det: DetInfo) -> Self {
+        self.config.kind = super::header::StreamKind::Detection;
+        self.config.det = Some(det);
+        self
+    }
+
+    /// Entropy backend for encoded payloads (default CABAC — the paper's
+    /// coder; decode always auto-detects from the stream itself).
+    pub fn entropy(mut self, kind: EntropyKind) -> Self {
+        self.config.entropy = kind;
+        self
+    }
+
+    /// Tile size (elements) for the batched container format.
+    pub fn tile_elems(mut self, n: usize) -> Self {
+        self.tile_elems = n.max(1);
+        self
+    }
+
+    /// Worker threads for tile-parallel encode/decode. With `n > 1` (or
+    /// a per-tile designer) `encode` writes the tiled `LWFB` container;
+    /// with `n == 1` it writes the legacy single stream. Decode accepts
+    /// both regardless.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Design one quantizer per container tile with `designer`
+    /// (container v3): tensors with heterogeneous per-tile dynamic
+    /// ranges stop paying for one global clip range.
+    pub fn tile_designer(mut self, designer: Box<dyn QuantDesigner>) -> Self {
+        self.tile_designer = Some(designer);
+        self
+    }
+
+    /// Convenience over [`CodecBuilder::tile_designer`]: build the
+    /// standard designer for `kind` (sized from the configured spec,
+    /// modeled on `activation`/`kappa` — see
+    /// [`crate::codec::design::designer_for`]).
+    /// [`DesignKind::Static`] clears any designer (today's behavior: the
+    /// configured spec everywhere, no v3 spec block).
+    pub fn design(mut self, kind: DesignKind, activation: Activation, kappa: f64) -> Self {
+        self.tile_designer = match kind {
+            DesignKind::Static => None,
+            _ => Some(designer_for(kind, &self.config.quant, activation, kappa)),
+        };
+        self
+    }
+
+    /// Tolerance policy for container decode: when `true`, corrupted
+    /// tiles are filled with their spec's clip minimum and reported as
+    /// typed [`CodecError`]s in [`DecodeInfo::failures`] instead of
+    /// failing the whole tensor. Strict (`false`) is the default.
+    pub fn tolerant(mut self, yes: bool) -> Self {
+        self.tolerant = yes;
+        self
+    }
+
+    /// Write the self-describing tiled container even with one worker
+    /// thread (by default a single-threaded session writes the legacy
+    /// single stream). The container layout is scheduling-independent,
+    /// so the bytes equal a multi-threaded session's.
+    pub fn force_container(mut self) -> Self {
+        self.force_container = true;
+        self
+    }
+
+    /// Element count this session expects per decoded tensor. Required
+    /// to decode legacy single streams (they are not self-describing);
+    /// for containers it is cross-checked against the directory claim
+    /// before anything decodes (the cloud ingest guard).
+    pub fn expect_elements(mut self, n: usize) -> Self {
+        self.expect_elements = Some(n);
+        self
+    }
+
+    /// Freeze the configuration into a reusable [`Codec`] session.
+    pub fn build(self) -> Codec {
+        let batched = self.threads > 1 || self.tile_designer.is_some() || self.force_container;
+        Codec {
+            pool: ThreadPool::new(self.threads),
+            encoder: Encoder::new(self.config),
+            tile_elems: self.tile_elems,
+            batched,
+            tile_designer: self.tile_designer,
+            tolerant: self.tolerant,
+            expect_elements: self.expect_elements,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session object
+
+/// A reusable codec session: one encoder + thread pool + scratch, shared
+/// by every encode/decode it performs. Build with [`CodecBuilder`].
+///
+/// Sessions are cheap to keep per worker (the xla handles never touch
+/// this type, and everything inside is `Send`), and long-lived by
+/// design: the decode paths write into caller-reused buffers and the
+/// encoder reuses its entropy-stage scratch, so steady-state serving
+/// performs no per-item output allocation beyond what the tensors
+/// actually need.
+pub struct Codec {
+    encoder: Encoder,
+    pool: ThreadPool,
+    tile_elems: usize,
+    batched: bool,
+    tile_designer: Option<Box<dyn QuantDesigner>>,
+    tolerant: bool,
+    expect_elements: Option<usize>,
+}
+
+/// An encoded tensor: the wire bytes plus accounting.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    /// The bit-stream — a legacy single stream or an `LWFB` container,
+    /// depending on the session configuration.
+    pub bytes: Vec<u8>,
+    /// Source tensor element count.
+    pub elements: usize,
+    /// Container substream count (1 for a single stream).
+    pub substreams: usize,
+}
+
+impl Encoded {
+    /// Bits per feature-tensor element *including* all side info — the
+    /// paper's rate metric (§IV).
+    pub fn bits_per_element(&self) -> f64 {
+        self.bytes.len() as f64 * 8.0 / self.elements.max(1) as f64
+    }
+}
+
+/// Accounting for [`Codec::encode_to`] (the bytes land in the caller's
+/// buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeInfo {
+    /// Source tensor element count.
+    pub elements: usize,
+    /// Container substream count (1 for a single stream).
+    pub substreams: usize,
+    /// Bytes written into the output buffer.
+    pub bytes_written: usize,
+}
+
+impl EncodeInfo {
+    /// Bits per element including all side info.
+    pub fn bits_per_element(&self) -> f64 {
+        self.bytes_written as f64 * 8.0 / self.elements.max(1) as f64
+    }
+}
+
+/// A decoded tensor plus everything the decode learned.
+#[derive(Clone, Debug)]
+pub struct Decoded {
+    /// The reconstructed values.
+    pub values: Vec<f32>,
+    /// Format/backend/corruption accounting (see [`DecodeInfo`]).
+    pub info: DecodeInfo,
+}
+
+/// What a decode learned about the stream, beyond the values.
+#[derive(Clone, Debug)]
+pub struct DecodeInfo {
+    /// Stream header. For containers this is the **first successfully
+    /// decoded** substream's header — tile 0's on a clean decode; under
+    /// a tolerant decode with a corrupt leading tile, the first healthy
+    /// one's (a v3 container's tiles may each carry their own designed
+    /// quantizer, so treat it as representative, not authoritative).
+    /// `None` only when a tolerant decode salvaged no tile at all.
+    pub header: Option<Header>,
+    /// Decoded element count.
+    pub elements: usize,
+    /// Container substream count (1 for a single stream).
+    pub substreams: usize,
+    /// Per-tile designed quantizers the container carried (v3; 0
+    /// otherwise).
+    pub designed_tiles: usize,
+    /// The entropy backend that decoded the stream (from the same header
+    /// as [`DecodeInfo::header`]).
+    pub entropy: Option<EntropyKind>,
+    /// Tolerant mode only: the typed, tile-attributed failure of every
+    /// corrupted substream (ascending by tile). Empty means a clean
+    /// decode. Classify by variant — e.g.
+    /// `matches!(f, CodecError::ChecksumMismatch { .. })` — not by
+    /// message text.
+    pub failures: Vec<CodecError>,
+}
+
+impl DecodeInfo {
+    /// True when every substream decoded.
+    pub fn is_clean(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Indexes of the corrupted substreams (ascending).
+    pub fn corrupted_tiles(&self) -> Vec<usize> {
+        self.failures.iter().filter_map(CodecError::tile).collect()
+    }
+}
+
+impl Codec {
+    /// Start building a session (alias for [`CodecBuilder::new`]).
+    pub fn builder(quant: impl Into<QuantSpec>) -> CodecBuilder {
+        CodecBuilder::new(quant)
+    }
+
+    /// The quantizer spec this session currently encodes with.
+    pub fn quant_spec(&self) -> &QuantSpec {
+        &self.encoder.config().quant
+    }
+
+    /// The entropy backend this session encodes with (decode always
+    /// auto-detects).
+    pub fn entropy(&self) -> EntropyKind {
+        self.encoder.config().entropy
+    }
+
+    /// Whether `encode` writes the tiled container format (threads > 1
+    /// or a per-tile designer configured).
+    pub fn encodes_container(&self) -> bool {
+        self.batched
+    }
+
+    /// Whether every container tile gets its own freshly designed
+    /// quantizer (container v3).
+    pub fn has_tile_designer(&self) -> bool {
+        self.tile_designer.is_some()
+    }
+
+    /// Swap in a freshly designed quantizer spec — the sanctioned
+    /// mutation for online (windowed) re-design. Spec and materialized
+    /// quantizer update atomically; everything else stays frozen.
+    pub fn set_quant(&mut self, quant: impl Into<QuantSpec>) {
+        self.encoder.set_quant(quant);
+    }
+
+    /// Encode one feature tensor. Format follows the session config:
+    /// single stream, tiled container, or per-tile-designed container v3
+    /// — deterministic bytes in every mode (scheduling never leaks into
+    /// the output).
+    pub fn encode(&mut self, data: &[f32]) -> Encoded {
+        if let Some(designer) = &self.tile_designer {
+            let s = encode_batched_designed_impl(
+                self.encoder.config(),
+                designer.as_ref(),
+                data,
+                self.tile_elems,
+                &self.pool,
+            );
+            Encoded {
+                bytes: s.bytes,
+                elements: s.elements,
+                substreams: s.substreams,
+            }
+        } else if self.batched {
+            let s = encode_batched_impl(self.encoder.config(), data, self.tile_elems, &self.pool);
+            Encoded {
+                bytes: s.bytes,
+                elements: s.elements,
+                substreams: s.substreams,
+            }
+        } else {
+            let s = self.encoder.encode(data);
+            Encoded {
+                bytes: s.bytes,
+                elements: s.elements,
+                substreams: 1,
+            }
+        }
+    }
+
+    /// Encode into a caller-owned buffer, which is cleared and refilled
+    /// in place — its capacity is reused across calls in both modes
+    /// (single stream and container), so steady-state encoding does not
+    /// allocate the output buffer per item.
+    pub fn encode_to(&mut self, data: &[f32], out: &mut Vec<u8>) -> EncodeInfo {
+        out.clear();
+        let substreams = if let Some(designer) = &self.tile_designer {
+            encode_batched_designed_to_impl(
+                self.encoder.config(),
+                designer.as_ref(),
+                data,
+                self.tile_elems,
+                &self.pool,
+                out,
+            )
+        } else if self.batched {
+            encode_batched_to_impl(self.encoder.config(), data, self.tile_elems, &self.pool, out)
+        } else {
+            self.encoder.encode_into(data, out);
+            1
+        };
+        EncodeInfo {
+            elements: data.len(),
+            substreams,
+            bytes_written: out.len(),
+        }
+    }
+
+    /// Decode either wire format into a fresh buffer. Containers are
+    /// self-describing; a legacy single stream needs
+    /// [`CodecBuilder::expect_elements`]. With `expect_elements` set,
+    /// container claims are cross-checked *before* anything decodes (the
+    /// cloud ingest guard).
+    pub fn decode(&mut self, bytes: &[u8]) -> Result<Decoded, CodecError> {
+        let mut values = Vec::new();
+        let info = self.decode_append(bytes, &mut values)?;
+        Ok(Decoded { values, info })
+    }
+
+    /// Decode either wire format into `out`, which is cleared first and
+    /// refilled in place — the serving hot path. The buffer's capacity
+    /// is reused across calls, and container tiles decode in parallel
+    /// straight into disjoint slots of it: the output is sized once and
+    /// never concatenated per tile, so steady-state decode performs no
+    /// per-item *output* allocation. (Each tile still builds its small
+    /// decoder scratch — a backend instance and its reconstruction
+    /// table — exactly as the pre-façade decoder did.) `decode_into` is
+    /// bit-identical to [`Codec::decode`] for every input (pinned by the
+    /// equivalence property tests).
+    pub fn decode_into(
+        &mut self,
+        bytes: &[u8],
+        out: &mut Vec<f32>,
+    ) -> Result<DecodeInfo, CodecError> {
+        out.clear();
+        self.decode_append(bytes, out)
+    }
+
+    fn decode_append(
+        &mut self,
+        bytes: &[u8],
+        out: &mut Vec<f32>,
+    ) -> Result<DecodeInfo, CodecError> {
+        match sniff(bytes).format {
+            StreamFormat::Container { .. } => {
+                // `expect_elements` is enforced inside the engine, after
+                // directory validation and before anything decodes — the
+                // hot path parses the directory exactly once.
+                let d = decode_container_into(
+                    bytes,
+                    &self.pool,
+                    self.tolerant,
+                    self.expect_elements,
+                    out,
+                )?;
+                // Engine invariant: `d.header` is always `Some` on a
+                // strict `Ok`; `None` only for a tolerant decode that
+                // salvaged nothing.
+                Ok(DecodeInfo {
+                    entropy: d.header.as_ref().map(|h| h.entropy),
+                    elements: d.elements,
+                    substreams: d.substreams,
+                    designed_tiles: d.designed_tiles,
+                    failures: d.failures,
+                    header: d.header,
+                })
+            }
+            StreamFormat::SingleStream => {
+                let elements = self.expect_elements.ok_or_else(|| {
+                    CodecError::invalid(
+                        "decoding a legacy single stream needs CodecBuilder::expect_elements \
+                         (the format is not self-describing)",
+                    )
+                })?;
+                let base = out.len();
+                let header = if elements <= MAX_PREALLOC_ELEMS {
+                    out.resize(base + elements, 0.0);
+                    match decode_stream_into(bytes, &mut out[base..]) {
+                        Ok(h) => h,
+                        Err(e) => {
+                            out.truncate(base);
+                            return Err(e);
+                        }
+                    }
+                } else {
+                    // An untrusted count past the pre-allocation cap:
+                    // decode through the growing path so the allocation
+                    // only happens as real data materializes.
+                    let (values, h) = decode_stream_owned(bytes, elements)?;
+                    out.extend_from_slice(&values);
+                    h
+                };
+                Ok(DecodeInfo {
+                    entropy: Some(header.entropy),
+                    elements,
+                    substreams: 1,
+                    designed_tiles: 0,
+                    failures: Vec::new(),
+                    header: Some(header),
+                })
+            }
+        }
+    }
+
+    /// Decode a single stream to quantizer *indices* (analysis tools and
+    /// tests; containers decode per tile and have no single index
+    /// stream). Needs [`CodecBuilder::expect_elements`].
+    pub fn decode_indices(&mut self, bytes: &[u8]) -> Result<(Vec<u16>, Header), CodecError> {
+        if is_batched(bytes) {
+            return Err(CodecError::invalid(
+                "decode_indices reads single streams; decode containers per tile",
+            ));
+        }
+        let elements = self.expect_elements.ok_or_else(|| {
+            CodecError::invalid("decode_indices needs CodecBuilder::expect_elements")
+        })?;
+        decode_indices_impl(bytes, elements)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{Quantizer, UniformQuantizer};
+    use crate::util::prop::Gen;
+
+    fn spec(levels: usize, c_max: f32) -> QuantSpec {
+        QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max,
+            levels,
+        }
+    }
+
+    #[test]
+    fn session_roundtrips_both_formats() {
+        let mut g = Gen::new("api_roundtrip", 0);
+        let xs = g.activation_vec(10_000, 0.5);
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4));
+
+        for threads in [1usize, 4] {
+            let mut codec = CodecBuilder::new(spec(4, 2.0))
+                .threads(threads)
+                .tile_elems(2048)
+                .expect_elements(xs.len())
+                .build();
+            let encoded = codec.encode(&xs);
+            assert_eq!(encoded.substreams, if threads == 1 { 1 } else { 5 });
+            let decoded = codec.decode(&encoded.bytes).unwrap();
+            assert_eq!(decoded.values.len(), xs.len());
+            for (i, (&x, &y)) in xs.iter().zip(&decoded.values).enumerate() {
+                assert_eq!(y, q.fake_quant(x), "threads={threads} element {i}");
+            }
+            assert!(decoded.info.is_clean());
+            assert_eq!(decoded.info.substreams, encoded.substreams);
+
+            // decode_into is bit-identical and reuses the buffer.
+            let mut buf = vec![9.0f32; 17];
+            let info = codec.decode_into(&encoded.bytes, &mut buf).unwrap();
+            assert_eq!(buf, decoded.values);
+            assert_eq!(info.elements, xs.len());
+        }
+    }
+
+    #[test]
+    fn encode_to_reuses_buffer_and_matches_encode() {
+        let mut g = Gen::new("api_encode_to", 1);
+        let xs = g.activation_vec(5_000, 0.5);
+        let mut codec = CodecBuilder::new(spec(4, 2.0)).build();
+        let encoded = codec.encode(&xs);
+        let mut buf = vec![0xAAu8; 4];
+        let info = codec.encode_to(&xs, &mut buf);
+        assert_eq!(buf, encoded.bytes);
+        assert_eq!(info.bytes_written, encoded.bytes.len());
+        assert_eq!(info.substreams, 1);
+        // Batched mode produces the container either way.
+        let mut codec4 = CodecBuilder::new(spec(4, 2.0)).threads(4).build();
+        let enc4 = codec4.encode(&xs);
+        let mut buf4 = Vec::new();
+        let info4 = codec4.encode_to(&xs, &mut buf4);
+        assert_eq!(buf4, enc4.bytes);
+        assert_eq!(info4.substreams, enc4.substreams);
+    }
+
+    #[test]
+    fn single_stream_decode_requires_expected_count() {
+        let mut g = Gen::new("api_expect", 2);
+        let xs = g.activation_vec(512, 0.5);
+        let mut codec = CodecBuilder::new(spec(4, 2.0)).build();
+        let encoded = codec.encode(&xs);
+        let err = codec.decode(&encoded.bytes).unwrap_err();
+        assert!(matches!(err, CodecError::Invalid { .. }), "{err:?}");
+
+        // Containers are self-describing with or without the hint, but a
+        // configured hint is enforced against the claim.
+        let mut batched = CodecBuilder::new(spec(4, 2.0)).threads(2).build();
+        let enc = batched.encode(&xs);
+        assert!(batched.decode(&enc.bytes).is_ok());
+        let mut strict = CodecBuilder::new(spec(4, 2.0))
+            .threads(2)
+            .expect_elements(xs.len() + 1)
+            .build();
+        assert!(matches!(
+            strict.decode(&enc.bytes),
+            Err(CodecError::ElementCountMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn sniff_classifies_and_bounds_consistently() {
+        let mut g = Gen::new("api_sniff", 3);
+        let xs = g.activation_vec(1_000, 0.5);
+
+        let mut single = CodecBuilder::new(spec(4, 2.0)).build();
+        let s = single.encode(&xs);
+        let fi = sniff(&s.bytes);
+        assert_eq!(fi.format, StreamFormat::SingleStream);
+        assert_eq!(fi.entropy, Some(EntropyKind::Cabac));
+        assert_eq!(fi.plausibility_bound, 16_384, "authoritative CABAC bits");
+
+        let mut rans = CodecBuilder::new(spec(4, 2.0))
+            .entropy(EntropyKind::Rans)
+            .build();
+        let r = rans.encode(&xs);
+        assert_eq!(sniff(&r.bytes).entropy, Some(EntropyKind::Rans));
+        assert_eq!(sniff(&r.bytes).plausibility_bound, 32_768);
+
+        let mut batched = CodecBuilder::new(spec(4, 2.0)).threads(2).build();
+        let b = batched.encode(&xs);
+        let fi = sniff(&b.bytes);
+        assert_eq!(fi.format, StreamFormat::Container { version: 2 });
+        assert_eq!(fi.entropy, Some(EntropyKind::Cabac));
+        assert_eq!(
+            fi.plausibility_bound, 32_768,
+            "container prelude is advisory: conservative bound"
+        );
+
+        // Garbage: single-stream family, unknown backend, worst case.
+        let fi = sniff(&[0xC0, 1, 2, 3]);
+        assert_eq!(fi.format, StreamFormat::SingleStream);
+        assert_eq!(fi.entropy, None);
+        assert_eq!(fi.plausibility_bound, 32_768);
+        assert_eq!(sniff(&[]).entropy, None);
+    }
+
+    #[test]
+    fn tolerant_session_reports_typed_tile_failures() {
+        let mut g = Gen::new("api_tolerant", 4);
+        let xs = g.activation_vec(8_192, 0.5);
+        let mut codec = CodecBuilder::new(spec(4, 2.0))
+            .threads(2)
+            .tile_elems(1024)
+            .build();
+        let encoded = codec.encode(&xs);
+        let mut bad = encoded.bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x3C;
+
+        // Strict session refuses...
+        let err = codec.decode(&bad).unwrap_err();
+        assert!(err.is_tile_local(), "corruption localized: {err:?}");
+        // ...tolerant session fills and classifies.
+        let mut tolerant = CodecBuilder::new(spec(4, 2.0))
+            .threads(2)
+            .tile_elems(1024)
+            .tolerant(true)
+            .build();
+        let mut buf = Vec::new();
+        let info = tolerant.decode_into(&bad, &mut buf).unwrap();
+        assert_eq!(buf.len(), xs.len());
+        assert_eq!(info.corrupted_tiles(), vec![7]);
+        assert!(matches!(
+            info.failures[0],
+            CodecError::ChecksumMismatch { tile: Some(7), .. }
+        ));
+        assert!(!info.is_clean());
+        assert_eq!(info.substreams, 8);
+    }
+
+    #[test]
+    fn set_quant_redesigns_atomically() {
+        let mut g = Gen::new("api_requant", 5);
+        let xs = g.activation_vec(4_096, 0.5);
+        let mut codec = CodecBuilder::new(spec(4, 2.0))
+            .expect_elements(xs.len())
+            .build();
+        let a = codec.encode(&xs);
+        codec.set_quant(spec(8, 3.0));
+        assert_eq!(codec.quant_spec().levels(), 8);
+        let b = codec.encode(&xs);
+        let decoded = codec.decode(&b.bytes).unwrap();
+        assert_eq!(decoded.info.header.as_ref().unwrap().levels, 8);
+        // And the original stream still decodes as written.
+        assert_eq!(
+            codec.decode(&a.bytes).unwrap().info.header.unwrap().levels,
+            4
+        );
+    }
+}

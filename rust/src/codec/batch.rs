@@ -22,14 +22,20 @@
 //!   (config, data, tile size), never on thread scheduling: workers write
 //!   into per-tile slots by index.
 //! * **Corruption isolation** — each substream carries its own checksum in
-//!   the directory; [`decode_batched_tolerant`] decodes the healthy tiles
-//!   and reports the corrupted ones instead of failing the whole tensor.
+//!   the directory; the tolerant decode path decodes the healthy tiles
+//!   and reports the corrupted ones (as typed [`CodecError`]s) instead of
+//!   failing the whole tensor.
+//!
+//! The public entry point is the [`crate::codec::api::Codec`] façade; the
+//! free functions here are deprecated compatibility shims over the same
+//! `pub(crate)` engine.
 
 use super::design::{design_or, QuantDesigner, QuantSpec};
-use super::header::{
-    is_batched, substream_checksum, SubstreamDirectory, SubstreamEntry,
+use super::error::CodecError;
+use super::header::{is_batched, substream_checksum, SubstreamDirectory, SubstreamEntry};
+use super::stream::{
+    decode_stream_into, decode_stream_owned, EncodedStream, Encoder, EncoderConfig,
 };
-use super::stream::{decode as decode_stream, EncodedStream, Encoder, EncoderConfig};
 use crate::codec::Header;
 use crate::util::threadpool::ThreadPool;
 
@@ -51,17 +57,25 @@ pub(crate) const MAX_PREALLOC_ELEMS: usize = 16 * 1024 * 1024;
 /// CABAC claim beyond 16384× the payload bytes is a crafted count; the
 /// static rANS tables bottom out at log2(4096/4095) ≈ 0.00035 bits/bin
 /// (~22,700 elements/byte for a fully skewed 1-bit code), bounded by
-/// 32768×. Enforced *before* any decode or fill allocation — both the
-/// strict and the tolerant container path reject violations outright (a
-/// tolerant fill of `entry.elements` values would otherwise let one
-/// crafted entry allocate up to 4 Gi floats) — and reused by
-/// `coordinator::net` to vet element counts arriving off the wire before
-/// they reach a decoder. Validation picks the tight bound when it can
-/// see the backend (tile header, frame advertisement) and falls back to
-/// the worst case over backends when it cannot; CABAC matters most here
-/// because its decoder has no integrity check and will happily fabricate
-/// the whole claimed count.
+/// 32768×. Enforced *before* any decode or fill allocation, at every
+/// scope the element claims pass through — the wire frame, the container
+/// directory, and each tile.
+///
+/// Which bound applies is decided by [`crate::codec::api::sniff`], the
+/// one format/backend sniffer: **authoritative** header bits (a single
+/// stream's byte 0, a tile's own header — the bits that select the
+/// decoder that will actually run) pick the tight per-backend bound;
+/// **advisory** bits (the container prelude byte, which never selects a
+/// decoder) fall back to the conservative worst case over backends.
+/// Before this rule the wire path trusted the advisory container byte
+/// while the tile path trusted tile headers — two different header bits
+/// for the same claim. CABAC matters most here because its decoder has
+/// no integrity check and will happily fabricate the whole claimed
+/// count; the per-tile re-check always applies its tight bound before
+/// that decoder runs.
 pub const MAX_ELEMS_PER_PAYLOAD_BYTE_CABAC: u64 = 16_384;
+/// Worst-case bound over backends (also the rANS bound; see
+/// [`MAX_ELEMS_PER_PAYLOAD_BYTE_CABAC`]).
 pub const MAX_ELEMS_PER_PAYLOAD_BYTE: u64 = 32_768;
 
 /// The plausibility bound for a known backend (`None` = unknown: the
@@ -94,12 +108,16 @@ impl BatchedStream {
     }
 }
 
-/// Report of a tolerant decode: which substreams (by index) failed their
-/// checksum or did not decode.
+/// Report of a tolerant decode: which substreams failed, and *how* —
+/// `corrupted` holds the failed substream indexes (ascending),
+/// `failures` the matching typed [`CodecError`]s (each tile-attributed),
+/// so callers classify per-tile damage by variant instead of matching
+/// message strings.
 #[derive(Clone, Debug, Default)]
 pub struct BatchReport {
     pub substreams: usize,
     pub corrupted: Vec<usize>,
+    pub failures: Vec<CodecError>,
 }
 
 impl BatchReport {
@@ -117,6 +135,88 @@ fn tile_count(total: usize, tile_elems: usize) -> usize {
     total.div_ceil(tile_elems.max(1))
 }
 
+// ---------------------------------------------------------------------------
+// Encode engine
+
+/// Engine behind the deprecated [`encode_batched`] and the façade's
+/// batched encode path.
+pub(crate) fn encode_batched_impl(
+    config: &EncoderConfig,
+    data: &[f32],
+    tile_elems: usize,
+    pool: &ThreadPool,
+) -> BatchedStream {
+    let mut bytes = Vec::new();
+    let substreams = encode_batched_to_impl(config, data, tile_elems, pool, &mut bytes);
+    BatchedStream {
+        bytes,
+        elements: data.len(),
+        substreams,
+    }
+}
+
+/// Buffer-reusing variant: append the container to `out` (the façade's
+/// `encode_to` path — caller capacity is retained across items). Returns
+/// the substream count.
+pub(crate) fn encode_batched_to_impl(
+    config: &EncoderConfig,
+    data: &[f32],
+    tile_elems: usize,
+    pool: &ThreadPool,
+    out: &mut Vec<u8>,
+) -> usize {
+    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
+    let n_tiles = tile_count(data.len(), tile_elems).max(1);
+    let tiles: Vec<EncodedStream> = pool.map_indexed(n_tiles, |i| {
+        let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
+        let mut enc = Encoder::new(config.clone());
+        enc.encode(&data[lo..hi])
+    });
+
+    seal_container(config, data.len(), tiles, None, out)
+}
+
+/// Engine behind the deprecated [`encode_batched_designed`] and the
+/// façade's per-tile design path (container v3).
+pub(crate) fn encode_batched_designed_impl(
+    config: &EncoderConfig,
+    designer: &dyn QuantDesigner,
+    data: &[f32],
+    tile_elems: usize,
+    pool: &ThreadPool,
+) -> BatchedStream {
+    let mut bytes = Vec::new();
+    let substreams =
+        encode_batched_designed_to_impl(config, designer, data, tile_elems, pool, &mut bytes);
+    BatchedStream {
+        bytes,
+        elements: data.len(),
+        substreams,
+    }
+}
+
+/// Buffer-reusing variant of the per-tile design path (see
+/// [`encode_batched_to_impl`]).
+pub(crate) fn encode_batched_designed_to_impl(
+    config: &EncoderConfig,
+    designer: &dyn QuantDesigner,
+    data: &[f32],
+    tile_elems: usize,
+    pool: &ThreadPool,
+    out: &mut Vec<u8>,
+) -> usize {
+    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
+    let n_tiles = tile_count(data.len(), tile_elems).max(1);
+    let tiles: Vec<(EncodedStream, QuantSpec)> = pool.map_indexed(n_tiles, |i| {
+        let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
+        let spec = design_or(designer, &data[lo..hi], &config.quant);
+        let mut enc = Encoder::new(config.clone().with_quant(spec.clone()));
+        (enc.encode(&data[lo..hi]), spec)
+    });
+    let (tiles, specs): (Vec<EncodedStream>, Vec<QuantSpec>) = tiles.into_iter().unzip();
+    seal_container(config, data.len(), tiles, Some(specs), out)
+}
+
 /// Encode `data` as a batched container, sharding into `tile_elems`-sized
 /// tiles encoded concurrently on `pool`. Each worker invocation builds its
 /// own [`Encoder`] (contexts are per-stream state), so the output bytes
@@ -126,21 +226,17 @@ fn tile_count(total: usize, tile_elems: usize) -> usize {
 /// field fits `u32`. An empty tensor encodes as one empty substream —
 /// the container stays decodable (the tile carries the codec header), so
 /// encode→decode round-trips for every input.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.threads(n)`): `codec.encode(data)`"
+)]
 pub fn encode_batched(
     config: &EncoderConfig,
     data: &[f32],
     tile_elems: usize,
     pool: &ThreadPool,
 ) -> BatchedStream {
-    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
-    let n_tiles = tile_count(data.len(), tile_elems).max(1);
-    let tiles: Vec<EncodedStream> = pool.map_indexed(n_tiles, |i| {
-        let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
-        let mut enc = Encoder::new(config.clone());
-        enc.encode(&data[lo..hi])
-    });
-
-    seal_container(config, data.len(), tiles, None)
+    encode_batched_impl(config, data, tile_elems, pool)
 }
 
 /// Encode `data` as a **container-v3** batched stream with one freshly
@@ -152,9 +248,14 @@ pub fn encode_batched(
 /// cross-checked against each tile's own stream header at decode time.
 ///
 /// Degenerate tiles (constant values, too few samples) fall back to
-/// `config.quant`, so this encodes every input [`encode_batched`] does.
-/// Determinism holds exactly as for [`encode_batched`]: the design
-/// depends only on the tile's data, never on scheduling.
+/// `config.quant`, so this encodes every input the plain batched path
+/// does, and determinism holds the same way: the design depends only on
+/// the tile's data, never on scheduling.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.tile_designer(...)`): \
+            `codec.encode(data)`"
+)]
 pub fn encode_batched_designed(
     config: &EncoderConfig,
     designer: &dyn QuantDesigner,
@@ -162,25 +263,19 @@ pub fn encode_batched_designed(
     tile_elems: usize,
     pool: &ThreadPool,
 ) -> BatchedStream {
-    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
-    let n_tiles = tile_count(data.len(), tile_elems).max(1);
-    let tiles: Vec<(EncodedStream, QuantSpec)> = pool.map_indexed(n_tiles, |i| {
-        let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
-        let spec = design_or(designer, &data[lo..hi], &config.quant);
-        let mut enc = Encoder::new(config.clone().with_quant(spec.clone()));
-        (enc.encode(&data[lo..hi]), spec)
-    });
-    let (tiles, specs): (Vec<EncodedStream>, Vec<QuantSpec>) = tiles.into_iter().unzip();
-    seal_container(config, data.len(), tiles, Some(specs))
+    encode_batched_designed_impl(config, designer, data, tile_elems, pool)
 }
 
-/// Assemble encoded tiles (+ optional per-tile specs) into a container.
+/// Assemble encoded tiles (+ optional per-tile specs) into a container,
+/// appending to `out` (whose existing capacity is reused). Returns the
+/// substream count.
 fn seal_container(
     config: &EncoderConfig,
     elements: usize,
     tiles: Vec<EncodedStream>,
     specs: Option<Vec<QuantSpec>>,
-) -> BatchedStream {
+    out: &mut Vec<u8>,
+) -> usize {
     let n_tiles = tiles.len();
     let entries: Vec<SubstreamEntry> = tiles
         .iter()
@@ -197,17 +292,16 @@ fn seal_container(
         specs,
     };
     let payload_len: usize = tiles.iter().map(|t| t.bytes.len()).sum();
-    let mut bytes = Vec::with_capacity(dir.encoded_len() + payload_len);
-    dir.write(&mut bytes);
+    out.reserve(dir.encoded_len() + payload_len);
+    dir.write(out);
     for t in &tiles {
-        bytes.extend_from_slice(&t.bytes);
+        out.extend_from_slice(&t.bytes);
     }
-    BatchedStream {
-        bytes,
-        elements,
-        substreams: n_tiles,
-    }
+    n_tiles
 }
+
+// ---------------------------------------------------------------------------
+// Decode engine
 
 /// Byte range of each substream's payload within `bytes`, directory-driven.
 fn payload_ranges(dir: &SubstreamDirectory, payload_off: usize) -> Vec<(usize, usize)> {
@@ -225,83 +319,95 @@ fn payload_ranges(dir: &SubstreamDirectory, payload_off: usize) -> Vec<(usize, u
 /// element claim cannot correspond to a real compressed stream condemns
 /// the whole container — its directory is forged or damaged beyond the
 /// per-substream checksums' reach, so even the tolerant decoder must not
-/// trust any of its counts.
-fn validate_entries(dir: &SubstreamDirectory) -> Result<(), String> {
-    // The container-level backend claim picks the bound here; each tile is
-    // re-checked below against the backend its own header names, so a
-    // forged rans-labeled container full of CABAC tiles still meets the
-    // tight CABAC bound before its tiles decode.
-    let bound = max_elems_per_payload_byte(Some(dir.entropy));
-    for (i, e) in dir.entries.iter().enumerate() {
+/// trust any of its counts. The container prelude's backend byte is
+/// advisory (it never selects a decoder), so the directory-level check
+/// uses the conservative worst-case bound; each tile is re-checked below
+/// against the tight bound of the backend its *own* header names, before
+/// that decoder runs.
+fn validate_entries(dir: &SubstreamDirectory) -> Result<(), CodecError> {
+    let bound = max_elems_per_payload_byte(None);
+    for e in dir.entries.iter() {
         if e.elements as u64 > (e.byte_len as u64).saturating_mul(bound) {
-            return Err(format!(
-                "substream {i}: implausible element count {} for a {}-byte substream",
-                e.elements, e.byte_len
-            ));
+            return Err(CodecError::ImplausibleElements {
+                tile: None,
+                claimed: e.elements as u64,
+                payload_bytes: e.byte_len as u64,
+                bound,
+            });
         }
     }
     Ok(())
 }
 
-fn decode_tile(
+/// Per-tile spec accessor for decode loops (`None` below v3).
+fn spec_of(dir: &SubstreamDirectory, i: usize) -> Option<&QuantSpec> {
+    dir.specs.as_ref().map(|s| &s[i])
+}
+
+/// Shared per-tile validation: checksum, per-backend plausibility
+/// re-check (against the backend the tile's *own* header names — the
+/// bits that decide which decoder runs), run before any decode.
+fn validate_tile(
     bytes: &[u8],
     entry: &SubstreamEntry,
     range: (usize, usize),
-    spec: Option<&QuantSpec>,
-) -> Result<(Vec<f32>, Header), String> {
+    tile: usize,
+) -> Result<(), CodecError> {
     let payload = &bytes[range.0..range.1];
-    let got = substream_checksum(payload);
-    if got != entry.checksum {
-        return Err(format!(
-            "substream checksum mismatch: stored {:#010x}, computed {got:#010x}",
-            entry.checksum
-        ));
+    let computed = substream_checksum(payload);
+    if computed != entry.checksum {
+        return Err(CodecError::ChecksumMismatch {
+            tile: Some(tile),
+            stored: entry.checksum,
+            computed,
+        });
     }
-    // Plausibility re-check against the actual payload slice, bounded by
-    // the backend the tile's own header names (the container-level
-    // [`validate_entries`] has already vetted the directory against the
-    // container's claim; the tile header is what decides which decoder
-    // runs, so it picks the bound that decoder must be protected by).
     let bound = max_elems_per_payload_byte(crate::codec::sniff_entropy(payload));
     if entry.elements as u64 > (payload.len() as u64).saturating_mul(bound) {
-        return Err(format!(
-            "implausible element count {} for a {}-byte substream",
-            entry.elements,
-            payload.len()
-        ));
+        return Err(CodecError::ImplausibleElements {
+            tile: Some(tile),
+            claimed: entry.elements as u64,
+            payload_bytes: payload.len() as u64,
+            bound,
+        });
     }
-    let (values, header) = decode_stream(payload, entry.elements as usize)?;
-    // Container v3: the directory's designed spec and the tile's own
-    // stream header describe the same quantizer twice. Every field the
-    // header carries must agree — kind, levels, clip range, and the full
-    // ECQ reconstruction table — so a directory rewritten after the fact
-    // cannot re-label what this tile *reconstructs to*. (The spec's ECQ
-    // decision thresholds have no header counterpart — the decoder never
-    // needs them — so they are only structurally validated at parse time;
-    // a consumer re-encoding with `dir.specs` trusts the container for
-    // them.) f32 fields compare by bits: both sides round-tripped through
-    // the same little-endian serialization.
-    if let Some(spec) = spec {
-        let same_f32 = |a: f32, b: f32| a.to_bits() == b.to_bits();
-        let matches = spec.kind() == header.quant
-            && spec.levels() == header.levels
-            && same_f32(spec.c_min(), header.c_min)
-            && same_f32(spec.c_max(), header.c_max)
-            && match (spec, &header.recon) {
-                (QuantSpec::EntropyConstrained(q), Some(recon)) => {
-                    q.recon.len() == recon.len()
-                        && q.recon
-                            .iter()
-                            .zip(recon)
-                            .all(|(&a, &b)| same_f32(a, b))
-                }
-                (QuantSpec::Uniform { .. }, None) => true,
-                _ => false,
-            };
-        if !matches {
-            return Err(format!(
-                "tile header disagrees with the directory quant spec \
-                 (spec {:?} N={} [{}, {}] vs header {:?} N={} [{}, {}])",
+    Ok(())
+}
+
+/// Container v3: the directory's designed spec and the tile's own stream
+/// header describe the same quantizer twice. Every field the header
+/// carries must agree — kind, levels, clip range, and the full ECQ
+/// reconstruction table — so a directory rewritten after the fact cannot
+/// re-label what this tile *reconstructs to*. (The spec's ECQ decision
+/// thresholds have no header counterpart — the decoder never needs them —
+/// so they are only structurally validated at parse time; a consumer
+/// re-encoding with `dir.specs` trusts the container for them.) f32
+/// fields compare by bits: both sides round-tripped through the same
+/// little-endian serialization.
+fn check_spec_header(
+    spec: Option<&QuantSpec>,
+    header: &Header,
+    tile: usize,
+) -> Result<(), CodecError> {
+    let Some(spec) = spec else { return Ok(()) };
+    let same_f32 = |a: f32, b: f32| a.to_bits() == b.to_bits();
+    let matches = spec.kind() == header.quant
+        && spec.levels() == header.levels
+        && same_f32(spec.c_min(), header.c_min)
+        && same_f32(spec.c_max(), header.c_max)
+        && match (spec, &header.recon) {
+            (QuantSpec::EntropyConstrained(q), Some(recon)) => {
+                q.recon.len() == recon.len()
+                    && q.recon.iter().zip(recon).all(|(&a, &b)| same_f32(a, b))
+            }
+            (QuantSpec::Uniform { .. }, None) => true,
+            _ => false,
+        };
+    if !matches {
+        return Err(CodecError::SpecHeaderMismatch {
+            tile: Some(tile),
+            detail: format!(
+                "spec {:?} N={} [{}, {}] vs header {:?} N={} [{}, {}]",
                 spec.kind(),
                 spec.levels(),
                 spec.c_min(),
@@ -310,15 +416,275 @@ fn decode_tile(
                 header.levels,
                 header.c_min,
                 header.c_max,
-            ));
-        }
+            ),
+        });
     }
+    Ok(())
+}
+
+/// Decode one tile into its disjoint slot of the shared output buffer
+/// (`out.len() == entry.elements`) — the zero-copy path.
+fn decode_tile_into(
+    bytes: &[u8],
+    dir: &SubstreamDirectory,
+    i: usize,
+    range: (usize, usize),
+    out: &mut [f32],
+) -> Result<Header, CodecError> {
+    validate_tile(bytes, &dir.entries[i], range, i)?;
+    let header =
+        decode_stream_into(&bytes[range.0..range.1], out).map_err(|e| e.with_tile(i))?;
+    check_spec_header(spec_of(dir, i), &header, i)?;
+    Ok(header)
+}
+
+/// Decode one tile into an owned buffer (the fallback path for containers
+/// whose claimed size exceeds the pre-allocation cap).
+fn decode_tile_owned(
+    bytes: &[u8],
+    dir: &SubstreamDirectory,
+    i: usize,
+    range: (usize, usize),
+) -> Result<(Vec<f32>, Header), CodecError> {
+    validate_tile(bytes, &dir.entries[i], range, i)?;
+    let (values, header) = decode_stream_owned(
+        &bytes[range.0..range.1],
+        dir.entries[i].elements as usize,
+    )
+    .map_err(|e| e.with_tile(i))?;
+    check_spec_header(spec_of(dir, i), &header, i)?;
     Ok((values, header))
 }
 
-/// Per-tile spec accessor for decode loops (`None` below v3).
-fn spec_of(dir: &SubstreamDirectory, i: usize) -> Option<&QuantSpec> {
-    dir.specs.as_ref().map(|s| &s[i])
+/// What a container decode produced, besides the values.
+pub(crate) struct ContainerDecode {
+    /// Header of the first successfully decoded substream. **Invariant:
+    /// always `Some` when a strict decode returns `Ok`** — a zero-tile
+    /// container is a strict error, and a strict decode with any failed
+    /// tile returns `Err` — so only a tolerant decode that salvaged
+    /// nothing sees `None` here.
+    pub header: Option<Header>,
+    pub substreams: usize,
+    /// Per-tile designed quantizers the directory carried (container v3).
+    pub designed_tiles: usize,
+    /// Tile-attributed failures, ascending by tile (tolerant mode only —
+    /// strict mode returns the first of these as `Err` instead).
+    pub failures: Vec<CodecError>,
+    pub elements: usize,
+}
+
+/// The container decode engine: validates the directory (and, when the
+/// caller expects a specific element count, the directory's claim —
+/// checked here so the hot path parses the directory exactly once),
+/// then decodes every substream in parallel, **appending**
+/// `total_elements` values to `out`. In the common case (claimed size
+/// within the pre-allocation cap) the output is sized once and each
+/// tile decodes straight into its disjoint slot of `out` — no per-tile
+/// output allocation or concatenation, the serving hot path. In strict
+/// mode
+/// (`tolerant == false`) any tile failure restores `out` and returns
+/// the lowest-indexed error; in tolerant mode corrupt tiles are filled
+/// with their spec's `c_min` (v3) or a healthy tile's header `c_min`
+/// and reported.
+pub(crate) fn decode_container_into(
+    bytes: &[u8],
+    pool: &ThreadPool,
+    tolerant: bool,
+    expect_elements: Option<usize>,
+    out: &mut Vec<f32>,
+) -> Result<ContainerDecode, CodecError> {
+    let base = out.len();
+    let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
+    // Implausible directories are a container-level error even for the
+    // tolerant path: it fills `entry.elements` values per corrupt tile,
+    // so a forged count must never reach the fill loop.
+    validate_entries(&dir)?;
+    // The caller-expected count is cross-checked BEFORE anything decodes
+    // or fill-allocates (the cloud ingest guard): a crafted directory
+    // cannot make the worker decode a huge bogus tensor first.
+    if let Some(expected) = expect_elements {
+        if dir.total_elements != expected as u64 {
+            return Err(CodecError::ElementCountMismatch {
+                expected: expected as u64,
+                claimed: dir.total_elements,
+            });
+        }
+    }
+    let ranges = payload_ranges(&dir, payload_off);
+    let n = dir.entries.len();
+    let total = dir.total_elements as usize;
+    let designed_tiles = dir.specs.as_ref().map_or(0, Vec::len);
+
+    let results: Vec<Result<Header, CodecError>> = if total <= MAX_PREALLOC_ELEMS {
+        // Zero-copy fast path: one resize, then disjoint per-tile slots.
+        out.resize(base + total, 0.0);
+        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(n);
+        let mut rest: &mut [f32] = &mut out[base..];
+        for e in &dir.entries {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(e.elements as usize);
+            slices.push(head);
+            rest = tail;
+        }
+        pool.map_indexed_mut(&mut slices, |i, slot| {
+            decode_tile_into(bytes, &dir, i, ranges[i], slot)
+        })
+    } else {
+        // A claimed size past the pre-allocation cap (only reachable for
+        // implausibly large yet bound-satisfying containers): decode into
+        // owned per-tile buffers and append, so the big allocation only
+        // happens if the tiles really decode.
+        let tiles: Vec<Result<(Vec<f32>, Header), CodecError>> =
+            pool.map_indexed(n, |i| decode_tile_owned(bytes, &dir, i, ranges[i]));
+        let mut results = Vec::with_capacity(n);
+        let mut ok_values: Vec<Option<Vec<f32>>> = Vec::with_capacity(n);
+        for tile in tiles {
+            match tile {
+                Ok((vals, h)) => {
+                    ok_values.push(Some(vals));
+                    results.push(Ok(h));
+                }
+                Err(e) => {
+                    ok_values.push(None);
+                    results.push(Err(e));
+                }
+            }
+        }
+        // A tile whose element claim failed its own header's tight bound
+        // is NOT fillable damage — filling would allocate the forged
+        // count (see the fatality rule below), so nothing is extended if
+        // any such claim is present.
+        let any_implausible = results
+            .iter()
+            .any(|r| matches!(r, Err(CodecError::ImplausibleElements { .. })));
+        if (results.iter().all(|r| r.is_ok()) || tolerant) && !any_implausible {
+            let shared_fill = results
+                .iter()
+                .find_map(|r| r.as_ref().ok().map(|h| h.c_min))
+                .unwrap_or(0.0);
+            for (i, vals) in ok_values.into_iter().enumerate() {
+                match vals {
+                    Some(vals) => out.extend_from_slice(&vals),
+                    None => {
+                        let fill = spec_of(&dir, i).map_or(shared_fill, |s| s.c_min());
+                        out.extend(std::iter::repeat(fill).take(dir.entries[i].elements as usize));
+                    }
+                }
+            }
+        }
+        results
+    };
+
+    let mut failures = Vec::new();
+    let mut first_ok_header = None;
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(h) => {
+                if first_ok_header.is_none() {
+                    first_ok_header = Some(h.clone());
+                }
+            }
+            Err(e) => {
+                // Tolerant decodes fill-and-report tile-local damage —
+                // EXCEPT an implausible element claim: its count is
+                // exactly what the fill loop would allocate, so a forged
+                // count that slipped past the directory's conservative
+                // bound but failed the tile's tight per-backend bound is
+                // fatal even here (a crafted ~128 KiB container could
+                // otherwise demand a multi-GiB fill).
+                let fatal = matches!(e, CodecError::ImplausibleElements { .. });
+                if !tolerant || fatal {
+                    out.truncate(base);
+                    return Err(e.clone().with_tile(i));
+                }
+                failures.push(e.clone());
+            }
+        }
+    }
+    if !tolerant && n == 0 {
+        out.truncate(base);
+        return Err(CodecError::directory("empty container has no header"));
+    }
+
+    if tolerant && total <= MAX_PREALLOC_ELEMS && !failures.is_empty() {
+        // Fill the failed tiles' slots. Never derive the shared fill from
+        // a tile that failed its checksum — its header bytes are exactly
+        // what corruption may have hit; a v3 tile fills with its own
+        // spec's c_min (the spec block passed structural validation even
+        // if the tile payload did not).
+        let shared_fill = first_ok_header.as_ref().map_or(0.0, |h| h.c_min);
+        let mut lo = base;
+        for (i, e) in dir.entries.iter().enumerate() {
+            let hi = lo + e.elements as usize;
+            if results[i].is_err() {
+                let fill = spec_of(&dir, i).map_or(shared_fill, |s| s.c_min());
+                out[lo..hi].fill(fill);
+            }
+            lo = hi;
+        }
+    }
+
+    Ok(ContainerDecode {
+        header: first_ok_header,
+        substreams: n,
+        designed_tiles,
+        failures,
+        elements: total,
+    })
+}
+
+/// Count-only directory read (validated): the element count a container
+/// claims to carry.
+pub(crate) fn batched_elements_impl(bytes: &[u8]) -> Result<usize, CodecError> {
+    let (dir, _) = SubstreamDirectory::read(bytes)?;
+    validate_entries(&dir)?;
+    Ok(dir.total_elements as usize)
+}
+
+/// Strict owned-output container decode (engine behind the deprecated
+/// [`decode_batched`]).
+pub(crate) fn decode_batched_impl(
+    bytes: &[u8],
+    pool: &ThreadPool,
+) -> Result<(Vec<f32>, Header), CodecError> {
+    let mut out = Vec::new();
+    let info = decode_container_into(bytes, pool, false, None, &mut out)?;
+    let header = info.header.expect("strict container decode always yields a header");
+    Ok((out, header))
+}
+
+/// Tolerant owned-output container decode (engine behind the deprecated
+/// [`decode_batched_tolerant`]).
+pub(crate) fn decode_batched_tolerant_impl(
+    bytes: &[u8],
+    pool: &ThreadPool,
+) -> Result<(Vec<f32>, BatchReport), CodecError> {
+    let mut out = Vec::new();
+    let info = decode_container_into(bytes, pool, true, None, &mut out)?;
+    let report = BatchReport {
+        substreams: info.substreams,
+        corrupted: info.failures.iter().filter_map(CodecError::tile).collect(),
+        failures: info.failures,
+    };
+    Ok((out, report))
+}
+
+/// Cloud-ingest decode of either wire format (engine behind the
+/// deprecated [`decode_any`]).
+pub(crate) fn decode_any_impl(
+    bytes: &[u8],
+    elements: usize,
+    pool: &ThreadPool,
+) -> Result<(Vec<f32>, Header), CodecError> {
+    if is_batched(bytes) {
+        let mut out = Vec::new();
+        // The expectation is enforced inside the engine, after directory
+        // validation and before anything decodes — one directory parse.
+        let info = decode_container_into(bytes, pool, false, Some(elements), &mut out)?;
+        let header = info.header.expect("strict container decode always yields a header");
+        Ok((out, header))
+    } else {
+        decode_stream_owned(bytes, elements)
+    }
 }
 
 /// Strict parallel decode: every substream must validate and decode, else
@@ -326,114 +692,75 @@ fn spec_of(dir: &SubstreamDirectory, i: usize) -> Option<&QuantSpec> {
 /// the header of the first substream — for spec-less containers all tiles
 /// share one codec config; a v3 container's tiles may each carry their own
 /// designed quantizer, so the returned header describes tile 0 only (the
-/// directory's spec block has the full per-tile picture). An empty tensor
-/// round-trips because [`encode_batched`] always emits at least one
-/// (possibly empty) substream carrying the header.
-pub fn decode_batched(bytes: &[u8], pool: &ThreadPool) -> Result<(Vec<f32>, Header), String> {
-    let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
-    validate_entries(&dir)?;
-    let ranges = payload_ranges(&dir, payload_off);
-    let tiles: Vec<Result<(Vec<f32>, Header), String>> = pool.map_indexed(dir.entries.len(), |i| {
-        decode_tile(bytes, &dir.entries[i], ranges[i], spec_of(&dir, i))
-    });
-    // Capacity from the directory is untrusted input: cap the pre-allocation
-    // so a crafted count cannot force a huge up-front allocation (the vec
-    // still grows to the real decoded size).
-    let mut out = Vec::with_capacity((dir.total_elements as usize).min(MAX_PREALLOC_ELEMS));
-    let mut header: Option<Header> = None;
-    for (i, tile) in tiles.into_iter().enumerate() {
-        let (vals, h) = tile.map_err(|e| format!("substream {i}: {e}"))?;
-        if header.is_none() {
-            header = Some(h);
-        }
-        out.extend_from_slice(&vals);
-    }
-    let header = header.ok_or_else(|| "empty container has no header".to_string())?;
-    Ok((out, header))
+/// directory's spec block has the full per-tile picture).
+#[deprecated(
+    since = "0.2.0",
+    note = "use the `Codec` façade (`lwfc::CodecBuilder`): `codec.decode(bytes)` / \
+            `codec.decode_into(bytes, &mut buf)`"
+)]
+pub fn decode_batched(bytes: &[u8], pool: &ThreadPool) -> Result<(Vec<f32>, Header), CodecError> {
+    decode_batched_impl(bytes, pool)
 }
 
-/// Count-only view for callers that do not need the values (CLI `list`-style
-/// inspection, tests).
-pub fn batched_elements(bytes: &[u8]) -> Result<usize, String> {
-    let (dir, _) = SubstreamDirectory::read(bytes)?;
-    validate_entries(&dir)?;
-    Ok(dir.total_elements as usize)
+/// Count-only view for callers that do not need the values (CLI
+/// `list`-style inspection, tests).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `lwfc::sniff` for format inspection, or decode through the `Codec` façade"
+)]
+pub fn batched_elements(bytes: &[u8]) -> Result<usize, CodecError> {
+    batched_elements_impl(bytes)
 }
 
 /// Tolerant parallel decode: corrupted substreams are replaced by a
 /// constant fill and reported, so one damaged tile does not take down the
 /// tensor — the paper's coarse reconstructions degrade gracefully under
 /// tile loss. The fill is the corrupt tile's own clip minimum when the
-/// container carries per-tile quant specs (v3 — the spec block passed
-/// structural validation even if the tile payload did not); otherwise the
-/// clip minimum of a *healthy* tile's header (all spec-less tiles share
-/// one codec config; 0.0 when no tile survived).
+/// container carries per-tile quant specs (v3); otherwise the clip
+/// minimum of a *healthy* tile's header (0.0 when no tile survived).
+#[deprecated(
+    since = "0.2.0",
+    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.tolerant(true)`): per-tile \
+            failures arrive as typed `CodecError`s in `DecodeInfo`"
+)]
 pub fn decode_batched_tolerant(
     bytes: &[u8],
     pool: &ThreadPool,
-) -> Result<(Vec<f32>, BatchReport), String> {
-    let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
-    // Implausible directories are a container-level error even here: the
-    // tolerant path fills `entry.elements` values per corrupt tile, so a
-    // forged count must never reach the fill loop.
-    validate_entries(&dir)?;
-    let ranges = payload_ranges(&dir, payload_off);
-    let tiles: Vec<Result<(Vec<f32>, Header), String>> = pool.map_indexed(dir.entries.len(), |i| {
-        decode_tile(bytes, &dir.entries[i], ranges[i], spec_of(&dir, i))
-    });
-    // Never derive the shared fill from a tile that failed its checksum —
-    // its header bytes are exactly what corruption may have hit.
-    let shared_fill = tiles
-        .iter()
-        .find_map(|t| t.as_ref().ok().map(|(_, h)| h.c_min))
-        .unwrap_or(0.0);
-    let mut out = Vec::with_capacity((dir.total_elements as usize).min(MAX_PREALLOC_ELEMS));
-    let mut report = BatchReport {
-        substreams: dir.entries.len(),
-        corrupted: Vec::new(),
-    };
-    for (i, tile) in tiles.into_iter().enumerate() {
-        match tile {
-            Ok((vals, _)) => out.extend_from_slice(&vals),
-            Err(_) => {
-                let fill = spec_of(&dir, i).map_or(shared_fill, |s| s.c_min());
-                out.extend(std::iter::repeat(fill).take(dir.entries[i].elements as usize));
-                report.corrupted.push(i);
-            }
-        }
-    }
-    Ok((out, report))
+) -> Result<(Vec<f32>, BatchReport), CodecError> {
+    decode_batched_tolerant_impl(bytes, pool)
 }
 
 /// Decode either wire format: batched containers are detected by magic,
 /// anything else is treated as a legacy single stream of `elements`
-/// elements. This is the cloud worker's ingest path.
+/// elements.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.expect_elements(n)`): \
+            `codec.decode(bytes)` sniffs the format internally"
+)]
 pub fn decode_any(
     bytes: &[u8],
     elements: usize,
     pool: &ThreadPool,
-) -> Result<(Vec<f32>, Header), String> {
-    if is_batched(bytes) {
-        // Bound-check the claimed size BEFORE decoding: the caller knows the
-        // expected element count, so a crafted directory cannot make us
-        // decode (and allocate) a huge bogus tensor first.
-        let claimed = batched_elements(bytes)?;
-        if claimed != elements {
-            return Err(format!(
-                "batched stream carries {claimed} elements, expected {elements}"
-            ));
-        }
-        decode_batched(bytes, pool)
-    } else {
-        decode_stream(bytes, elements)
-    }
+) -> Result<(Vec<f32>, Header), CodecError> {
+    decode_any_impl(bytes, elements, pool)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::{decode, Quantizer, UniformQuantizer};
+    use crate::codec::stream::decode_stream_owned as decode;
+    use crate::codec::{CodecError, Quantizer, UniformQuantizer};
     use crate::util::prop::Gen;
+
+    // The in-module tests pin the engines directly; the deprecated free
+    // functions are thin aliases of these.
+    use super::batched_elements_impl as batched_elements;
+    use super::decode_any_impl as decode_any;
+    use super::decode_batched_impl as decode_batched;
+    use super::decode_batched_tolerant_impl as decode_batched_tolerant;
+    use super::encode_batched_designed_impl as encode_batched_designed;
+    use super::encode_batched_impl as encode_batched;
 
     fn cfg(levels: usize, c_max: f32) -> EncoderConfig {
         EncoderConfig::classification(
@@ -512,8 +839,9 @@ mod tests {
         // Craft a container whose directory claims u32::MAX elements for a
         // tiny payload, with a matching prelude total and a *valid*
         // checksum: the strict path must reject it, and the tolerant path
-        // must refuse to fill 4 Gi values (it previously trusted
-        // `entry.elements` after the strict decode failed).
+        // must refuse to fill 4 Gi values. The error is the typed
+        // plausibility variant at container scope (no tile attribution —
+        // nothing was recoverable).
         let payload = vec![0u8; 16];
         let dir = SubstreamDirectory::plain(
             u32::MAX as u64,
@@ -529,14 +857,61 @@ mod tests {
         bytes.extend_from_slice(&payload);
 
         let pool = ThreadPool::new(2);
-        let strict = decode_batched(&bytes, &pool);
-        assert!(strict.is_err(), "strict accepted a forged directory");
+        let strict = decode_batched(&bytes, &pool).unwrap_err();
+        assert!(
+            matches!(
+                strict,
+                CodecError::ImplausibleElements {
+                    tile: None,
+                    claimed,
+                    ..
+                } if claimed == u32::MAX as u64
+            ),
+            "wrong variant: {strict:?}"
+        );
+        assert!(!strict.is_tile_local(), "directory-scope claim must be fatal");
         let tolerant = decode_batched_tolerant(&bytes, &pool);
         assert!(
-            tolerant.is_err(),
+            matches!(tolerant, Err(CodecError::ImplausibleElements { .. })),
             "tolerant decode must treat an implausible entry as a container-level error"
         );
-        assert!(batched_elements(&bytes).is_err());
+        assert!(matches!(
+            batched_elements(&bytes),
+            Err(CodecError::ImplausibleElements { .. })
+        ));
+    }
+
+    #[test]
+    fn forged_tile_count_is_fatal_even_for_tolerant_decodes() {
+        // A claim that satisfies the directory's conservative bound but
+        // not the tile's own tight (CABAC) bound: even the tolerant
+        // decoder must refuse outright — filling would allocate exactly
+        // the forged count (the second case would demand a 128 MiB fill
+        // from a 2 KiB container; larger payloads scale to GiBs). Both
+        // the fast (≤ prealloc cap) and the owned fallback path refuse.
+        let pool = ThreadPool::new(2);
+        for (payload_len, elements) in [(16usize, 262_145u32), (2_048, 33_554_433)] {
+            let payload = vec![0u8; payload_len];
+            let dir = SubstreamDirectory::plain(
+                elements as u64,
+                crate::codec::EntropyKind::Rans,
+                vec![SubstreamEntry {
+                    elements,
+                    byte_len: payload_len as u32,
+                    checksum: substream_checksum(&payload),
+                }],
+            );
+            let mut bytes = Vec::new();
+            dir.write(&mut bytes);
+            bytes.extend_from_slice(&payload);
+            let err = decode_batched_tolerant(&bytes, &pool).unwrap_err();
+            assert!(
+                matches!(err, CodecError::ImplausibleElements { tile: Some(0), .. }),
+                "wrong variant for payload_len {payload_len}: {err:?}"
+            );
+            assert!(!err.is_tile_local(), "forged counts are never fillable");
+            assert!(decode_batched(&bytes, &pool).is_err());
+        }
     }
 
     #[test]
@@ -556,9 +931,22 @@ mod tests {
         let mut bad = batched.bytes.clone();
         bad[off + 2] ^= 0xFF;
 
-        assert!(decode_batched(&bad, &pool).is_err());
+        let strict = decode_batched(&bad, &pool).unwrap_err();
+        assert_eq!(strict.tile(), Some(victim), "strict error names the tile");
         let (out, report) = decode_batched_tolerant(&bad, &pool).unwrap();
         assert_eq!(report.corrupted, vec![victim]);
+        // The failure is a typed, tile-local checksum mismatch — no
+        // message matching needed to classify it.
+        assert_eq!(report.failures.len(), 1);
+        assert!(
+            matches!(
+                report.failures[0],
+                CodecError::ChecksumMismatch { tile: Some(t), .. } if t == victim
+            ),
+            "wrong failure variant: {:?}",
+            report.failures[0]
+        );
+        assert!(report.failures[0].is_tile_local());
         assert_eq!(out.len(), xs.len());
         // Healthy tiles reconstruct exactly.
         let (clean, _) = decode_batched(&batched.bytes, &pool).unwrap();
@@ -668,14 +1056,21 @@ mod tests {
         assert_eq!(forged.len(), payload_off, "swap must not change layout");
         forged.extend_from_slice(&batched.bytes[payload_off..]);
         let err = decode_batched(&forged, &pool).unwrap_err();
+        // Classified by variant, not by message substring.
         assert!(
-            err.contains("disagrees with the directory quant spec"),
-            "unexpected error: {err}"
+            matches!(err, CodecError::SpecHeaderMismatch { tile: Some(0), .. }),
+            "unexpected error: {err:?}"
         );
         // The tolerant path reports both tiles instead of decoding them
         // under the wrong quantizer, filling with each spec's own c_min.
         let (vals, report) = decode_batched_tolerant(&forged, &pool).unwrap();
         assert_eq!(report.corrupted, vec![0, 1]);
+        for f in &report.failures {
+            assert!(
+                matches!(f, CodecError::SpecHeaderMismatch { .. }),
+                "wrong variant: {f:?}"
+            );
+        }
         assert_eq!(vals[0], specs[1].c_min());
         assert_eq!(vals[2048], specs[0].c_min());
     }
@@ -691,6 +1086,43 @@ mod tests {
         let (a, _) = decode_any(&batched.bytes, xs.len(), &pool).unwrap();
         let (b, _) = decode_any(&single.bytes, xs.len(), &pool).unwrap();
         assert_eq!(a, b);
-        assert!(decode_any(&batched.bytes, xs.len() + 1, &pool).is_err());
+        // A count disagreement is the typed mismatch, pre-decode.
+        let err = decode_any(&batched.bytes, xs.len() + 1, &pool).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                CodecError::ElementCountMismatch { expected, claimed }
+                    if expected == xs.len() as u64 + 1 && claimed == xs.len() as u64
+            ),
+            "unexpected error: {err:?}"
+        );
+    }
+
+    #[test]
+    fn container_decode_appends_into_reused_buffer() {
+        // decode_container_into appends at out.len() and leaves existing
+        // content untouched — the contract the façade's decode_into
+        // (clear + fill) and the cloud's scratch reuse are built on.
+        let xs = activations(6_000, 8);
+        let pool = ThreadPool::new(3);
+        let batched = encode_batched(&cfg(4, 2.0), &xs, 1024, &pool);
+        let (fresh, _) = decode_batched(&batched.bytes, &pool).unwrap();
+
+        let mut buf = vec![7.0f32; 3];
+        let info = decode_container_into(&batched.bytes, &pool, false, None, &mut buf).unwrap();
+        assert_eq!(info.elements, xs.len());
+        assert_eq!(info.substreams, 6);
+        assert_eq!(info.designed_tiles, 0);
+        assert!(info.failures.is_empty());
+        assert_eq!(&buf[..3], &[7.0, 7.0, 7.0]);
+        assert_eq!(&buf[3..], &fresh[..]);
+
+        // A strict failure restores the buffer to its pre-call length.
+        let mut bad = batched.bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x11;
+        let mut buf2 = vec![1.0f32; 5];
+        assert!(decode_container_into(&bad, &pool, false, None, &mut buf2).is_err());
+        assert_eq!(buf2, vec![1.0f32; 5]);
     }
 }

@@ -1,6 +1,8 @@
 //! Byte/bit stream primitives shared by the lightweight codec and the
 //! picture-codec baseline.
 
+use super::error::CodecError;
+
 /// MSB-first bit writer over a growable byte buffer.
 #[derive(Default, Debug)]
 pub struct BitWriter {
@@ -76,10 +78,10 @@ impl<'a> BitReader<'a> {
     }
 
     #[inline]
-    pub fn get_bit(&mut self) -> Result<bool, String> {
+    pub fn get_bit(&mut self) -> Result<bool, CodecError> {
         let byte = self.pos / 8;
         if byte >= self.bytes.len() {
-            return Err("bitstream exhausted".into());
+            return Err(CodecError::payload("bitstream exhausted"));
         }
         let bit = (self.bytes[byte] >> (7 - (self.pos % 8))) & 1;
         self.pos += 1;
@@ -87,7 +89,7 @@ impl<'a> BitReader<'a> {
     }
 
     #[inline]
-    pub fn get_bits(&mut self, count: u8) -> Result<u64, String> {
+    pub fn get_bits(&mut self, count: u8) -> Result<u64, CodecError> {
         let mut v = 0u64;
         for _ in 0..count {
             v = (v << 1) | self.get_bit()? as u64;
@@ -95,23 +97,23 @@ impl<'a> BitReader<'a> {
         Ok(v)
     }
 
-    pub fn get_byte(&mut self) -> Result<u8, String> {
+    pub fn get_byte(&mut self) -> Result<u8, CodecError> {
         Ok(self.get_bits(8)? as u8)
     }
 
-    pub fn get_ue(&mut self) -> Result<u32, String> {
+    pub fn get_ue(&mut self) -> Result<u32, CodecError> {
         let mut zeros = 0u8;
         while !self.get_bit()? {
             zeros += 1;
             if zeros > 32 {
-                return Err("corrupt ue(v)".into());
+                return Err(CodecError::payload("corrupt ue(v)"));
             }
         }
         let tail = self.get_bits(zeros)?;
         Ok(((1u64 << zeros) + tail - 1) as u32)
     }
 
-    pub fn get_se(&mut self) -> Result<i32, String> {
+    pub fn get_se(&mut self) -> Result<i32, CodecError> {
         let u = self.get_ue()? as i64;
         Ok(if u % 2 == 0 { (-u / 2) as i32 } else { ((u + 1) / 2) as i32 })
     }
@@ -156,10 +158,12 @@ mod tests {
             let bytes = w.finish();
             let mut r = BitReader::new(&bytes);
             for &v in &vals {
-                crate::prop_assert!(r.get_ue().map_err(|e| e.to_string())? == v, "ue mismatch for {v}");
+                let got = r.get_ue().map_err(|e| e.to_string())?;
+                crate::prop_assert!(got == v, "ue mismatch for {v}");
             }
             for &v in &svals {
-                crate::prop_assert!(r.get_se().map_err(|e| e.to_string())? == v, "se mismatch for {v}");
+                let got = r.get_se().map_err(|e| e.to_string())?;
+                crate::prop_assert!(got == v, "se mismatch for {v}");
             }
             Ok(())
         });

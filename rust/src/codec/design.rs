@@ -36,6 +36,7 @@
 //! per-tile dynamic ranges stop paying for one global range.
 
 use super::ecq::{design_from_histogram, EcqParams, NonUniformQuantizer};
+use super::error::CodecError;
 use super::header::QuantKind;
 use super::stream::Quantizer;
 use super::uniform::UniformQuantizer;
@@ -146,25 +147,26 @@ impl QuantSpec {
     /// spec and the record length consumed. Every structural rule a
     /// legitimate designer output satisfies is enforced here, so a
     /// corrupted or oversized record is rejected before any tile decodes.
-    pub fn read(bytes: &[u8]) -> Result<(QuantSpec, usize), String> {
+    pub fn read(bytes: &[u8]) -> Result<(QuantSpec, usize), CodecError> {
+        let bad = |detail: String| CodecError::SpecRecord { tile: None, detail };
         if bytes.len() < Self::FIXED_RECORD_BYTES {
-            return Err(format!(
-                "quant-spec record truncated: need {} bytes, have {}",
+            return Err(bad(format!(
+                "truncated: need {} bytes, have {}",
                 Self::FIXED_RECORD_BYTES,
                 bytes.len()
-            ));
+            )));
         }
         let kind = bytes[0];
         let levels = bytes[1] as usize;
         if levels < 2 {
-            return Err(format!("quant-spec level count {levels} out of range"));
+            return Err(bad(format!("level count {levels} out of range")));
         }
         let f32_at =
             |i: usize| f32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
         let c_min = f32_at(2);
         let c_max = f32_at(6);
         if !c_min.is_finite() || !c_max.is_finite() || !(c_max > c_min) {
-            return Err(format!("quant-spec clip range [{c_min}, {c_max}] invalid"));
+            return Err(bad(format!("clip range [{c_min}, {c_max}] invalid")));
         }
         match kind {
             0 => Ok((
@@ -178,10 +180,10 @@ impl QuantSpec {
             1 => {
                 let need = Self::FIXED_RECORD_BYTES + levels * 4 + (levels - 1) * 4;
                 if bytes.len() < need {
-                    return Err(format!(
-                        "quant-spec record truncated: ECQ N={levels} needs {need} bytes, have {}",
+                    return Err(bad(format!(
+                        "truncated: ECQ N={levels} needs {need} bytes, have {}",
                         bytes.len()
-                    ));
+                    )));
                 }
                 let mut recon = Vec::with_capacity(levels);
                 for n in 0..levels {
@@ -196,12 +198,12 @@ impl QuantSpec {
                 if !recon.iter().all(|&r| in_range(r))
                     || !recon.windows(2).all(|w| w[0] <= w[1])
                 {
-                    return Err("quant-spec reconstruction values invalid".into());
+                    return Err(bad("reconstruction values invalid".into()));
                 }
                 if !thresholds.iter().all(|&t| in_range(t))
                     || !thresholds.windows(2).all(|w| w[0] <= w[1])
                 {
-                    return Err("quant-spec thresholds invalid".into());
+                    return Err(bad("thresholds invalid".into()));
                 }
                 Ok((
                     QuantSpec::EntropyConstrained(NonUniformQuantizer {
@@ -213,7 +215,7 @@ impl QuantSpec {
                     need,
                 ))
             }
-            other => Err(format!("unknown quant-spec kind {other}")),
+            other => Err(bad(format!("unknown kind {other}"))),
         }
     }
 }
@@ -260,12 +262,14 @@ pub enum DesignKind {
 }
 
 impl DesignKind {
-    pub fn parse(s: &str) -> Result<DesignKind, String> {
+    pub fn parse(s: &str) -> Result<DesignKind, CodecError> {
         match s {
             "static" => Ok(DesignKind::Static),
             "model" => Ok(DesignKind::Model),
             "ecq" => Ok(DesignKind::Ecq),
-            other => Err(format!("unknown designer `{other}` (static, model, ecq)")),
+            other => Err(CodecError::invalid(format!(
+                "unknown designer `{other}` (static, model, ecq)"
+            ))),
         }
     }
 
@@ -295,11 +299,13 @@ pub enum ClipGranularity {
 }
 
 impl ClipGranularity {
-    pub fn parse(s: &str) -> Result<ClipGranularity, String> {
+    pub fn parse(s: &str) -> Result<ClipGranularity, CodecError> {
         match s {
             "stream" => Ok(ClipGranularity::Stream),
             "tile" => Ok(ClipGranularity::Tile),
-            other => Err(format!("unknown clip granularity `{other}` (stream, tile)")),
+            other => Err(CodecError::invalid(format!(
+                "unknown clip granularity `{other}` (stream, tile)"
+            ))),
         }
     }
 
@@ -327,12 +333,13 @@ pub const MIN_DESIGN_SAMPLES: u64 = 32;
 /// one tile); `samples` are raw values from the same scope for designers
 /// that need an empirical distribution (ECQ's histogram). Designers are
 /// stateless and shared across worker threads (`Sync`); failures are
-/// `Err`, and every caller keeps a static fallback spec, so a degenerate
-/// scope (constant tile, too few samples) can never take down an encode.
+/// [`CodecError::Design`], and every caller keeps a static fallback spec,
+/// so a degenerate scope (constant tile, too few samples) can never take
+/// down an encode.
 pub trait QuantDesigner: Send + Sync {
     fn name(&self) -> &'static str;
 
-    fn design(&self, stats: &TensorStats, samples: &[f32]) -> Result<QuantSpec, String>;
+    fn design(&self, stats: &TensorStats, samples: &[f32]) -> Result<QuantSpec, CodecError>;
 }
 
 /// Today's behavior as a designer: always the configured spec.
@@ -352,7 +359,7 @@ impl QuantDesigner for StaticDesigner {
         "static"
     }
 
-    fn design(&self, _stats: &TensorStats, _samples: &[f32]) -> Result<QuantSpec, String> {
+    fn design(&self, _stats: &TensorStats, _samples: &[f32]) -> Result<QuantSpec, CodecError> {
         Ok(self.spec.clone())
     }
 }
@@ -407,15 +414,19 @@ impl ModelOptimalDesigner {
     }
 
     /// Solve the clipping range for `stats` (shared with [`EcqDesigner`]).
-    fn solve_range(&self, stats: &TensorStats) -> Result<(f32, f32), String> {
+    fn solve_range(&self, stats: &TensorStats) -> Result<(f32, f32), CodecError> {
         if stats.count() < MIN_DESIGN_SAMPLES {
-            return Err(format!("{} samples: too few to design from", stats.count()));
+            return Err(CodecError::design(format!(
+                "{} samples: too few to design from",
+                stats.count()
+            )));
         }
         let var = stats.variance();
         if var <= 1e-12 || !var.is_finite() {
-            return Err(format!("degenerate variance {var}"));
+            return Err(CodecError::design(format!("degenerate variance {var}")));
         }
-        let model = fit(stats.mean(), var, self.kappa, self.activation)?;
+        let model =
+            fit(stats.mean(), var, self.kappa, self.activation).map_err(CodecError::design)?;
         let r = if self.signed_cmin {
             optimal_range(&model.pdf, self.levels)
         } else {
@@ -438,7 +449,9 @@ impl ModelOptimalDesigner {
             c_min = c_min.min(-self.neg_span * c_max);
         }
         if !(c_max > c_min) || !c_max.is_finite() || !c_min.is_finite() {
-            return Err(format!("designed range [{c_min}, {c_max}] degenerate"));
+            return Err(CodecError::design(format!(
+                "designed range [{c_min}, {c_max}] degenerate"
+            )));
         }
         Ok((c_min, c_max))
     }
@@ -449,7 +462,7 @@ impl QuantDesigner for ModelOptimalDesigner {
         "model"
     }
 
-    fn design(&self, stats: &TensorStats, _samples: &[f32]) -> Result<QuantSpec, String> {
+    fn design(&self, stats: &TensorStats, _samples: &[f32]) -> Result<QuantSpec, CodecError> {
         let (c_min, c_max) = self.solve_range(stats)?;
         Ok(QuantSpec::Uniform {
             c_min,
@@ -488,9 +501,9 @@ impl QuantDesigner for EcqDesigner {
         "ecq"
     }
 
-    fn design(&self, stats: &TensorStats, samples: &[f32]) -> Result<QuantSpec, String> {
+    fn design(&self, stats: &TensorStats, samples: &[f32]) -> Result<QuantSpec, CodecError> {
         if samples.is_empty() {
-            return Err("no samples to design from".into());
+            return Err(CodecError::design("no samples to design from"));
         }
         // Model-optimal range when the fit succeeds; the observed support
         // as the fallback (Algorithm 1 itself only needs *a* range, and
@@ -501,7 +514,9 @@ impl QuantDesigner for EcqDesigner {
             if hi > lo && lo.is_finite() && hi.is_finite() {
                 Ok((lo, hi))
             } else {
-                Err(format!("degenerate sample support [{lo}, {hi}]"))
+                Err(CodecError::design(format!(
+                    "degenerate sample support [{lo}, {hi}]"
+                )))
             }
         })?;
         let hist = Histogram::from_slice(c_min as f64, c_max as f64, self.bins.max(2), samples);

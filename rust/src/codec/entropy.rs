@@ -41,7 +41,7 @@
 
 use super::binarize::num_contexts;
 use super::cabac::{CabacDecoder, CabacEncoder, Context};
-use super::header::is_batched;
+use super::error::CodecError;
 use super::stream::Quantizer;
 
 /// Which entropy coder a stream's payload uses. The id is what travels in
@@ -67,20 +67,22 @@ impl EntropyKind {
 
     /// Inverse of [`EntropyKind::id`]; rejects unknown ids (untrusted
     /// header input).
-    pub fn from_id(id: u8) -> Result<EntropyKind, String> {
+    pub fn from_id(id: u8) -> Result<EntropyKind, CodecError> {
         match id {
             0 => Ok(EntropyKind::Cabac),
             1 => Ok(EntropyKind::Rans),
-            other => Err(format!("unknown entropy backend id {other}")),
+            id => Err(CodecError::UnknownBackend { id }),
         }
     }
 
     /// CLI spelling (`--entropy cabac|rans`).
-    pub fn parse(s: &str) -> Result<EntropyKind, String> {
+    pub fn parse(s: &str) -> Result<EntropyKind, CodecError> {
         match s {
             "cabac" => Ok(EntropyKind::Cabac),
             "rans" => Ok(EntropyKind::Rans),
-            other => Err(format!("unknown entropy backend `{other}` (cabac, rans)")),
+            other => Err(CodecError::invalid(format!(
+                "unknown entropy backend `{other}` (cabac, rans)"
+            ))),
         }
     }
 }
@@ -113,21 +115,43 @@ pub trait EntropyBackend: Send {
         payload: &[u8],
         levels: usize,
         elements: usize,
-    ) -> Result<Vec<u16>, String>;
+    ) -> Result<Vec<u16>, CodecError>;
 
     /// Decode straight to reconstruction values (`recon.len() == levels`).
-    /// The hot decode path: both built-in backends override this to emit
-    /// f32 directly, skipping the intermediate index buffer the default
-    /// goes through.
+    /// Both built-in backends override this to emit f32 directly,
+    /// skipping the intermediate index buffer the default goes through.
     fn decode_payload_f32(
         &mut self,
         payload: &[u8],
         levels: usize,
         elements: usize,
         recon: &[f32],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, CodecError> {
         let idx = self.decode_payload(payload, levels, elements)?;
         Ok(idx.into_iter().map(|n| recon[n as usize]).collect())
+    }
+
+    /// Decode exactly `out.len()` reconstruction values straight into
+    /// `out` (`recon.len() == levels`) — the zero-copy serving hot path:
+    /// the caller hands the decoder its slot of a reused output buffer,
+    /// so nothing is allocated per stream or per tile. Both built-in
+    /// backends override the default (which goes through an owned
+    /// buffer).
+    fn decode_payload_f32_into(
+        &mut self,
+        payload: &[u8],
+        levels: usize,
+        recon: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        let vals = self
+            .decode_payload(payload, levels, out.len())?
+            .into_iter()
+            .map(|n| recon[n as usize]);
+        for (slot, v) in out.iter_mut().zip(vals) {
+            *slot = v;
+        }
+        Ok(())
     }
 }
 
@@ -141,14 +165,13 @@ pub fn backend_for(kind: EntropyKind) -> Box<dyn EntropyBackend> {
 
 /// Best-effort backend sniff of encoded bytes (single stream or batched
 /// container) without decoding. `None` when the bytes are not a
-/// recognizable stream — callers treat that as "unspecified".
+/// recognizable stream — callers treat that as "unspecified". This is
+/// the backend component of the one format sniffer,
+/// [`crate::codec::api::sniff`] — all format/backend detection (the
+/// cloud ingest path, wire-frame validation, container parsing) funnels
+/// through there.
 pub fn sniff(bytes: &[u8]) -> Option<EntropyKind> {
-    if is_batched(bytes) {
-        // Prelude byte 5: reserved-zero in container v1 (CABAC era), the
-        // container backend id from v2 on — both parse with from_id.
-        return EntropyKind::from_id(*bytes.get(5)?).ok();
-    }
-    EntropyKind::from_id(bytes.first()? >> 6).ok()
+    super::api::sniff(bytes).entropy
 }
 
 // Cap applied to element counts before any up-front allocation; output
@@ -219,7 +242,7 @@ impl EntropyBackend for CabacBackend {
         payload: &[u8],
         levels: usize,
         elements: usize,
-    ) -> Result<Vec<u16>, String> {
+    ) -> Result<Vec<u16>, CodecError> {
         use super::binarize;
         self.reset_contexts(levels);
         let mut dec = CabacDecoder::new(payload);
@@ -236,7 +259,7 @@ impl EntropyBackend for CabacBackend {
         levels: usize,
         elements: usize,
         recon: &[f32],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, CodecError> {
         use super::binarize;
         debug_assert_eq!(recon.len(), levels);
         self.reset_contexts(levels);
@@ -247,6 +270,24 @@ impl EntropyBackend for CabacBackend {
             out.push(recon[n]);
         }
         Ok(out)
+    }
+
+    fn decode_payload_f32_into(
+        &mut self,
+        payload: &[u8],
+        levels: usize,
+        recon: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        use super::binarize;
+        debug_assert_eq!(recon.len(), levels);
+        self.reset_contexts(levels);
+        let mut dec = CabacDecoder::new(payload);
+        for slot in out.iter_mut() {
+            let n = binarize::decode_tu(levels, |pos| dec.decode(&mut self.contexts[pos]));
+            *slot = recon[n];
+        }
+        Ok(())
     }
 }
 
@@ -395,7 +436,7 @@ impl EntropyBackend for RansBackend {
         payload: &[u8],
         levels: usize,
         elements: usize,
-    ) -> Result<Vec<u16>, String> {
+    ) -> Result<Vec<u16>, CodecError> {
         let mut out = Vec::with_capacity(elements.min(MAX_PREALLOC_IDX));
         rans_decode(payload, levels, elements, |n| out.push(n as u16))?;
         Ok(out)
@@ -407,11 +448,27 @@ impl EntropyBackend for RansBackend {
         levels: usize,
         elements: usize,
         recon: &[f32],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, CodecError> {
         debug_assert_eq!(recon.len(), levels);
         let mut out = Vec::with_capacity(elements.min(MAX_PREALLOC_IDX));
         rans_decode(payload, levels, elements, |n| out.push(recon[n]))?;
         Ok(out)
+    }
+
+    fn decode_payload_f32_into(
+        &mut self,
+        payload: &[u8],
+        levels: usize,
+        recon: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), CodecError> {
+        debug_assert_eq!(recon.len(), levels);
+        let mut i = 0usize;
+        rans_decode(payload, levels, out.len(), |n| {
+            out[i] = recon[n];
+            i += 1;
+        })?;
+        Ok(())
     }
 }
 
@@ -424,21 +481,23 @@ fn rans_decode(
     levels: usize,
     elements: usize,
     mut emit: impl FnMut(usize),
-) -> Result<(), String> {
+) -> Result<(), CodecError> {
     let nctx = num_contexts(levels);
     let table_len = nctx * 2;
     if payload.len() < table_len + 8 {
-        return Err(format!(
+        return Err(CodecError::payload(format!(
             "rANS payload truncated: need {} header bytes, have {}",
             table_len + 8,
             payload.len()
-        ));
+        )));
     }
     let mut p0 = Vec::with_capacity(nctx);
     for t in 0..nctx {
         let v = u16::from_le_bytes([payload[2 * t], payload[2 * t + 1]]);
         if v == 0 || v as u32 >= RANS_SCALE {
-            return Err(format!("rANS frequency {v} out of range at position {t}"));
+            return Err(CodecError::payload(format!(
+                "rANS frequency {v} out of range at position {t}"
+            )));
         }
         p0.push(v);
     }
@@ -446,7 +505,9 @@ fn rans_decode(
         |i: usize| u32::from_le_bytes([payload[i], payload[i + 1], payload[i + 2], payload[i + 3]]);
     let mut states = [u32_at(table_len), u32_at(table_len + 4)];
     if states.iter().any(|&s| s < RANS_LOWER) {
-        return Err("rANS initial state below the normalization bound".into());
+        return Err(CodecError::payload(
+            "rANS initial state below the normalization bound",
+        ));
     }
     let mut pos = table_len + 8;
     let mut bit_index = 0usize;
@@ -464,9 +525,9 @@ fn rans_decode(
             *st = freq * (*st >> RANS_SCALE_BITS) + s - start;
             while *st < RANS_LOWER {
                 let Some(&b) = payload.get(pos) else {
-                    return Err(format!(
+                    return Err(CodecError::payload(format!(
                         "rANS payload truncated at byte {pos} (bit {bit_index})"
-                    ));
+                    )));
                 };
                 *st = (*st << 8) | b as u32;
                 pos += 1;
@@ -482,13 +543,15 @@ fn rans_decode(
     // emitted exactly the bytes consumed above, so anything else means
     // the payload (or the element count) is corrupt.
     if states != [RANS_LOWER; 2] {
-        return Err("rANS final-state check failed: corrupt payload".into());
+        return Err(CodecError::payload(
+            "rANS final-state check failed: corrupt payload",
+        ));
     }
     if pos != payload.len() {
-        return Err(format!(
+        return Err(CodecError::payload(format!(
             "rANS payload has {} unconsumed trailing bytes",
             payload.len() - pos
-        ));
+        )));
     }
     Ok(())
 }

@@ -1,0 +1,370 @@
+//! Structured error taxonomy for the lightweight codec.
+//!
+//! Every fallible operation in `codec::*` reports a [`CodecError`]
+//! instead of a bare `String`, so callers can *classify* failures instead
+//! of substring-matching messages:
+//!
+//! * the serving layer distinguishes **recoverable tile corruption**
+//!   (checksum/payload/spec-header damage confined to one substream —
+//!   [`CodecError::is_tile_local`]) from **fatal container errors**
+//!   (an unreadable directory, a forged spec block, an implausible
+//!   element claim) — the tolerant decoder fills the former and refuses
+//!   the latter;
+//! * the wire layer maps backend/advertisement disagreements to protocol
+//!   errors without decoding anything;
+//! * per-tile failures carry their substream index
+//!   ([`CodecError::tile`]), so reports and logs can attribute damage.
+//!
+//! The taxonomy is deliberately flat (one enum, no nested sources): the
+//! codec has no external error causes, and a flat enum keeps matching in
+//! the serving hot path branch-cheap.
+
+use super::entropy::EntropyKind;
+
+/// Everything that can go wrong while parsing, validating, or decoding a
+/// lightweight-codec stream or container (and while designing quantizers
+/// for one).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodecError {
+    /// A single-stream (or per-tile) 12/24-byte header is truncated or
+    /// structurally invalid.
+    Header {
+        /// What rule the header bytes broke.
+        detail: String,
+    },
+    /// A batched container's prelude or directory is truncated or
+    /// internally inconsistent. Always fatal for the whole container.
+    Directory {
+        /// What rule the prelude/directory broke.
+        detail: String,
+    },
+    /// A container-v3 per-tile quantizer spec record failed structural
+    /// validation. Fatal: nothing decodes from a container whose design
+    /// block cannot be trusted.
+    SpecRecord {
+        /// Substream the record belongs to (`None` while parsing a record
+        /// in isolation).
+        tile: Option<usize>,
+        /// What rule the record broke.
+        detail: String,
+    },
+    /// A stream payload failed to decode (entropy-stage truncation,
+    /// integrity-check failure, malformed tables). Recoverable per tile
+    /// when raised inside a container substream.
+    Payload {
+        /// Substream the payload belongs to (`None` for single streams).
+        tile: Option<usize>,
+        /// What the entropy stage rejected.
+        detail: String,
+    },
+    /// A substream's stored FNV-1a checksum disagrees with its payload.
+    /// Recoverable per tile: the damage is confined to one substream.
+    ChecksumMismatch {
+        /// Substream whose checksum failed (`None` before attribution).
+        tile: Option<usize>,
+        /// Checksum recorded in the directory.
+        stored: u32,
+        /// Checksum computed over the payload bytes.
+        computed: u32,
+    },
+    /// An element-count claim exceeds what any compressed stream of that
+    /// size could carry (see `codec::batch::max_elems_per_payload_byte`).
+    /// Fatal at directory/wire scope; tile-attributed when the re-check
+    /// against a tile's own header bound fails.
+    ImplausibleElements {
+        /// Substream the claim belongs to (`None` at wire/stream scope).
+        tile: Option<usize>,
+        /// The claimed element count.
+        claimed: u64,
+        /// The payload size the claim was checked against.
+        payload_bytes: u64,
+        /// The elements-per-byte bound that was exceeded.
+        bound: u64,
+    },
+    /// The caller-expected element count disagrees with what the stream
+    /// or container claims to carry.
+    ElementCountMismatch {
+        /// What the caller expected.
+        expected: u64,
+        /// What the bytes claim.
+        claimed: u64,
+    },
+    /// A container-v3 tile's own stream header disagrees with the
+    /// directory's designed spec for that tile. Recoverable per tile (the
+    /// tile is treated as corrupt — neither side can be trusted).
+    SpecHeaderMismatch {
+        /// Substream whose header and spec disagree.
+        tile: Option<usize>,
+        /// Which fields disagreed.
+        detail: String,
+    },
+    /// An entropy-backend id not defined by this codec version.
+    UnknownBackend {
+        /// The offending id byte.
+        id: u8,
+    },
+    /// The stream's self-described backend disagrees with what the caller
+    /// asserted (CLI `--entropy`, a wire-frame advertisement).
+    BackendMismatch {
+        /// The backend the caller asserted.
+        expected: EntropyKind,
+        /// The backend the bytes actually carry (`None`: unsniffable).
+        found: Option<EntropyKind>,
+    },
+    /// A quantizer designer declined or failed (degenerate scope, failed
+    /// model fit). Callers keep a static fallback spec, so this is never
+    /// fatal to an encode.
+    Design {
+        /// Why the design failed.
+        detail: String,
+    },
+    /// Invalid caller input: an unknown CLI spelling, a missing element
+    /// count for a non-self-describing stream, an unusable parameter.
+    Invalid {
+        /// What was invalid.
+        detail: String,
+    },
+}
+
+impl CodecError {
+    /// Convenience constructor for [`CodecError::Header`].
+    pub fn header(detail: impl Into<String>) -> Self {
+        CodecError::Header {
+            detail: detail.into(),
+        }
+    }
+
+    /// Convenience constructor for [`CodecError::Directory`].
+    pub fn directory(detail: impl Into<String>) -> Self {
+        CodecError::Directory {
+            detail: detail.into(),
+        }
+    }
+
+    /// Convenience constructor for a single-stream [`CodecError::Payload`].
+    pub fn payload(detail: impl Into<String>) -> Self {
+        CodecError::Payload {
+            tile: None,
+            detail: detail.into(),
+        }
+    }
+
+    /// Convenience constructor for [`CodecError::Design`].
+    pub fn design(detail: impl Into<String>) -> Self {
+        CodecError::Design {
+            detail: detail.into(),
+        }
+    }
+
+    /// Convenience constructor for [`CodecError::Invalid`].
+    pub fn invalid(detail: impl Into<String>) -> Self {
+        CodecError::Invalid {
+            detail: detail.into(),
+        }
+    }
+
+    /// Attribute this error to container substream `tile` (no-op for
+    /// variants that carry no tile index). Applied by the container
+    /// decode loops so per-tile failures identify their substream.
+    #[must_use]
+    pub fn with_tile(mut self, t: usize) -> Self {
+        match &mut self {
+            CodecError::SpecRecord { tile, .. }
+            | CodecError::Payload { tile, .. }
+            | CodecError::ChecksumMismatch { tile, .. }
+            | CodecError::ImplausibleElements { tile, .. }
+            | CodecError::SpecHeaderMismatch { tile, .. } => *tile = Some(t),
+            // Header damage inside a tile is tile-local too: re-wrap, so
+            // the failure carries its substream index. An undefined
+            // backend id in a tile's header is the same class (the tile's
+            // bytes are damaged or forged; the container survives it).
+            CodecError::Header { detail } => {
+                let detail = std::mem::take(detail);
+                return CodecError::Payload {
+                    tile: Some(t),
+                    detail: format!("tile header: {detail}"),
+                };
+            }
+            CodecError::UnknownBackend { id } => {
+                return CodecError::Payload {
+                    tile: Some(t),
+                    detail: format!("tile header: unknown entropy backend id {id}"),
+                };
+            }
+            _ => {}
+        }
+        self
+    }
+
+    /// The substream this error is attributed to, if any.
+    pub fn tile(&self) -> Option<usize> {
+        match self {
+            CodecError::SpecRecord { tile, .. }
+            | CodecError::Payload { tile, .. }
+            | CodecError::ChecksumMismatch { tile, .. }
+            | CodecError::ImplausibleElements { tile, .. }
+            | CodecError::SpecHeaderMismatch { tile, .. } => *tile,
+            _ => None,
+        }
+    }
+
+    /// True when the failure is confined to one container substream — the
+    /// class the tolerant decoder may fill-and-report instead of failing
+    /// the whole tensor. Everything else (directory damage, forged spec
+    /// blocks, count mismatches, and implausible element claims at ANY
+    /// scope — a forged count is exactly what a tolerant fill would
+    /// allocate, so it is never fillable) is a container-level error even
+    /// for tolerant decodes.
+    pub fn is_tile_local(&self) -> bool {
+        matches!(
+            self,
+            CodecError::Payload { tile: Some(_), .. }
+                | CodecError::ChecksumMismatch { tile: Some(_), .. }
+                | CodecError::SpecHeaderMismatch { tile: Some(_), .. }
+        )
+    }
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let at = |tile: &Option<usize>| match tile {
+            Some(t) => format!("substream {t}: "),
+            None => String::new(),
+        };
+        match self {
+            CodecError::Header { detail } => write!(f, "stream header: {detail}"),
+            CodecError::Directory { detail } => write!(f, "container directory: {detail}"),
+            CodecError::SpecRecord { tile, detail } => {
+                write!(f, "{}quant-spec record: {detail}", at(tile))
+            }
+            CodecError::Payload { tile, detail } => write!(f, "{}payload: {detail}", at(tile)),
+            CodecError::ChecksumMismatch {
+                tile,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "{}checksum mismatch: stored {stored:#010x}, computed {computed:#010x}",
+                at(tile)
+            ),
+            CodecError::ImplausibleElements {
+                tile,
+                claimed,
+                payload_bytes,
+                bound,
+            } => write!(
+                f,
+                "{}implausible element count {claimed} for a {payload_bytes}-byte payload \
+                 (bound {bound} elements/byte)",
+                at(tile)
+            ),
+            CodecError::ElementCountMismatch { expected, claimed } => write!(
+                f,
+                "stream carries {claimed} elements, expected {expected}"
+            ),
+            CodecError::SpecHeaderMismatch { tile, detail } => write!(
+                f,
+                "{}tile header disagrees with the directory quant spec: {detail}",
+                at(tile)
+            ),
+            CodecError::UnknownBackend { id } => write!(f, "unknown entropy backend id {id}"),
+            CodecError::BackendMismatch { expected, found } => match found {
+                Some(found) => write!(
+                    f,
+                    "stream was encoded with the {found} backend, caller asserted {expected}"
+                ),
+                None => write!(
+                    f,
+                    "caller asserted the {expected} backend but the bytes are unsniffable"
+                ),
+            },
+            CodecError::Design { detail } => write!(f, "quantizer design: {detail}"),
+            CodecError::Invalid { detail } => f.write_str(detail),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_attribution_round_trips() {
+        let e = CodecError::payload("rANS truncated").with_tile(3);
+        assert_eq!(e.tile(), Some(3));
+        assert!(e.is_tile_local());
+        assert!(e.to_string().contains("substream 3"));
+
+        let e = CodecError::directory("bad magic");
+        assert_eq!(e.tile(), None);
+        assert!(!e.is_tile_local());
+
+        // Header damage inside a tile re-classifies as tile-local payload
+        // corruption (the tile's header bytes are part of its payload).
+        let e = CodecError::header("truncated").with_tile(1);
+        assert!(matches!(e, CodecError::Payload { tile: Some(1), .. }));
+        assert!(e.is_tile_local());
+
+        // Same for an undefined backend id in a tile's header — the
+        // failure must name its substream so tolerant reports stay
+        // tile-attributed (at directory scope it stays fatal, below).
+        let e = CodecError::UnknownBackend { id: 2 }.with_tile(4);
+        assert!(matches!(e, CodecError::Payload { tile: Some(4), .. }));
+        assert!(e.is_tile_local());
+        assert!(e.to_string().contains("backend id 2"), "{e}");
+    }
+
+    #[test]
+    fn fatal_classes_are_not_tile_local() {
+        for e in [
+            CodecError::directory("x"),
+            CodecError::SpecRecord {
+                tile: Some(0),
+                detail: "bad kind".into(),
+            },
+            CodecError::ElementCountMismatch {
+                expected: 10,
+                claimed: 20,
+            },
+            CodecError::UnknownBackend { id: 7 },
+            CodecError::ImplausibleElements {
+                tile: None,
+                claimed: 1 << 40,
+                payload_bytes: 8,
+                bound: 32_768,
+            },
+        ] {
+            assert!(!e.is_tile_local(), "{e} misclassified as tile-local");
+        }
+        // The same implausible claim *re-checked against a tile's own
+        // header* carries its tile index for attribution, but is still
+        // NOT fillable: the claimed count is exactly what a tolerant fill
+        // would allocate, so the decoder refuses it at any scope.
+        let e = CodecError::ImplausibleElements {
+            tile: Some(2),
+            claimed: 1 << 40,
+            payload_bytes: 8,
+            bound: 16_384,
+        };
+        assert_eq!(e.tile(), Some(2));
+        assert!(!e.is_tile_local());
+    }
+
+    #[test]
+    fn display_is_stable_enough_for_logs() {
+        let e = CodecError::ChecksumMismatch {
+            tile: Some(5),
+            stored: 0xDEAD_BEEF,
+            computed: 0x0BAD_F00D,
+        };
+        let s = e.to_string();
+        assert!(s.contains("substream 5") && s.contains("0xdeadbeef"), "{s}");
+        let e = CodecError::BackendMismatch {
+            expected: EntropyKind::Rans,
+            found: Some(EntropyKind::Cabac),
+        };
+        assert!(e.to_string().contains("cabac") && e.to_string().contains("rans"));
+    }
+}

@@ -32,6 +32,7 @@
 //! EXPERIMENTS.md).
 
 use super::entropy::EntropyKind;
+use super::error::CodecError;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StreamKind {
@@ -129,10 +130,13 @@ impl Header {
         }
     }
 
-    pub fn read(bytes: &[u8]) -> Result<(Header, usize), String> {
+    pub fn read(bytes: &[u8]) -> Result<(Header, usize), CodecError> {
         let need = |n: usize| {
             if bytes.len() < n {
-                Err(format!("header truncated: need {n} bytes, have {}", bytes.len()))
+                Err(CodecError::header(format!(
+                    "truncated: need {n} bytes, have {}",
+                    bytes.len()
+                )))
             } else {
                 Ok(())
             }
@@ -141,24 +145,26 @@ impl Header {
         let kind = match bytes[0] & 0x0F {
             0 => StreamKind::Classification,
             1 => StreamKind::Detection,
-            k => return Err(format!("bad stream kind {k}")),
+            k => return Err(CodecError::header(format!("bad stream kind {k}"))),
         };
         let quant = match (bytes[0] >> 4) & 0x03 {
             0 => QuantKind::Uniform,
             1 => QuantKind::EntropyConstrained,
-            q => return Err(format!("bad quantizer kind {q}")),
+            q => return Err(CodecError::header(format!("bad quantizer kind {q}"))),
         };
         let entropy = EntropyKind::from_id(bytes[0] >> 6)?;
         let levels = bytes[1] as usize;
         if levels < 2 {
-            return Err(format!("bad level count {levels}"));
+            return Err(CodecError::header(format!("bad level count {levels}")));
         }
         let f32_at =
             |i: usize| f32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
         let c_min = f32_at(2);
         let c_max = f32_at(6);
         if !(c_max > c_min) || !c_min.is_finite() || !c_max.is_finite() {
-            return Err(format!("bad clip range [{c_min}, {c_max}]"));
+            return Err(CodecError::header(format!(
+                "bad clip range [{c_min}, {c_max}]"
+            )));
         }
         let img_w = bytes[10];
         let img_h = bytes[11];
@@ -361,23 +367,29 @@ impl SubstreamDirectory {
     /// flip between the defined ids) — those only relabel the container,
     /// and the per-substream checksums plus each tile's own header still
     /// guard what actually decodes.
-    pub fn read(bytes: &[u8]) -> Result<(SubstreamDirectory, usize), String> {
+    pub fn read(bytes: &[u8]) -> Result<(SubstreamDirectory, usize), CodecError> {
         if bytes.len() < BATCH_PRELUDE_BYTES {
-            return Err(format!(
-                "batched stream truncated: need {BATCH_PRELUDE_BYTES} prelude bytes, have {}",
+            return Err(CodecError::directory(format!(
+                "truncated: need {BATCH_PRELUDE_BYTES} prelude bytes, have {}",
                 bytes.len()
-            ));
+            )));
         }
         if bytes[..4] != BATCH_MAGIC {
-            return Err("bad batch magic".into());
+            return Err(CodecError::directory("bad batch magic"));
         }
         if !(BATCH_MIN_VERSION..=BATCH_VERSION).contains(&bytes[4]) {
-            return Err(format!("unsupported batch version {}", bytes[4]));
+            return Err(CodecError::directory(format!(
+                "unsupported batch version {}",
+                bytes[4]
+            )));
         }
         let entropy = if bytes[4] == 1 {
             // v1 predates the backend field: byte 5 was reserved-zero.
             if bytes[5] != 0 {
-                return Err(format!("nonzero reserved byte {}", bytes[5]));
+                return Err(CodecError::directory(format!(
+                    "nonzero reserved byte {}",
+                    bytes[5]
+                )));
             }
             EntropyKind::Cabac
         } else {
@@ -388,14 +400,15 @@ impl SubstreamDirectory {
         let total_elements = u64::from_le_bytes([
             bytes[10], bytes[11], bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17],
         ]);
+        let overflow = || CodecError::directory("directory overflow");
         let entries_end = BATCH_PRELUDE_BYTES
-            .checked_add(count.checked_mul(DIR_ENTRY_BYTES).ok_or("directory overflow")?)
-            .ok_or("directory overflow")?;
+            .checked_add(count.checked_mul(DIR_ENTRY_BYTES).ok_or_else(overflow)?)
+            .ok_or_else(overflow)?;
         if bytes.len() < entries_end {
-            return Err(format!(
-                "batched stream truncated: directory needs {entries_end} bytes, have {}",
+            return Err(CodecError::directory(format!(
+                "truncated: directory needs {entries_end} bytes, have {}",
                 bytes.len()
-            ));
+            )));
         }
         let mut entries = Vec::with_capacity(count);
         // Checked accumulation: ~2^32 max-valued entries would overflow
@@ -416,16 +429,16 @@ impl SubstreamDirectory {
             };
             elem_sum = elem_sum
                 .checked_add(e.elements as u64)
-                .ok_or("directory element counts overflow u64")?;
+                .ok_or_else(|| CodecError::directory("element counts overflow u64"))?;
             byte_sum = byte_sum
                 .checked_add(e.byte_len as u64)
-                .ok_or("directory byte lengths overflow u64")?;
+                .ok_or_else(|| CodecError::directory("byte lengths overflow u64"))?;
             entries.push(e);
         }
         if elem_sum != total_elements {
-            return Err(format!(
-                "directory element counts sum to {elem_sum}, prelude says {total_elements}"
-            ));
+            return Err(CodecError::directory(format!(
+                "element counts sum to {elem_sum}, prelude says {total_elements}"
+            )));
         }
         // v3: the per-tile quantizer design block sits between the entries
         // and the payloads — exactly one self-delimiting spec record per
@@ -438,7 +451,7 @@ impl SubstreamDirectory {
             let mut specs = Vec::with_capacity(count);
             for i in 0..count {
                 let (spec, used) = crate::codec::design::QuantSpec::read(&bytes[off..])
-                    .map_err(|e| format!("substream {i} quant spec: {e}"))?;
+                    .map_err(|e| e.with_tile(i))?;
                 off += used;
                 specs.push(spec);
             }
@@ -448,10 +461,10 @@ impl SubstreamDirectory {
         };
         let dir_end = off;
         if byte_sum != (bytes.len() - dir_end) as u64 {
-            return Err(format!(
-                "directory byte lengths sum to {byte_sum}, payload is {} bytes",
+            return Err(CodecError::directory(format!(
+                "byte lengths sum to {byte_sum}, payload is {} bytes",
                 bytes.len() - dir_end
-            ));
+            )));
         }
         Ok((
             SubstreamDirectory {

@@ -7,10 +7,19 @@
 //! simplified CABAC, or a two-way interleaved rANS coder with static
 //! in-band frequency tables ([`entropy`]).
 //!
+//! **Public entry point: the [`api::Codec`] façade** (re-exported at the
+//! crate root) — a builder-configured session owning its thread pool,
+//! entropy backend, and scratch buffers, with format sniffing internal
+//! and a zero-copy `decode_into` for the serving hot path. Every
+//! fallible operation reports a typed [`CodecError`]. The free functions
+//! of earlier releases (`encode_batched`, `decode_any`, …) survive one
+//! release as deprecated shims over the same engine.
+//!
 //! Request-path code: everything here is allocation-conscious and
 //! branch-lean; see `rust/benches/codec.rs` for the throughput targets
 //! (§III-E complexity claims) and the CABAC-vs-rANS comparison.
 
+pub mod api;
 pub mod batch;
 pub mod binarize;
 pub mod bitstream;
@@ -18,14 +27,20 @@ pub mod cabac;
 pub mod design;
 pub mod ecq;
 pub mod entropy;
+pub mod error;
 pub mod header;
 pub mod stream;
 pub mod uniform;
 
-pub use batch::{
-    decode_any, decode_batched, decode_batched_tolerant, encode_batched,
-    encode_batched_designed, BatchReport, BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS,
+pub use api::{
+    sniff, Codec, CodecBuilder, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo, StreamFormat,
 };
+#[allow(deprecated)]
+pub use batch::{
+    batched_elements, decode_any, decode_batched, decode_batched_tolerant, encode_batched,
+    encode_batched_designed,
+};
+pub use batch::{BatchReport, BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS};
 pub use design::{
     design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner, ModelOptimalDesigner,
     QuantDesigner, QuantSpec, StaticDesigner,
@@ -35,6 +50,9 @@ pub use ecq::{
     NonUniformQuantizer,
 };
 pub use entropy::{backend_for, sniff as sniff_entropy, EntropyBackend, EntropyKind};
+pub use error::CodecError;
 pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind, SubstreamDirectory};
-pub use stream::{decode, decode_indices, EncodedStream, Encoder, EncoderConfig, Quantizer};
+#[allow(deprecated)]
+pub use stream::{decode, decode_indices};
+pub use stream::{EncodedStream, Encoder, EncoderConfig, Quantizer};
 pub use uniform::{clip, UniformQuantizer};

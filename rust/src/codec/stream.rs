@@ -6,6 +6,7 @@
 use super::design::QuantSpec;
 use super::ecq::NonUniformQuantizer;
 use super::entropy::{backend_for, EntropyBackend, EntropyKind};
+use super::error::CodecError;
 use super::header::{DetInfo, Header, QuantKind, StreamKind};
 use super::uniform::UniformQuantizer;
 
@@ -65,9 +66,8 @@ impl Quantizer {
 /// The quantizer is carried as a *designed* [`QuantSpec`] — the output of
 /// the [`super::design`] stage (or a hand-written spec, today's
 /// behavior). The [`Encoder`] materializes it into a [`Quantizer`] once
-/// and rebuilds only when the spec changes, so swapping a freshly
-/// designed spec mid-run (the edge's windowed re-design) is just a field
-/// assignment.
+/// at construction; swapping a freshly designed spec mid-run (the edge's
+/// windowed re-design) goes through [`Encoder::set_quant`].
 #[derive(Clone, Debug)]
 pub struct EncoderConfig {
     pub kind: StreamKind,
@@ -145,13 +145,19 @@ impl EncoderConfig {
 }
 
 /// Reusable encoder (owns scratch buffers; one per worker thread).
+///
+/// The configuration is immutable after construction except through
+/// [`Encoder::set_quant`], which swaps the spec and re-materializes the
+/// quantizer atomically — so the header this encoder writes and the
+/// payload its backend codes can never describe different quantizers or
+/// backends (there is no runtime re-check; disagreement is impossible by
+/// construction).
 pub struct Encoder {
-    pub config: EncoderConfig,
+    config: EncoderConfig,
     backend: Box<dyn EntropyBackend>,
-    /// Materialized form of `config.quant`, rebuilt when the spec changes.
+    /// Materialized form of `config.quant` (kept in lockstep by
+    /// [`Encoder::set_quant`]).
     quantizer: Quantizer,
-    /// The spec `quantizer` was materialized from.
-    spec_cache: QuantSpec,
 }
 
 /// An encoded feature tensor.
@@ -173,19 +179,31 @@ impl Encoder {
     pub fn new(config: EncoderConfig) -> Self {
         let backend = backend_for(config.entropy);
         let quantizer = config.quant.materialize();
-        let spec_cache = config.quant.clone();
         Self {
             config,
             backend,
             quantizer,
-            spec_cache,
         }
     }
 
-    /// The materialized quantizer currently driving `encode` (refreshed
-    /// from `config.quant` at the top of every encode call).
+    /// The (immutable) configuration this encoder was built with.
+    pub fn config(&self) -> &EncoderConfig {
+        &self.config
+    }
+
+    /// The materialized quantizer currently driving `encode`.
     pub fn quantizer(&self) -> &Quantizer {
         &self.quantizer
+    }
+
+    /// Swap in a freshly designed quantizer spec (the online re-design
+    /// path). The spec and its materialized quantizer update together, so
+    /// the next stream's header and payload agree by construction. The
+    /// entropy backend is not swappable post-construction — build a new
+    /// encoder to change it.
+    pub fn set_quant(&mut self, quant: impl Into<QuantSpec>) {
+        self.config.quant = quant.into();
+        self.quantizer = self.config.quant.materialize();
     }
 
     /// Encode one feature tensor into a standalone bit-stream. All
@@ -193,24 +211,78 @@ impl Encoder {
     /// independently decodable); the hot loops live in the backend and
     /// stay monomorphic per quantizer kind.
     pub fn encode(&mut self, data: &[f32]) -> EncodedStream {
-        // `config` is deliberately pub (the online design controller swaps
-        // freshly designed specs mid-run); honor spec and entropy swaps
-        // here — the header and the payload must never disagree.
-        if self.backend.kind() != self.config.entropy {
-            self.backend = backend_for(self.config.entropy);
-        }
-        if self.spec_cache != self.config.quant {
-            self.quantizer = self.config.quant.materialize();
-            self.spec_cache = self.config.quant.clone();
-        }
         let mut bytes = Vec::with_capacity(data.len() / 4 + 32);
-        self.config.header().write(&mut bytes);
-        self.backend.encode_payload(&self.quantizer, data, &mut bytes);
+        self.encode_append(data, &mut bytes);
         EncodedStream {
             bytes,
             elements: data.len(),
         }
     }
+
+    /// Encode one feature tensor into a caller-owned buffer, which is
+    /// cleared first — repeated encodes through one buffer amortize the
+    /// output allocation (the edge device's steady-state path). Returns
+    /// the number of bytes written.
+    pub fn encode_into(&mut self, data: &[f32], out: &mut Vec<u8>) -> usize {
+        out.clear();
+        self.encode_append(data, out)
+    }
+
+    fn encode_append(&mut self, data: &[f32], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        self.config.header().write(out);
+        self.backend.encode_payload(&self.quantizer, data, out);
+        out.len() - start
+    }
+}
+
+/// Reconstruction table of a parsed header: the uniform level grid, or
+/// the in-band ECQ table.
+pub(crate) fn recon_table_of(header: &Header) -> Vec<f32> {
+    match (&header.quant, &header.recon) {
+        (QuantKind::Uniform, _) => {
+            UniformQuantizer::new(header.c_min, header.c_max, header.levels).levels_vec()
+        }
+        (QuantKind::EntropyConstrained, Some(r)) => r.clone(),
+        (QuantKind::EntropyConstrained, None) => unreachable!("Header::read enforces recon"),
+    }
+}
+
+/// Owned-output single-stream decode (the engine behind the deprecated
+/// [`decode`] and the container tile decoder's fallback path).
+pub(crate) fn decode_stream_owned(
+    bytes: &[u8],
+    elements: usize,
+) -> Result<(Vec<f32>, Header), CodecError> {
+    let (header, off) = Header::read(bytes)?;
+    let recon_table = recon_table_of(&header);
+    // The header names the backend (legacy streams carry the CABAC id).
+    // Both backends decode straight into f32 output (no intermediate
+    // index buffer), and `elements` may come from an untrusted wire frame
+    // or container directory: the backend caps its up-front allocation
+    // (output still grows to the true size).
+    let out = backend_for(header.entropy).decode_payload_f32(
+        &bytes[off..],
+        header.levels,
+        elements,
+        &recon_table,
+    )?;
+    Ok((out, header))
+}
+
+/// Zero-copy single-stream decode: exactly `out.len()` elements are
+/// written into the caller's slice (a slot of a reused buffer — the
+/// serving hot path; see [`crate::codec::api::Codec::decode_into`]).
+pub(crate) fn decode_stream_into(bytes: &[u8], out: &mut [f32]) -> Result<Header, CodecError> {
+    let (header, off) = Header::read(bytes)?;
+    let recon_table = recon_table_of(&header);
+    backend_for(header.entropy).decode_payload_f32_into(
+        &bytes[off..],
+        header.levels,
+        &recon_table,
+        out,
+    )?;
+    Ok(header)
 }
 
 /// Decode a bit-stream produced by [`Encoder::encode`].
@@ -218,33 +290,28 @@ impl Encoder {
 /// `elements` is the feature-tensor element count, known to both sides
 /// from the network architecture + split point (the header carries only
 /// what the paper's 12/24-byte side info carries).
-pub fn decode(bytes: &[u8], elements: usize) -> Result<(Vec<f32>, Header), String> {
-    let (header, off) = Header::read(bytes)?;
-    let levels = header.levels;
-    let recon_table: Vec<f32> = match (&header.quant, &header.recon) {
-        (QuantKind::Uniform, _) => {
-            UniformQuantizer::new(header.c_min, header.c_max, levels).levels_vec()
-        }
-        (QuantKind::EntropyConstrained, Some(r)) => r.clone(),
-        (QuantKind::EntropyConstrained, None) => unreachable!("Header::read enforces recon"),
-    };
-    // The header names the backend (legacy streams carry the CABAC id).
-    // Both backends decode straight into f32 output (no intermediate
-    // index buffer — this is the cloud worker's per-tile hot path), and
-    // `elements` may come from an untrusted wire frame or container
-    // directory: the backend caps its up-front allocation (output still
-    // grows to the true size).
-    let out = backend_for(header.entropy).decode_payload_f32(
-        &bytes[off..],
-        levels,
-        elements,
-        &recon_table,
-    )?;
-    Ok((out, header))
+#[deprecated(
+    since = "0.2.0",
+    note = "use the `Codec` façade (`lwfc::CodecBuilder`): `codec.decode(bytes)` / \
+            `codec.decode_into(bytes, &mut buf)` with `expect_elements` configured"
+)]
+pub fn decode(bytes: &[u8], elements: usize) -> Result<(Vec<f32>, Header), CodecError> {
+    decode_stream_owned(bytes, elements)
 }
 
 /// Decode to quantizer *indices* (for analysis tools and tests).
-pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header), String> {
+#[deprecated(
+    since = "0.2.0",
+    note = "use `lwfc::Codec::decode_indices` on a `Codec` session"
+)]
+pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header), CodecError> {
+    decode_indices_impl(bytes, elements)
+}
+
+pub(crate) fn decode_indices_impl(
+    bytes: &[u8],
+    elements: usize,
+) -> Result<(Vec<u16>, Header), CodecError> {
     let (header, off) = Header::read(bytes)?;
     let idx = backend_for(header.entropy).decode_payload(&bytes[off..], header.levels, elements)?;
     Ok((idx, header))
@@ -253,6 +320,9 @@ pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header
 #[cfg(test)]
 mod tests {
     use super::*;
+    // The in-module tests pin the engine directly; the deprecated free
+    // functions are thin aliases of these.
+    use super::decode_stream_owned as decode;
     use crate::codec::ecq::{design, EcqParams};
     use crate::util::prop::prop_check;
     use crate::util::rng::SplitMix64;

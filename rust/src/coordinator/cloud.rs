@@ -7,12 +7,11 @@ use anyhow::Result;
 
 use super::net::{WireItem, WireOutcome};
 use super::protocol::{CompressedItem, Outcome, TaskKind};
-use crate::codec;
+use crate::codec::{Codec, CodecBuilder, CodecError, EntropyKind, QuantSpec};
 use crate::data;
 use crate::eval::{decode_grid, Detection};
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::tensor::Tensor;
-use crate::util::threadpool::ThreadPool;
 
 /// Static (Send) configuration for building a [`CloudWorker`] in-thread.
 #[derive(Clone, Debug)]
@@ -48,7 +47,12 @@ pub struct CloudWorker {
     config: CloudConfig,
     feature_shape: Vec<usize>, // batched [B, H, W, C]
     grid: usize,
-    pool: ThreadPool,
+    /// Decode session: owns the tile-parallel pool and enforces the
+    /// expected element count against every wire item before decoding.
+    codec: Codec,
+    /// Reused decode output (cleared per item, capacity retained) — the
+    /// zero-copy `decode_into` hot path.
+    scratch: Vec<f32>,
     pub times: CloudTimes,
 }
 
@@ -64,11 +68,25 @@ impl CloudWorker {
             TaskKind::Detect => (&manifest.detect.cloud, manifest.detect.feature.clone()),
         };
         assert_eq!(feature[0], config.batch, "artifact batch mismatch");
+        // The decode-side session: the quant spec is a placeholder (this
+        // worker never encodes), the element expectation is the real
+        // contract — a wire item claiming any other count is rejected
+        // before its bytes reach a decoder.
+        let per_item: usize = feature[1..].iter().product();
+        let codec = CodecBuilder::new(QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 1.0,
+            levels: 2,
+        })
+        .threads(config.threads.max(1))
+        .expect_elements(per_item)
+        .build();
         Ok(Self {
             exe: rt.load(cloud_path)?,
             grid: manifest.detect_grid,
             feature_shape: feature,
-            pool: ThreadPool::new(config.threads.max(1)),
+            codec,
+            scratch: Vec::new(),
             config,
             times: CloudTimes::default(),
         })
@@ -83,19 +101,31 @@ impl CloudWorker {
         let t0 = Instant::now();
         let mut feat = Vec::with_capacity(self.config.batch * per_item);
         for item in items {
-            // `decode_any` sniffs the wire format: tiled multi-substream
-            // containers decode tile-parallel on the worker's pool, legacy
-            // single streams fall through to the sequential decoder. The
-            // stream header names its entropy backend.
-            let (values, header) =
-                codec::decode_any(&item.bytes, item.elements, &self.pool)
-                    .map_err(anyhow::Error::msg)?;
-            match header.entropy {
-                codec::EntropyKind::Cabac => self.times.cabac_items += 1,
-                codec::EntropyKind::Rans => self.times.rans_items += 1,
+            // The codec session sniffs the wire format internally: tiled
+            // multi-substream containers decode tile-parallel straight
+            // into the reused scratch buffer (sized once, no per-tile
+            // output allocation or concatenation),
+            // legacy single streams fall through to the sequential
+            // decoder. The session's `expect_elements` guard re-checks
+            // container claims; the wire item's own claim is checked here
+            // so a mislabeled legacy CABAC stream (whose decoder has no
+            // integrity check) fails loudly instead of silently decoding
+            // `per_item` fabricated values.
+            if item.elements != per_item {
+                return Err(CodecError::ElementCountMismatch {
+                    expected: per_item as u64,
+                    claimed: item.elements as u64,
+                }
+                .into());
             }
-            debug_assert_eq!(values.len(), per_item);
-            feat.extend_from_slice(&values);
+            let info = self.codec.decode_into(&item.bytes, &mut self.scratch)?;
+            match info.entropy {
+                Some(EntropyKind::Cabac) => self.times.cabac_items += 1,
+                Some(EntropyKind::Rans) => self.times.rans_items += 1,
+                None => {}
+            }
+            debug_assert_eq!(self.scratch.len(), per_item);
+            feat.extend_from_slice(&self.scratch);
         }
         for _ in items.len()..self.config.batch {
             let tail = feat[feat.len() - per_item..].to_vec();

@@ -7,7 +7,7 @@
 //! [`OnlineDesignController`] re-designs the spec on a windowed cadence
 //! (kind-preserving — an ECQ or signed-range spec never degrades to
 //! `Uniform(0, c_max)`); at tile granularity every container tile gets
-//! its own freshly designed quantizer (`encode_batched_designed`,
+//! its own freshly designed quantizer (the session's tile designer,
 //! container v3).
 //!
 //! Constructed *inside* its worker thread (the xla handles are not Send);
@@ -20,15 +20,11 @@ use anyhow::Result;
 
 use super::protocol::{CompressedItem, QuantSpec, Request, TaskKind};
 use super::stats::{kind_preserving_designer, AdaptiveConfig, OnlineDesignController};
-use crate::codec::{
-    designer_for, encode_batched, encode_batched_designed, ClipGranularity, DesignKind, DetInfo,
-    Encoder, EncoderConfig, EntropyKind, QuantDesigner, DEFAULT_TILE_ELEMS,
-};
+use crate::codec::{Codec, CodecBuilder, ClipGranularity, DesignKind, DetInfo, EntropyKind};
 use crate::data;
 use crate::modeling::Activation;
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::tensor::Tensor;
-use crate::util::threadpool::ThreadPool;
 
 /// Static (Send) configuration for building an [`EdgeWorker`] in-thread.
 #[derive(Clone, Debug)]
@@ -54,9 +50,9 @@ pub struct EdgeConfig {
     /// granularity.
     pub adaptive: Option<AdaptiveConfig>,
     /// Codec threads per edge device. 1 = legacy single-stream wire format;
-    /// > 1 = tiled multi-substream container encoded on a worker-local
-    /// [`ThreadPool`] (`codec::batch`). Tile-granularity design always
-    /// encodes the tiled container, whatever the thread count.
+    /// > 1 = tiled multi-substream container encoded on the session's
+    /// worker pool. Tile-granularity design always encodes the tiled
+    /// container, whatever the thread count.
     pub threads: usize,
 }
 
@@ -131,16 +127,16 @@ pub struct EdgeTimes {
 
 pub struct EdgeWorker {
     exe: Executable,
-    encoder: Encoder,
+    /// The encode session: owns the entropy backend, the tile pool, and
+    /// (at tile granularity) the per-tile designer. Format selection
+    /// (single stream vs. tiled container) is the session's.
+    codec: Codec,
     config: EdgeConfig,
     input_shape: Vec<usize>,
     feature_elems: usize,
-    /// Windowed stream-granularity re-design (kind-preserving).
+    /// Windowed stream-granularity re-design (kind-preserving); swaps
+    /// fresh specs into the session via [`Codec::set_quant`].
     controller: Option<OnlineDesignController>,
-    /// Tile-granularity designer: every container tile gets its own spec.
-    tile_designer: Option<Box<dyn QuantDesigner>>,
-    /// Present when batched (tiled) encoding is active.
-    pool: Option<ThreadPool>,
     pub times: EdgeTimes,
 }
 
@@ -162,21 +158,6 @@ impl EdgeWorker {
             ),
         };
         let exe = rt.load(edge_path)?;
-        let enc_cfg = match config.task {
-            TaskKind::Detect => EncoderConfig::detection(
-                config.quant.clone(),
-                img,
-                DetInfo {
-                    net_w: data::DET_IMG as u16,
-                    net_h: data::DET_IMG as u16,
-                    feat_h: feature[1] as u16,
-                    feat_w: feature[2] as u16,
-                    feat_c: feature[3] as u16,
-                },
-            ),
-            _ => EncoderConfig::classification(config.quant.clone(), img),
-        }
-        .with_entropy(config.entropy);
         let input_shape = match config.task {
             TaskKind::Detect => vec![config.batch, data::DET_IMG, data::DET_IMG, 3],
             _ => vec![config.batch, data::IMG, data::IMG, 3],
@@ -195,22 +176,34 @@ impl EdgeWorker {
                     config.quant.clone(),
                 )
             });
-        // Tile-granularity design encodes container v3 with one designed
-        // spec per tile (the batched container regardless of threads).
-        let tile_designer = (config.design != DesignKind::Static
-            && config.granularity == ClipGranularity::Tile)
-            .then(|| designer_for(config.design, &config.quant, acfg.activation, acfg.kappa));
-        let pool = (config.threads > 1 || tile_designer.is_some())
-            .then(|| ThreadPool::new(config.threads.max(1)));
+        // The encode session. Tile-granularity design gives every
+        // container tile its own designed spec (container v3; the batched
+        // container regardless of thread count); otherwise threads > 1
+        // selects the tiled container and threads == 1 the legacy single
+        // stream — both decisions live inside the session now.
+        let mut builder = CodecBuilder::new(config.quant.clone())
+            .image_size(img)
+            .entropy(config.entropy)
+            .threads(config.threads.max(1));
+        if config.task == TaskKind::Detect {
+            builder = builder.detection(DetInfo {
+                net_w: data::DET_IMG as u16,
+                net_h: data::DET_IMG as u16,
+                feat_h: feature[1] as u16,
+                feat_w: feature[2] as u16,
+                feat_c: feature[3] as u16,
+            });
+        }
+        if config.design != DesignKind::Static && config.granularity == ClipGranularity::Tile {
+            builder = builder.design(config.design, acfg.activation, acfg.kappa);
+        }
         Ok(Self {
             exe,
-            encoder: Encoder::new(enc_cfg),
+            codec: builder.build(),
             feature_elems: feature[1..].iter().product(),
             input_shape,
             config,
             controller,
-            tile_designer,
-            pool,
             times: EdgeTimes::default(),
         })
     }
@@ -262,42 +255,25 @@ impl EdgeWorker {
             if let Some(ctl) = &mut self.controller {
                 let td = Instant::now();
                 if let Some(spec) = ctl.observe(item) {
-                    // Windowed re-design: hand the encoder the fresh spec
-                    // (kind- and sign-preserving by construction); it
-                    // re-materializes the quantizer on its next encode.
-                    self.encoder.config.quant = spec;
+                    // Windowed re-design: swap the fresh spec (kind- and
+                    // sign-preserving by construction) into the session —
+                    // the one sanctioned post-build mutation; spec and
+                    // quantizer update atomically.
+                    self.codec.set_quant(spec);
                     self.times.redesigns += 1;
                 }
                 batch_design_s += td.elapsed().as_secs_f64();
             }
-            let (bytes, elements) = match (&self.tile_designer, &self.pool) {
-                (Some(designer), Some(pool)) => {
-                    let s = encode_batched_designed(
-                        &self.encoder.config,
-                        designer.as_ref(),
-                        item,
-                        DEFAULT_TILE_ELEMS,
-                        pool,
-                    );
-                    self.times.tile_designs += s.substreams as u64;
-                    (s.bytes, s.elements)
-                }
-                (Some(_), None) => unreachable!("tile design always builds a pool"),
-                (None, Some(pool)) => {
-                    let s = encode_batched(&self.encoder.config, item, DEFAULT_TILE_ELEMS, pool);
-                    (s.bytes, s.elements)
-                }
-                (None, None) => {
-                    let s = self.encoder.encode(item);
-                    (s.bytes, s.elements)
-                }
-            };
-            self.times.bytes += bytes.len() as u64;
+            let encoded = self.codec.encode(item);
+            if self.codec.has_tile_designer() {
+                self.times.tile_designs += encoded.substreams as u64;
+            }
+            self.times.bytes += encoded.bytes.len() as u64;
             out.push(CompressedItem {
                 id: r.id,
                 image_index: r.image_index,
-                bytes,
-                elements,
+                bytes: encoded.bytes,
+                elements: encoded.elements,
                 arrived: r.arrived,
                 encoded: Instant::now(),
             });
@@ -312,13 +288,13 @@ impl EdgeWorker {
 
     /// Current clip maximum (moves under online re-design).
     pub fn current_c_max(&self) -> f32 {
-        self.encoder.config.quant.c_max()
+        self.codec.quant_spec().c_max()
     }
 
     /// The spec the stream encoder currently uses (tile-granularity tiles
     /// carry their own, recorded in the container directory).
     pub fn current_spec(&self) -> &QuantSpec {
-        &self.encoder.config.quant
+        self.codec.quant_spec()
     }
 }
 

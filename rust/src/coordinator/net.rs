@@ -58,8 +58,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::protocol::{CompressedItem, Outcome, TaskKind};
-use crate::codec::batch::max_elems_per_payload_byte;
-use crate::codec::{sniff_entropy, EntropyKind};
+use crate::codec::{sniff, EntropyKind};
 use crate::eval::Detection;
 use crate::util::threadpool::TaskPool;
 use crate::util::timer::Percentiles;
@@ -157,9 +156,11 @@ fn proto_err(msg: String) -> io::Error {
 }
 
 /// Byte-7 advertisement for an item's codec bytes: 0 = unspecified
-/// (unsniffable or legacy writer), else `EntropyKind::id() + 1`.
+/// (unsniffable or legacy writer), else `EntropyKind::id() + 1`. Backed
+/// by [`crate::codec::api::sniff`] — the same sniffer every validation
+/// path uses.
 fn entropy_hint_of(codec_bytes: &[u8]) -> u8 {
-    sniff_entropy(codec_bytes).map_or(0, |k| k.id() + 1)
+    sniff(codec_bytes).entropy.map_or(0, |k| k.id() + 1)
 }
 
 fn frame_header(
@@ -300,17 +301,19 @@ pub fn read_frame(
                 return Err(proto_err("item payload shorter than its element count".into()));
             }
             let elements = u64::from_le_bytes(payload[..8].try_into().unwrap());
-            // Same plausibility bound the batched container enforces on
-            // its directory: an element claim no compressed stream could
-            // carry is rejected here, before it can reach a decoder's
-            // `Vec::with_capacity` (a crafted tiny frame claiming 2^60
-            // elements would otherwise abort the receiving daemon). The
-            // payload's own self-description picks the per-backend bound
-            // — CABAC's decoder has no integrity check, so CABAC-labeled
-            // payloads get the tight 16384× cap.
+            // Same plausibility rule the codec enforces everywhere, from
+            // the one sniffer ([`crate::codec::api::sniff`]): an element
+            // claim no compressed stream could carry is rejected here,
+            // before it can reach a decoder's `Vec::with_capacity` (a
+            // crafted tiny frame claiming 2^60 elements would otherwise
+            // abort the receiving daemon). A single stream's own header
+            // byte (authoritative — it selects the decoder) picks the
+            // tight per-backend bound; a container gets the conservative
+            // bound here and the tight per-tile re-check at decode, since
+            // its prelude byte is advisory.
             let codec_bytes = (payload.len() - 8) as u64;
-            let bound = max_elems_per_payload_byte(sniff_entropy(&payload[8..]));
-            if elements > codec_bytes.saturating_mul(bound) {
+            let format = sniff(&payload[8..]);
+            if elements > codec_bytes.saturating_mul(format.plausibility_bound) {
                 return Err(proto_err(format!(
                     "implausible element count {elements} for a {codec_bytes}-byte payload"
                 )));
@@ -322,11 +325,11 @@ pub fn read_frame(
             if entropy_hint != 0 {
                 let advertised = EntropyKind::from_id(entropy_hint - 1)
                     .map_err(|e| proto_err(format!("entropy advertisement: {e}")))?;
-                let actual = sniff_entropy(&bytes);
-                if actual != Some(advertised) {
+                if format.entropy != Some(advertised) {
                     return Err(proto_err(format!(
                         "frame advertises entropy backend `{advertised}` but payload \
-                         sniffs as {actual:?}"
+                         sniffs as {:?}",
+                        format.entropy
                     )));
                 }
             }

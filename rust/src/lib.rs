@@ -31,6 +31,17 @@ pub mod runtime;
 pub mod tensor;
 pub mod util;
 
+// The unified codec façade, re-exported at the crate root: build a
+// session with [`CodecBuilder`], encode/decode through [`Codec`], match
+// failures by [`CodecError`] variant. See `codec::api` for the full
+// story and `rust/README.md` ("Library API") for migration notes from
+// the deprecated free functions.
+pub use codec::api::{
+    sniff, Codec, CodecBuilder, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo, StreamFormat,
+};
+pub use codec::design::QuantSpec;
+pub use codec::error::CodecError;
+
 /// Leaky-ReLU negative-side slope used by all leaky networks in this repo
 /// and by the paper's ResNet-50 implementation (Eq. (4)).
 pub const LEAKY_SLOPE: f64 = 0.1;

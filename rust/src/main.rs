@@ -15,10 +15,7 @@
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
-use lwfc::codec::{
-    batch, decode as codec_decode, design_or, designer_for, ClipGranularity, DesignKind, Encoder,
-    EncoderConfig, EntropyKind, SubstreamDirectory,
-};
+use lwfc::codec::{design_or, designer_for, ClipGranularity, DesignKind, EntropyKind};
 use lwfc::coordinator::{
     run_edge_node, serve, CloudConfig, CloudDaemon, EdgeConfig, EdgeNodeConfig, QuantSpec,
     RetryPolicy, ServeConfig, TaskKind, TransportKind,
@@ -27,7 +24,7 @@ use lwfc::experiments::{self, common::ExpCtx};
 use lwfc::modeling;
 use lwfc::runtime::Manifest;
 use lwfc::util::cli::Command;
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{CodecBuilder, StreamFormat};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -484,51 +481,41 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
         },
         0.5,
     );
-    let designer = designer_for(design, &base, activation, kappa);
-    let cfg = EncoderConfig::classification(base.clone(), 0).with_entropy(entropy);
-    let (bytes, elements, substreams, bpe) = match granularity {
-        ClipGranularity::Tile => {
-            // Per-tile design writes the v3 container whatever the thread
-            // count (a pool of one is fine).
-            let pool = ThreadPool::new(threads);
-            let s = batch::encode_batched_designed(&cfg, designer.as_ref(), &data, tile, &pool);
-            let bpe = s.bits_per_element();
-            (s.bytes, s.elements, s.substreams, bpe)
+    // Stream-granularity design runs once over the whole tensor here;
+    // tile granularity hands the designer to the session, which designs
+    // per tile on its worker pool (container v3, any thread count).
+    let encode_spec = match granularity {
+        ClipGranularity::Stream if design != DesignKind::Static => {
+            let designer = designer_for(design, &base, activation, kappa);
+            let spec = design_or(designer.as_ref(), &data, &base);
+            println!(
+                "designed ({design}): N={} clip [{:.4}, {:.4}]",
+                spec.levels(),
+                spec.c_min(),
+                spec.c_max()
+            );
+            spec
         }
-        ClipGranularity::Stream => {
-            let cfg = if design == DesignKind::Static {
-                cfg
-            } else {
-                let spec = design_or(designer.as_ref(), &data, &base);
-                println!(
-                    "designed ({design}): N={} clip [{:.4}, {:.4}]",
-                    spec.levels(),
-                    spec.c_min(),
-                    spec.c_max()
-                );
-                cfg.with_quant(spec)
-            };
-            if threads > 1 {
-                let pool = ThreadPool::new(threads);
-                let s = batch::encode_batched(&cfg, &data, tile, &pool);
-                let bpe = s.bits_per_element();
-                (s.bytes, s.elements, s.substreams, bpe)
-            } else {
-                let mut enc = Encoder::new(cfg);
-                let s = enc.encode(&data);
-                let bpe = s.bits_per_element();
-                (s.bytes, s.elements, 1, bpe)
-            }
-        }
+        _ => base,
     };
-    std::fs::write(a.get("output"), &bytes)?;
+    let mut builder = CodecBuilder::new(encode_spec)
+        .entropy(entropy)
+        .threads(threads)
+        .tile_elems(tile);
+    if granularity == ClipGranularity::Tile {
+        builder = builder.design(design, activation, kappa);
+    }
+    let mut codec = builder.build();
+    let encoded = codec.encode(&data);
+    std::fs::write(a.get("output"), &encoded.bytes)?;
     println!(
-        "{} elements -> {} bytes ({bpe:.4} bits/element, {} substream{}, {entropy} entropy, \
+        "{} elements -> {} bytes ({:.4} bits/element, {} substream{}, {entropy} entropy, \
          {design} design @ {granularity})",
-        elements,
-        bytes.len(),
-        substreams,
-        if substreams == 1 { "" } else { "s" }
+        encoded.elements,
+        encoded.bytes.len(),
+        encoded.bits_per_element(),
+        encoded.substreams,
+        if encoded.substreams == 1 { "" } else { "s" }
     );
     Ok(())
 }
@@ -540,7 +527,9 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
         .opt(
             "elements",
             "0",
-            "element count (required for legacy single streams; batched containers are self-describing)",
+            "element count (required for legacy single streams; batched containers are \
+             self-describing, and when the flag is given anyway it is enforced against \
+             the container's claim)",
         )
         .opt("threads", "1", "decode threads for batched containers")
         .opt(
@@ -552,47 +541,57 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let bytes = std::fs::read(a.get("input"))?;
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
-    let (values, header) = if lwfc::codec::is_batched(&bytes) {
-        // Informational only, so the extra directory walk is limited to
-        // v3 containers (version byte 3+ means a per-tile spec block).
-        if bytes.len() > 4 && bytes[4] >= 3 {
-            let (dir, _) = SubstreamDirectory::read(&bytes).map_err(anyhow::Error::msg)?;
-            if let Some(specs) = &dir.specs {
-                println!(
-                    "container v3: {} per-tile designed quantizer{}",
-                    specs.len(),
-                    if specs.len() == 1 { "" } else { "s" }
-                );
-            }
-        }
-        let pool = ThreadPool::new(threads);
-        batch::decode_batched(&bytes, &pool).map_err(anyhow::Error::msg)?
-    } else {
-        let elements = a.get_usize("elements").map_err(|e| anyhow!(e))?;
-        if elements == 0 {
-            return Err(anyhow!(
-                "--elements is required to decode a legacy single-stream file"
-            ));
-        }
-        codec_decode(&bytes, elements).map_err(anyhow::Error::msg)?
-    };
+    let elements = a.get_usize("elements").map_err(|e| anyhow!(e))?;
+    if elements == 0 && lwfc::sniff(&bytes).format == StreamFormat::SingleStream {
+        return Err(anyhow!(
+            "--elements is required to decode a legacy single-stream file"
+        ));
+    }
+    // A decode-only session: the quant spec is a placeholder (never
+    // encodes), --elements becomes the session's element expectation.
+    let mut builder = CodecBuilder::new(QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 1.0,
+        levels: 2,
+    })
+    .threads(threads);
+    if elements > 0 {
+        builder = builder.expect_elements(elements);
+    }
+    let mut codec = builder.build();
+    let decoded = codec.decode(&bytes)?;
+    if decoded.info.designed_tiles > 0 {
+        println!(
+            "container v3: {} per-tile designed quantizer{}",
+            decoded.info.designed_tiles,
+            if decoded.info.designed_tiles == 1 { "" } else { "s" }
+        );
+    }
+    let header = decoded
+        .info
+        .header
+        .as_ref()
+        .ok_or_else(|| anyhow!("stream decoded without a header"))?;
     if !a.get("entropy").is_empty() {
         let expect = entropy_of(a.get("entropy"))?;
         if header.entropy != expect {
-            return Err(anyhow!(
-                "stream was encoded with the {} backend, --entropy asked for {expect}",
-                header.entropy
-            ));
+            // The typed mismatch class the façade uses everywhere
+            // (`--entropy` is an assertion; decode auto-detects).
+            return Err(lwfc::CodecError::BackendMismatch {
+                expected: expect,
+                found: Some(header.entropy),
+            }
+            .into());
         }
     }
-    let mut out = Vec::with_capacity(values.len() * 4);
-    for v in &values {
+    let mut out = Vec::with_capacity(decoded.values.len() * 4);
+    for v in &decoded.values {
         out.extend_from_slice(&v.to_le_bytes());
     }
     std::fs::write(a.get("output"), &out)?;
     println!(
         "decoded {} elements (N={}, clip [{}, {}], {} entropy)",
-        values.len(),
+        decoded.values.len(),
         header.levels,
         header.c_min,
         header.c_max,

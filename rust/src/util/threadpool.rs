@@ -37,17 +37,41 @@ impl ThreadPool {
     }
 
     /// Apply `f(i)` for i in 0..n in parallel; results returned in order.
+    /// (The slot-less face of [`ThreadPool::map_indexed_mut`] — one
+    /// worker-loop implementation serves both.)
     pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut units = vec![(); n];
+        self.map_indexed_mut(&mut units, |i, _| f(i))
+    }
+
+    /// Like [`ThreadPool::map_indexed`], but each invocation additionally
+    /// gets exclusive access to its element of `slots` — disjoint
+    /// per-index mutable state, e.g. the per-tile sub-slices of one
+    /// shared output buffer. The codec's zero-copy `decode_into` uses
+    /// this to scatter decoded tiles straight into the caller's reused
+    /// buffer with no per-tile allocation. Work items are claimed from a
+    /// shared cursor, so uneven item costs still balance.
+    pub fn map_indexed_mut<S, T, F>(&self, slots: &mut [S], f: F) -> Vec<T>
+    where
+        S: Send,
+        T: Send,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        let n = slots.len();
         if n == 0 {
             return Vec::new();
         }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
         let next = std::sync::atomic::AtomicUsize::new(0);
-        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        let work: Vec<Mutex<(&mut S, &mut Option<T>)>> = slots
+            .iter_mut()
+            .zip(out.iter_mut())
+            .map(Mutex::new)
+            .collect();
         thread::scope(|s| {
             for _ in 0..self.workers.min(n) {
                 s.spawn(|| loop {
@@ -55,8 +79,9 @@ impl ThreadPool {
                     if i >= n {
                         break;
                     }
-                    let v = f(i);
-                    **slots[i].lock().unwrap() = Some(v);
+                    let mut guard = work[i].lock().unwrap();
+                    let (slot, res) = &mut *guard;
+                    **res = Some(f(i, &mut **slot));
                 });
             }
         });
@@ -281,6 +306,29 @@ mod tests {
         let pool = ThreadPool::new(4);
         let out = pool.map_indexed(100, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_mut_scatters_into_disjoint_slots() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0u32; 64];
+        // Disjoint 8-element windows of one buffer, mutated in parallel.
+        let mut slots: Vec<&mut [u32]> = buf.chunks_mut(8).collect();
+        let lens = pool.map_indexed_mut(&mut slots, |i, slot| {
+            for (k, v) in slot.iter_mut().enumerate() {
+                *v = (i * 100 + k) as u32;
+            }
+            slot.len()
+        });
+        assert_eq!(lens, vec![8; 8]);
+        for (i, chunk) in buf.chunks(8).enumerate() {
+            for (k, &v) in chunk.iter().enumerate() {
+                assert_eq!(v, (i * 100 + k) as u32);
+            }
+        }
+        // Empty slot list is a no-op.
+        let mut none: Vec<&mut [u32]> = Vec::new();
+        assert!(pool.map_indexed_mut(&mut none, |_, _| 0).is_empty());
     }
 
     #[test]

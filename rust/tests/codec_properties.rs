@@ -1,20 +1,50 @@
 //! Cross-module property tests on the codec: end-to-end roundtrip
-//! invariants, rate monotonicity, ECQ-vs-uniform relationships, and
-//! failure injection on corrupted bit-streams.
+//! invariants, rate monotonicity, ECQ-vs-uniform relationships, failure
+//! injection on corrupted bit-streams — and the error-taxonomy contract:
+//! every corruption class maps to its specific [`CodecError`] variant,
+//! classified by `matches!`, never by message substrings. Everything
+//! drives the `Codec` façade (the deprecated free-function shims are
+//! pinned against it in `shims` below).
 
-use lwfc::codec::{
-    batch, decode, decode_indices, design_ecq, EcqParams, Encoder, EncoderConfig, Quantizer,
-    UniformQuantizer,
-};
+use lwfc::codec::{design_ecq, EcqParams, EntropyKind, Quantizer, UniformQuantizer};
 use lwfc::prop_assert;
 use lwfc::util::prop::{prop_check, Gen};
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{Codec, CodecBuilder, CodecError, QuantSpec};
 
-fn uniform_cfg(levels: usize, c_max: f32) -> EncoderConfig {
-    EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels)),
-        32,
-    )
+fn uniform(levels: usize, c_max: f32) -> QuantSpec {
+    QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max,
+        levels,
+    }
+}
+
+/// Single-stream session (threads 1): the legacy wire format.
+fn single(quant: impl Into<QuantSpec>, elements: usize) -> Codec {
+    CodecBuilder::new(quant)
+        .image_size(32)
+        .expect_elements(elements)
+        .build()
+}
+
+/// Container session with `threads` workers and `tile`-element tiles.
+fn batched(quant: impl Into<QuantSpec>, threads: usize, tile: usize) -> Codec {
+    CodecBuilder::new(quant)
+        .image_size(32)
+        .threads(threads)
+        .tile_elems(tile)
+        .force_container()
+        .build()
+}
+
+fn tolerant(quant: impl Into<QuantSpec>, threads: usize, tile: usize) -> Codec {
+    CodecBuilder::new(quant)
+        .image_size(32)
+        .threads(threads)
+        .tile_elems(tile)
+        .force_container()
+        .tolerant(true)
+        .build()
 }
 
 #[test]
@@ -25,11 +55,11 @@ fn roundtrip_is_exactly_fake_quant_for_any_stream() {
         let c_max = g.f32_in(0.2, 20.0);
         let scale = g.f32_in(0.05, 4.0);
         let xs = g.activation_vec(n, scale);
-        let cfg = uniform_cfg(levels, c_max);
-        let q = cfg.quantizer();
-        let mut enc = Encoder::new(cfg);
-        let stream = enc.encode(&xs);
-        let (out, _) = decode(&stream.bytes, n).map_err(|e| e.to_string())?;
+        let spec = uniform(levels, c_max);
+        let q = spec.materialize();
+        let mut codec = single(spec, n);
+        let stream = codec.encode(&xs);
+        let out = codec.decode(&stream.bytes).map_err(|e| e.to_string())?.values;
         for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
             prop_assert!(y == q.fake_quant(x), "elem {i} (n={n} N={levels})");
         }
@@ -43,9 +73,11 @@ fn decoded_indices_in_range_and_rate_reasonable() {
         let n = g.usize_in(64, 8192);
         let levels = g.usize_in(2, 9);
         let xs = g.activation_vec(n, 0.5);
-        let mut enc = Encoder::new(uniform_cfg(levels, 2.0));
-        let stream = enc.encode(&xs);
-        let (idx, header) = decode_indices(&stream.bytes, n).map_err(|e| e.to_string())?;
+        let mut codec = single(uniform(levels, 2.0), n);
+        let stream = codec.encode(&xs);
+        let (idx, header) = codec
+            .decode_indices(&stream.bytes)
+            .map_err(|e| e.to_string())?;
         prop_assert!(header.levels == levels, "header levels");
         prop_assert!(
             idx.iter().all(|&i| (i as usize) < levels),
@@ -97,9 +129,8 @@ fn ecq_lambda_sweep_trades_rate_for_distortion() {
         let mut prev_rate = f64::INFINITY;
         for lambda in [0.0, 0.01, 0.1, 1.0] {
             let d = design_ecq(&train, 0.0, 2.0, EcqParams::pinned(4, lambda));
-            let q = Quantizer::NonUniform(d.quantizer);
-            let mut enc = Encoder::new(EncoderConfig::classification(q, 32));
-            let rate = enc.encode(&test).bits_per_element();
+            let mut codec = single(Quantizer::NonUniform(d.quantizer), test.len());
+            let rate = codec.encode(&test).bits_per_element();
             // Rate must be non-increasing in λ (up to CABAC adaptivity
             // noise, allow 3%).
             prop_assert!(
@@ -134,8 +165,8 @@ fn corrupted_streams_never_panic() {
     prop_check("corruption", 60, |g: &mut Gen| {
         let n = g.usize_in(16, 2048);
         let xs = g.activation_vec(n, 0.5);
-        let mut enc = Encoder::new(uniform_cfg(4, 2.0));
-        let mut bytes = enc.encode(&xs).bytes;
+        let mut codec = single(uniform(4, 2.0), n);
+        let mut bytes = codec.encode(&xs).bytes;
         match g.usize_in(0, 2) {
             0 => {
                 // truncate anywhere
@@ -157,15 +188,35 @@ fn corrupted_streams_never_panic() {
             }
         }
         // Must return Ok (CABAC is self-synchronizing to *some* indices) or
-        // Err — but never panic, and any Ok result must be in-range.
-        if let Ok((vals, header)) = decode(&bytes, xs.len()) {
-            prop_assert!(vals.len() == xs.len(), "length after corruption");
-            for &v in &vals {
+        // Err — but never panic, and any Ok result must be in-range. The
+        // Err side must classify as stream-scope damage: header or payload
+        // (or a directory error, when garbage forges the container magic).
+        match codec.decode(&bytes) {
+            Ok(decoded) => {
+                let header = decoded.info.header.as_ref().expect("clean decode has header");
+                prop_assert!(decoded.values.len() == xs.len(), "length after corruption");
+                for &v in &decoded.values {
+                    prop_assert!(
+                        v >= header.c_min && v <= header.c_max,
+                        "decoded value {v} outside [{}, {}]",
+                        header.c_min,
+                        header.c_max
+                    );
+                }
+            }
+            Err(e) => {
                 prop_assert!(
-                    v >= header.c_min && v <= header.c_max,
-                    "decoded value {v} outside [{}, {}]",
-                    header.c_min,
-                    header.c_max
+                    matches!(
+                        e,
+                        CodecError::Header { .. }
+                            | CodecError::Payload { .. }
+                            | CodecError::UnknownBackend { .. }
+                            | CodecError::Directory { .. }
+                            | CodecError::ElementCountMismatch { .. }
+                            | CodecError::ImplausibleElements { .. }
+                            | CodecError::SpecRecord { .. }
+                    ),
+                    "unexpected variant for stream corruption: {e:?}"
                 );
             }
         }
@@ -177,10 +228,10 @@ fn corrupted_streams_never_panic() {
 fn empty_and_single_element_streams() {
     for n in [0usize, 1, 2] {
         let xs = vec![0.7f32; n];
-        let mut enc = Encoder::new(uniform_cfg(4, 2.0));
-        let stream = enc.encode(&xs);
-        let (out, _) = decode(&stream.bytes, n).unwrap();
-        assert_eq!(out.len(), n);
+        let mut codec = single(uniform(4, 2.0), n);
+        let stream = codec.encode(&xs);
+        let decoded = codec.decode(&stream.bytes).unwrap();
+        assert_eq!(decoded.values.len(), n);
     }
 }
 
@@ -188,14 +239,14 @@ fn empty_and_single_element_streams() {
 fn rate_reflects_entropy_not_levels() {
     // All-zeros tensor at N=8 must cost far less than 3 bits/element.
     let xs = vec![0.0f32; 8192];
-    let mut enc = Encoder::new(uniform_cfg(8, 2.0));
-    let bpe = enc.encode(&xs).bits_per_element();
+    let mut codec = single(uniform(8, 2.0), xs.len());
+    let bpe = codec.encode(&xs).bits_per_element();
     assert!(bpe < 0.1, "constant tensor cost {bpe} bits/element");
 }
 
 #[test]
 fn batched_decode_equals_sequential_fake_quant_for_any_shape() {
-    // The tentpole equivalence property: for ANY tensor, tile size and
+    // The batching equivalence property: for ANY tensor, tile size and
     // thread count, batched decode output is bit-identical to the
     // single-stream fake-quant path.
     prop_check("batch_equivalence", 30, |g: &mut Gen| {
@@ -206,23 +257,23 @@ fn batched_decode_equals_sequential_fake_quant_for_any_shape() {
         let threads = g.usize_in(1, 8);
         let scale = g.f32_in(0.1, 2.0);
         let xs = g.activation_vec(n, scale);
-        let cfg = uniform_cfg(levels, c_max);
-        let q = cfg.quantizer();
-        let pool = ThreadPool::new(threads);
+        let spec = uniform(levels, c_max);
+        let q = spec.materialize();
+        let mut codec = batched(spec, threads, tile);
 
-        let batched = batch::encode_batched(&cfg, &xs, tile, &pool);
+        let encoded = codec.encode(&xs);
         prop_assert!(
-            batched.substreams == n.div_ceil(tile.max(1)).max(1),
+            encoded.substreams == n.div_ceil(tile.max(1)).max(1),
             "substream count {} for n={n} tile={tile}",
-            batched.substreams
+            encoded.substreams
         );
         // Every legitimately encoded container decodes — the empty tensor
         // ships one empty substream so its header survives the round trip.
-        let (out, header) =
-            batch::decode_batched(&batched.bytes, &pool).map_err(|e| e.to_string())?;
+        let decoded = codec.decode(&encoded.bytes).map_err(|e| e.to_string())?;
+        let header = decoded.info.header.as_ref().ok_or("missing header")?;
         prop_assert!(header.levels == levels, "header levels");
-        prop_assert!(out.len() == n, "length {} != {n}", out.len());
-        for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+        prop_assert!(decoded.values.len() == n, "length {} != {n}", decoded.values.len());
+        for (i, (&x, &y)) in xs.iter().zip(&decoded.values).enumerate() {
             prop_assert!(
                 y == q.fake_quant(x),
                 "elem {i}: {y} != fake_quant {} (n={n} tile={tile} threads={threads})",
@@ -234,14 +285,61 @@ fn batched_decode_equals_sequential_fake_quant_for_any_shape() {
 }
 
 #[test]
+fn decode_into_equals_fresh_decode_bit_exactly() {
+    // The zero-copy serving path is not allowed to change a single bit:
+    // for any tensor, format (single stream / container), backend, tile
+    // size and thread count, `decode_into` through a junk-filled reused
+    // buffer equals a fresh `decode` — and both equal fake-quant.
+    prop_check("decode_into_equivalence", 30, |g: &mut Gen| {
+        let n = g.usize_in(0, 40_000);
+        let levels = g.usize_in(2, 9);
+        let tile = g.usize_in(1, 6_000);
+        let threads = g.usize_in(1, 6);
+        let entropy = *g.choice(&[EntropyKind::Cabac, EntropyKind::Rans]);
+        let container = g.bool();
+        let xs = g.activation_vec(n, 0.5);
+
+        let mut builder = CodecBuilder::new(uniform(levels, 2.0))
+            .image_size(32)
+            .entropy(entropy)
+            .threads(threads)
+            .tile_elems(tile)
+            .expect_elements(n);
+        if container {
+            builder = builder.force_container();
+        }
+        let mut codec = builder.build();
+        let encoded = codec.encode(&xs);
+
+        let fresh = codec.decode(&encoded.bytes).map_err(|e| e.to_string())?;
+        // Junk in the reused buffer must not leak into the result.
+        let mut buf: Vec<f32> = vec![f32::NAN; g.usize_in(0, 3 * tile)];
+        let info = codec
+            .decode_into(&encoded.bytes, &mut buf)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            buf == fresh.values,
+            "decode_into diverged from decode (n={n} tile={tile} threads={threads} \
+             {entropy} container={container})"
+        );
+        prop_assert!(info.elements == fresh.info.elements, "info elements");
+        prop_assert!(info.substreams == fresh.info.substreams, "info substreams");
+        prop_assert!(info.header == fresh.info.header, "info header");
+        // And a second pass through the same buffer is stable.
+        codec.decode_into(&encoded.bytes, &mut buf).map_err(|e| e.to_string())?;
+        prop_assert!(buf == fresh.values, "second reuse diverged");
+        Ok(())
+    });
+}
+
+#[test]
 fn batched_bytes_do_not_depend_on_thread_count() {
     prop_check("batch_determinism", 10, |g: &mut Gen| {
         let n = g.usize_in(1, 20_000);
         let tile = g.usize_in(16, 4_000);
         let xs = g.activation_vec(n, 0.5);
-        let cfg = uniform_cfg(4, 2.0);
-        let a = batch::encode_batched(&cfg, &xs, tile, &ThreadPool::new(1));
-        let b = batch::encode_batched(&cfg, &xs, tile, &ThreadPool::new(g.usize_in(2, 8)));
+        let a = batched(uniform(4, 2.0), 1, tile).encode(&xs);
+        let b = batched(uniform(4, 2.0), g.usize_in(2, 8), tile).encode(&xs);
         prop_assert!(a.bytes == b.bytes, "bytes differ across thread counts (n={n})");
         Ok(())
     });
@@ -252,14 +350,15 @@ fn corrupted_substream_directory_is_rejected_never_panics() {
     // Failure injection on the container metadata: any single corrupted
     // byte in the prelude or in the structural directory fields must turn
     // strict decode into Err (checksum-field flips may instead surface as
-    // per-substream corruption); nothing may panic.
+    // per-substream corruption); nothing may panic, and every failure is
+    // a typed variant.
     prop_check("batch_dir_corruption", 60, |g: &mut Gen| {
         let n = g.usize_in(64, 8_000);
         let tile = g.usize_in(32, 1_024);
         let xs = g.activation_vec(n, 0.5);
-        let cfg = uniform_cfg(4, 2.0);
-        let pool = ThreadPool::new(g.usize_in(1, 4));
-        let encoded = batch::encode_batched(&cfg, &xs, tile, &pool);
+        let threads = g.usize_in(1, 4);
+        let mut codec = batched(uniform(4, 2.0), threads, tile);
+        let encoded = codec.encode(&xs);
 
         let dir_len = lwfc::codec::header::BATCH_PRELUDE_BYTES
             + encoded.substreams * lwfc::codec::header::DIR_ENTRY_BYTES;
@@ -271,30 +370,52 @@ fn corrupted_substream_directory_is_rejected_never_panics() {
             && (i - lwfc::codec::header::BATCH_PRELUDE_BYTES)
                 % lwfc::codec::header::DIR_ENTRY_BYTES
                 >= 8;
-        let strict = batch::decode_batched(&bad, &pool);
+        let strict = codec.decode(&bad);
         prop_assert!(
             strict.is_err(),
             "corrupt metadata byte {i} accepted by strict decode (n={n} tile={tile})"
         );
+        let mut tol = tolerant(uniform(4, 2.0), threads, tile);
         if in_checksum_field {
             // A flipped checksum damages exactly one substream; the
-            // tolerant decoder must isolate it and keep the tensor shape.
-            let (out, report) =
-                batch::decode_batched_tolerant(&bad, &pool).map_err(|e| e.to_string())?;
-            prop_assert!(out.len() == n, "tolerant length {}", out.len());
+            // tolerant decoder must isolate it, keep the tensor shape, and
+            // classify it as a checksum mismatch for that tile.
+            let decoded = tol.decode(&bad).map_err(|e| e.to_string())?;
+            prop_assert!(decoded.values.len() == n, "tolerant length {}", decoded.values.len());
             let victim = (i - lwfc::codec::header::BATCH_PRELUDE_BYTES)
                 / lwfc::codec::header::DIR_ENTRY_BYTES;
             prop_assert!(
-                report.corrupted == vec![victim],
+                decoded.info.corrupted_tiles() == vec![victim],
                 "expected substream {victim} corrupted, got {:?}",
-                report.corrupted
+                decoded.info.corrupted_tiles()
+            );
+            prop_assert!(
+                matches!(
+                    &decoded.info.failures[..],
+                    [CodecError::ChecksumMismatch { tile: Some(t), .. }] if *t == victim
+                ),
+                "wrong failure classification: {:?}",
+                decoded.info.failures
             );
         } else {
             // Structural damage: the whole container is unreadable, even
-            // tolerantly — but still an Err, not a panic.
+            // tolerantly — a fatal (non-tile-local) typed error.
+            let err = match tol.decode(&bad) {
+                Err(e) => e,
+                Ok(_) => return Err(format!("structural corruption at byte {i} not rejected")),
+            };
             prop_assert!(
-                batch::decode_batched_tolerant(&bad, &pool).is_err(),
-                "structural corruption at byte {i} not rejected"
+                !err.is_tile_local(),
+                "structural corruption misclassified as tile-local: {err:?}"
+            );
+            prop_assert!(
+                matches!(
+                    err,
+                    CodecError::Directory { .. }
+                        | CodecError::UnknownBackend { .. }
+                        | CodecError::ImplausibleElements { .. }
+                ),
+                "unexpected variant for directory corruption at byte {i}: {err:?}"
             );
         }
         Ok(())
@@ -306,15 +427,18 @@ fn implausible_directory_claims_are_container_errors_for_every_decoder() {
     // A forged directory entry whose element count cannot correspond to a
     // real compressed stream (elements > MAX_ELEMS_PER_PAYLOAD_BYTE ×
     // payload bytes, checksum deliberately valid so only the plausibility
-    // bound can catch it) must be rejected by the strict decoder, the
+    // bound can catch it) must be rejected by the strict decoder and the
     // tolerant decoder (which would otherwise fill `elements` values — up
-    // to 4 Gi per entry), and the count-only reader guarding `decode_any`.
+    // to 4 Gi per entry) — in both cases as the typed
+    // `ImplausibleElements` variant at container scope, raised before any
+    // tile decodes.
     prop_check("batch_implausible_dir", 40, |g: &mut Gen| {
         let n = g.usize_in(64, 4_096);
         let tile = g.usize_in(32, 512);
         let xs = g.activation_vec(n, 0.5);
-        let pool = ThreadPool::new(g.usize_in(1, 4));
-        let encoded = batch::encode_batched(&uniform_cfg(4, 2.0), &xs, tile, &pool);
+        let threads = g.usize_in(1, 4);
+        let mut codec = batched(uniform(4, 2.0), threads, tile);
+        let encoded = codec.encode(&xs);
 
         // Rewrite one directory entry in place: huge element claim, same
         // byte_len and checksum, prelude total patched to keep the sums
@@ -334,16 +458,23 @@ fn implausible_directory_claims_are_container_errors_for_every_decoder() {
         bad[entry_off..entry_off + 4].copy_from_slice(&forged_elems.to_le_bytes());
 
         prop_assert!(
-            batch::decode_batched(&bad, &pool).is_err(),
+            matches!(codec.decode(&bad), Err(CodecError::ImplausibleElements { tile: None, .. })),
             "strict decode accepted a forged element claim (victim {victim})"
         );
+        let mut tol = tolerant(uniform(4, 2.0), threads, tile);
         prop_assert!(
-            batch::decode_batched_tolerant(&bad, &pool).is_err(),
+            matches!(tol.decode(&bad), Err(CodecError::ImplausibleElements { .. })),
             "tolerant decode must not fill a forged element claim (victim {victim})"
         );
+        // The pre-decode expectation guard hits the same wall before the
+        // count comparison (the count-only reader path).
+        let mut guarded = CodecBuilder::new(uniform(4, 2.0))
+            .threads(threads)
+            .expect_elements(n)
+            .build();
         prop_assert!(
-            batch::batched_elements(&bad).is_err(),
-            "count-only reader accepted a forged directory"
+            matches!(guarded.decode(&bad), Err(CodecError::ImplausibleElements { .. })),
+            "expectation guard accepted a forged directory"
         );
         Ok(())
     });
@@ -355,10 +486,10 @@ fn corrupted_payload_is_isolated_to_its_substream() {
         let n = g.usize_in(256, 10_000);
         let tile = g.usize_in(64, 1_024);
         let xs = g.activation_vec(n, 0.5);
-        let cfg = uniform_cfg(4, 2.0);
-        let q = cfg.quantizer();
-        let pool = ThreadPool::new(2);
-        let encoded = batch::encode_batched(&cfg, &xs, tile, &pool);
+        let spec = uniform(4, 2.0);
+        let q = spec.materialize();
+        let mut codec = batched(spec.clone(), 2, tile);
+        let encoded = codec.encode(&xs);
 
         let dir_len = lwfc::codec::header::BATCH_PRELUDE_BYTES
             + encoded.substreams * lwfc::codec::header::DIR_ENTRY_BYTES;
@@ -366,20 +497,31 @@ fn corrupted_payload_is_isolated_to_its_substream() {
         let mut bad = encoded.bytes.clone();
         bad[i] ^= (g.u64() as u8) | 1;
 
+        let strict = codec.decode(&bad);
         prop_assert!(
-            batch::decode_batched(&bad, &pool).is_err(),
+            strict.is_err(),
             "payload flip at {i} accepted by strict decode"
         );
-        let (out, report) =
-            batch::decode_batched_tolerant(&bad, &pool).map_err(|e| e.to_string())?;
-        prop_assert!(out.len() == n, "tolerant decode length");
         prop_assert!(
-            report.corrupted.len() == 1,
-            "exactly one substream should fail, got {:?}",
-            report.corrupted
+            strict.as_ref().err().map(|e| e.is_tile_local()) == Some(true),
+            "payload corruption must be tile-local: {:?}",
+            strict.err()
         );
-        let victim = report.corrupted[0];
-        for (j, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+        let mut tol = tolerant(spec, 2, tile);
+        let decoded = tol.decode(&bad).map_err(|e| e.to_string())?;
+        prop_assert!(decoded.values.len() == n, "tolerant decode length");
+        let corrupted = decoded.info.corrupted_tiles();
+        prop_assert!(
+            corrupted.len() == 1,
+            "exactly one substream should fail, got {corrupted:?}"
+        );
+        prop_assert!(
+            decoded.info.failures[0].is_tile_local(),
+            "tolerant failure must be tile-local: {:?}",
+            decoded.info.failures[0]
+        );
+        let victim = corrupted[0];
+        for (j, (&x, &y)) in xs.iter().zip(&decoded.values).enumerate() {
             if j / tile != victim {
                 prop_assert!(
                     y == q.fake_quant(x),
@@ -389,4 +531,61 @@ fn corrupted_payload_is_isolated_to_its_substream() {
         }
         Ok(())
     });
+}
+
+/// The deprecated free functions survive one release as shims; they must
+/// produce byte-identical streams and value-identical decodes through
+/// the façade path, so external callers migrating late see no change.
+mod shims {
+    #![allow(deprecated)]
+
+    use super::*;
+    use lwfc::codec::{batch, decode, decode_indices, EncoderConfig};
+    use lwfc::util::threadpool::ThreadPool;
+
+    #[test]
+    fn free_functions_match_the_facade() {
+        let mut g = Gen::new("shim_parity", 0);
+        let xs = g.activation_vec(12_000, 0.5);
+        let spec = uniform(4, 2.0);
+        let cfg = EncoderConfig::classification(spec.clone(), 32);
+        let pool = ThreadPool::new(3);
+
+        // Batched: identical bytes, identical decode, identical counts.
+        let old = batch::encode_batched(&cfg, &xs, 2048, &pool);
+        let mut codec = batched(spec.clone(), 3, 2048);
+        let new = codec.encode(&xs);
+        assert_eq!(old.bytes, new.bytes, "shim encode diverged from façade");
+        let (old_vals, old_header) = batch::decode_batched(&old.bytes, &pool).unwrap();
+        let decoded = codec.decode(&new.bytes).unwrap();
+        assert_eq!(old_vals, decoded.values);
+        assert_eq!(Some(old_header), decoded.info.header);
+        assert_eq!(batch::batched_elements(&old.bytes).unwrap(), xs.len());
+        let (any_vals, _) = batch::decode_any(&old.bytes, xs.len(), &pool).unwrap();
+        assert_eq!(any_vals, decoded.values);
+
+        // Tolerant shim agrees with the tolerant session, including the
+        // typed failure report.
+        let mut bad = old.bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x77;
+        let (tol_vals, report) = batch::decode_batched_tolerant(&bad, &pool).unwrap();
+        let mut tol = tolerant(spec.clone(), 3, 2048);
+        let tol_decoded = tol.decode(&bad).unwrap();
+        assert_eq!(tol_vals, tol_decoded.values);
+        assert_eq!(report.corrupted, tol_decoded.info.corrupted_tiles());
+        assert_eq!(report.failures, tol_decoded.info.failures);
+        assert!(matches!(
+            report.failures[0],
+            CodecError::ChecksumMismatch { .. }
+        ));
+
+        // Single stream: decode/decode_indices shims.
+        let mut one = single(spec, xs.len());
+        let stream = one.encode(&xs);
+        let (vals, _) = decode(&stream.bytes, xs.len()).unwrap();
+        assert_eq!(vals, one.decode(&stream.bytes).unwrap().values);
+        let (idx, _) = decode_indices(&stream.bytes, xs.len()).unwrap();
+        assert_eq!(idx, one.decode_indices(&stream.bytes).unwrap().0);
+    }
 }

@@ -1,30 +1,41 @@
 //! Quantizer design stage, end to end: per-tile container-v3 property
 //! tests (tile-designed decode equals the per-tile fake-quant reference
 //! bit-exactly; corrupted/oversized spec records are container-level
-//! errors), kind-preserving online re-design, and the rate/accuracy
-//! acceptance claim — on a tensor with heterogeneous per-tile dynamic
-//! ranges, per-tile model design beats every global static range that
-//! reaches the same fake-quant MSE.
+//! errors mapped to their specific [`CodecError`] variants), kind-
+//! preserving online re-design, and the rate/accuracy acceptance claim —
+//! on a tensor with heterogeneous per-tile dynamic ranges, per-tile model
+//! design beats every global static range that reaches the same
+//! fake-quant MSE. All codec traffic goes through the `Codec` façade.
 
 use lwfc::codec::{
-    batch, decode, design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner,
-    EncoderConfig, EntropyKind, ModelOptimalDesigner, QuantDesigner, QuantKind, QuantSpec,
-    SubstreamDirectory,
+    design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner, EntropyKind,
+    ModelOptimalDesigner, QuantDesigner, QuantKind, SubstreamDirectory,
 };
 use lwfc::modeling::Activation;
 use lwfc::tensor::stats::TensorStats;
 use lwfc::util::prop::{prop_check, Gen};
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{Codec, CodecBuilder, CodecError, QuantSpec};
 
-fn base_cfg(levels: usize, c_max: f32) -> EncoderConfig {
-    EncoderConfig::classification(
-        QuantSpec::Uniform {
-            c_min: 0.0,
-            c_max,
-            levels,
-        },
-        32,
-    )
+fn base_spec(levels: usize, c_max: f32) -> QuantSpec {
+    QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max,
+        levels,
+    }
+}
+
+fn designed_session(
+    base: QuantSpec,
+    designer: Box<dyn QuantDesigner>,
+    threads: usize,
+    tile: usize,
+) -> Codec {
+    CodecBuilder::new(base)
+        .image_size(32)
+        .threads(threads)
+        .tile_elems(tile)
+        .tile_designer(designer)
+        .build()
 }
 
 /// A tensor whose tiles have very different dynamic ranges (scales cycle
@@ -65,18 +76,19 @@ fn prop_tile_designed_decode_equals_per_tile_reference() {
         let threads = g.usize_in(1, 6);
         let ecq = g.bool();
         let xs = heterogeneous_tensor(g, tiles, tile_elems);
-        let pool = ThreadPool::new(threads);
-        let cfg = base_cfg(levels, 4.0);
         let model = ModelOptimalDesigner {
             levels,
             ..ModelOptimalDesigner::leaky(levels)
         };
-        let designer: Box<dyn QuantDesigner> = if ecq {
-            Box::new(EcqDesigner::new(model))
-        } else {
-            Box::new(model)
+        let boxed = |ecq: bool| -> Box<dyn QuantDesigner> {
+            if ecq {
+                Box::new(EcqDesigner::new(model))
+            } else {
+                Box::new(model)
+            }
         };
-        let s = batch::encode_batched_designed(&cfg, designer.as_ref(), &xs, tile_elems, &pool);
+        let mut codec = designed_session(base_spec(levels, 4.0), boxed(ecq), threads, tile_elems);
+        let s = codec.encode(&xs);
 
         let (dir, _) = SubstreamDirectory::read(&s.bytes).map_err(|e| e.to_string())?;
         let specs = dir.specs.clone().ok_or("designed container must be v3")?;
@@ -84,24 +96,27 @@ fn prop_tile_designed_decode_equals_per_tile_reference() {
             specs.len() == xs.len().div_ceil(tile_elems).max(1),
             "one spec per tile"
         );
-        let (out, _) = batch::decode_batched(&s.bytes, &pool).map_err(|e| e.to_string())?;
-        lwfc::prop_assert!(out.len() == xs.len(), "length");
+        let decoded = codec.decode(&s.bytes).map_err(|e| e.to_string())?;
+        lwfc::prop_assert!(decoded.values.len() == xs.len(), "length");
+        lwfc::prop_assert!(
+            decoded.info.designed_tiles == specs.len(),
+            "DecodeInfo must report the designed-tile count"
+        );
         for (t, spec) in specs.iter().enumerate() {
             let q = spec.materialize();
             let lo = t * tile_elems;
             let hi = (lo + tile_elems).min(xs.len());
             for i in lo..hi {
                 lwfc::prop_assert!(
-                    out[i] == q.fake_quant(xs[i]),
+                    decoded.values[i] == q.fake_quant(xs[i]),
                     "tile {t} element {i}: {} vs {}",
-                    out[i],
+                    decoded.values[i],
                     q.fake_quant(xs[i])
                 );
             }
         }
         // The designed bytes are deterministic across thread counts.
-        let again =
-            batch::encode_batched_designed(&cfg, designer.as_ref(), &xs, tile_elems, &ThreadPool::new(1));
+        let again = designed_session(base_spec(levels, 4.0), boxed(ecq), 1, tile_elems).encode(&xs);
         lwfc::prop_assert!(again.bytes == s.bytes, "scheduling-dependent bytes");
         Ok(())
     });
@@ -112,32 +127,58 @@ fn prop_corrupted_spec_records_are_container_errors() {
     // Any structural corruption of the v3 spec block — truncation, a bad
     // kind, an oversized level count, a broken range — must fail
     // SubstreamDirectory::read (and therefore both decode paths) before
-    // any tile is decoded or fill-allocated.
+    // any tile is decoded or fill-allocated, as the typed `SpecRecord`
+    // variant naming the offending tile.
     prop_check("spec_block_corruption", 10, |g| {
         let tile_elems = g.usize_in(100, 800);
         let xs = heterogeneous_tensor(g, 3, tile_elems);
-        let pool = ThreadPool::new(2);
-        let cfg = base_cfg(4, 4.0);
-        let designer = ModelOptimalDesigner::leaky(4);
-        let s = batch::encode_batched_designed(&cfg, &designer, &xs, tile_elems, &pool);
+        let mut codec = designed_session(
+            base_spec(4, 4.0),
+            Box::new(ModelOptimalDesigner::leaky(4)),
+            2,
+            tile_elems,
+        );
+        let mut tol = CodecBuilder::new(base_spec(4, 4.0))
+            .threads(2)
+            .tile_elems(tile_elems)
+            .tolerant(true)
+            .build();
+        let s = codec.encode(&xs);
         let (dir, payload_off) = SubstreamDirectory::read(&s.bytes).map_err(|e| e.to_string())?;
-        let specs_start = dir.encoded_len() - dir.specs.as_ref().unwrap()
-            .iter()
-            .map(|q| q.encoded_len())
-            .sum::<usize>();
+        let specs_start = dir.encoded_len()
+            - dir
+                .specs
+                .as_ref()
+                .unwrap()
+                .iter()
+                .map(|q| q.encoded_len())
+                .sum::<usize>();
 
         // Truncating anywhere inside the spec block is fatal.
         let cut = g.usize_in(specs_start, payload_off - 1);
         lwfc::prop_assert!(
-            SubstreamDirectory::read(&s.bytes[..cut]).is_err(),
-            "cut at {cut} accepted"
+            matches!(
+                SubstreamDirectory::read(&s.bytes[..cut]),
+                Err(CodecError::SpecRecord { .. } | CodecError::Directory { .. })
+            ),
+            "cut at {cut} accepted or misclassified"
         );
-        // An undefined spec kind is fatal.
+        // An undefined spec kind is fatal — a `SpecRecord` error naming
+        // tile 0, even for the tolerant decoder (a container whose design
+        // block cannot be trusted decodes nothing).
         let mut bad = s.bytes.clone();
         bad[specs_start] = 0x41;
-        lwfc::prop_assert!(batch::decode_batched(&bad, &pool).is_err(), "bad kind");
+        let err = match codec.decode(&bad) {
+            Err(e) => e,
+            Ok(_) => return Err("bad spec kind accepted".into()),
+        };
         lwfc::prop_assert!(
-            batch::decode_batched_tolerant(&bad, &pool).is_err(),
+            matches!(err, CodecError::SpecRecord { tile: Some(0), .. }),
+            "bad kind misclassified: {err:?}"
+        );
+        lwfc::prop_assert!(!err.is_tile_local(), "spec damage is never recoverable");
+        lwfc::prop_assert!(
+            matches!(tol.decode(&bad), Err(CodecError::SpecRecord { .. })),
             "tolerant accepted bad kind"
         );
         // An oversized ECQ level claim runs the record past the container.
@@ -145,14 +186,14 @@ fn prop_corrupted_spec_records_are_container_errors() {
         bad[specs_start] = 1;
         bad[specs_start + 1] = 255;
         lwfc::prop_assert!(
-            batch::decode_batched(&bad, &pool).is_err(),
+            matches!(codec.decode(&bad), Err(CodecError::SpecRecord { .. })),
             "oversized spec accepted"
         );
         // A non-finite clip bound is fatal.
         let mut bad = s.bytes.clone();
         bad[specs_start + 6..specs_start + 10].copy_from_slice(&f32::INFINITY.to_le_bytes());
         lwfc::prop_assert!(
-            batch::decode_batched(&bad, &pool).is_err(),
+            matches!(codec.decode(&bad), Err(CodecError::SpecRecord { .. })),
             "non-finite range accepted"
         );
         Ok(())
@@ -165,22 +206,28 @@ fn ecq_tile_design_roundtrips_with_in_band_tables() {
     // stream headers carry the recon tables, and reconstruction is exact.
     let mut g = Gen::new("ecq_tiles", 0);
     let xs = heterogeneous_tensor(&mut g, 4, 3000);
-    let pool = ThreadPool::new(3);
-    let cfg = base_cfg(4, 4.0);
-    let designer = EcqDesigner::new(ModelOptimalDesigner::leaky(4));
-    let s = batch::encode_batched_designed(&cfg, &designer, &xs, 3000, &pool);
+    let mut codec = designed_session(
+        base_spec(4, 4.0),
+        Box::new(EcqDesigner::new(ModelOptimalDesigner::leaky(4))),
+        3,
+        3000,
+    );
+    let s = codec.encode(&xs);
     let (dir, _) = SubstreamDirectory::read(&s.bytes).unwrap();
     for spec in dir.specs.as_ref().unwrap() {
         assert_eq!(spec.kind(), QuantKind::EntropyConstrained);
         assert_eq!(spec.levels(), 4);
     }
-    let (out, header) = batch::decode_batched(&s.bytes, &pool).unwrap();
-    assert_eq!(header.quant, QuantKind::EntropyConstrained);
+    let decoded = codec.decode(&s.bytes).unwrap();
+    assert_eq!(
+        decoded.info.header.as_ref().unwrap().quant,
+        QuantKind::EntropyConstrained
+    );
     for (t, spec) in dir.specs.as_ref().unwrap().iter().enumerate() {
         let q = spec.materialize();
         for k in 0..3000 {
             let i = t * 3000 + k;
-            assert_eq!(out[i], q.fake_quant(xs[i]), "tile {t} element {k}");
+            assert_eq!(decoded.values[i], q.fake_quant(xs[i]), "tile {t} element {k}");
         }
     }
 }
@@ -218,14 +265,17 @@ fn tile_model_design_dominates_global_static_at_matched_mse() {
     let mut g = Gen::new("rd_acceptance", 0);
     let tile_elems = 2048;
     let xs = offset_tensor(&mut g, 6, tile_elems);
-    let pool = ThreadPool::new(4);
-    let cfg = base_cfg(4, 16.0);
 
-    let designer = ModelOptimalDesigner::leaky(4);
-    let tiled = batch::encode_batched_designed(&cfg, &designer, &xs, tile_elems, &pool);
-    let (out, _) = batch::decode_batched(&tiled.bytes, &pool).unwrap();
+    let mut codec = designed_session(
+        base_spec(4, 16.0),
+        Box::new(ModelOptimalDesigner::leaky(4)),
+        4,
+        tile_elems,
+    );
+    let tiled = codec.encode(&xs);
+    let decoded = codec.decode(&tiled.bytes).unwrap();
     let bpe_tile = tiled.bits_per_element();
-    let mse_tile = fake_quant_mse(&xs, &out);
+    let mse_tile = fake_quant_mse(&xs, &decoded.values);
     // The per-tile design must actually have designed something: specs
     // anchored at three different offsets.
     let (dir, _) = SubstreamDirectory::read(&tiled.bytes).unwrap();
@@ -250,9 +300,8 @@ fn tile_model_design_dominates_global_static_at_matched_mse() {
             .design(&stats, &xs)
             .expect("global design");
             let q = global.materialize();
-            let mut enc =
-                lwfc::codec::Encoder::new(base_cfg(levels, 16.0).with_quant(global.clone()));
-            let s = enc.encode(&xs);
+            let mut static_codec = CodecBuilder::new(global).image_size(32).build();
+            let s = static_codec.encode(&xs);
             let bpe_s = s.bits_per_element();
             let mse_s = xs
                 .iter()
@@ -282,7 +331,7 @@ fn tile_model_design_dominates_global_static_at_matched_mse() {
 
 #[test]
 fn stream_design_matches_designer_output() {
-    // `design_or` + a single-stream encode is exactly what the CLI's
+    // `design_or` + a single-stream session is exactly what the CLI's
     // `--design model --clip-granularity stream` path runs.
     let mut g = Gen::new("stream_design", 0);
     let xs = g.activation_vec(20_000, 1.5);
@@ -299,15 +348,18 @@ fn stream_design_matches_designer_output() {
     );
     let spec = design_or(designer.as_ref(), &xs, &base);
     assert_ne!(spec, base, "designer should improve on the hand-picked range");
-    let mut enc = lwfc::codec::Encoder::new(
-        EncoderConfig::classification(spec.clone(), 32).with_entropy(EntropyKind::Rans),
-    );
-    let s = enc.encode(&xs);
-    let (decoded, header) = decode(&s.bytes, xs.len()).unwrap();
+    let mut codec = CodecBuilder::new(spec.clone())
+        .image_size(32)
+        .entropy(EntropyKind::Rans)
+        .expect_elements(xs.len())
+        .build();
+    let s = codec.encode(&xs);
+    let decoded = codec.decode(&s.bytes).unwrap();
+    let header = decoded.info.header.as_ref().unwrap();
     assert_eq!(header.entropy, EntropyKind::Rans);
     assert_eq!(header.levels, spec.levels());
     let q = spec.materialize();
-    for (i, (&x, &y)) in xs.iter().zip(&decoded).enumerate() {
+    for (i, (&x, &y)) in xs.iter().zip(&decoded.values).enumerate() {
         assert_eq!(y, q.fake_quant(x), "element {i}");
     }
 }
@@ -329,4 +381,13 @@ fn granularity_and_design_parse_roundtrip() {
         assert_eq!(ClipGranularity::parse(s).unwrap(), gnl);
         assert_eq!(gnl.name(), s);
     }
+    // Unknown spellings map to the typed `Invalid` class.
+    assert!(matches!(
+        DesignKind::parse("nope"),
+        Err(CodecError::Invalid { .. })
+    ));
+    assert!(matches!(
+        ClipGranularity::parse("voxel"),
+        Err(CodecError::Invalid { .. })
+    ));
 }

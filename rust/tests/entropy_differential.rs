@@ -5,32 +5,38 @@
 //! payload bytes. Corruption robustness is asymmetric by design — CABAC
 //! self-synchronizes to *some* in-range indices, while rANS carries
 //! integrity checks (final-state + full-consumption) and must turn
-//! truncated or corrupted payloads into `Err`, never a panic.
+//! truncated or corrupted payloads into typed `Err`s, never a panic.
 //!
 //! Also covers the serving-path acceptance: a rANS-encoded stream
 //! round-trips through the pipeline over a real localhost TCP transport
-//! (the `lwfc` CLI leg lives in `cli_smoke.rs`).
+//! (the `lwfc` CLI leg lives in `cli_smoke.rs`). Everything drives the
+//! `Codec` façade.
 
-use lwfc::codec::{
-    batch, decode, decode_indices, design_ecq, EcqParams, Encoder, EncoderConfig, EntropyKind,
-    Quantizer, UniformQuantizer,
-};
+use lwfc::codec::{design_ecq, EcqParams, EntropyKind, Quantizer, UniformQuantizer};
 use lwfc::prop_assert;
 use lwfc::util::prop::{prop_check, Gen};
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{Codec, CodecBuilder, QuantSpec};
 
-fn uniform_cfg(levels: usize, c_max: f32, entropy: EntropyKind) -> EncoderConfig {
-    EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels)),
-        32,
-    )
-    .with_entropy(entropy)
+fn uniform(levels: usize, c_max: f32) -> QuantSpec {
+    QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max,
+        levels,
+    }
+}
+
+fn session(quant: impl Into<QuantSpec>, entropy: EntropyKind, elements: usize) -> Codec {
+    CodecBuilder::new(quant)
+        .image_size(32)
+        .entropy(entropy)
+        .expect_elements(elements)
+        .build()
 }
 
 /// Encode `xs` with both backends and return the two streams.
 fn encode_both(levels: usize, c_max: f32, xs: &[f32]) -> (Vec<u8>, Vec<u8>) {
-    let cabac = Encoder::new(uniform_cfg(levels, c_max, EntropyKind::Cabac)).encode(xs);
-    let rans = Encoder::new(uniform_cfg(levels, c_max, EntropyKind::Rans)).encode(xs);
+    let cabac = session(uniform(levels, c_max), EntropyKind::Cabac, xs.len()).encode(xs);
+    let rans = session(uniform(levels, c_max), EntropyKind::Rans, xs.len()).encode(xs);
     (cabac.bytes, rans.bytes)
 }
 
@@ -45,8 +51,9 @@ fn backends_roundtrip_to_identical_indices() {
         let q = Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels));
 
         let (cb, rb) = encode_both(levels, c_max, &xs);
-        let (ci, ch) = decode_indices(&cb, n).map_err(|e| e.to_string())?;
-        let (ri, rh) = decode_indices(&rb, n).map_err(|e| e.to_string())?;
+        let mut codec = session(uniform(levels, c_max), EntropyKind::Cabac, n);
+        let (ci, ch) = codec.decode_indices(&cb).map_err(|e| e.to_string())?;
+        let (ri, rh) = codec.decode_indices(&rb).map_err(|e| e.to_string())?;
         prop_assert!(ch.entropy == EntropyKind::Cabac, "cabac header backend");
         prop_assert!(rh.entropy == EntropyKind::Rans, "rans header backend");
         prop_assert!(ci == ri, "index mismatch (n={n} levels={levels})");
@@ -58,8 +65,8 @@ fn backends_roundtrip_to_identical_indices() {
             );
         }
         // And the reconstructions agree value-for-value.
-        let (cv, _) = decode(&cb, n).map_err(|e| e.to_string())?;
-        let (rv, _) = decode(&rb, n).map_err(|e| e.to_string())?;
+        let cv = codec.decode(&cb).map_err(|e| e.to_string())?.values;
+        let rv = codec.decode(&rb).map_err(|e| e.to_string())?.values;
         prop_assert!(cv == rv, "reconstruction mismatch (n={n} levels={levels})");
         Ok(())
     });
@@ -72,7 +79,7 @@ fn backends_report_consistent_bits_per_element() {
         let levels = *g.choice(&[2usize, 3, 4, 8]);
         let xs = g.activation_vec(n, 0.4);
         for entropy in [EntropyKind::Cabac, EntropyKind::Rans] {
-            let stream = Encoder::new(uniform_cfg(levels, 2.0, entropy)).encode(&xs);
+            let stream = session(uniform(levels, 2.0), entropy, n).encode(&xs);
             let bpe = stream.bits_per_element();
             // The reported metric is exactly stream size over elements …
             let expect = stream.bytes.len() as f64 * 8.0 / n as f64;
@@ -97,11 +104,21 @@ fn backends_agree_on_ecq_streams() {
         let xs = g.activation_vec(8_192, 0.4);
         let levels = g.usize_in(3, 6);
         let d = design_ecq(&train, 0.0, 2.0, EcqParams::pinned(levels, 0.02));
-        let base = EncoderConfig::classification(Quantizer::NonUniform(d.quantizer.clone()), 32);
-        let cb = Encoder::new(base.clone()).encode(&xs);
-        let rb = Encoder::new(base.with_entropy(EntropyKind::Rans)).encode(&xs);
-        let (ci, _) = decode_indices(&cb.bytes, xs.len()).map_err(|e| e.to_string())?;
-        let (ri, rh) = decode_indices(&rb.bytes, xs.len()).map_err(|e| e.to_string())?;
+        let cb = session(
+            Quantizer::NonUniform(d.quantizer.clone()),
+            EntropyKind::Cabac,
+            xs.len(),
+        )
+        .encode(&xs);
+        let rb = session(
+            Quantizer::NonUniform(d.quantizer.clone()),
+            EntropyKind::Rans,
+            xs.len(),
+        )
+        .encode(&xs);
+        let mut codec = session(uniform(levels, 2.0), EntropyKind::Cabac, xs.len());
+        let (ci, _) = codec.decode_indices(&cb.bytes).map_err(|e| e.to_string())?;
+        let (ri, rh) = codec.decode_indices(&rb.bytes).map_err(|e| e.to_string())?;
         prop_assert!(ci == ri, "ECQ index mismatch (levels={levels})");
         prop_assert!(
             rh.recon.as_ref() == Some(&d.quantizer.recon),
@@ -117,8 +134,8 @@ fn corrupt_or_truncated_rans_streams_error_not_panic() {
         let n = g.usize_in(16, 4_000);
         let levels = *g.choice(&[2usize, 3, 4, 8]);
         let xs = g.activation_vec(n, 0.5);
-        let mut enc = Encoder::new(uniform_cfg(levels, 2.0, EntropyKind::Rans));
-        let bytes = enc.encode(&xs).bytes;
+        let mut codec = session(uniform(levels, 2.0), EntropyKind::Rans, n);
+        let bytes = codec.encode(&xs).bytes;
 
         // Any truncation of the payload region is a guaranteed error: the
         // decoder consumes exactly the bytes the encoder emitted, so a
@@ -126,7 +143,7 @@ fn corrupt_or_truncated_rans_streams_error_not_panic() {
         // final-state / consumption checks.
         let cut = g.usize_in(12, bytes.len() - 1);
         prop_assert!(
-            decode(&bytes[..cut], n).is_err(),
+            codec.decode(&bytes[..cut]).is_err(),
             "rANS truncation to {cut}/{} accepted (n={n} levels={levels})",
             bytes.len()
         );
@@ -139,9 +156,10 @@ fn corrupt_or_truncated_rans_streams_error_not_panic() {
         let i = g.usize_in(12, bytes.len() - 1);
         let mut bad = bytes.clone();
         bad[i] ^= (g.u64() as u8) | 1;
-        if let Ok((vals, header)) = decode(&bad, n) {
-            prop_assert!(vals.len() == n, "corrupt decode changed length");
-            for &v in &vals {
+        if let Ok(decoded) = codec.decode(&bad) {
+            let header = decoded.info.header.as_ref().expect("ok decode has header");
+            prop_assert!(decoded.values.len() == n, "corrupt decode changed length");
+            for &v in &decoded.values {
                 prop_assert!(
                     v >= header.c_min && v <= header.c_max,
                     "corrupt decode out of range: {v}"
@@ -160,15 +178,15 @@ fn rans_initial_state_corruption_is_always_detected() {
     // deterministic inputs make this assertion stable.
     let mut g = Gen::new("rans_state_corruption", 0);
     let xs = g.activation_vec(2_048, 0.5);
-    let mut enc = Encoder::new(uniform_cfg(4, 2.0, EntropyKind::Rans));
-    let bytes = enc.encode(&xs).bytes;
+    let mut codec = session(uniform(4, 2.0), EntropyKind::Rans, xs.len());
+    let bytes = codec.encode(&xs).bytes;
     let state_off = 12 + 2 * 3; // header + 3-position table
     for i in state_off..state_off + 8 {
         for flip in [0x01u8, 0x80, 0xFF] {
             let mut bad = bytes.clone();
             bad[i] ^= flip;
             assert!(
-                decode(&bad, xs.len()).is_err(),
+                codec.decode(&bad).is_err(),
                 "state byte {i} flipped by {flip:#04x} went undetected"
             );
         }
@@ -182,18 +200,35 @@ fn batched_containers_are_differential_too() {
         let tile = g.usize_in(64, 4_096);
         let levels = *g.choice(&[2usize, 3, 4, 8]);
         let xs = g.activation_vec(n, 0.5);
-        let pool = ThreadPool::new(g.usize_in(1, 4));
-        let ccfg = uniform_cfg(levels, 2.0, EntropyKind::Cabac);
-        let rcfg = uniform_cfg(levels, 2.0, EntropyKind::Rans);
-        let cb = batch::encode_batched(&ccfg, &xs, tile, &pool);
-        let rb = batch::encode_batched(&rcfg, &xs, tile, &pool);
-        let (cv, ch) = batch::decode_batched(&cb.bytes, &pool).map_err(|e| e.to_string())?;
-        let (rv, rh) = batch::decode_batched(&rb.bytes, &pool).map_err(|e| e.to_string())?;
-        prop_assert!(cv == rv, "batched reconstruction mismatch (n={n} tile={tile})");
-        prop_assert!(ch.entropy == EntropyKind::Cabac && rh.entropy == EntropyKind::Rans, "headers");
-        // Containers advertise their backend without decoding a tile.
+        let threads = g.usize_in(1, 4);
+        let batched = |entropy: EntropyKind| {
+            CodecBuilder::new(uniform(levels, 2.0))
+                .image_size(32)
+                .entropy(entropy)
+                .threads(threads)
+                .tile_elems(tile)
+                .force_container()
+                .build()
+        };
+        let mut cc = batched(EntropyKind::Cabac);
+        let mut rc = batched(EntropyKind::Rans);
+        let cb = cc.encode(&xs);
+        let rb = rc.encode(&xs);
+        let cd = cc.decode(&cb.bytes).map_err(|e| e.to_string())?;
+        let rd = rc.decode(&rb.bytes).map_err(|e| e.to_string())?;
+        prop_assert!(cd.values == rd.values, "batched reconstruction mismatch (n={n} tile={tile})");
+        let (ch, rh) = (
+            cd.info.header.as_ref().ok_or("cabac header")?,
+            rd.info.header.as_ref().ok_or("rans header")?,
+        );
         prop_assert!(
-            lwfc::codec::sniff_entropy(&rb.bytes) == Some(EntropyKind::Rans),
+            ch.entropy == EntropyKind::Cabac && rh.entropy == EntropyKind::Rans,
+            "headers"
+        );
+        // Containers advertise their backend without decoding a tile —
+        // through the one consolidated sniffer.
+        prop_assert!(
+            lwfc::sniff(&rb.bytes).entropy == Some(EntropyKind::Rans),
             "container sniff"
         );
         Ok(())
@@ -207,23 +242,30 @@ mod tcp_path {
     use std::time::Duration;
 
     use anyhow::Result;
-    use lwfc::codec::{batch, decode_any, EncoderConfig, EntropyKind, Quantizer, UniformQuantizer};
+    use lwfc::codec::EntropyKind;
     use lwfc::coordinator::{
         run_pipeline, CloudStage, CompressedItem, EdgeStage, Outcome, PipelineConfig, Request,
         TaskKind, TcpTransport, Transport,
     };
     use lwfc::util::prop::Gen;
-    use lwfc::util::threadpool::ThreadPool;
+    use lwfc::{Codec, CodecBuilder, QuantSpec};
 
     const ELEMS: usize = 2_048;
     const TILE: usize = 512;
 
-    fn cfg(entropy: EntropyKind) -> EncoderConfig {
-        EncoderConfig::classification(
-            Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4)),
-            32,
-        )
-        .with_entropy(entropy)
+    fn codec_for(entropy: EntropyKind) -> Codec {
+        CodecBuilder::new(QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 2.0,
+            levels: 4,
+        })
+        .image_size(32)
+        .entropy(entropy)
+        .threads(2)
+        .tile_elems(TILE)
+        .force_container()
+        .expect_elements(ELEMS)
+        .build()
     }
 
     fn tensor_for(image_index: u64) -> Vec<f32> {
@@ -233,20 +275,21 @@ mod tcp_path {
     /// Edge stage encoding every other request with the other backend —
     /// one device fleet, mixed backends, one wire.
     struct MixedEdge {
-        pool: ThreadPool,
+        cabac: Codec,
+        rans: Codec,
     }
 
     impl EdgeStage for MixedEdge {
         fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
             let mut out = Vec::with_capacity(requests.len());
             for r in requests {
-                let entropy = if r.image_index % 2 == 0 {
-                    EntropyKind::Rans
+                let codec = if r.image_index % 2 == 0 {
+                    &mut self.rans
                 } else {
-                    EntropyKind::Cabac
+                    &mut self.cabac
                 };
                 let xs = tensor_for(r.image_index);
-                let s = batch::encode_batched(&cfg(entropy), &xs, TILE, &self.pool);
+                let s = codec.encode(&xs);
                 out.push(CompressedItem {
                     id: r.id,
                     image_index: r.image_index,
@@ -263,27 +306,27 @@ mod tcp_path {
     /// Cloud stage verifying the reconstruction against the regenerated
     /// tensor and the header against the expected per-item backend.
     struct VerifyCloud {
-        pool: ThreadPool,
+        codec: Codec,
+        scratch: Vec<f32>,
     }
 
     impl CloudStage for VerifyCloud {
         fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>> {
             let mut out = Vec::with_capacity(items.len());
             for item in items {
-                let (values, header) = decode_any(&item.bytes, item.elements, &self.pool)
-                    .map_err(anyhow::Error::msg)?;
+                let info = self.codec.decode_into(&item.bytes, &mut self.scratch)?;
                 let want = if item.image_index % 2 == 0 {
                     EntropyKind::Rans
                 } else {
                     EntropyKind::Cabac
                 };
-                let q = cfg(want).quantizer();
+                let q = codec_for(want).quant_spec().materialize();
                 let expect: Vec<f32> =
                     tensor_for(item.image_index).iter().map(|&x| q.fake_quant(x)).collect();
                 out.push(Outcome {
                     id: item.id,
                     image_index: item.image_index,
-                    correct: Some(header.entropy == want && values == expect),
+                    correct: Some(info.entropy == Some(want) && self.scratch == expect),
                     detections: Vec::new(),
                     latency_s: item.arrived.elapsed().as_secs_f64(),
                     bits_per_element: item.bits_per_element(),
@@ -320,12 +363,14 @@ mod tcp_path {
                 &transport,
                 |_w| {
                     Ok(MixedEdge {
-                        pool: ThreadPool::new(2),
+                        cabac: codec_for(EntropyKind::Cabac),
+                        rans: codec_for(EntropyKind::Rans),
                     })
                 },
                 || {
                     Ok(VerifyCloud {
-                        pool: ThreadPool::new(2),
+                        codec: codec_for(EntropyKind::Cabac),
+                        scratch: Vec::new(),
                     })
                 },
             )

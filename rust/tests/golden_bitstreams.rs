@@ -4,19 +4,23 @@
 //! and were produced by `tests/golden/gen_golden.py`, a line-by-line port
 //! of this codec with its own self-checks.
 //!
-//! Six vectors cover both entropy backends over the three encoder paths:
-//! the generic truncated-unary path (uniform N=4), the specialized 1-bit
-//! CABAC path (uniform N=2), and the entropy-constrained path with an
-//! in-band reconstruction table (ECQ N=4) — each as a legacy CABAC stream
-//! (header backend bits 0, pre-bump byte layout) and as a `rans_*` twin
-//! over the *same* `.f32` input with the rANS backend id in the header.
-//! The CABAC fixtures predate the header version bump, so they double as
-//! the proof that legacy streams still decode byte-exactly.
+//! Since the `Codec` façade became the public API, every pin here
+//! encodes *and* decodes through a [`lwfc::Codec`] session — the proof
+//! that the façade is byte-identical to the paths that wrote the
+//! fixtures.
+//!
+//! Six single-stream vectors cover both entropy backends over the three
+//! encoder paths: the generic truncated-unary path (uniform N=4), the
+//! specialized 1-bit CABAC path (uniform N=2), and the
+//! entropy-constrained path with an in-band reconstruction table (ECQ
+//! N=4) — each as a legacy CABAC stream (header backend bits 0, pre-bump
+//! byte layout) and as a `rans_*` twin over the *same* `.f32` input with
+//! the rANS backend id in the header. The CABAC fixtures predate the
+//! header version bump, so they double as the proof that legacy streams
+//! still decode byte-exactly.
 
-use lwfc::codec::{
-    decode, decode_indices, Encoder, EncoderConfig, EntropyKind, NonUniformQuantizer, QuantKind,
-    Quantizer, UniformQuantizer,
-};
+use lwfc::codec::{EntropyKind, NonUniformQuantizer, QuantKind, Quantizer, UniformQuantizer};
+use lwfc::{Codec, CodecBuilder, QuantSpec};
 
 fn f32_le(bytes: &[u8]) -> Vec<f32> {
     assert_eq!(bytes.len() % 4, 0);
@@ -26,9 +30,18 @@ fn f32_le(bytes: &[u8]) -> Vec<f32> {
         .collect()
 }
 
-/// Assert: encoding `input` with `quantizer` under `entropy` reproduces
-/// `expected` exactly, the header signals the backend, and decoding
-/// `expected` reproduces element-wise fake-quant of `input`.
+fn session(quant: impl Into<QuantSpec>, entropy: EntropyKind, elements: usize) -> Codec {
+    CodecBuilder::new(quant)
+        .image_size(32)
+        .entropy(entropy)
+        .expect_elements(elements)
+        .build()
+}
+
+/// Assert: encoding `input` with `quantizer` under `entropy` through a
+/// `Codec` session reproduces `expected` exactly, the header signals the
+/// backend, and decoding `expected` reproduces element-wise fake-quant of
+/// `input`.
 fn check_golden_with(
     name: &str,
     input: &[u8],
@@ -39,22 +52,31 @@ fn check_golden_with(
     let xs = f32_le(input);
     let q = quantizer.clone();
 
-    let mut enc = Encoder::new(EncoderConfig::classification(quantizer, 32).with_entropy(entropy));
-    let stream = enc.encode(&xs);
+    let mut codec = session(quantizer, entropy, xs.len());
+    let stream = codec.encode(&xs);
     assert_eq!(
         stream.bytes, expected,
         "{name}: encoded bytes diverge from the golden vector — the wire \
          format changed. If intentional, regenerate tests/golden/ via \
          gen_golden.py and bump the container/codec version."
     );
+    // encode_to writes the same bytes through the reused-buffer path.
+    let mut buf = Vec::new();
+    codec.encode_to(&xs, &mut buf);
+    assert_eq!(buf, expected, "{name}: encode_to diverged from encode");
 
-    let (decoded, header) = decode(expected, xs.len()).unwrap();
-    assert_eq!(decoded.len(), xs.len(), "{name}: decoded length");
+    let decoded = codec.decode(expected).unwrap();
+    let header = decoded.info.header.as_ref().expect("golden decodes cleanly");
+    assert_eq!(decoded.values.len(), xs.len(), "{name}: decoded length");
     assert_eq!(header.levels, q.levels(), "{name}: header levels");
     assert_eq!(header.entropy, entropy, "{name}: header backend");
-    for (i, (&x, &y)) in xs.iter().zip(&decoded).enumerate() {
+    for (i, (&x, &y)) in xs.iter().zip(&decoded.values).enumerate() {
         assert_eq!(y, q.fake_quant(x), "{name}: element {i}");
     }
+    // The zero-copy path reconstructs the same bits.
+    let mut out = vec![f32::NAN; 7];
+    codec.decode_into(expected, &mut out).unwrap();
+    assert_eq!(out, decoded.values, "{name}: decode_into diverged");
 }
 
 fn check_golden(name: &str, input: &[u8], expected: &[u8], quantizer: Quantizer) {
@@ -136,7 +158,8 @@ fn golden_rans_ecq_n4_with_in_band_recon_table() {
     // The recon table rides in-band exactly like the CABAC variant.
     let expected = include_bytes!("golden/rans_ecq_n4.lwfc");
     let n = include_bytes!("golden/ecq_n4.f32").len() / 4;
-    let (_, header) = decode_indices(expected, n).unwrap();
+    let mut codec = session(pinned_ecq(), EntropyKind::Rans, n);
+    let (_, header) = codec.decode_indices(expected).unwrap();
     assert_eq!(header.quant, QuantKind::EntropyConstrained);
     assert_eq!(header.entropy, EntropyKind::Rans);
     assert_eq!(header.recon.as_deref(), Some(&[0.0f32, 1.0, 2.5, 6.0][..]));
@@ -166,8 +189,9 @@ fn rans_and_cabac_goldens_decode_to_identical_indices() {
             include_bytes!("golden/ecq_n4.f32").len() / 4,
         ),
     ] {
-        let (a, ha) = decode_indices(legacy, n).unwrap();
-        let (b, hb) = decode_indices(rans, n).unwrap();
+        let mut codec = session(pinned_ecq(), EntropyKind::Cabac, n);
+        let (a, ha) = codec.decode_indices(legacy).unwrap();
+        let (b, hb) = codec.decode_indices(rans).unwrap();
         assert_eq!(ha.entropy, EntropyKind::Cabac, "{name}: legacy backend");
         assert_eq!(hb.entropy, EntropyKind::Rans, "{name}: rans backend");
         assert_eq!(a, b, "{name}: backends decode different indices");
@@ -184,7 +208,9 @@ fn legacy_goldens_predate_the_backend_field() {
         &include_bytes!("golden/uniform_n2.lwfc")[..],
         &include_bytes!("golden/ecq_n4.lwfc")[..],
     ] {
-        assert_eq!(bytes[0] >> 6, 0);
+        assert_eq!(bytes[0] >> 6, 0, "CABAC header must keep legacy bits 6-7 zero");
+        assert_eq!(lwfc::sniff(bytes).entropy, Some(EntropyKind::Cabac));
+        assert_eq!(lwfc::sniff(bytes).format, lwfc::StreamFormat::SingleStream);
     }
     for bytes in [
         &include_bytes!("golden/rans_uniform_n4.lwfc")[..],
@@ -192,6 +218,7 @@ fn legacy_goldens_predate_the_backend_field() {
         &include_bytes!("golden/rans_ecq_n4.lwfc")[..],
     ] {
         assert_eq!(bytes[0] >> 6, 1);
+        assert_eq!(lwfc::sniff(bytes).entropy, Some(EntropyKind::Rans));
     }
 }
 
@@ -199,7 +226,8 @@ fn legacy_goldens_predate_the_backend_field() {
 fn golden_ecq_header_carries_recon_table() {
     let expected = include_bytes!("golden/ecq_n4.lwfc");
     let n = include_bytes!("golden/ecq_n4.f32").len() / 4;
-    let (_, header) = decode_indices(expected, n).unwrap();
+    let mut codec = session(pinned_ecq(), EntropyKind::Cabac, n);
+    let (_, header) = codec.decode_indices(expected).unwrap();
     assert_eq!(header.quant, QuantKind::EntropyConstrained);
     assert_eq!(header.recon.as_deref(), Some(&[0.0f32, 1.0, 2.5, 6.0][..]));
     assert_eq!(header.c_min, 0.0);
@@ -210,7 +238,10 @@ fn golden_ecq_header_carries_recon_table() {
 fn golden_vectors_exercise_every_level() {
     // A golden vector that misses a level would under-pin the format.
     let n = include_bytes!("golden/uniform_n4.f32").len() / 4;
-    let (idx, _) = decode_indices(include_bytes!("golden/uniform_n4.lwfc"), n).unwrap();
+    let mut codec = session(UniformQuantizer::new(0.0, 6.0, 4), EntropyKind::Cabac, n);
+    let (idx, _) = codec
+        .decode_indices(include_bytes!("golden/uniform_n4.lwfc"))
+        .unwrap();
     let mut seen = [false; 4];
     for &i in &idx {
         seen[i as usize] = true;
@@ -221,17 +252,19 @@ fn golden_vectors_exercise_every_level() {
 #[test]
 fn golden_v2_container_encode_and_decode_are_pinned() {
     // The spec-less batched container must keep writing version 2
-    // byte-identically through the design-stage refactor: re-encoding the
-    // uniform_n4 input with the same config reproduces the committed
-    // fixture exactly, and the fixture decodes to element-wise fake-quant.
-    use lwfc::codec::{batch, EncoderConfig, SubstreamDirectory};
-    use lwfc::util::threadpool::ThreadPool;
+    // byte-identically through the façade: re-encoding the uniform_n4
+    // input with the same config reproduces the committed fixture
+    // exactly, and the fixture decodes to element-wise fake-quant.
+    use lwfc::codec::SubstreamDirectory;
     let xs = f32_le(include_bytes!("golden/uniform_n4.f32"));
     let expected = include_bytes!("golden/batch_v2_uniform_n4.lwfb");
     let q = UniformQuantizer::new(0.0, 6.0, 4);
-    let cfg = EncoderConfig::classification(Quantizer::Uniform(q), 32);
-    let pool = ThreadPool::new(3);
-    let s = batch::encode_batched(&cfg, &xs, 128, &pool);
+    let mut codec = CodecBuilder::new(q)
+        .image_size(32)
+        .threads(3)
+        .tile_elems(128)
+        .build();
+    let s = codec.encode(&xs);
     assert_eq!(
         s.bytes, expected,
         "batch_v2: container bytes diverge from the golden vector — the \
@@ -242,9 +275,10 @@ fn golden_v2_container_encode_and_decode_are_pinned() {
     assert_eq!(expected[4], 2, "spec-less containers are version 2");
     assert!(dir.specs.is_none());
     assert_eq!(dir.entries.len(), 4);
-    let (out, header) = batch::decode_batched(expected, &pool).unwrap();
-    assert_eq!(header.levels, 4);
-    for (i, (&x, &y)) in xs.iter().zip(&out).enumerate() {
+    let decoded = codec.decode(expected).unwrap();
+    assert_eq!(decoded.info.header.as_ref().unwrap().levels, 4);
+    assert_eq!(decoded.info.substreams, 4);
+    for (i, (&x, &y)) in xs.iter().zip(&decoded.values).enumerate() {
         assert_eq!(y, q.fake_quant(x), "batch_v2 element {i}");
     }
 }
@@ -256,11 +290,15 @@ fn golden_v3_container_decodes_per_tile_specs() {
     // and one ECQ with in-band tables. The directory specs must parse to
     // exactly those quantizers, and decode must equal per-tile fake-quant
     // of the committed input.
-    use lwfc::codec::{batch, NonUniformQuantizer, QuantSpec, SubstreamDirectory};
-    use lwfc::util::threadpool::ThreadPool;
+    use lwfc::codec::SubstreamDirectory;
+    use lwfc::CodecError;
     let xs = f32_le(include_bytes!("golden/uniform_n4.f32"));
     let blob = include_bytes!("golden/batch_v3_mixed.lwfb");
     assert_eq!(blob[4], 3, "per-tile fixture is container v3");
+    assert_eq!(
+        lwfc::sniff(blob).format,
+        lwfc::StreamFormat::Container { version: 3 }
+    );
     let (dir, _) = SubstreamDirectory::read(blob).unwrap();
     let specs = dir.specs.as_ref().expect("v3 carries specs");
     let want = [
@@ -282,37 +320,50 @@ fn golden_v3_container_decodes_per_tile_specs() {
         }),
     ];
     assert_eq!(specs[..], want[..]);
-    let pool = ThreadPool::new(2);
-    let (out, _) = batch::decode_batched(blob, &pool).unwrap();
-    assert_eq!(out.len(), xs.len());
+    let mut codec = CodecBuilder::new(want[0].clone())
+        .threads(2)
+        .build();
+    let decoded = codec.decode(blob).unwrap();
+    assert_eq!(decoded.values.len(), xs.len());
+    assert_eq!(decoded.info.designed_tiles, 3);
     let bounds = [(0usize, 200usize), (200, 400), (400, 512)];
     for (spec, (lo, hi)) in want.iter().zip(bounds) {
         let q = spec.materialize();
         for i in lo..hi {
-            assert_eq!(out[i], q.fake_quant(xs[i]), "element {i}");
+            assert_eq!(decoded.values[i], q.fake_quant(xs[i]), "element {i}");
         }
     }
     // Tolerant decode of a corrupted middle tile fills with that tile's
-    // own spec c_min and leaves the others exact.
+    // own spec c_min, classifies the damage as a checksum mismatch on
+    // tile 1, and leaves the others exact.
     let (dir2, payload_off) = SubstreamDirectory::read(blob).unwrap();
     let mut bad = blob.to_vec();
     let t1_off = payload_off + dir2.entries[0].byte_len as usize;
     bad[t1_off + 14] ^= 0x3C; // inside tile 1's payload
-    assert!(batch::decode_batched(&bad, &pool).is_err());
-    let (vals, report) = batch::decode_batched_tolerant(&bad, &pool).unwrap();
-    assert_eq!(report.corrupted, vec![1]);
-    assert_eq!(vals[200], 0.0, "fill from tile 1's spec c_min");
-    assert_eq!(vals[..200], out[..200]);
-    assert_eq!(vals[400..], out[400..]);
+    assert!(codec.decode(&bad).is_err());
+    let mut tol = CodecBuilder::new(want[0].clone())
+        .threads(2)
+        .tolerant(true)
+        .build();
+    let salvaged = tol.decode(&bad).unwrap();
+    assert_eq!(salvaged.info.corrupted_tiles(), vec![1]);
+    assert!(matches!(
+        salvaged.info.failures[0],
+        CodecError::ChecksumMismatch { tile: Some(1), .. }
+    ));
+    assert_eq!(salvaged.values[200], 0.0, "fill from tile 1's spec c_min");
+    assert_eq!(salvaged.values[..200], decoded.values[..200]);
+    assert_eq!(salvaged.values[400..], decoded.values[400..]);
 }
 
 #[test]
 fn golden_streams_reject_truncation() {
     let bytes = include_bytes!("golden/uniform_n4.lwfc");
-    assert!(decode(&bytes[..8], 512).is_err(), "truncated header accepted");
+    let mut codec = session(UniformQuantizer::new(0.0, 6.0, 4), EntropyKind::Cabac, 512);
+    assert!(codec.decode(&bytes[..8]).is_err(), "truncated header accepted");
     // rANS payload truncation is detected anywhere, not just in the header.
     let rans = include_bytes!("golden/rans_uniform_n4.lwfc");
     for cut in [8, 20, rans.len() - 1] {
-        assert!(decode(&rans[..cut], 512).is_err(), "rANS cut at {cut} accepted");
+        assert!(codec.decode(&rans[..cut]).is_err(), "rANS cut at {cut} accepted");
     }
 }

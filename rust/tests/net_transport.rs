@@ -17,14 +17,13 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
-use lwfc::codec::{batch, decode_any, EncoderConfig, Quantizer, UniformQuantizer};
 use lwfc::coordinator::{
     run_pipeline, CloudDaemon, CloudStage, CompressedItem, EdgeClient, EdgeStage,
     LoopbackTransport, Outcome, PipelineConfig, Request, RetryPolicy, TaskKind, TcpTransport,
     Transport, WireItem, WireOutcome,
 };
 use lwfc::util::prop::Gen;
-use lwfc::util::threadpool::ThreadPool;
+use lwfc::{Codec, CodecBuilder, QuantSpec};
 
 const ELEMS: usize = 2_048;
 const TILE: usize = 512;
@@ -32,11 +31,21 @@ const TASK: TaskKind = TaskKind::ClassifyAlex;
 
 type PayloadMap = Arc<Mutex<HashMap<u64, Vec<u8>>>>;
 
-fn enc_config() -> EncoderConfig {
-    EncoderConfig::classification(
-        Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4)),
-        32,
-    )
+/// Every party in these tests runs the same `Codec` session config, so
+/// client-side and pipeline-side bytes are identical by construction and
+/// any wire-level divergence is detectable.
+fn session() -> Codec {
+    CodecBuilder::new(QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 2.0,
+        levels: 4,
+    })
+    .image_size(32)
+    .threads(2)
+    .tile_elems(TILE)
+    .force_container()
+    .expect_elements(ELEMS)
+    .build()
 }
 
 /// The deterministic "sensor capture" both sides regenerate from the
@@ -45,29 +54,28 @@ fn tensor_for(image_index: u64) -> Vec<f32> {
     Gen::new("net_transport", image_index).activation_vec(ELEMS, 0.5)
 }
 
-/// Encode one request exactly the way every party in these tests does —
-/// shared so client-side and pipeline-side bytes are identical by
-/// construction and any wire-level divergence is detectable.
-fn encode_item(image_index: u64, pool: &ThreadPool) -> (Vec<u8>, usize) {
+/// Encode one request through the shared session config.
+fn encode_item(image_index: u64, codec: &mut Codec) -> (Vec<u8>, usize) {
     let xs = tensor_for(image_index);
-    let s = batch::encode_batched(&enc_config(), &xs, TILE, pool);
+    let s = codec.encode(&xs);
     (s.bytes, s.elements)
 }
 
 /// Decode + verify one item; `Some(true)` iff the reconstruction equals
-/// the fake-quantized source tensor.
-fn verify_item(bytes: &[u8], elements: usize, image_index: u64, pool: &ThreadPool) -> Result<bool> {
-    let (values, _) = decode_any(bytes, elements, pool).map_err(anyhow::Error::msg)?;
-    let q = enc_config().quantizer();
+/// the fake-quantized source tensor (the session's `expect_elements`
+/// guards the container claim; the wire's own claim is checked here).
+fn verify_item(bytes: &[u8], elements: usize, image_index: u64, codec: &mut Codec) -> Result<bool> {
+    let decoded = codec.decode(bytes)?;
+    let q = codec.quant_spec().materialize();
     let expect: Vec<f32> = tensor_for(image_index).iter().map(|&x| q.fake_quant(x)).collect();
-    Ok(values == expect)
+    Ok(elements == decoded.values.len() && decoded.values == expect)
 }
 
 // ---------------------------------------------------------------------------
 // Synthetic pipeline stages (no PJRT)
 
 struct SynthEdge {
-    pool: ThreadPool,
+    codec: Codec,
     fail_after: Option<usize>,
     processed: usize,
 }
@@ -75,7 +83,7 @@ struct SynthEdge {
 impl SynthEdge {
     fn new(fail_after: Option<usize>) -> Self {
         Self {
-            pool: ThreadPool::new(2),
+            codec: session(),
             fail_after,
             processed: 0,
         }
@@ -92,7 +100,7 @@ impl EdgeStage for SynthEdge {
                 }
             }
             self.processed += 1;
-            let (bytes, elements) = encode_item(r.image_index, &self.pool);
+            let (bytes, elements) = encode_item(r.image_index, &mut self.codec);
             out.push(CompressedItem {
                 id: r.id,
                 image_index: r.image_index,
@@ -107,7 +115,7 @@ impl EdgeStage for SynthEdge {
 }
 
 struct SynthCloud {
-    pool: ThreadPool,
+    codec: Codec,
     fail_after: Option<usize>,
     processed: usize,
     /// Wire payloads exactly as this stage received them, by image index.
@@ -117,7 +125,7 @@ struct SynthCloud {
 impl SynthCloud {
     fn new(fail_after: Option<usize>, seen: Option<PayloadMap>) -> Self {
         Self {
-            pool: ThreadPool::new(2),
+            codec: session(),
             fail_after,
             processed: 0,
             seen,
@@ -138,7 +146,8 @@ impl CloudStage for SynthCloud {
             if let Some(seen) = &self.seen {
                 seen.lock().unwrap().insert(item.image_index, item.bytes.clone());
             }
-            let correct = verify_item(&item.bytes, item.elements, item.image_index, &self.pool)?;
+            let correct =
+                verify_item(&item.bytes, item.elements, item.image_index, &mut self.codec)?;
             out.push(Outcome {
                 id: item.id,
                 image_index: item.image_index,
@@ -248,12 +257,12 @@ fn cloud_daemon_serves_two_edge_clients_and_matches_loopback_payloads() {
         let daemon_seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
         let handler_seen = Arc::clone(&daemon_seen);
         let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 4, move |_conn| {
-            let pool = ThreadPool::new(2);
+            let mut codec = session();
             let seen = Arc::clone(&handler_seen);
             Ok(move |item: WireItem| -> Result<WireOutcome> {
                 seen.lock().unwrap().insert(item.image_index, item.bytes.clone());
                 let correct =
-                    verify_item(&item.bytes, item.elements as usize, item.image_index, &pool)?;
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &mut codec)?;
                 Ok(WireOutcome {
                     id: item.id,
                     image_index: item.image_index,
@@ -273,14 +282,14 @@ fn cloud_daemon_serves_two_edge_clients_and_matches_loopback_payloads() {
         for c in 0..n_clients {
             let addr = addr.clone();
             joins.push(std::thread::spawn(move || -> (u64, Vec<WireOutcome>) {
-                let pool = ThreadPool::new(2);
+                let mut codec = session();
                 let mut client =
                     EdgeClient::connect(&addr, TASK, 4, RetryPolicy::default()).unwrap();
                 let mut got = Vec::new();
                 for k in 0..n_per_client {
                     let image_index = c * n_per_client + k;
                     let id = image_index; // globally unique across clients
-                    let (bytes, elements) = encode_item(image_index, &pool);
+                    let (bytes, elements) = encode_item(image_index, &mut codec);
                     got.extend(
                         client
                             .send(WireItem {
@@ -382,7 +391,7 @@ fn edge_client_reconnects_and_resends_after_connection_drop() {
         // The first connection dies after 2 items (handler error drops the
         // socket); later connections are healthy.
         let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 2, move |conn| {
-            let pool = ThreadPool::new(1);
+            let mut codec = session();
             let mut handled = 0u32;
             Ok(move |item: WireItem| -> Result<WireOutcome> {
                 if conn == 0 {
@@ -392,7 +401,7 @@ fn edge_client_reconnects_and_resends_after_connection_drop() {
                     }
                 }
                 let correct =
-                    verify_item(&item.bytes, item.elements as usize, item.image_index, &pool)?;
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &mut codec)?;
                 Ok(WireOutcome {
                     id: item.id,
                     image_index: item.image_index,
@@ -406,7 +415,7 @@ fn edge_client_reconnects_and_resends_after_connection_drop() {
         .unwrap();
         let addr = daemon.local_addr().to_string();
 
-        let pool = ThreadPool::new(2);
+        let mut codec = session();
         let retry = RetryPolicy {
             attempts: 10,
             backoff: Duration::from_millis(5),
@@ -415,7 +424,7 @@ fn edge_client_reconnects_and_resends_after_connection_drop() {
         let mut client = EdgeClient::connect(&addr, TASK, 4, retry).unwrap();
         let mut got = Vec::new();
         for id in 0..n {
-            let (bytes, elements) = encode_item(id, &pool);
+            let (bytes, elements) = encode_item(id, &mut codec);
             got.extend(
                 client
                     .send(WireItem {

@@ -1,0 +1,157 @@
+//! Public-API snapshot for the `Codec` façade: the exported surface of
+//! `codec::api` (and the error taxonomy in `codec::error`) is pinned
+//! item-by-item, so accidental surface growth — a new pub fn, struct, or
+//! trait slipping into the façade — fails CI until the snapshot is
+//! deliberately updated here.
+//!
+//! Two layers:
+//! 1. a compile-time existence check (the `use` list below breaks if an
+//!    item is renamed or removed);
+//! 2. a source-level scan of the façade modules comparing every `pub`
+//!    item name against the pinned snapshot (catches *additions*, which
+//!    a compile-time check cannot).
+
+// Layer 1: every façade item is nameable from the crate root.
+#[allow(unused_imports)]
+use lwfc::{
+    sniff, Codec, CodecBuilder, CodecError, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo,
+    QuantSpec, StreamFormat,
+};
+
+/// Extract `pub fn|struct|enum|trait|const|type <name>` item names from a
+/// source file, in order of appearance (methods inside `impl` blocks
+/// included — they are API surface too).
+fn pub_items(source: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in source.lines() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("pub ") else {
+            continue;
+        };
+        for kw in ["fn ", "struct ", "enum ", "trait ", "const ", "type "] {
+            if let Some(after) = rest.strip_prefix(kw) {
+                let name: String = after
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !name.is_empty() {
+                    out.push(name);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn read_module(rel: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+#[test]
+fn facade_surface_is_pinned() {
+    let got = pub_items(&read_module("src/codec/api.rs"));
+    // Enum variants and struct fields are not API items the scanner
+    // tracks (they carry no `pub fn|struct|...` prefix); everything else
+    // is pinned in order of appearance.
+    let want = vec![
+        // format sniffing
+        "StreamFormat",
+        "FormatInfo",
+        "sniff",
+        // builder
+        "CodecBuilder",
+        "new",
+        "image_size",
+        "detection",
+        "entropy",
+        "tile_elems",
+        "threads",
+        "tile_designer",
+        "design",
+        "tolerant",
+        "force_container",
+        "expect_elements",
+        "build",
+        // session + result types
+        "Codec",
+        "Encoded",
+        "bits_per_element",
+        "EncodeInfo",
+        "bits_per_element",
+        "Decoded",
+        "DecodeInfo",
+        "is_clean",
+        "corrupted_tiles",
+        // session methods
+        "builder",
+        "quant_spec",
+        "entropy",
+        "encodes_container",
+        "has_tile_designer",
+        "set_quant",
+        "encode",
+        "encode_to",
+        "decode",
+        "decode_into",
+        "decode_indices",
+    ];
+    let want: Vec<String> = want.into_iter().map(String::from).collect();
+    assert_eq!(
+        got, want,
+        "codec::api public surface changed — if intentional, update this snapshot \
+         (and the README Library API section)"
+    );
+}
+
+#[test]
+fn error_taxonomy_surface_is_pinned() {
+    let got = pub_items(&read_module("src/codec/error.rs"));
+    let want: Vec<String> = [
+        "CodecError",
+        "header",
+        "directory",
+        "payload",
+        "design",
+        "invalid",
+        "with_tile",
+        "tile",
+        "is_tile_local",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    assert_eq!(
+        got, want,
+        "codec::error public surface changed — if intentional, update this snapshot"
+    );
+}
+
+#[test]
+fn crate_root_reexports_the_facade() {
+    let lib = read_module("src/lib.rs");
+    for item in [
+        "Codec",
+        "CodecBuilder",
+        "CodecError",
+        "Decoded",
+        "DecodeInfo",
+        "Encoded",
+        "EncodeInfo",
+        "FormatInfo",
+        "StreamFormat",
+        "QuantSpec",
+        "sniff",
+    ] {
+        assert!(
+            lib.contains(item),
+            "crate root no longer re-exports `{item}`"
+        );
+    }
+}
+
+#[test]
+fn scanner_sees_through_indentation_but_not_comments() {
+    let src = "impl X {\n    pub fn a(&self) {}\n}\n/// pub fn not_real\npub struct B;\n";
+    assert_eq!(pub_items(src), vec!["a".to_string(), "B".to_string()]);
+}

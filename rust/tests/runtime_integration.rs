@@ -3,7 +3,8 @@
 //!
 //! Requires `make artifacts` to have run (skips cleanly otherwise).
 
-use lwfc::codec::{decode, Encoder, EncoderConfig, Quantizer, UniformQuantizer};
+use lwfc::codec::{Quantizer, UniformQuantizer};
+use lwfc::CodecBuilder;
 use lwfc::coordinator::{
     serve, CloudConfig, EdgeConfig, QuantSpec, ServeConfig, TaskKind, TransportKind,
 };
@@ -164,11 +165,15 @@ fn bitstream_roundtrip_on_real_features() {
     let feat = edge.run1(&[&Tensor::new(&[b, 32, 32, 3], xs)]).unwrap();
 
     let q = UniformQuantizer::new(0.0, 1.2, 4);
-    let mut enc = Encoder::new(EncoderConfig::classification(Quantizer::Uniform(q), 32));
+    let mut codec = CodecBuilder::new(q)
+        .image_size(32)
+        .expect_elements(per_item)
+        .build();
+    let mut decoded = Vec::new();
     for i in 0..b {
         let item = &feat.data()[i * per_item..(i + 1) * per_item];
-        let stream = enc.encode(item);
-        let (decoded, _) = decode(&stream.bytes, per_item).unwrap();
+        let stream = codec.encode(item);
+        codec.decode_into(&stream.bytes, &mut decoded).unwrap();
         for (j, (&x, &y)) in item.iter().zip(&decoded).enumerate() {
             assert_eq!(y, q.fake_quant(x), "item {i} elem {j}");
         }
