@@ -309,6 +309,9 @@ pub struct EdgeNodeConfig {
     pub window: usize,
     /// First corpus index to serve.
     pub first_index: u64,
+    /// Reconnect and shed-backoff budgets. A daemon BUSY frame costs a
+    /// jittered backoff and a redial (`max_shed`), never a reconnect —
+    /// see [`super::net::RetryPolicy`].
     pub retry: super::net::RetryPolicy,
 }
 
@@ -390,9 +393,11 @@ pub fn run_edge_node(
         items: stats.items_sent,
         outcomes: stats.outcomes_received,
         reconnects: stats.reconnects,
+        shed: stats.busy_shed,
         rtt_p50_s: stats.rtt.quantile(0.50),
         rtt_p95_s: stats.rtt.quantile(0.95),
         rtt_p99_s: stats.rtt.quantile(0.99),
+        ..TransportStats::default()
     };
     report.design = design_info;
     Ok(report)

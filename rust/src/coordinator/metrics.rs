@@ -21,6 +21,16 @@ pub struct TransportStats {
     pub items: u64,
     pub outcomes: u64,
     pub reconnects: u64,
+    /// Daemon side: connections accepted and admitted over the run. Zero
+    /// for transports with no connection lifecycle (loopback, the
+    /// in-process socket pair).
+    pub accepted: u64,
+    /// BUSY/shed count: over-quota connections the daemon answered with a
+    /// BUSY frame (daemon side), or BUSY frames received and backed off
+    /// from (client side). Flow control, not failure.
+    pub shed: u64,
+    /// Daemon side: connections currently open.
+    pub active_conns: u64,
     /// Send→outcome round-trip latency percentiles (seconds); empty for
     /// loopback, where items are handed over by reference.
     pub rtt_p50_s: f64,
@@ -175,7 +185,7 @@ impl ServeReport {
         }
         if self.transport.is_recorded() {
             s.push_str(&format!(
-                "\ntransport: {} tx={}B rx={}B items={} outcomes={} reconnects={} \
+                "\ntransport: {} tx={}B rx={}B items={} outcomes={} reconnects={} shed={} \
                  rtt p50={:.1}ms p95={:.1}ms p99={:.1}ms",
                 self.transport.name,
                 self.transport.bytes_sent,
@@ -183,10 +193,17 @@ impl ServeReport {
                 self.transport.items,
                 self.transport.outcomes,
                 self.transport.reconnects,
+                self.transport.shed,
                 self.transport.rtt_p50_s * 1e3,
                 self.transport.rtt_p95_s * 1e3,
                 self.transport.rtt_p99_s * 1e3,
             ));
+            if self.transport.accepted > 0 {
+                s.push_str(&format!(
+                    " conns accepted={} active={}",
+                    self.transport.accepted, self.transport.active_conns,
+                ));
+            }
         }
         s
     }

@@ -18,7 +18,10 @@ pub mod transport;
 pub use cloud::{CloudConfig, CloudWorker};
 pub use edge::{run_edge_node, EdgeConfig, EdgeNodeConfig, EdgeWorker};
 pub use metrics::{DesignInfo, ServeReport, TransportStats};
-pub use net::{CloudDaemon, EdgeClient, RetryPolicy, WireItem, WireOutcome};
+pub use net::{
+    ClientStats, CloudDaemon, DaemonConfig, DaemonReport, EdgeClient, RetryPolicy, WireBusy,
+    WireItem, WireOutcome,
+};
 pub use protocol::{CompressedItem, Outcome, QuantSpec, Request, TaskKind};
 pub use server::{
     build_transport, run_pipeline, serve, CloudStage, EdgeStage, PipelineConfig, PipelineOutput,

@@ -8,14 +8,14 @@
 //!
 //! ```text
 //! 0-3    magic "LWFN"
-//! 4      protocol version (2; version-1 frames still parse)
-//! 5      frame kind (0 = compressed item, 1 = outcome)
+//! 4      protocol version (3; version-1/2 frames still parse)
+//! 5      frame kind (0 = compressed item, 1 = outcome, 2 = BUSY/shed)
 //! 6      task code (TaskKind::code — both peers must serve the same net)
-//! 7      v2 item frames: entropy-backend advertisement
+//! 7      v2+ item frames: entropy-backend advertisement
 //!        (0 = unspecified, 1 = CABAC, 2 = rANS);
-//!        v1 frames and all outcome frames: reserved (must be 0)
-//! 8-15   request id (u64)
-//! 16-23  image index (u64)
+//!        v1 frames and all outcome/BUSY frames: reserved (must be 0)
+//! 8-15   request id (u64; 0 for BUSY)
+//! 16-23  image index (u64; 0 for BUSY)
 //! 24-27  payload length (u32)
 //! 28-    payload
 //! ```
@@ -30,41 +30,54 @@
 //! decoding). An **outcome** payload is `flags (u8: bit0 = has top-1 verdict,
 //! bit1 = verdict)`, `bits_per_element (f64)`, `latency_s (f64)`,
 //! `detection count (u32)`, then 24 bytes per detection
-//! (`class u32, score/x/y/w/h f32`).
+//! (`class u32, score/x/y/w/h f32`). A **BUSY** payload (v3) is just
+//! `retry_after_ms (u32)`: the daemon is at its connection quota; the
+//! client should back off and redial instead of treating the close as a
+//! failure.
 //!
 //! ## Roles
 //!
-//! * [`CloudDaemon`] — multi-client cloud host: accepts concurrent edge
-//!   connections, each handled on a [`TaskPool`] worker that builds its own
-//!   stage (xla handles are not Send) and answers item frames with outcome
-//!   frames in order. A client half-close (EOF after `shutdown(Write)`)
-//!   drains whatever is in flight before the daemon closes its side.
+//! * [`CloudDaemon`] — multi-client cloud host built around a single
+//!   readiness loop over nonblocking sockets: every connection is a small
+//!   state machine (read frames into a buffer → enqueue decode work →
+//!   write buffered outcome frames), so one daemon multiplexes hundreds
+//!   of edges. Decode work is pinned per connection onto a
+//!   [`ShardedPool`] shard, which builds the handler *on* its worker
+//!   thread (xla handles are not Send) and preserves per-connection item
+//!   order. Per-connection in-flight quotas stop the loop from reading a
+//!   connection that is already saturating the decode stage, and
+//!   connections beyond the admission quota receive a BUSY frame instead
+//!   of a silent drop. Shutdown is a waker write, not a self-dial.
 //! * [`EdgeClient`] — windowed, pipelined client with
 //!   reconnect-on-failure: unacknowledged items are kept in a pending set
 //!   and re-sent after a reconnect, so a dropped connection degrades to
-//!   duplicate (idempotent) work instead of lost requests.
+//!   duplicate (idempotent) work instead of lost requests. A BUSY frame
+//!   triggers a jittered exponential backoff and a redial that does *not*
+//!   spend the reconnect budget — shed is flow control, not failure.
 //!
 //! Everything here is `std::net` only — no async runtime, no new
-//! dependencies.
+//! dependencies (the Linux fast path declares `poll(2)` by hand).
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::metrics::TransportStats;
 use super::protocol::{CompressedItem, Outcome, TaskKind};
 use crate::codec::{sniff, EntropyKind};
 use crate::eval::Detection;
-use crate::util::threadpool::TaskPool;
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool::ShardedPool;
 use crate::util::timer::Percentiles;
 
 pub const NET_MAGIC: [u8; 4] = *b"LWFN";
-pub const NET_VERSION: u8 = 2;
+pub const NET_VERSION: u8 = 3;
 /// Oldest protocol version this reader still accepts.
 pub const NET_MIN_VERSION: u8 = 1;
 pub const FRAME_HEADER_BYTES: usize = 28;
@@ -144,11 +157,36 @@ impl WireOutcome {
     }
 }
 
+/// Flow-control shed notice (frame kind 2, protocol v3): the daemon is at
+/// its connection quota, so this connection was answered and closed
+/// instead of served. Distinguishes "busy, come back" from a genuine
+/// failure — the client backs off without spending its reconnect budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireBusy {
+    /// Server-suggested base delay before redialing, in milliseconds.
+    pub retry_after_ms: u32,
+}
+
+/// Serialized size of a BUSY frame payload.
+pub const BUSY_WIRE_BYTES: usize = 4;
+
 /// One parsed frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
     Item(WireItem),
     Outcome(WireOutcome),
+    Busy(WireBusy),
+}
+
+impl Frame {
+    /// Human label for protocol-error messages.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Item(_) => "item",
+            Frame::Outcome(_) => "outcome",
+            Frame::Busy(_) => "busy",
+        }
+    }
 }
 
 fn proto_err(msg: String) -> io::Error {
@@ -231,12 +269,48 @@ pub fn write_outcome_frame(
     Ok(FRAME_HEADER_BYTES + p.len())
 }
 
+/// Serialize one BUSY/shed frame (daemon → edge flow control).
+pub fn write_busy_frame(w: &mut impl Write, task: TaskKind, busy: WireBusy) -> io::Result<usize> {
+    let header = frame_header(2, task, 0, 0, 0, BUSY_WIRE_BYTES)?;
+    w.write_all(&header)?;
+    w.write_all(&busy.retry_after_ms.to_le_bytes())?;
+    Ok(FRAME_HEADER_BYTES + BUSY_WIRE_BYTES)
+}
+
 /// Serialize one frame. Returns the number of bytes written (header +
 /// payload) so callers can account wire traffic.
 pub fn write_frame(w: &mut impl Write, task: TaskKind, frame: &Frame) -> io::Result<usize> {
     match frame {
         Frame::Item(item) => write_item_frame(w, task, item),
         Frame::Outcome(o) => write_outcome_frame(w, task, o),
+        Frame::Busy(b) => write_busy_frame(w, task, *b),
+    }
+}
+
+/// Byte length of the complete frame at the start of `buf`, if fully
+/// buffered; `Ok(None)` means more bytes are needed. This validates only
+/// what framing needs (magic and the payload-length bound) — the full
+/// header/payload checks run in [`read_frame`] once the frame is complete.
+/// The daemon's readiness loop uses this to cut frames out of a
+/// partial-read buffer without blocking.
+pub fn buffered_frame_len(buf: &[u8]) -> io::Result<Option<usize>> {
+    if buf.len() >= 4 && buf[..4] != NET_MAGIC {
+        return Err(proto_err("bad frame magic".into()));
+    }
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Ok(None);
+    }
+    let payload_len = u32::from_le_bytes(buf[24..28].try_into().unwrap()) as usize;
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(proto_err(format!(
+            "frame payload {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte wire limit"
+        )));
+    }
+    let total = FRAME_HEADER_BYTES + payload_len;
+    if buf.len() >= total {
+        Ok(Some(total))
+    } else {
+        Ok(None)
     }
 }
 
@@ -384,19 +458,285 @@ pub fn read_frame(
                 detections,
             })
         }
+        2 => {
+            // BUSY frames entered the protocol at v3; an older peer
+            // stamping one is lying about its version.
+            if header[4] < 3 {
+                return Err(proto_err(format!(
+                    "BUSY frame from protocol version {}",
+                    header[4]
+                )));
+            }
+            if payload.len() != BUSY_WIRE_BYTES {
+                return Err(proto_err(format!(
+                    "busy payload must be {BUSY_WIRE_BYTES} bytes, got {}",
+                    payload.len()
+                )));
+            }
+            Frame::Busy(WireBusy {
+                retry_after_ms: u32::from_le_bytes(payload[..4].try_into().unwrap()),
+            })
+        }
         k => return Err(proto_err(format!("unknown frame kind {k}"))),
     };
     Ok(Some((task, frame)))
 }
 
 // ---------------------------------------------------------------------------
+// Readiness layer
+
+/// Minimal readiness layer for the daemon's event loop: `poll(2)` plus a
+/// self-pipe waker on Linux (the symbol is declared by hand — no libc
+/// crate), and a short-sleep level-triggered fallback elsewhere. The
+/// fallback reports every registered interest as ready and relies on the
+/// nonblocking sockets' `WouldBlock` to make spurious readiness harmless.
+mod readiness {
+    /// One registered interest for a single `wait` call.
+    pub struct Interest {
+        pub token: usize,
+        pub read: bool,
+        pub write: bool,
+        #[cfg(target_os = "linux")]
+        pub fd: std::os::unix::io::RawFd,
+    }
+
+    /// Readiness reported for a token.
+    pub struct Ready {
+        pub token: usize,
+        pub read: bool,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub use linux::{Poller, Waker};
+
+    #[cfg(not(target_os = "linux"))]
+    pub use fallback::{Poller, Waker};
+
+    /// Build an interest from any socket-like source.
+    #[cfg(target_os = "linux")]
+    pub fn interest(
+        token: usize,
+        source: &impl std::os::unix::io::AsRawFd,
+        read: bool,
+        write: bool,
+    ) -> Interest {
+        Interest { token, read, write, fd: source.as_raw_fd() }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn interest<S>(token: usize, _source: &S, read: bool, write: bool) -> Interest {
+        Interest { token, read, write }
+    }
+
+    #[cfg(target_os = "linux")]
+    mod linux {
+        use super::{Interest, Ready};
+        use std::io::{self, Read, Write};
+        use std::os::raw::{c_int, c_ulong};
+        use std::os::unix::io::AsRawFd;
+        use std::os::unix::net::UnixStream;
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        #[repr(C)]
+        struct PollFd {
+            fd: c_int,
+            events: i16,
+            revents: i16,
+        }
+
+        const POLLIN: i16 = 0x001;
+        const POLLOUT: i16 = 0x004;
+        const POLLERR: i16 = 0x008;
+        const POLLHUP: i16 = 0x010;
+        const POLLNVAL: i16 = 0x020;
+
+        extern "C" {
+            // `nfds_t` is `c_ulong` on Linux (which is why this module is
+            // Linux-gated: the type differs on other unixes).
+            fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        }
+
+        /// Wakes a [`Poller`] blocked in `wait` by writing one byte to the
+        /// self-pipe (a socketpair — the `std`-only stand-in for `pipe2`).
+        #[derive(Clone)]
+        pub struct Waker {
+            tx: Arc<UnixStream>,
+        }
+
+        impl Waker {
+            pub fn wake(&self) {
+                // WouldBlock on a full pipe is fine: a pending byte already
+                // guarantees the next `wait` returns immediately.
+                let _ = (&*self.tx).write_all(&[1u8]);
+            }
+        }
+
+        pub struct Poller {
+            rx: UnixStream,
+            tx: Arc<UnixStream>,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Self> {
+                let (tx, rx) = UnixStream::pair()?;
+                tx.set_nonblocking(true)?;
+                rx.set_nonblocking(true)?;
+                Ok(Self { rx, tx: Arc::new(tx) })
+            }
+
+            pub fn waker(&self) -> Waker {
+                Waker { tx: Arc::clone(&self.tx) }
+            }
+
+            /// Block until a registered interest (or the waker) is ready,
+            /// or `timeout` elapses. Spurious returns are allowed.
+            pub fn wait(
+                &mut self,
+                interests: &[Interest],
+                timeout: Option<Duration>,
+            ) -> io::Result<Vec<Ready>> {
+                let mut fds: Vec<PollFd> = Vec::with_capacity(interests.len() + 1);
+                fds.push(PollFd { fd: self.rx.as_raw_fd(), events: POLLIN, revents: 0 });
+                for i in interests {
+                    let mut events = 0i16;
+                    if i.read {
+                        events |= POLLIN;
+                    }
+                    if i.write {
+                        events |= POLLOUT;
+                    }
+                    fds.push(PollFd { fd: i.fd, events, revents: 0 });
+                }
+                let timeout_ms: c_int = match timeout {
+                    None => -1,
+                    Some(d) => d.as_millis().min(i32::MAX as u128).max(1) as c_int,
+                };
+                let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+                if rc < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(Vec::new());
+                    }
+                    return Err(e);
+                }
+                if (fds[0].revents & POLLIN) != 0 {
+                    // Drain every queued wakeup byte in one pass.
+                    let mut sink = [0u8; 64];
+                    while matches!((&self.rx).read(&mut sink), Ok(n) if n > 0) {}
+                }
+                let mut out = Vec::new();
+                for (i, fd) in interests.iter().zip(fds.iter().skip(1)) {
+                    // An error/hangup condition is surfaced as read
+                    // readiness: the next nonblocking read reports it.
+                    let err = (fd.revents & (POLLERR | POLLHUP | POLLNVAL)) != 0;
+                    let read = err || (fd.revents & POLLIN) != 0;
+                    let write = (fd.revents & POLLOUT) != 0;
+                    if read || write {
+                        out.push(Ready { token: i.token, read });
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    mod fallback {
+        use super::{Interest, Ready};
+        use std::io;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        /// Portable stand-in with no real readiness source: `wait` naps
+        /// briefly (skipping the nap if the waker already fired) and
+        /// reports every registered interest as ready — the nonblocking
+        /// sockets turn the spurious readiness into `WouldBlock`.
+        #[derive(Clone)]
+        pub struct Waker {
+            pending: Arc<AtomicBool>,
+        }
+
+        impl Waker {
+            pub fn wake(&self) {
+                self.pending.store(true, Ordering::SeqCst);
+            }
+        }
+
+        pub struct Poller {
+            pending: Arc<AtomicBool>,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Self> {
+                Ok(Self { pending: Arc::new(AtomicBool::new(false)) })
+            }
+
+            pub fn waker(&self) -> Waker {
+                Waker { pending: Arc::clone(&self.pending) }
+            }
+
+            pub fn wait(
+                &mut self,
+                interests: &[Interest],
+                timeout: Option<Duration>,
+            ) -> io::Result<Vec<Ready>> {
+                let cap = Duration::from_millis(1);
+                let nap = timeout.unwrap_or(cap).min(cap);
+                if !self.pending.swap(false, Ordering::SeqCst) {
+                    std::thread::sleep(nap);
+                    self.pending.store(false, Ordering::SeqCst);
+                }
+                Ok(interests
+                    .iter()
+                    .map(|i| Ready { token: i.token, read: i.read })
+                    .collect())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Cloud daemon
+
+/// Tuning knobs for a [`CloudDaemon`].
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonConfig {
+    /// Decode workers the readiness loop fair-schedules items onto. Each
+    /// connection is pinned to one shard (`conn_id % decode_workers`), so
+    /// handlers never cross threads and per-connection order holds.
+    pub decode_workers: usize,
+    /// Connection admission quota: accepts beyond it are answered with a
+    /// BUSY/shed frame and closed instead of silently dropped.
+    pub max_conns: usize,
+    /// Per-connection decode quota: at most this many of one connection's
+    /// items sit in the decode stage at once; past it the loop stops
+    /// reading that socket and TCP flow control pushes back on the edge.
+    pub max_inflight: usize,
+    /// Base retry hint carried in BUSY frames, milliseconds.
+    pub busy_retry_ms: u32,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            decode_workers: 4,
+            max_conns: 1024,
+            max_inflight: 8,
+            busy_retry_ms: 50,
+        }
+    }
+}
 
 /// Shared counters for a running [`CloudDaemon`].
 #[derive(Debug, Default)]
 struct DaemonCounters {
-    connections: AtomicU64,
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    active: AtomicU64,
     items: AtomicU64,
+    outcomes: AtomicU64,
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
 }
@@ -404,7 +744,10 @@ struct DaemonCounters {
 /// Aggregate accounting of a daemon's lifetime.
 #[derive(Clone, Debug, Default)]
 pub struct DaemonReport {
+    /// Connections accepted and admitted (shed connections not included).
     pub connections: u64,
+    /// Over-quota connections answered with a BUSY frame and closed.
+    pub shed: u64,
     pub items: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
@@ -414,26 +757,50 @@ pub struct DaemonReport {
 }
 
 /// Multi-client cloud host: accepts edge connections and answers item
-/// frames with outcome frames. Connection handling runs on a [`TaskPool`],
-/// and each handler is built *inside* its connection task by the factory —
-/// the same not-`Send` discipline as the in-process pipeline workers.
+/// frames with outcome frames. One readiness-loop thread owns every
+/// socket; decode work runs on a [`ShardedPool`], whose per-shard workers
+/// build each connection's handler *on* the worker thread — the same
+/// not-`Send` discipline as the in-process pipeline workers.
 pub struct CloudDaemon {
     addr: SocketAddr,
     task: TaskKind,
     shutdown: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    waker: readiness::Waker,
+    loop_thread: Option<JoinHandle<()>>,
     counters: Arc<DaemonCounters>,
     errors: Arc<Mutex<Vec<String>>>,
 }
 
 impl CloudDaemon {
-    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting. For every
-    /// connection, `handler_factory(conn_id)` builds a fresh handler that
-    /// maps each received item to one outcome.
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) with default quotas;
+    /// `decode_workers` sizes the decode stage. Unlike the old
+    /// thread-per-connection daemon, the worker count no longer caps how
+    /// many connections can be served — see [`CloudDaemon::start_with`].
     pub fn start<HF, H>(
         addr: &str,
         task: TaskKind,
-        conn_workers: usize,
+        decode_workers: usize,
+        handler_factory: HF,
+    ) -> Result<CloudDaemon>
+    where
+        HF: Fn(u64) -> Result<H> + Send + Sync + 'static,
+        H: FnMut(WireItem) -> Result<WireOutcome>,
+    {
+        let config = DaemonConfig {
+            decode_workers,
+            ..DaemonConfig::default()
+        };
+        Self::start_with(addr, task, config, handler_factory)
+    }
+
+    /// Bind `addr` and start the readiness loop. For every admitted
+    /// connection, `handler_factory(conn_id)` builds a fresh handler — on
+    /// the decode worker the connection is pinned to — that maps each
+    /// received item to one outcome.
+    pub fn start_with<HF, H>(
+        addr: &str,
+        task: TaskKind,
+        config: DaemonConfig,
         handler_factory: HF,
     ) -> Result<CloudDaemon>
     where
@@ -442,70 +809,97 @@ impl CloudDaemon {
     {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow!("binding cloud daemon to {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
+        let poller = readiness::Poller::new()?;
+        let waker = poller.waker();
         let shutdown = Arc::new(AtomicBool::new(false));
         let counters = Arc::new(DaemonCounters::default());
         let errors = Arc::new(Mutex::new(Vec::new()));
 
-        let accept_shutdown = Arc::clone(&shutdown);
-        let accept_counters = Arc::clone(&counters);
-        let accept_errors = Arc::clone(&errors);
+        let loop_shutdown = Arc::clone(&shutdown);
+        let loop_counters = Arc::clone(&counters);
+        let loop_errors = Arc::clone(&errors);
+        let worker_waker = waker.clone();
         let factory = Arc::new(handler_factory);
-        let accept_thread = std::thread::spawn(move || {
-            let conn_workers = conn_workers.max(1);
-            let pool = TaskPool::new(conn_workers);
-            // Handler jobs live for a connection's whole lifetime, so a
-            // connection beyond the pool's capacity would be accepted by
-            // the OS and then starve silently (the client would hang with
-            // no I/O error). Refuse it instead: an immediate close makes
-            // the client's reconnect-with-backoff machinery fire loudly.
-            let active = Arc::new(AtomicU64::new(0));
-            let mut next_conn = 0u64;
-            for incoming in listener.incoming() {
-                if accept_shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                let stream = match incoming {
-                    Ok(s) => s,
-                    Err(e) => {
-                        accept_errors.lock().unwrap().push(format!("accept: {e}"));
-                        continue;
+        let loop_thread = std::thread::spawn(move || {
+            let (results_tx, results_rx) = mpsc::channel::<ConnResult>();
+            // Decode stage: each shard owns the handlers of the
+            // connections pinned to it. Every job produces exactly one
+            // result message (even factory/handler failures), so the
+            // event loop's in-flight accounting always settles.
+            let pool = ShardedPool::new(config.decode_workers.max(1), {
+                move |_shard| {
+                    let factory = Arc::clone(&factory);
+                    let results = results_tx.clone();
+                    let waker = worker_waker.clone();
+                    // conn id → handler; `None` poisons a slot whose
+                    // factory or handler failed, so queued items answer
+                    // an error instead of rebuilding state the
+                    // connection teardown already condemned.
+                    let mut handlers: HashMap<u64, Option<H>> = HashMap::new();
+                    move |job: DecodeJob| match job {
+                        DecodeJob::Retire(conn) => {
+                            handlers.remove(&conn);
+                        }
+                        DecodeJob::Item { conn, item } => {
+                            if !handlers.contains_key(&conn) {
+                                match factory(conn) {
+                                    Ok(h) => {
+                                        handlers.insert(conn, Some(h));
+                                    }
+                                    Err(e) => {
+                                        handlers.insert(conn, None);
+                                        let _ = results
+                                            .send((conn, Err(anyhow!("building handler: {e:#}"))));
+                                        waker.wake();
+                                        return;
+                                    }
+                                }
+                            }
+                            let result = match handlers.get_mut(&conn).and_then(|s| s.as_mut()) {
+                                Some(h) => std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| h(item)),
+                                )
+                                .unwrap_or_else(|_| Err(anyhow!("handler panicked"))),
+                                None => Err(anyhow!("connection handler previously failed")),
+                            };
+                            if result.is_err() {
+                                if let Some(slot) = handlers.get_mut(&conn) {
+                                    *slot = None;
+                                }
+                            }
+                            let _ = results.send((conn, result));
+                            waker.wake();
+                        }
                     }
-                };
-                if active.load(Ordering::SeqCst) >= conn_workers as u64 {
-                    accept_errors.lock().unwrap().push(format!(
-                        "refused a connection: all {conn_workers} handlers busy"
-                    ));
-                    drop(stream);
-                    continue;
                 }
-                let conn_id = next_conn;
-                next_conn += 1;
-                accept_counters.connections.fetch_add(1, Ordering::Relaxed);
-                active.fetch_add(1, Ordering::SeqCst);
-                let factory = Arc::clone(&factory);
-                let counters = Arc::clone(&accept_counters);
-                let errors = Arc::clone(&accept_errors);
-                let active = Arc::clone(&active);
-                pool.execute(move || {
-                    if let Err(e) =
-                        serve_connection(stream, task, conn_id, factory.as_ref(), &counters)
-                    {
-                        errors.lock().unwrap().push(format!("connection {conn_id}: {e:#}"));
-                    }
-                    active.fetch_sub(1, Ordering::SeqCst);
-                });
+            });
+            let mut ev = EventLoop {
+                listener,
+                task,
+                config,
+                poller,
+                shutdown: loop_shutdown,
+                counters: loop_counters,
+                errors: Arc::clone(&loop_errors),
+                pool,
+                results: results_rx,
+                conns: HashMap::new(),
+                next_conn: 0,
+                draining: false,
+            };
+            if let Err(e) = ev.run() {
+                loop_errors.lock().unwrap().push(format!("event loop: {e}"));
             }
-            // TaskPool drop joins in-flight connection handlers, so a
-            // shutdown drains gracefully.
-            drop(pool);
         });
 
         Ok(CloudDaemon {
             addr: local,
             task,
             shutdown,
-            accept_thread: Some(accept_thread),
+            waker,
+            loop_thread: Some(loop_thread),
             counters,
             errors,
         })
@@ -520,16 +914,50 @@ impl CloudDaemon {
         self.task
     }
 
-    /// Stop accepting, drain in-flight connections, and report.
-    pub fn shutdown(mut self) -> DaemonReport {
+    /// Live counters as transport-stats (the daemon side of the wire).
+    pub fn stats(&self) -> TransportStats {
+        TransportStats {
+            name: "daemon",
+            bytes_sent: self.counters.bytes_out.load(Ordering::Relaxed),
+            bytes_received: self.counters.bytes_in.load(Ordering::Relaxed),
+            items: self.counters.items.load(Ordering::Relaxed),
+            outcomes: self.counters.outcomes.load(Ordering::Relaxed),
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            shed: self.counters.shed.load(Ordering::Relaxed),
+            active_conns: self.counters.active.load(Ordering::Relaxed),
+            ..TransportStats::default()
+        }
+    }
+
+    /// First failure recorded by the event loop or a connection — the same
+    /// take-semantics contract as [`super::transport::Transport::take_error`].
+    pub fn take_error(&self) -> Option<String> {
+        let mut errs = self.errors.lock().unwrap();
+        if errs.is_empty() {
+            None
+        } else {
+            Some(errs.remove(0))
+        }
+    }
+
+    /// Idempotent drain: flag the loop, wake it (no self-dial — the waker
+    /// works on any bind address), and join the loop thread exactly once.
+    /// Both [`CloudDaemon::shutdown`] and [`Drop`] route here, so a drain
+    /// can never double-join or leak the thread.
+    fn drain_inner(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the accept loop with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_thread.take() {
+        self.waker.wake();
+        if let Some(h) = self.loop_thread.take() {
             let _ = h.join();
         }
+    }
+
+    /// Stop accepting, drain in-flight work, and report.
+    pub fn shutdown(mut self) -> DaemonReport {
+        self.drain_inner();
         DaemonReport {
-            connections: self.counters.connections.load(Ordering::Relaxed),
+            connections: self.counters.accepted.load(Ordering::Relaxed),
+            shed: self.counters.shed.load(Ordering::Relaxed),
             items: self.counters.items.load(Ordering::Relaxed),
             bytes_in: self.counters.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.counters.bytes_out.load(Ordering::Relaxed),
@@ -539,44 +967,446 @@ impl CloudDaemon {
 
     /// Block forever serving requests (CLI daemon mode).
     pub fn run_forever(mut self) {
-        if let Some(h) = self.accept_thread.take() {
+        if let Some(h) = self.loop_thread.take() {
             let _ = h.join();
         }
     }
 }
 
-fn serve_connection<HF, H>(
-    mut stream: TcpStream,
+impl Drop for CloudDaemon {
+    fn drop(&mut self) {
+        self.drain_inner();
+    }
+}
+
+/// Work unit handed to a decode shard. `Retire` rides the same per-shard
+/// FIFO as the connection's items, so a handler is only dropped after its
+/// last item decoded.
+enum DecodeJob {
+    Item { conn: u64, item: WireItem },
+    Retire(u64),
+}
+
+type ConnResult = (u64, Result<WireOutcome>);
+
+/// How long a half-closed connection lingers, discarding inbound bytes,
+/// before the socket is dropped. Closing with unread data in the kernel
+/// buffer sends RST, which can destroy a delivered-but-unread BUSY or
+/// outcome frame on the peer — the linger gives the peer time to read and
+/// close first.
+const CLOSE_LINGER: Duration = Duration::from_millis(500);
+
+/// Poll token 0 is the listener; connection `id` maps to token `id + 1`.
+const TOKEN_LISTENER: usize = 0;
+
+fn token_of(conn: u64) -> usize {
+    conn as usize + 1
+}
+
+/// Per-connection state machine: frames accumulate in `rbuf` from
+/// nonblocking reads, complete frames become decode jobs (bounded by the
+/// in-flight quota), outcome frames accumulate in `wbuf` and flush as the
+/// socket accepts them.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Flushed prefix of `wbuf`.
+    wpos: usize,
+    /// Items handed to the decode stage and not yet answered.
+    inflight: usize,
+    /// Peer half-closed cleanly (EOF at a frame boundary).
+    read_closed: bool,
+    /// Admission-quota reject: this connection only ever carries one BUSY
+    /// frame and is never counted active or given a handler.
+    shedding: bool,
+    /// Set once our write side is shut down: discard inbound bytes until
+    /// the peer's EOF or this deadline, then drop the socket.
+    closing_deadline: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, shedding: bool) -> Self {
+        Self {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: 0,
+            read_closed: false,
+            shedding,
+            closing_deadline: None,
+        }
+    }
+
+    fn write_pending(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+}
+
+/// Write as much of `wbuf` as the socket takes without blocking.
+fn flush_conn(conn: &mut Conn) -> io::Result<()> {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    } else if conn.wpos > 4096 {
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    Ok(())
+}
+
+/// The daemon's single-threaded core: owns the listener, every connection,
+/// and the decode pool's submission side.
+struct EventLoop {
+    listener: TcpListener,
     task: TaskKind,
-    conn_id: u64,
-    factory: &HF,
-    counters: &DaemonCounters,
-) -> Result<()>
-where
-    HF: Fn(u64) -> Result<H>,
-    H: FnMut(WireItem) -> Result<WireOutcome>,
-{
-    stream.set_nodelay(true).ok();
-    let mut handler = factory(conn_id)?;
-    let mut writer = stream.try_clone()?;
-    loop {
-        let frame = read_frame(&mut stream, Some(task))?;
-        let Some((_, frame)) = frame else {
-            // Peer half-closed: everything already answered inline, so the
-            // in-flight set is empty — close our side and finish.
-            let _ = writer.shutdown(Shutdown::Write);
-            return Ok(());
-        };
-        let Frame::Item(item) = frame else {
-            return Err(anyhow!("edge peer sent an outcome frame"));
-        };
-        counters
-            .bytes_in
-            .fetch_add((FRAME_HEADER_BYTES + 8 + item.bytes.len()) as u64, Ordering::Relaxed);
-        counters.items.fetch_add(1, Ordering::Relaxed);
-        let outcome = handler(item)?;
-        let n = write_outcome_frame(&mut writer, task, &outcome)?;
-        counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+    config: DaemonConfig,
+    poller: readiness::Poller,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<DaemonCounters>,
+    errors: Arc<Mutex<Vec<String>>>,
+    pool: ShardedPool<DecodeJob>,
+    results: mpsc::Receiver<ConnResult>,
+    conns: HashMap<u64, Conn>,
+    next_conn: u64,
+    draining: bool,
+}
+
+impl EventLoop {
+    fn run(&mut self) -> io::Result<()> {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.draining = true;
+            }
+            self.drain_results();
+            self.flush_and_reap();
+            if self.draining && self.conns.is_empty() {
+                return Ok(());
+            }
+            let (interests, timeout) = self.build_interests();
+            let ready = self.poller.wait(&interests, timeout)?;
+            for r in ready {
+                if r.token == TOKEN_LISTENER {
+                    if r.read && !self.draining {
+                        self.accept_ready();
+                    }
+                } else if r.read {
+                    self.conn_ready_read((r.token - 1) as u64);
+                }
+            }
+        }
+    }
+
+    /// Move finished decode results into their connections' write buffers.
+    fn drain_results(&mut self) {
+        while let Ok((id, result)) = self.results.try_recv() {
+            let Some(conn) = self.conns.get_mut(&id) else {
+                continue; // connection already torn down
+            };
+            conn.inflight = conn.inflight.saturating_sub(1);
+            if conn.closing_deadline.is_some() {
+                continue; // write side already shut; nowhere to answer
+            }
+            let failed: Option<String> = match result {
+                Ok(outcome) => match write_outcome_frame(&mut conn.wbuf, self.task, &outcome) {
+                    Ok(n) => {
+                        self.counters.outcomes.fetch_add(1, Ordering::Relaxed);
+                        self.counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                        None
+                    }
+                    Err(e) => Some(format!("serializing outcome: {e}")),
+                },
+                Err(e) => Some(format!("{e:#}")),
+            };
+            match failed {
+                Some(msg) => self.fail_conn(id, msg),
+                // The quota freed a slot: frames that were buffered while
+                // the connection sat at its limit can parse now.
+                None => self.parse_buffered(id),
+            }
+        }
+    }
+
+    /// Flush write buffers and advance every connection's state machine:
+    /// finished (or shed, or draining) connections half-close and linger;
+    /// lingering connections drop at their deadline.
+    fn flush_and_reap(&mut self) {
+        enum Next {
+            Keep,
+            Drop,
+            Fail(String),
+        }
+        let now = Instant::now();
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            let next = {
+                let conn = self.conns.get_mut(&id).expect("conn listed");
+                match flush_conn(conn) {
+                    Err(_) if conn.shedding || conn.closing_deadline.is_some() => {
+                        // Already tearing down; not worth reporting twice.
+                        Next::Drop
+                    }
+                    Err(e) => Next::Fail(format!("write: {e}")),
+                    Ok(()) => {
+                        if let Some(deadline) = conn.closing_deadline {
+                            if now >= deadline {
+                                Next::Drop
+                            } else {
+                                Next::Keep
+                            }
+                        } else {
+                            let done = !conn.write_pending() && conn.inflight == 0;
+                            if done && conn.read_closed {
+                                // Peer half-closed and everything is
+                                // answered and flushed: nothing unread can
+                                // remain, close outright.
+                                let _ = conn.stream.shutdown(Shutdown::Write);
+                                Next::Drop
+                            } else if done && (conn.shedding || self.draining) {
+                                // We initiate the close: half-close and
+                                // linger-discard so the peer reads the
+                                // flushed BUSY/outcome frames before the
+                                // socket dies.
+                                let _ = conn.stream.shutdown(Shutdown::Write);
+                                conn.closing_deadline = Some(now + CLOSE_LINGER);
+                                Next::Keep
+                            } else {
+                                Next::Keep
+                            }
+                        }
+                    }
+                }
+            };
+            match next {
+                Next::Keep => {}
+                Next::Drop => self.drop_conn(id),
+                Next::Fail(msg) => self.fail_conn(id, msg),
+            }
+        }
+    }
+
+    /// Registered interests for this iteration, plus the poll timeout
+    /// implied by the nearest linger deadline.
+    fn build_interests(&self) -> (Vec<readiness::Interest>, Option<Duration>) {
+        let mut v = Vec::with_capacity(self.conns.len() + 1);
+        if !self.draining {
+            v.push(readiness::interest(TOKEN_LISTENER, &self.listener, true, false));
+        }
+        let now = Instant::now();
+        let mut timeout: Option<Duration> = None;
+        for (&id, conn) in &self.conns {
+            let read = if let Some(deadline) = conn.closing_deadline {
+                // Watch for the peer's EOF while discarding; cap the poll
+                // wait so the deadline fires on time.
+                let left = deadline
+                    .saturating_duration_since(now)
+                    .max(Duration::from_millis(10));
+                timeout = Some(timeout.map_or(left, |t| t.min(left)));
+                true
+            } else if conn.shedding {
+                true // discard inbound while the BUSY frame flushes
+            } else {
+                // Quota gate: a connection saturating the decode stage is
+                // not read — TCP flow control pushes back on the edge.
+                !conn.read_closed
+                    && !self.draining
+                    && conn.inflight < self.config.max_inflight
+            };
+            let write = conn.write_pending();
+            if read || write {
+                v.push(readiness::interest(token_of(id), &conn.stream, read, write));
+            }
+        }
+        if self.draining && timeout.is_none() {
+            // Safety tick while waiting out the in-flight decode work.
+            timeout = Some(Duration::from_millis(100));
+        }
+        (v, timeout)
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.admit(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Surfaced through take_error like the reader paths;
+                    // the daemon keeps serving existing connections.
+                    self.errors.lock().unwrap().push(format!("accept: {e}"));
+                    break;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        let id = self.next_conn;
+        self.next_conn += 1;
+        let over = self.counters.active.load(Ordering::Relaxed) >= self.config.max_conns as u64;
+        let mut conn = Conn::new(stream, over);
+        if over {
+            // Graceful shed: a BUSY frame and a lingered half-close
+            // instead of the old silent drop.
+            self.counters.shed.fetch_add(1, Ordering::Relaxed);
+            let busy = WireBusy {
+                retry_after_ms: self.config.busy_retry_ms,
+            };
+            match write_busy_frame(&mut conn.wbuf, self.task, busy) {
+                Ok(n) => self.counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed),
+                Err(_) => return, // infallible into a Vec; defensive
+            }
+        } else {
+            self.counters.accepted.fetch_add(1, Ordering::Relaxed);
+            self.counters.active.fetch_add(1, Ordering::Relaxed);
+        }
+        self.conns.insert(id, conn);
+    }
+
+    /// Nonblocking read: drain the socket into `rbuf` (or the void, for
+    /// connections being torn down), then parse whatever completed.
+    fn conn_ready_read(&mut self, id: u64) {
+        let mut failed: Option<String> = None;
+        let mut drop_now = false;
+        {
+            let Some(conn) = self.conns.get_mut(&id) else {
+                return;
+            };
+            let discard = conn.shedding || conn.closing_deadline.is_some();
+            let mut tmp = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        if discard {
+                            drop_now = true;
+                        } else if conn.rbuf.is_empty() {
+                            conn.read_closed = true;
+                        } else {
+                            failed = Some(format!(
+                                "connection closed mid-frame ({} buffered bytes)",
+                                conn.rbuf.len()
+                            ));
+                        }
+                        break;
+                    }
+                    Ok(n) => {
+                        if !discard {
+                            conn.rbuf.extend_from_slice(&tmp[..n]);
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        if discard {
+                            drop_now = true;
+                        } else {
+                            failed = Some(format!("read: {e}"));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        if drop_now {
+            self.drop_conn(id);
+        } else if let Some(msg) = failed {
+            self.fail_conn(id, msg);
+        } else {
+            self.parse_buffered(id);
+        }
+    }
+
+    /// Cut complete frames out of `rbuf` and enqueue decode jobs, up to
+    /// the in-flight quota.
+    fn parse_buffered(&mut self, id: u64) {
+        let mut fail: Option<String> = None;
+        if let Some(conn) = self.conns.get_mut(&id) {
+            if conn.shedding || conn.closing_deadline.is_some() {
+                return;
+            }
+            while conn.inflight < self.config.max_inflight {
+                let total = match buffered_frame_len(&conn.rbuf) {
+                    Ok(Some(n)) => n,
+                    Ok(None) => break,
+                    Err(e) => {
+                        fail = Some(e.to_string());
+                        break;
+                    }
+                };
+                let parsed = read_frame(&mut &conn.rbuf[..total], Some(self.task));
+                conn.rbuf.drain(..total);
+                match parsed {
+                    Ok(Some((_, Frame::Item(item)))) => {
+                        self.counters.items.fetch_add(1, Ordering::Relaxed);
+                        self.counters.bytes_in.fetch_add(total as u64, Ordering::Relaxed);
+                        conn.inflight += 1;
+                        let shard = (id % self.pool.shards() as u64) as usize;
+                        if self.pool.send_to(shard, DecodeJob::Item { conn: id, item }).is_err() {
+                            fail = Some("decode worker unavailable".into());
+                            break;
+                        }
+                    }
+                    Ok(Some((_, frame))) => {
+                        fail = Some(format!("edge peer sent a {} frame", frame.kind_name()));
+                        break;
+                    }
+                    Ok(None) => {
+                        fail = Some("empty frame".into()); // unreachable: len >= header
+                        break;
+                    }
+                    Err(e) => {
+                        fail = Some(e.to_string());
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(msg) = fail {
+            self.fail_conn(id, msg);
+        }
+    }
+
+    /// Record a connection failure and tear the connection down gracefully:
+    /// flush what is already queued, half-close, then linger-discard. The
+    /// daemon keeps serving everyone else; the client's reconnect machinery
+    /// handles the rest.
+    fn fail_conn(&mut self, id: u64, msg: String) {
+        self.errors.lock().unwrap().push(format!("connection {id}: {msg}"));
+        if let Some(conn) = self.conns.get_mut(&id) {
+            let _ = flush_conn(conn);
+            let _ = conn.stream.shutdown(Shutdown::Write);
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            conn.rbuf.clear();
+            conn.closing_deadline = Some(Instant::now() + CLOSE_LINGER);
+        }
+    }
+
+    /// Drop a connection's socket and retire its decode-side handler. The
+    /// retire job queues behind the connection's in-flight items on its
+    /// shard, so the handler outlives every item that needs it.
+    fn drop_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            if !conn.shedding {
+                self.counters.active.fetch_sub(1, Ordering::Relaxed);
+                let shard = (id % self.pool.shards() as u64) as usize;
+                let _ = self.pool.send_to(shard, DecodeJob::Retire(id));
+            }
+        }
     }
 }
 
@@ -595,6 +1425,12 @@ pub struct RetryPolicy {
     /// drops the connection on every delivery, and without this cap the
     /// client would reconnect and re-send it forever.
     pub max_reconnects: u32,
+    /// BUSY/shed responses tolerated over the client's lifetime. Shed is
+    /// flow control, not failure: each one backs off with a jittered
+    /// exponential delay and redials *without* spending `max_reconnects`.
+    /// This separate (larger) cap only bounds a daemon that stays
+    /// saturated forever.
+    pub max_shed: u32,
 }
 
 impl Default for RetryPolicy {
@@ -603,6 +1439,7 @@ impl Default for RetryPolicy {
             attempts: 5,
             backoff: Duration::from_millis(20),
             max_reconnects: 16,
+            max_shed: 64,
         }
     }
 }
@@ -615,6 +1452,9 @@ pub struct ClientStats {
     pub bytes_sent: u64,
     pub bytes_received: u64,
     pub reconnects: u64,
+    /// BUSY/shed frames received; each one cost a backoff and a redial but
+    /// no reconnect budget.
+    pub busy_shed: u64,
     /// Send→outcome round-trip times (wire both ways + cloud compute).
     pub rtt: Percentiles,
 }
@@ -634,12 +1474,22 @@ pub struct EdgeClient {
     pending: HashMap<u64, (WireItem, Instant)>,
     /// Send order of pending ids, for in-order re-send after reconnect.
     pending_order: Vec<u64>,
+    /// Consecutive BUSY responses since the last outcome — drives the
+    /// exponential backoff curve; resets once the daemon serves us.
+    shed_streak: u32,
+    /// Jitter source for shed backoff, seeded per client so a shed fleet
+    /// does not redial in lockstep.
+    rng: SplitMix64,
     pub stats: ClientStats,
 }
 
 impl EdgeClient {
     pub fn connect(addr: &str, task: TaskKind, window: usize, retry: RetryPolicy) -> Result<Self> {
         let stream = connect_with_retry(addr, retry)?;
+        let seed = {
+            use std::hash::{BuildHasher, Hasher};
+            std::collections::hash_map::RandomState::new().build_hasher().finish()
+        };
         Ok(Self {
             addr: addr.to_string(),
             task,
@@ -648,12 +1498,28 @@ impl EdgeClient {
             stream,
             pending: HashMap::new(),
             pending_order: Vec::new(),
+            shed_streak: 0,
+            rng: SplitMix64::new(seed),
             stats: ClientStats::default(),
         })
     }
 
     fn in_flight(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Dial a fresh connection and re-send everything unacknowledged,
+    /// oldest first. Shared by the failure path ([`Self::reconnect`],
+    /// which spends budget) and the shed path ([`Self::shed_backoff`],
+    /// which does not).
+    fn redial_and_resend(&mut self) -> Result<()> {
+        self.stream = connect_with_retry(&self.addr, self.retry)?;
+        for id in self.pending_order.clone() {
+            let (item, _) = &self.pending[&id];
+            let n = write_item_frame(&mut self.stream, self.task, item)?;
+            self.stats.bytes_sent += n as u64;
+        }
+        Ok(())
     }
 
     fn reconnect(&mut self) -> Result<()> {
@@ -665,14 +1531,31 @@ impl EdgeClient {
             ));
         }
         self.stats.reconnects += 1;
-        self.stream = connect_with_retry(&self.addr, self.retry)?;
-        // Re-send everything unacknowledged, oldest first.
-        for id in self.pending_order.clone() {
-            let (item, _) = &self.pending[&id];
-            let n = write_item_frame(&mut self.stream, self.task, item)?;
-            self.stats.bytes_sent += n as u64;
+        self.redial_and_resend()
+    }
+
+    /// The daemon shed us with a BUSY frame: back off (jittered
+    /// exponential, floored at the server's own retry hint) and redial.
+    /// Deliberately does NOT touch `stats.reconnects` — the old silent
+    /// refusal made clients burn their finite reconnect budget against a
+    /// healthy-but-full daemon, which is exactly the bug the BUSY frame
+    /// exists to fix.
+    fn shed_backoff(&mut self, retry_after_ms: u32) -> Result<()> {
+        self.stats.busy_shed += 1;
+        if self.stats.busy_shed > self.retry.max_shed as u64 {
+            return Err(anyhow!(
+                "daemon still busy after {} shed responses ({} items unacknowledged)",
+                self.retry.max_shed,
+                self.pending.len()
+            ));
         }
-        Ok(())
+        let base = Duration::from_millis(u64::from(retry_after_ms.max(1))).max(self.retry.backoff);
+        let exp = base.saturating_mul(1u32 << self.shed_streak.min(5));
+        self.shed_streak = self.shed_streak.saturating_add(1);
+        // 50–100% of the exponential delay, so a shed fleet spreads out.
+        let jittered = exp.mul_f64(0.5 + 0.5 * self.rng.next_f64());
+        std::thread::sleep(jittered);
+        self.redial_and_resend()
     }
 
     /// Read one outcome frame, reconnecting (and re-sending pending items)
@@ -688,9 +1571,14 @@ impl EdgeClient {
                         self.pending_order.retain(|&id| id != o.id);
                         self.stats.outcomes_received += 1;
                         self.stats.rtt.push(sent_at.elapsed().as_secs_f64());
+                        self.shed_streak = 0; // the daemon is serving us
                         return Ok(Some(o));
                     }
                     // Duplicate after a re-send race: drop silently.
+                }
+                Ok(Some((_, Frame::Busy(b)))) => {
+                    self.stats.bytes_received += (FRAME_HEADER_BYTES + BUSY_WIRE_BYTES) as u64;
+                    self.shed_backoff(b.retry_after_ms)?;
                 }
                 Ok(Some((_, Frame::Item(_)))) => {
                     return Err(anyhow!("cloud peer sent an item frame"));
@@ -916,6 +1804,52 @@ mod tests {
         assert_eq!(frame, Frame::Item(sample_item()));
         buf[7] = 1; // v1 never defined byte 7: reserved-zero only
         assert!(read_frame(&mut buf.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn busy_frame_roundtrips_and_is_v3_only() {
+        let busy = WireBusy { retry_after_ms: 75 };
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, task(), &Frame::Busy(busy)).unwrap();
+        assert_eq!(n, buf.len());
+        assert_eq!(n, FRAME_HEADER_BYTES + BUSY_WIRE_BYTES);
+        assert_eq!(buf[4], NET_VERSION);
+        assert_eq!(buf[7], 0, "BUSY frames reserve byte 7");
+        let (t, frame) = read_frame(&mut buf.as_slice(), Some(task())).unwrap().unwrap();
+        assert_eq!(t, task());
+        assert_eq!(frame, Frame::Busy(busy));
+
+        // Protocol v2 never defined frame kind 2: a BUSY frame claiming an
+        // older version is a protocol error...
+        let mut old = buf.clone();
+        old[4] = 2;
+        let err = read_frame(&mut old.as_slice(), None).unwrap_err();
+        assert!(err.to_string().contains("BUSY"), "got: {err}");
+        // ...and so is one whose payload is not exactly the retry hint.
+        let mut bad = buf.clone();
+        bad[24..28].copy_from_slice(&8u32.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 4]);
+        assert!(read_frame(&mut bad.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn buffered_frame_len_cuts_frames_out_of_partial_streams() {
+        let mut buf = Vec::new();
+        write_item_frame(&mut buf, task(), &sample_item()).unwrap();
+        let total = buf.len();
+        assert_eq!(buffered_frame_len(&buf).unwrap(), Some(total));
+        assert_eq!(buffered_frame_len(&buf[..5]).unwrap(), None);
+        assert_eq!(buffered_frame_len(&buf[..total - 1]).unwrap(), None);
+        // Trailing bytes of the next frame don't move the cut.
+        let copy = buf.clone();
+        buf.extend_from_slice(&copy);
+        assert_eq!(buffered_frame_len(&buf).unwrap(), Some(total));
+        // Garbage magic and absurd payload claims die before the loop
+        // buffers anything more.
+        assert!(buffered_frame_len(b"XXXXXXXX").is_err());
+        let mut bad = copy[..FRAME_HEADER_BYTES].to_vec();
+        bad[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(buffered_frame_len(&bad).is_err());
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //! through a real localhost TCP socket pair using the `LWFN` wire frames
 //! of [`super::net`]. Bounded queues / TCP flow control provide
 //! backpressure end to end; every stage thread builds its own worker
-//! in-thread (xla handles are not Send).
+//! in-thread (xla handles are not Send). For fleets of independent edge
+//! devices, the standalone [`super::net::CloudDaemon`] (`lwfc serve
+//! --listen`) serves the same cloud stage behind a readiness loop that
+//! multiplexes hundreds of connections, with per-connection in-flight
+//! quotas and BUSY/shed admission control.
 //!
 //! Stage logic is generic over [`EdgeStage`] / [`CloudStage`], so the
 //! orchestration (including its shutdown ordering) is testable with

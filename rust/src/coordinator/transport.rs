@@ -220,8 +220,11 @@ impl TcpTransport {
                                 break;
                             }
                         }
-                        Ok(Some(_)) => {
-                            shared.record_error("item wire carried an outcome frame".into());
+                        Ok(Some((_, other))) => {
+                            shared.record_error(format!(
+                                "item wire carried a {} frame",
+                                other.kind_name()
+                            ));
                             break;
                         }
                         Ok(None) => break, // clean half-close
@@ -260,8 +263,11 @@ impl TcpTransport {
                                 break;
                             }
                         }
-                        Ok(Some(_)) => {
-                            shared.record_error("outcome wire carried an item frame".into());
+                        Ok(Some((_, other))) => {
+                            shared.record_error(format!(
+                                "outcome wire carried a {} frame",
+                                other.kind_name()
+                            ));
                             break;
                         }
                         Ok(None) => break, // clean half-close
@@ -364,10 +370,10 @@ impl Transport for TcpTransport {
             bytes_received: w.bytes_received,
             items: w.items,
             outcomes: w.outcomes,
-            reconnects: 0,
             rtt_p50_s: w.rtt.quantile(0.50),
             rtt_p95_s: w.rtt.quantile(0.95),
             rtt_p99_s: w.rtt.quantile(0.99),
+            ..TransportStats::default()
         }
     }
 

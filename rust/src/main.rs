@@ -17,8 +17,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 use lwfc::codec::{design_or, designer_for, ClipGranularity, DesignKind, EntropyKind};
 use lwfc::coordinator::{
-    run_edge_node, serve, CloudConfig, CloudDaemon, EdgeConfig, EdgeNodeConfig, QuantSpec,
-    RetryPolicy, ServeConfig, TaskKind, TransportKind,
+    run_edge_node, serve, CloudConfig, CloudDaemon, DaemonConfig, EdgeConfig, EdgeNodeConfig,
+    QuantSpec, RetryPolicy, ServeConfig, TaskKind, TransportKind,
 };
 use lwfc::experiments::{self, common::ExpCtx};
 use lwfc::modeling;
@@ -209,7 +209,24 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
             "run the cloud half as a TCP daemon on this address (e.g. 0.0.0.0:7878) \
              instead of the in-process pipeline",
         )
-        .opt("conns", "4", "concurrent connection handlers in --listen mode")
+        .opt(
+            "conns",
+            "4",
+            "decode workers in --listen mode (the readiness loop multiplexes \
+             connections; this sizes the decode stage, not a connection cap)",
+        )
+        .opt(
+            "max-conns",
+            "1024",
+            "connections admitted at once in --listen mode; extras are shed \
+             with a BUSY frame instead of silently dropped",
+        )
+        .opt(
+            "max-inflight",
+            "8",
+            "per-connection items allowed in the decode stage at once in \
+             --listen mode (past it, TCP flow control pushes back)",
+        )
         .opt("design", "static", DESIGN_HELP)
         .opt("clip-granularity", "stream", GRANULARITY_HELP)
         .opt("artifacts", "", "artifact directory")
@@ -233,17 +250,26 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
 
     // --- daemon mode -----------------------------------------------------
     if !a.get("listen").is_empty() {
-        let conns = a.get_usize("conns").map_err(|e| anyhow!(e))?.max(1);
-        let daemon = CloudDaemon::start(a.get("listen"), task, conns, move |conn| {
-            // One CloudWorker per connection, built inside its handler
-            // task (xla handles are not Send).
+        let workers = a.get_usize("conns").map_err(|e| anyhow!(e))?.max(1);
+        let daemon_cfg = DaemonConfig {
+            decode_workers: workers,
+            max_conns: a.get_usize("max-conns").map_err(|e| anyhow!(e))?.max(1),
+            max_inflight: a.get_usize("max-inflight").map_err(|e| anyhow!(e))?.max(1),
+            ..DaemonConfig::default()
+        };
+        let daemon = CloudDaemon::start_with(a.get("listen"), task, daemon_cfg, move |conn| {
+            // One CloudWorker per connection, built on the decode worker
+            // the connection is pinned to (xla handles are not Send).
             let mut worker = lwfc::coordinator::CloudWorker::new(&m, cloud_cfg.clone())?;
             eprintln!("connection {conn}: cloud worker ready");
             Ok(move |item| worker.process_wire(item))
         })?;
         println!(
-            "cloud daemon for {task} listening on {} ({conns} connection handlers); Ctrl-C to stop",
-            daemon.local_addr()
+            "cloud daemon for {task} listening on {} ({workers} decode workers, \
+             {} conns max, {} in-flight/conn); Ctrl-C to stop",
+            daemon.local_addr(),
+            daemon_cfg.max_conns,
+            daemon_cfg.max_inflight,
         );
         daemon.run_forever();
         return Ok(());

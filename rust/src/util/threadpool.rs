@@ -4,7 +4,10 @@
 //! * [`ThreadPool`] — scoped fork-join parallelism (`map_indexed`) used by
 //!   the experiment sweeps and the data generators;
 //! * [`TaskPool`] — long-lived workers executing dynamically submitted
-//!   closures (the cloud daemon's per-connection handlers);
+//!   closures from one shared queue;
+//! * [`ShardedPool`] — long-lived workers with *per-worker* queues and
+//!   worker-local state: jobs pinned to a shard run on that worker, in
+//!   send order (the cloud daemon's decode stage);
 //! * [`BoundedQueue`] — an mpsc channel with backpressure used as the
 //!   stage-to-stage conduit of the coordinator pipeline (edge → scheduler →
 //!   cloud), the std-thread analogue of a bounded tokio mpsc.
@@ -186,6 +189,81 @@ impl TaskPool {
 }
 
 impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Sharded worker pool: `shards` long-lived workers, each with its own
+/// queue and its own state. Jobs sent to shard `i` always run on worker
+/// `i`, in send order — unlike [`TaskPool`], where any worker may claim
+/// any job. The cloud daemon pins each connection to one shard so the
+/// connection's handler (not `Send` — it may own xla handles) lives on
+/// exactly one thread and its items decode in submission order, while
+/// different connections spread across shards.
+pub struct ShardedPool<T: Send + 'static> {
+    txs: Vec<mpsc::Sender<T>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> ShardedPool<T> {
+    /// Spawn `shards` workers (at least one). `worker_factory(shard)` runs
+    /// *on the worker thread* and builds that worker's job processor, so
+    /// per-worker state never crosses threads — the factory itself only
+    /// has to be `Send + Clone`, one clone per worker.
+    pub fn new<F, W>(shards: usize, worker_factory: F) -> Self
+    where
+        F: FnOnce(usize) -> W + Send + Clone + 'static,
+        W: FnMut(T),
+    {
+        let shards = shards.max(1);
+        let mut txs = Vec::with_capacity(shards);
+        let workers = (0..shards)
+            .map(|shard| {
+                let (tx, rx) = mpsc::channel::<T>();
+                txs.push(tx);
+                let factory = worker_factory.clone();
+                thread::spawn(move || {
+                    let mut work = factory(shard);
+                    while let Ok(job) = rx.recv() {
+                        // A panicking job must not take the shard down —
+                        // every connection pinned to it would starve for
+                        // the pool's whole life.
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            work(job)
+                        }));
+                    }
+                })
+            })
+            .collect();
+        Self { txs, workers }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Queue a job on `shard` (taken modulo the shard count). `Err` hands
+    /// the job back if that worker is gone.
+    pub fn send_to(&self, shard: usize, job: T) -> Result<(), T> {
+        let n = self.txs.len();
+        self.txs[shard % n].send(job).map_err(|e| e.0)
+    }
+
+    /// Close every queue and wait for queued + running jobs.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.txs.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for ShardedPool<T> {
     fn drop(&mut self) {
         self.shutdown();
     }
@@ -381,6 +459,62 @@ mod tests {
             }
         } // drop joins
         assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn sharded_pool_pins_jobs_to_shards_in_order() {
+        let seen: Arc<Mutex<Vec<(usize, u32)>>> = Arc::new(Mutex::new(Vec::new()));
+        let pool = ShardedPool::new(3, {
+            let seen = Arc::clone(&seen);
+            move |shard| {
+                let seen = Arc::clone(&seen);
+                move |job: u32| seen.lock().unwrap().push((shard, job))
+            }
+        });
+        assert_eq!(pool.shards(), 3);
+        for job in 0..30u32 {
+            pool.send_to(job as usize % 3, job).unwrap();
+        }
+        pool.join();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 30);
+        for shard in 0..3 {
+            let on_shard: Vec<u32> =
+                seen.iter().filter(|(s, _)| *s == shard).map(|(_, j)| *j).collect();
+            // Pinning: shard `s` saw exactly the jobs sent to it, and —
+            // per-shard FIFO — in send order.
+            let want: Vec<u32> = (0..30).filter(|j| *j as usize % 3 == shard).collect();
+            assert_eq!(on_shard, want, "shard {shard}");
+        }
+    }
+
+    #[test]
+    fn sharded_pool_worker_state_is_thread_local_and_survives_panics() {
+        let totals: Arc<Mutex<Vec<(usize, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        {
+            let pool = ShardedPool::new(2, {
+                let totals = Arc::clone(&totals);
+                move |shard| {
+                    // Worker-local accumulator, built on the worker thread.
+                    let mut sum = 0u64;
+                    let totals = Arc::clone(&totals);
+                    move |job: u64| {
+                        if job == u64::MAX {
+                            panic!("poison job must not kill the shard");
+                        }
+                        sum += job;
+                        totals.lock().unwrap().push((shard, sum));
+                    }
+                }
+            });
+            pool.send_to(0, u64::MAX).unwrap(); // panics; shard 0 survives
+            pool.send_to(0, 5).unwrap();
+            pool.send_to(0, 7).unwrap();
+            pool.send_to(1, 100).unwrap();
+        } // drop joins
+        let totals = totals.lock().unwrap();
+        assert!(totals.contains(&(0, 5)) && totals.contains(&(0, 12)), "{totals:?}");
+        assert!(totals.contains(&(1, 100)), "{totals:?}");
     }
 
     #[test]

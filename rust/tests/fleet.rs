@@ -1,0 +1,533 @@
+//! Fleet-scale integration tests for the event-driven cloud daemon: many
+//! concurrent edge clients against one readiness loop, with synthetic
+//! codec-only stages so everything runs without artifacts or the `xla`
+//! feature.
+//!
+//! * a fleet of `LWFC_FLEET_EDGES` (default 256) concurrent edges is
+//!   served with **zero** refusals below the admission quota, and the
+//!   wire payloads match the in-process loopback pipeline byte-for-byte;
+//! * connections beyond `max_conns` are shed with a BUSY frame — the
+//!   client backs off and retries without spending reconnect budget,
+//!   instead of dying on an unexplained EOF;
+//! * `shutdown()` under live streaming load drains within a watchdog
+//!   bound (the old implementation dialed its own listener to unblock
+//!   `accept`, which hangs on some bind addresses);
+//! * an idle daemon shuts down instantly, and dropping one without
+//!   calling `shutdown()` neither hangs nor double-joins;
+//! * handler failures surface through `take_error()` and the final
+//!   report instead of vanishing with the connection.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+use lwfc::coordinator::{
+    run_pipeline, ClientStats, CloudDaemon, CloudStage, CompressedItem, DaemonConfig, EdgeClient,
+    EdgeStage, LoopbackTransport, Outcome, PipelineConfig, Request, RetryPolicy, TaskKind,
+    WireItem, WireOutcome,
+};
+use lwfc::util::prop::Gen;
+use lwfc::{Codec, CodecBuilder, QuantSpec};
+
+const ELEMS: usize = 512;
+const TILE: usize = 256;
+const TASK: TaskKind = TaskKind::ClassifyAlex;
+
+type PayloadMap = Arc<Mutex<HashMap<u64, Vec<u8>>>>;
+
+/// Fleet width, overridable so CI smoke runs can stay light
+/// (`LWFC_FLEET_EDGES=64`) while the default exercises ≥256 edges.
+fn fleet_edges() -> usize {
+    env_usize("LWFC_FLEET_EDGES", 256)
+}
+
+/// Items each edge sends in the fleet test (`LWFC_FLEET_ITEMS`).
+fn fleet_items() -> usize {
+    env_usize("LWFC_FLEET_ITEMS", 2)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// Every party runs the same `Codec` session config, so client-side and
+/// pipeline-side bytes are identical by construction.
+fn session() -> Codec {
+    CodecBuilder::new(QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 2.0,
+        levels: 4,
+    })
+    .image_size(32)
+    .threads(1)
+    .tile_elems(TILE)
+    .force_container()
+    .expect_elements(ELEMS)
+    .build()
+}
+
+/// The deterministic "sensor capture" both sides regenerate from the
+/// corpus index.
+fn tensor_for(image_index: u64) -> Vec<f32> {
+    Gen::new("fleet", image_index).activation_vec(ELEMS, 0.5)
+}
+
+fn encode_item(image_index: u64, codec: &mut Codec) -> (Vec<u8>, usize) {
+    let xs = tensor_for(image_index);
+    let s = codec.encode(&xs);
+    (s.bytes, s.elements)
+}
+
+/// Decode + verify one item; `Some(true)` iff the reconstruction equals
+/// the fake-quantized source tensor.
+fn verify_item(bytes: &[u8], elements: usize, image_index: u64, codec: &mut Codec) -> Result<bool> {
+    let decoded = codec.decode(bytes)?;
+    let q = codec.quant_spec().materialize();
+    let expect: Vec<f32> = tensor_for(image_index).iter().map(|&x| q.fake_quant(x)).collect();
+    Ok(elements == decoded.values.len() && decoded.values == expect)
+}
+
+/// Watchdog: a daemon-hang regression turns into a test failure, not a
+/// stuck test runner.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(_) => panic!("timed out after {secs}s — the daemon hung instead of terminating"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback reference pipeline (no sockets)
+
+struct FleetEdge {
+    codec: Codec,
+}
+
+impl EdgeStage for FleetEdge {
+    fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
+        let mut out = Vec::with_capacity(requests.len());
+        for r in requests {
+            let (bytes, elements) = encode_item(r.image_index, &mut self.codec);
+            out.push(CompressedItem {
+                id: r.id,
+                image_index: r.image_index,
+                bytes,
+                elements,
+                arrived: r.arrived,
+                encoded: Instant::now(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+struct FleetCloud {
+    codec: Codec,
+    seen: PayloadMap,
+}
+
+impl CloudStage for FleetCloud {
+    fn process(&mut self, items: &[CompressedItem]) -> Result<Vec<Outcome>> {
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            self.seen.lock().unwrap().insert(item.image_index, item.bytes.clone());
+            let correct =
+                verify_item(&item.bytes, item.elements, item.image_index, &mut self.codec)?;
+            out.push(Outcome {
+                id: item.id,
+                image_index: item.image_index,
+                correct: Some(correct),
+                detections: Vec::new(),
+                latency_s: item.arrived.elapsed().as_secs_f64(),
+                bits_per_element: item.bits_per_element(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Run the corpus range `0..requests` through the in-process loopback
+/// pipeline, recording exactly what the cloud stage received.
+fn run_reference(requests: usize) -> (Vec<Outcome>, PayloadMap) {
+    let seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
+    let cloud_seen = Arc::clone(&seen);
+    let loopback = LoopbackTransport::new(8, 64);
+    let out = run_pipeline(
+        &PipelineConfig {
+            edge_workers: 2,
+            requests,
+            batch: 4,
+            queue_capacity: 8,
+            first_index: 0,
+        },
+        &loopback,
+        |_w| Ok(FleetEdge { codec: session() }),
+        move || {
+            Ok(FleetCloud {
+                codec: session(),
+                seen: Arc::clone(&cloud_seen),
+            })
+        },
+    )
+    .expect("loopback reference pipeline failed");
+    (out.outcomes, seen)
+}
+
+/// A junk item for tests that exercise daemon plumbing without a codec:
+/// the handler in those tests never decodes the payload.
+fn junk_item(id: u64) -> WireItem {
+    WireItem {
+        id,
+        image_index: id,
+        elements: 64,
+        bytes: vec![0x5A; 64],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+
+/// Tentpole acceptance: a fleet of ≥256 concurrent edges (the old
+/// thread-per-connection daemon refused everything past `conns`) is fully
+/// served with zero sheds, zero reconnects, and wire payloads that match
+/// the loopback transport byte-for-byte.
+#[test]
+fn fleet_of_edges_is_served_without_refusals_below_quota() {
+    with_timeout(300, || {
+        let edges = fleet_edges();
+        let items = fleet_items();
+        let total = edges * items;
+
+        let (ref_outcomes, ref_seen) = run_reference(total);
+        assert_eq!(ref_outcomes.len(), total);
+
+        let daemon_seen: PayloadMap = Arc::new(Mutex::new(HashMap::new()));
+        let handler_seen = Arc::clone(&daemon_seen);
+        let config = DaemonConfig {
+            decode_workers: 4,
+            max_conns: edges + 8, // fleet fits: nothing may be shed
+            max_inflight: 2,
+            busy_retry_ms: 5,
+        };
+        let daemon = CloudDaemon::start_with("127.0.0.1:0", TASK, config, move |_conn| {
+            let mut codec = session();
+            let seen = Arc::clone(&handler_seen);
+            Ok(move |item: WireItem| -> Result<WireOutcome> {
+                seen.lock().unwrap().insert(item.image_index, item.bytes.clone());
+                let correct =
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &mut codec)?;
+                Ok(WireOutcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(correct),
+                    latency_s: 0.0,
+                    bits_per_element: 0.0,
+                    detections: Vec::new(),
+                })
+            })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        // Everyone connects first, then the barrier releases all sends at
+        // once — the daemon holds the whole fleet open concurrently.
+        let barrier = Arc::new(Barrier::new(edges));
+        let mut joins = Vec::new();
+        for c in 0..edges {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            joins.push(thread::spawn(move || -> Result<(ClientStats, Vec<WireOutcome>)> {
+                let mut codec = session();
+                let mut client = EdgeClient::connect(&addr, TASK, 2, RetryPolicy::default())?;
+                barrier.wait();
+                let mut got = Vec::new();
+                for k in 0..items {
+                    let image_index = (c * items + k) as u64;
+                    let (bytes, elements) = encode_item(image_index, &mut codec);
+                    got.extend(client.send(WireItem {
+                        id: image_index,
+                        image_index,
+                        elements: elements as u64,
+                        bytes,
+                    })?);
+                }
+                let (rest, stats) = client.finish()?;
+                got.extend(rest);
+                Ok((stats, got))
+            }));
+        }
+
+        let mut all: Vec<WireOutcome> = Vec::new();
+        let mut rtt_samples = 0usize;
+        for j in joins {
+            let (stats, got) = j.join().expect("client thread panicked").expect("client failed");
+            assert_eq!(stats.outcomes_received, items as u64);
+            assert_eq!(stats.busy_shed, 0, "shed below quota: {stats:?}");
+            assert_eq!(stats.reconnects, 0, "refusal below quota: {stats:?}");
+            rtt_samples += stats.rtt.len();
+            all.extend(got);
+        }
+        let report = daemon.shutdown();
+
+        all.sort_by_key(|o| o.id);
+        assert_eq!(all.len(), total);
+        for (k, o) in all.iter().enumerate() {
+            assert_eq!(o.id, k as u64);
+            assert_eq!(o.correct, Some(true), "request {k} failed verification");
+        }
+        assert_eq!(rtt_samples, total);
+        assert_eq!(report.connections, edges as u64, "report: {report:?}");
+        assert_eq!(report.shed, 0, "report: {report:?}");
+        assert_eq!(report.items, total as u64);
+        assert!(report.bytes_in > 0 && report.bytes_out > 0);
+        assert!(report.errors.is_empty(), "daemon errors: {:?}", report.errors);
+
+        // What crossed the real TCP wire is byte-for-byte what crossed
+        // the in-process loopback queue.
+        let daemon_map = daemon_seen.lock().unwrap();
+        let ref_map = ref_seen.lock().unwrap();
+        assert_eq!(daemon_map.len(), total);
+        assert_eq!(
+            *daemon_map, *ref_map,
+            "TCP wire payloads diverged from the loopback transport"
+        );
+    });
+}
+
+/// Over-quota connections get a BUSY frame and a graceful close — the
+/// client backs off and redials without spending its reconnect budget,
+/// and every item still completes.
+#[test]
+fn over_quota_edges_are_shed_with_busy_not_eof() {
+    with_timeout(120, || {
+        let edges = 12usize;
+        let items = 4u64;
+        let config = DaemonConfig {
+            decode_workers: 2,
+            max_conns: 2, // far below the fleet: most connections shed
+            max_inflight: 2,
+            busy_retry_ms: 5,
+        };
+        let daemon = CloudDaemon::start_with("127.0.0.1:0", TASK, config, move |_conn| {
+            let mut codec = session();
+            Ok(move |item: WireItem| -> Result<WireOutcome> {
+                // Hold the slot long enough that the quota stays
+                // contended while the rest of the fleet dials in.
+                thread::sleep(Duration::from_millis(2));
+                let correct =
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &mut codec)?;
+                Ok(WireOutcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(correct),
+                    latency_s: 0.0,
+                    bits_per_element: 0.0,
+                    detections: Vec::new(),
+                })
+            })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        // Everyone dials at once, straight into a 2-connection quota.
+        let barrier = Arc::new(Barrier::new(edges));
+        let mut joins = Vec::new();
+        for c in 0..edges {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            joins.push(thread::spawn(move || -> Result<(ClientStats, Vec<WireOutcome>)> {
+                let retry = RetryPolicy {
+                    attempts: 5,
+                    backoff: Duration::from_millis(2),
+                    max_reconnects: 4,
+                    ..RetryPolicy::default()
+                };
+                barrier.wait();
+                let mut codec = session();
+                let mut client = EdgeClient::connect(&addr, TASK, 1, retry)?;
+                let mut got = Vec::new();
+                for k in 0..items {
+                    let image_index = c as u64 * items + k;
+                    let (bytes, elements) = encode_item(image_index, &mut codec);
+                    got.extend(client.send(WireItem {
+                        id: image_index,
+                        image_index,
+                        elements: elements as u64,
+                        bytes,
+                    })?);
+                }
+                let (rest, stats) = client.finish()?;
+                got.extend(rest);
+                Ok((stats, got))
+            }));
+        }
+
+        let mut all: Vec<WireOutcome> = Vec::new();
+        let mut total_shed = 0u64;
+        for j in joins {
+            let (stats, got) = j.join().expect("client thread panicked").expect("client failed");
+            assert_eq!(stats.outcomes_received, items);
+            // Shed is flow control: it must never consume the reconnect
+            // budget (the bug this PR fixes burned it on a full daemon).
+            assert_eq!(stats.reconnects, 0, "shed spent reconnect budget: {stats:?}");
+            total_shed += stats.busy_shed;
+            all.extend(got);
+        }
+        let report = daemon.shutdown();
+
+        all.sort_by_key(|o| o.id);
+        assert_eq!(all.len(), edges * items as usize);
+        for o in &all {
+            assert_eq!(o.correct, Some(true));
+        }
+        assert!(total_shed >= 1, "quota never triggered a BUSY shed");
+        assert!(report.shed >= 1, "report: {report:?}");
+        assert_eq!(report.items, (edges as u64) * items);
+        assert!(report.errors.is_empty(), "daemon errors: {:?}", report.errors);
+        // Every edge was eventually admitted (some after shed redials).
+        assert!(report.connections >= edges as u64, "report: {report:?}");
+    });
+}
+
+/// `shutdown()` while a fleet is actively streaming drains in bounded
+/// time: in-flight decodes are answered, connections half-close, and the
+/// loop thread joins — no self-dial, no hang, no orphaned clients.
+#[test]
+fn shutdown_under_load_drains_within_bound() {
+    with_timeout(60, || {
+        let config = DaemonConfig {
+            decode_workers: 2,
+            max_conns: 64,
+            max_inflight: 4,
+            busy_retry_ms: 5,
+        };
+        let daemon = CloudDaemon::start_with("127.0.0.1:0", TASK, config, |_conn| {
+            Ok(move |item: WireItem| -> Result<WireOutcome> {
+                Ok(WireOutcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(true),
+                    latency_s: 0.0,
+                    bits_per_element: 0.0,
+                    detections: Vec::new(),
+                })
+            })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        // Streamers send until the daemon goes away, then give up fast.
+        let mut joins = Vec::new();
+        for _t in 0..6 {
+            let addr = addr.clone();
+            joins.push(thread::spawn(move || -> u64 {
+                let retry = RetryPolicy {
+                    attempts: 2,
+                    backoff: Duration::from_millis(2),
+                    max_reconnects: 2,
+                    ..RetryPolicy::default()
+                };
+                let Ok(mut client) = EdgeClient::connect(&addr, TASK, 2, retry) else {
+                    return 0;
+                };
+                let mut sent = 0u64;
+                for id in 0..u64::MAX {
+                    if client.send(junk_item(id)).is_err() {
+                        break;
+                    }
+                    sent += 1;
+                }
+                sent
+            }));
+        }
+
+        thread::sleep(Duration::from_millis(300));
+        let t0 = Instant::now();
+        let report = daemon.shutdown();
+        let drain = t0.elapsed();
+        assert!(
+            drain < Duration::from_secs(30),
+            "shutdown under load took {drain:?}"
+        );
+        assert!(report.items > 0, "daemon served nothing before shutdown");
+
+        // Every streamer must terminate once the listener is gone — a
+        // hang here is caught by the watchdog.
+        let total_sent: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert!(total_sent > 0);
+    });
+}
+
+/// An idle daemon shuts down immediately (the waker replaces the old
+/// connect-to-own-listener drain hack, which counted a phantom
+/// connection and hung on unroutable bind addresses), and dropping a
+/// daemon without `shutdown()` neither hangs nor double-joins.
+#[test]
+fn idle_shutdown_is_instant_and_drop_is_safe() {
+    with_timeout(20, || {
+        let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 2, |_conn| {
+            Ok(move |_item: WireItem| -> Result<WireOutcome> { Err(anyhow!("unused")) })
+        })
+        .unwrap();
+        assert!(daemon.take_error().is_none());
+        let stats = daemon.stats();
+        assert_eq!(stats.active_conns, 0);
+        let report = daemon.shutdown();
+        assert_eq!(report.connections, 0, "shutdown dialed its own listener");
+        assert_eq!(report.items, 0);
+        assert!(report.errors.is_empty(), "daemon errors: {:?}", report.errors);
+
+        // Drop without shutdown: the Drop impl drains idempotently.
+        let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 2, |_conn| {
+            Ok(move |_item: WireItem| -> Result<WireOutcome> { Err(anyhow!("unused")) })
+        })
+        .unwrap();
+        drop(daemon);
+    });
+}
+
+/// Handler failures are recorded and surfaced through `take_error()` and
+/// the shutdown report; the failing connection is torn down gracefully
+/// while the daemon keeps running.
+#[test]
+fn handler_errors_surface_via_take_error_and_report() {
+    with_timeout(60, || {
+        let daemon = CloudDaemon::start("127.0.0.1:0", TASK, 2, |_conn| {
+            Ok(move |_item: WireItem| -> Result<WireOutcome> { Err(anyhow!("boom")) })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        let retry = RetryPolicy {
+            attempts: 2,
+            backoff: Duration::from_millis(2),
+            max_reconnects: 1,
+            ..RetryPolicy::default()
+        };
+        let mut client = EdgeClient::connect(&addr, TASK, 4, retry).unwrap();
+        let send_result = client.send(junk_item(0));
+        let finish_result = send_result.and_then(|_| client.finish().map(|_| ()));
+        assert!(
+            finish_result.is_err(),
+            "a deterministically failing handler must fail the client"
+        );
+
+        let first = daemon.take_error().expect("handler failure not recorded");
+        assert!(first.contains("boom"), "unexpected error: {first}");
+        let report = daemon.shutdown();
+        assert!(
+            !report.errors.is_empty(),
+            "reconnect's second failure missing from the report"
+        );
+    });
+}
