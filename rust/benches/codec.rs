@@ -241,6 +241,73 @@ fn main() {
     }
     let bpe_static_matched = matched.map(|(_, bpe, _)| bpe);
 
+    // ---- temporal coding: stream session (container v4) vs per-frame
+    // intra on a correlated 4-frame sequence — the video workload the
+    // session exists for ------------------------------------------------
+    println!("-- temporal coding (4 correlated 256x56x56 frames, N=4) --");
+    let mut frames = vec![big.clone()];
+    for _ in 1..4 {
+        let noise = g.activation_vec(big_n, 0.3);
+        let prev = frames.last().unwrap();
+        frames.push(
+            prev.iter()
+                .zip(&noise)
+                .map(|(&x, &e)| x + 0.02 * (e - 0.1))
+                .collect(),
+        );
+    }
+    let video_session = || {
+        CodecBuilder::new(uniform(4, 1.5))
+            .image_size(32)
+            .threads(4)
+            .stream_session()
+            .build()
+    };
+    let total_n = (big_n * frames.len()) as u64;
+    {
+        let mut codec = batched_session(4, big_n);
+        b.run("temporal_encode/intra", Some(total_n), || {
+            let mut bytes = 0usize;
+            for f in &frames {
+                bytes += codec.encode(f).bytes.len();
+            }
+            black_box(bytes)
+        });
+    }
+    {
+        let mut codec = video_session();
+        b.run("temporal_encode/inter", Some(total_n), || {
+            // Reset per iteration so every measurement codes the same
+            // intra-then-inter sequence.
+            codec.reset_stream();
+            let mut bytes = 0usize;
+            for f in &frames {
+                bytes += codec.encode(f).bytes.len();
+            }
+            black_box(bytes)
+        });
+    }
+    let mut intra_codec = batched_session(4, big_n);
+    let mut inter_codec = video_session();
+    let (mut intra_bytes, mut inter_bytes) = (0usize, 0usize);
+    for f in &frames {
+        intra_bytes += intra_codec.encode(f).bytes.len();
+        inter_bytes += inter_codec.encode(f).bytes.len();
+    }
+    let bpe_intra_video = intra_bytes as f64 * 8.0 / total_n as f64;
+    let bpe_inter_video = inter_bytes as f64 * 8.0 / total_n as f64;
+    let tstats = inter_codec.temporal_stats().expect("session stats");
+    println!(
+        "   per-frame intra: {bpe_intra_video:.4} bits/element\n   \
+         stream session:  {bpe_inter_video:.4} bits/element \
+         ({} intra / {} inter tiles, residuals {:.4} bits/element) \
+         -> saves {:.1}%",
+        tstats.intra_tiles,
+        tstats.inter_tiles,
+        tstats.residual_bits_per_element(),
+        100.0 * (1.0 - bpe_inter_video / bpe_intra_video)
+    );
+
     let speedup = |a: &str, z: &str| -> Option<f64> {
         Some(b.find(a)?.median_s / b.find(z)?.median_s)
     };
@@ -313,6 +380,15 @@ fn main() {
             (
                 "bits_per_element_static_mse_matched",
                 bpe_static_matched.map_or(Json::Null, num),
+            ),
+            // Temporal rows (correlated 4-frame video sequence, N=4):
+            // identical reconstructions by construction, so the delta is
+            // pure rate.
+            ("intra_bits_per_element_video", num(bpe_intra_video)),
+            ("inter_bits_per_element_video", num(bpe_inter_video)),
+            (
+                "inter_residual_bits_per_element",
+                num(tstats.residual_bits_per_element()),
             ),
         ];
         match b.write_json(std::path::Path::new(&json_path), meta) {

@@ -130,6 +130,7 @@ fn serving_bench(m: &Manifest) {
                 granularity: lwfc::codec::ClipGranularity::Stream,
                 adaptive: None,
                 threads: codec_threads,
+                video: false,
             },
             cloud: CloudConfig {
                 task,

@@ -32,14 +32,22 @@
 //! except through [`Codec::set_quant`] (the online re-design path), so a
 //! stream's header and payload can never describe different quantizers
 //! or backends. Format detection (legacy single stream vs. container
-//! v1–v3, CABAC vs. rANS) is internal — see [`sniff`], the one
+//! v1–v4, CABAC vs. rANS) is internal — see [`sniff`], the one
 //! implementation every ingest path shares.
+//!
+//! A **stream session** ([`CodecBuilder::stream_session`]) additionally
+//! holds temporal reference state: consecutive `encode` calls become
+//! frames of one stream (container v4), each tile choosing intra or
+//! inter coding by whichever is fewer bytes, and consecutive decodes
+//! track the same references from the other end. [`Codec::reset_stream`]
+//! drops the references on either side (the reconnect path).
 
 #![deny(missing_docs)]
 
 use super::batch::{
     decode_container_into, encode_batched_designed_impl, encode_batched_designed_to_impl,
-    encode_batched_impl, encode_batched_to_impl, max_elems_per_payload_byte, MAX_PREALLOC_ELEMS,
+    encode_batched_impl, encode_batched_to_impl, encode_temporal_to_impl,
+    max_elems_per_payload_byte, StreamState, MAX_PREALLOC_ELEMS,
 };
 use super::design::{designer_for, DesignKind, QuantDesigner, QuantSpec};
 use super::entropy::EntropyKind;
@@ -62,10 +70,11 @@ pub enum StreamFormat {
     SingleStream,
     /// An `LWFB` multi-substream container (self-describing).
     Container {
-        /// Container version byte: 1–3 in any valid container (3 carries
-        /// per-tile quant specs). A buffer carrying only the 4-byte magic
-        /// reports 0 here ("too short to tell"); the decoder rejects such
-        /// fragments as truncated either way.
+        /// Container version byte: 1–4 in any valid container (3 carries
+        /// per-tile quant specs, 4 per-tile temporal records). A buffer
+        /// carrying only the 4-byte magic reports 0 here ("too short to
+        /// tell"); the decoder rejects such fragments as truncated
+        /// either way.
         version: u8,
     },
 }
@@ -130,12 +139,10 @@ pub fn sniff(bytes: &[u8]) -> FormatInfo {
 /// Fluent builder for a [`Codec`] session.
 ///
 /// Everything is chosen up front — quantizer spec, entropy backend, tile
-/// size, threads, per-tile designer, tolerance policy — and frozen at
-/// [`CodecBuilder::build`]. Migration from the deprecated free
-/// functions: `encode_batched(cfg, data, tile, pool)` becomes
-/// `CodecBuilder::new(spec).threads(n).tile_elems(tile).build().encode(data)`,
-/// and `decode_any(bytes, elements, pool)` becomes
-/// `...expect_elements(elements).build().decode(bytes)`.
+/// size, threads, per-tile designer, tolerance policy, stream-session
+/// mode — and frozen at [`CodecBuilder::build`]. (The free functions of
+/// the 0.1 era were removed in 0.3.0; the README migration table maps
+/// each onto its builder equivalent.)
 pub struct CodecBuilder {
     config: EncoderConfig,
     tile_elems: usize,
@@ -144,6 +151,7 @@ pub struct CodecBuilder {
     tolerant: bool,
     expect_elements: Option<usize>,
     force_container: bool,
+    stream_session: bool,
 }
 
 impl CodecBuilder {
@@ -159,6 +167,7 @@ impl CodecBuilder {
             tolerant: false,
             expect_elements: None,
             force_container: false,
+            stream_session: false,
         }
     }
 
@@ -241,6 +250,25 @@ impl CodecBuilder {
         self
     }
 
+    /// Make the session **stateful**: consecutive `encode` calls become
+    /// frames of one temporal stream. The codec keeps the last
+    /// reconstructed tile on both the encode and the decode side; each
+    /// tile of each frame is coded intra (self-contained, exactly as a
+    /// stateless encode) or inter (entropy-coded quantizer-index
+    /// residual against the co-located tile of the previous frame),
+    /// whichever is fewer bytes. Implies the container format (v4, which
+    /// carries per-tile mode + generation so a decoder can detect a
+    /// stale reference after a dropped frame). Does not compose with
+    /// [`CodecBuilder::tile_designer`]: per-frame re-designed quantizers
+    /// would invalidate the reference indices ([`CodecBuilder::build`]
+    /// panics on the combination). Inter coding requires a uniform
+    /// quantizer spec; sessions with a non-uniform spec simply code
+    /// every tile intra.
+    pub fn stream_session(mut self) -> Self {
+        self.stream_session = true;
+        self
+    }
+
     /// Element count this session expects per decoded tensor. Required
     /// to decode legacy single streams (they are not self-describing);
     /// for containers it is cross-checked against the directory claim
@@ -251,8 +279,21 @@ impl CodecBuilder {
     }
 
     /// Freeze the configuration into a reusable [`Codec`] session.
+    ///
+    /// # Panics
+    ///
+    /// When [`CodecBuilder::stream_session`] is combined with a per-tile
+    /// designer — inter coding predicts quantizer indices across frames,
+    /// which per-frame re-designed quantizers would invalidate.
     pub fn build(self) -> Codec {
-        let batched = self.threads > 1 || self.tile_designer.is_some() || self.force_container;
+        assert!(
+            !(self.stream_session && self.tile_designer.is_some()),
+            "stream_session does not compose with a per-tile designer"
+        );
+        let batched = self.threads > 1
+            || self.tile_designer.is_some()
+            || self.force_container
+            || self.stream_session;
         Codec {
             pool: ThreadPool::new(self.threads),
             encoder: Encoder::new(self.config),
@@ -261,6 +302,9 @@ impl CodecBuilder {
             tile_designer: self.tile_designer,
             tolerant: self.tolerant,
             expect_elements: self.expect_elements,
+            enc_state: self.stream_session.then(StreamState::default),
+            dec_state: self.stream_session.then(StreamState::default),
+            temporal: TemporalStats::default(),
         }
     }
 }
@@ -285,6 +329,11 @@ pub struct Codec {
     tile_designer: Option<Box<dyn QuantDesigner>>,
     tolerant: bool,
     expect_elements: Option<usize>,
+    /// Encode-side temporal references (`Some` iff a stream session).
+    enc_state: Option<StreamState>,
+    /// Decode-side temporal references (`Some` iff a stream session).
+    dec_state: Option<StreamState>,
+    temporal: TemporalStats,
 }
 
 /// An encoded tensor: the wire bytes plus accounting.
@@ -352,6 +401,9 @@ pub struct DecodeInfo {
     /// Per-tile designed quantizers the container carried (v3; 0
     /// otherwise).
     pub designed_tiles: usize,
+    /// Substreams inter-coded against the previous frame (container v4;
+    /// 0 otherwise).
+    pub inter_substreams: usize,
     /// The entropy backend that decoded the stream (from the same header
     /// as [`DecodeInfo::header`]).
     pub entropy: Option<EntropyKind>,
@@ -372,6 +424,36 @@ impl DecodeInfo {
     /// Indexes of the corrupted substreams (ascending).
     pub fn corrupted_tiles(&self) -> Vec<usize> {
         self.failures.iter().filter_map(CodecError::tile).collect()
+    }
+}
+
+/// Cumulative encode-side accounting of a stream session (see
+/// [`Codec::temporal_stats`]). Counters cover every frame encoded since
+/// the session was built — [`Codec::reset_stream`] drops the temporal
+/// references but not these totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TemporalStats {
+    /// Frames encoded by this session.
+    pub frames: u64,
+    /// Tiles coded intra (self-contained).
+    pub intra_tiles: u64,
+    /// Tiles coded inter (residual against the previous frame).
+    pub inter_tiles: u64,
+    /// Wire bytes of the inter-coded tiles (headers included).
+    pub inter_bytes: u64,
+    /// Elements carried by the inter-coded tiles.
+    pub inter_elements: u64,
+}
+
+impl TemporalStats {
+    /// Mean wire bits per element over the inter-coded tiles — the
+    /// temporal-prediction analogue of [`Encoded::bits_per_element`]
+    /// (0.0 until any tile codes inter).
+    pub fn residual_bits_per_element(&self) -> f64 {
+        if self.inter_elements == 0 {
+            return 0.0;
+        }
+        self.inter_bytes as f64 * 8.0 / self.inter_elements as f64
     }
 }
 
@@ -404,18 +486,57 @@ impl Codec {
         self.tile_designer.is_some()
     }
 
+    /// Whether this session carries temporal reference state (see
+    /// [`CodecBuilder::stream_session`]).
+    pub fn is_stream_session(&self) -> bool {
+        self.enc_state.is_some()
+    }
+
     /// Swap in a freshly designed quantizer spec — the sanctioned
     /// mutation for online (windowed) re-design. Spec and materialized
     /// quantizer update atomically; everything else stays frozen.
     pub fn set_quant(&mut self, quant: impl Into<QuantSpec>) {
         self.encoder.set_quant(quant);
+        // Indices quantized under the old spec are no reference for
+        // residuals under the new one.
+        self.reset_stream();
+    }
+
+    /// Drop the temporal references on both the encode and the decode
+    /// side: the next frame encoded codes every tile intra, and the next
+    /// decode accepts only intra tiles until references rebuild. No-op
+    /// for a stateless session. Call on transport reconnect — the peer's
+    /// references may have died with the connection.
+    pub fn reset_stream(&mut self) {
+        if let Some(s) = self.enc_state.as_mut() {
+            s.reset();
+        }
+        if let Some(s) = self.dec_state.as_mut() {
+            s.reset();
+        }
+    }
+
+    /// Cumulative temporal accounting of this session's encodes (`None`
+    /// for a stateless session).
+    pub fn temporal_stats(&self) -> Option<TemporalStats> {
+        self.enc_state.is_some().then_some(self.temporal)
     }
 
     /// Encode one feature tensor. Format follows the session config:
-    /// single stream, tiled container, or per-tile-designed container v3
-    /// — deterministic bytes in every mode (scheduling never leaks into
-    /// the output).
+    /// single stream, tiled container, per-tile-designed container v3,
+    /// or a temporal container-v4 frame (stream sessions) —
+    /// deterministic bytes in every mode (scheduling never leaks into
+    /// the output; the intra/inter decision compares byte counts only).
     pub fn encode(&mut self, data: &[f32]) -> Encoded {
+        if self.enc_state.is_some() {
+            let mut bytes = Vec::new();
+            let info = self.encode_session(data, &mut bytes);
+            return Encoded {
+                bytes,
+                elements: info.elements,
+                substreams: info.substreams,
+            };
+        }
         if let Some(designer) = &self.tile_designer {
             let s = encode_batched_designed_impl(
                 self.encoder.config(),
@@ -452,6 +573,9 @@ impl Codec {
     /// allocate the output buffer per item.
     pub fn encode_to(&mut self, data: &[f32], out: &mut Vec<u8>) -> EncodeInfo {
         out.clear();
+        if self.enc_state.is_some() {
+            return self.encode_session(data, out);
+        }
         let substreams = if let Some(designer) = &self.tile_designer {
             encode_batched_designed_to_impl(
                 self.encoder.config(),
@@ -470,6 +594,31 @@ impl Codec {
         EncodeInfo {
             elements: data.len(),
             substreams,
+            bytes_written: out.len(),
+        }
+    }
+
+    /// Stream-session encode: one container-v4 frame against (and then
+    /// updating) the encode-side references, with the cumulative
+    /// [`TemporalStats`] absorbed here.
+    fn encode_session(&mut self, data: &[f32], out: &mut Vec<u8>) -> EncodeInfo {
+        let state = self.enc_state.as_mut().expect("session encode without state");
+        let t = encode_temporal_to_impl(
+            self.encoder.config(),
+            state,
+            data,
+            self.tile_elems,
+            &self.pool,
+            out,
+        );
+        self.temporal.frames += 1;
+        self.temporal.intra_tiles += t.intra_tiles as u64;
+        self.temporal.inter_tiles += t.inter_tiles as u64;
+        self.temporal.inter_bytes += t.inter_bytes as u64;
+        self.temporal.inter_elements += t.inter_elements as u64;
+        EncodeInfo {
+            elements: data.len(),
+            substreams: t.substreams,
             bytes_written: out.len(),
         }
     }
@@ -519,6 +668,7 @@ impl Codec {
                     &self.pool,
                     self.tolerant,
                     self.expect_elements,
+                    self.dec_state.as_mut(),
                     out,
                 )?;
                 // Engine invariant: `d.header` is always `Some` on a
@@ -529,6 +679,7 @@ impl Codec {
                     elements: d.elements,
                     substreams: d.substreams,
                     designed_tiles: d.designed_tiles,
+                    inter_substreams: d.inter_substreams,
                     failures: d.failures,
                     header: d.header,
                 })
@@ -563,6 +714,7 @@ impl Codec {
                     elements,
                     substreams: 1,
                     designed_tiles: 0,
+                    inter_substreams: 0,
                     failures: Vec::new(),
                     header: Some(header),
                 })
@@ -763,5 +915,71 @@ mod tests {
             codec.decode(&a.bytes).unwrap().info.header.unwrap().levels,
             4
         );
+    }
+
+    #[test]
+    fn stream_session_roundtrips_and_accounts() {
+        let mut g = Gen::new("api_session", 6);
+        let frame0 = g.activation_vec(6_000, 0.5);
+        // A correlated second frame: small drift on most elements.
+        let frame1: Vec<f32> = frame0
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (x + if i % 3 == 0 { 0.01 } else { 0.0 }).max(0.0))
+            .collect();
+
+        let mut enc = CodecBuilder::new(spec(8, 2.0))
+            .stream_session()
+            .tile_elems(1024)
+            .build();
+        assert!(enc.is_stream_session());
+        assert!(enc.encodes_container(), "sessions imply the container");
+        let mut dec = CodecBuilder::new(spec(8, 2.0)).stream_session().build();
+
+        let e0 = enc.encode(&frame0);
+        assert_eq!(e0.bytes[4], 4, "session frames are container v4");
+        let e1 = enc.encode(&frame1);
+        let stats = enc.temporal_stats().unwrap();
+        assert_eq!(stats.frames, 2);
+        assert!(stats.inter_tiles > 0, "correlated frame must code inter");
+        assert!(stats.residual_bits_per_element() > 0.0);
+
+        // The decoding session tracks references and reproduces the
+        // stateless reconstruction bit for bit.
+        let d0 = dec.decode(&e0.bytes).unwrap();
+        assert_eq!(d0.info.inter_substreams, 0);
+        let d1 = dec.decode(&e1.bytes).unwrap();
+        assert!(d1.info.inter_substreams > 0);
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 8));
+        for (&x, &y) in frame1.iter().zip(&d1.values) {
+            assert_eq!(y, q.fake_quant(x));
+        }
+
+        // A fresh decoder (no frame-0 reference) must refuse the inter
+        // frame rather than hallucinate values.
+        let mut fresh = CodecBuilder::new(spec(8, 2.0)).stream_session().build();
+        let err = fresh.decode(&e1.bytes).unwrap_err();
+        assert!(
+            matches!(err, CodecError::StaleReference { .. }),
+            "{err:?}"
+        );
+
+        // reset_stream drops references: the next encode is all intra.
+        let before = enc.temporal_stats().unwrap();
+        enc.reset_stream();
+        let e2 = enc.encode(&frame1);
+        assert_eq!(e2.bytes[4], 4);
+        let after = enc.temporal_stats().unwrap();
+        assert_eq!(after.inter_tiles, before.inter_tiles, "all-intra frame");
+        assert_eq!(after.frames, before.frames + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "stream_session does not compose")]
+    fn stream_session_rejects_tile_designer() {
+        let _ = CodecBuilder::new(spec(4, 2.0))
+            .design(DesignKind::Model, Activation::Relu, 1.0)
+            .stream_session()
+            .build();
     }
 }

@@ -26,16 +26,35 @@
 //!   and reports the corrupted ones (as typed [`CodecError`]s) instead of
 //!   failing the whole tensor.
 //!
-//! The public entry point is the [`crate::codec::api::Codec`] façade; the
-//! free functions here are deprecated compatibility shims over the same
-//! `pub(crate)` engine.
+//! Temporal coding (container v4): a stream session threads a
+//! [`StreamState`] through consecutive encodes/decodes — the last
+//! reconstructed f32 tile plus a generation counter per tile. Each tile
+//! gets an **intra/inter decision**: the inter candidate entropy-codes the
+//! zigzagged difference between the tile's quantizer indices and the
+//! co-located reference tile's indices (alphabet `2N-1`), and whichever
+//! coding is fewer bytes wins (ties go intra). The v4 directory records
+//! the mode + generation per tile, so a decoder whose reference does not
+//! match degrades to a typed, fillable [`CodecError::StaleReference`]
+//! instead of reconstructing garbage. Inter coding requires a *uniform*
+//! quantizer: the residual is computed over indices of the stored f32
+//! reconstructions, and only the uniform index function is recoverable
+//! from a stream header (ECQ decision thresholds never travel), so
+//! non-uniform specs simply always code intra.
+//!
+//! The public entry point is the [`crate::codec::api::Codec`] façade over
+//! the same `pub(crate)` engines.
 
 use super::design::{design_or, QuantDesigner, QuantSpec};
+use super::entropy::backend_for;
 use super::error::CodecError;
-use super::header::{is_batched, substream_checksum, SubstreamDirectory, SubstreamEntry};
+use super::header::{
+    is_batched, substream_checksum, QuantKind, SubstreamDirectory, SubstreamEntry, TileMode,
+    TileTemporal,
+};
 use super::stream::{
     decode_stream_into, decode_stream_owned, EncodedStream, Encoder, EncoderConfig,
 };
+use super::uniform::UniformQuantizer;
 use crate::codec::Header;
 use crate::util::threadpool::ThreadPool;
 
@@ -136,10 +155,55 @@ fn tile_count(total: usize, tile_elems: usize) -> usize {
 }
 
 // ---------------------------------------------------------------------------
+// Stream-session state (temporal coding)
+
+/// One tile's reference: the last reconstructed values and the generation
+/// (frame counter) they came from. `generation == 0` marks "no usable
+/// reference" — generation 0 never appears on the wire (the directory
+/// parser rejects it), so an invalidated slot can never satisfy a
+/// generation check.
+pub(crate) struct TileRef {
+    pub generation: u32,
+    pub data: Vec<f32>,
+}
+
+/// Per-session temporal state: the reference store one side of a stream
+/// session carries between frames. The encoder and decoder each hold
+/// their own; both advance in lockstep because the decoder rebuilds
+/// exactly the reconstructions the encoder stored (bit-exact parity is
+/// what makes index-domain residuals safe).
+#[derive(Default)]
+pub(crate) struct StreamState {
+    /// Generation of the last frame this state absorbed (0 = fresh).
+    pub frame: u32,
+    pub tiles: Vec<TileRef>,
+}
+
+impl StreamState {
+    /// Drop all references (stream reset / reconnect): the next encode
+    /// codes every tile intra, the next decode treats every inter tile as
+    /// stale.
+    pub fn reset(&mut self) {
+        self.frame = 0;
+        self.tiles.clear();
+    }
+}
+
+/// What a temporal encode produced, besides the container bytes.
+pub(crate) struct TemporalEncode {
+    pub substreams: usize,
+    pub intra_tiles: usize,
+    pub inter_tiles: usize,
+    /// Total container bytes of the inter-coded tiles (headers included).
+    pub inter_bytes: usize,
+    /// Total elements carried by the inter-coded tiles.
+    pub inter_elements: usize,
+}
+
+// ---------------------------------------------------------------------------
 // Encode engine
 
-/// Engine behind the deprecated [`encode_batched`] and the façade's
-/// batched encode path.
+/// Engine behind the façade's batched encode path.
 pub(crate) fn encode_batched_impl(
     config: &EncoderConfig,
     data: &[f32],
@@ -173,11 +237,10 @@ pub(crate) fn encode_batched_to_impl(
         enc.encode(&data[lo..hi])
     });
 
-    seal_container(config, data.len(), tiles, None, out)
+    seal_container(config, data.len(), tiles, None, None, out)
 }
 
-/// Engine behind the deprecated [`encode_batched_designed`] and the
-/// façade's per-tile design path (container v3).
+/// Engine behind the façade's per-tile design path (container v3).
 pub(crate) fn encode_batched_designed_impl(
     config: &EncoderConfig,
     designer: &dyn QuantDesigner,
@@ -214,66 +277,137 @@ pub(crate) fn encode_batched_designed_to_impl(
         (enc.encode(&data[lo..hi]), spec)
     });
     let (tiles, specs): (Vec<EncodedStream>, Vec<QuantSpec>) = tiles.into_iter().unzip();
-    seal_container(config, data.len(), tiles, Some(specs), out)
+    seal_container(config, data.len(), tiles, Some(specs), None, out)
 }
 
-/// Encode `data` as a batched container, sharding into `tile_elems`-sized
-/// tiles encoded concurrently on `pool`. Each worker invocation builds its
-/// own [`Encoder`] (contexts are per-stream state), so the output bytes
-/// are independent of scheduling.
-///
-/// `tile_elems` is clamped to [1, [`MAX_TILE_ELEMS`]] so every directory
-/// field fits `u32`. An empty tensor encodes as one empty substream —
-/// the container stays decodable (the tile carries the codec header), so
-/// encode→decode round-trips for every input.
-#[deprecated(
-    since = "0.2.0",
-    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.threads(n)`): `codec.encode(data)`"
-)]
-pub fn encode_batched(
+/// The stream-session encode engine (container v4): encode `data` as the
+/// next frame of a temporal sequence, deciding intra vs inter per tile
+/// against the references in `state`, and advance `state` to this frame's
+/// reconstructions. Always writes a v4 container — even an all-intra
+/// first frame — because the generation records are what let the decoder
+/// keep its reference store in lockstep. Deterministic for a given
+/// (config, state, data, tile size): the rate decision compares byte
+/// counts, never timing, and workers write into per-tile slots by index.
+pub(crate) fn encode_temporal_to_impl(
     config: &EncoderConfig,
+    state: &mut StreamState,
     data: &[f32],
     tile_elems: usize,
     pool: &ThreadPool,
-) -> BatchedStream {
-    encode_batched_impl(config, data, tile_elems, pool)
+    out: &mut Vec<u8>,
+) -> TemporalEncode {
+    let tile_elems = tile_elems.clamp(1, MAX_TILE_ELEMS);
+    let n_tiles = tile_count(data.len(), tile_elems).max(1);
+    // A generation-counter wrap would alias the reserved value 0; restart
+    // the sequence intra instead (once every 2^32 - 1 frames).
+    if state.frame == u32::MAX {
+        state.reset();
+    }
+    // A tiling change (tensor size or tile size) breaks co-location; no
+    // reference can be trusted across it.
+    if state.tiles.len() != n_tiles {
+        state.tiles.clear();
+    }
+    let prev = state.frame;
+    let generation = prev + 1;
+    let refs: &[TileRef] = &state.tiles;
+    // Inter prediction re-indexes the stored reference reconstructions
+    // under the current quantizer; only the uniform index function is
+    // recoverable from a stream header on the decode side.
+    let inter_eligible = matches!(config.quant, QuantSpec::Uniform { .. });
+
+    let tiles: Vec<(EncodedStream, TileTemporal, Vec<f32>)> = pool.map_indexed(n_tiles, |i| {
+        let (lo, hi) = tile_bounds(data.len(), tile_elems, i);
+        let tile = &data[lo..hi];
+        let q = config.quant.materialize();
+        let levels = q.levels();
+        let mut backend = backend_for(config.entropy);
+        let cur_idx: Vec<u16> = tile.iter().map(|&x| q.index(x)).collect();
+
+        // Intra candidate: byte-identical to what the stateless batched
+        // path writes for this tile (same header, same index payload).
+        let mut bytes = Vec::with_capacity(tile.len() / 4 + 32);
+        config.header().write(&mut bytes);
+        backend.encode_index_payload(&cur_idx, levels, &mut bytes);
+        let mut mode = TileMode::Intra;
+
+        let reference = refs
+            .get(i)
+            .filter(|r| prev != 0 && r.generation == prev && r.data.len() == tile.len());
+        if let (true, Some(r)) = (inter_eligible, reference) {
+            // Inter candidate: zigzagged index residual against the
+            // reference, coded under the widened 2N-1 alphabet.
+            let residual: Vec<u16> = cur_idx
+                .iter()
+                .zip(&r.data)
+                .map(|(&cur, &rv)| {
+                    let d = cur as i32 - q.index(rv) as i32;
+                    ((d << 1) ^ (d >> 31)) as u16
+                })
+                .collect();
+            let mut inter = Vec::with_capacity(bytes.len());
+            config.header().write(&mut inter);
+            backend.encode_index_payload(&residual, 2 * levels - 1, &mut inter);
+            // Strictly fewer bytes or the tile stays intra: ties carry no
+            // rate benefit and intra carries no reference risk.
+            if inter.len() < bytes.len() {
+                bytes = inter;
+                mode = TileMode::Inter;
+            }
+        }
+
+        let recon: Vec<f32> = cur_idx.iter().map(|&n| q.reconstruct(n)).collect();
+        let elements = tile.len();
+        (
+            EncodedStream { bytes, elements },
+            TileTemporal { mode, generation },
+            recon,
+        )
+    });
+
+    let mut streams = Vec::with_capacity(n_tiles);
+    let mut temporal = Vec::with_capacity(n_tiles);
+    let mut stats = TemporalEncode {
+        substreams: 0,
+        intra_tiles: 0,
+        inter_tiles: 0,
+        inter_bytes: 0,
+        inter_elements: 0,
+    };
+    state.tiles.clear();
+    for (stream, record, recon) in tiles {
+        match record.mode {
+            TileMode::Intra => stats.intra_tiles += 1,
+            TileMode::Inter => {
+                stats.inter_tiles += 1;
+                stats.inter_bytes += stream.bytes.len();
+                stats.inter_elements += stream.elements;
+            }
+        }
+        state.tiles.push(TileRef {
+            generation,
+            data: recon,
+        });
+        temporal.push(record);
+        streams.push(stream);
+    }
+    state.frame = generation;
+    stats.substreams = seal_container(config, data.len(), streams, None, Some(temporal), out);
+    stats
 }
 
-/// Encode `data` as a **container-v3** batched stream with one freshly
-/// designed quantizer per tile: each worker runs `designer` over its
-/// tile's statistics/samples before encoding, so tensors with
-/// heterogeneous per-tile dynamic ranges stop paying for one global clip
-/// range (the paper's §III-B optimization, online, at tile scope). The
-/// per-tile [`QuantSpec`]s are recorded in the container directory and
-/// cross-checked against each tile's own stream header at decode time.
-///
-/// Degenerate tiles (constant values, too few samples) fall back to
-/// `config.quant`, so this encodes every input the plain batched path
-/// does, and determinism holds the same way: the design depends only on
-/// the tile's data, never on scheduling.
-#[deprecated(
-    since = "0.2.0",
-    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.tile_designer(...)`): \
-            `codec.encode(data)`"
-)]
-pub fn encode_batched_designed(
-    config: &EncoderConfig,
-    designer: &dyn QuantDesigner,
-    data: &[f32],
-    tile_elems: usize,
-    pool: &ThreadPool,
-) -> BatchedStream {
-    encode_batched_designed_impl(config, designer, data, tile_elems, pool)
-}
-
-/// Assemble encoded tiles (+ optional per-tile specs) into a container,
-/// appending to `out` (whose existing capacity is reused). Returns the
-/// substream count.
+/// Assemble encoded tiles (+ optional per-tile specs, + optional per-tile
+/// temporal records) into a container, appending to `out` (whose existing
+/// capacity is reused). Returns the substream count. The directory's
+/// version byte follows from what it carries: temporal records ⇒ v4,
+/// specs alone ⇒ v3, neither ⇒ v2 — so pre-session encodes stay
+/// byte-identical.
 fn seal_container(
     config: &EncoderConfig,
     elements: usize,
     tiles: Vec<EncodedStream>,
     specs: Option<Vec<QuantSpec>>,
+    temporal: Option<Vec<TileTemporal>>,
     out: &mut Vec<u8>,
 ) -> usize {
     let n_tiles = tiles.len();
@@ -290,6 +424,7 @@ fn seal_container(
         entropy: config.entropy,
         entries,
         specs,
+        temporal,
     };
     let payload_len: usize = tiles.iter().map(|t| t.bytes.len()).sum();
     out.reserve(dir.encoded_len() + payload_len);
@@ -422,6 +557,63 @@ fn check_spec_header(
     Ok(())
 }
 
+/// The directory-declared coding mode of tile `i` (pre-v4: intra).
+fn tile_mode(dir: &SubstreamDirectory, i: usize) -> TileMode {
+    dir.temporal.as_ref().map_or(TileMode::Intra, |t| t[i].mode)
+}
+
+/// Decode one inter-coded tile into `out` against the session's reference
+/// store. The reference must hold exactly the previous generation of this
+/// tile (`claimed - 1`) at the same element count — anything else is a
+/// typed, tile-local [`CodecError::StaleReference`], which the tolerant
+/// path fills (the dropped-frame degradation) and the strict path
+/// surfaces. The index residual is zigzag-decoded under the widened
+/// `2N-1` alphabet, then added to the reference's re-quantized indices;
+/// reconstruction goes through the same uniform grid the encoder used
+/// (header f32s are bit-exact), so inter output equals intra output.
+fn decode_tile_inter(
+    stream: &[u8],
+    record: &TileTemporal,
+    refs: &[TileRef],
+    i: usize,
+    out: &mut [f32],
+) -> Result<Header, CodecError> {
+    let (header, off) = Header::read(stream).map_err(|e| e.with_tile(i))?;
+    if header.quant != QuantKind::Uniform {
+        return Err(CodecError::payload(
+            "inter-coded tile under a non-uniform quantizer (only uniform indices are \
+             recoverable from a header)",
+        )
+        .with_tile(i));
+    }
+    let claimed = record.generation;
+    let want = claimed - 1; // claimed >= 1: the directory parser rejects 0
+    let have = refs.get(i).map_or(0, |r| r.generation);
+    if want == 0 || have != want || refs[i].data.len() != out.len() {
+        return Err(CodecError::StaleReference {
+            tile: Some(i),
+            claimed,
+            have,
+        });
+    }
+    let q = UniformQuantizer::new(header.c_min, header.c_max, header.levels);
+    let levels = header.levels;
+    let residual =
+        backend_for(header.entropy).decode_payload(&stream[off..], 2 * levels - 1, out.len())?;
+    for (j, (&z, slot)) in residual.iter().zip(out.iter_mut()).enumerate() {
+        let d = ((z >> 1) as i32) ^ -((z & 1) as i32);
+        let n = q.index(refs[i].data[j]) as i32 + d;
+        if n < 0 || n as usize >= levels {
+            return Err(CodecError::payload(format!(
+                "inter residual leaves the level range at element {j} (index {n} of {levels})"
+            ))
+            .with_tile(i));
+        }
+        *slot = q.reconstruct(n as u16);
+    }
+    Ok(header)
+}
+
 /// Decode one tile into its disjoint slot of the shared output buffer
 /// (`out.len() == entry.elements`) — the zero-copy path.
 fn decode_tile_into(
@@ -429,11 +621,23 @@ fn decode_tile_into(
     dir: &SubstreamDirectory,
     i: usize,
     range: (usize, usize),
+    refs: &[TileRef],
     out: &mut [f32],
 ) -> Result<Header, CodecError> {
     validate_tile(bytes, &dir.entries[i], range, i)?;
-    let header =
-        decode_stream_into(&bytes[range.0..range.1], out).map_err(|e| e.with_tile(i))?;
+    let header = match tile_mode(dir, i) {
+        TileMode::Intra => {
+            decode_stream_into(&bytes[range.0..range.1], out).map_err(|e| e.with_tile(i))?
+        }
+        TileMode::Inter => decode_tile_inter(
+            &bytes[range.0..range.1],
+            &dir.temporal.as_ref().expect("inter mode implies records")[i],
+            refs,
+            i,
+            out,
+        )
+        .map_err(|e| e.with_tile(i))?,
+    };
     check_spec_header(spec_of(dir, i), &header, i)?;
     Ok(header)
 }
@@ -445,13 +649,30 @@ fn decode_tile_owned(
     dir: &SubstreamDirectory,
     i: usize,
     range: (usize, usize),
+    refs: &[TileRef],
 ) -> Result<(Vec<f32>, Header), CodecError> {
     validate_tile(bytes, &dir.entries[i], range, i)?;
-    let (values, header) = decode_stream_owned(
-        &bytes[range.0..range.1],
-        dir.entries[i].elements as usize,
-    )
-    .map_err(|e| e.with_tile(i))?;
+    let (values, header) = match tile_mode(dir, i) {
+        TileMode::Intra => decode_stream_owned(
+            &bytes[range.0..range.1],
+            dir.entries[i].elements as usize,
+        )
+        .map_err(|e| e.with_tile(i))?,
+        TileMode::Inter => {
+            // The claim passed both plausibility bounds; the inter path
+            // must produce exactly this many values to add the residual.
+            let mut values = vec![0.0f32; dir.entries[i].elements as usize];
+            let header = decode_tile_inter(
+                &bytes[range.0..range.1],
+                &dir.temporal.as_ref().expect("inter mode implies records")[i],
+                refs,
+                i,
+                &mut values,
+            )
+            .map_err(|e| e.with_tile(i))?;
+            (values, header)
+        }
+    };
     check_spec_header(spec_of(dir, i), &header, i)?;
     Ok((values, header))
 }
@@ -467,6 +688,8 @@ pub(crate) struct ContainerDecode {
     pub substreams: usize,
     /// Per-tile designed quantizers the directory carried (container v3).
     pub designed_tiles: usize,
+    /// Inter-coded tiles the directory declared (container v4).
+    pub inter_substreams: usize,
     /// Tile-attributed failures, ascending by tile (tolerant mode only —
     /// strict mode returns the first of these as `Err` instead).
     pub failures: Vec<CodecError>,
@@ -486,25 +709,51 @@ pub(crate) struct ContainerDecode {
 /// the lowest-indexed error; in tolerant mode corrupt tiles are filled
 /// with their spec's `c_min` (v3) or a healthy tile's header `c_min`
 /// and reported.
+///
+/// `state` is the decode side of a stream session (container v4): inter
+/// tiles predict from it, and after the decode it is advanced — every
+/// successfully decoded tile (either mode) becomes the new reference at
+/// the frame's generation, while filled/failed tiles are *invalidated*
+/// (generation 0), so a later inter prediction against a filled tile
+/// degrades to another fill instead of reconstructing from fabricated
+/// data; the degradation heals when that tile next arrives intra. A
+/// strict error drops the whole store (nothing after a rejected frame
+/// should trust it); decoding a pre-v4 container leaves it untouched.
 pub(crate) fn decode_container_into(
     bytes: &[u8],
     pool: &ThreadPool,
     tolerant: bool,
     expect_elements: Option<usize>,
+    mut state: Option<&mut StreamState>,
     out: &mut Vec<f32>,
 ) -> Result<ContainerDecode, CodecError> {
     let base = out.len();
     let (dir, payload_off) = SubstreamDirectory::read(bytes)?;
+    // Invalidate the session store alongside any strict rejection of a
+    // temporal container (see the doc comment above).
+    macro_rules! fail {
+        ($err:expr) => {{
+            out.truncate(base);
+            if dir.temporal.is_some() {
+                if let Some(s) = state.as_deref_mut() {
+                    s.reset();
+                }
+            }
+            return Err($err);
+        }};
+    }
     // Implausible directories are a container-level error even for the
     // tolerant path: it fills `entry.elements` values per corrupt tile,
     // so a forged count must never reach the fill loop.
-    validate_entries(&dir)?;
+    if let Err(e) = validate_entries(&dir) {
+        fail!(e);
+    }
     // The caller-expected count is cross-checked BEFORE anything decodes
     // or fill-allocates (the cloud ingest guard): a crafted directory
     // cannot make the worker decode a huge bogus tensor first.
     if let Some(expected) = expect_elements {
         if dir.total_elements != expected as u64 {
-            return Err(CodecError::ElementCountMismatch {
+            fail!(CodecError::ElementCountMismatch {
                 expected: expected as u64,
                 claimed: dir.total_elements,
             });
@@ -514,6 +763,13 @@ pub(crate) fn decode_container_into(
     let n = dir.entries.len();
     let total = dir.total_elements as usize;
     let designed_tiles = dir.specs.as_ref().map_or(0, Vec::len);
+    let inter_substreams = dir.temporal.as_ref().map_or(0, |t| {
+        t.iter().filter(|r| matches!(r.mode, TileMode::Inter)).count()
+    });
+    let refs: &[TileRef] = match state.as_deref() {
+        Some(s) => &s.tiles,
+        None => &[],
+    };
 
     let results: Vec<Result<Header, CodecError>> = if total <= MAX_PREALLOC_ELEMS {
         // Zero-copy fast path: one resize, then disjoint per-tile slots.
@@ -526,7 +782,7 @@ pub(crate) fn decode_container_into(
             rest = tail;
         }
         pool.map_indexed_mut(&mut slices, |i, slot| {
-            decode_tile_into(bytes, &dir, i, ranges[i], slot)
+            decode_tile_into(bytes, &dir, i, ranges[i], refs, slot)
         })
     } else {
         // A claimed size past the pre-allocation cap (only reachable for
@@ -534,7 +790,7 @@ pub(crate) fn decode_container_into(
         // owned per-tile buffers and append, so the big allocation only
         // happens if the tiles really decode.
         let tiles: Vec<Result<(Vec<f32>, Header), CodecError>> =
-            pool.map_indexed(n, |i| decode_tile_owned(bytes, &dir, i, ranges[i]));
+            pool.map_indexed(n, |i| decode_tile_owned(bytes, &dir, i, ranges[i], refs));
         let mut results = Vec::with_capacity(n);
         let mut ok_values: Vec<Option<Vec<f32>>> = Vec::with_capacity(n);
         for tile in tiles {
@@ -593,16 +849,14 @@ pub(crate) fn decode_container_into(
                 // otherwise demand a multi-GiB fill).
                 let fatal = matches!(e, CodecError::ImplausibleElements { .. });
                 if !tolerant || fatal {
-                    out.truncate(base);
-                    return Err(e.clone().with_tile(i));
+                    fail!(e.clone().with_tile(i));
                 }
                 failures.push(e.clone());
             }
         }
     }
     if !tolerant && n == 0 {
-        out.truncate(base);
-        return Err(CodecError::directory("empty container has no header"));
+        fail!(CodecError::directory("empty container has no header"));
     }
 
     if tolerant && total <= MAX_PREALLOC_ELEMS && !failures.is_empty() {
@@ -623,10 +877,40 @@ pub(crate) fn decode_container_into(
         }
     }
 
+    // Advance the session's reference store to this frame: successfully
+    // decoded tiles become references at the frame's generation; failed
+    // (filled) tiles are invalidated so nothing ever predicts from a
+    // fill. The store only moves for v4 containers — a stray pre-v4
+    // decode through a session codec does not perturb the stream.
+    if let (Some(records), Some(s)) = (dir.temporal.as_ref(), state.as_deref_mut()) {
+        if s.tiles.len() != n {
+            s.tiles.clear();
+            s.tiles.resize_with(n, || TileRef {
+                generation: 0,
+                data: Vec::new(),
+            });
+        }
+        let mut lo = base;
+        for (i, e) in dir.entries.iter().enumerate() {
+            let hi = lo + e.elements as usize;
+            let slot = &mut s.tiles[i];
+            slot.data.clear();
+            if results[i].is_ok() {
+                slot.generation = records[i].generation;
+                slot.data.extend_from_slice(&out[lo..hi]);
+            } else {
+                slot.generation = 0;
+            }
+            lo = hi;
+        }
+        s.frame = records.iter().map(|r| r.generation).max().unwrap_or(0);
+    }
+
     Ok(ContainerDecode {
         header: first_ok_header,
         substreams: n,
         designed_tiles,
+        inter_substreams,
         failures,
         elements: total,
     })
@@ -640,26 +924,25 @@ pub(crate) fn batched_elements_impl(bytes: &[u8]) -> Result<usize, CodecError> {
     Ok(dir.total_elements as usize)
 }
 
-/// Strict owned-output container decode (engine behind the deprecated
-/// [`decode_batched`]).
+/// Strict owned-output container decode (tests and one-shot callers; the
+/// façade's hot path is [`decode_container_into`]).
 pub(crate) fn decode_batched_impl(
     bytes: &[u8],
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, Header), CodecError> {
     let mut out = Vec::new();
-    let info = decode_container_into(bytes, pool, false, None, &mut out)?;
+    let info = decode_container_into(bytes, pool, false, None, None, &mut out)?;
     let header = info.header.expect("strict container decode always yields a header");
     Ok((out, header))
 }
 
-/// Tolerant owned-output container decode (engine behind the deprecated
-/// [`decode_batched_tolerant`]).
+/// Tolerant owned-output container decode (tests and one-shot callers).
 pub(crate) fn decode_batched_tolerant_impl(
     bytes: &[u8],
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, BatchReport), CodecError> {
     let mut out = Vec::new();
-    let info = decode_container_into(bytes, pool, true, None, &mut out)?;
+    let info = decode_container_into(bytes, pool, true, None, None, &mut out)?;
     let report = BatchReport {
         substreams: info.substreams,
         corrupted: info.failures.iter().filter_map(CodecError::tile).collect(),
@@ -668,8 +951,9 @@ pub(crate) fn decode_batched_tolerant_impl(
     Ok((out, report))
 }
 
-/// Cloud-ingest decode of either wire format (engine behind the
-/// deprecated [`decode_any`]).
+/// Cloud-ingest decode of either wire format (batched containers are
+/// detected by magic, anything else is treated as a legacy single stream
+/// of `elements` elements).
 pub(crate) fn decode_any_impl(
     bytes: &[u8],
     elements: usize,
@@ -679,71 +963,12 @@ pub(crate) fn decode_any_impl(
         let mut out = Vec::new();
         // The expectation is enforced inside the engine, after directory
         // validation and before anything decodes — one directory parse.
-        let info = decode_container_into(bytes, pool, false, Some(elements), &mut out)?;
+        let info = decode_container_into(bytes, pool, false, Some(elements), None, &mut out)?;
         let header = info.header.expect("strict container decode always yields a header");
         Ok((out, header))
     } else {
         decode_stream_owned(bytes, elements)
     }
-}
-
-/// Strict parallel decode: every substream must validate and decode, else
-/// the whole container is rejected. Returns the reconstructed tensor and
-/// the header of the first substream — for spec-less containers all tiles
-/// share one codec config; a v3 container's tiles may each carry their own
-/// designed quantizer, so the returned header describes tile 0 only (the
-/// directory's spec block has the full per-tile picture).
-#[deprecated(
-    since = "0.2.0",
-    note = "use the `Codec` façade (`lwfc::CodecBuilder`): `codec.decode(bytes)` / \
-            `codec.decode_into(bytes, &mut buf)`"
-)]
-pub fn decode_batched(bytes: &[u8], pool: &ThreadPool) -> Result<(Vec<f32>, Header), CodecError> {
-    decode_batched_impl(bytes, pool)
-}
-
-/// Count-only view for callers that do not need the values (CLI
-/// `list`-style inspection, tests).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `lwfc::sniff` for format inspection, or decode through the `Codec` façade"
-)]
-pub fn batched_elements(bytes: &[u8]) -> Result<usize, CodecError> {
-    batched_elements_impl(bytes)
-}
-
-/// Tolerant parallel decode: corrupted substreams are replaced by a
-/// constant fill and reported, so one damaged tile does not take down the
-/// tensor — the paper's coarse reconstructions degrade gracefully under
-/// tile loss. The fill is the corrupt tile's own clip minimum when the
-/// container carries per-tile quant specs (v3); otherwise the clip
-/// minimum of a *healthy* tile's header (0.0 when no tile survived).
-#[deprecated(
-    since = "0.2.0",
-    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.tolerant(true)`): per-tile \
-            failures arrive as typed `CodecError`s in `DecodeInfo`"
-)]
-pub fn decode_batched_tolerant(
-    bytes: &[u8],
-    pool: &ThreadPool,
-) -> Result<(Vec<f32>, BatchReport), CodecError> {
-    decode_batched_tolerant_impl(bytes, pool)
-}
-
-/// Decode either wire format: batched containers are detected by magic,
-/// anything else is treated as a legacy single stream of `elements`
-/// elements.
-#[deprecated(
-    since = "0.2.0",
-    note = "use the `Codec` façade (`lwfc::CodecBuilder` with `.expect_elements(n)`): \
-            `codec.decode(bytes)` sniffs the format internally"
-)]
-pub fn decode_any(
-    bytes: &[u8],
-    elements: usize,
-    pool: &ThreadPool,
-) -> Result<(Vec<f32>, Header), CodecError> {
-    decode_any_impl(bytes, elements, pool)
 }
 
 #[cfg(test)]
@@ -753,8 +978,8 @@ mod tests {
     use crate::codec::{CodecError, Quantizer, UniformQuantizer};
     use crate::util::prop::Gen;
 
-    // The in-module tests pin the engines directly; the deprecated free
-    // functions are thin aliases of these.
+    // The in-module tests pin the engines directly (the `Codec` façade is
+    // a thin wrapper over them).
     use super::batched_elements_impl as batched_elements;
     use super::decode_any_impl as decode_any;
     use super::decode_batched_impl as decode_batched;
@@ -1109,10 +1334,12 @@ mod tests {
         let (fresh, _) = decode_batched(&batched.bytes, &pool).unwrap();
 
         let mut buf = vec![7.0f32; 3];
-        let info = decode_container_into(&batched.bytes, &pool, false, None, &mut buf).unwrap();
+        let info =
+            decode_container_into(&batched.bytes, &pool, false, None, None, &mut buf).unwrap();
         assert_eq!(info.elements, xs.len());
         assert_eq!(info.substreams, 6);
         assert_eq!(info.designed_tiles, 0);
+        assert_eq!(info.inter_substreams, 0);
         assert!(info.failures.is_empty());
         assert_eq!(&buf[..3], &[7.0, 7.0, 7.0]);
         assert_eq!(&buf[3..], &fresh[..]);
@@ -1122,7 +1349,246 @@ mod tests {
         let last = bad.len() - 1;
         bad[last] ^= 0x11;
         let mut buf2 = vec![1.0f32; 5];
-        assert!(decode_container_into(&bad, &pool, false, None, &mut buf2).is_err());
+        assert!(decode_container_into(&bad, &pool, false, None, None, &mut buf2).is_err());
         assert_eq!(buf2, vec![1.0f32; 5]);
+    }
+
+    // -----------------------------------------------------------------
+    // Temporal (stream session) engine
+
+    /// Encode `frames` through one session state, returning the per-frame
+    /// containers and stats.
+    fn encode_session(
+        c: &EncoderConfig,
+        frames: &[Vec<f32>],
+        tile: usize,
+        pool: &ThreadPool,
+    ) -> (Vec<Vec<u8>>, Vec<TemporalEncode>) {
+        let mut state = StreamState::default();
+        let mut containers = Vec::new();
+        let mut stats = Vec::new();
+        for f in frames {
+            let mut bytes = Vec::new();
+            stats.push(encode_temporal_to_impl(c, &mut state, f, tile, pool, &mut bytes));
+            containers.push(bytes);
+        }
+        (containers, stats)
+    }
+
+    /// A correlated frame sequence: frame k is frame 0 with a small
+    /// per-element drift, except the last tile which is redrawn fresh.
+    fn correlated_frames(n: usize, tile: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+        let base = activations(n, seed);
+        (0..count)
+            .map(|k| {
+                let mut f = base.clone();
+                let mut g = Gen::new("drift", seed + 100 + k as u64);
+                for v in f.iter_mut() {
+                    *v += g.f32_in(-0.01, 0.01);
+                }
+                let last = (n / tile) * tile;
+                f[last..].copy_from_slice(&activations(n - last, seed + 200 + k as u64));
+                f
+            })
+            .collect()
+    }
+
+    #[test]
+    fn temporal_session_roundtrips_and_engages_inter() {
+        let pool = ThreadPool::new(3);
+        let c = cfg(8, 2.0);
+        let q = c.quantizer();
+        let frames = correlated_frames(6_000, 1024, 4, 21);
+        let (containers, stats) = encode_session(&c, &frames, 1024, &pool);
+
+        // Frame 0 has no reference: all intra, but still a v4 container.
+        assert_eq!(stats[0].inter_tiles, 0);
+        assert_eq!(containers[0][4], crate::codec::header::BATCH_VERSION_TEMPORAL);
+        // Later frames engage inter on the correlated tiles and beat the
+        // stateless encode's size.
+        let mut dec_state = StreamState::default();
+        for (k, bytes) in containers.iter().enumerate() {
+            if k > 0 {
+                assert!(stats[k].inter_tiles > 0, "frame {k} never went inter");
+                let intra_only = encode_batched(&c, &frames[k], 1024, &pool);
+                assert!(
+                    bytes.len() < intra_only.bytes.len(),
+                    "frame {k}: inter {} >= intra {}",
+                    bytes.len(),
+                    intra_only.bytes.len()
+                );
+            }
+            let mut out = Vec::new();
+            let info =
+                decode_container_into(bytes, &pool, false, None, Some(&mut dec_state), &mut out)
+                    .unwrap();
+            assert_eq!(info.inter_substreams, stats[k].inter_tiles);
+            // Bit-exact parity with element-wise fake-quant — identical
+            // to what an intra decode of the same frame yields.
+            for (i, (&x, &y)) in frames[k].iter().zip(&out).enumerate() {
+                assert_eq!(y, q.fake_quant(x), "frame {k} element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn temporal_bytes_are_scheduling_independent() {
+        let frames = correlated_frames(8_000, 512, 3, 5);
+        let c = cfg(4, 2.0);
+        let (a, _) = encode_session(&c, &frames, 512, &ThreadPool::new(1));
+        let (b, _) = encode_session(&c, &frames, 512, &ThreadPool::new(8));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dropped_frame_is_stale_not_corrupt() {
+        let pool = ThreadPool::new(2);
+        let c = cfg(8, 2.0);
+        let q = c.quantizer();
+        let frames = correlated_frames(4_096, 1024, 3, 9);
+        let (containers, stats) = encode_session(&c, &frames, 1024, &pool);
+        assert!(stats[2].inter_tiles > 0);
+
+        // Decode frame 0, drop frame 1, then frame 2: its inter tiles
+        // reference generation 2, which the decoder never saw.
+        let mut strict = StreamState::default();
+        let mut out = Vec::new();
+        decode_container_into(&containers[0], &pool, false, None, Some(&mut strict), &mut out)
+            .unwrap();
+        out.clear();
+        let err = decode_container_into(
+            &containers[2],
+            &pool,
+            false,
+            None,
+            Some(&mut strict),
+            &mut out,
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, CodecError::StaleReference { claimed: 3, have: 1, .. }),
+            "unexpected error: {err:?}"
+        );
+        assert!(err.is_tile_local());
+
+        // The tolerant path fills exactly the inter tiles and decodes the
+        // intra ones bit-exactly — degraded, never corrupt.
+        let mut tolerant = StreamState::default();
+        let mut out = Vec::new();
+        decode_container_into(&containers[0], &pool, true, None, Some(&mut tolerant), &mut out)
+            .unwrap();
+        out.clear();
+        let info = decode_container_into(
+            &containers[2],
+            &pool,
+            true,
+            None,
+            Some(&mut tolerant),
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(info.failures.len(), stats[2].inter_tiles);
+        for f in &info.failures {
+            assert!(matches!(f, CodecError::StaleReference { .. }), "wrong variant: {f:?}");
+        }
+        let (dir, _) = SubstreamDirectory::read(&containers[2]).unwrap();
+        let records = dir.temporal.as_ref().unwrap();
+        let mut lo = 0usize;
+        for (i, e) in dir.entries.iter().enumerate() {
+            let hi = lo + e.elements as usize;
+            match records[i].mode {
+                TileMode::Intra => {
+                    for j in lo..hi {
+                        assert_eq!(out[j], q.fake_quant(frames[2][j]), "intra element {j}");
+                    }
+                }
+                TileMode::Inter => {
+                    // Filled with the healthy tiles' header c_min (no v3
+                    // specs here) — and the filled tile must be unusable
+                    // as a reference for the NEXT frame's inter tiles.
+                    assert!(out[lo..hi].iter().all(|&v| v == 0.0));
+                    assert_eq!(tolerant.tiles[i].generation, 0);
+                }
+            }
+            lo = hi;
+        }
+    }
+
+    #[test]
+    fn session_decode_of_fresh_state_rejects_inter_and_plain_decoders_reject_v4_inter() {
+        let pool = ThreadPool::new(2);
+        let c = cfg(8, 2.0);
+        let frames = correlated_frames(2_048, 1024, 2, 3);
+        let (containers, stats) = encode_session(&c, &frames, 1024, &pool);
+        assert!(stats[1].inter_tiles > 0);
+
+        // A fresh session has no reference (have = 0).
+        let mut fresh = StreamState::default();
+        let mut out = Vec::new();
+        let err = decode_container_into(
+            &containers[1],
+            &pool,
+            false,
+            None,
+            Some(&mut fresh),
+            &mut out,
+        )
+        .unwrap_err();
+        assert!(matches!(err, CodecError::StaleReference { have: 0, .. }));
+
+        // A stateless decode treats every inter tile the same way, but a
+        // v4 all-intra frame decodes fine without any session.
+        assert!(matches!(
+            decode_batched(&containers[1], &pool),
+            Err(CodecError::StaleReference { .. })
+        ));
+        let (vals, _) = decode_batched(&containers[0], &pool).unwrap();
+        let q = c.quantizer();
+        for (i, (&x, &y)) in frames[0].iter().zip(&vals).enumerate() {
+            assert_eq!(y, q.fake_quant(x), "element {i}");
+        }
+    }
+
+    #[test]
+    fn ecq_sessions_stay_intra_and_still_roundtrip() {
+        use crate::codec::ecq::{design, EcqParams};
+        let pool = ThreadPool::new(2);
+        let base = activations(4_096, 31);
+        let d = design(&base, 0.0, 6.0, EcqParams::pinned(4, 0.02));
+        let c = EncoderConfig::classification(
+            Quantizer::NonUniform(d.quantizer.clone()),
+            32,
+        );
+        let frames = vec![base.clone(), base.clone()];
+        let (containers, stats) = encode_session(&c, &frames, 1024, &pool);
+        // Identical frames would surely pick inter — but ECQ indices are
+        // not recoverable from a header, so the session never tries.
+        assert_eq!(stats[1].inter_tiles, 0);
+        let mut dec = StreamState::default();
+        for (k, bytes) in containers.iter().enumerate() {
+            let mut out = Vec::new();
+            decode_container_into(bytes, &pool, false, None, Some(&mut dec), &mut out).unwrap();
+            for (i, (&x, &y)) in frames[k].iter().zip(&out).enumerate() {
+                assert_eq!(y, d.quantizer.fake_quant(x), "frame {k} element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn session_reset_and_tiling_change_force_intra() {
+        let pool = ThreadPool::new(2);
+        let c = cfg(8, 2.0);
+        let frames = correlated_frames(4_096, 1024, 2, 17);
+        let mut state = StreamState::default();
+        let mut bytes = Vec::new();
+        encode_temporal_to_impl(&c, &mut state, &frames[0], 1024, &pool, &mut bytes);
+        state.reset();
+        let mut second = Vec::new();
+        let s = encode_temporal_to_impl(&c, &mut state, &frames[1], 1024, &pool, &mut second);
+        assert_eq!(s.inter_tiles, 0, "reset state must encode intra");
+        // A tile-size change breaks co-location: also all intra.
+        let mut third = Vec::new();
+        let s = encode_temporal_to_impl(&c, &mut state, &frames[0], 512, &pool, &mut third);
+        assert_eq!(s.inter_tiles, 0);
     }
 }

@@ -108,6 +108,13 @@ pub trait EntropyBackend: Send {
     /// `out` (the caller has already written the stream header).
     fn encode_payload(&mut self, quantizer: &Quantizer, data: &[f32], out: &mut Vec<u8>);
 
+    /// Append the entropy-coded payload for pre-computed quantizer
+    /// `indices` (each `< levels`) to `out`. For the same index sequence
+    /// this is byte-identical to [`EntropyBackend::encode_payload`] — the
+    /// temporal (inter) path uses it to code zigzagged residual indices
+    /// under a widened alphabet that no quantizer produces directly.
+    fn encode_index_payload(&mut self, indices: &[u16], levels: usize, out: &mut Vec<u8>);
+
     /// Decode `elements` quantizer indices from `payload` (the stream
     /// bytes after the header). Indices are always `< levels`.
     fn decode_payload(
@@ -232,6 +239,26 @@ impl EntropyBackend for CabacBackend {
                         enc.encode(&mut self.contexts[pos], bit)
                     });
                 }
+            }
+        }
+        out.extend_from_slice(&enc.finish());
+    }
+
+    fn encode_index_payload(&mut self, indices: &[u16], levels: usize, out: &mut Vec<u8>) {
+        use super::binarize;
+        self.reset_contexts(levels);
+        let mut enc = CabacEncoder::new();
+        enc.reserve(indices.len() / 8 + 64);
+        if levels == 2 {
+            let ctx = &mut self.contexts[0];
+            for &n in indices {
+                enc.encode(ctx, n != 0);
+            }
+        } else {
+            for &n in indices {
+                binarize::encode_tu(n as usize, levels, |pos, bit| {
+                    enc.encode(&mut self.contexts[pos], bit)
+                });
             }
         }
         out.extend_from_slice(&enc.finish());
@@ -369,7 +396,6 @@ impl EntropyBackend for RansBackend {
 
     fn encode_payload(&mut self, quantizer: &Quantizer, data: &[f32], out: &mut Vec<u8>) {
         let levels = quantizer.levels();
-        let nctx = num_contexts(levels);
 
         // Pass 1: quantize + histogram (the static tables need global
         // counts before any bit is coded).
@@ -393,42 +419,16 @@ impl EntropyBackend for RansBackend {
                 }
             }
         }
-        let p0 = Self::freq_table(&self.hist, levels);
-        for &p in &p0 {
-            out.extend_from_slice(&p.to_le_bytes());
-        }
-        let total_bits: u64 = (0..nctx)
-            .map(|pos| {
-                let ones: u64 = self.hist[pos + 1..].iter().sum();
-                ones + self.hist[pos]
-            })
-            .sum();
+        rans_encode_indices(&self.indices, &self.hist, levels, out);
+    }
 
-        // Pass 2: rANS is LIFO — encode the global TU bit sequence in
-        // reverse (elements back-to-front, bits within an element
-        // back-to-front), so the decoder reads it forward. Bit `i` of the
-        // forward sequence uses state `i & 1`.
-        let mut buf: Vec<u8> = Vec::with_capacity(data.len() / 8 + 16);
-        let mut states = [RANS_LOWER; 2];
-        let mut bit_index = total_bits as usize;
-        for &n in self.indices.iter().rev() {
-            let n = n as usize;
-            if n + 1 != levels {
-                bit_index -= 1;
-                rans_encode_bit(&mut states[bit_index & 1], &mut buf, p0[n], false);
-            }
-            for pos in (0..n).rev() {
-                bit_index -= 1;
-                rans_encode_bit(&mut states[bit_index & 1], &mut buf, p0[pos], true);
-            }
+    fn encode_index_payload(&mut self, indices: &[u16], levels: usize, out: &mut Vec<u8>) {
+        self.hist.clear();
+        self.hist.resize(levels, 0);
+        for &n in indices {
+            self.hist[n as usize] += 1;
         }
-        debug_assert_eq!(bit_index, 0, "bit accounting mismatch");
-        // Final states, pushed so that after the reversal the payload
-        // starts with state0 then state1, both little-endian.
-        buf.extend_from_slice(&states[1].to_be_bytes());
-        buf.extend_from_slice(&states[0].to_be_bytes());
-        buf.reverse();
-        out.extend_from_slice(&buf);
+        rans_encode_indices(indices, &self.hist, levels, out);
     }
 
     fn decode_payload(
@@ -470,6 +470,49 @@ impl EntropyBackend for RansBackend {
         })?;
         Ok(())
     }
+}
+
+/// The rANS encode core shared by the value and the index entry points:
+/// emit the static frequency table for `hist`, then entropy-code
+/// `indices` (pass 2 of the two-pass scheme — the histogram is pass 1,
+/// done by the caller). rANS is LIFO, so the global TU bit sequence is
+/// encoded in reverse (elements back-to-front, bits within an element
+/// back-to-front) and the decoder reads it forward. Bit `i` of the
+/// forward sequence uses state `i & 1`.
+fn rans_encode_indices(indices: &[u16], hist: &[u64], levels: usize, out: &mut Vec<u8>) {
+    let nctx = num_contexts(levels);
+    let p0 = RansBackend::freq_table(hist, levels);
+    for &p in &p0 {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    let total_bits: u64 = (0..nctx)
+        .map(|pos| {
+            let ones: u64 = hist[pos + 1..].iter().sum();
+            ones + hist[pos]
+        })
+        .sum();
+
+    let mut buf: Vec<u8> = Vec::with_capacity(indices.len() / 8 + 16);
+    let mut states = [RANS_LOWER; 2];
+    let mut bit_index = total_bits as usize;
+    for &n in indices.iter().rev() {
+        let n = n as usize;
+        if n + 1 != levels {
+            bit_index -= 1;
+            rans_encode_bit(&mut states[bit_index & 1], &mut buf, p0[n], false);
+        }
+        for pos in (0..n).rev() {
+            bit_index -= 1;
+            rans_encode_bit(&mut states[bit_index & 1], &mut buf, p0[pos], true);
+        }
+    }
+    debug_assert_eq!(bit_index, 0, "bit accounting mismatch");
+    // Final states, pushed so that after the reversal the payload
+    // starts with state0 then state1, both little-endian.
+    buf.extend_from_slice(&states[1].to_be_bytes());
+    buf.extend_from_slice(&states[0].to_be_bytes());
+    buf.reverse();
+    out.extend_from_slice(&buf);
 }
 
 /// The rANS decode core, monomorphized over the per-symbol sink so both
@@ -691,6 +734,40 @@ mod tests {
         let mut bad = payload.clone();
         bad[1] = 0x10; // 4096
         assert!(RansBackend::default().decode_payload(&bad, 4, 64).is_err());
+    }
+
+    #[test]
+    fn index_payload_matches_value_payload_byte_for_byte() {
+        // The inter path codes pre-computed indices; for the same index
+        // sequence it must produce the same bytes as the value entry
+        // point, or the residual scheme would silently fork the format.
+        prop_check("index_payload_parity", 30, |g| {
+            let n = g.usize_in(0, 3000);
+            let levels = *g.choice(&[2usize, 3, 5, 8]);
+            let xs = g.activation_vec(n, 0.5);
+            let q = uq(levels, 2.0);
+            let idx = expected_indices(&q, &xs);
+            for rans in [false, true] {
+                let mut be: Box<dyn EntropyBackend> = if rans {
+                    Box::new(RansBackend::default())
+                } else {
+                    Box::new(CabacBackend::default())
+                };
+                let mut by_value = Vec::new();
+                be.encode_payload(&q, &xs, &mut by_value);
+                let mut by_index = Vec::new();
+                be.encode_index_payload(&idx, levels, &mut by_index);
+                crate::prop_assert!(
+                    by_value == by_index,
+                    "index/value payloads diverged (rans={rans} n={n} levels={levels})"
+                );
+                let back = be
+                    .decode_payload(&by_index, levels, n)
+                    .map_err(|e| e.to_string())?;
+                crate::prop_assert!(back == idx, "index payload did not roundtrip");
+            }
+            Ok(())
+        });
     }
 
     #[test]

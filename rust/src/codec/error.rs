@@ -98,6 +98,20 @@ pub enum CodecError {
         /// Which fields disagreed.
         detail: String,
     },
+    /// A container-v4 inter-coded tile references a reconstruction the
+    /// decoder's stream session does not hold (fresh session, dropped or
+    /// corrupt previous frame, out-of-order redelivery). Recoverable per
+    /// tile: the tolerant decoder fills the tile instead of decoding a
+    /// residual against the wrong reference.
+    StaleReference {
+        /// Substream whose reference is stale (`None` before attribution).
+        tile: Option<usize>,
+        /// The reference generation the tile's record claims.
+        claimed: u32,
+        /// The generation the decoder's store holds for that tile
+        /// (0: no reference at all).
+        have: u32,
+    },
     /// An entropy-backend id not defined by this codec version.
     UnknownBackend {
         /// The offending id byte.
@@ -173,7 +187,8 @@ impl CodecError {
             | CodecError::Payload { tile, .. }
             | CodecError::ChecksumMismatch { tile, .. }
             | CodecError::ImplausibleElements { tile, .. }
-            | CodecError::SpecHeaderMismatch { tile, .. } => *tile = Some(t),
+            | CodecError::SpecHeaderMismatch { tile, .. }
+            | CodecError::StaleReference { tile, .. } => *tile = Some(t),
             // Header damage inside a tile is tile-local too: re-wrap, so
             // the failure carries its substream index. An undefined
             // backend id in a tile's header is the same class (the tile's
@@ -203,7 +218,8 @@ impl CodecError {
             | CodecError::Payload { tile, .. }
             | CodecError::ChecksumMismatch { tile, .. }
             | CodecError::ImplausibleElements { tile, .. }
-            | CodecError::SpecHeaderMismatch { tile, .. } => *tile,
+            | CodecError::SpecHeaderMismatch { tile, .. }
+            | CodecError::StaleReference { tile, .. } => *tile,
             _ => None,
         }
     }
@@ -221,6 +237,7 @@ impl CodecError {
             CodecError::Payload { tile: Some(_), .. }
                 | CodecError::ChecksumMismatch { tile: Some(_), .. }
                 | CodecError::SpecHeaderMismatch { tile: Some(_), .. }
+                | CodecError::StaleReference { tile: Some(_), .. }
         )
     }
 }
@@ -265,6 +282,15 @@ impl std::fmt::Display for CodecError {
             CodecError::SpecHeaderMismatch { tile, detail } => write!(
                 f,
                 "{}tile header disagrees with the directory quant spec: {detail}",
+                at(tile)
+            ),
+            CodecError::StaleReference {
+                tile,
+                claimed,
+                have,
+            } => write!(
+                f,
+                "{}inter tile references generation {claimed}, decoder holds {have}",
                 at(tile)
             ),
             CodecError::UnknownBackend { id } => write!(f, "unknown entropy backend id {id}"),
@@ -314,6 +340,21 @@ mod tests {
         assert!(matches!(e, CodecError::Payload { tile: Some(4), .. }));
         assert!(e.is_tile_local());
         assert!(e.to_string().contains("backend id 2"), "{e}");
+
+        // A stale inter reference is tile-local damage: the tolerant
+        // decoder fills the tile rather than decoding a residual against
+        // the wrong frame. Unattributed it is not fillable.
+        let e = CodecError::StaleReference {
+            tile: None,
+            claimed: 7,
+            have: 5,
+        };
+        assert!(!e.is_tile_local());
+        let e = e.with_tile(2);
+        assert_eq!(e.tile(), Some(2));
+        assert!(e.is_tile_local());
+        let s = e.to_string();
+        assert!(s.contains("substream 2") && s.contains("generation 7"), "{s}");
     }
 
     #[test]

@@ -236,26 +236,39 @@ impl Header {
 // order (kind, levels, clip range, and the full ECQ tables when
 // non-uniform — see `QuantSpec::write`):
 //   spec record 0 | spec record 1 | ...
+// v4 only (stream sessions) — a flags byte, then one 5-byte temporal
+// record per substream, then the spec block iff flags bit 0 is set:
+//   flags (bit 0: per-tile spec block present; others must be 0)
+//   per substream: mode (u8: 0=intra, 1=inter) | generation (u32 LE)
 // then the concatenated substream payloads.
 // ```
 //
-// The container-level backend id is what `encode_batched` was configured
-// with; it lets tools report the backend without decoding a tile. Each
+// The container-level backend id is what the encoding codec was
+// configured with; it lets tools report the backend without decoding a
+// tile. Each
 // tile is a complete stream whose own header also carries the id, and the
 // decoder trusts the tiles (they are checksummed; the prelude byte is
 // advisory).
 //
 // Version history: v1 predates the entropy-backend field; v2 added it in
 // prelude byte 5; v3 adds the per-tile quant-spec block, written only by
-// the per-tile design path (`codec::batch::encode_batched_designed`) —
-// spec-less containers still serialize as v2, byte-identical with every
-// container written since PR 1. The v3 spec block is cross-checked
-// against each tile's own stream header at decode time, so a forged
-// directory cannot re-label a tile's quantizer.
+// the per-tile design path — spec-less containers still serialize as v2,
+// byte-identical with every container written since PR 1. The v3 spec
+// block is cross-checked against each tile's own stream header at decode
+// time, so a forged directory cannot re-label a tile's quantizer. v4
+// (stream sessions) adds the temporal block — a per-tile intra/inter mode
+// flag plus the frame generation the tile belongs to, so a decoder can
+// verify that its reference store actually holds the previous frame
+// before applying a residual; it is written only by stream sessions, so
+// stateless encodes stay byte-identical to v2/v3 output.
 
 pub const BATCH_MAGIC: [u8; 4] = *b"LWFB";
-/// Newest container version this codec reads and writes.
+/// Container version carrying the per-tile quantizer design block
+/// (directories with `specs` but no `temporal` serialize as this).
 pub const BATCH_VERSION: u8 = 3;
+/// Newest container version: the temporal (stream-session) layout with
+/// per-tile intra/inter modes and reference generations.
+pub const BATCH_VERSION_TEMPORAL: u8 = 4;
 /// Spec-less container version ([`SubstreamDirectory`]s without per-tile
 /// quantizer designs serialize as this, unchanged from PR 1).
 pub const BATCH_VERSION_PLAIN: u8 = 2;
@@ -288,6 +301,29 @@ pub struct SubstreamEntry {
     pub checksum: u32,
 }
 
+/// How a container-v4 tile was coded by its stream session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileMode {
+    /// Self-contained: the payload decodes without any reference.
+    Intra,
+    /// Residual against the co-located tile of the previous frame
+    /// (generation − 1 in the session's reference store).
+    Inter,
+}
+
+/// One container-v4 temporal record: how a tile was coded and which
+/// frame generation it belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileTemporal {
+    pub mode: TileMode,
+    /// The encoding session's frame counter when this tile was written
+    /// (1 for the first frame). Inter tiles reference `generation - 1`.
+    pub generation: u32,
+}
+
+/// Serialized size of one [`TileTemporal`] record (mode byte + u32).
+pub const TEMPORAL_RECORD_BYTES: usize = 5;
+
 /// Parsed container prelude + directory.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SubstreamDirectory {
@@ -296,11 +332,15 @@ pub struct SubstreamDirectory {
     /// parse as CABAC).
     pub entropy: EntropyKind,
     pub entries: Vec<SubstreamEntry>,
-    /// Per-tile designed quantizers (container v3): exactly one spec per
-    /// entry, in substream order. `None` for v1/v2 containers and for
+    /// Per-tile designed quantizers (container v3/v4): exactly one spec
+    /// per entry, in substream order. `None` for v1/v2 containers and for
     /// encodes without per-tile design — those serialize as
     /// [`BATCH_VERSION_PLAIN`], byte-identical to pre-v3 output.
     pub specs: Option<Vec<crate::codec::design::QuantSpec>>,
+    /// Per-tile temporal records (container v4): exactly one per entry,
+    /// in substream order. `None` for v1–v3 containers and for stateless
+    /// encodes — only stream sessions write the temporal layout.
+    pub temporal: Option<Vec<TileTemporal>>,
 }
 
 impl SubstreamDirectory {
@@ -316,6 +356,7 @@ impl SubstreamDirectory {
             entropy,
             entries,
             specs: None,
+            temporal: None,
         }
     }
 
@@ -325,8 +366,18 @@ impl SubstreamDirectory {
             .map_or(0, |s| s.iter().map(|q| q.encoded_len()).sum())
     }
 
+    fn temporal_len(&self) -> usize {
+        // v4: flags byte + one fixed-size record per substream.
+        self.temporal
+            .as_ref()
+            .map_or(0, |t| 1 + t.len() * TEMPORAL_RECORD_BYTES)
+    }
+
     pub fn encoded_len(&self) -> usize {
-        BATCH_PRELUDE_BYTES + self.entries.len() * DIR_ENTRY_BYTES + self.specs_len()
+        BATCH_PRELUDE_BYTES
+            + self.entries.len() * DIR_ENTRY_BYTES
+            + self.temporal_len()
+            + self.specs_len()
     }
 
     pub fn write(&self, out: &mut Vec<u8>) {
@@ -339,8 +390,17 @@ impl SubstreamDirectory {
                 "per-tile spec block needs exactly one spec per substream"
             );
         }
+        if let Some(temporal) = &self.temporal {
+            assert_eq!(
+                temporal.len(),
+                self.entries.len(),
+                "temporal block needs exactly one record per substream"
+            );
+        }
         out.extend_from_slice(&BATCH_MAGIC);
-        out.push(if self.specs.is_some() {
+        out.push(if self.temporal.is_some() {
+            BATCH_VERSION_TEMPORAL
+        } else if self.specs.is_some() {
             BATCH_VERSION
         } else {
             BATCH_VERSION_PLAIN
@@ -352,6 +412,16 @@ impl SubstreamDirectory {
             out.extend_from_slice(&e.elements.to_le_bytes());
             out.extend_from_slice(&e.byte_len.to_le_bytes());
             out.extend_from_slice(&e.checksum.to_le_bytes());
+        }
+        if let Some(temporal) = &self.temporal {
+            out.push(u8::from(self.specs.is_some())); // flags: bit 0 = specs
+            for t in temporal {
+                out.push(match t.mode {
+                    TileMode::Intra => 0,
+                    TileMode::Inter => 1,
+                });
+                out.extend_from_slice(&t.generation.to_le_bytes());
+            }
         }
         if let Some(specs) = &self.specs {
             for spec in specs {
@@ -377,7 +447,7 @@ impl SubstreamDirectory {
         if bytes[..4] != BATCH_MAGIC {
             return Err(CodecError::directory("bad batch magic"));
         }
-        if !(BATCH_MIN_VERSION..=BATCH_VERSION).contains(&bytes[4]) {
+        if !(BATCH_MIN_VERSION..=BATCH_VERSION_TEMPORAL).contains(&bytes[4]) {
             return Err(CodecError::directory(format!(
                 "unsupported batch version {}",
                 bytes[4]
@@ -446,8 +516,61 @@ impl SubstreamDirectory {
         // impossible levels, broken range/tables) or runs past the buffer
         // is a container-level error: nothing decodes from a container
         // whose design block cannot be trusted.
+        //
+        // v4: a flags byte plus fixed-size temporal records come first;
+        // the spec block follows only when flags bit 0 says so. The
+        // temporal block is held to the same standard as the spec block —
+        // an undefined mode byte or flag bit is structural corruption,
+        // fatal for the whole container.
         let mut off = entries_end;
-        let specs = if version >= 3 {
+        let (temporal, has_specs) = if version >= 4 {
+            let block_len = 1 + count
+                .checked_mul(TEMPORAL_RECORD_BYTES)
+                .ok_or_else(overflow)?;
+            let block_end = off.checked_add(block_len).ok_or_else(overflow)?;
+            if bytes.len() < block_end {
+                return Err(CodecError::directory(format!(
+                    "truncated: temporal block needs {block_end} bytes, have {}",
+                    bytes.len()
+                )));
+            }
+            let flags = bytes[off];
+            if flags & !1 != 0 {
+                return Err(CodecError::directory(format!(
+                    "undefined temporal flags {flags:#04x}"
+                )));
+            }
+            off += 1;
+            let mut records = Vec::with_capacity(count);
+            for i in 0..count {
+                let mode = match bytes[off] {
+                    0 => TileMode::Intra,
+                    1 => TileMode::Inter,
+                    m => {
+                        return Err(CodecError::directory(format!(
+                            "substream {i}: undefined tile mode {m}"
+                        )))
+                    }
+                };
+                let generation = u32::from_le_bytes([
+                    bytes[off + 1],
+                    bytes[off + 2],
+                    bytes[off + 3],
+                    bytes[off + 4],
+                ]);
+                if generation == 0 {
+                    return Err(CodecError::directory(format!(
+                        "substream {i}: generation 0 is reserved"
+                    )));
+                }
+                off += TEMPORAL_RECORD_BYTES;
+                records.push(TileTemporal { mode, generation });
+            }
+            (Some(records), flags & 1 != 0)
+        } else {
+            (None, version >= 3)
+        };
+        let specs = if has_specs {
             let mut specs = Vec::with_capacity(count);
             for i in 0..count {
                 let (spec, used) = crate::codec::design::QuantSpec::read(&bytes[off..])
@@ -472,6 +595,7 @@ impl SubstreamDirectory {
                 entropy,
                 entries,
                 specs,
+                temporal,
             },
             dir_end,
         ))
@@ -775,6 +899,79 @@ mod tests {
         let mut bad = bytes.clone();
         bad[specs_start + 6..specs_start + 10].copy_from_slice(&f32::NAN.to_le_bytes());
         assert!(SubstreamDirectory::read(&bad).is_err());
+    }
+
+    fn sample_v4_directory(with_specs: bool) -> (SubstreamDirectory, Vec<u8>) {
+        let (mut dir, bytes) = if with_specs {
+            sample_v3_directory()
+        } else {
+            sample_directory()
+        };
+        let payloads = bytes[dir.encoded_len()..].to_vec();
+        dir.temporal = Some(vec![
+            TileTemporal {
+                mode: TileMode::Intra,
+                generation: 2,
+            },
+            TileTemporal {
+                mode: TileMode::Inter,
+                generation: 2,
+            },
+            TileTemporal {
+                mode: TileMode::Intra,
+                generation: 2,
+            },
+        ]);
+        let mut v4 = Vec::new();
+        dir.write(&mut v4);
+        v4.extend_from_slice(&payloads);
+        (dir, v4)
+    }
+
+    #[test]
+    fn v4_directory_roundtrips_temporal_records() {
+        for with_specs in [false, true] {
+            let (dir, bytes) = sample_v4_directory(with_specs);
+            assert_eq!(bytes[4], BATCH_VERSION_TEMPORAL);
+            assert!(is_batched(&bytes));
+            let (back, off) = SubstreamDirectory::read(&bytes).unwrap();
+            assert_eq!(back, dir);
+            assert_eq!(off, dir.encoded_len());
+            let t = back.temporal.as_ref().unwrap();
+            assert_eq!(t.len(), back.entries.len());
+            assert_eq!(t[1].mode, TileMode::Inter);
+            // The flags byte mirrors the spec block's presence.
+            let flags_off = BATCH_PRELUDE_BYTES + dir.entries.len() * DIR_ENTRY_BYTES;
+            assert_eq!(bytes[flags_off], u8::from(with_specs));
+        }
+    }
+
+    #[test]
+    fn v4_temporal_block_corruption_is_a_container_error() {
+        let (dir, bytes) = sample_v4_directory(true);
+        let flags_off = BATCH_PRELUDE_BYTES + dir.entries.len() * DIR_ENTRY_BYTES;
+
+        // Undefined flag bits are rejected (reserved for future layouts).
+        let mut bad = bytes.clone();
+        bad[flags_off] |= 0x02;
+        assert!(SubstreamDirectory::read(&bad).is_err());
+        // An undefined mode byte is rejected, naming the substream.
+        let mut bad = bytes.clone();
+        bad[flags_off + 1] = 7;
+        let err = SubstreamDirectory::read(&bad).unwrap_err();
+        assert!(err.to_string().contains("tile mode 7"), "{err}");
+        // Generation 0 is reserved (it marks "no reference" in decoders).
+        let mut bad = bytes.clone();
+        bad[flags_off + 2..flags_off + 6].copy_from_slice(&0u32.to_le_bytes());
+        assert!(SubstreamDirectory::read(&bad).is_err());
+        // Truncation anywhere inside the temporal block never parses.
+        let temporal_end = flags_off + 1 + dir.entries.len() * TEMPORAL_RECORD_BYTES;
+        for cut in flags_off..temporal_end {
+            assert!(
+                SubstreamDirectory::read(&bytes[..cut]).is_err(),
+                "container cut at temporal byte {cut} accepted"
+            );
+        }
     }
 
     #[test]

@@ -11,9 +11,10 @@
 //! crate root) — a builder-configured session owning its thread pool,
 //! entropy backend, and scratch buffers, with format sniffing internal
 //! and a zero-copy `decode_into` for the serving hot path. Every
-//! fallible operation reports a typed [`CodecError`]. The free functions
-//! of earlier releases (`encode_batched`, `decode_any`, …) survive one
-//! release as deprecated shims over the same engine.
+//! fallible operation reports a typed [`CodecError`]. A stream-session
+//! codec additionally carries temporal reference state for inter-coded
+//! container-v4 frames (the deprecated free functions of the 0.1 era
+//! were removed in 0.3.0; see the README migration table).
 //!
 //! Request-path code: everything here is allocation-conscious and
 //! branch-lean; see `rust/benches/codec.rs` for the throughput targets
@@ -35,11 +36,6 @@ pub mod uniform;
 pub use api::{
     sniff, Codec, CodecBuilder, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo, StreamFormat,
 };
-#[allow(deprecated)]
-pub use batch::{
-    batched_elements, decode_any, decode_batched, decode_batched_tolerant, encode_batched,
-    encode_batched_designed,
-};
 pub use batch::{BatchReport, BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS};
 pub use design::{
     design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner, ModelOptimalDesigner,
@@ -52,7 +48,5 @@ pub use ecq::{
 pub use entropy::{backend_for, sniff as sniff_entropy, EntropyBackend, EntropyKind};
 pub use error::CodecError;
 pub use header::{is_batched, DetInfo, Header, QuantKind, StreamKind, SubstreamDirectory};
-#[allow(deprecated)]
-pub use stream::{decode, decode_indices};
 pub use stream::{EncodedStream, Encoder, EncoderConfig, Quantizer};
 pub use uniform::{clip, UniformQuantizer};

@@ -122,7 +122,7 @@ impl EncoderConfig {
         self.quant.materialize()
     }
 
-    fn header(&self) -> Header {
+    pub(crate) fn header(&self) -> Header {
         let (quant, recon) = match &self.quant {
             QuantSpec::Uniform { .. } => (QuantKind::Uniform, None),
             QuantSpec::EntropyConstrained(q) => {
@@ -248,8 +248,9 @@ pub(crate) fn recon_table_of(header: &Header) -> Vec<f32> {
     }
 }
 
-/// Owned-output single-stream decode (the engine behind the deprecated
-/// [`decode`] and the container tile decoder's fallback path).
+/// Owned-output single-stream decode (the engine behind
+/// [`crate::codec::api::Codec::decode`] and the container tile decoder's
+/// fallback path).
 pub(crate) fn decode_stream_owned(
     bytes: &[u8],
     elements: usize,
@@ -285,29 +286,6 @@ pub(crate) fn decode_stream_into(bytes: &[u8], out: &mut [f32]) -> Result<Header
     Ok(header)
 }
 
-/// Decode a bit-stream produced by [`Encoder::encode`].
-///
-/// `elements` is the feature-tensor element count, known to both sides
-/// from the network architecture + split point (the header carries only
-/// what the paper's 12/24-byte side info carries).
-#[deprecated(
-    since = "0.2.0",
-    note = "use the `Codec` façade (`lwfc::CodecBuilder`): `codec.decode(bytes)` / \
-            `codec.decode_into(bytes, &mut buf)` with `expect_elements` configured"
-)]
-pub fn decode(bytes: &[u8], elements: usize) -> Result<(Vec<f32>, Header), CodecError> {
-    decode_stream_owned(bytes, elements)
-}
-
-/// Decode to quantizer *indices* (for analysis tools and tests).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `lwfc::Codec::decode_indices` on a `Codec` session"
-)]
-pub fn decode_indices(bytes: &[u8], elements: usize) -> Result<(Vec<u16>, Header), CodecError> {
-    decode_indices_impl(bytes, elements)
-}
-
 pub(crate) fn decode_indices_impl(
     bytes: &[u8],
     elements: usize,
@@ -320,8 +298,8 @@ pub(crate) fn decode_indices_impl(
 #[cfg(test)]
 mod tests {
     use super::*;
-    // The in-module tests pin the engine directly; the deprecated free
-    // functions are thin aliases of these.
+    // The in-module tests pin the engine directly (the `Codec` façade is
+    // a thin wrapper over it).
     use super::decode_stream_owned as decode;
     use crate::codec::ecq::{design, EcqParams};
     use crate::util::prop::prop_check;

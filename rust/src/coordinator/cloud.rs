@@ -40,6 +40,13 @@ pub struct CloudTimes {
     /// tiles it holds.
     pub cabac_items: u64,
     pub rans_items: u64,
+    /// Tiles that arrived inter-coded (container v4; a `--video` edge).
+    pub inter_tiles: u64,
+    /// Tiles the tolerant decode filled instead of decoding — corrupt
+    /// payloads and stale temporal references (e.g. an inter tile
+    /// re-sent after a reconnect) degrade to the clip minimum rather
+    /// than failing the connection.
+    pub filled_tiles: u64,
 }
 
 pub struct CloudWorker {
@@ -71,7 +78,12 @@ impl CloudWorker {
         // The decode-side session: the quant spec is a placeholder (this
         // worker never encodes), the element expectation is the real
         // contract — a wire item claiming any other count is rejected
-        // before its bytes reach a decoder.
+        // before its bytes reach a decoder. A stream session, so a
+        // `--video` edge's inter-coded container-v4 frames track their
+        // references here; tolerant, so a stale reference (an inter item
+        // redelivered after a reconnect) or a corrupt tile degrades to a
+        // filled tile and a served outcome instead of a failed
+        // connection.
         let per_item: usize = feature[1..].iter().product();
         let codec = CodecBuilder::new(QuantSpec::Uniform {
             c_min: 0.0,
@@ -80,6 +92,8 @@ impl CloudWorker {
         })
         .threads(config.threads.max(1))
         .expect_elements(per_item)
+        .stream_session()
+        .tolerant(true)
         .build();
         Ok(Self {
             exe: rt.load(cloud_path)?,
@@ -124,6 +138,8 @@ impl CloudWorker {
                 Some(EntropyKind::Rans) => self.times.rans_items += 1,
                 None => {}
             }
+            self.times.inter_tiles += info.inter_substreams as u64;
+            self.times.filled_tiles += info.failures.len() as u64;
             debug_assert_eq!(self.scratch.len(), per_item);
             feat.extend_from_slice(&self.scratch);
         }

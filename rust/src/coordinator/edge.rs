@@ -54,6 +54,12 @@ pub struct EdgeConfig {
     /// worker pool. Tile-granularity design always encodes the tiled
     /// container, whatever the thread count.
     pub threads: usize,
+    /// Temporal mode (`edge --video`): the codec becomes a stream
+    /// session — consecutive frames code container-v4 with a per-tile
+    /// intra/inter decision against the previous frame's reconstruction.
+    /// Does not compose with tile-granularity design (the CLI rejects
+    /// the combination).
+    pub video: bool,
 }
 
 impl EdgeConfig {
@@ -123,6 +129,15 @@ pub struct EdgeTimes {
     pub redesigns: u64,
     /// Tiles encoded under a per-tile designed quantizer.
     pub tile_designs: u64,
+    /// Video mode: tiles coded intra (self-contained).
+    pub intra_tiles: u64,
+    /// Video mode: tiles coded inter (residual against the previous
+    /// frame).
+    pub inter_tiles: u64,
+    /// Video mode: wire bytes of the inter-coded tiles.
+    pub inter_bytes: u64,
+    /// Video mode: elements carried by the inter-coded tiles.
+    pub inter_elements: u64,
 }
 
 pub struct EdgeWorker {
@@ -196,6 +211,9 @@ impl EdgeWorker {
         }
         if config.design != DesignKind::Static && config.granularity == ClipGranularity::Tile {
             builder = builder.design(config.design, acfg.activation, acfg.kappa);
+        }
+        if config.video {
+            builder = builder.stream_session();
         }
         Ok(Self {
             exe,
@@ -283,7 +301,23 @@ impl EdgeWorker {
         self.times.design_s += batch_design_s;
         self.times.encode_s += t2.elapsed().as_secs_f64() - batch_design_s;
         self.times.items += requests.len() as u64;
+        // Video mode: mirror the session's cumulative temporal counters
+        // (overwrite, not add — the codec already accumulates).
+        if let Some(ts) = self.codec.temporal_stats() {
+            self.times.intra_tiles = ts.intra_tiles;
+            self.times.inter_tiles = ts.inter_tiles;
+            self.times.inter_bytes = ts.inter_bytes;
+            self.times.inter_elements = ts.inter_elements;
+        }
         Ok(out)
+    }
+
+    /// Drop the codec's temporal references (video mode; no-op
+    /// otherwise). Called when the transport reconnects — the cloud's
+    /// decode-side references died with the old connection, and the
+    /// client announced the restart with a stream-reset frame.
+    pub fn reset_stream(&mut self) {
+        self.codec.reset_stream();
     }
 
     /// Current clip maximum (moves under online re-design).
@@ -309,6 +343,13 @@ pub struct EdgeNodeConfig {
     pub window: usize,
     /// First corpus index to serve.
     pub first_index: u64,
+    /// Video mode: consecutive requests dwelling on one corpus image
+    /// (`image_index = first_index + id / hold`) — the synthetic stand-in
+    /// for a camera whose scene persists across frames, which is what
+    /// gives the temporal codec correlation to exploit. 1 (and any value
+    /// outside video mode) reproduces the classic one-image-per-request
+    /// schedule.
+    pub hold: u64,
     /// Reconnect and shed-backoff budgets. A daemon BUSY frame costs a
     /// jittered backoff and a redial (`max_shed`), never a reconnect —
     /// see [`super::net::RetryPolicy`].
@@ -336,9 +377,14 @@ pub fn run_edge_node(
     let task = config.task;
     let val_seed = config.val_seed;
     let batch = config.batch.max(1);
+    let video = config.video;
+    let hold = if video { node.hold.max(1) } else { 1 };
     let design_info = config.design_info();
     let mut worker = EdgeWorker::new(manifest, config)?;
     let mut client = EdgeClient::connect(&node.connect, task, node.window, node.retry)?;
+    // Any redial (reconnect or shed backoff) announced a stream reset to
+    // the daemon; the encode side must restart its references in step.
+    let mut redials = client.stats.reconnects + client.stats.busy_shed;
 
     let started = StdInstant::now();
     let mut arrivals: HashMap<u64, StdInstant> = HashMap::new();
@@ -364,7 +410,10 @@ pub fn run_edge_node(
                 arrivals.insert(id, arrived);
                 Request {
                     id,
-                    image_index: node.first_index + id,
+                    // Video mode dwells `hold` consecutive requests on
+                    // each corpus image — temporal correlation for the
+                    // inter coder; classic mode advances every request.
+                    image_index: node.first_index + id / hold,
                     arrived,
                 }
             })
@@ -372,6 +421,11 @@ pub fn run_edge_node(
         next += count;
         for item in worker.process(&requests)? {
             let got = client.send(WireItem::from_item(&item))?;
+            let now = client.stats.reconnects + client.stats.busy_shed;
+            if now != redials {
+                redials = now;
+                worker.reset_stream();
+            }
             collect(got, &mut arrivals);
         }
     }

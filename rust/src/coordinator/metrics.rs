@@ -173,6 +173,24 @@ impl ServeReport {
     /// Human-readable one-screen summary.
     pub fn summary(&self) -> String {
         let mut s = self.summary_core();
+        // Temporal (video-mode) split: reported from whichever side saw
+        // it — the encode session's counters on an edge node, the decode
+        // session's on a pure cloud aggregation.
+        if self.edge.intra_tiles + self.edge.inter_tiles > 0 {
+            let elems = self.edge.inter_elements.max(1) as f64;
+            s.push_str(&format!(
+                "\ntemporal: intra={} inter={} residual={:.4} bits/elem filled={}",
+                self.edge.intra_tiles,
+                self.edge.inter_tiles,
+                self.edge.inter_bytes as f64 * 8.0 / elems,
+                self.cloud.filled_tiles,
+            ));
+        } else if self.cloud.inter_tiles + self.cloud.filled_tiles > 0 {
+            s.push_str(&format!(
+                "\ntemporal: inter={} filled={}",
+                self.cloud.inter_tiles, self.cloud.filled_tiles,
+            ));
+        }
         if self.design.is_recorded() {
             s.push_str(&format!(
                 "\ndesign: {} granularity={} redesigns={} tile_designs={} ({:.2}s)",

@@ -8,8 +8,9 @@
 //!
 //! ```text
 //! 0-3    magic "LWFN"
-//! 4      protocol version (3; version-1/2 frames still parse)
-//! 5      frame kind (0 = compressed item, 1 = outcome, 2 = BUSY/shed)
+//! 4      protocol version (4; version-1/2/3 frames still parse)
+//! 5      frame kind (0 = compressed item, 1 = outcome, 2 = BUSY/shed,
+//!        3 = stream reset)
 //! 6      task code (TaskKind::code — both peers must serve the same net)
 //! 7      v2+ item frames: entropy-backend advertisement
 //!        (0 = unspecified, 1 = CABAC, 2 = rANS);
@@ -33,7 +34,10 @@
 //! (`class u32, score/x/y/w/h f32`). A **BUSY** payload (v3) is just
 //! `retry_after_ms (u32)`: the daemon is at its connection quota; the
 //! client should back off and redial instead of treating the close as a
-//! failure.
+//! failure. A **stream-reset** frame (v4) is empty — header id, image
+//! index, and hint all zero: the edge announces that its temporal
+//! encoder state restarted (a reconnect re-sent items), so the cloud
+//! must drop its decode-side references before the items that follow.
 //!
 //! ## Roles
 //!
@@ -77,7 +81,7 @@ use crate::util::threadpool::ShardedPool;
 use crate::util::timer::Percentiles;
 
 pub const NET_MAGIC: [u8; 4] = *b"LWFN";
-pub const NET_VERSION: u8 = 3;
+pub const NET_VERSION: u8 = 4;
 /// Oldest protocol version this reader still accepts.
 pub const NET_MIN_VERSION: u8 = 1;
 pub const FRAME_HEADER_BYTES: usize = 28;
@@ -176,6 +180,11 @@ pub enum Frame {
     Item(WireItem),
     Outcome(WireOutcome),
     Busy(WireBusy),
+    /// Stream reset (frame kind 3, protocol v4): the sender's temporal
+    /// encoder state restarted — typically after a reconnect re-sent
+    /// pending items — so the receiver must drop its decode-side
+    /// references before anything that follows. Carries no payload.
+    Reset,
 }
 
 impl Frame {
@@ -185,6 +194,7 @@ impl Frame {
             Frame::Item(_) => "item",
             Frame::Outcome(_) => "outcome",
             Frame::Busy(_) => "busy",
+            Frame::Reset => "reset",
         }
     }
 }
@@ -277,6 +287,14 @@ pub fn write_busy_frame(w: &mut impl Write, task: TaskKind, busy: WireBusy) -> i
     Ok(FRAME_HEADER_BYTES + BUSY_WIRE_BYTES)
 }
 
+/// Serialize one stream-reset frame (edge → daemon temporal-state
+/// announcement; header only, no payload).
+pub fn write_reset_frame(w: &mut impl Write, task: TaskKind) -> io::Result<usize> {
+    let header = frame_header(3, task, 0, 0, 0, 0)?;
+    w.write_all(&header)?;
+    Ok(FRAME_HEADER_BYTES)
+}
+
 /// Serialize one frame. Returns the number of bytes written (header +
 /// payload) so callers can account wire traffic.
 pub fn write_frame(w: &mut impl Write, task: TaskKind, frame: &Frame) -> io::Result<usize> {
@@ -284,6 +302,7 @@ pub fn write_frame(w: &mut impl Write, task: TaskKind, frame: &Frame) -> io::Res
         Frame::Item(item) => write_item_frame(w, task, item),
         Frame::Outcome(o) => write_outcome_frame(w, task, o),
         Frame::Busy(b) => write_busy_frame(w, task, *b),
+        Frame::Reset => write_reset_frame(w, task),
     }
 }
 
@@ -476,6 +495,22 @@ pub fn read_frame(
             Frame::Busy(WireBusy {
                 retry_after_ms: u32::from_le_bytes(payload[..4].try_into().unwrap()),
             })
+        }
+        3 => {
+            // Stream-reset frames entered the protocol at v4.
+            if header[4] < 4 {
+                return Err(proto_err(format!(
+                    "stream-reset frame from protocol version {}",
+                    header[4]
+                )));
+            }
+            if !payload.is_empty() {
+                return Err(proto_err(format!(
+                    "stream-reset frames carry no payload, got {} bytes",
+                    payload.len()
+                )));
+            }
+            Frame::Reset
         }
         k => return Err(proto_err(format!("unknown frame kind {k}"))),
     };
@@ -1360,6 +1395,19 @@ impl EventLoop {
                             break;
                         }
                     }
+                    Ok(Some((_, Frame::Reset))) => {
+                        // The edge's temporal encoder restarted: retire
+                        // this connection's handler on its shard (behind
+                        // its queued items, preserving order) so the next
+                        // item rebuilds one with fresh decode-side
+                        // references.
+                        self.counters.bytes_in.fetch_add(total as u64, Ordering::Relaxed);
+                        let shard = (id % self.pool.shards() as u64) as usize;
+                        if self.pool.send_to(shard, DecodeJob::Retire(id)).is_err() {
+                            fail = Some("decode worker unavailable".into());
+                            break;
+                        }
+                    }
                     Ok(Some((_, frame))) => {
                         fail = Some(format!("edge peer sent a {} frame", frame.kind_name()));
                         break;
@@ -1514,6 +1562,13 @@ impl EdgeClient {
     /// which does not).
     fn redial_and_resend(&mut self) -> Result<()> {
         self.stream = connect_with_retry(&self.addr, self.retry)?;
+        // Announce the stream restart before anything else: re-sent (and
+        // future) items may have been inter-coded against references the
+        // old connection's decoder held, which died with it. The caller's
+        // encoder resets alongside (see `run_edge_node`), so every item
+        // from here on is decodable from scratch.
+        let n = write_reset_frame(&mut self.stream, self.task)?;
+        self.stats.bytes_sent += n as u64;
         for id in self.pending_order.clone() {
             let (item, _) = &self.pending[&id];
             let n = write_item_frame(&mut self.stream, self.task, item)?;
@@ -1828,6 +1883,32 @@ mod tests {
         // ...and so is one whose payload is not exactly the retry hint.
         let mut bad = buf.clone();
         bad[24..28].copy_from_slice(&8u32.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 4]);
+        assert!(read_frame(&mut bad.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn reset_frame_roundtrips_and_is_v4_only() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, task(), &Frame::Reset).unwrap();
+        assert_eq!(n, buf.len());
+        assert_eq!(n, FRAME_HEADER_BYTES, "reset frames carry no payload");
+        assert_eq!(buf[4], NET_VERSION);
+        assert_eq!(buf[7], 0, "reset frames reserve byte 7");
+        assert_eq!(&buf[8..24], &[0u8; 16], "reset frames carry no id");
+        let (t, frame) = read_frame(&mut buf.as_slice(), Some(task())).unwrap().unwrap();
+        assert_eq!(t, task());
+        assert_eq!(frame, Frame::Reset);
+
+        // Protocol v3 never defined frame kind 3: a reset frame claiming
+        // an older version is a protocol error...
+        let mut old = buf.clone();
+        old[4] = 3;
+        let err = read_frame(&mut old.as_slice(), None).unwrap_err();
+        assert!(err.to_string().contains("stream-reset"), "got: {err}");
+        // ...and so is one smuggling a payload.
+        let mut bad = buf.clone();
+        bad[24..28].copy_from_slice(&4u32.to_le_bytes());
         bad.extend_from_slice(&[0u8; 4]);
         assert!(read_frame(&mut bad.as_slice(), None).is_err());
     }

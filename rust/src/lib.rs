@@ -33,11 +33,13 @@ pub mod util;
 
 // The unified codec façade, re-exported at the crate root: build a
 // session with [`CodecBuilder`], encode/decode through [`Codec`], match
-// failures by [`CodecError`] variant. See `codec::api` for the full
-// story and `rust/README.md` ("Library API") for migration notes from
-// the deprecated free functions.
+// failures by [`CodecError`] variant. The deprecated 0.1-era free
+// functions were removed in 0.3.0; `rust/README.md` ("Library API")
+// maps each onto its builder equivalent. See `codec::api` for the full
+// story, including stateful stream sessions ([`TemporalStats`]).
 pub use codec::api::{
     sniff, Codec, CodecBuilder, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo, StreamFormat,
+    TemporalStats,
 };
 pub use codec::design::QuantSpec;
 pub use codec::error::CodecError;

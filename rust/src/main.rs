@@ -6,9 +6,11 @@
 //! lwfc serve [--net NAME] [--requests N] [--threads N] ...  run the edge→cloud pipeline
 //! lwfc serve --listen ADDR [--conns N] ...                  run the cloud half as a TCP daemon
 //! lwfc edge --connect ADDR [--requests N] ...               run an edge device against a daemon
+//! lwfc edge --connect ADDR --video [--hold N] ...           temporal (inter-coded) streaming
 //! lwfc fit-model [--mean X --var Y | --net NAME]            fit λ,μ + optimal clip ranges
 //! lwfc encode --input F --output F [--threads N ...]        compress a raw f32 tensor file
-//! lwfc decode --input F --output F [--elements N]           decompress to raw f32
+//! lwfc encode ... --frames N --inter                        temporal coding across N frames
+//! lwfc decode --input F --output F [--elements N] [--inter] decompress to raw f32
 //! lwfc list                                                 list experiments
 //! ```
 
@@ -71,7 +73,9 @@ commands:
                         through a real localhost socket, --listen ADDR runs
                         the cloud half as a standalone TCP daemon)
   edge                  run an edge device against a cloud daemon
-                        (edge --connect HOST:PORT, see serve --listen)
+                        (edge --connect HOST:PORT, see serve --listen;
+                        --video streams temporally correlated frames through
+                        a stateful codec session — container v4 inter coding)
   fit-model             fit the asymmetric-Laplace model + optimal clip ranges
   encode / decode       compress / decompress raw f32 tensor files
                         (encode/serve/edge take --design {static,model,ecq} and
@@ -305,6 +309,7 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
                 }
             }),
             threads,
+            video: false,
         },
         cloud: cloud_cfg,
         edge_workers: a.get_usize("edge-workers").map_err(|e| anyhow!(e))?,
@@ -337,7 +342,18 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         .opt("retries", "5", "connection attempts per (re)connect")
         .opt("design", "static", DESIGN_HELP)
         .opt("clip-granularity", "stream", GRANULARITY_HELP)
-        .opt("artifacts", "", "artifact directory");
+        .opt(
+            "hold",
+            "4",
+            "video mode: consecutive requests dwelling on each corpus image \
+             (the synthetic camera's temporal correlation)",
+        )
+        .opt("artifacts", "", "artifact directory")
+        .flag(
+            "video",
+            "temporal mode: a stateful codec session inter-codes each tile \
+             against the previous frame when cheaper (container v4)",
+        );
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let m = manifest_from(a.get("artifacts"))?;
     let task = task_of(a.get("net"))?;
@@ -346,6 +362,14 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
     let design = design_of(a.get("design"))?;
     let granularity = granularity_of(a.get("clip-granularity"))?;
     check_design_combo(design, granularity)?;
+    let video = a.has_flag("video");
+    if video && granularity == ClipGranularity::Tile {
+        return Err(anyhow!(
+            "--video does not compose with --clip-granularity tile: inter coding \
+             predicts quantizer indices across frames, which per-tile re-designed \
+             quantizers would invalidate"
+        ));
+    }
 
     let edge_cfg = EdgeConfig {
         task,
@@ -361,12 +385,14 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         granularity,
         adaptive: None,
         threads: a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1),
+        video,
     };
     let node = EdgeNodeConfig {
         connect: a.get("connect").to_string(),
         requests: a.get_usize("requests").map_err(|e| anyhow!(e))?,
         window: a.get_usize("window").map_err(|e| anyhow!(e))?.max(1),
         first_index: a.get_u64("first-index").map_err(|e| anyhow!(e))?,
+        hold: a.get_u64("hold").map_err(|e| anyhow!(e))?.max(1),
         retry: RetryPolicy {
             attempts: a.get_usize("retries").map_err(|e| anyhow!(e))?.max(1) as u32,
             ..RetryPolicy::default()
@@ -467,10 +493,22 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
         .opt("design", "static", DESIGN_HELP)
         .opt("clip-granularity", "stream", GRANULARITY_HELP)
         .opt(
+            "frames",
+            "1",
+            "split the input into this many equal frames, encoded in order as one \
+             stream (containers concatenated in the output file)",
+        )
+        .opt(
             "entropy",
             "cabac",
             "entropy backend: cabac (adaptive, best rate) or rans \
              (interleaved rANS with static tables, fastest)",
+        )
+        .flag(
+            "inter",
+            "temporal coding: a stateful session codes each frame's tiles intra or \
+             inter against the previous frame, whichever is fewer bytes \
+             (container v4; decode the output with `lwfc decode --inter`)",
         );
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let data = read_f32_file(a.get("input"))?;
@@ -478,6 +516,22 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     let design = design_of(a.get("design"))?;
     let granularity = granularity_of(a.get("clip-granularity"))?;
     check_design_combo(design, granularity)?;
+    let frames = a.get_usize("frames").map_err(|e| anyhow!(e))?.max(1);
+    let inter = a.has_flag("inter");
+    if inter && granularity == ClipGranularity::Tile {
+        return Err(anyhow!(
+            "--inter does not compose with --clip-granularity tile: inter coding \
+             predicts quantizer indices across frames, which per-tile re-designed \
+             quantizers would invalidate"
+        ));
+    }
+    if data.len() % frames != 0 {
+        return Err(anyhow!(
+            "--frames {frames} does not divide the {} input elements evenly \
+             (equal frame sizes keep tile co-location, which inter coding needs)",
+            data.len()
+        ));
+    }
     let c_min = a.get_f64("c-min").map_err(|e| anyhow!(e))? as f32;
     let c_max = if a.get("c-max").is_empty() {
         let n = data.len() as f64;
@@ -531,18 +585,42 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
     if granularity == ClipGranularity::Tile {
         builder = builder.design(design, activation, kappa);
     }
+    if inter {
+        builder = builder.stream_session();
+    }
     let mut codec = builder.build();
-    let encoded = codec.encode(&data);
-    std::fs::write(a.get("output"), &encoded.bytes)?;
+    // One session across all frames: frame f's containers land back to
+    // back in the output file, and with --inter each frame's tiles may
+    // reference the previous frame's reconstructions.
+    let per_frame = data.len() / frames;
+    let mut bytes = Vec::new();
+    let mut scratch = Vec::new();
+    let mut substreams = 0usize;
+    for f in 0..frames {
+        let info = codec.encode_to(&data[f * per_frame..(f + 1) * per_frame], &mut scratch);
+        substreams += info.substreams;
+        bytes.extend_from_slice(&scratch);
+    }
+    std::fs::write(a.get("output"), &bytes)?;
     println!(
         "{} elements -> {} bytes ({:.4} bits/element, {} substream{}, {entropy} entropy, \
          {design} design @ {granularity})",
-        encoded.elements,
-        encoded.bytes.len(),
-        encoded.bits_per_element(),
-        encoded.substreams,
-        if encoded.substreams == 1 { "" } else { "s" }
+        data.len(),
+        bytes.len(),
+        bytes.len() as f64 * 8.0 / data.len().max(1) as f64,
+        substreams,
+        if substreams == 1 { "" } else { "s" }
     );
+    if let Some(t) = codec.temporal_stats() {
+        println!(
+            "temporal: {} frame{}, intra={} inter={} residual={:.4} bits/elem",
+            t.frames,
+            if t.frames == 1 { "" } else { "s" },
+            t.intra_tiles,
+            t.inter_tiles,
+            t.residual_bits_per_element(),
+        );
+    }
     Ok(())
 }
 
@@ -563,15 +641,30 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
             "",
             "expected entropy backend (cabac or rans): fail if the stream was encoded \
              with a different one (default: auto-detect from the stream header)",
+        )
+        .flag(
+            "inter",
+            "decode a temporal stream written by `lwfc encode --inter`: the input is \
+             a back-to-back concatenation of containers, decoded in order through \
+             one stateful session so inter-coded tiles find their references",
         );
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let bytes = std::fs::read(a.get("input"))?;
     let threads = a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1);
     let elements = a.get_usize("elements").map_err(|e| anyhow!(e))?;
-    if elements == 0 && lwfc::sniff(&bytes).format == StreamFormat::SingleStream {
-        return Err(anyhow!(
-            "--elements is required to decode a legacy single-stream file"
-        ));
+    let inter = a.has_flag("inter");
+    if lwfc::sniff(&bytes).format == StreamFormat::SingleStream {
+        if inter {
+            return Err(anyhow!(
+                "--inter expects a concatenation of batched containers, but the \
+                 input is a legacy single stream"
+            ));
+        }
+        if elements == 0 {
+            return Err(anyhow!(
+                "--elements is required to decode a legacy single-stream file"
+            ));
+        }
     }
     // A decode-only session: the quant spec is a placeholder (never
     // encodes), --elements becomes the session's element expectation.
@@ -584,8 +677,64 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
     if elements > 0 {
         builder = builder.expect_elements(elements);
     }
+    if inter {
+        builder = builder.stream_session();
+    }
     let mut codec = builder.build();
-    let decoded = codec.decode(&bytes)?;
+    let decoded = if inter {
+        // Split the concatenation on container boundaries: each directory
+        // states its payload sizes, so frame f ends at `payload_off +
+        // Σ byte_len`. Frames must decode in encode order — each one may
+        // reference the reconstructions of the one before it.
+        let mut off = 0usize;
+        let mut frames = 0usize;
+        let mut acc: Option<lwfc::Decoded> = None;
+        while off < bytes.len() {
+            let rest = &bytes[off..];
+            let (dir, payload_off) = lwfc::codec::SubstreamDirectory::read(rest)?;
+            let end: usize = payload_off
+                + dir
+                    .entries
+                    .iter()
+                    .map(|e| e.byte_len as usize)
+                    .sum::<usize>();
+            if rest.len() < end {
+                return Err(anyhow!(
+                    "truncated temporal stream: frame {frames} claims {end} bytes, \
+                     {} remain",
+                    rest.len()
+                ));
+            }
+            let d = codec.decode(&rest[..end])?;
+            off += end;
+            frames += 1;
+            acc = Some(match acc {
+                None => d,
+                Some(mut whole) => {
+                    // Keep the latest header/info for the summary line;
+                    // values accumulate across frames.
+                    let mut values = std::mem::take(&mut whole.values);
+                    values.extend_from_slice(&d.values);
+                    lwfc::Decoded {
+                        values,
+                        info: d.info,
+                    }
+                }
+            });
+        }
+        let decoded = acc.ok_or_else(|| anyhow!("empty input file"))?;
+        println!("temporal stream: {frames} frame{}", if frames == 1 { "" } else { "s" });
+        decoded
+    } else {
+        codec.decode(&bytes)?
+    };
+    if decoded.info.inter_substreams > 0 {
+        println!(
+            "container v4: {} inter-coded tile{}",
+            decoded.info.inter_substreams,
+            if decoded.info.inter_substreams == 1 { "" } else { "s" }
+        );
+    }
     if decoded.info.designed_tiles > 0 {
         println!(
             "container v3: {} per-tile designed quantizer{}",

@@ -59,6 +59,13 @@ impl Percentiles {
         s[idx]
     }
 
+    /// Fold another tracker's samples into this one — fleet-wide
+    /// percentiles from per-client trackers. Exact, not an approximation:
+    /// both trackers keep raw samples.
+    pub fn merge(&mut self, other: &Percentiles) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             0.0
@@ -82,6 +89,19 @@ mod tests {
         assert_eq!(p.quantile(1.0), 99.0);
         assert!((p.quantile(0.5) - 50.0).abs() <= 1.0);
         assert!((p.mean() - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_exact_concatenation() {
+        let (mut a, mut b) = (Percentiles::default(), Percentiles::default());
+        for i in 0..50 {
+            a.push(i as f64);
+            b.push((i + 50) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.quantile(1.0), 99.0);
+        assert!((a.mean() - 49.5).abs() < 1e-9);
     }
 
     #[test]

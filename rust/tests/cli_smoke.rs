@@ -384,6 +384,8 @@ fn serve_and_edge_advertise_network_modes() {
     assert!(text.contains("--connect"), "edge help: {text}");
     assert!(text.contains("--window"), "edge help: {text}");
     assert!(text.contains("--entropy"), "edge help: {text}");
+    assert!(text.contains("--video"), "edge help: {text}");
+    assert!(text.contains("--hold"), "edge help: {text}");
 
     let encode = lwfc().args(["encode", "--help"]).output().unwrap();
     let text = format!(
@@ -393,6 +395,90 @@ fn serve_and_edge_advertise_network_modes() {
     );
     assert!(text.contains("--entropy"), "encode help: {text}");
     assert!(text.contains("rans"), "encode help: {text}");
+    assert!(text.contains("--frames"), "encode help: {text}");
+    assert!(text.contains("--inter"), "encode help: {text}");
+}
+
+#[test]
+fn encode_inter_is_smaller_and_decodes_identically() {
+    // The acceptance proxy for temporal coding: two correlated frames,
+    // encoded once intra-only and once as a stream session
+    // (`--frames 2 --inter`, same quantizer). Inter must cost strictly
+    // fewer bytes and reconstruct byte-identical output.
+    let per_frame = 4096usize;
+    let frame0 = test_tensor(per_frame);
+    let mut xs = frame0.clone();
+    // Frame 1 drifts a little from frame 0 — far below the quantizer
+    // step (6/3 = 2), so most indices repeat and residuals are ~zero.
+    xs.extend(frame0.iter().enumerate().map(|(i, &x)| x + 0.01 * (i as f32 * 0.7).sin()));
+    let input = temp_path("video.f32");
+    let intra = temp_path("video.intra.lwfc");
+    let inter = temp_path("video.inter.lwfc");
+    let out_intra = temp_path("video.intra.out.f32");
+    let out_inter = temp_path("video.inter.out.f32");
+    write_f32(&input, &xs);
+
+    let quant: [&str; 8] = [
+        "--levels", "4", "--c-min", "0", "--c-max", "6", "--tile", "1024",
+    ];
+    for (flags, path) in [(&["--frames", "2"][..], &intra), (&["--frames", "2", "--inter"][..], &inter)] {
+        let enc = lwfc()
+            .args(["encode", "--input"])
+            .arg(&input)
+            .arg("--output")
+            .arg(path)
+            .args(quant)
+            .args(["--threads", "2"])
+            .args(flags)
+            .output()
+            .unwrap();
+        assert!(
+            enc.status.success(),
+            "encode {flags:?} failed: {}",
+            String::from_utf8_lossy(&enc.stderr)
+        );
+    }
+    let intra_blob = std::fs::read(&intra).unwrap();
+    let inter_blob = std::fs::read(&inter).unwrap();
+    assert_eq!(intra_blob[4], 2, "intra frames stay container v2");
+    assert_eq!(inter_blob[4], 4, "session frames are container v4");
+    assert!(
+        inter_blob.len() < intra_blob.len(),
+        "inter stream not smaller: {} vs {} bytes",
+        inter_blob.len(),
+        intra_blob.len()
+    );
+
+    // `decode --inter` walks a concatenation of containers through one
+    // decode session; the pre-v4 intra stream goes through the same path.
+    for (path, out) in [(&intra, &out_intra), (&inter, &out_inter)] {
+        let dec = lwfc()
+            .args(["decode", "--input"])
+            .arg(path)
+            .arg("--output")
+            .arg(out)
+            .args(["--inter"])
+            .output()
+            .unwrap();
+        assert!(
+            dec.status.success(),
+            "decode failed: {}",
+            String::from_utf8_lossy(&dec.stderr)
+        );
+    }
+    let a = std::fs::read(&out_intra).unwrap();
+    let b = std::fs::read(&out_inter).unwrap();
+    assert_eq!(a, b, "inter and intra reconstructions must be byte-equal");
+    let got = read_f32(&out_inter);
+    let q = UniformQuantizer::new(0.0, 6.0, 4);
+    assert_eq!(got.len(), xs.len());
+    for (i, (&x, &y)) in xs.iter().zip(&got).enumerate() {
+        assert_eq!(y, q.fake_quant(x), "element {i}");
+    }
+
+    for p in [input, intra, inter, out_intra, out_inter] {
+        let _ = std::fs::remove_file(p);
+    }
 }
 
 #[test]

@@ -3,8 +3,8 @@
 //! injection on corrupted bit-streams — and the error-taxonomy contract:
 //! every corruption class maps to its specific [`CodecError`] variant,
 //! classified by `matches!`, never by message substrings. Everything
-//! drives the `Codec` façade (the deprecated free-function shims are
-//! pinned against it in `shims` below).
+//! drives the `Codec` façade — the sole public entry point since the
+//! deprecated free-function shims were removed in 0.3.0.
 
 use lwfc::codec::{design_ecq, EcqParams, EntropyKind, Quantizer, UniformQuantizer};
 use lwfc::prop_assert;
@@ -533,59 +533,3 @@ fn corrupted_payload_is_isolated_to_its_substream() {
     });
 }
 
-/// The deprecated free functions survive one release as shims; they must
-/// produce byte-identical streams and value-identical decodes through
-/// the façade path, so external callers migrating late see no change.
-mod shims {
-    #![allow(deprecated)]
-
-    use super::*;
-    use lwfc::codec::{batch, decode, decode_indices, EncoderConfig};
-    use lwfc::util::threadpool::ThreadPool;
-
-    #[test]
-    fn free_functions_match_the_facade() {
-        let mut g = Gen::new("shim_parity", 0);
-        let xs = g.activation_vec(12_000, 0.5);
-        let spec = uniform(4, 2.0);
-        let cfg = EncoderConfig::classification(spec.clone(), 32);
-        let pool = ThreadPool::new(3);
-
-        // Batched: identical bytes, identical decode, identical counts.
-        let old = batch::encode_batched(&cfg, &xs, 2048, &pool);
-        let mut codec = batched(spec.clone(), 3, 2048);
-        let new = codec.encode(&xs);
-        assert_eq!(old.bytes, new.bytes, "shim encode diverged from façade");
-        let (old_vals, old_header) = batch::decode_batched(&old.bytes, &pool).unwrap();
-        let decoded = codec.decode(&new.bytes).unwrap();
-        assert_eq!(old_vals, decoded.values);
-        assert_eq!(Some(old_header), decoded.info.header);
-        assert_eq!(batch::batched_elements(&old.bytes).unwrap(), xs.len());
-        let (any_vals, _) = batch::decode_any(&old.bytes, xs.len(), &pool).unwrap();
-        assert_eq!(any_vals, decoded.values);
-
-        // Tolerant shim agrees with the tolerant session, including the
-        // typed failure report.
-        let mut bad = old.bytes.clone();
-        let last = bad.len() - 1;
-        bad[last] ^= 0x77;
-        let (tol_vals, report) = batch::decode_batched_tolerant(&bad, &pool).unwrap();
-        let mut tol = tolerant(spec.clone(), 3, 2048);
-        let tol_decoded = tol.decode(&bad).unwrap();
-        assert_eq!(tol_vals, tol_decoded.values);
-        assert_eq!(report.corrupted, tol_decoded.info.corrupted_tiles());
-        assert_eq!(report.failures, tol_decoded.info.failures);
-        assert!(matches!(
-            report.failures[0],
-            CodecError::ChecksumMismatch { .. }
-        ));
-
-        // Single stream: decode/decode_indices shims.
-        let mut one = single(spec, xs.len());
-        let stream = one.encode(&xs);
-        let (vals, _) = decode(&stream.bytes, xs.len()).unwrap();
-        assert_eq!(vals, one.decode(&stream.bytes).unwrap().values);
-        let (idx, _) = decode_indices(&stream.bytes, xs.len()).unwrap();
-        assert_eq!(idx, one.decode_indices(&stream.bytes).unwrap().0);
-    }
-}

@@ -29,6 +29,7 @@ use lwfc::coordinator::{
     WireItem, WireOutcome,
 };
 use lwfc::util::prop::Gen;
+use lwfc::util::timer::Percentiles;
 use lwfc::{Codec, CodecBuilder, QuantSpec};
 
 const ELEMS: usize = 512;
@@ -46,6 +47,23 @@ fn fleet_edges() -> usize {
 /// Items each edge sends in the fleet test (`LWFC_FLEET_ITEMS`).
 fn fleet_items() -> usize {
     env_usize("LWFC_FLEET_ITEMS", 2)
+}
+
+/// Performance floor for the fleet run: aggregate throughput in requests
+/// per second, from fleet launch (dial + barrier included) to the last
+/// outcome joined. The default is
+/// deliberately loose (any working daemon clears it by an order of
+/// magnitude); CI's fleet-smoke pins a tighter value via
+/// `LWFC_FLEET_MIN_RPS` so real regressions fail the gate.
+fn fleet_min_rps() -> f64 {
+    env_usize("LWFC_FLEET_MIN_RPS", 25) as f64
+}
+
+/// Performance ceiling for the fleet run: p99 send→outcome round-trip in
+/// milliseconds over the merged per-client trackers. Loose default,
+/// tightened in CI via `LWFC_FLEET_MAX_P99_MS`.
+fn fleet_max_p99_ms() -> f64 {
+    env_usize("LWFC_FLEET_MAX_P99_MS", 5000) as f64
 }
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -267,16 +285,18 @@ fn fleet_of_edges_is_served_without_refusals_below_quota() {
             }));
         }
 
+        let t0 = Instant::now();
         let mut all: Vec<WireOutcome> = Vec::new();
-        let mut rtt_samples = 0usize;
+        let mut rtt = Percentiles::default();
         for j in joins {
             let (stats, got) = j.join().expect("client thread panicked").expect("client failed");
             assert_eq!(stats.outcomes_received, items as u64);
             assert_eq!(stats.busy_shed, 0, "shed below quota: {stats:?}");
             assert_eq!(stats.reconnects, 0, "refusal below quota: {stats:?}");
-            rtt_samples += stats.rtt.len();
+            rtt.merge(&stats.rtt);
             all.extend(got);
         }
+        let wall_s = t0.elapsed().as_secs_f64();
         let report = daemon.shutdown();
 
         all.sort_by_key(|o| o.id);
@@ -285,12 +305,30 @@ fn fleet_of_edges_is_served_without_refusals_below_quota() {
             assert_eq!(o.id, k as u64);
             assert_eq!(o.correct, Some(true), "request {k} failed verification");
         }
-        assert_eq!(rtt_samples, total);
+        assert_eq!(rtt.len(), total);
         assert_eq!(report.connections, edges as u64, "report: {report:?}");
         assert_eq!(report.shed, 0, "report: {report:?}");
         assert_eq!(report.items, total as u64);
         assert!(report.bytes_in > 0 && report.bytes_out > 0);
         assert!(report.errors.is_empty(), "daemon errors: {:?}", report.errors);
+
+        // Performance gates: aggregate throughput floor and merged-p99
+        // RTT ceiling (thresholds env-overridable; CI pins tight values).
+        let rps = total as f64 / wall_s.max(1e-9);
+        let p99_ms = rtt.quantile(0.99) * 1e3;
+        assert!(
+            rps >= fleet_min_rps(),
+            "fleet throughput regressed: {rps:.1} req/s < {} req/s floor \
+             ({total} requests in {wall_s:.2}s)",
+            fleet_min_rps()
+        );
+        assert!(
+            p99_ms <= fleet_max_p99_ms(),
+            "fleet p99 RTT regressed: {p99_ms:.1}ms > {}ms ceiling \
+             ({} samples)",
+            fleet_max_p99_ms(),
+            rtt.len()
+        );
 
         // What crossed the real TCP wire is byte-for-byte what crossed
         // the in-process loopback queue.

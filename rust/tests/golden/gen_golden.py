@@ -283,6 +283,24 @@ def uniform_index(x, c_min, c_max, levels):
     return int(v)  # truncation; argument is >= 0
 
 
+def uniform_reconstruct(n, c_min, c_max, levels):
+    """Rust UniformQuantizer::reconstruct with exact f32 emulation."""
+    if n + 1 == levels:
+        return f32(c_max)  # exact, like the Rust top-bin special case
+    scale = f32((levels - 1) / (c_max - c_min))
+    inv_scale = f32(1.0 / scale)
+    return f32(f32(c_min) + f32(f32(n) * inv_scale))
+
+
+def zigzag(d):
+    """i32 zigzag map (Rust: ((d << 1) ^ (d >> 31)) as u16)."""
+    return ((d << 1) ^ (d >> 31)) & 0xFFFF
+
+
+def unzigzag(z):
+    return (z >> 1) ^ -(z & 1)
+
+
 def ecq_index(x, recon, thresholds, c_min, c_max):
     xc = clip(f32(x), f32(c_min), f32(c_max))
     n = 0
@@ -454,11 +472,17 @@ def spec_record_ecq(cmin, cmax, recon, thresholds):
     return bytes(out)
 
 
-def container_bytes(tiles, entropy_id=0, specs=None):
+def container_bytes(tiles, entropy_id=0, specs=None, temporal=None):
     """tiles: [(elements, payload_bytes)]; specs: v3 per-tile spec records
-    (None = v2, byte-identical to the pre-v3 writer)."""
+    (None = v2, byte-identical to the pre-v3 writer); temporal: v4
+    per-tile (mode, generation) records — their presence alone selects
+    version 4 (flags byte + 5-byte records between the directory entries
+    and the spec block), exactly like the Rust writer."""
     out = bytearray(b"LWFB")
-    out.append(3 if specs is not None else 2)
+    if temporal is not None:
+        out.append(4)
+    else:
+        out.append(3 if specs is not None else 2)
     out.append(entropy_id)
     out += struct.pack("<I", len(tiles))
     out += struct.pack("<Q", sum(e for e, _ in tiles))
@@ -466,12 +490,69 @@ def container_bytes(tiles, entropy_id=0, specs=None):
         out += struct.pack("<I", e)
         out += struct.pack("<I", len(p))
         out += struct.pack("<I", fnv1a(p))
+    if temporal is not None:
+        out.append(1 if specs is not None else 0)  # flags: bit 0 = specs
+        for mode, gen in temporal:
+            out.append(mode)
+            out += struct.pack("<I", gen)
     if specs is not None:
         for srec in specs:
             out += srec
     for _, p in tiles:
         out += p
     return bytes(out)
+
+
+def container_v4_self_check(blob, plan, refs, c_min, c_max, levels, head_len):
+    """Re-parse a v4 container and run the decode-session semantics: parse
+    the temporal block, decode every tile (intra under `levels`, inter as
+    an unzigzagged residual under 2N-1 added to the reference's
+    re-quantized indices), and compare against the expected indices.
+
+    plan: [(mode, generation, expected_indices)]; refs: the reference
+    store — per tile, the previous frame's reconstructed f32 values (None
+    for frame 0). Returns the reconstructions, i.e. the next frame's
+    reference store."""
+    assert blob[:4] == b"LWFB" and blob[4] == 4
+    count = struct.unpack_from("<I", blob, 6)[0]
+    total = struct.unpack_from("<Q", blob, 10)[0]
+    assert count == len(plan)
+    entries = []
+    off = 18
+    for _ in range(count):
+        e, bl, ck = struct.unpack_from("<III", blob, off)
+        entries.append((e, bl, ck))
+        off += 12
+    assert total == sum(e for e, _, _ in entries)
+    assert blob[off] == 0, "fixture carries no spec block"
+    off += 1
+    records = []
+    for _ in range(count):
+        mode = blob[off]
+        gen = struct.unpack_from("<I", blob, off + 1)[0]
+        assert mode in (0, 1) and gen != 0
+        records.append((mode, gen))
+        off += 5
+    recons = []
+    for (e, bl, ck), (mode, gen, idx), ref, rec in zip(entries, plan, refs, records):
+        payload = blob[off:off + bl]
+        off += bl
+        assert e == len(idx) and ck == fnv1a(payload)
+        assert rec == (mode, gen), f"temporal record {rec} != planned {(mode, gen)}"
+        if mode == 0:
+            got = decode_stream_indices(payload[head_len:], levels, e)
+        else:
+            assert ref is not None and len(ref) == e
+            z = decode_stream_indices(payload[head_len:], 2 * levels - 1, e)
+            got = []
+            for j, r in enumerate(ref):
+                n = uniform_index(r, c_min, c_max, levels) + unzigzag(z[j])
+                assert 0 <= n < levels, "inter residual leaves the level range"
+                got.append(n)
+        assert got == idx, f"v4 tile mis-decodes (mode {mode})"
+        recons.append([uniform_reconstruct(n, c_min, c_max, levels) for n in got])
+    assert off == len(blob)
+    return recons
 
 
 def container_self_check(blob, tile_plan):
@@ -607,6 +688,88 @@ def gen_containers(xs, img):
     print(f"batch_v3_mixed: {n} elements -> {len(blob)} bytes")
 
 
+def gen_video(img):
+    """Temporal (container v4) fixtures: a two-frame stream session over a
+    uniform [0,6] N=4 quantizer, 512 elements, tile 128 -> 4 tiles.
+
+    * video_frame0.f32 / video_frame1.f32 — the raw frames. Frame 1's
+      tiles 0-2 are frame 0 with a few indices nudged by one level (small,
+      skewed residuals: inter wins); tile 3 is fresh content (residuals as
+      wide as the data under the doubled 2N-1 alphabet: intra wins).
+    * batch_v4_frame0.lwfb — the first frame of a session: all-intra but
+      already v4, generation 1 (the generation records keep the decoder's
+      reference store in lockstep from frame one).
+    * batch_v4_frame1.lwfb — generation 2, tiles 0-2 inter / tile 3 intra,
+      pinned by the per-tile rate decision (strictly fewer bytes or stay
+      intra) exactly as the Rust encoder computes it.
+    """
+    c_min, c_max, levels, tile, n = 0.0, 6.0, 4, 128, 512
+    boundaries = [1.0, 3.0, 5.0]
+    head = header_bytes(0, levels, c_min, c_max, img)
+    f0 = gen_inputs(50, n, boundaries, c_min, c_max)
+    idx0 = [uniform_index(x, c_min, c_max, levels) for x in f0]
+
+    # Frame 1, tiles 0-2: mid-bin representatives of frame 0's indices,
+    # ~10% nudged one level — index-domain deltas of {-1, 0, +1}, mostly 0.
+    import random
+
+    rep = [0.2, 2.2, 4.2, 5.8]  # one safely-off-boundary value per level
+    assert [uniform_index(r, c_min, c_max, levels) for r in rep] == [0, 1, 2, 3]
+    rng = random.Random(51)
+    f1 = []
+    for j in range(3 * tile):
+        u = rng.random()
+        d = 1 if u < 0.05 else (-1 if u < 0.10 else 0)
+        f1.append(f32(rep[min(max(idx0[j] + d, 0), levels - 1)]))
+    f1 += gen_inputs(52, tile, boundaries, c_min, c_max)
+    idx1 = [uniform_index(x, c_min, c_max, levels) for x in f1]
+
+    # ---- frame 0: all intra, generation 1 --------------------------------
+    tiles0, plan0 = [], []
+    for lo in range(0, n, tile):
+        tiles0.append((tile, encode_stream(idx0[lo:lo + tile], levels, head)))
+        plan0.append((0, 1, idx0[lo:lo + tile]))
+    blob0 = container_bytes(tiles0, temporal=[(m, g) for m, g, _ in plan0])
+    refs = container_v4_self_check(
+        blob0, plan0, [None] * 4, c_min, c_max, levels, len(head)
+    )
+
+    # ---- frame 1: per-tile rate decision against frame 0's recons --------
+    tiles1, plan1 = [], []
+    for t, lo in enumerate(range(0, n, tile)):
+        part = idx1[lo:lo + tile]
+        intra = encode_stream(part, levels, head)
+        ref_idx = [uniform_index(r, c_min, c_max, levels) for r in refs[t]]
+        residual = [zigzag(a - b) for a, b in zip(part, ref_idx)]
+        inter = encode_stream(residual, 2 * levels - 1, head)
+        if len(inter) < len(intra):  # strictly fewer bytes, else intra
+            tiles1.append((tile, inter))
+            plan1.append((1, 2, part))
+        else:
+            tiles1.append((tile, intra))
+            plan1.append((0, 2, part))
+    modes = [m for m, _, _ in plan1]
+    assert modes == [1, 1, 1, 0], f"planned mode split changed: {modes}"
+    blob1 = container_bytes(tiles1, temporal=[(m, g) for m, g, _ in plan1])
+    recons1 = container_v4_self_check(
+        blob1, plan1, refs, c_min, c_max, levels, len(head)
+    )
+    # Inter output must equal intra output bit-for-bit: both are exactly
+    # the fake-quantized frame.
+    want = [uniform_reconstruct(i, c_min, c_max, levels) for i in idx1]
+    assert [v for tr in recons1 for v in tr] == want
+
+    emit("video_frame0.f32", b"".join(struct.pack("<f", v) for v in f0))
+    emit("video_frame1.f32", b"".join(struct.pack("<f", v) for v in f1))
+    emit("batch_v4_frame0.lwfb", blob0)
+    emit("batch_v4_frame1.lwfb", blob1)
+    print(f"batch_v4_frame0: {n} elements -> {len(blob0)} bytes (all intra)")
+    print(
+        f"batch_v4_frame1: {n} elements -> {len(blob1)} bytes "
+        f"({modes.count(1)} inter / {modes.count(0)} intra)"
+    )
+
+
 def main(check=False):
     self_check()
 
@@ -660,6 +823,9 @@ def main(check=False):
     # built over the uniform_n4 input values --------------------------------
     xs_n4 = gen_inputs(42, n, [1.0, 3.0, 5.0], 0.0, 6.0)
     gen_containers(xs_n4, img)
+
+    # ---- temporal container fixtures (v4 stream session, two frames) ------
+    gen_video(img)
 
     # ---- write or verify --------------------------------------------------
     import os

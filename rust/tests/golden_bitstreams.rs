@@ -357,6 +357,78 @@ fn golden_v3_container_decodes_per_tile_specs() {
 }
 
 #[test]
+fn golden_v4_temporal_containers_are_pinned() {
+    // A two-frame stream session pinned byte-for-byte: the generator's
+    // independent port ran the same per-tile intra/inter rate decision,
+    // so re-encoding both frames through a session `Codec` must reproduce
+    // the committed containers exactly — frame 0 all-intra at generation
+    // 1 (v4 from the first frame), frame 1 with tiles 0-2 inter against
+    // frame 0 and tile 3 (fresh content) intra at generation 2.
+    use lwfc::codec::header::{TileMode, TileTemporal};
+    use lwfc::codec::SubstreamDirectory;
+    let f0 = f32_le(include_bytes!("golden/video_frame0.f32"));
+    let f1 = f32_le(include_bytes!("golden/video_frame1.f32"));
+    let blob0 = include_bytes!("golden/batch_v4_frame0.lwfb");
+    let blob1 = include_bytes!("golden/batch_v4_frame1.lwfb");
+    let q = UniformQuantizer::new(0.0, 6.0, 4);
+
+    let mut codec = CodecBuilder::new(q)
+        .image_size(32)
+        .tile_elems(128)
+        .stream_session()
+        .build();
+    let s0 = codec.encode(&f0);
+    assert_eq!(
+        s0.bytes, blob0,
+        "batch_v4_frame0: session bytes diverge from the golden vector — \
+         the v4 wire format changed. If intentional, regenerate \
+         tests/golden/ via gen_golden.py and bump the container version."
+    );
+    let s1 = codec.encode(&f1);
+    assert_eq!(s1.bytes, blob1, "batch_v4_frame1: session bytes diverge");
+    let stats = codec.temporal_stats().unwrap();
+    assert_eq!((stats.frames, stats.intra_tiles, stats.inter_tiles), (2, 5, 3));
+
+    assert_eq!(blob0[4], 4, "stream sessions write container v4");
+    assert_eq!(
+        lwfc::sniff(blob0).format,
+        lwfc::StreamFormat::Container { version: 4 }
+    );
+    let records = |blob: &[u8]| -> Vec<TileTemporal> {
+        SubstreamDirectory::read(blob).unwrap().0.temporal.unwrap()
+    };
+    assert!(records(blob0)
+        .iter()
+        .all(|r| r.mode == TileMode::Intra && r.generation == 1));
+    let modes: Vec<TileMode> = records(blob1).iter().map(|r| r.mode).collect();
+    assert_eq!(
+        modes,
+        [TileMode::Inter, TileMode::Inter, TileMode::Inter, TileMode::Intra],
+        "the pinned rate decision changed"
+    );
+
+    // Decode both frames through a fresh decoder session: inter output
+    // equals element-wise fake-quant, exactly like intra.
+    let mut dec = CodecBuilder::new(UniformQuantizer::new(0.0, 6.0, 4))
+        .stream_session()
+        .build();
+    for (name, blob, xs) in [("frame0", &blob0[..], &f0), ("frame1", &blob1[..], &f1)] {
+        let d = dec.decode(blob).unwrap();
+        assert_eq!(d.values.len(), xs.len());
+        for (i, (&x, &y)) in xs.iter().zip(&d.values).enumerate() {
+            assert_eq!(y, q.fake_quant(x), "{name} element {i}");
+        }
+    }
+    // Frame 1 alone, through a stateless codec: its inter tiles have no
+    // reference — a typed stale-reference rejection, not garbage output.
+    let mut stateless = CodecBuilder::new(q).build();
+    assert!(matches!(
+        stateless.decode(blob1),
+        Err(lwfc::CodecError::StaleReference { have: 0, .. })
+    ));
+}
+
+#[test]
 fn golden_streams_reject_truncation() {
     let bytes = include_bytes!("golden/uniform_n4.lwfc");
     let mut codec = session(UniformQuantizer::new(0.0, 6.0, 4), EntropyKind::Cabac, 512);

@@ -15,7 +15,7 @@
 #[allow(unused_imports)]
 use lwfc::{
     sniff, Codec, CodecBuilder, CodecError, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo,
-    QuantSpec, StreamFormat,
+    QuantSpec, StreamFormat, TemporalStats,
 };
 
 /// Extract `pub fn|struct|enum|trait|const|type <name>` item names from a
@@ -71,6 +71,7 @@ fn facade_surface_is_pinned() {
         "design",
         "tolerant",
         "force_container",
+        "stream_session",
         "expect_elements",
         "build",
         // session + result types
@@ -83,13 +84,18 @@ fn facade_surface_is_pinned() {
         "DecodeInfo",
         "is_clean",
         "corrupted_tiles",
+        "TemporalStats",
+        "residual_bits_per_element",
         // session methods
         "builder",
         "quant_spec",
         "entropy",
         "encodes_container",
         "has_tile_designer",
+        "is_stream_session",
         "set_quant",
+        "reset_stream",
+        "temporal_stats",
         "encode",
         "encode_to",
         "decode",
@@ -141,6 +147,7 @@ fn crate_root_reexports_the_facade() {
         "FormatInfo",
         "StreamFormat",
         "QuantSpec",
+        "TemporalStats",
         "sniff",
     ] {
         assert!(

@@ -204,6 +204,7 @@ fn serving_pipeline_end_to_end() {
             granularity: lwfc::codec::ClipGranularity::Stream,
             adaptive: None,
             threads: 2,
+            video: false,
         },
         cloud: CloudConfig {
             task,
@@ -264,6 +265,7 @@ fn detect_pipeline_end_to_end() {
             granularity: lwfc::codec::ClipGranularity::Stream,
             adaptive: None,
             threads: 2,
+            video: false,
         },
         cloud: CloudConfig {
             task,

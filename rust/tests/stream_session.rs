@@ -1,0 +1,214 @@
+//! Stream-session (temporal coding, container v4) properties over the
+//! `Codec` façade:
+//!
+//! * inter-coded output is **bit-exact** with intra-only output — for any
+//!   entropy backend, tile size, and thread count, a session decode equals
+//!   element-wise `fake_quant`, which is exactly what the stateless codec
+//!   produces;
+//! * on correlated frames inter coding engages and the stream is strictly
+//!   smaller than the stateless intra-only encoding of the same frames;
+//! * a dropped frame degrades: a strict decode session rejects with the
+//!   typed [`CodecError::StaleReference`], a tolerant one fills the inter
+//!   tiles and reports them, and the stream heals after an encoder reset;
+//! * a v4 frame is self-describing about its needs — an all-intra first
+//!   frame decodes fine through a stateless codec, a later inter frame is
+//!   rejected with `have: 0` instead of reconstructing garbage.
+
+use lwfc::codec::EntropyKind;
+use lwfc::util::prop::Gen;
+use lwfc::{Codec, CodecBuilder, CodecError, QuantSpec};
+
+const ELEMS: usize = 4096;
+
+fn spec() -> QuantSpec {
+    QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max: 2.0,
+        levels: 8,
+    }
+}
+
+/// A correlated frame sequence: frame 0 is activation-like, every later
+/// frame drifts a little from its predecessor — the temporal structure
+/// inter coding exists for.
+fn frames(seed: u64, n: usize, count: usize) -> Vec<Vec<f32>> {
+    let mut g = Gen::new("stream_session", seed);
+    let mut out = vec![g.activation_vec(n, 0.5)];
+    for _ in 1..count {
+        let noise = g.activation_vec(n, 0.5);
+        let prev = out.last().unwrap();
+        out.push(
+            prev.iter()
+                .zip(&noise)
+                .map(|(&x, &e)| x + 0.02 * (e - 0.25))
+                .collect(),
+        );
+    }
+    out
+}
+
+fn session(entropy: EntropyKind, threads: usize, tile: usize) -> Codec {
+    CodecBuilder::new(spec())
+        .entropy(entropy)
+        .threads(threads)
+        .tile_elems(tile)
+        .stream_session()
+        .build()
+}
+
+#[test]
+fn inter_output_is_bit_exact_across_backends_tiles_and_threads() {
+    let seq = frames(1, ELEMS, 3);
+    let q = spec().materialize();
+    for entropy in [EntropyKind::Cabac, EntropyKind::Rans] {
+        for tile in [64usize, 1024] {
+            let mut blobs = Vec::new();
+            for threads in [1usize, 4] {
+                let mut enc = session(entropy, threads, tile);
+                let per_run: Vec<Vec<u8>> =
+                    seq.iter().map(|f| enc.encode(f).bytes).collect();
+                assert!(
+                    enc.temporal_stats().unwrap().inter_tiles > 0,
+                    "{entropy} tile={tile} threads={threads}: inter never engaged"
+                );
+                blobs.push(per_run);
+            }
+            // Deterministic bytes: the rate decision compares byte counts,
+            // never scheduling.
+            assert_eq!(
+                blobs[0], blobs[1],
+                "{entropy} tile={tile}: bytes depend on thread count"
+            );
+            // A decode session reproduces exact fake-quant on every frame.
+            let mut dec = CodecBuilder::new(spec())
+                .threads(2)
+                .stream_session()
+                .build();
+            for (f, blob) in seq.iter().zip(&blobs[0]) {
+                assert_eq!(blob[4], 4, "session frames are container v4");
+                let d = dec.decode(blob).unwrap();
+                for (i, (&x, &y)) in f.iter().zip(&d.values).enumerate() {
+                    assert_eq!(
+                        y,
+                        q.fake_quant(x),
+                        "{entropy} tile={tile} element {i}: inter != intra output"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn correlated_frames_code_smaller_than_intra_only_with_identical_output() {
+    let seq = frames(2, ELEMS, 4);
+    let mut inter = session(EntropyKind::Cabac, 2, 512);
+    let mut intra = CodecBuilder::new(spec())
+        .threads(2)
+        .tile_elems(512)
+        .force_container()
+        .build();
+    let mut dec_inter = CodecBuilder::new(spec()).stream_session().build();
+    let mut dec_intra = CodecBuilder::new(spec()).build();
+    let (mut inter_total, mut intra_total) = (0usize, 0usize);
+    for f in &seq {
+        let a = inter.encode(f);
+        let b = intra.encode(f);
+        inter_total += a.bytes.len();
+        intra_total += b.bytes.len();
+        // Identical reconstructed outputs, frame by frame.
+        let va = dec_inter.decode(&a.bytes).unwrap().values;
+        let vb = dec_intra.decode(&b.bytes).unwrap().values;
+        assert_eq!(va, vb, "temporal and stateless reconstructions diverge");
+    }
+    let stats = inter.temporal_stats().unwrap();
+    assert!(stats.inter_tiles > 0 && stats.frames == seq.len() as u64);
+    assert!(stats.residual_bits_per_element() > 0.0);
+    assert!(
+        inter_total < intra_total,
+        "inter coding saved nothing: {inter_total} vs {intra_total} bytes"
+    );
+}
+
+#[test]
+fn dropped_frame_degrades_to_stale_reference_and_fill_then_heals() {
+    let seq = frames(3, ELEMS, 3);
+    let mut enc = session(EntropyKind::Cabac, 1, 512);
+    let blobs: Vec<Vec<u8>> = seq.iter().map(|f| enc.encode(f).bytes).collect();
+    let n_inter = |blob: &[u8]| {
+        lwfc::codec::SubstreamDirectory::read(blob)
+            .unwrap()
+            .0
+            .temporal
+            .unwrap()
+            .iter()
+            .filter(|r| r.mode == lwfc::codec::header::TileMode::Inter)
+            .count()
+    };
+    assert!(n_inter(&blobs[2]) > 0, "frame 2 never went inter");
+
+    // Strict session: frame 1 lost -> frame 2's inter tiles claim a
+    // generation the store does not hold; typed rejection.
+    let mut strict = CodecBuilder::new(spec()).stream_session().build();
+    strict.decode(&blobs[0]).unwrap();
+    let err = strict.decode(&blobs[2]).unwrap_err();
+    assert!(
+        matches!(err, CodecError::StaleReference { .. }),
+        "wrong variant: {err:?}"
+    );
+
+    // Tolerant session: same drop, but the frame is served — inter tiles
+    // fill with c_min and are reported as typed, tile-local failures.
+    let mut tol = CodecBuilder::new(spec())
+        .stream_session()
+        .tolerant(true)
+        .build();
+    tol.decode(&blobs[0]).unwrap();
+    let d = tol.decode(&blobs[2]).unwrap();
+    assert_eq!(d.info.failures.len(), n_inter(&blobs[2]));
+    for f in &d.info.failures {
+        assert!(matches!(f, CodecError::StaleReference { .. }), "wrong variant: {f:?}");
+        assert!(f.is_tile_local(), "stale references must be fillable");
+    }
+    let c_min = spec().c_min();
+    let tiles: Vec<_> = d.values.chunks(512).collect();
+    assert!(
+        tiles.iter().any(|t| t.iter().all(|&v| v == c_min)),
+        "no tile degraded to the intra-fill value"
+    );
+
+    // Heal: reset the encoder (the stream-reset path a reconnect takes) —
+    // the next frame is all-intra and the degraded session decodes it
+    // cleanly, references restored for the frame after.
+    enc.reset_stream();
+    let healed = enc.encode(&seq[0]);
+    assert_eq!(n_inter(&healed.bytes), 0, "post-reset frame must be intra");
+    let h = tol.decode(&healed.bytes).unwrap();
+    assert!(h.info.is_clean());
+    let next = enc.encode(&seq[1]);
+    assert!(n_inter(&next.bytes) > 0);
+    assert!(tol.decode(&next.bytes).unwrap().info.is_clean());
+}
+
+#[test]
+fn stateless_codecs_read_v4_intra_but_reject_v4_inter() {
+    let seq = frames(4, ELEMS, 2);
+    let mut enc = session(EntropyKind::Rans, 2, 512);
+    let f0 = enc.encode(&seq[0]);
+    let f1 = enc.encode(&seq[1]);
+    let q = spec().materialize();
+    // An all-intra v4 frame needs no state: a stateless codec decodes it.
+    let mut stateless = CodecBuilder::new(spec()).build();
+    let d = stateless.decode(&f0.bytes).unwrap();
+    assert_eq!(d.info.inter_substreams, 0);
+    for (&x, &y) in seq[0].iter().zip(&d.values) {
+        assert_eq!(y, q.fake_quant(x));
+    }
+    // An inter frame without a session is a typed `have: 0` rejection.
+    assert!(f1.bytes[4] == 4);
+    let err = stateless.decode(&f1.bytes).unwrap_err();
+    assert!(
+        matches!(err, CodecError::StaleReference { have: 0, .. }),
+        "wrong variant: {err:?}"
+    );
+}
