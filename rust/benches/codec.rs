@@ -122,6 +122,43 @@ fn main() {
         });
     }
 
+    // ---- content-addressed decode cache: cold miss vs warm hit ----------
+    // The serve-loop case: the same container decoded repeatedly (padding
+    // tiles, static backgrounds, unchanged frames at fleet scale). Cold
+    // measures the miss path's overhead (key hash + insert on top of the
+    // full entropy decode); warm measures the hit path (payload compare +
+    // memcpy, no entropy decode).
+    println!("-- decode cache: cold (miss+insert) vs warm (hit) (t4, N=4) --");
+    {
+        let cache = std::sync::Arc::new(lwfc::codec::DecodeCache::new(256 << 20));
+        let mut codec = CodecBuilder::new(uniform(4, 1.5))
+            .image_size(32)
+            .threads(4)
+            .force_container()
+            .expect_elements(big_n)
+            .decode_cache_shared(cache.clone())
+            .build();
+        let mut buf: Vec<f32> = Vec::new();
+        b.run("cached_decode/cold", Some(big_n as u64), || {
+            // Fresh cache per iteration: every tile misses and inserts.
+            cache.clear();
+            codec.decode_into(&encoded.bytes, &mut buf).unwrap();
+            black_box(buf.len())
+        });
+        cache.clear();
+        codec.decode_into(&encoded.bytes, &mut buf).unwrap(); // warm it
+        b.run("cached_decode/warm", Some(big_n as u64), || {
+            codec.decode_into(&encoded.bytes, &mut buf).unwrap();
+            black_box(buf.len())
+        });
+        let stats = cache.stats();
+        assert!(stats.hits > 0, "warm pass must hit");
+        println!(
+            "   cache: hits={} misses={} saved={}B",
+            stats.hits, stats.misses, stats.bytes_saved
+        );
+    }
+
     // ---- entropy backends head to head (256x56x56, N=4) -----------------
     println!("-- entropy backends (256x56x56, N=4, single stream) --");
     let mut bpe = std::collections::BTreeMap::new();
@@ -326,6 +363,9 @@ fn main() {
     if let Some(sx) = speedup("decode_alloc/n4", "decode_into_reuse/n4") {
         println!("decode_into buffer-reuse speedup vs fresh alloc: {sx:.2}x");
     }
+    if let Some(sx) = speedup("cached_decode/cold", "cached_decode/warm") {
+        println!("decode-cache warm-hit speedup vs cold miss: {sx:.2}x");
+    }
 
     // ---- machine-readable baseline --------------------------------------
     // Default to the committed baseline at the repo root (one level above
@@ -363,6 +403,12 @@ fn main() {
             (
                 "decode_into_reuse_speedup",
                 speedup("decode_alloc/n4", "decode_into_reuse/n4").map_or(Json::Null, num),
+            ),
+            // Content-addressed decode cache: warm-hit decode (payload
+            // compare + memcpy) over cold miss+insert decode.
+            (
+                "decode_cache_warm_speedup",
+                speedup("cached_decode/cold", "cached_decode/warm").map_or(Json::Null, num),
             ),
             (
                 "bits_per_element_cabac",

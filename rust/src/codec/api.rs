@@ -44,11 +44,14 @@
 
 #![deny(missing_docs)]
 
+use std::sync::Arc;
+
 use super::batch::{
     decode_container_into, encode_batched_designed_impl, encode_batched_designed_to_impl,
     encode_batched_impl, encode_batched_to_impl, encode_temporal_to_impl,
     max_elems_per_payload_byte, StreamState, MAX_PREALLOC_ELEMS,
 };
+use super::cache::{CacheCtx, DecodeCache};
 use super::design::{designer_for, DesignKind, QuantDesigner, QuantSpec};
 use super::entropy::EntropyKind;
 use super::error::CodecError;
@@ -152,6 +155,8 @@ pub struct CodecBuilder {
     expect_elements: Option<usize>,
     force_container: bool,
     stream_session: bool,
+    decode_cache: Option<Arc<DecodeCache>>,
+    cache_salt: u64,
 }
 
 impl CodecBuilder {
@@ -168,6 +173,8 @@ impl CodecBuilder {
             expect_elements: None,
             force_container: false,
             stream_session: false,
+            decode_cache: None,
+            cache_salt: 0,
         }
     }
 
@@ -278,6 +285,36 @@ impl CodecBuilder {
         self
     }
 
+    /// Attach a fresh content-addressed decode cache holding at most
+    /// `budget_bytes` of reconstructed **intra** container tiles (see
+    /// [`DecodeCache`]): a tile whose payload bytes, quant spec, backend,
+    /// and element count match a cached entry skips entropy decode
+    /// entirely and memcpys the cached reconstruction. Inter (container
+    /// v4) tiles decode against per-session reference state and always
+    /// bypass the cache; the reconstruction is bit-identical either way.
+    /// Per-decode hit/miss counters surface in [`DecodeInfo`].
+    pub fn decode_cache(mut self, budget_bytes: usize) -> Self {
+        self.decode_cache = Some(Arc::new(DecodeCache::new(budget_bytes)));
+        self
+    }
+
+    /// Attach an existing [`DecodeCache`], shared with other sessions
+    /// (the cloud daemon shares one cache across connections). Combine
+    /// with [`CodecBuilder::cache_salt`] to partition it per tenant.
+    pub fn decode_cache_shared(mut self, cache: Arc<DecodeCache>) -> Self {
+        self.decode_cache = Some(cache);
+        self
+    }
+
+    /// Tenant salt mixed into every decode-cache key (default 0). Two
+    /// sessions sharing one cache with different salts can never observe
+    /// each other's entries, so co-tenants cannot probe the cache for
+    /// another tenant's content. No effect without a decode cache.
+    pub fn cache_salt(mut self, salt: u64) -> Self {
+        self.cache_salt = salt;
+        self
+    }
+
     /// Freeze the configuration into a reusable [`Codec`] session.
     ///
     /// # Panics
@@ -305,6 +342,8 @@ impl CodecBuilder {
             enc_state: self.stream_session.then(StreamState::default),
             dec_state: self.stream_session.then(StreamState::default),
             temporal: TemporalStats::default(),
+            decode_cache: self.decode_cache,
+            cache_salt: self.cache_salt,
         }
     }
 }
@@ -334,6 +373,10 @@ pub struct Codec {
     /// Decode-side temporal references (`Some` iff a stream session).
     dec_state: Option<StreamState>,
     temporal: TemporalStats,
+    /// Content-addressed cache of decoded intra tiles (`None` = off).
+    decode_cache: Option<Arc<DecodeCache>>,
+    /// Tenant salt mixed into every cache key.
+    cache_salt: u64,
 }
 
 /// An encoded tensor: the wire bytes plus accounting.
@@ -413,6 +456,17 @@ pub struct DecodeInfo {
     /// `matches!(f, CodecError::ChecksumMismatch { .. })` — not by
     /// message text.
     pub failures: Vec<CodecError>,
+    /// Tiles of this decode answered from the content-addressed decode
+    /// cache (entropy decode skipped; 0 without a cache).
+    pub cache_hits: u64,
+    /// Tiles of this decode that consulted the cache and missed (inter
+    /// tiles bypass the cache and count in neither column).
+    pub cache_misses: u64,
+    /// Compressed payload bytes whose entropy decode the cache skipped
+    /// in this decode.
+    pub cache_bytes_saved: u64,
+    /// Cache entries evicted while inserting this decode's tiles.
+    pub cache_evictions: u64,
 }
 
 impl DecodeInfo {
@@ -663,14 +717,20 @@ impl Codec {
                 // `expect_elements` is enforced inside the engine, after
                 // directory validation and before anything decodes — the
                 // hot path parses the directory exactly once.
+                let cache_ctx = self
+                    .decode_cache
+                    .as_deref()
+                    .map(|c| CacheCtx::new(c, self.cache_salt));
                 let d = decode_container_into(
                     bytes,
                     &self.pool,
                     self.tolerant,
                     self.expect_elements,
                     self.dec_state.as_mut(),
+                    cache_ctx.as_ref(),
                     out,
                 )?;
+                let cache = cache_ctx.map(|c| c.counts()).unwrap_or_default();
                 // Engine invariant: `d.header` is always `Some` on a
                 // strict `Ok`; `None` only for a tolerant decode that
                 // salvaged nothing.
@@ -682,6 +742,10 @@ impl Codec {
                     inter_substreams: d.inter_substreams,
                     failures: d.failures,
                     header: d.header,
+                    cache_hits: cache.hits,
+                    cache_misses: cache.misses,
+                    cache_bytes_saved: cache.bytes_saved,
+                    cache_evictions: cache.evictions,
                 })
             }
             StreamFormat::SingleStream => {
@@ -717,6 +781,12 @@ impl Codec {
                     inter_substreams: 0,
                     failures: Vec::new(),
                     header: Some(header),
+                    // Only container tiles are content-addressed; the
+                    // legacy single stream bypasses the cache.
+                    cache_hits: 0,
+                    cache_misses: 0,
+                    cache_bytes_saved: 0,
+                    cache_evictions: 0,
                 })
             }
         }
@@ -972,6 +1042,37 @@ mod tests {
         let after = enc.temporal_stats().unwrap();
         assert_eq!(after.inter_tiles, before.inter_tiles, "all-intra frame");
         assert_eq!(after.frames, before.frames + 1);
+    }
+
+    #[test]
+    fn decode_cache_hits_on_repeats_and_stays_bit_exact() {
+        let mut g = Gen::new("api_cache", 7);
+        let xs = g.activation_vec(8_192, 0.5);
+        let mut plain = CodecBuilder::new(spec(4, 2.0))
+            .threads(2)
+            .tile_elems(1024)
+            .build();
+        let encoded = plain.encode(&xs);
+        let reference = plain.decode(&encoded.bytes).unwrap().values;
+
+        let mut cached = CodecBuilder::new(spec(4, 2.0))
+            .threads(2)
+            .tile_elems(1024)
+            .decode_cache(1 << 20)
+            .build();
+        let cold = cached.decode(&encoded.bytes).unwrap();
+        assert_eq!(cold.values, reference);
+        assert_eq!(cold.info.cache_hits, 0);
+        assert_eq!(cold.info.cache_misses, cold.info.substreams as u64);
+        let warm = cached.decode(&encoded.bytes).unwrap();
+        assert_eq!(warm.values, reference, "hit path must be bit-exact");
+        assert_eq!(warm.info.cache_hits, warm.info.substreams as u64);
+        assert_eq!(warm.info.cache_misses, 0);
+        assert!(warm.info.cache_bytes_saved > 0);
+
+        // A session without the cache reports zeroed counters.
+        let again = plain.decode(&encoded.bytes).unwrap();
+        assert_eq!(again.info.cache_hits + again.info.cache_misses, 0);
     }
 
     #[test]

@@ -44,6 +44,7 @@
 //! The public entry point is the [`crate::codec::api::Codec`] façade over
 //! the same `pub(crate)` engines.
 
+use super::cache::CacheCtx;
 use super::design::{design_or, QuantDesigner, QuantSpec};
 use super::entropy::backend_for;
 use super::error::CodecError;
@@ -479,6 +480,17 @@ fn spec_of(dir: &SubstreamDirectory, i: usize) -> Option<&QuantSpec> {
     dir.specs.as_ref().map(|s| &s[i])
 }
 
+/// Serialized spec record of tile `i` (empty below v3) — the cache-key
+/// component that makes a v3 re-labelled quantizer a distinct entry even
+/// when the payload bytes repeat.
+fn spec_record_bytes(dir: &SubstreamDirectory, i: usize) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    if let Some(spec) = spec_of(dir, i) {
+        spec.write(&mut bytes);
+    }
+    bytes
+}
+
 /// Shared per-tile validation: checksum, per-backend plausibility
 /// re-check (against the backend the tile's *own* header names — the
 /// bits that decide which decoder runs), run before any decode.
@@ -616,21 +628,63 @@ fn decode_tile_inter(
 
 /// Decode one tile into its disjoint slot of the shared output buffer
 /// (`out.len() == entry.elements`) — the zero-copy path.
+///
+/// When a decode cache is present, **intra** tiles consult it after the
+/// checksum/plausibility validation: a hit copies the cached f32
+/// reconstruction into `out` and skips the entropy decoder entirely; a
+/// miss decodes normally and inserts only after `check_spec_header`
+/// passes, so a tile that fails any validation is never cached. Inter
+/// tiles always bypass — their output depends on the session's reference
+/// state, not just the payload bytes, so content addressing is unsound
+/// for them.
 fn decode_tile_into(
     bytes: &[u8],
     dir: &SubstreamDirectory,
     i: usize,
     range: (usize, usize),
     refs: &[TileRef],
+    cache: Option<&CacheCtx>,
     out: &mut [f32],
 ) -> Result<Header, CodecError> {
     validate_tile(bytes, &dir.entries[i], range, i)?;
+    let payload = &bytes[range.0..range.1];
     let header = match tile_mode(dir, i) {
         TileMode::Intra => {
-            decode_stream_into(&bytes[range.0..range.1], out).map_err(|e| e.with_tile(i))?
+            if let Some(ctx) = cache {
+                let spec_bytes = spec_record_bytes(dir, i);
+                let entry = &dir.entries[i];
+                if let Some(header) = ctx.lookup(
+                    entry.checksum,
+                    dir.entropy.id(),
+                    entry.elements,
+                    &spec_bytes,
+                    payload,
+                    out,
+                ) {
+                    // The cached header was validated against this exact
+                    // (payload, spec) pair at insert time; re-check so a
+                    // spec/header divergence can never ride in via the
+                    // cache even across code changes.
+                    check_spec_header(spec_of(dir, i), &header, i)?;
+                    return Ok(header);
+                }
+                let header = decode_stream_into(payload, out).map_err(|e| e.with_tile(i))?;
+                check_spec_header(spec_of(dir, i), &header, i)?;
+                ctx.insert(
+                    entry.checksum,
+                    dir.entropy.id(),
+                    entry.elements,
+                    &spec_bytes,
+                    payload,
+                    &header,
+                    out,
+                );
+                return Ok(header);
+            }
+            decode_stream_into(payload, out).map_err(|e| e.with_tile(i))?
         }
         TileMode::Inter => decode_tile_inter(
-            &bytes[range.0..range.1],
+            payload,
             &dir.temporal.as_ref().expect("inter mode implies records")[i],
             refs,
             i,
@@ -725,6 +779,7 @@ pub(crate) fn decode_container_into(
     tolerant: bool,
     expect_elements: Option<usize>,
     mut state: Option<&mut StreamState>,
+    cache: Option<&CacheCtx>,
     out: &mut Vec<f32>,
 ) -> Result<ContainerDecode, CodecError> {
     let base = out.len();
@@ -782,13 +837,16 @@ pub(crate) fn decode_container_into(
             rest = tail;
         }
         pool.map_indexed_mut(&mut slices, |i, slot| {
-            decode_tile_into(bytes, &dir, i, ranges[i], refs, slot)
+            decode_tile_into(bytes, &dir, i, ranges[i], refs, cache, slot)
         })
     } else {
         // A claimed size past the pre-allocation cap (only reachable for
         // implausibly large yet bound-satisfying containers): decode into
         // owned per-tile buffers and append, so the big allocation only
-        // happens if the tiles really decode.
+        // happens if the tiles really decode. The decode cache does not
+        // participate here — caching multi-gigabyte outliers would evict
+        // the whole working set for tiles that by construction never
+        // repeat at serving rates.
         let tiles: Vec<Result<(Vec<f32>, Header), CodecError>> =
             pool.map_indexed(n, |i| decode_tile_owned(bytes, &dir, i, ranges[i], refs));
         let mut results = Vec::with_capacity(n);
@@ -931,7 +989,7 @@ pub(crate) fn decode_batched_impl(
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, Header), CodecError> {
     let mut out = Vec::new();
-    let info = decode_container_into(bytes, pool, false, None, None, &mut out)?;
+    let info = decode_container_into(bytes, pool, false, None, None, None, &mut out)?;
     let header = info.header.expect("strict container decode always yields a header");
     Ok((out, header))
 }
@@ -942,7 +1000,7 @@ pub(crate) fn decode_batched_tolerant_impl(
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, BatchReport), CodecError> {
     let mut out = Vec::new();
-    let info = decode_container_into(bytes, pool, true, None, None, &mut out)?;
+    let info = decode_container_into(bytes, pool, true, None, None, None, &mut out)?;
     let report = BatchReport {
         substreams: info.substreams,
         corrupted: info.failures.iter().filter_map(CodecError::tile).collect(),
@@ -963,7 +1021,7 @@ pub(crate) fn decode_any_impl(
         let mut out = Vec::new();
         // The expectation is enforced inside the engine, after directory
         // validation and before anything decodes — one directory parse.
-        let info = decode_container_into(bytes, pool, false, Some(elements), None, &mut out)?;
+        let info = decode_container_into(bytes, pool, false, Some(elements), None, None, &mut out)?;
         let header = info.header.expect("strict container decode always yields a header");
         Ok((out, header))
     } else {
@@ -1335,7 +1393,8 @@ mod tests {
 
         let mut buf = vec![7.0f32; 3];
         let info =
-            decode_container_into(&batched.bytes, &pool, false, None, None, &mut buf).unwrap();
+            decode_container_into(&batched.bytes, &pool, false, None, None, None, &mut buf)
+                .unwrap();
         assert_eq!(info.elements, xs.len());
         assert_eq!(info.substreams, 6);
         assert_eq!(info.designed_tiles, 0);
@@ -1349,7 +1408,7 @@ mod tests {
         let last = bad.len() - 1;
         bad[last] ^= 0x11;
         let mut buf2 = vec![1.0f32; 5];
-        assert!(decode_container_into(&bad, &pool, false, None, None, &mut buf2).is_err());
+        assert!(decode_container_into(&bad, &pool, false, None, None, None, &mut buf2).is_err());
         assert_eq!(buf2, vec![1.0f32; 5]);
     }
 
@@ -1420,8 +1479,16 @@ mod tests {
             }
             let mut out = Vec::new();
             let info =
-                decode_container_into(bytes, &pool, false, None, Some(&mut dec_state), &mut out)
-                    .unwrap();
+                decode_container_into(
+                    bytes,
+                    &pool,
+                    false,
+                    None,
+                    Some(&mut dec_state),
+                    None,
+                    &mut out,
+                )
+                .unwrap();
             assert_eq!(info.inter_substreams, stats[k].inter_tiles);
             // Bit-exact parity with element-wise fake-quant — identical
             // to what an intra decode of the same frame yields.
@@ -1453,8 +1520,16 @@ mod tests {
         // reference generation 2, which the decoder never saw.
         let mut strict = StreamState::default();
         let mut out = Vec::new();
-        decode_container_into(&containers[0], &pool, false, None, Some(&mut strict), &mut out)
-            .unwrap();
+        decode_container_into(
+            &containers[0],
+            &pool,
+            false,
+            None,
+            Some(&mut strict),
+            None,
+            &mut out,
+        )
+        .unwrap();
         out.clear();
         let err = decode_container_into(
             &containers[2],
@@ -1462,6 +1537,7 @@ mod tests {
             false,
             None,
             Some(&mut strict),
+            None,
             &mut out,
         )
         .unwrap_err();
@@ -1475,8 +1551,16 @@ mod tests {
         // intra ones bit-exactly — degraded, never corrupt.
         let mut tolerant = StreamState::default();
         let mut out = Vec::new();
-        decode_container_into(&containers[0], &pool, true, None, Some(&mut tolerant), &mut out)
-            .unwrap();
+        decode_container_into(
+            &containers[0],
+            &pool,
+            true,
+            None,
+            Some(&mut tolerant),
+            None,
+            &mut out,
+        )
+        .unwrap();
         out.clear();
         let info = decode_container_into(
             &containers[2],
@@ -1484,6 +1568,7 @@ mod tests {
             true,
             None,
             Some(&mut tolerant),
+            None,
             &mut out,
         )
         .unwrap();
@@ -1531,6 +1616,7 @@ mod tests {
             false,
             None,
             Some(&mut fresh),
+            None,
             &mut out,
         )
         .unwrap_err();
@@ -1567,7 +1653,8 @@ mod tests {
         let mut dec = StreamState::default();
         for (k, bytes) in containers.iter().enumerate() {
             let mut out = Vec::new();
-            decode_container_into(bytes, &pool, false, None, Some(&mut dec), &mut out).unwrap();
+            decode_container_into(bytes, &pool, false, None, Some(&mut dec), None, &mut out)
+                .unwrap();
             for (i, (&x, &y)) in frames[k].iter().zip(&out).enumerate() {
                 assert_eq!(y, d.quantizer.fake_quant(x), "frame {k} element {i}");
             }

@@ -1,0 +1,578 @@
+//! Content-addressed decode cache for the serve hot path.
+//!
+//! At fleet scale, intermediate-feature tiles repeat *across* requests:
+//! all-zero ReLU tiles, padding tiles, static backgrounds, and unchanged
+//! frames produce byte-identical substreams over and over. Tiles already
+//! carry FNV-1a checksums in the container directory, so a repeated tile
+//! can skip entropy decode entirely and become a memcpy of its cached
+//! f32 reconstruction.
+//!
+//! **Key derivation.** An entry is addressed by (per-tenant salt, tile
+//! payload FNV-1a checksum, payload length, serialized quant-spec record
+//! bytes, entropy backend id, element count). The salt participates in
+//! both the hash *and* equality, so two tenants with different salts can
+//! never observe each other's entries — a tenant cannot probe the cache
+//! for another tenant's content.
+//!
+//! **Collision guard.** A 32-bit FNV checksum is not collision-free, and
+//! a wrong-tile reconstruction would silently corrupt the tensor, so a
+//! hit is only trusted after the candidate entry's stored payload bytes
+//! compare equal to the incoming payload. A colliding tile is a miss,
+//! never a wrong answer.
+//!
+//! **Eviction.** The cache is sharded (one mutex per shard, shard chosen
+//! by key hash) and byte-budgeted: each shard holds `budget / shards`
+//! bytes and evicts least-recently-used entries (per-shard access ticks)
+//! until it fits. An entry larger than a whole shard's budget is never
+//! inserted.
+//!
+//! Only **intra** container tiles participate: a v4 inter tile decodes
+//! against per-connection reference state, so its payload bytes do not
+//! determine its reconstruction. Tiles that fail validation (checksum,
+//! header, spec cross-check) never reach the insert path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::header::Header;
+
+/// Fixed bookkeeping charge per entry (map slot, boxes, header), on top
+/// of the payload + spec + reconstruction bytes it retains.
+const ENTRY_OVERHEAD_BYTES: usize = 96;
+/// Shards are only worth their locks above ~1 MiB each; small budgets
+/// (tests, tight deployments) collapse to one shard so the byte budget
+/// is enforced exactly.
+const MIN_SHARD_BYTES: usize = 1 << 20;
+const MAX_SHARDS: usize = 16;
+
+/// Lifetime counters for a [`DecodeCache`] (all sessions and tenants
+/// sharing it). Per-decode deltas are reported through `DecodeInfo`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Tile decodes answered from the cache (entropy decode skipped).
+    pub hits: u64,
+    /// Tile decodes that went through the entropy decoder.
+    pub misses: u64,
+    /// Compressed payload bytes whose entropy decode was skipped.
+    pub bytes_saved: u64,
+    /// Entries evicted to keep shards inside their byte budget.
+    pub evictions: u64,
+}
+
+/// Everything that addresses one tile in the cache, borrowed from the
+/// container being decoded. `spec` is the tile's serialized quant-spec
+/// record (empty for spec-less containers).
+pub(crate) struct TileQuery<'a> {
+    pub salt: u64,
+    pub checksum: u32,
+    pub backend: u8,
+    pub elements: u32,
+    pub spec: &'a [u8],
+    pub payload: &'a [u8],
+}
+
+impl TileQuery<'_> {
+    /// 64-bit FNV-1a over every key component (salt first, so per-tenant
+    /// entries land in uncorrelated buckets).
+    fn key_hash(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        eat(&self.salt.to_le_bytes());
+        eat(&self.checksum.to_le_bytes());
+        eat(&(self.payload.len() as u64).to_le_bytes());
+        eat(&[self.backend]);
+        eat(&self.elements.to_le_bytes());
+        eat(self.spec);
+        h
+    }
+}
+
+struct Entry {
+    salt: u64,
+    backend: u8,
+    elements: u32,
+    spec: Box<[u8]>,
+    /// Full payload copy — the collision guard compared on every hit.
+    payload: Box<[u8]>,
+    header: Header,
+    recon: Box<[f32]>,
+    /// Last-access tick (per shard) for LRU eviction.
+    tick: u64,
+}
+
+impl Entry {
+    fn cost(&self) -> usize {
+        ENTRY_OVERHEAD_BYTES
+            + self.payload.len()
+            + self.spec.len()
+            + self.recon.len() * 4
+            + self.header.recon.as_ref().map_or(0, |r| r.len() * 4)
+    }
+
+    /// Full-identity match: every key component, then the payload bytes
+    /// themselves (checksum and length are implied by the byte compare,
+    /// but they routed us to this bucket in the first place).
+    fn matches(&self, q: &TileQuery) -> bool {
+        self.salt == q.salt
+            && self.backend == q.backend
+            && self.elements == q.elements
+            && self.spec.as_ref() == q.spec
+            && self.payload.as_ref() == q.payload
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    buckets: HashMap<u64, Vec<Entry>>,
+    bytes: usize,
+    tick: u64,
+}
+
+impl Shard {
+    fn evict_to(&mut self, budget: usize) -> u64 {
+        let mut evicted = 0u64;
+        while self.bytes > budget {
+            let oldest = self
+                .buckets
+                .iter()
+                .flat_map(|(&k, v)| v.iter().enumerate().map(move |(i, e)| (e.tick, k, i)))
+                .min_by_key(|&(tick, _, _)| tick);
+            let Some((_, key, idx)) = oldest else { break };
+            let bucket = self.buckets.get_mut(&key).expect("bucket just seen");
+            let gone = bucket.swap_remove(idx);
+            self.bytes -= gone.cost();
+            if bucket.is_empty() {
+                self.buckets.remove(&key);
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// A sharded, byte-budgeted, content-addressed LRU of decoded intra-tile
+/// reconstructions, shared across codec sessions (and daemon
+/// connections) via `Arc`. See the module docs for key derivation, the
+/// collision guard, tenant salting, and eviction.
+pub struct DecodeCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_saved: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for DecodeCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecodeCache")
+            .field("budget_bytes", &self.budget_bytes())
+            .field("shards", &self.shards.len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl DecodeCache {
+    /// A cache holding at most `budget_bytes` of retained payloads +
+    /// reconstructions, split across up to 16 shards (small budgets get
+    /// one shard, so the budget is enforced exactly).
+    pub fn new(budget_bytes: usize) -> Self {
+        let shards = (budget_bytes / MIN_SHARD_BYTES).clamp(1, MAX_SHARDS);
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: budget_bytes / shards,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_saved: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured byte budget (total across shards, after rounding
+    /// down to a per-shard budget).
+    pub fn budget_bytes(&self) -> usize {
+        self.shard_budget * self.shards.len()
+    }
+
+    /// Bytes currently retained (payloads, spec records, reconstructions,
+    /// per-entry overhead), summed over shards.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| self.lock(s).bytes)
+            .sum()
+    }
+
+    /// Number of cached tile reconstructions, summed over shards.
+    pub fn entries(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| self.lock(s).buckets.values().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Lifetime hit/miss/bytes-saved/eviction counters across every
+    /// session and tenant sharing this cache.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_saved: self.bytes_saved.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every cached entry (counters are lifetime stats and keep
+    /// accumulating). Mainly for benchmarks and tests that want to
+    /// re-measure the cold path on a warm cache object.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut s = self.lock(shard);
+            s.buckets.clear();
+            s.bytes = 0;
+        }
+    }
+
+    fn lock<'a>(&self, shard: &'a Mutex<Shard>) -> std::sync::MutexGuard<'a, Shard> {
+        // A panic while holding the lock can only leave a stale-but-valid
+        // shard (entries are inserted whole); poisoning is not data loss.
+        shard.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn shard_for(&self, hash: u64) -> &Mutex<Shard> {
+        &self.shards[(hash % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up `q`; on a hit copy the cached reconstruction into `out`
+    /// and return the cached stream header. A checksum collision (same
+    /// key, different payload bytes) is a miss by construction.
+    pub(crate) fn lookup(&self, q: &TileQuery, out: &mut [f32]) -> Option<Header> {
+        let hash = q.key_hash();
+        let mut shard = self.lock(self.shard_for(hash));
+        shard.tick += 1;
+        let tick = shard.tick;
+        let hit = shard
+            .buckets
+            .get_mut(&hash)
+            .and_then(|bucket| bucket.iter_mut().find(|e| e.matches(q)))
+            .and_then(|e| {
+                // `elements` in the key makes a length mismatch
+                // impossible; keep the check so a bug degrades to a miss,
+                // never a partial copy.
+                if e.recon.len() == out.len() {
+                    e.tick = tick;
+                    out.copy_from_slice(&e.recon);
+                    Some(e.header.clone())
+                } else {
+                    None
+                }
+            });
+        drop(shard);
+        match hit {
+            Some(header) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_saved
+                    .fetch_add(q.payload.len() as u64, Ordering::Relaxed);
+                Some(header)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly decoded, fully validated tile. Returns how many
+    /// entries were evicted to make room. Entries bigger than a whole
+    /// shard's budget are never inserted.
+    pub(crate) fn insert(&self, q: &TileQuery, header: &Header, recon: &[f32]) -> u64 {
+        let entry = Entry {
+            salt: q.salt,
+            backend: q.backend,
+            elements: q.elements,
+            spec: q.spec.into(),
+            payload: q.payload.into(),
+            header: header.clone(),
+            recon: recon.into(),
+            tick: 0,
+        };
+        let cost = entry.cost();
+        if cost > self.shard_budget {
+            return 0;
+        }
+        let hash = q.key_hash();
+        let mut shard = self.lock(self.shard_for(hash));
+        shard.tick += 1;
+        let tick = shard.tick;
+        {
+            let bucket = shard.buckets.entry(hash).or_default();
+            if bucket.iter().any(|e| e.matches(q)) {
+                return 0; // another thread decoded the same tile first
+            }
+            bucket.push(Entry { tick, ..entry });
+        }
+        shard.bytes += cost;
+        let evicted = shard.evict_to(self.shard_budget);
+        drop(shard);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+}
+
+/// Per-decode cache context: the cache + this session's tenant salt,
+/// plus counters for *this* decode call (atomics because container
+/// tiles decode in parallel). The session reads the counts into
+/// `DecodeInfo` after the container finishes.
+pub(crate) struct CacheCtx<'a> {
+    cache: &'a DecodeCache,
+    salt: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_saved: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// One decode call's cache counter deltas (what `DecodeInfo` reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct CacheCounts {
+    pub hits: u64,
+    pub misses: u64,
+    pub bytes_saved: u64,
+    pub evictions: u64,
+}
+
+impl<'a> CacheCtx<'a> {
+    pub(crate) fn new(cache: &'a DecodeCache, salt: u64) -> Self {
+        Self {
+            cache,
+            salt,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_saved: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn query<'q>(
+        &self,
+        checksum: u32,
+        backend: u8,
+        elements: u32,
+        spec: &'q [u8],
+        payload: &'q [u8],
+    ) -> TileQuery<'q> {
+        TileQuery {
+            salt: self.salt,
+            checksum,
+            backend,
+            elements,
+            spec,
+            payload,
+        }
+    }
+
+    /// Per-tile hit path; see [`DecodeCache::lookup`].
+    pub(crate) fn lookup(
+        &self,
+        checksum: u32,
+        backend: u8,
+        elements: u32,
+        spec: &[u8],
+        payload: &[u8],
+        out: &mut [f32],
+    ) -> Option<Header> {
+        let q = self.query(checksum, backend, elements, spec, payload);
+        match self.cache.lookup(&q, out) {
+            Some(header) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_saved
+                    .fetch_add(payload.len() as u64, Ordering::Relaxed);
+                Some(header)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Per-tile insert path; see [`DecodeCache::insert`].
+    pub(crate) fn insert(
+        &self,
+        checksum: u32,
+        backend: u8,
+        elements: u32,
+        spec: &[u8],
+        payload: &[u8],
+        header: &Header,
+        recon: &[f32],
+    ) {
+        let q = self.query(checksum, backend, elements, spec, payload);
+        let evicted = self.cache.insert(&q, header, recon);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// This decode call's counter deltas.
+    pub(crate) fn counts(&self) -> CacheCounts {
+        CacheCounts {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_saved: self.bytes_saved.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::entropy::EntropyKind;
+    use crate::codec::header::{QuantKind, StreamKind};
+
+    fn header() -> Header {
+        Header {
+            kind: StreamKind::Classification,
+            quant: QuantKind::Uniform,
+            entropy: EntropyKind::Cabac,
+            levels: 4,
+            c_min: 0.0,
+            c_max: 1.5,
+            img_w: 32,
+            img_h: 32,
+            det: None,
+            recon: None,
+        }
+    }
+
+    fn query<'a>(salt: u64, payload: &'a [u8], spec: &'a [u8]) -> TileQuery<'a> {
+        TileQuery {
+            salt,
+            checksum: crate::codec::header::substream_checksum(payload),
+            backend: 0,
+            elements: 4,
+            spec,
+            payload,
+        }
+    }
+
+    #[test]
+    fn roundtrip_hit_copies_recon_and_header() {
+        let cache = DecodeCache::new(1 << 16);
+        let recon = [0.5f32, 1.0, 0.0, 1.5];
+        cache.insert(&query(7, b"payload", b"spec"), &header(), &recon);
+        let mut out = [0f32; 4];
+        let h = cache
+            .lookup(&query(7, b"payload", b"spec"), &mut out)
+            .expect("hit");
+        assert_eq!(out, recon);
+        assert_eq!(h, header());
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 0));
+        assert_eq!(stats.bytes_saved, b"payload".len() as u64);
+    }
+
+    #[test]
+    fn collision_with_different_payload_is_a_miss() {
+        // Force a "collision": identical key fields (including the lied-
+        // about checksum) but different payload bytes. The byte compare
+        // must reject the entry rather than return the wrong tile.
+        let cache = DecodeCache::new(1 << 16);
+        let recon = [1.0f32; 4];
+        let mut q1 = query(0, b"aaaa", b"");
+        q1.checksum = 0xDEAD_BEEF;
+        cache.insert(&q1, &header(), &recon);
+        let mut q2 = query(0, b"bbbb", b"");
+        q2.checksum = 0xDEAD_BEEF;
+        let mut out = [0f32; 4];
+        assert!(cache.lookup(&q2, &mut out).is_none());
+        assert!(cache.lookup(&q1, &mut out).is_some());
+    }
+
+    #[test]
+    fn different_salt_spec_backend_or_elements_never_hits() {
+        let cache = DecodeCache::new(1 << 16);
+        cache.insert(&query(1, b"tile", b"spec"), &header(), &[1.0; 4]);
+        let mut out = [0f32; 4];
+        assert!(cache.lookup(&query(2, b"tile", b"spec"), &mut out).is_none());
+        assert!(cache.lookup(&query(1, b"tile", b"ceps"), &mut out).is_none());
+        let mut q = query(1, b"tile", b"spec");
+        q.backend = 1;
+        assert!(cache.lookup(&q, &mut out).is_none());
+        let mut q = query(1, b"tile", b"spec");
+        q.elements = 8;
+        assert!(cache.lookup(&q, &mut out).is_none());
+        assert!(cache.lookup(&query(1, b"tile", b"spec"), &mut out).is_some());
+    }
+
+    #[test]
+    fn eviction_respects_byte_budget_and_is_lru() {
+        // Each entry costs overhead + 8 payload + 16 recon = 120 bytes;
+        // a 400-byte budget holds three.
+        let cache = DecodeCache::new(400);
+        assert_eq!(cache.budget_bytes(), 400);
+        let payloads: Vec<Vec<u8>> = (0..4u8).map(|i| vec![i; 8]).collect();
+        for p in &payloads[..3] {
+            cache.insert(&query(0, p, b""), &header(), &[0.0; 4]);
+        }
+        assert_eq!(cache.entries(), 3);
+        assert!(cache.resident_bytes() <= 400);
+        // Touch entry 0 so entry 1 is the LRU victim.
+        let mut out = [0f32; 4];
+        assert!(cache.lookup(&query(0, &payloads[0], b""), &mut out).is_some());
+        cache.insert(&query(0, &payloads[3], b""), &header(), &[0.0; 4]);
+        assert!(cache.resident_bytes() <= 400);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.lookup(&query(0, &payloads[1], b""), &mut out).is_none());
+        for p in [&payloads[0], &payloads[2], &payloads[3]] {
+            assert!(cache.lookup(&query(0, p, b""), &mut out).is_some(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_entries_and_zero_budget_never_insert() {
+        let tiny = DecodeCache::new(64); // below one entry's overhead
+        tiny.insert(&query(0, b"x", b""), &header(), &[0.0; 4]);
+        assert_eq!(tiny.entries(), 0);
+        let zero = DecodeCache::new(0);
+        zero.insert(&query(0, b"x", b""), &header(), &[0.0; 4]);
+        assert_eq!(zero.entries(), 0);
+        let mut out = [0f32; 4];
+        assert!(zero.lookup(&query(0, b"x", b""), &mut out).is_none());
+    }
+
+    #[test]
+    fn duplicate_insert_is_idempotent() {
+        let cache = DecodeCache::new(1 << 16);
+        for _ in 0..3 {
+            cache.insert(&query(0, b"same", b""), &header(), &[0.0; 4]);
+        }
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.stats().evictions, 0);
+        cache.clear();
+        assert_eq!(cache.entries(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn ctx_counts_are_per_call_while_cache_stats_accumulate() {
+        let cache = DecodeCache::new(1 << 16);
+        let ctx = CacheCtx::new(&cache, 42);
+        let mut out = [0f32; 4];
+        assert!(ctx.lookup(1, 0, 4, b"", b"pay", &mut out).is_none());
+        ctx.insert(1, 0, 4, b"", b"pay", &header(), &[0.0; 4]);
+        assert!(ctx.lookup(1, 0, 4, b"", b"pay", &mut out).is_some());
+        let c = ctx.counts();
+        assert_eq!((c.hits, c.misses), (1, 1));
+        let ctx2 = CacheCtx::new(&cache, 42);
+        assert_eq!(ctx2.counts().hits, 0);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+}

@@ -25,6 +25,7 @@ pub mod batch;
 pub mod binarize;
 pub mod bitstream;
 pub mod cabac;
+pub mod cache;
 pub mod design;
 pub mod ecq;
 pub mod entropy;
@@ -37,6 +38,7 @@ pub use api::{
     sniff, Codec, CodecBuilder, DecodeInfo, Decoded, EncodeInfo, Encoded, FormatInfo, StreamFormat,
 };
 pub use batch::{BatchReport, BatchedStream, DEFAULT_TILE_ELEMS, MAX_TILE_ELEMS};
+pub use cache::{CacheStats, DecodeCache};
 pub use design::{
     design_or, designer_for, ClipGranularity, DesignKind, EcqDesigner, ModelOptimalDesigner,
     QuantDesigner, QuantSpec, StaticDesigner,

@@ -1,13 +1,14 @@
 //! Cloud worker: decodes compressed split-layer tensors, batches them,
 //! runs the cloud half via PJRT, and produces per-request outcomes.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::net::{WireItem, WireOutcome};
 use super::protocol::{CompressedItem, Outcome, TaskKind};
-use crate::codec::{Codec, CodecBuilder, CodecError, EntropyKind, QuantSpec};
+use crate::codec::{Codec, CodecBuilder, CodecError, DecodeCache, EntropyKind, QuantSpec};
 use crate::data;
 use crate::eval::{decode_grid, Detection};
 use crate::runtime::{Executable, Manifest, Runtime};
@@ -24,6 +25,14 @@ pub struct CloudConfig {
     /// Codec threads for parallel substream decode (batched containers
     /// decode tile-parallel; legacy single streams ignore this).
     pub threads: usize,
+    /// Content-addressed decode cache shared across workers (`None`
+    /// disables caching). Repeated intra tile payloads skip the entropy
+    /// decoder and memcpy their cached reconstruction instead.
+    pub decode_cache: Option<Arc<DecodeCache>>,
+    /// Per-tenant cache key salt (daemon mode derives it from the
+    /// connection identity so tenants sharing one cache cannot probe
+    /// each other's entries; in-process serving uses one tenant, 0).
+    pub cache_salt: u64,
 }
 
 /// Timing breakdown accumulated by the cloud worker.
@@ -47,6 +56,15 @@ pub struct CloudTimes {
     /// re-sent after a reconnect) degrade to the clip minimum rather
     /// than failing the connection.
     pub filled_tiles: u64,
+    /// Decode-cache tile hits (entropy decode skipped, reconstruction
+    /// copied from cache). Zero when no cache is configured.
+    pub cache_hits: u64,
+    /// Decode-cache tile misses (decoded normally, then inserted).
+    pub cache_misses: u64,
+    /// Compressed payload bytes whose entropy decode the cache skipped.
+    pub cache_bytes_saved: u64,
+    /// Entries evicted from the cache by this worker's inserts.
+    pub cache_evictions: u64,
 }
 
 pub struct CloudWorker {
@@ -85,7 +103,7 @@ impl CloudWorker {
         // filled tile and a served outcome instead of a failed
         // connection.
         let per_item: usize = feature[1..].iter().product();
-        let codec = CodecBuilder::new(QuantSpec::Uniform {
+        let mut builder = CodecBuilder::new(QuantSpec::Uniform {
             c_min: 0.0,
             c_max: 1.0,
             levels: 2,
@@ -93,8 +111,11 @@ impl CloudWorker {
         .threads(config.threads.max(1))
         .expect_elements(per_item)
         .stream_session()
-        .tolerant(true)
-        .build();
+        .tolerant(true);
+        if let Some(cache) = config.decode_cache.clone() {
+            builder = builder.decode_cache_shared(cache).cache_salt(config.cache_salt);
+        }
+        let codec = builder.build();
         Ok(Self {
             exe: rt.load(cloud_path)?,
             grid: manifest.detect_grid,
@@ -113,40 +134,14 @@ impl CloudWorker {
 
         // --- bit-stream decode ------------------------------------------
         let t0 = Instant::now();
-        let mut feat = Vec::with_capacity(self.config.batch * per_item);
-        for item in items {
-            // The codec session sniffs the wire format internally: tiled
-            // multi-substream containers decode tile-parallel straight
-            // into the reused scratch buffer (sized once, no per-tile
-            // output allocation or concatenation),
-            // legacy single streams fall through to the sequential
-            // decoder. The session's `expect_elements` guard re-checks
-            // container claims; the wire item's own claim is checked here
-            // so a mislabeled legacy CABAC stream (whose decoder has no
-            // integrity check) fails loudly instead of silently decoding
-            // `per_item` fabricated values.
-            if item.elements != per_item {
-                return Err(CodecError::ElementCountMismatch {
-                    expected: per_item as u64,
-                    claimed: item.elements as u64,
-                }
-                .into());
-            }
-            let info = self.codec.decode_into(&item.bytes, &mut self.scratch)?;
-            match info.entropy {
-                Some(EntropyKind::Cabac) => self.times.cabac_items += 1,
-                Some(EntropyKind::Rans) => self.times.rans_items += 1,
-                None => {}
-            }
-            self.times.inter_tiles += info.inter_substreams as u64;
-            self.times.filled_tiles += info.failures.len() as u64;
-            debug_assert_eq!(self.scratch.len(), per_item);
-            feat.extend_from_slice(&self.scratch);
-        }
-        for _ in items.len()..self.config.batch {
-            let tail = feat[feat.len() - per_item..].to_vec();
-            feat.extend_from_slice(&tail);
-        }
+        let feat = decode_items(
+            &mut self.codec,
+            &mut self.scratch,
+            &mut self.times,
+            items,
+            per_item,
+            self.config.batch,
+        )?;
         self.times.decode_s += t0.elapsed().as_secs_f64();
 
         // --- cloud inference ----------------------------------------------
@@ -221,5 +216,169 @@ impl CloudWorker {
             latency_s: item.arrived.elapsed().as_secs_f64(),
             bits_per_element: item.bits_per_element(),
         }
+    }
+}
+
+/// Decode a batch of wire items into one contiguous `[B, per_item]`
+/// feature buffer, padding short batches by repeating the last item.
+///
+/// Every integrity decision of the ingest path lives here, testable
+/// without a runtime artifact:
+/// * the wire item's own element claim is checked against `per_item`, so
+///   a mislabeled legacy CABAC stream (whose decoder has no integrity
+///   check) fails loudly instead of silently decoding `per_item`
+///   fabricated values;
+/// * the *decoded* length is re-checked against `per_item` as a typed
+///   [`CodecError::ElementCountMismatch`] — a legacy stream that honors
+///   its wire claim but decodes to a different count would otherwise
+///   mis-slice the batched tensor in release builds (this was a
+///   `debug_assert` once, i.e. no check at all where it matters);
+/// * padding repeats the last decoded item in place via
+///   `extend_from_within` — no temporary allocation per padded slot.
+fn decode_items(
+    codec: &mut Codec,
+    scratch: &mut Vec<f32>,
+    times: &mut CloudTimes,
+    items: &[CompressedItem],
+    per_item: usize,
+    batch: usize,
+) -> Result<Vec<f32>> {
+    let mut feat = Vec::with_capacity(batch * per_item);
+    for item in items {
+        // The codec session sniffs the wire format internally: tiled
+        // multi-substream containers decode tile-parallel straight into
+        // the reused scratch buffer (sized once, no per-tile output
+        // allocation or concatenation), legacy single streams fall
+        // through to the sequential decoder. The session's
+        // `expect_elements` guard re-checks container claims.
+        if item.elements != per_item {
+            return Err(CodecError::ElementCountMismatch {
+                expected: per_item as u64,
+                claimed: item.elements as u64,
+            }
+            .into());
+        }
+        let info = codec.decode_into(&item.bytes, scratch)?;
+        match info.entropy {
+            Some(EntropyKind::Cabac) => times.cabac_items += 1,
+            Some(EntropyKind::Rans) => times.rans_items += 1,
+            None => {}
+        }
+        times.inter_tiles += info.inter_substreams as u64;
+        times.filled_tiles += info.failures.len() as u64;
+        times.cache_hits += info.cache_hits;
+        times.cache_misses += info.cache_misses;
+        times.cache_bytes_saved += info.cache_bytes_saved;
+        times.cache_evictions += info.cache_evictions;
+        if scratch.len() != per_item {
+            return Err(CodecError::ElementCountMismatch {
+                expected: per_item as u64,
+                claimed: scratch.len() as u64,
+            }
+            .into());
+        }
+        feat.extend_from_slice(scratch);
+    }
+    for _ in items.len()..batch {
+        feat.extend_from_within(feat.len() - per_item..);
+    }
+    Ok(feat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{EncoderConfig, Quantizer, UniformQuantizer};
+
+    fn item(bytes: Vec<u8>, elements: usize) -> CompressedItem {
+        let now = Instant::now();
+        CompressedItem {
+            id: 1,
+            image_index: 0,
+            bytes,
+            elements,
+            arrived: now,
+            encoded: now,
+        }
+    }
+
+    fn session(expect: usize) -> Codec {
+        CodecBuilder::new(QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 1.0,
+            levels: 4,
+        })
+        .threads(1)
+        .expect_elements(expect)
+        .stream_session()
+        .tolerant(true)
+        .build()
+    }
+
+    /// A valid legacy single stream of `n` elements (no container
+    /// directory, so nothing cross-checks its element count on the wire).
+    fn legacy_stream(n: usize) -> Vec<u8> {
+        let q = Quantizer::Uniform(UniformQuantizer::new(0.0, 1.0, 4));
+        let mut enc = crate::codec::Encoder::new(EncoderConfig::classification(q, 32));
+        let xs: Vec<f32> = (0..n).map(|i| (i % 7) as f32 / 7.0).collect();
+        enc.encode(&xs).bytes
+    }
+
+    /// Regression (release-mode mis-slice): a legacy stream whose wire
+    /// claim matches `per_item` but whose *decoded* length does not must
+    /// surface a typed error — before the fix this was a `debug_assert`,
+    /// so release builds silently built a short feature tensor.
+    #[test]
+    fn short_decode_is_a_typed_error_not_a_mis_slice() {
+        // The session expects 256 elements per legacy stream (its decode
+        // contract), but the caller batches 512-element slots and the
+        // wire item claims 512 — the claim check passes, the decode
+        // yields 256.
+        let mut codec = session(256);
+        let mut scratch = Vec::new();
+        let mut times = CloudTimes::default();
+        let items = vec![item(legacy_stream(256), 512)];
+        let err = decode_items(&mut codec, &mut scratch, &mut times, &items, 512, 4)
+            .expect_err("short decode must not pad into the batch tensor");
+        let codec_err = err.downcast::<CodecError>().expect("typed codec error");
+        assert!(
+            matches!(
+                codec_err,
+                CodecError::ElementCountMismatch { expected: 512, claimed: 256 }
+            ),
+            "unexpected error: {codec_err:?}"
+        );
+    }
+
+    /// The happy path pads short batches by repeating the last item
+    /// in-place (`extend_from_within` — no per-slot allocation).
+    #[test]
+    fn padding_repeats_last_item() {
+        let per = 256;
+        let mut codec = session(per);
+        let mut scratch = Vec::new();
+        let mut times = CloudTimes::default();
+        let items = vec![item(legacy_stream(per), per)];
+        let feat = decode_items(&mut codec, &mut scratch, &mut times, &items, per, 3).unwrap();
+        assert_eq!(feat.len(), 3 * per);
+        assert_eq!(feat[..per], feat[per..2 * per]);
+        assert_eq!(feat[..per], feat[2 * per..]);
+        assert_eq!(times.cabac_items, 1);
+    }
+
+    /// A wire item whose own claim disagrees with the batch slot size is
+    /// rejected before its bytes reach any decoder.
+    #[test]
+    fn wire_claim_mismatch_is_rejected_before_decode() {
+        let per = 256;
+        let mut codec = session(per);
+        let mut scratch = Vec::new();
+        let mut times = CloudTimes::default();
+        let items = vec![item(legacy_stream(per), per - 1)];
+        let err = decode_items(&mut codec, &mut scratch, &mut times, &items, per, 1)
+            .expect_err("claim mismatch must fail");
+        let codec_err = err.downcast::<CodecError>().expect("typed codec error");
+        assert!(matches!(codec_err, CodecError::ElementCountMismatch { .. }));
+        assert_eq!(times.cabac_items, 0, "nothing decoded");
     }
 }

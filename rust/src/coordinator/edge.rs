@@ -60,6 +60,13 @@ pub struct EdgeConfig {
     /// Does not compose with tile-granularity design (the CLI rejects
     /// the combination).
     pub video: bool,
+    /// Content-addressed decode cache budget in MiB attached to this
+    /// device's codec session (`--decode-cache-mb`, 0 = off). The cache
+    /// is a *decode-side* feature: an edge device that only encodes
+    /// never populates it, but a session used bidirectionally (e.g. a
+    /// loopback harness decoding what it encoded) gets the same
+    /// memcpy-on-repeat behavior as the cloud worker.
+    pub decode_cache_mb: usize,
 }
 
 impl EdgeConfig {
@@ -214,6 +221,9 @@ impl EdgeWorker {
         }
         if config.video {
             builder = builder.stream_session();
+        }
+        if config.decode_cache_mb > 0 {
+            builder = builder.decode_cache(config.decode_cache_mb << 20);
         }
         Ok(Self {
             exe,

@@ -191,6 +191,19 @@ impl ServeReport {
                 self.cloud.inter_tiles, self.cloud.filled_tiles,
             ));
         }
+        // Decode cache: reported only when a cache actually saw traffic
+        // (no line for cache-less runs, same as the other feature lines).
+        if self.cloud.cache_hits + self.cloud.cache_misses > 0 {
+            let total = (self.cloud.cache_hits + self.cloud.cache_misses) as f64;
+            s.push_str(&format!(
+                "\ncache: hits={} misses={} ({:.1}% hit) saved={}B evictions={}",
+                self.cloud.cache_hits,
+                self.cloud.cache_misses,
+                100.0 * self.cloud.cache_hits as f64 / total,
+                self.cloud.cache_bytes_saved,
+                self.cloud.cache_evictions,
+            ));
+        }
         if self.design.is_recorded() {
             s.push_str(&format!(
                 "\ndesign: {} granularity={} redesigns={} tile_designs={} ({:.2}s)",

@@ -1473,11 +1473,13 @@ pub struct RetryPolicy {
     /// drops the connection on every delivery, and without this cap the
     /// client would reconnect and re-send it forever.
     pub max_reconnects: u32,
-    /// BUSY/shed responses tolerated over the client's lifetime. Shed is
-    /// flow control, not failure: each one backs off with a jittered
-    /// exponential delay and redials *without* spending `max_reconnects`.
-    /// This separate (larger) cap only bounds a daemon that stays
-    /// saturated forever.
+    /// *Consecutive* BUSY/shed responses tolerated before giving up; any
+    /// served outcome resets the streak. Shed is flow control, not
+    /// failure: each one backs off with a jittered exponential delay and
+    /// redials *without* spending `max_reconnects`. This separate cap
+    /// only bounds a daemon that stays saturated forever — a long-lived
+    /// session shed any number of times *with service in between* never
+    /// trips it.
     pub max_shed: u32,
 }
 
@@ -1500,8 +1502,9 @@ pub struct ClientStats {
     pub bytes_sent: u64,
     pub bytes_received: u64,
     pub reconnects: u64,
-    /// BUSY/shed frames received; each one cost a backoff and a redial but
-    /// no reconnect budget.
+    /// BUSY/shed frames received over the client's lifetime; each one
+    /// cost a backoff and a redial but no reconnect budget. A pure stat:
+    /// the give-up cap is on the consecutive streak, never on this.
     pub busy_shed: u64,
     /// Send→outcome round-trip times (wire both ways + cloud compute).
     pub rtt: Percentiles,
@@ -1595,11 +1598,18 @@ impl EdgeClient {
     /// refusal made clients burn their finite reconnect budget against a
     /// healthy-but-full daemon, which is exactly the bug the BUSY frame
     /// exists to fix.
+    ///
+    /// The give-up cap is on the *consecutive* `shed_streak` (reset by
+    /// every served outcome), never on the lifetime `stats.busy_shed`
+    /// counter: a long-lived `edge --video` session that is occasionally
+    /// shed — with every episode resolving to real service — must run
+    /// forever, not hard-error once its lifetime shed count crosses the
+    /// budget.
     fn shed_backoff(&mut self, retry_after_ms: u32) -> Result<()> {
         self.stats.busy_shed += 1;
-        if self.stats.busy_shed > self.retry.max_shed as u64 {
+        if self.shed_streak >= self.retry.max_shed {
             return Err(anyhow!(
-                "daemon still busy after {} shed responses ({} items unacknowledged)",
+                "daemon still busy after {} consecutive shed responses ({} items unacknowledged)",
                 self.retry.max_shed,
                 self.pending.len()
             ));
@@ -1974,5 +1984,91 @@ mod tests {
         }
         assert!(TaskKind::from_code(0x00).is_err());
         assert!(TaskKind::from_code(0x10).is_err());
+    }
+
+    /// Regression (shed cap on the wrong counter): a client whose every
+    /// shed episode resolves to real service must survive *more* total
+    /// sheds than `max_shed` — the cap bounds the consecutive streak, not
+    /// the lifetime stat. The mock daemon sheds the first delivery of
+    /// every item and serves the re-delivery, so the streak never exceeds
+    /// 1 while the lifetime count grows past the cap. Before the fix the
+    /// client hard-errored on the (`max_shed`+1)th shed of its life.
+    #[test]
+    fn client_survives_more_than_max_shed_total_sheds_with_service_between() {
+        const ITEMS: u64 = 5;
+        let retry = RetryPolicy {
+            attempts: 5,
+            backoff: Duration::from_millis(1),
+            max_reconnects: 4,
+            max_shed: 2, // ITEMS sheds in total: over the cap by 3
+        };
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let mut shed_ids: std::collections::HashSet<u64> = std::collections::HashSet::new();
+            // Shed connections are parked, not dropped: the client must
+            // see the BUSY frame (the shed path), never a write error
+            // (the reconnect path, which this test keeps at zero).
+            let mut parked: Vec<TcpStream> = Vec::new();
+            let mut served = 0u64;
+            while served < ITEMS {
+                let (mut s, _) = listener.accept().unwrap();
+                loop {
+                    match read_frame(&mut s, Some(task())) {
+                        Ok(Some((t, Frame::Item(it)))) => {
+                            if shed_ids.insert(it.id) {
+                                write_busy_frame(&mut s, t, WireBusy { retry_after_ms: 1 })
+                                    .unwrap();
+                                parked.push(s);
+                                break;
+                            }
+                            let o = WireOutcome {
+                                id: it.id,
+                                image_index: it.image_index,
+                                correct: Some(true),
+                                latency_s: 0.001,
+                                bits_per_element: 1.0,
+                                detections: Vec::new(),
+                            };
+                            write_outcome_frame(&mut s, t, &o).unwrap();
+                            served += 1;
+                            if served == ITEMS {
+                                break;
+                            }
+                        }
+                        Ok(Some(_)) => {} // Reset after a redial
+                        Ok(None) | Err(_) => break,
+                    }
+                }
+            }
+        });
+
+        let mut client = EdgeClient::connect(&addr, task(), 1, retry).unwrap();
+        let mut outcomes = Vec::new();
+        for id in 1..=ITEMS {
+            let item = WireItem {
+                id,
+                image_index: id,
+                elements: 4096,
+                bytes: vec![0xAB; 37],
+            };
+            outcomes.extend(client.send(item).unwrap());
+        }
+        let (rest, stats) = client.finish().unwrap();
+        outcomes.extend(rest);
+        server.join().unwrap();
+
+        assert_eq!(outcomes.len() as u64, ITEMS);
+        assert_eq!(stats.outcomes_received, ITEMS);
+        assert_eq!(
+            stats.busy_shed, ITEMS,
+            "every item was shed once before being served"
+        );
+        assert!(
+            stats.busy_shed > retry.max_shed as u64,
+            "the episode count must exceed the old (buggy) lifetime cap"
+        );
+        assert_eq!(stats.reconnects, 0, "shed never spends reconnect budget");
     }
 }

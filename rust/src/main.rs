@@ -17,7 +17,7 @@
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
-use lwfc::codec::{design_or, designer_for, ClipGranularity, DesignKind, EntropyKind};
+use lwfc::codec::{design_or, designer_for, ClipGranularity, DecodeCache, DesignKind, EntropyKind};
 use lwfc::coordinator::{
     run_edge_node, serve, CloudConfig, CloudDaemon, DaemonConfig, EdgeConfig, EdgeNodeConfig,
     QuantSpec, RetryPolicy, ServeConfig, TaskKind, TransportKind,
@@ -233,6 +233,14 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         )
         .opt("design", "static", DESIGN_HELP)
         .opt("clip-granularity", "stream", GRANULARITY_HELP)
+        .opt(
+            "decode-cache-mb",
+            "0",
+            "content-addressed decode cache budget in MiB (0 = off): repeated \
+             intra tile payloads skip the entropy decoder and copy their \
+             cached reconstruction; in --listen mode the cache is shared \
+             across connections with per-connection key salts",
+        )
         .opt("artifacts", "", "artifact directory")
         .flag("adaptive", "enable windowed online re-design of the clip range");
     let a = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
@@ -243,6 +251,8 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
     let design = design_of(a.get("design"))?;
     let granularity = granularity_of(a.get("clip-granularity"))?;
     check_design_combo(design, granularity)?;
+    let cache_mb = a.get_usize("decode-cache-mb").map_err(|e| anyhow!(e))?;
+    let decode_cache = (cache_mb > 0).then(|| std::sync::Arc::new(DecodeCache::new(cache_mb << 20)));
 
     let cloud_cfg = CloudConfig {
         task,
@@ -250,6 +260,8 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         batch: m.serve_batch,
         obj_threshold: 0.3,
         threads,
+        decode_cache,
+        cache_salt: 0,
     };
 
     // --- daemon mode -----------------------------------------------------
@@ -263,17 +275,27 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         };
         let daemon = CloudDaemon::start_with(a.get("listen"), task, daemon_cfg, move |conn| {
             // One CloudWorker per connection, built on the decode worker
-            // the connection is pinned to (xla handles are not Send).
-            let mut worker = lwfc::coordinator::CloudWorker::new(&m, cloud_cfg.clone())?;
+            // the connection is pinned to (xla handles are not Send). The
+            // decode cache is the one shared Arc; the connection id salts
+            // this worker's cache keys so tenants cannot probe (or hit)
+            // each other's entries.
+            let mut cfg = cloud_cfg.clone();
+            cfg.cache_salt = conn;
+            let mut worker = lwfc::coordinator::CloudWorker::new(&m, cfg)?;
             eprintln!("connection {conn}: cloud worker ready");
             Ok(move |item| worker.process_wire(item))
         })?;
         println!(
             "cloud daemon for {task} listening on {} ({workers} decode workers, \
-             {} conns max, {} in-flight/conn); Ctrl-C to stop",
+             {} conns max, {} in-flight/conn, {} decode cache); Ctrl-C to stop",
             daemon.local_addr(),
             daemon_cfg.max_conns,
             daemon_cfg.max_inflight,
+            if cache_mb > 0 {
+                format!("{cache_mb} MiB")
+            } else {
+                "no".to_string()
+            },
         );
         daemon.run_forever();
         return Ok(());
@@ -310,6 +332,7 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
             }),
             threads,
             video: false,
+            decode_cache_mb: 0,
         },
         cloud: cloud_cfg,
         edge_workers: a.get_usize("edge-workers").map_err(|e| anyhow!(e))?,
@@ -342,6 +365,13 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         .opt("retries", "5", "connection attempts per (re)connect")
         .opt("design", "static", DESIGN_HELP)
         .opt("clip-granularity", "stream", GRANULARITY_HELP)
+        .opt(
+            "decode-cache-mb",
+            "0",
+            "content-addressed decode cache budget in MiB attached to this \
+             device's codec session (0 = off; decode-side — an encode-only \
+             edge run never populates it)",
+        )
         .opt(
             "hold",
             "4",
@@ -386,6 +416,7 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         adaptive: None,
         threads: a.get_usize("threads").map_err(|e| anyhow!(e))?.max(1),
         video,
+        decode_cache_mb: a.get_usize("decode-cache-mb").map_err(|e| anyhow!(e))?,
     };
     let node = EdgeNodeConfig {
         connect: a.get("connect").to_string(),

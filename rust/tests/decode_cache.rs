@@ -1,0 +1,282 @@
+//! Content-addressed decode-cache properties over the `Codec` façade:
+//!
+//! * a cache-enabled decode is **bit-exact** with a cache-disabled decode
+//!   of the same bytes — cold (miss+insert) and warm (hit) — for any
+//!   entropy backend, tile size, and thread count;
+//! * the hit counters prove the entropy decoder was skipped on repeats
+//!   (every tile of a warm decode hits, none miss, payload bytes are
+//!   reported saved);
+//! * v4 **inter** tiles bypass the cache entirely (they decode against
+//!   per-connection reference state, so their payload bytes do not
+//!   determine their reconstruction);
+//! * tiles that fail validation are never inserted;
+//! * eviction keeps the resident bytes inside the configured budget;
+//! * two tenants with different salts sharing one cache never observe
+//!   each other's entries.
+
+use std::sync::Arc;
+
+use lwfc::codec::{DecodeCache, EntropyKind};
+use lwfc::prop_assert;
+use lwfc::util::prop::{prop_check, Gen};
+use lwfc::{CodecBuilder, QuantSpec};
+
+fn uniform(levels: usize, c_max: f32) -> QuantSpec {
+    QuantSpec::Uniform {
+        c_min: 0.0,
+        c_max,
+        levels,
+    }
+}
+
+fn batched(entropy: EntropyKind, threads: usize, tile: usize) -> CodecBuilder {
+    CodecBuilder::new(uniform(4, 2.0))
+        .image_size(32)
+        .entropy(entropy)
+        .threads(threads)
+        .tile_elems(tile)
+        .force_container()
+}
+
+#[test]
+fn cached_decode_is_bit_exact_across_backends_tiles_and_threads() {
+    prop_check("decode_cache_bit_exact", 24, |g: &mut Gen| {
+        let n = g.usize_in(256, 8_000);
+        let tile = g.usize_in(64, 1_024);
+        let threads = g.usize_in(1, 4);
+        let entropy = if g.u64() % 2 == 0 {
+            EntropyKind::Cabac
+        } else {
+            EntropyKind::Rans
+        };
+        let xs = g.activation_vec(n, 0.5);
+        let encoded = batched(entropy, threads, tile).build().encode(&xs);
+
+        let plain = batched(entropy, threads, tile)
+            .build()
+            .decode(&encoded.bytes)
+            .map_err(|e| e.to_string())?;
+        let mut cached = batched(entropy, threads, tile)
+            .decode_cache(16 << 20)
+            .build();
+        let cold = cached.decode(&encoded.bytes).map_err(|e| e.to_string())?;
+        let warm = cached.decode(&encoded.bytes).map_err(|e| e.to_string())?;
+
+        prop_assert!(
+            cold.values == plain.values,
+            "cold cached decode diverged (n={n} tile={tile} t={threads} {entropy})"
+        );
+        prop_assert!(
+            warm.values == plain.values,
+            "warm cached decode diverged (n={n} tile={tile} t={threads} {entropy})"
+        );
+        prop_assert!(
+            cold.info.cache_hits == 0 && cold.info.cache_misses == cold.info.substreams as u64,
+            "cold decode counters: {} hits / {} misses over {} tiles",
+            cold.info.cache_hits,
+            cold.info.cache_misses,
+            cold.info.substreams
+        );
+        prop_assert!(
+            warm.info.cache_hits == warm.info.substreams as u64 && warm.info.cache_misses == 0,
+            "warm decode counters: {} hits / {} misses over {} tiles",
+            warm.info.cache_hits,
+            warm.info.cache_misses,
+            warm.info.substreams
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn hit_counters_prove_entropy_decode_skipped_on_repeats() {
+    let xs = Gen::new("decode_cache_counters", 0).activation_vec(4_096, 0.5);
+    let encoded = batched(EntropyKind::Cabac, 2, 512).build().encode(&xs);
+
+    let cache = Arc::new(DecodeCache::new(16 << 20));
+    let mut codec = batched(EntropyKind::Cabac, 2, 512)
+        .decode_cache_shared(cache.clone())
+        .build();
+
+    let cold = codec.decode(&encoded.bytes).unwrap();
+    assert_eq!(cold.info.cache_hits, 0);
+    assert_eq!(cold.info.cache_misses, cold.info.substreams as u64);
+    assert_eq!(cold.info.cache_bytes_saved, 0);
+    assert_eq!(cache.entries(), cold.info.substreams);
+
+    let warm = codec.decode(&encoded.bytes).unwrap();
+    assert_eq!(warm.info.cache_hits, warm.info.substreams as u64);
+    assert_eq!(warm.info.cache_misses, 0);
+    // Every payload byte of the container skipped the entropy decoder:
+    // the container is prelude + directory + payloads, so the saved bytes
+    // are the whole blob minus its metadata.
+    let dir_len = lwfc::codec::header::BATCH_PRELUDE_BYTES
+        + encoded.substreams * lwfc::codec::header::DIR_ENTRY_BYTES;
+    assert!(warm.info.cache_bytes_saved > 0);
+    assert!(warm.info.cache_bytes_saved <= (encoded.bytes.len() - dir_len) as u64);
+    assert_eq!(warm.values, cold.values);
+
+    // The shared cache's lifetime stats agree with the per-decode deltas.
+    let stats = cache.stats();
+    assert_eq!(stats.hits, warm.info.cache_hits);
+    assert_eq!(stats.misses, cold.info.cache_misses);
+    assert_eq!(stats.bytes_saved, warm.info.cache_bytes_saved);
+}
+
+#[test]
+fn inter_tiles_bypass_the_cache() {
+    // A correlated frame sequence through a stream session (container
+    // v4): later frames carry inter tiles, which must never consult the
+    // cache — only the frame's intra tiles count as hits or misses.
+    let mut g = Gen::new("decode_cache_inter", 0);
+    let n = 4_096usize;
+    let mut seq = vec![g.activation_vec(n, 0.5)];
+    for _ in 1..3 {
+        let noise = g.activation_vec(n, 0.5);
+        let prev = seq.last().unwrap();
+        seq.push(
+            prev.iter()
+                .zip(&noise)
+                .map(|(&x, &e)| x + 0.02 * (e - 0.25))
+                .collect(),
+        );
+    }
+    let session = || {
+        CodecBuilder::new(uniform(8, 2.0))
+            .threads(2)
+            .tile_elems(512)
+            .stream_session()
+    };
+    let mut enc = session().build();
+    let blobs: Vec<Vec<u8>> = seq.iter().map(|f| enc.encode(f).bytes).collect();
+    assert!(
+        enc.temporal_stats().unwrap().inter_tiles > 0,
+        "sequence never engaged inter coding"
+    );
+
+    let cache = Arc::new(DecodeCache::new(16 << 20));
+    let mut cached_dec = session().decode_cache_shared(cache.clone()).build();
+    let mut plain_dec = session().build();
+    let mut saw_inter = false;
+    for blob in &blobs {
+        let d = cached_dec.decode(blob).unwrap();
+        assert_eq!(d.values, plain_dec.decode(blob).unwrap().values);
+        // Inter tiles count in neither column: the cache only ever sees
+        // the frame's intra tiles.
+        assert_eq!(
+            d.info.cache_hits + d.info.cache_misses,
+            (d.info.substreams - d.info.inter_substreams) as u64,
+            "inter tiles leaked into the cache counters"
+        );
+        saw_inter |= d.info.inter_substreams > 0;
+    }
+    assert!(saw_inter, "no decoded frame carried inter tiles");
+    // And no inter reconstruction was retained: every entry came from an
+    // intra tile (at most one per intra tile decoded).
+    let intra_total: usize = {
+        let mut dec = session().build();
+        blobs
+            .iter()
+            .map(|b| {
+                let i = dec.decode(b).unwrap().info;
+                i.substreams - i.inter_substreams
+            })
+            .sum()
+    };
+    assert!(cache.entries() <= intra_total);
+}
+
+#[test]
+fn corrupt_tiles_are_never_inserted() {
+    let xs = Gen::new("decode_cache_corrupt", 0).activation_vec(4_096, 0.5);
+    let encoded = batched(EntropyKind::Cabac, 2, 512).build().encode(&xs);
+    let dir_len = lwfc::codec::header::BATCH_PRELUDE_BYTES
+        + encoded.substreams * lwfc::codec::header::DIR_ENTRY_BYTES;
+    // Flip a payload byte: exactly one tile fails its checksum.
+    let mut bad = encoded.bytes.clone();
+    let victim_byte = dir_len + (bad.len() - dir_len) / 2;
+    bad[victim_byte] ^= 0x5A;
+
+    let cache = Arc::new(DecodeCache::new(16 << 20));
+    let mut codec = batched(EntropyKind::Cabac, 2, 512)
+        .tolerant(true)
+        .decode_cache_shared(cache.clone())
+        .build();
+    let d = codec.decode(&bad).unwrap();
+    assert_eq!(d.info.failures.len(), 1, "{:?}", d.info.failures);
+    // The corrupt tile failed validation before the cache path: only the
+    // healthy tiles were inserted.
+    assert_eq!(cache.entries(), d.info.substreams - 1);
+    // Re-decoding the damaged container: every healthy tile hits, the
+    // corrupt tile still fails — it never became a cache entry.
+    let again = codec.decode(&bad).unwrap();
+    assert_eq!(again.info.cache_hits, (d.info.substreams - 1) as u64);
+    assert_eq!(again.info.failures.len(), 1);
+    assert_eq!(cache.entries(), d.info.substreams - 1);
+}
+
+#[test]
+fn eviction_keeps_resident_bytes_inside_the_budget() {
+    // A budget far smaller than the working set: decodes stay correct,
+    // entries rotate, and the resident total never exceeds the budget.
+    let cache = Arc::new(DecodeCache::new(1 << 20));
+    let mut codec = batched(EntropyKind::Cabac, 2, 1_024)
+        .decode_cache_shared(cache.clone())
+        .build();
+    for i in 0..24u64 {
+        let xs = Gen::new("decode_cache_evict", i).activation_vec(16_384, 0.5);
+        let encoded = batched(EntropyKind::Cabac, 2, 1_024).build().encode(&xs);
+        let plain = batched(EntropyKind::Cabac, 2, 1_024)
+            .build()
+            .decode(&encoded.bytes)
+            .unwrap();
+        let d = codec.decode(&encoded.bytes).unwrap();
+        assert_eq!(d.values, plain.values, "tensor {i} diverged under eviction");
+        assert!(
+            cache.resident_bytes() <= cache.budget_bytes(),
+            "tensor {i}: resident {} exceeds budget {}",
+            cache.resident_bytes(),
+            cache.budget_bytes()
+        );
+    }
+    assert!(cache.stats().evictions > 0, "working set never overflowed");
+}
+
+#[test]
+fn tenants_with_different_salts_never_share_entries() {
+    let xs = Gen::new("decode_cache_salt", 0).activation_vec(4_096, 0.5);
+    let encoded = batched(EntropyKind::Cabac, 2, 512).build().encode(&xs);
+
+    let cache = Arc::new(DecodeCache::new(16 << 20));
+    let mut tenant_a = batched(EntropyKind::Cabac, 2, 512)
+        .decode_cache_shared(cache.clone())
+        .cache_salt(0xA11CE)
+        .build();
+    let mut tenant_b = batched(EntropyKind::Cabac, 2, 512)
+        .decode_cache_shared(cache.clone())
+        .cache_salt(0xB0B)
+        .build();
+
+    let a_cold = tenant_a.decode(&encoded.bytes).unwrap();
+    assert_eq!(a_cold.info.cache_misses, a_cold.info.substreams as u64);
+    assert_eq!(
+        tenant_a.decode(&encoded.bytes).unwrap().info.cache_hits,
+        a_cold.info.substreams as u64
+    );
+    // Tenant B decodes the *same bytes* tenant A just populated the
+    // cache with — and must see none of A's entries.
+    let b_cold = tenant_b.decode(&encoded.bytes).unwrap();
+    assert_eq!(
+        b_cold.info.cache_hits, 0,
+        "tenant B probed tenant A's entries"
+    );
+    assert_eq!(b_cold.info.cache_misses, b_cold.info.substreams as u64);
+    assert_eq!(b_cold.values, a_cold.values);
+    // B's own repeats hit B's own entries; the cache now holds both
+    // tenants' copies side by side.
+    assert_eq!(
+        tenant_b.decode(&encoded.bytes).unwrap().info.cache_hits,
+        b_cold.info.substreams as u64
+    );
+    assert_eq!(cache.entries(), 2 * a_cold.info.substreams);
+}

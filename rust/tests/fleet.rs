@@ -23,6 +23,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
+use lwfc::codec::DecodeCache;
 use lwfc::coordinator::{
     run_pipeline, ClientStats, CloudDaemon, CloudStage, CompressedItem, DaemonConfig, EdgeClient,
     EdgeStage, LoopbackTransport, Outcome, PipelineConfig, Request, RetryPolicy, TaskKind,
@@ -339,6 +340,132 @@ fn fleet_of_edges_is_served_without_refusals_below_quota() {
             *daemon_map, *ref_map,
             "TCP wire payloads diverged from the loopback transport"
         );
+    });
+}
+
+/// Cache-enabled fleet variant (CI's fleet-smoke runs this again with
+/// `LWFC_FLEET_DECODE_CACHE_MB=64` to size the budget): every edge
+/// streams the **same** small corpus, so the shared content-addressed
+/// decode cache must turn the overlap into hits — under the same
+/// throughput floor and p99 ceiling as the plain fleet run — while every
+/// outcome still verifies bit-exact against `fake_quant`.
+#[test]
+fn fleet_with_shared_decode_cache_hits_on_overlapping_content() {
+    with_timeout(300, || {
+        let edges = fleet_edges();
+        let items = fleet_items().max(2);
+        let total = edges * items;
+        let budget_mb = env_usize("LWFC_FLEET_DECODE_CACHE_MB", 64);
+        let cache = Arc::new(DecodeCache::new(budget_mb << 20));
+
+        // One tenant's fleet: every daemon connection shares the cache
+        // under the same (default) salt, so edges hit on each other's
+        // content, not just their own repeats.
+        let handler_cache = Arc::clone(&cache);
+        let config = DaemonConfig {
+            decode_workers: 4,
+            max_conns: edges + 8,
+            max_inflight: 2,
+            busy_retry_ms: 5,
+        };
+        let daemon = CloudDaemon::start_with("127.0.0.1:0", TASK, config, move |_conn| {
+            let mut codec = CodecBuilder::new(QuantSpec::Uniform {
+                c_min: 0.0,
+                c_max: 2.0,
+                levels: 4,
+            })
+            .image_size(32)
+            .threads(1)
+            .tile_elems(TILE)
+            .force_container()
+            .expect_elements(ELEMS)
+            .decode_cache_shared(Arc::clone(&handler_cache))
+            .build();
+            Ok(move |item: WireItem| -> Result<WireOutcome> {
+                let correct =
+                    verify_item(&item.bytes, item.elements as usize, item.image_index, &mut codec)?;
+                Ok(WireOutcome {
+                    id: item.id,
+                    image_index: item.image_index,
+                    correct: Some(correct),
+                    latency_s: 0.0,
+                    bits_per_element: 0.0,
+                    detections: Vec::new(),
+                })
+            })
+        })
+        .unwrap();
+        let addr = daemon.local_addr().to_string();
+
+        let barrier = Arc::new(Barrier::new(edges));
+        let mut joins = Vec::new();
+        for _c in 0..edges {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            joins.push(thread::spawn(move || -> Result<(ClientStats, Vec<WireOutcome>)> {
+                let mut codec = session();
+                let mut client = EdgeClient::connect(&addr, TASK, 2, RetryPolicy::default())?;
+                barrier.wait();
+                let mut got = Vec::new();
+                for k in 0..items {
+                    // The shared corpus: every edge sends the same images.
+                    let image_index = k as u64;
+                    let (bytes, elements) = encode_item(image_index, &mut codec);
+                    got.extend(client.send(WireItem {
+                        id: k as u64,
+                        image_index,
+                        elements: elements as u64,
+                        bytes,
+                    })?);
+                }
+                let (rest, stats) = client.finish()?;
+                got.extend(rest);
+                Ok((stats, got))
+            }));
+        }
+
+        let t0 = Instant::now();
+        let mut rtt = Percentiles::default();
+        for j in joins {
+            let (stats, got) = j.join().expect("client thread panicked").expect("client failed");
+            assert_eq!(stats.outcomes_received, items as u64);
+            assert_eq!(stats.busy_shed, 0, "shed below quota: {stats:?}");
+            assert_eq!(stats.reconnects, 0, "refusal below quota: {stats:?}");
+            rtt.merge(&stats.rtt);
+            for o in &got {
+                assert_eq!(o.correct, Some(true), "cached decode broke item {}", o.id);
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let report = daemon.shutdown();
+        assert_eq!(report.items, total as u64);
+        assert!(report.errors.is_empty(), "daemon errors: {:?}", report.errors);
+
+        // Same gates as the plain fleet run: the cache must not cost
+        // throughput or tail latency.
+        let rps = total as f64 / wall_s.max(1e-9);
+        let p99_ms = rtt.quantile(0.99) * 1e3;
+        assert!(
+            rps >= fleet_min_rps(),
+            "cached fleet throughput regressed: {rps:.1} req/s < {} req/s floor",
+            fleet_min_rps()
+        );
+        assert!(
+            p99_ms <= fleet_max_p99_ms(),
+            "cached fleet p99 RTT regressed: {p99_ms:.1}ms > {}ms ceiling",
+            fleet_max_p99_ms()
+        );
+
+        // The overlap materialized as cache hits (only the first decode
+        // of each distinct image — plus rare concurrent-miss races —
+        // touches the entropy decoder), inside the byte budget.
+        let stats = cache.stats();
+        assert!(
+            stats.hits > 0,
+            "overlapping fleet content produced no cache hits: {stats:?}"
+        );
+        assert!(stats.bytes_saved > 0);
+        assert!(cache.resident_bytes() <= cache.budget_bytes());
     });
 }
 

@@ -73,6 +73,9 @@ fn facade_surface_is_pinned() {
         "force_container",
         "stream_session",
         "expect_elements",
+        "decode_cache",
+        "decode_cache_shared",
+        "cache_salt",
         "build",
         // session + result types
         "Codec",

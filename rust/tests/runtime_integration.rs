@@ -205,6 +205,7 @@ fn serving_pipeline_end_to_end() {
             adaptive: None,
             threads: 2,
             video: false,
+            decode_cache_mb: 0,
         },
         cloud: CloudConfig {
             task,
@@ -212,6 +213,11 @@ fn serving_pipeline_end_to_end() {
             batch: m.serve_batch,
             obj_threshold: 0.3,
             threads: 2,
+            // Cache-enabled on the real pipeline: served accuracy and the
+            // loopback/tcp metric-parity assertion below double as the
+            // "cache-enabled decode is bit-exact" end-to-end check.
+            decode_cache: Some(std::sync::Arc::new(lwfc::codec::DecodeCache::new(8 << 20))),
+            cache_salt: 0,
         },
         edge_workers: 2,
         requests: 64,
@@ -266,6 +272,7 @@ fn detect_pipeline_end_to_end() {
             adaptive: None,
             threads: 2,
             video: false,
+            decode_cache_mb: 0,
         },
         cloud: CloudConfig {
             task,
@@ -273,6 +280,8 @@ fn detect_pipeline_end_to_end() {
             batch: m.serve_batch,
             obj_threshold: 0.3,
             threads: 2,
+            decode_cache: None,
+            cache_salt: 0,
         },
         edge_workers: 1,
         requests: 48,
