@@ -1,10 +1,12 @@
 //! Lightweight-codec throughput: full encode (clip+quant+TU+entropy) and
 //! decode, per level count, on activation-like tensors — plus the tiled
 //! batched codec on a paper-scale 256x56x56 tensor, single-thread vs
-//! N-thread, a CABAC-vs-rANS backend comparison (throughput and
-//! bits/element), and the serving hot path's `decode_into` buffer reuse
-//! vs a fresh allocation per decode. This is the L3 hot path, exercised
-//! through the `Codec` façade (the API the serving layer uses).
+//! N-thread, a CABAC vs 2-way-rANS vs 4-way-rANS backend comparison
+//! (throughput and bits/element), the dispatched SIMD quantize kernels
+//! against their scalar twins, and the serving hot path's `decode_into`
+//! buffer reuse vs a fresh allocation per decode. This is the L3 hot
+//! path, exercised through the `Codec` façade (the API the serving
+//! layer uses).
 //!
 //! Writes a machine-readable baseline to `BENCH_codec.json` (override the
 //! path with `LWFC_BENCH_JSON`; set it to `-` to skip the write) so later
@@ -159,10 +161,41 @@ fn main() {
         );
     }
 
+    // ---- SIMD quantize kernels vs their scalar twins (256x56x56, N=4) ---
+    // The vector path is bit-exact against the scalar twin (the simd
+    // module's differential tests pin that); this row quantifies the
+    // speedup of the dispatched kernel on this machine.
+    println!(
+        "-- simd quantize/reconstruct vs scalar (256x56x56, N=4; kernels: {}) --",
+        lwfc::codec::simd::active()
+    );
+    {
+        use lwfc::codec::simd;
+        let q = UniformQuantizer::new(0.0, 1.5, 4);
+        let mut idx = vec![0u16; big_n];
+        b.run("simd_quantize/vector", Some(big_n as u64), || {
+            simd::quantize_slice(&q, &big, &mut idx);
+            black_box(idx[big_n - 1])
+        });
+        b.run("simd_quantize/scalar", Some(big_n as u64), || {
+            simd::scalar::quantize_slice(&q, &big, &mut idx);
+            black_box(idx[big_n - 1])
+        });
+        let mut rec = vec![0f32; big_n];
+        b.run("simd_reconstruct/vector", Some(big_n as u64), || {
+            simd::reconstruct_slice(&q, &idx, &mut rec);
+            black_box(rec[big_n - 1])
+        });
+        b.run("simd_reconstruct/scalar", Some(big_n as u64), || {
+            simd::scalar::reconstruct_slice(&q, &idx, &mut rec);
+            black_box(rec[big_n - 1])
+        });
+    }
+
     // ---- entropy backends head to head (256x56x56, N=4) -----------------
     println!("-- entropy backends (256x56x56, N=4, single stream) --");
     let mut bpe = std::collections::BTreeMap::new();
-    for kind in [EntropyKind::Cabac, EntropyKind::Rans] {
+    for kind in [EntropyKind::Cabac, EntropyKind::Rans, EntropyKind::Rans4] {
         let mut codec = CodecBuilder::new(uniform(4, 1.5))
             .image_size(32)
             .entropy(kind)
@@ -354,6 +387,15 @@ fn main() {
     if let Some(sx) = speedup("entropy_decode/cabac", "entropy_decode/rans") {
         println!("rANS decode speedup vs CABAC: {sx:.2}x");
     }
+    if let Some(sx) = speedup("entropy_decode/rans", "entropy_decode/rans4") {
+        println!("4-way rANS decode speedup vs 2-way: {sx:.2}x");
+    }
+    if let Some(sx) = speedup("simd_quantize/scalar", "simd_quantize/vector") {
+        println!(
+            "SIMD quantize speedup vs scalar ({}): {sx:.2}x",
+            lwfc::codec::simd::active()
+        );
+    }
     if let Some(sx) = speedup("batched_encode/t1", "batched_encode/t4") {
         println!("\nbatched encode speedup t4 vs t1: {sx:.2}x (target: >= 2x)");
     }
@@ -398,6 +440,19 @@ fn main() {
                 "rans_decode_speedup_vs_cabac",
                 speedup("entropy_decode/cabac", "entropy_decode/rans").map_or(Json::Null, num),
             ),
+            // 4-way interleave over the 2-way baseline (same tables; the
+            // win is wider independent decode states).
+            (
+                "rans4_decode_speedup_vs_rans2",
+                speedup("entropy_decode/rans", "entropy_decode/rans4").map_or(Json::Null, num),
+            ),
+            // Dispatched vector quantize kernel over its scalar twin
+            // (which kernel set ran is recorded in `simd_kernels`).
+            (
+                "simd_quantize_speedup",
+                speedup("simd_quantize/scalar", "simd_quantize/vector").map_or(Json::Null, num),
+            ),
+            ("simd_kernels", s(lwfc::codec::simd::active())),
             // Serving hot path: fresh-allocation decode over reused-buffer
             // decode_into (> 1.0 means the reuse wins).
             (
@@ -417,6 +472,10 @@ fn main() {
             (
                 "bits_per_element_rans",
                 bpe.get("rans").copied().map_or(Json::Null, num),
+            ),
+            (
+                "bits_per_element_rans4",
+                bpe.get("rans4").copied().map_or(Json::Null, num),
             ),
             // Quantizer-design rows (heterogeneous-tile tensor, N=4).
             ("bits_per_element_static_hetero", num(bpe_static)),

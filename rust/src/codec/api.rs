@@ -915,6 +915,15 @@ mod tests {
         assert_eq!(sniff(&r.bytes).entropy, Some(EntropyKind::Rans));
         assert_eq!(sniff(&r.bytes).plausibility_bound, 32_768);
 
+        // rans4 shares the asymptotic rANS bound (only fixed side info
+        // differs between the interleave widths).
+        let mut rans4 = CodecBuilder::new(spec(4, 2.0))
+            .entropy(EntropyKind::Rans4)
+            .build();
+        let r4 = rans4.encode(&xs);
+        assert_eq!(sniff(&r4.bytes).entropy, Some(EntropyKind::Rans4));
+        assert_eq!(sniff(&r4.bytes).plausibility_bound, 32_768);
+
         let mut batched = CodecBuilder::new(spec(4, 2.0)).threads(2).build();
         let b = batched.encode(&xs);
         let fi = sniff(&b.bytes);
@@ -925,8 +934,9 @@ mod tests {
             "container prelude is advisory: conservative bound"
         );
 
-        // Garbage: single-stream family, unknown backend, worst case.
-        let fi = sniff(&[0xC0, 1, 2, 3]);
+        // Garbage: single-stream family, the unassigned backend id 2
+        // (bits 6-7 = 0b10), worst case. (Id 3 = 0xC0 is rans4 now.)
+        let fi = sniff(&[0x80, 1, 2, 3]);
         assert_eq!(fi.format, StreamFormat::SingleStream);
         assert_eq!(fi.entropy, None);
         assert_eq!(fi.plausibility_bound, 32_768);

@@ -103,7 +103,11 @@ pub const MAX_ELEMS_PER_PAYLOAD_BYTE: u64 = 32_768;
 pub fn max_elems_per_payload_byte(kind: Option<crate::codec::EntropyKind>) -> u64 {
     match kind {
         Some(crate::codec::EntropyKind::Cabac) => MAX_ELEMS_PER_PAYLOAD_BYTE_CABAC,
-        Some(crate::codec::EntropyKind::Rans) | None => MAX_ELEMS_PER_PAYLOAD_BYTE,
+        // The rANS bound is per-bit asymptotic, so the interleave width
+        // doesn't change it: rans4 only adds 8 fixed bytes of side info.
+        Some(crate::codec::EntropyKind::Rans)
+        | Some(crate::codec::EntropyKind::Rans4)
+        | None => MAX_ELEMS_PER_PAYLOAD_BYTE,
     }
 }
 
@@ -323,7 +327,8 @@ pub(crate) fn encode_temporal_to_impl(
         let q = config.quant.materialize();
         let levels = q.levels();
         let mut backend = backend_for(config.entropy);
-        let cur_idx: Vec<u16> = tile.iter().map(|&x| q.index(x)).collect();
+        let mut cur_idx = Vec::new();
+        q.fill_indices(tile, &mut cur_idx);
 
         // Intra candidate: byte-identical to what the stateless batched
         // path writes for this tile (same header, same index payload).
@@ -337,12 +342,15 @@ pub(crate) fn encode_temporal_to_impl(
             .filter(|r| prev != 0 && r.generation == prev && r.data.len() == tile.len());
         if let (true, Some(r)) = (inter_eligible, reference) {
             // Inter candidate: zigzagged index residual against the
-            // reference, coded under the widened 2N-1 alphabet.
+            // reference (re-quantized in one batched pass), coded under
+            // the widened 2N-1 alphabet.
+            let mut ref_idx = Vec::new();
+            q.fill_indices(&r.data, &mut ref_idx);
             let residual: Vec<u16> = cur_idx
                 .iter()
-                .zip(&r.data)
-                .map(|(&cur, &rv)| {
-                    let d = cur as i32 - q.index(rv) as i32;
+                .zip(&ref_idx)
+                .map(|(&cur, &rn)| {
+                    let d = cur as i32 - rn as i32;
                     ((d << 1) ^ (d >> 31)) as u16
                 })
                 .collect();
@@ -612,9 +620,11 @@ fn decode_tile_inter(
     let levels = header.levels;
     let residual =
         backend_for(header.entropy).decode_payload(&stream[off..], 2 * levels - 1, out.len())?;
+    let mut ref_idx = Vec::new();
+    q.indices(&refs[i].data, &mut ref_idx);
     for (j, (&z, slot)) in residual.iter().zip(out.iter_mut()).enumerate() {
         let d = ((z >> 1) as i32) ^ -((z & 1) as i32);
-        let n = q.index(refs[i].data[j]) as i32 + d;
+        let n = ref_idx[j] as i32 + d;
         if n < 0 || n as usize >= levels {
             return Err(CodecError::payload(format!(
                 "inter residual leaves the level range at element {j} (index {n} of {levels})"

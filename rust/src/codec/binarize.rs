@@ -23,6 +23,29 @@ pub fn codeword_lens(levels: usize) -> Vec<usize> {
     (0..levels).map(|n| codeword_len(n, levels)).collect()
 }
 
+/// Batched binarization pass: total truncated-unary bit count of an
+/// index slice (every index `< levels`). This is the scalar twin of the
+/// vectorized [`super::simd::tu_bit_count`]; the entropy backends use it
+/// to size their output buffers exactly (the TU bit total is the raw,
+/// pre-entropy-coding payload size in bits).
+pub fn codeword_bits(indices: &[u16], levels: usize) -> u64 {
+    indices
+        .iter()
+        .map(|&n| codeword_len(n as usize, levels) as u64)
+        .sum()
+}
+
+/// Batched emission pass: the concatenated truncated-unary bit sequence
+/// of an index slice, as `(position, bit)` pairs — the per-element
+/// [`encode_tu`] run loop hoisted over a whole slice so entropy encoders
+/// consume indices without a per-element closure construction.
+#[inline]
+pub fn encode_tu_all(indices: &[u16], levels: usize, mut emit: impl FnMut(usize, bool)) {
+    for &n in indices {
+        encode_tu(n as usize, levels, &mut emit);
+    }
+}
+
 /// Emit the truncated-unary bits of `n` via a per-position callback
 /// (position = index of the bit within the codeword, which is also the
 /// CABAC context id per the paper).
@@ -109,6 +132,33 @@ mod tests {
                 crate::prop_assert!(got == s, "decoded {got} expected {s} (levels={levels})");
             }
             crate::prop_assert!(it.next().is_none(), "stream not fully consumed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batched_passes_match_per_element_loops() {
+        prop_check("tu_batched", 100, |g| {
+            let levels = g.usize_in(2, 20);
+            let idx: Vec<u16> =
+                (0..g.usize_in(0, 300)).map(|_| g.usize_in(0, levels - 1) as u16).collect();
+            let per_element: u64 =
+                idx.iter().map(|&n| codeword_len(n as usize, levels) as u64).sum();
+            crate::prop_assert!(
+                codeword_bits(&idx, levels) == per_element,
+                "codeword_bits diverged (levels={levels})"
+            );
+            let mut batched = Vec::new();
+            encode_tu_all(&idx, levels, |pos, bit| batched.push((pos, bit)));
+            let mut looped = Vec::new();
+            for &n in &idx {
+                encode_tu(n as usize, levels, |pos, bit| looped.push((pos, bit)));
+            }
+            crate::prop_assert!(batched == looped, "encode_tu_all diverged");
+            crate::prop_assert!(
+                batched.len() as u64 == per_element,
+                "emitted bit count != codeword_bits"
+            );
             Ok(())
         });
     }

@@ -66,6 +66,16 @@ impl NonUniformQuantizer {
         n
     }
 
+    /// Quantize a slice through the runtime-dispatched SIMD kernel:
+    /// vectorized threshold comparison in the small-N linear-scan regime
+    /// (bit-exact with the per-element [`Self::index`] loop; see
+    /// [`super::simd`]), scalar `partition_point` beyond it.
+    pub fn indices(&self, xs: &[f32], out: &mut Vec<u16>) {
+        out.clear();
+        out.resize(xs.len(), 0);
+        super::simd::nonuniform_index_slice(self, xs, out);
+    }
+
     #[inline]
     pub fn reconstruct(&self, n: u16) -> f32 {
         self.recon[n as usize]

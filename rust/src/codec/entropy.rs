@@ -16,28 +16,34 @@
 //!   (static tables can't adapt mid-stream; ~2 bytes/position of side
 //!   info) for a branch-lean hot loop with two independent decode states
 //!   — the §III-E "as light as possible" end of the trade-off.
+//! * [`RansBackend4`] — the same coder at a four-way interleave (the
+//!   classic ryg-style layout, generalizing the `states[i & 1]` rotation
+//!   to `states[i & 3]`): four decode states renormalize side by side,
+//!   feeding wider superscalar/SIMD execution, for 8 more bytes of
+//!   initial-state side info per stream.
 //!
 //! The backend id travels in the stream header ([`super::header`], bits
 //! 6–7 of byte 0) and in the batched-container prelude, so decoders
 //! auto-detect: legacy (pre-bump) streams carry 0 there and decode as
-//! CABAC.
+//! CABAC. Pre-rans4 decoders reject id 3 with the ordinary
+//! unknown-backend error.
 //!
 //! ## rANS payload layout (after the common stream header)
 //!
 //! ```text
 //! 0..2(N-1)   per-bit-position P(bit=0), u16 LE each, in [1, 4095]
 //!             (probabilities scaled to 1<<12; positions 0..N-2)
-//! +0..4       initial decoder state 0 (u32 LE)
-//! +4..8       initial decoder state 1 (u32 LE)
-//! +8..        interleaved rANS byte stream, consumed front-to-back
+//! +0..4W      W initial decoder states (u32 LE each; W = 2 for `rans`,
+//!             W = 4 for `rans4`)
+//! +4W..       interleaved rANS byte stream, consumed front-to-back
 //! ```
 //!
-//! Bit `i` of the concatenated TU bit sequence uses state `i & 1`; the
-//! encoder runs the exact reverse program of the decoder (LIFO), so the
-//! interleaving needs no per-state framing. Decoding verifies that both
-//! final states equal the canonical initial value and that the payload is
-//! fully consumed — truncated or corrupted payloads surface as `Err`, not
-//! a panic and not a silent wrong tensor.
+//! Bit `i` of the concatenated TU bit sequence uses state `i & (W-1)`;
+//! the encoder runs the exact reverse program of the decoder (LIFO), so
+//! the interleaving needs no per-state framing. Decoding verifies that
+//! every final state equals the canonical initial value and that the
+//! payload is fully consumed — truncated or corrupted payloads surface
+//! as `Err`, not a panic and not a silent wrong tensor.
 
 use super::binarize::num_contexts;
 use super::cabac::{CabacDecoder, CabacEncoder, Context};
@@ -54,6 +60,10 @@ pub enum EntropyKind {
     Cabac,
     /// Two-way interleaved rANS with static in-band frequency tables.
     Rans,
+    /// Four-way interleaved rANS (same tables, twice the decode states).
+    /// Id 3 — id 2 stays unassigned, so pre-rans4 decoders reject these
+    /// streams with the ordinary unknown-backend error.
+    Rans4,
 }
 
 impl EntropyKind {
@@ -62,26 +72,29 @@ impl EntropyKind {
         match self {
             EntropyKind::Cabac => 0,
             EntropyKind::Rans => 1,
+            EntropyKind::Rans4 => 3,
         }
     }
 
     /// Inverse of [`EntropyKind::id`]; rejects unknown ids (untrusted
-    /// header input).
+    /// header input — id 2 is deliberately unassigned).
     pub fn from_id(id: u8) -> Result<EntropyKind, CodecError> {
         match id {
             0 => Ok(EntropyKind::Cabac),
             1 => Ok(EntropyKind::Rans),
+            3 => Ok(EntropyKind::Rans4),
             id => Err(CodecError::UnknownBackend { id }),
         }
     }
 
-    /// CLI spelling (`--entropy cabac|rans`).
+    /// CLI spelling (`--entropy cabac|rans|rans4`).
     pub fn parse(s: &str) -> Result<EntropyKind, CodecError> {
         match s {
             "cabac" => Ok(EntropyKind::Cabac),
             "rans" => Ok(EntropyKind::Rans),
+            "rans4" => Ok(EntropyKind::Rans4),
             other => Err(CodecError::invalid(format!(
-                "unknown entropy backend `{other}` (cabac, rans)"
+                "unknown entropy backend `{other}` (cabac, rans, rans4)"
             ))),
         }
     }
@@ -92,6 +105,7 @@ impl std::fmt::Display for EntropyKind {
         f.write_str(match self {
             EntropyKind::Cabac => "cabac",
             EntropyKind::Rans => "rans",
+            EntropyKind::Rans4 => "rans4",
         })
     }
 }
@@ -167,6 +181,7 @@ pub fn backend_for(kind: EntropyKind) -> Box<dyn EntropyBackend> {
     match kind {
         EntropyKind::Cabac => Box::new(CabacBackend::default()),
         EntropyKind::Rans => Box::new(RansBackend::default()),
+        EntropyKind::Rans4 => Box::new(RansBackend4::default()),
     }
 }
 
@@ -189,18 +204,44 @@ use super::batch::MAX_PREALLOC_ELEMS as MAX_PREALLOC_IDX;
 // CABAC backend (the original hard-wired entropy stage, moved verbatim)
 
 /// The paper's simplified CABAC behind the [`EntropyBackend`] seam.
-/// Encode loops are monomorphic per quantizer kind and specialised for
-/// the 1-bit case, exactly as before the refactor — output bytes are
-/// bit-identical to the pre-trait encoder (pinned by the golden vectors).
+/// The encode front half is the batched SIMD quantize pass
+/// ([`Quantizer::fill_indices`]); the bit loop is specialised for the
+/// 1-bit case (one context, no TU framing — for two levels the TU code
+/// of `n` is the single bit `n != 0`), exactly as before the refactor —
+/// output bytes are bit-identical to the pre-trait encoder (pinned by
+/// the golden vectors).
 #[derive(Default)]
 pub struct CabacBackend {
     contexts: Vec<Context>,
+    indices: Vec<u16>,
 }
 
 impl CabacBackend {
     fn reset_contexts(&mut self, levels: usize) {
         self.contexts.clear();
         self.contexts.resize(num_contexts(levels), Context::default());
+    }
+
+    /// Entropy-code the scratch `indices` (shared tail of both encode
+    /// entry points). The raw TU bit total sizes the output reservation
+    /// exactly — CABAC output is within a few bytes of it, so the buffer
+    /// never reallocates mid-stream.
+    fn code_indices(&mut self, levels: usize, out: &mut Vec<u8>) {
+        use super::binarize;
+        let Self { contexts, indices } = self;
+        let mut enc = CabacEncoder::new();
+        enc.reserve((super::simd::tu_bit_count(indices, levels) / 8) as usize + 64);
+        if levels == 2 {
+            let ctx = &mut contexts[0];
+            for &n in indices.iter() {
+                enc.encode(ctx, n != 0);
+            }
+        } else {
+            binarize::encode_tu_all(indices, levels, |pos, bit| {
+                enc.encode(&mut contexts[pos], bit)
+            });
+        }
+        out.extend_from_slice(&enc.finish());
     }
 }
 
@@ -210,58 +251,17 @@ impl EntropyBackend for CabacBackend {
     }
 
     fn encode_payload(&mut self, quantizer: &Quantizer, data: &[f32], out: &mut Vec<u8>) {
-        use super::binarize;
         let levels = quantizer.levels();
         self.reset_contexts(levels);
-        let mut enc = CabacEncoder::new();
-        // Reserve the typical compressed size up front (≈1 bit/element)
-        // so the CABAC output buffer does not reallocate mid-stream.
-        enc.reserve(data.len() / 8 + 64);
-        match quantizer {
-            Quantizer::Uniform(u) if levels == 2 => {
-                let ctx = &mut self.contexts[0];
-                for &x in data {
-                    enc.encode(ctx, u.index(x) != 0);
-                }
-            }
-            Quantizer::Uniform(u) => {
-                for &x in data {
-                    let n = u.index(x) as usize;
-                    binarize::encode_tu(n, levels, |pos, bit| {
-                        enc.encode(&mut self.contexts[pos], bit)
-                    });
-                }
-            }
-            Quantizer::NonUniform(nu) => {
-                for &x in data {
-                    let n = nu.index(x) as usize;
-                    binarize::encode_tu(n, levels, |pos, bit| {
-                        enc.encode(&mut self.contexts[pos], bit)
-                    });
-                }
-            }
-        }
-        out.extend_from_slice(&enc.finish());
+        quantizer.fill_indices(data, &mut self.indices);
+        self.code_indices(levels, out);
     }
 
     fn encode_index_payload(&mut self, indices: &[u16], levels: usize, out: &mut Vec<u8>) {
-        use super::binarize;
         self.reset_contexts(levels);
-        let mut enc = CabacEncoder::new();
-        enc.reserve(indices.len() / 8 + 64);
-        if levels == 2 {
-            let ctx = &mut self.contexts[0];
-            for &n in indices {
-                enc.encode(ctx, n != 0);
-            }
-        } else {
-            for &n in indices {
-                binarize::encode_tu(n as usize, levels, |pos, bit| {
-                    enc.encode(&mut self.contexts[pos], bit)
-                });
-            }
-        }
-        out.extend_from_slice(&enc.finish());
+        self.indices.clear();
+        self.indices.extend_from_slice(indices);
+        self.code_indices(levels, out);
     }
 
     fn decode_payload(
@@ -324,8 +324,8 @@ impl EntropyBackend for CabacBackend {
 /// Probability scale: 12-bit frequencies (`M = 4096`).
 pub const RANS_SCALE_BITS: u32 = 12;
 pub const RANS_SCALE: u32 = 1 << RANS_SCALE_BITS;
-/// Lower bound of the normalized state interval `[L, 256·L)`. Both
-/// encoder states start here and both decoder states must end here — the
+/// Lower bound of the normalized state interval `[L, 256·L)`. Every
+/// encoder state starts here and every decoder state must end here — the
 /// integrity check that turns payload corruption into `Err`.
 pub const RANS_LOWER: u32 = 1 << 23;
 
@@ -355,16 +355,24 @@ fn rans_encode_bit(state: &mut u32, buf: &mut Vec<u8>, p0: u16, bit: bool) {
     *state = ((x / freq) << RANS_SCALE_BITS) + (x % freq) + start;
 }
 
-/// Two-way interleaved rANS with static per-bit-position frequency
-/// tables. Encoding is two passes: one to quantize + histogram, one (in
-/// reverse) to entropy-code; scratch persists across streams.
+/// Interleaved rANS with static per-bit-position frequency tables,
+/// generic over the interleave width `WAYS` (a power of two; the 2-way
+/// [`RansBackend`] and 4-way [`RansBackend4`] instantiations are what
+/// exists on the wire). Encoding is two passes: one to quantize +
+/// histogram, one (in reverse) to entropy-code; scratch persists across
+/// streams.
 #[derive(Default)]
-pub struct RansBackend {
+pub struct RansBackendN<const WAYS: usize> {
     indices: Vec<u16>,
     hist: Vec<u64>,
 }
 
-impl RansBackend {
+/// Two-way interleaved rANS (header id 1, CLI `rans`).
+pub type RansBackend = RansBackendN<2>;
+/// Four-way interleaved rANS (header id 3, CLI `rans4`).
+pub type RansBackend4 = RansBackendN<4>;
+
+impl<const WAYS: usize> RansBackendN<WAYS> {
     /// Per-position `P(bit = 0)` scaled to `[1, RANS_SCALE - 1]`, from the
     /// index histogram: position `pos` sees a one for every index `> pos`
     /// and a zero for every index `== pos` (TU never emits a zero at the
@@ -389,37 +397,28 @@ impl RansBackend {
     }
 }
 
-impl EntropyBackend for RansBackend {
+impl<const WAYS: usize> EntropyBackend for RansBackendN<WAYS> {
     fn kind(&self) -> EntropyKind {
-        EntropyKind::Rans
+        match WAYS {
+            2 => EntropyKind::Rans,
+            4 => EntropyKind::Rans4,
+            _ => unreachable!("unsupported rANS interleave width {WAYS}"),
+        }
     }
 
     fn encode_payload(&mut self, quantizer: &Quantizer, data: &[f32], out: &mut Vec<u8>) {
         let levels = quantizer.levels();
 
-        // Pass 1: quantize + histogram (the static tables need global
-        // counts before any bit is coded).
-        self.indices.clear();
-        self.indices.reserve(data.len());
+        // Pass 1: batched quantize (vectorized when the CPU allows), then
+        // histogram (the static tables need global counts before any bit
+        // is coded).
+        quantizer.fill_indices(data, &mut self.indices);
         self.hist.clear();
         self.hist.resize(levels, 0);
-        match quantizer {
-            Quantizer::Uniform(u) => {
-                for &x in data {
-                    let n = u.index(x);
-                    self.hist[n as usize] += 1;
-                    self.indices.push(n);
-                }
-            }
-            Quantizer::NonUniform(nu) => {
-                for &x in data {
-                    let n = nu.index(x);
-                    self.hist[n as usize] += 1;
-                    self.indices.push(n);
-                }
-            }
+        for &n in &self.indices {
+            self.hist[n as usize] += 1;
         }
-        rans_encode_indices(&self.indices, &self.hist, levels, out);
+        rans_encode_indices::<WAYS>(&self.indices, &self.hist, levels, out);
     }
 
     fn encode_index_payload(&mut self, indices: &[u16], levels: usize, out: &mut Vec<u8>) {
@@ -428,7 +427,7 @@ impl EntropyBackend for RansBackend {
         for &n in indices {
             self.hist[n as usize] += 1;
         }
-        rans_encode_indices(indices, &self.hist, levels, out);
+        rans_encode_indices::<WAYS>(indices, &self.hist, levels, out);
     }
 
     fn decode_payload(
@@ -438,7 +437,7 @@ impl EntropyBackend for RansBackend {
         elements: usize,
     ) -> Result<Vec<u16>, CodecError> {
         let mut out = Vec::with_capacity(elements.min(MAX_PREALLOC_IDX));
-        rans_decode(payload, levels, elements, |n| out.push(n as u16))?;
+        rans_decode::<WAYS>(payload, levels, elements, |n| out.push(n as u16))?;
         Ok(out)
     }
 
@@ -451,7 +450,7 @@ impl EntropyBackend for RansBackend {
     ) -> Result<Vec<f32>, CodecError> {
         debug_assert_eq!(recon.len(), levels);
         let mut out = Vec::with_capacity(elements.min(MAX_PREALLOC_IDX));
-        rans_decode(payload, levels, elements, |n| out.push(recon[n]))?;
+        rans_decode::<WAYS>(payload, levels, elements, |n| out.push(recon[n]))?;
         Ok(out)
     }
 
@@ -464,7 +463,7 @@ impl EntropyBackend for RansBackend {
     ) -> Result<(), CodecError> {
         debug_assert_eq!(recon.len(), levels);
         let mut i = 0usize;
-        rans_decode(payload, levels, out.len(), |n| {
+        rans_decode::<WAYS>(payload, levels, out.len(), |n| {
             out[i] = recon[n];
             i += 1;
         })?;
@@ -478,10 +477,15 @@ impl EntropyBackend for RansBackend {
 /// done by the caller). rANS is LIFO, so the global TU bit sequence is
 /// encoded in reverse (elements back-to-front, bits within an element
 /// back-to-front) and the decoder reads it forward. Bit `i` of the
-/// forward sequence uses state `i & 1`.
-fn rans_encode_indices(indices: &[u16], hist: &[u64], levels: usize, out: &mut Vec<u8>) {
+/// forward sequence uses state `i & (WAYS - 1)`.
+fn rans_encode_indices<const WAYS: usize>(
+    indices: &[u16],
+    hist: &[u64],
+    levels: usize,
+    out: &mut Vec<u8>,
+) {
     let nctx = num_contexts(levels);
-    let p0 = RansBackend::freq_table(hist, levels);
+    let p0 = RansBackendN::<WAYS>::freq_table(hist, levels);
     for &p in &p0 {
         out.extend_from_slice(&p.to_le_bytes());
     }
@@ -491,26 +495,36 @@ fn rans_encode_indices(indices: &[u16], hist: &[u64], levels: usize, out: &mut V
             ones + hist[pos]
         })
         .sum();
+    // The histogram formula above and the batched binarization pass count
+    // the same TU bit sequence two different ways; keep them honest
+    // against each other on every debug-build encode.
+    debug_assert_eq!(
+        total_bits,
+        super::simd::tu_bit_count(indices, levels),
+        "histogram bit total diverged from the binarization pass"
+    );
 
-    let mut buf: Vec<u8> = Vec::with_capacity(indices.len() / 8 + 16);
-    let mut states = [RANS_LOWER; 2];
+    let mut buf: Vec<u8> = Vec::with_capacity((total_bits / 8) as usize + 4 * WAYS + 16);
+    let mut states = [RANS_LOWER; WAYS];
     let mut bit_index = total_bits as usize;
     for &n in indices.iter().rev() {
         let n = n as usize;
         if n + 1 != levels {
             bit_index -= 1;
-            rans_encode_bit(&mut states[bit_index & 1], &mut buf, p0[n], false);
+            rans_encode_bit(&mut states[bit_index & (WAYS - 1)], &mut buf, p0[n], false);
         }
         for pos in (0..n).rev() {
             bit_index -= 1;
-            rans_encode_bit(&mut states[bit_index & 1], &mut buf, p0[pos], true);
+            rans_encode_bit(&mut states[bit_index & (WAYS - 1)], &mut buf, p0[pos], true);
         }
     }
     debug_assert_eq!(bit_index, 0, "bit accounting mismatch");
-    // Final states, pushed so that after the reversal the payload
-    // starts with state0 then state1, both little-endian.
-    buf.extend_from_slice(&states[1].to_be_bytes());
-    buf.extend_from_slice(&states[0].to_be_bytes());
+    // Final states, pushed highest-numbered first so that after the
+    // reversal the payload starts with state0..state{W-1}, each
+    // little-endian.
+    for s in states.iter().rev() {
+        buf.extend_from_slice(&s.to_be_bytes());
+    }
     buf.reverse();
     out.extend_from_slice(&buf);
 }
@@ -519,7 +533,7 @@ fn rans_encode_indices(indices: &[u16], hist: &[u64], levels: usize, out: &mut V
 /// the index and the reconstruction path pay zero dispatch per element.
 /// Validates the frequency table and initial states, then enforces the
 /// final-state + full-consumption integrity checks.
-fn rans_decode(
+fn rans_decode<const WAYS: usize>(
     payload: &[u8],
     levels: usize,
     elements: usize,
@@ -527,10 +541,10 @@ fn rans_decode(
 ) -> Result<(), CodecError> {
     let nctx = num_contexts(levels);
     let table_len = nctx * 2;
-    if payload.len() < table_len + 8 {
+    let header_len = table_len + 4 * WAYS;
+    if payload.len() < header_len {
         return Err(CodecError::payload(format!(
-            "rANS payload truncated: need {} header bytes, have {}",
-            table_len + 8,
+            "rANS payload truncated: need {header_len} header bytes, have {}",
             payload.len()
         )));
     }
@@ -546,18 +560,21 @@ fn rans_decode(
     }
     let u32_at =
         |i: usize| u32::from_le_bytes([payload[i], payload[i + 1], payload[i + 2], payload[i + 3]]);
-    let mut states = [u32_at(table_len), u32_at(table_len + 4)];
+    let mut states = [0u32; WAYS];
+    for (w, s) in states.iter_mut().enumerate() {
+        *s = u32_at(table_len + 4 * w);
+    }
     if states.iter().any(|&s| s < RANS_LOWER) {
         return Err(CodecError::payload(
             "rANS initial state below the normalization bound",
         ));
     }
-    let mut pos = table_len + 8;
+    let mut pos = header_len;
     let mut bit_index = 0usize;
     for _ in 0..elements {
         let mut n = 0usize;
         while n + 1 < levels {
-            let st = &mut states[bit_index & 1];
+            let st = &mut states[bit_index & (WAYS - 1)];
             bit_index += 1;
             let p = p0[n] as u32;
             let s = *st & (RANS_SCALE - 1);
@@ -582,10 +599,10 @@ fn rans_decode(
         }
         emit(n);
     }
-    // Integrity: the encoder started both states at RANS_LOWER and
+    // Integrity: the encoder started every state at RANS_LOWER and
     // emitted exactly the bytes consumed above, so anything else means
     // the payload (or the element count) is corrupt.
-    if states != [RANS_LOWER; 2] {
+    if states != [RANS_LOWER; WAYS] {
         return Err(CodecError::payload(
             "rANS final-state check failed: corrupt payload",
         ));
@@ -687,6 +704,80 @@ mod tests {
     }
 
     #[test]
+    fn rans4_roundtrips_and_decodes_the_same_indices_as_rans2() {
+        prop_check("rans4_roundtrip", 30, |g| {
+            let n = g.usize_in(0, 6000);
+            let levels = *g.choice(&[2usize, 3, 4, 8, 17]);
+            let scale = g.f32_in(0.05, 2.0);
+            let xs = g.activation_vec(n, scale);
+            let q = uq(levels, g.f32_in(0.3, 10.0));
+            let mut p2 = Vec::new();
+            let mut p4 = Vec::new();
+            RansBackend::default().encode_payload(&q, &xs, &mut p2);
+            RansBackend4::default().encode_payload(&q, &xs, &mut p4);
+            let i2 = RansBackend::default()
+                .decode_payload(&p2, levels, n)
+                .map_err(|e| e.to_string())?;
+            let i4 = RansBackend4::default()
+                .decode_payload(&p4, levels, n)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                i4 == expected_indices(&q, &xs),
+                "rans4 indices diverged (n={n} levels={levels})"
+            );
+            crate::prop_assert!(i2 == i4, "rans2/rans4 decoded different indices");
+            // Same static tables, 8 more bytes of initial-state side
+            // info — the streams differ only by the interleave.
+            let table_len = 2 * (levels - 1);
+            crate::prop_assert!(
+                p2[..table_len] == p4[..table_len],
+                "frequency tables diverged between interleave widths"
+            );
+            // A rans4 payload must not decode as rans2 (and vice versa):
+            // the interleave is part of the format, and the integrity
+            // checks catch the mismatch.
+            if n > 0 {
+                crate::prop_assert!(
+                    RansBackend::default().decode_payload(&p4, levels, n).is_err()
+                        || RansBackend4::default().decode_payload(&p2, levels, n).is_err(),
+                    "interleave mismatch went undetected both ways (n={n})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rans4_empty_stream_carries_four_states() {
+        let q = uq(4, 1.0);
+        let mut payload = Vec::new();
+        RansBackend4::default().encode_payload(&q, &[], &mut payload);
+        // table (3 positions) + four initial states, no coded bytes
+        assert_eq!(payload.len(), 6 + 16);
+        let idx = RansBackend4::default().decode_payload(&payload, 4, 0).unwrap();
+        assert!(idx.is_empty());
+        assert!(RansBackend4::default().decode_payload(&payload[..12], 4, 0).is_err());
+    }
+
+    #[test]
+    fn rans4_truncation_always_errors() {
+        let mut g = crate::util::prop::Gen::new("rans4_trunc", 1);
+        let xs = g.activation_vec(2_000, 0.5);
+        let q = uq(4, 2.0);
+        let mut payload = Vec::new();
+        RansBackend4::default().encode_payload(&q, &xs, &mut payload);
+        for cut in 0..payload.len() {
+            assert!(
+                RansBackend4::default()
+                    .decode_payload(&payload[..cut], 4, xs.len())
+                    .is_err(),
+                "truncation to {cut} of {} bytes went undetected",
+                payload.len()
+            );
+        }
+    }
+
+    #[test]
     fn rans_truncation_always_errors() {
         let mut g = crate::util::prop::Gen::new("rans_trunc", 1);
         let xs = g.activation_vec(2_000, 0.5);
@@ -747,19 +838,15 @@ mod tests {
             let xs = g.activation_vec(n, 0.5);
             let q = uq(levels, 2.0);
             let idx = expected_indices(&q, &xs);
-            for rans in [false, true] {
-                let mut be: Box<dyn EntropyBackend> = if rans {
-                    Box::new(RansBackend::default())
-                } else {
-                    Box::new(CabacBackend::default())
-                };
+            for kind in [EntropyKind::Cabac, EntropyKind::Rans, EntropyKind::Rans4] {
+                let mut be = backend_for(kind);
                 let mut by_value = Vec::new();
                 be.encode_payload(&q, &xs, &mut by_value);
                 let mut by_index = Vec::new();
                 be.encode_index_payload(&idx, levels, &mut by_index);
                 crate::prop_assert!(
                     by_value == by_index,
-                    "index/value payloads diverged (rans={rans} n={n} levels={levels})"
+                    "index/value payloads diverged (kind={kind} n={n} levels={levels})"
                 );
                 let back = be
                     .decode_payload(&by_index, levels, n)
@@ -772,11 +859,14 @@ mod tests {
 
     #[test]
     fn kind_ids_roundtrip_and_legacy_zero_is_cabac() {
-        for k in [EntropyKind::Cabac, EntropyKind::Rans] {
+        for k in [EntropyKind::Cabac, EntropyKind::Rans, EntropyKind::Rans4] {
             assert_eq!(EntropyKind::from_id(k.id()).unwrap(), k);
             assert_eq!(EntropyKind::parse(&k.to_string()).unwrap(), k);
+            assert_eq!(backend_for(k).kind(), k);
         }
         assert_eq!(EntropyKind::from_id(0).unwrap(), EntropyKind::Cabac);
+        // Id 2 is deliberately unassigned (rans4 took 3 so pre-rans4
+        // decoders reject it); it must never silently map to a backend.
         assert!(EntropyKind::from_id(2).is_err());
         assert!(EntropyKind::parse("huffman").is_err());
     }

@@ -8,7 +8,8 @@
 //! ```text
 //! 0     bits 0-3: kind (0=classification, 1=detection)
 //!       bits 4-5: quantizer type (0=uniform, 1=entropy-constrained)
-//!       bits 6-7: entropy backend (0=CABAC, 1=interleaved rANS)
+//!       bits 6-7: entropy backend (0=CABAC, 1=2-way rANS, 3=4-way
+//!       rANS; 2 is unassigned and rejected)
 //! 1     N, number of quantizer levels (2..=255)
 //! 2-5   c_min (f32)
 //! 6-9   c_max (f32)
@@ -225,7 +226,7 @@ impl Header {
 // ```text
 // 0-3    magic "LWFB"
 // 4      container version (2 or 3; version-1 containers still parse)
-// 5      v2+: container entropy-backend id (0=CABAC, 1=rANS)
+// 5      v2+: container entropy-backend id (0=CABAC, 1=rANS, 3=rANS4)
 //        v1: reserved (must be 0 — which is also the CABAC id)
 // 6-9    substream count (u32 LE)
 // 10-17  total element count (u64 LE)
@@ -736,6 +737,20 @@ mod tests {
         // Everything below the backend bits is unchanged by the bump.
         assert_eq!(rans[0] & 0x3F, out[0] & 0x3F);
         assert_eq!(rans[1..], out[1..]);
+
+        // The 4-way rANS id (3) round-trips the same way and — crucially
+        // for forward compatibility — is the value pre-rans4 decoders
+        // already rejected as unknown.
+        let mut rans4 = Vec::new();
+        Header {
+            entropy: EntropyKind::Rans4,
+            ..cls_header()
+        }
+        .write(&mut rans4);
+        assert_eq!(rans4[0] >> 6, 3);
+        assert_eq!(Header::read(&rans4).unwrap().0.entropy, EntropyKind::Rans4);
+        assert_eq!(rans4[0] & 0x3F, out[0] & 0x3F);
+        assert_eq!(rans4[1..], out[1..]);
     }
 
     fn sample_directory() -> (SubstreamDirectory, Vec<u8>) {
@@ -797,6 +812,17 @@ mod tests {
         assert_eq!(rbytes[5], 1);
         let (back, _) = SubstreamDirectory::read(&rbytes).unwrap();
         assert_eq!(back, rans_dir);
+
+        let rans4_dir = SubstreamDirectory {
+            entropy: EntropyKind::Rans4,
+            ..dir.clone()
+        };
+        let mut r4bytes = Vec::new();
+        rans4_dir.write(&mut r4bytes);
+        r4bytes.extend_from_slice(&bytes[dir.encoded_len()..]);
+        assert_eq!(r4bytes[5], 3);
+        let (back4, _) = SubstreamDirectory::read(&r4bytes).unwrap();
+        assert_eq!(back4, rans4_dir);
 
         // v1 with a nonzero reserved byte stays an error (pre-bump rule).
         let mut bad = bytes.clone();

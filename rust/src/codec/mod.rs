@@ -31,6 +31,7 @@ pub mod ecq;
 pub mod entropy;
 pub mod error;
 pub mod header;
+pub mod simd;
 pub mod stream;
 pub mod uniform;
 

@@ -1,0 +1,708 @@
+//! Runtime-dispatched SIMD kernels for the codec's serving inner loops.
+//!
+//! The paper's complexity claim (§III-E) rests on the codec being a few
+//! tight loops — clip→quantize (Eq. (1)), reconstruction, truncated-unary
+//! length accounting — and those loops vectorize directly: the affine
+//! quantizer map is a fused subtract/multiply/add over f32 lanes, and the
+//! interleaved-rANS layout exists precisely so entropy decode does not
+//! serialize the rest of the pipeline.
+//!
+//! Every kernel here has a **scalar twin** in [`scalar`] whose element
+//! loop is the original per-element method (`UniformQuantizer::index`,
+//! `reconstruct`, `fake_quant`, `NonUniformQuantizer::index`,
+//! `binarize::codeword_len`). The vector paths are required to be
+//! **bit-exact** against those twins — same clip semantics (NaN→`c_min`,
+//! `x >= c_max`→`c_max`, `x <= c_min`→`c_min`), same `floor(v + 0.5)`
+//! rounding via truncation of a non-negative argument, same f32
+//! operation order (multiply then add; no FMA contraction) — which the
+//! in-module differential tests and `tests/simd_kernels.rs` enforce on
+//! adversarial inputs. The golden fixtures pin the scalar behavior, so
+//! SIMD ≡ scalar ≡ golden.
+//!
+//! Dispatch is decided once per process: `is_x86_feature_detected!`
+//! picks AVX2, then SSE2, else the scalar twins (also the only path on
+//! non-x86_64 arches). Setting `LWFC_FORCE_SCALAR=1` in the environment
+//! forces the scalar path regardless of CPU features — CI runs the full
+//! test suite under both settings.
+//!
+//! Vector paths additionally require a small-`levels` regime
+//! ([`MAX_VECTOR_LEVELS`]) and finite quantizer scale factors; outside
+//! it (never hit by real streams — header levels are a `u8`) they fall
+//! back to the scalar twin rather than chase packing-saturation corner
+//! cases.
+
+use std::sync::OnceLock;
+
+use super::binarize;
+use super::ecq::NonUniformQuantizer;
+use super::uniform::UniformQuantizer;
+
+/// Level-count ceiling for the vector paths. Above it (unreachable
+/// through real headers, whose level field is a `u8`; the widened inter
+/// alphabet tops out at `2·255 - 1`) kernels use the scalar twin: the
+/// SSE2 quantize path packs indices through a signed-saturating i16
+/// pack, and the TU length kernel accumulates via a signed 16-bit
+/// multiply-add — both exact only while every index fits in `i16`.
+pub const MAX_VECTOR_LEVELS: usize = 1 << 15;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Level {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+/// `LWFC_FORCE_SCALAR=1` (read once per process) pins every kernel to
+/// its scalar twin — the CI fallback job and A/B benchmarking hook.
+pub fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| std::env::var_os("LWFC_FORCE_SCALAR").is_some_and(|v| v == "1"))
+}
+
+fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+fn detect() -> Level {
+    if force_scalar() {
+        return Level::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+        if is_x86_feature_detected!("sse2") {
+            return Level::Sse2;
+        }
+    }
+    Level::Scalar
+}
+
+/// Name of the dispatched kernel set (`"avx2"`, `"sse2"`, or
+/// `"scalar"`) — for logs and the bench report.
+pub fn active() -> &'static str {
+    match level() {
+        Level::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => "sse2",
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => "avx2",
+    }
+}
+
+#[inline]
+fn uniform_vectorizable(q: &UniformQuantizer) -> bool {
+    q.levels <= MAX_VECTOR_LEVELS && q.scale.is_finite() && q.inv_scale.is_finite()
+}
+
+/// Slice form of [`UniformQuantizer::index`] (Eq. (1)): clip each `x` to
+/// `[c_min, c_max]` (NaN→`c_min`) and write its quantizer index.
+/// `out.len()` must equal `xs.len()`.
+pub fn quantize_slice(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
+    assert_eq!(xs.len(), out.len(), "quantize_slice length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if uniform_vectorizable(q) {
+        match level() {
+            Level::Avx2 => return unsafe { x86::quantize_avx2(q, xs, out) },
+            Level::Sse2 => return unsafe { x86::quantize_sse2(q, xs, out) },
+            Level::Scalar => {}
+        }
+    }
+    scalar::quantize_slice(q, xs, out);
+}
+
+/// Slice form of [`UniformQuantizer::reconstruct`]: map each index (all
+/// `< levels`) to its reconstruction value. `out.len()` must equal
+/// `idx.len()`.
+pub fn reconstruct_slice(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
+    assert_eq!(idx.len(), out.len(), "reconstruct_slice length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if uniform_vectorizable(q) {
+        match level() {
+            Level::Avx2 => return unsafe { x86::reconstruct_avx2(q, idx, out) },
+            Level::Sse2 => return unsafe { x86::reconstruct_sse2(q, idx, out) },
+            Level::Scalar => {}
+        }
+    }
+    scalar::reconstruct_slice(q, idx, out);
+}
+
+/// Slice form of [`UniformQuantizer::fake_quant`] — the fused
+/// clip→quantize→dequantize map the cloud half receives. `out.len()`
+/// must equal `xs.len()`.
+pub fn fake_quant_slice(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len(), "fake_quant_slice length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if uniform_vectorizable(q) {
+        match level() {
+            Level::Avx2 => return unsafe { x86::fake_quant_avx2(q, xs, out) },
+            Level::Sse2 => return unsafe { x86::fake_quant_sse2(q, xs, out) },
+            Level::Scalar => {}
+        }
+    }
+    scalar::fake_quant_slice(q, xs, out);
+}
+
+/// Slice form of [`NonUniformQuantizer::index`], vectorized for the
+/// small-N linear-scan regime (`thresholds.len() <=
+/// LINEAR_SCAN_MAX_THRESHOLDS`): each lane counts how many leading
+/// thresholds its clipped value reaches, with the scan's early-`break`
+/// semantics reproduced by an accumulated "alive" mask (so crafted
+/// unsorted threshold vectors agree too). Larger quantizers use the
+/// scalar `partition_point` path. `out.len()` must equal `xs.len()`.
+pub fn nonuniform_index_slice(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
+    assert_eq!(xs.len(), out.len(), "nonuniform_index_slice length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if q.thresholds.len() <= NonUniformQuantizer::LINEAR_SCAN_MAX_THRESHOLDS {
+        match level() {
+            Level::Avx2 => return unsafe { x86::nonuniform_avx2(q, xs, out) },
+            Level::Sse2 => return unsafe { x86::nonuniform_sse2(q, xs, out) },
+            Level::Scalar => {}
+        }
+    }
+    scalar::nonuniform_index_slice(q, xs, out);
+}
+
+/// Total truncated-unary bit count of an index slice — the batched
+/// binarization pass behind [`binarize::codeword_bits`]: per lane,
+/// `min(n + 1, levels - 1)` (the unary run plus its terminator, capped
+/// at the terminator-free longest codeword), horizontally summed. Every
+/// index must be `< levels`; `levels >= 2`.
+pub fn tu_bit_count(indices: &[u16], levels: usize) -> u64 {
+    debug_assert!(levels >= 2);
+    #[cfg(target_arch = "x86_64")]
+    if levels < MAX_VECTOR_LEVELS {
+        match level() {
+            Level::Avx2 => return unsafe { x86::tu_bits_avx2(indices, levels) },
+            Level::Sse2 => return unsafe { x86::tu_bits_sse2(indices, levels) },
+            Level::Scalar => {}
+        }
+    }
+    binarize::codeword_bits(indices, levels)
+}
+
+/// The scalar twins: per-element loops over the original methods. These
+/// are the reference the vector kernels are differential-tested against,
+/// and the only implementation on non-x86_64 targets (or under
+/// `LWFC_FORCE_SCALAR=1`).
+pub mod scalar {
+    use super::super::binarize;
+    use super::super::ecq::NonUniformQuantizer;
+    use super::super::uniform::UniformQuantizer;
+
+    /// Scalar twin of [`super::quantize_slice`].
+    pub fn quantize_slice(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
+        for (slot, &x) in out.iter_mut().zip(xs) {
+            *slot = q.index(x);
+        }
+    }
+
+    /// Scalar twin of [`super::reconstruct_slice`].
+    pub fn reconstruct_slice(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
+        for (slot, &n) in out.iter_mut().zip(idx) {
+            *slot = q.reconstruct(n);
+        }
+    }
+
+    /// Scalar twin of [`super::fake_quant_slice`].
+    pub fn fake_quant_slice(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
+        for (slot, &x) in out.iter_mut().zip(xs) {
+            *slot = q.fake_quant(x);
+        }
+    }
+
+    /// Scalar twin of [`super::nonuniform_index_slice`].
+    pub fn nonuniform_index_slice(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
+        for (slot, &x) in out.iter_mut().zip(xs) {
+            *slot = q.index(x);
+        }
+    }
+
+    /// Scalar twin of [`super::tu_bit_count`].
+    pub fn tu_bit_count(indices: &[u16], levels: usize) -> u64 {
+        binarize::codeword_bits(indices, levels)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::ecq::NonUniformQuantizer;
+    use super::super::uniform::UniformQuantizer;
+    use super::scalar;
+    use std::arch::x86_64::*;
+
+    // Flush cadence for the 16-bit multiply-add accumulator in the TU
+    // kernels: each madd lane holds sums of pairs <= 2 * (2^15 - 1), so
+    // 8192 accumulations stay well inside i32.
+    const TU_FLUSH_CHUNKS: usize = 8192;
+
+    #[inline]
+    unsafe fn hsum_epi32_256(v: __m256i) -> u64 {
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes.iter().map(|&l| l as u64).sum()
+    }
+
+    #[inline]
+    unsafe fn hsum_epi32_128(v: __m128i) -> u64 {
+        let mut lanes = [0i32; 4];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, v);
+        lanes.iter().map(|&l| l as u64).sum()
+    }
+
+    // --- clip helpers -----------------------------------------------------
+    //
+    // clip(x) = c_max if x >= c_max; c_min if x <= c_min or x is NaN;
+    // else x. The two range predicates are mutually exclusive (the
+    // constructor guarantees c_max > c_min) and both reject NaN
+    // (ordered compares), so blending high then low in either order
+    // reproduces the scalar branch chain exactly.
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn clip_avx2(x: __m256, vmin: __m256, vmax: __m256) -> __m256 {
+        let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(x, vmax);
+        let le = _mm256_cmp_ps::<_CMP_LE_OQ>(x, vmin);
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+        let low = _mm256_or_ps(le, nan);
+        let xc = _mm256_blendv_ps(x, vmax, ge);
+        _mm256_blendv_ps(xc, vmin, low)
+    }
+
+    // SSE2 has no blendv: select(mask, a, b) = (mask & a) | (!mask & b).
+    #[inline]
+    #[target_feature(enable = "sse2")]
+    unsafe fn select_ps(mask: __m128, a: __m128, b: __m128) -> __m128 {
+        _mm_or_ps(_mm_and_ps(mask, a), _mm_andnot_ps(mask, b))
+    }
+
+    #[inline]
+    #[target_feature(enable = "sse2")]
+    unsafe fn clip_sse2(x: __m128, vmin: __m128, vmax: __m128) -> __m128 {
+        let ge = _mm_cmpge_ps(x, vmax);
+        let le = _mm_cmple_ps(x, vmin);
+        let nan = _mm_cmpunord_ps(x, x);
+        let low = _mm_or_ps(le, nan);
+        let xc = select_ps(ge, vmax, x);
+        select_ps(low, vmin, xc)
+    }
+
+    // --- quantize (Eq. (1)) -----------------------------------------------
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quantize_avx2(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
+        let vmin = _mm256_set1_ps(q.c_min);
+        let vmax = _mm256_set1_ps(q.c_max);
+        let vscale = _mm256_set1_ps(q.scale);
+        let vhalf = _mm256_set1_ps(0.5);
+        let n8 = xs.len() & !7;
+        let mut i = 0;
+        while i < n8 {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let xc = clip_avx2(x, vmin, vmax);
+            // Separate multiply and add (the scalar path is not
+            // FMA-contracted), then truncate: the argument is >= 0.5,
+            // so truncation == floor == round-half-away-from-zero.
+            let v = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(xc, vmin), vscale), vhalf);
+            let n = _mm256_cvttps_epi32(v);
+            // 8 x i32 (all in 0..=MAX_VECTOR_LEVELS-1) -> 8 x u16. The
+            // in-lane pack duplicates each half; permute qwords 0,2 to
+            // the low 128 bits to restore element order.
+            let packed = _mm256_packus_epi32(n, n);
+            let ordered = _mm256_permute4x64_epi64::<0b11_01_10_00>(packed);
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(i) as *mut __m128i,
+                _mm256_castsi256_si128(ordered),
+            );
+            i += 8;
+        }
+        scalar::quantize_slice(q, &xs[n8..], &mut out[n8..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn quantize_sse2(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
+        let vmin = _mm_set1_ps(q.c_min);
+        let vmax = _mm_set1_ps(q.c_max);
+        let vscale = _mm_set1_ps(q.scale);
+        let vhalf = _mm_set1_ps(0.5);
+        let n4 = xs.len() & !3;
+        let mut i = 0;
+        while i < n4 {
+            let x = _mm_loadu_ps(xs.as_ptr().add(i));
+            let xc = clip_sse2(x, vmin, vmax);
+            let v = _mm_add_ps(_mm_mul_ps(_mm_sub_ps(xc, vmin), vscale), vhalf);
+            let n = _mm_cvttps_epi32(v);
+            // Values are < 2^15 (MAX_VECTOR_LEVELS gate), so the signed
+            // i32 -> i16 saturating pack is exact.
+            let packed = _mm_packs_epi32(n, n);
+            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, packed);
+            i += 4;
+        }
+        scalar::quantize_slice(q, &xs[n4..], &mut out[n4..]);
+    }
+
+    // --- reconstruct ------------------------------------------------------
+    //
+    // reconstruct(n) = c_max for the top bin (exact, no f32 drift at the
+    // clip limit), else c_min + n * inv_scale — same operation order as
+    // the scalar method, top bin patched in by an integer-compare blend.
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn reconstruct_avx2(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
+        let vmin = _mm256_set1_ps(q.c_min);
+        let vmax = _mm256_set1_ps(q.c_max);
+        let vinv = _mm256_set1_ps(q.inv_scale);
+        let top = _mm256_set1_epi32((q.levels - 1) as i32);
+        let n8 = idx.len() & !7;
+        let mut i = 0;
+        while i < n8 {
+            let raw = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            let n = _mm256_cvtepu16_epi32(raw);
+            let v = _mm256_add_ps(vmin, _mm256_mul_ps(_mm256_cvtepi32_ps(n), vinv));
+            let is_top = _mm256_cmpeq_epi32(n, top);
+            let v = _mm256_blendv_ps(v, vmax, _mm256_castsi256_ps(is_top));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        scalar::reconstruct_slice(q, &idx[n8..], &mut out[n8..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn reconstruct_sse2(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
+        let vmin = _mm_set1_ps(q.c_min);
+        let vmax = _mm_set1_ps(q.c_max);
+        let vinv = _mm_set1_ps(q.inv_scale);
+        let top = _mm_set1_epi32((q.levels - 1) as i32);
+        let zero = _mm_setzero_si128();
+        let n4 = idx.len() & !3;
+        let mut i = 0;
+        while i < n4 {
+            let raw = _mm_loadl_epi64(idx.as_ptr().add(i) as *const __m128i);
+            let n = _mm_unpacklo_epi16(raw, zero); // zero-extend u16 -> i32
+            let v = _mm_add_ps(vmin, _mm_mul_ps(_mm_cvtepi32_ps(n), vinv));
+            let is_top = _mm_castsi128_ps(_mm_cmpeq_epi32(n, top));
+            let v = select_ps(is_top, vmax, v);
+            _mm_storeu_ps(out.as_mut_ptr().add(i), v);
+            i += 4;
+        }
+        scalar::reconstruct_slice(q, &idx[n4..], &mut out[n4..]);
+    }
+
+    // --- fused fake-quant -------------------------------------------------
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fake_quant_avx2(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
+        let vmin = _mm256_set1_ps(q.c_min);
+        let vmax = _mm256_set1_ps(q.c_max);
+        let vscale = _mm256_set1_ps(q.scale);
+        let vinv = _mm256_set1_ps(q.inv_scale);
+        let vhalf = _mm256_set1_ps(0.5);
+        let top = _mm256_set1_epi32((q.levels - 1) as i32);
+        let n8 = xs.len() & !7;
+        let mut i = 0;
+        while i < n8 {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let xc = clip_avx2(x, vmin, vmax);
+            let v = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(xc, vmin), vscale), vhalf);
+            let n = _mm256_cvttps_epi32(v);
+            let r = _mm256_add_ps(vmin, _mm256_mul_ps(_mm256_cvtepi32_ps(n), vinv));
+            let is_top = _mm256_cmpeq_epi32(n, top);
+            let r = _mm256_blendv_ps(r, vmax, _mm256_castsi256_ps(is_top));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        scalar::fake_quant_slice(q, &xs[n8..], &mut out[n8..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn fake_quant_sse2(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
+        let vmin = _mm_set1_ps(q.c_min);
+        let vmax = _mm_set1_ps(q.c_max);
+        let vscale = _mm_set1_ps(q.scale);
+        let vinv = _mm_set1_ps(q.inv_scale);
+        let vhalf = _mm_set1_ps(0.5);
+        let top = _mm_set1_epi32((q.levels - 1) as i32);
+        let n4 = xs.len() & !3;
+        let mut i = 0;
+        while i < n4 {
+            let x = _mm_loadu_ps(xs.as_ptr().add(i));
+            let xc = clip_sse2(x, vmin, vmax);
+            let v = _mm_add_ps(_mm_mul_ps(_mm_sub_ps(xc, vmin), vscale), vhalf);
+            let n = _mm_cvttps_epi32(v);
+            let r = _mm_add_ps(vmin, _mm_mul_ps(_mm_cvtepi32_ps(n), vinv));
+            let is_top = _mm_castsi128_ps(_mm_cmpeq_epi32(n, top));
+            let r = select_ps(is_top, vmax, r);
+            _mm_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        scalar::fake_quant_slice(q, &xs[n4..], &mut out[n4..]);
+    }
+
+    // --- non-uniform index (small-N threshold scan) -----------------------
+    //
+    // The scalar linear scan counts leading thresholds with xc >= t and
+    // breaks at the first miss. Per lane that is an accumulated "alive"
+    // mask: a lane stops counting after its first failed compare, so
+    // later thresholds (sorted or not) can never resurrect it — the
+    // break semantics hold for arbitrary threshold vectors.
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn nonuniform_avx2(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
+        let vmin = _mm256_set1_ps(q.c_min);
+        let vmax = _mm256_set1_ps(q.c_max);
+        let n8 = xs.len() & !7;
+        let mut i = 0;
+        while i < n8 {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let xc = clip_avx2(x, vmin, vmax);
+            let mut n = _mm256_setzero_si256();
+            let mut alive = _mm256_set1_epi32(-1);
+            for &t in &q.thresholds {
+                let ge = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GE_OQ>(xc, _mm256_set1_ps(t)));
+                alive = _mm256_and_si256(alive, ge);
+                n = _mm256_sub_epi32(n, alive); // alive lanes are -1: count +1
+            }
+            let packed = _mm256_packus_epi32(n, n);
+            let ordered = _mm256_permute4x64_epi64::<0b11_01_10_00>(packed);
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(i) as *mut __m128i,
+                _mm256_castsi256_si128(ordered),
+            );
+            i += 8;
+        }
+        scalar::nonuniform_index_slice(q, &xs[n8..], &mut out[n8..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn nonuniform_sse2(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
+        let vmin = _mm_set1_ps(q.c_min);
+        let vmax = _mm_set1_ps(q.c_max);
+        let n4 = xs.len() & !3;
+        let mut i = 0;
+        while i < n4 {
+            let x = _mm_loadu_ps(xs.as_ptr().add(i));
+            let xc = clip_sse2(x, vmin, vmax);
+            let mut n = _mm_setzero_si128();
+            let mut alive = _mm_set1_epi32(-1);
+            for &t in &q.thresholds {
+                let ge = _mm_castps_si128(_mm_cmpge_ps(xc, _mm_set1_ps(t)));
+                alive = _mm_and_si128(alive, ge);
+                n = _mm_sub_epi32(n, alive);
+            }
+            // Counts are <= LINEAR_SCAN_MAX_THRESHOLDS: signed pack exact.
+            let packed = _mm_packs_epi32(n, n);
+            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, packed);
+            i += 4;
+        }
+        scalar::nonuniform_index_slice(q, &xs[n4..], &mut out[n4..]);
+    }
+
+    // --- truncated-unary bit counting -------------------------------------
+    //
+    // codeword_len(n) = min(n + 1, levels - 1) for levels >= 2 (the unary
+    // run plus terminator, capped at the terminator-free top codeword).
+    // 16 u16 lanes per step; madd with 1s pairs the i16 lengths into i32
+    // partial sums, flushed to u64 before they can overflow.
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tu_bits_avx2(indices: &[u16], levels: usize) -> u64 {
+        let one = _mm256_set1_epi16(1);
+        let cap = _mm256_set1_epi16((levels - 1) as i16);
+        let mut total = 0u64;
+        let mut acc = _mm256_setzero_si256();
+        let mut pending = 0usize;
+        let n16 = indices.len() & !15;
+        let mut i = 0;
+        while i < n16 {
+            let v = _mm256_loadu_si256(indices.as_ptr().add(i) as *const __m256i);
+            let len = _mm256_min_epu16(_mm256_adds_epu16(v, one), cap);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(len, one));
+            i += 16;
+            pending += 1;
+            if pending == TU_FLUSH_CHUNKS {
+                total += hsum_epi32_256(acc);
+                acc = _mm256_setzero_si256();
+                pending = 0;
+            }
+        }
+        total += hsum_epi32_256(acc);
+        total + scalar::tu_bit_count(&indices[n16..], levels)
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn tu_bits_sse2(indices: &[u16], levels: usize) -> u64 {
+        let one = _mm_set1_epi16(1);
+        let cap = _mm_set1_epi16((levels - 1) as i16);
+        let mut total = 0u64;
+        let mut acc = _mm_setzero_si128();
+        let mut pending = 0usize;
+        let n8 = indices.len() & !7;
+        let mut i = 0;
+        while i < n8 {
+            let v = _mm_loadu_si128(indices.as_ptr().add(i) as *const __m128i);
+            // Both operands are < 2^15 (gate), so the signed min is exact.
+            let len = _mm_min_epi16(_mm_adds_epu16(v, one), cap);
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(len, one));
+            i += 8;
+            pending += 1;
+            if pending == TU_FLUSH_CHUNKS {
+                total += hsum_epi32_128(acc);
+                acc = _mm_setzero_si128();
+                pending = 0;
+            }
+        }
+        total += hsum_epi32_128(acc);
+        total + scalar::tu_bit_count(&indices[n8..], levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::SplitMix64;
+
+    /// Adversarial f32 soup: NaN, ±inf, subnormals, exact boundaries,
+    /// values epsilon-straddling `c_min`/`c_max`, and ordinary range.
+    fn adversarial(n: usize, c_min: f32, c_max: f32, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        let span = c_max - c_min;
+        (0..n)
+            .map(|_| match rng.next_u64() % 12 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => f32::MIN_POSITIVE / 2.0, // subnormal
+                4 => -f32::MIN_POSITIVE / 2.0,
+                5 => c_min,
+                6 => c_max,
+                7 => c_min - f32::EPSILON * span,
+                8 => c_max + f32::EPSILON * span,
+                9 => c_min + span * (rng.next_f64() as f32) * 1e-6,
+                _ => c_min - span * 0.25 + span * 1.5 * rng.next_f64() as f32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantize_matches_scalar_on_adversarial_inputs() {
+        prop_check("simd_quantize", 40, |g| {
+            let levels = *g.choice(&[2usize, 3, 4, 8, 17, 255, 509]);
+            let c_min = g.f32_in(-8.0, 2.0);
+            let c_max = c_min + g.f32_in(0.1, 20.0);
+            let n = g.usize_in(0, 600); // hits every tail length
+            let q = UniformQuantizer::new(c_min, c_max, levels);
+            let xs = adversarial(n, c_min, c_max, g.usize_in(0, 1 << 30) as u64);
+            let mut fast = vec![0u16; n];
+            let mut slow = vec![0u16; n];
+            quantize_slice(&q, &xs, &mut fast);
+            scalar::quantize_slice(&q, &xs, &mut slow);
+            crate::prop_assert!(fast == slow, "quantize diverged (levels={levels}, n={n})");
+
+            let mut rf = vec![0f32; n];
+            let mut rs = vec![0f32; n];
+            reconstruct_slice(&q, &fast, &mut rf);
+            scalar::reconstruct_slice(&q, &slow, &mut rs);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            crate::prop_assert!(bits(&rf) == bits(&rs), "reconstruct diverged");
+
+            let mut ff = vec![0f32; n];
+            let mut fs = vec![0f32; n];
+            fake_quant_slice(&q, &xs, &mut ff);
+            scalar::fake_quant_slice(&q, &xs, &mut fs);
+            crate::prop_assert!(bits(&ff) == bits(&fs), "fake_quant diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nonuniform_matches_scalar_including_duplicate_thresholds() {
+        prop_check("simd_nonuniform", 30, |g| {
+            let levels = g.usize_in(2, 17); // <= LINEAR_SCAN_MAX_THRESHOLDS + 1
+            let c_min = g.f32_in(-4.0, 0.0);
+            let c_max = c_min + g.f32_in(0.5, 12.0);
+            let mut thresholds: Vec<f32> =
+                (0..levels - 1).map(|_| g.f32_in(c_min, c_max)).collect();
+            thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if g.bool() && thresholds.len() >= 2 {
+                thresholds[1] = thresholds[0]; // duplicates stay exact
+            }
+            let q = NonUniformQuantizer {
+                recon: (0..levels).map(|i| c_min + i as f32).collect(),
+                thresholds,
+                c_min,
+                c_max,
+            };
+            let n = g.usize_in(0, 300);
+            let xs = adversarial(n, c_min, c_max, g.usize_in(0, 1 << 30) as u64);
+            let mut fast = vec![0u16; n];
+            let mut slow = vec![0u16; n];
+            nonuniform_index_slice(&q, &xs, &mut fast);
+            scalar::nonuniform_index_slice(&q, &xs, &mut slow);
+            // Exact-threshold hits are the sharp edge: include them.
+            crate::prop_assert!(fast == slow, "nonuniform index diverged (levels={levels})");
+            for &t in &q.thresholds {
+                let mut a = [0u16; 9];
+                let mut b = [0u16; 9];
+                let probe = [t; 9];
+                nonuniform_index_slice(&q, &probe, &mut a);
+                scalar::nonuniform_index_slice(&q, &probe, &mut b);
+                crate::prop_assert!(a == b, "exact threshold {t} diverged");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tu_bit_count_matches_scalar_for_all_alphabets() {
+        prop_check("simd_tu_bits", 40, |g| {
+            // Covers the widened inter alphabet (2*levels - 1) too.
+            let levels = *g.choice(&[2usize, 3, 4, 8, 255, 509]);
+            let n = g.usize_in(0, 2000);
+            let mut rng = SplitMix64::new(g.usize_in(0, 1 << 30) as u64);
+            let idx: Vec<u16> = (0..n).map(|_| (rng.next_u64() % levels as u64) as u16).collect();
+            let fast = tu_bit_count(&idx, levels);
+            let slow = scalar::tu_bit_count(&idx, levels);
+            crate::prop_assert!(fast == slow, "tu bits diverged: {fast} vs {slow} (levels={levels})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tu_flush_cadence_is_exercised() {
+        // Longer than one flush window at max codeword length, so the
+        // periodic u64 spill path actually runs.
+        let levels = 509usize;
+        let idx = vec![(levels - 1) as u16; 200_000];
+        assert_eq!(
+            tu_bit_count(&idx, levels),
+            200_000u64 * (levels as u64 - 1)
+        );
+    }
+
+    #[test]
+    fn active_reports_a_known_kernel_set() {
+        let a = active();
+        assert!(["scalar", "sse2", "avx2"].contains(&a), "unknown kernel set {a}");
+        if force_scalar() {
+            assert_eq!(a, "scalar", "LWFC_FORCE_SCALAR=1 must pin the scalar path");
+        }
+    }
+
+    #[test]
+    fn oversized_levels_fall_back_to_scalar_and_agree() {
+        // Above MAX_VECTOR_LEVELS the dispatcher must still answer (via
+        // the scalar twin), not truncate through a saturating pack.
+        let q = UniformQuantizer::new(0.0, 1.0, MAX_VECTOR_LEVELS + 1);
+        let xs: Vec<f32> = (0..37).map(|i| i as f32 / 36.0).collect();
+        let mut fast = vec![0u16; xs.len()];
+        let mut slow = vec![0u16; xs.len()];
+        quantize_slice(&q, &xs, &mut fast);
+        scalar::quantize_slice(&q, &xs, &mut slow);
+        assert_eq!(fast, slow);
+    }
+}

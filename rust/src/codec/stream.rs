@@ -47,6 +47,17 @@ impl Quantizer {
         }
     }
 
+    /// Quantize a whole slice into `out` through the runtime-dispatched
+    /// SIMD kernels (bit-exact with an [`Quantizer::index`] element
+    /// loop; see [`super::simd`]) — the batched front half every entropy
+    /// backend's encode path runs.
+    pub fn fill_indices(&self, xs: &[f32], out: &mut Vec<u16>) {
+        match self {
+            Quantizer::Uniform(q) => q.indices(xs, out),
+            Quantizer::NonUniform(q) => q.indices(xs, out),
+        }
+    }
+
     #[inline]
     pub fn reconstruct(&self, n: u16) -> f32 {
         match self {

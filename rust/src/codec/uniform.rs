@@ -31,8 +31,10 @@ pub struct UniformQuantizer {
     pub c_min: f32,
     pub c_max: f32,
     pub levels: usize,
-    scale: f32,     // (N-1) / (c_max - c_min)
-    inv_scale: f32, // (c_max - c_min) / (N-1)
+    // Derived factors (crate-visible so the `codec::simd` kernels can
+    // broadcast them; still not settable from outside the constructor).
+    pub(crate) scale: f32,     // (N-1) / (c_max - c_min)
+    pub(crate) inv_scale: f32, // (c_max - c_min) / (N-1)
 }
 
 impl UniformQuantizer {
@@ -83,14 +85,29 @@ impl UniformQuantizer {
         self.reconstruct(self.index(x))
     }
 
+    /// Quantize a slice through the runtime-dispatched SIMD kernel
+    /// (bit-exact with the per-element [`Self::index`] loop; see
+    /// [`super::simd`]).
     pub fn indices(&self, xs: &[f32], out: &mut Vec<u16>) {
         out.clear();
-        out.extend(xs.iter().map(|&x| self.index(x)));
+        out.resize(xs.len(), 0);
+        super::simd::quantize_slice(self, xs, out);
     }
 
+    /// Reconstruct a slice through the runtime-dispatched SIMD kernel
+    /// (bit-exact with the per-element [`Self::reconstruct`] loop).
     pub fn reconstruct_all(&self, idx: &[u16], out: &mut Vec<f32>) {
         out.clear();
-        out.extend(idx.iter().map(|&n| self.reconstruct(n)));
+        out.resize(idx.len(), 0.0);
+        super::simd::reconstruct_slice(self, idx, out);
+    }
+
+    /// Fused clip→quantize→dequantize over a slice (SIMD-dispatched
+    /// [`Self::fake_quant`]).
+    pub fn fake_quant_all(&self, xs: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(xs.len(), 0.0);
+        super::simd::fake_quant_slice(self, xs, out);
     }
 
     /// Reconstruction levels (for header signaling / ECQ comparison).

@@ -49,6 +49,7 @@ pub struct CloudTimes {
     /// tiles it holds.
     pub cabac_items: u64,
     pub rans_items: u64,
+    pub rans4_items: u64,
     /// Tiles that arrived inter-coded (container v4; a `--video` edge).
     pub inter_tiles: u64,
     /// Tiles the tolerant decode filled instead of decoding — corrupt
@@ -262,6 +263,7 @@ fn decode_items(
         match info.entropy {
             Some(EntropyKind::Cabac) => times.cabac_items += 1,
             Some(EntropyKind::Rans) => times.rans_items += 1,
+            Some(EntropyKind::Rans4) => times.rans4_items += 1,
             None => {}
         }
         times.inter_tiles += info.inter_substreams as u64;

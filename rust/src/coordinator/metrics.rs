@@ -244,7 +244,7 @@ impl ServeReport {
             "task={} requests={} {}={:.4} rate={:.4} bits/elem\n\
              wall={:.2}s throughput={:.1} req/s latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
              edge: datagen={:.2}s infer={:.2}s encode={:.2}s ({} items, {} bytes)\n\
-             cloud: decode={:.2}s infer={:.2}s post={:.2}s ({} items; {} cabac / {} rans)",
+             cloud: decode={:.2}s infer={:.2}s post={:.2}s ({} items; {} cabac / {} rans / {} rans4)",
             self.task,
             self.requests,
             self.metric_name,
@@ -266,6 +266,7 @@ impl ServeReport {
             self.cloud.items,
             self.cloud.cabac_items,
             self.cloud.rans_items,
+            self.cloud.rans4_items,
         )
     }
 }

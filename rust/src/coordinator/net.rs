@@ -13,7 +13,8 @@
 //!        3 = stream reset)
 //! 6      task code (TaskKind::code — both peers must serve the same net)
 //! 7      v2+ item frames: entropy-backend advertisement
-//!        (0 = unspecified, 1 = CABAC, 2 = rANS);
+//!        (0 = unspecified, else backend id + 1: 1 = CABAC, 2 = rANS,
+//!        4 = rANS4 — 3 would be the unassigned backend id 2);
 //!        v1 frames and all outcome/BUSY frames: reserved (must be 0)
 //! 8-15   request id (u64; 0 for BUSY)
 //! 16-23  image index (u64; 0 for BUSY)
@@ -1823,7 +1824,11 @@ mod tests {
     fn item_frames_advertise_their_entropy_backend() {
         use crate::codec::{Encoder, EncoderConfig, Quantizer, UniformQuantizer};
         let xs: Vec<f32> = (0..256).map(|i| (i % 7) as f32 * 0.3).collect();
-        for (kind, want_hint) in [(EntropyKind::Cabac, 1u8), (EntropyKind::Rans, 2u8)] {
+        for (kind, want_hint) in [
+            (EntropyKind::Cabac, 1u8),
+            (EntropyKind::Rans, 2u8),
+            (EntropyKind::Rans4, 4u8),
+        ] {
             let cfg = EncoderConfig::classification(
                 Quantizer::Uniform(UniformQuantizer::new(0.0, 2.0, 4)),
                 32,
@@ -1849,7 +1854,8 @@ mod tests {
             bad[7] = if want_hint == 1 { 2 } else { 1 };
             let err = read_frame(&mut bad.as_slice(), None).unwrap_err();
             assert!(err.to_string().contains("advertises"), "got: {err}");
-            // An undefined advertisement code is rejected outright.
+            // An undefined advertisement code is rejected outright
+            // (hint 3 = the unassigned backend id 2).
             let mut bad = buf.clone();
             bad[7] = 3;
             assert!(read_frame(&mut bad.as_slice(), None).is_err());

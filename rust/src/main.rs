@@ -199,8 +199,9 @@ fn cmd_serve(raw: Vec<String>) -> Result<()> {
         .opt(
             "entropy",
             "cabac",
-            "entropy backend the edge devices encode with: cabac (adaptive, best rate) \
-             or rans (interleaved rANS, static tables, fastest); decode auto-detects",
+            "entropy backend the edge devices encode with: cabac (adaptive, best rate), \
+             rans (2-way interleaved rANS, static tables) or rans4 (4-way interleave, \
+             fastest decode); decode auto-detects",
         )
         .opt(
             "transport",
@@ -357,7 +358,7 @@ fn cmd_edge(raw: Vec<String>) -> Result<()> {
         .opt(
             "entropy",
             "cabac",
-            "entropy backend this device encodes with: cabac or rans \
+            "entropy backend this device encodes with: cabac, rans or rans4 \
              (the cloud daemon auto-detects, so mixed fleets are fine)",
         )
         .opt("window", "8", "in-flight items on the wire before blocking on outcomes")
@@ -532,8 +533,9 @@ fn cmd_encode(raw: Vec<String>) -> Result<()> {
         .opt(
             "entropy",
             "cabac",
-            "entropy backend: cabac (adaptive, best rate) or rans \
-             (interleaved rANS with static tables, fastest)",
+            "entropy backend: cabac (adaptive, best rate), rans (2-way \
+             interleaved rANS with static tables) or rans4 (4-way \
+             interleave, fastest decode)",
         )
         .flag(
             "inter",
@@ -670,8 +672,8 @@ fn cmd_decode(raw: Vec<String>) -> Result<()> {
         .opt(
             "entropy",
             "",
-            "expected entropy backend (cabac or rans): fail if the stream was encoded \
-             with a different one (default: auto-detect from the stream header)",
+            "expected entropy backend (cabac, rans or rans4): fail if the stream was \
+             encoded with a different one (default: auto-detect from the stream header)",
         )
         .flag(
             "inter",

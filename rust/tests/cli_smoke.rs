@@ -233,6 +233,86 @@ fn encode_rans_decode_auto_detects() {
 }
 
 #[test]
+fn encode_rans4_decode_auto_detects() {
+    // The 4-way interleaved backend rides the same flag surface:
+    // `--entropy rans4` at encode time, auto-detection at decode time,
+    // and a hard error when the decoder pins any other backend —
+    // including the 2-way rANS sibling, whose payload layout differs.
+    for threads in ["1", "4"] {
+        let n = 20_000usize;
+        let xs = test_tensor(n);
+        let input = temp_path(&format!("rans4_{threads}.f32"));
+        let stream = temp_path(&format!("rans4_{threads}.lwfc"));
+        let output = temp_path(&format!("rans4_{threads}.out.f32"));
+        write_f32(&input, &xs);
+
+        let enc = lwfc()
+            .args(["encode", "--input"])
+            .arg(&input)
+            .arg("--output")
+            .arg(&stream)
+            .args(["--levels", "4", "--c-min", "0", "--c-max", "6"])
+            .args(["--entropy", "rans4", "--threads", threads, "--tile", "4096"])
+            .output()
+            .unwrap();
+        assert!(
+            enc.status.success(),
+            "rans4 encode failed: {}",
+            String::from_utf8_lossy(&enc.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&enc.stdout);
+        assert!(stdout.contains("rans4 entropy"), "stdout: {stdout}");
+
+        let mut dec_cmd = lwfc();
+        dec_cmd
+            .args(["decode", "--input"])
+            .arg(&stream)
+            .arg("--output")
+            .arg(&output);
+        if threads == "1" {
+            dec_cmd.args(["--elements", &n.to_string()]);
+        }
+        let dec = dec_cmd.output().unwrap();
+        assert!(
+            dec.status.success(),
+            "rans4 decode failed: {}",
+            String::from_utf8_lossy(&dec.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&dec.stdout);
+        assert!(stdout.contains("rans4 entropy"), "decode stdout: {stdout}");
+
+        let got = read_f32(&output);
+        let q = UniformQuantizer::new(0.0, 6.0, 4);
+        assert_eq!(got.len(), n);
+        for (i, (&x, &y)) in xs.iter().zip(&got).enumerate() {
+            assert_eq!(y, q.fake_quant(x), "element {i} (threads {threads})");
+        }
+
+        // Pinning either other backend with --entropy is a hard error.
+        for pin in ["cabac", "rans"] {
+            let bad = lwfc()
+                .args(["decode", "--input"])
+                .arg(&stream)
+                .arg("--output")
+                .arg(&output)
+                .args(["--elements", &n.to_string(), "--entropy", pin])
+                .output()
+                .unwrap();
+            assert!(
+                !bad.status.success(),
+                "--entropy {pin} accepted a rans4 stream"
+            );
+            let stderr = String::from_utf8_lossy(&bad.stderr);
+            assert!(stderr.contains("rans4"), "stderr: {stderr}");
+        }
+
+        for p in [input, stream, output] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[test]
 fn encode_decode_roundtrip_empty_batched() {
     // A zero-element tensor must survive the batched container round trip
     // (the container ships one empty substream carrying the codec header).
@@ -374,6 +454,7 @@ fn serve_and_edge_advertise_network_modes() {
     assert!(text.contains("--listen"), "serve help: {text}");
     assert!(text.contains("--transport"), "serve help: {text}");
     assert!(text.contains("--entropy"), "serve help: {text}");
+    assert!(text.contains("rans4"), "serve help: {text}");
 
     let edge = lwfc().args(["edge", "--help"]).output().unwrap();
     let text = format!(
@@ -384,6 +465,7 @@ fn serve_and_edge_advertise_network_modes() {
     assert!(text.contains("--connect"), "edge help: {text}");
     assert!(text.contains("--window"), "edge help: {text}");
     assert!(text.contains("--entropy"), "edge help: {text}");
+    assert!(text.contains("rans4"), "edge help: {text}");
     assert!(text.contains("--video"), "edge help: {text}");
     assert!(text.contains("--hold"), "edge help: {text}");
 
@@ -395,8 +477,18 @@ fn serve_and_edge_advertise_network_modes() {
     );
     assert!(text.contains("--entropy"), "encode help: {text}");
     assert!(text.contains("rans"), "encode help: {text}");
+    assert!(text.contains("rans4"), "encode help: {text}");
     assert!(text.contains("--frames"), "encode help: {text}");
     assert!(text.contains("--inter"), "encode help: {text}");
+
+    let decode = lwfc().args(["decode", "--help"]).output().unwrap();
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&decode.stdout),
+        String::from_utf8_lossy(&decode.stderr)
+    );
+    assert!(text.contains("--entropy"), "decode help: {text}");
+    assert!(text.contains("rans4"), "decode help: {text}");
 }
 
 #[test]

@@ -1,11 +1,13 @@
-//! Cross-backend differential tests: CABAC and interleaved rANS are two
-//! independent implementations of the same entropy stage, so for ANY
-//! tensor, clip range and level count they must round-trip to identical
-//! quantizer indices, report consistent rates, and disagree only in
-//! payload bytes. Corruption robustness is asymmetric by design — CABAC
-//! self-synchronizes to *some* in-range indices, while rANS carries
-//! integrity checks (final-state + full-consumption) and must turn
-//! truncated or corrupted payloads into typed `Err`s, never a panic.
+//! Cross-backend differential tests: CABAC and interleaved rANS (both
+//! the 2-way and the 4-way backend) are independent implementations of
+//! the same entropy stage, so for ANY tensor, clip range and level count
+//! they must round-trip to identical quantizer indices, report
+//! consistent rates, and disagree only in payload bytes. Corruption
+//! robustness is asymmetric by design — CABAC self-synchronizes to
+//! *some* in-range indices, while rANS carries integrity checks
+//! (final-state + full-consumption, at every interleave width) and must
+//! turn truncated or corrupted payloads into typed `Err`s, never a
+//! panic.
 //!
 //! Also covers the serving-path acceptance: a rANS-encoded stream
 //! round-trips through the pipeline over a real localhost TCP transport
@@ -33,11 +35,12 @@ fn session(quant: impl Into<QuantSpec>, entropy: EntropyKind, elements: usize) -
         .build()
 }
 
-/// Encode `xs` with both backends and return the two streams.
-fn encode_both(levels: usize, c_max: f32, xs: &[f32]) -> (Vec<u8>, Vec<u8>) {
+/// Encode `xs` with all three backends and return the three streams.
+fn encode_all(levels: usize, c_max: f32, xs: &[f32]) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
     let cabac = session(uniform(levels, c_max), EntropyKind::Cabac, xs.len()).encode(xs);
     let rans = session(uniform(levels, c_max), EntropyKind::Rans, xs.len()).encode(xs);
-    (cabac.bytes, rans.bytes)
+    let rans4 = session(uniform(levels, c_max), EntropyKind::Rans4, xs.len()).encode(xs);
+    (cabac.bytes, rans.bytes, rans4.bytes)
 }
 
 #[test]
@@ -50,14 +53,17 @@ fn backends_roundtrip_to_identical_indices() {
         let xs = g.activation_vec(n, scale);
         let q = Quantizer::Uniform(UniformQuantizer::new(0.0, c_max, levels));
 
-        let (cb, rb) = encode_both(levels, c_max, &xs);
+        let (cb, rb, r4b) = encode_all(levels, c_max, &xs);
         let mut codec = session(uniform(levels, c_max), EntropyKind::Cabac, n);
         let (ci, ch) = codec.decode_indices(&cb).map_err(|e| e.to_string())?;
         let (ri, rh) = codec.decode_indices(&rb).map_err(|e| e.to_string())?;
+        let (r4i, r4h) = codec.decode_indices(&r4b).map_err(|e| e.to_string())?;
         prop_assert!(ch.entropy == EntropyKind::Cabac, "cabac header backend");
         prop_assert!(rh.entropy == EntropyKind::Rans, "rans header backend");
+        prop_assert!(r4h.entropy == EntropyKind::Rans4, "rans4 header backend");
         prop_assert!(ci == ri, "index mismatch (n={n} levels={levels})");
-        // Both agree with the quantizer applied directly.
+        prop_assert!(ci == r4i, "rans4 index mismatch (n={n} levels={levels})");
+        // All agree with the quantizer applied directly.
         for (i, &x) in xs.iter().enumerate() {
             prop_assert!(
                 ci[i] == q.index(x),
@@ -67,7 +73,9 @@ fn backends_roundtrip_to_identical_indices() {
         // And the reconstructions agree value-for-value.
         let cv = codec.decode(&cb).map_err(|e| e.to_string())?.values;
         let rv = codec.decode(&rb).map_err(|e| e.to_string())?.values;
+        let r4v = codec.decode(&r4b).map_err(|e| e.to_string())?.values;
         prop_assert!(cv == rv, "reconstruction mismatch (n={n} levels={levels})");
+        prop_assert!(cv == r4v, "rans4 reconstruction mismatch (n={n} levels={levels})");
         Ok(())
     });
 }
@@ -78,15 +86,16 @@ fn backends_report_consistent_bits_per_element() {
         let n = g.usize_in(64, 30_000);
         let levels = *g.choice(&[2usize, 3, 4, 8]);
         let xs = g.activation_vec(n, 0.4);
-        for entropy in [EntropyKind::Cabac, EntropyKind::Rans] {
+        for entropy in [EntropyKind::Cabac, EntropyKind::Rans, EntropyKind::Rans4] {
             let stream = session(uniform(levels, 2.0), entropy, n).encode(&xs);
             let bpe = stream.bits_per_element();
             // The reported metric is exactly stream size over elements …
             let expect = stream.bytes.len() as f64 * 8.0 / n as f64;
             prop_assert!(bpe == expect, "bpe metric inconsistent for {entropy}");
             // … and stays below the raw TU ceiling plus side info (tables
-            // + states for rANS; the 12-byte header for both).
-            let side = 12.0 + 2.0 * (levels - 1) as f64 + 8.0 + 5.0;
+            // + initial states for rANS — 16 bytes at the 4-way width —
+            // and the 12-byte header for all backends).
+            let side = 12.0 + 2.0 * (levels - 1) as f64 + 16.0 + 5.0;
             let bound = (levels - 1) as f64 + 0.1 + side * 8.0 / n as f64;
             prop_assert!(
                 bpe < bound,
@@ -116,13 +125,25 @@ fn backends_agree_on_ecq_streams() {
             xs.len(),
         )
         .encode(&xs);
+        let r4b = session(
+            Quantizer::NonUniform(d.quantizer.clone()),
+            EntropyKind::Rans4,
+            xs.len(),
+        )
+        .encode(&xs);
         let mut codec = session(uniform(levels, 2.0), EntropyKind::Cabac, xs.len());
         let (ci, _) = codec.decode_indices(&cb.bytes).map_err(|e| e.to_string())?;
         let (ri, rh) = codec.decode_indices(&rb.bytes).map_err(|e| e.to_string())?;
+        let (r4i, r4h) = codec.decode_indices(&r4b.bytes).map_err(|e| e.to_string())?;
         prop_assert!(ci == ri, "ECQ index mismatch (levels={levels})");
+        prop_assert!(ci == r4i, "ECQ rans4 index mismatch (levels={levels})");
         prop_assert!(
             rh.recon.as_ref() == Some(&d.quantizer.recon),
             "rANS ECQ header lost the recon table"
+        );
+        prop_assert!(
+            r4h.recon.as_ref() == Some(&d.quantizer.recon),
+            "rans4 ECQ header lost the recon table"
         );
         Ok(())
     });
@@ -133,8 +154,9 @@ fn corrupt_or_truncated_rans_streams_error_not_panic() {
     prop_check("diff_rans_corruption", 60, |g: &mut Gen| {
         let n = g.usize_in(16, 4_000);
         let levels = *g.choice(&[2usize, 3, 4, 8]);
+        let entropy = *g.choice(&[EntropyKind::Rans, EntropyKind::Rans4]);
         let xs = g.activation_vec(n, 0.5);
-        let mut codec = session(uniform(levels, 2.0), EntropyKind::Rans, n);
+        let mut codec = session(uniform(levels, 2.0), entropy, n);
         let bytes = codec.encode(&xs).bytes;
 
         // Any truncation of the payload region is a guaranteed error: the
@@ -144,7 +166,7 @@ fn corrupt_or_truncated_rans_streams_error_not_panic() {
         let cut = g.usize_in(12, bytes.len() - 1);
         prop_assert!(
             codec.decode(&bytes[..cut]).is_err(),
-            "rANS truncation to {cut}/{} accepted (n={n} levels={levels})",
+            "{entropy} truncation to {cut}/{} accepted (n={n} levels={levels})",
             bytes.len()
         );
 
@@ -172,23 +194,26 @@ fn corrupt_or_truncated_rans_streams_error_not_panic() {
 
 #[test]
 fn rans_initial_state_corruption_is_always_detected() {
-    // The 8 bytes after the frequency table are the two decoder states;
-    // flipping any of them derails the state walk, and landing back on
-    // exactly [RANS_LOWER, RANS_LOWER] afterwards is a ~2^-46 accident —
+    // The bytes after the frequency table are the decoder's initial
+    // states — 8 for the 2-way backend, 16 for the 4-way one; flipping
+    // any of them derails the state walk, and landing back on exactly
+    // `[RANS_LOWER; WAYS]` afterwards is a vanishing accident —
     // deterministic inputs make this assertion stable.
-    let mut g = Gen::new("rans_state_corruption", 0);
-    let xs = g.activation_vec(2_048, 0.5);
-    let mut codec = session(uniform(4, 2.0), EntropyKind::Rans, xs.len());
-    let bytes = codec.encode(&xs).bytes;
-    let state_off = 12 + 2 * 3; // header + 3-position table
-    for i in state_off..state_off + 8 {
-        for flip in [0x01u8, 0x80, 0xFF] {
-            let mut bad = bytes.clone();
-            bad[i] ^= flip;
-            assert!(
-                codec.decode(&bad).is_err(),
-                "state byte {i} flipped by {flip:#04x} went undetected"
-            );
+    for (entropy, state_bytes) in [(EntropyKind::Rans, 8), (EntropyKind::Rans4, 16)] {
+        let mut g = Gen::new("rans_state_corruption", 0);
+        let xs = g.activation_vec(2_048, 0.5);
+        let mut codec = session(uniform(4, 2.0), entropy, xs.len());
+        let bytes = codec.encode(&xs).bytes;
+        let state_off = 12 + 2 * 3; // header + 3-position table
+        for i in state_off..state_off + state_bytes {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut bad = bytes.clone();
+                bad[i] ^= flip;
+                assert!(
+                    codec.decode(&bad).is_err(),
+                    "{entropy} state byte {i} flipped by {flip:#04x} went undetected"
+                );
+            }
         }
     }
 }
@@ -212,11 +237,18 @@ fn batched_containers_are_differential_too() {
         };
         let mut cc = batched(EntropyKind::Cabac);
         let mut rc = batched(EntropyKind::Rans);
+        let mut r4c = batched(EntropyKind::Rans4);
         let cb = cc.encode(&xs);
         let rb = rc.encode(&xs);
+        let r4b = r4c.encode(&xs);
         let cd = cc.decode(&cb.bytes).map_err(|e| e.to_string())?;
         let rd = rc.decode(&rb.bytes).map_err(|e| e.to_string())?;
+        let r4d = r4c.decode(&r4b.bytes).map_err(|e| e.to_string())?;
         prop_assert!(cd.values == rd.values, "batched reconstruction mismatch (n={n} tile={tile})");
+        prop_assert!(
+            cd.values == r4d.values,
+            "batched rans4 reconstruction mismatch (n={n} tile={tile})"
+        );
         let (ch, rh) = (
             cd.info.header.as_ref().ok_or("cabac header")?,
             rd.info.header.as_ref().ok_or("rans header")?,
@@ -225,11 +257,19 @@ fn batched_containers_are_differential_too() {
             ch.entropy == EntropyKind::Cabac && rh.entropy == EntropyKind::Rans,
             "headers"
         );
+        prop_assert!(
+            r4d.info.header.as_ref().ok_or("rans4 header")?.entropy == EntropyKind::Rans4,
+            "rans4 header"
+        );
         // Containers advertise their backend without decoding a tile —
         // through the one consolidated sniffer.
         prop_assert!(
             lwfc::sniff(&rb.bytes).entropy == Some(EntropyKind::Rans),
             "container sniff"
+        );
+        prop_assert!(
+            lwfc::sniff(&r4b.bytes).entropy == Some(EntropyKind::Rans4),
+            "rans4 container sniff"
         );
         Ok(())
     });
@@ -272,21 +312,32 @@ mod tcp_path {
         Gen::new("entropy_tcp", image_index).activation_vec(ELEMS, 0.5)
     }
 
-    /// Edge stage encoding every other request with the other backend —
-    /// one device fleet, mixed backends, one wire.
+    /// Which backend a given request uses: the fleet rotates through all
+    /// three, so one wire carries a mix of every header id.
+    fn backend_for(image_index: u64) -> EntropyKind {
+        match image_index % 3 {
+            0 => EntropyKind::Rans,
+            1 => EntropyKind::Cabac,
+            _ => EntropyKind::Rans4,
+        }
+    }
+
+    /// Edge stage rotating requests across the backends — one device
+    /// fleet, mixed backends, one wire.
     struct MixedEdge {
         cabac: Codec,
         rans: Codec,
+        rans4: Codec,
     }
 
     impl EdgeStage for MixedEdge {
         fn process(&mut self, requests: &[Request]) -> Result<Vec<CompressedItem>> {
             let mut out = Vec::with_capacity(requests.len());
             for r in requests {
-                let codec = if r.image_index % 2 == 0 {
-                    &mut self.rans
-                } else {
-                    &mut self.cabac
+                let codec = match backend_for(r.image_index) {
+                    EntropyKind::Rans => &mut self.rans,
+                    EntropyKind::Cabac => &mut self.cabac,
+                    EntropyKind::Rans4 => &mut self.rans4,
                 };
                 let xs = tensor_for(r.image_index);
                 let s = codec.encode(&xs);
@@ -315,11 +366,7 @@ mod tcp_path {
             let mut out = Vec::with_capacity(items.len());
             for item in items {
                 let info = self.codec.decode_into(&item.bytes, &mut self.scratch)?;
-                let want = if item.image_index % 2 == 0 {
-                    EntropyKind::Rans
-                } else {
-                    EntropyKind::Cabac
-                };
+                let want = backend_for(item.image_index);
                 let q = codec_for(want).quant_spec().materialize();
                 let expect: Vec<f32> =
                     tensor_for(item.image_index).iter().map(|&x| q.fake_quant(x)).collect();
@@ -365,6 +412,7 @@ mod tcp_path {
                     Ok(MixedEdge {
                         cabac: codec_for(EntropyKind::Cabac),
                         rans: codec_for(EntropyKind::Rans),
+                        rans4: codec_for(EntropyKind::Rans4),
                     })
                 },
                 || {

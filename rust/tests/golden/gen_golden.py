@@ -4,15 +4,16 @@
 This is a line-by-line port of the Rust encoder pipeline
 (rust/src/codec/{cabac,entropy,binarize,uniform,ecq,header}.rs): clip ->
 N-level quantization -> truncated-unary binarization -> entropy stage ->
-12-byte classification header. Both entropy backends are ported: the
+12-byte classification header. Every entropy backend is ported: the
 LZMA-style binary range coder with 11-bit adaptive contexts (CABAC), and
-the two-way interleaved rANS coder with static 12-bit per-bit-position
-frequency tables signaled in-band (header byte 0 bits 6-7 carry the
-backend id: 0 = CABAC, 1 = rANS).
+the interleaved rANS coder with static 12-bit per-bit-position frequency
+tables signaled in-band, at both its wire interleave widths (header byte
+0 bits 6-7 carry the backend id: 0 = CABAC, 1 = 2-way rANS, 3 = 4-way
+rANS; id 2 is unassigned).
 
 The rANS fixtures reuse the CABAC fixtures' .f32 inputs (same tensors,
-two backends), so each rans_*.lwfc is directly differential against its
-legacy counterpart.
+three backends), so each rans_*.lwfc / rans4_*.lwfc is directly
+differential against its legacy counterpart.
 
 All arithmetic is integer (CABAC) or exactly-emulated IEEE f32
 (quantizer): a product/sum of two f32 values is exact in f64, so rounding
@@ -163,10 +164,12 @@ def rans_encode_bit(state, buf, p0, bit):
     return ((x // freq) << RANS_SCALE_BITS) + (x % freq) + start
 
 
-def rans_encode_payload(indices, levels):
-    """Static tables (u16 LE each) + two initial u32 LE states + the
+def rans_encode_payload(indices, levels, ways=2):
+    """Static tables (u16 LE each) + `ways` initial u32 LE states + the
     interleaved byte stream. Bit i of the forward TU bit sequence uses
-    state i & 1; encoding runs the decoder program in exact reverse."""
+    state i & (ways - 1); encoding runs the decoder program in exact
+    reverse. ways=2 is backend id 1 (RansBackend), ways=4 id 3
+    (RansBackend4)."""
     nctx = max(levels - 1, 1)
     hist = [0] * levels
     for n in indices:
@@ -177,18 +180,22 @@ def rans_encode_payload(indices, levels):
         out += struct.pack("<H", p)
     total_bits = sum(hist[pos] + sum(hist[pos + 1:]) for pos in range(nctx))
     buf = bytearray()
-    states = [RANS_LOWER, RANS_LOWER]
+    states = [RANS_LOWER] * ways
     bi = total_bits
     for n in reversed(indices):
         if n + 1 != levels:
             bi -= 1
-            states[bi & 1] = rans_encode_bit(states[bi & 1], buf, p0[n], False)
+            k = bi & (ways - 1)
+            states[k] = rans_encode_bit(states[k], buf, p0[n], False)
         for pos in range(n - 1, -1, -1):
             bi -= 1
-            states[bi & 1] = rans_encode_bit(states[bi & 1], buf, p0[pos], True)
+            k = bi & (ways - 1)
+            states[k] = rans_encode_bit(states[k], buf, p0[pos], True)
     assert bi == 0, "bit accounting mismatch"
-    buf += states[1].to_bytes(4, "big")
-    buf += states[0].to_bytes(4, "big")
+    # Highest-numbered state first, so after the reversal the payload
+    # starts with state0..state{ways-1}, each little-endian.
+    for s in reversed(states):
+        buf += s.to_bytes(4, "big")
     buf.reverse()
     out += buf
     return bytes(out)
@@ -198,12 +205,13 @@ class RansError(Exception):
     pass
 
 
-def rans_decode_payload(payload, levels, elements):
-    """Mirror of RansBackend::decode_payload, including every error path
+def rans_decode_payload(payload, levels, elements, ways=2):
+    """Mirror of RansBackendN::decode_payload, including every error path
     (truncation, bad tables, final-state and full-consumption checks)."""
     nctx = max(levels - 1, 1)
     table_len = nctx * 2
-    if len(payload) < table_len + 8:
+    header_len = table_len + 4 * ways
+    if len(payload) < header_len:
         raise RansError("payload truncated: header")
     p0 = []
     for t in range(nctx):
@@ -212,18 +220,18 @@ def rans_decode_payload(payload, levels, elements):
             raise RansError(f"frequency {v} out of range")
         p0.append(v)
     states = [
-        struct.unpack_from("<I", payload, table_len)[0],
-        struct.unpack_from("<I", payload, table_len + 4)[0],
+        struct.unpack_from("<I", payload, table_len + 4 * w)[0]
+        for w in range(ways)
     ]
     if any(s < RANS_LOWER for s in states):
         raise RansError("initial state below bound")
-    pos = table_len + 8
+    pos = header_len
     bi = 0
     out = []
     for _ in range(elements):
         n = 0
         while n + 1 < levels:
-            k = bi & 1
+            k = bi & (ways - 1)
             bi += 1
             p = p0[n]
             s = states[k] & (RANS_SCALE - 1)
@@ -239,7 +247,7 @@ def rans_decode_payload(payload, levels, elements):
                 break
             n += 1
         out.append(n)
-    if states != [RANS_LOWER, RANS_LOWER]:
+    if states != [RANS_LOWER] * ways:
         raise RansError("final-state check failed")
     if pos != len(payload):
         raise RansError("unconsumed trailing bytes")
@@ -398,49 +406,71 @@ def self_check():
     # functions above, so these runs executably validate its algorithm) ----
     import random
 
-    for seed, levels, n in [
-        (1, 2, 0), (2, 2, 1), (3, 2, 5000), (4, 3, 777), (5, 4, 20000),
-        (6, 8, 10000), (7, 5, 1), (8, 16, 3000), (9, 4, 2),
-    ]:
-        rng = random.Random(seed)
-        # Skewed toward low indices, like clipped activations.
-        idx = [min(int(rng.expovariate(1.2)), levels - 1) for _ in range(n)]
-        payload = rans_encode_payload(idx, levels)
-        assert rans_decode_payload(payload, levels, n) == idx, \
-            f"rANS roundtrip failed (seed={seed} levels={levels} n={n})"
-        # Truncation at every prefix must error, never mis-decode.
-        for cut in range(len(payload)):
-            try:
-                got = rans_decode_payload(payload[:cut], levels, n)
-            except RansError:
-                continue
-            assert False, f"truncation to {cut} decoded {len(got)} symbols"
-        # Element overcount / undercount must error via the final-state or
-        # consumption checks.
-        for bad_n in [n + 1, n + 97]:
-            try:
-                rans_decode_payload(payload, levels, bad_n)
-                assert False, f"overcount {bad_n} accepted"
-            except RansError:
-                pass
-        if n > 0:
-            try:
-                rans_decode_payload(payload, levels, n - 1)
-                assert False, "undercount accepted"
-            except RansError:
-                pass
+    for ways in (2, 4):
+        for seed, levels, n in [
+            (1, 2, 0), (2, 2, 1), (3, 2, 5000), (4, 3, 777), (5, 4, 20000),
+            (6, 8, 10000), (7, 5, 1), (8, 16, 3000), (9, 4, 2),
+        ]:
+            rng = random.Random(seed)
+            # Skewed toward low indices, like clipped activations.
+            idx = [min(int(rng.expovariate(1.2)), levels - 1) for _ in range(n)]
+            payload = rans_encode_payload(idx, levels, ways)
+            assert rans_decode_payload(payload, levels, n, ways) == idx, \
+                f"rANS roundtrip failed (ways={ways} seed={seed} levels={levels} n={n})"
+            # Truncation at every prefix must error, never mis-decode.
+            for cut in range(len(payload)):
+                try:
+                    got = rans_decode_payload(payload[:cut], levels, n, ways)
+                except RansError:
+                    continue
+                assert False, \
+                    f"truncation to {cut} decoded {len(got)} symbols (ways={ways})"
+            # Element overcount / undercount must error via the final-state
+            # or consumption checks.
+            for bad_n in [n + 1, n + 97]:
+                try:
+                    rans_decode_payload(payload, levels, bad_n, ways)
+                    assert False, f"overcount {bad_n} accepted (ways={ways})"
+                except RansError:
+                    pass
+            if n > 0:
+                try:
+                    rans_decode_payload(payload, levels, n - 1, ways)
+                    assert False, f"undercount accepted (ways={ways})"
+                except RansError:
+                    pass
 
-    # Degenerate single-bin streams exercise the [1, 4095] clamps.
-    for idx in ([0] * 4096, [1] * 4096, [3] * 4096):
-        payload = rans_encode_payload(idx, 4)
-        assert rans_decode_payload(payload, 4, len(idx)) == idx
+        # Degenerate single-bin streams exercise the [1, 4095] clamps.
+        for idx in ([0] * 4096, [1] * 4096, [3] * 4096):
+            payload = rans_encode_payload(idx, 4, ways)
+            assert rans_decode_payload(payload, 4, len(idx), ways) == idx
 
-    # Static tables must still compress skewed data well below raw cost.
-    rng = random.Random(99)
-    idx = [min(int(rng.expovariate(2.0)), 3) for _ in range(65536)]
-    payload = rans_encode_payload(idx, 4)
-    bpe = len(payload) * 8.0 / len(idx)
-    assert bpe < 1.6, f"rANS bits/element {bpe}"
+        # Static tables must still compress skewed data well below raw cost.
+        rng = random.Random(99)
+        idx = [min(int(rng.expovariate(2.0)), 3) for _ in range(65536)]
+        payload = rans_encode_payload(idx, 4, ways)
+        bpe = len(payload) * 8.0 / len(idx)
+        assert bpe < 1.6, f"rANS bits/element {bpe} (ways={ways})"
+
+    # The interleave widths share frequency tables (same histogram math)
+    # and differ only past the table: 8 extra side-info bytes for ways=4.
+    rng = random.Random(123)
+    idx = [min(int(rng.expovariate(1.5)), 7) for _ in range(10000)]
+    p2 = rans_encode_payload(idx, 8, 2)
+    p4 = rans_encode_payload(idx, 8, 4)
+    assert p2[:14] == p4[:14], "tables diverged between interleave widths"
+    assert rans_decode_payload(p2, 8, len(idx), 2) == \
+        rans_decode_payload(p4, 8, len(idx), 4)
+    # Reading a 4-way payload as 2-way (or vice versa) must error, not
+    # silently mis-decode: the interleave is part of the format.
+    mismatch_caught = False
+    for payload, ways in ((p4, 2), (p2, 4)):
+        try:
+            got = rans_decode_payload(payload, 8, len(idx), ways)
+            mismatch_caught = mismatch_caught or got != idx
+        except RansError:
+            mismatch_caught = True
+    assert mismatch_caught, "interleave mismatch went undetected both ways"
 
     print("self-checks passed")
 
@@ -633,6 +663,15 @@ def write_rans_fixture(stem, idx, levels, head):
     print(f"rans_{stem}: {len(idx)} elements -> {len(stream)} bytes")
 
 
+def write_rans4_fixture(stem, idx, levels, head):
+    """4-way-interleave twin (backend id 3): same .f32 input, new
+    rans4_<stem>.lwfc with the backend-3 header."""
+    stream = head + rans_encode_payload(idx, levels, ways=4)
+    assert rans_decode_payload(stream[len(head):], levels, len(idx), ways=4) == idx
+    emit("rans4_" + stem + ".lwfc", stream)
+    print(f"rans4_{stem}: {len(idx)} elements -> {len(stream)} bytes")
+
+
 def gen_containers(xs, img):
     """Container fixtures over the uniform_n4 input values `xs`:
 
@@ -788,6 +827,9 @@ def main(check=False):
     write_rans_fixture(
         "uniform_n4", idx, levels, header_bytes(0, levels, c_min, c_max, img, backend=1)
     )
+    write_rans4_fixture(
+        "uniform_n4", idx, levels, header_bytes(0, levels, c_min, c_max, img, backend=3)
+    )
 
     # ---- uniform, N=2 (the specialized 1-bit encoder arm): boundary 3 ----
     c_min, c_max, levels = 0.0, 6.0, 2
@@ -800,6 +842,9 @@ def main(check=False):
     write_fixture("uniform_n2", xs, stream)
     write_rans_fixture(
         "uniform_n2", idx, levels, header_bytes(0, levels, c_min, c_max, img, backend=1)
+    )
+    write_rans4_fixture(
+        "uniform_n2", idx, levels, header_bytes(0, levels, c_min, c_max, img, backend=3)
     )
 
     # ---- entropy-constrained, N=4: hand-pinned design ---------------------
@@ -817,6 +862,9 @@ def main(check=False):
     write_fixture("ecq_n4", xs, stream)
     write_rans_fixture(
         "ecq_n4", idx, levels, header_bytes(1, levels, c_min, c_max, img, recon, backend=1)
+    )
+    write_rans4_fixture(
+        "ecq_n4", idx, levels, header_bytes(1, levels, c_min, c_max, img, recon, backend=3)
     )
 
     # ---- batched container fixtures (v2 spec-less + v3 per-tile specs),

@@ -9,13 +9,14 @@
 //! that the façade is byte-identical to the paths that wrote the
 //! fixtures.
 //!
-//! Six single-stream vectors cover both entropy backends over the three
-//! encoder paths: the generic truncated-unary path (uniform N=4), the
-//! specialized 1-bit CABAC path (uniform N=2), and the
+//! Nine single-stream vectors cover all three entropy backends over the
+//! three encoder paths: the generic truncated-unary path (uniform N=4),
+//! the specialized 1-bit CABAC path (uniform N=2), and the
 //! entropy-constrained path with an in-band reconstruction table (ECQ
 //! N=4) — each as a legacy CABAC stream (header backend bits 0, pre-bump
-//! byte layout) and as a `rans_*` twin over the *same* `.f32` input with
-//! the rANS backend id in the header. The CABAC fixtures predate the
+//! byte layout), as a `rans_*` twin over the *same* `.f32` input with
+//! the 2-way rANS backend id in the header, and as a `rans4_*` twin with
+//! the 4-way-interleaved backend id 3. The CABAC fixtures predate the
 //! header version bump, so they double as the proof that legacy streams
 //! still decode byte-exactly.
 
@@ -166,35 +167,82 @@ fn golden_rans_ecq_n4_with_in_band_recon_table() {
 }
 
 #[test]
+fn golden_rans4_uniform_n4() {
+    check_golden_with(
+        "rans4_uniform_n4",
+        include_bytes!("golden/uniform_n4.f32"),
+        include_bytes!("golden/rans4_uniform_n4.lwfc"),
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 6.0, 4)),
+        EntropyKind::Rans4,
+    );
+}
+
+#[test]
+fn golden_rans4_uniform_n2() {
+    check_golden_with(
+        "rans4_uniform_n2",
+        include_bytes!("golden/uniform_n2.f32"),
+        include_bytes!("golden/rans4_uniform_n2.lwfc"),
+        Quantizer::Uniform(UniformQuantizer::new(0.0, 6.0, 2)),
+        EntropyKind::Rans4,
+    );
+}
+
+#[test]
+fn golden_rans4_ecq_n4_with_in_band_recon_table() {
+    check_golden_with(
+        "rans4_ecq_n4",
+        include_bytes!("golden/ecq_n4.f32"),
+        include_bytes!("golden/rans4_ecq_n4.lwfc"),
+        Quantizer::NonUniform(pinned_ecq()),
+        EntropyKind::Rans4,
+    );
+    let expected = include_bytes!("golden/rans4_ecq_n4.lwfc");
+    let n = include_bytes!("golden/ecq_n4.f32").len() / 4;
+    let mut codec = session(pinned_ecq(), EntropyKind::Rans4, n);
+    let (_, header) = codec.decode_indices(expected).unwrap();
+    assert_eq!(header.quant, QuantKind::EntropyConstrained);
+    assert_eq!(header.entropy, EntropyKind::Rans4);
+    assert_eq!(header.recon.as_deref(), Some(&[0.0f32, 1.0, 2.5, 6.0][..]));
+}
+
+#[test]
 fn rans_and_cabac_goldens_decode_to_identical_indices() {
-    // The rANS fixtures reuse the CABAC fixtures' inputs, so the two
-    // backends' golden streams must agree index-for-index.
-    for (name, legacy, rans, n) in [
+    // The rANS fixtures (both interleave widths) reuse the CABAC
+    // fixtures' inputs, so all three backends' golden streams must agree
+    // index-for-index.
+    for (name, legacy, rans, rans4, n) in [
         (
             "uniform_n4",
             &include_bytes!("golden/uniform_n4.lwfc")[..],
             &include_bytes!("golden/rans_uniform_n4.lwfc")[..],
+            &include_bytes!("golden/rans4_uniform_n4.lwfc")[..],
             include_bytes!("golden/uniform_n4.f32").len() / 4,
         ),
         (
             "uniform_n2",
             &include_bytes!("golden/uniform_n2.lwfc")[..],
             &include_bytes!("golden/rans_uniform_n2.lwfc")[..],
+            &include_bytes!("golden/rans4_uniform_n2.lwfc")[..],
             include_bytes!("golden/uniform_n2.f32").len() / 4,
         ),
         (
             "ecq_n4",
             &include_bytes!("golden/ecq_n4.lwfc")[..],
             &include_bytes!("golden/rans_ecq_n4.lwfc")[..],
+            &include_bytes!("golden/rans4_ecq_n4.lwfc")[..],
             include_bytes!("golden/ecq_n4.f32").len() / 4,
         ),
     ] {
         let mut codec = session(pinned_ecq(), EntropyKind::Cabac, n);
         let (a, ha) = codec.decode_indices(legacy).unwrap();
         let (b, hb) = codec.decode_indices(rans).unwrap();
+        let (c, hc) = codec.decode_indices(rans4).unwrap();
         assert_eq!(ha.entropy, EntropyKind::Cabac, "{name}: legacy backend");
         assert_eq!(hb.entropy, EntropyKind::Rans, "{name}: rans backend");
+        assert_eq!(hc.entropy, EntropyKind::Rans4, "{name}: rans4 backend");
         assert_eq!(a, b, "{name}: backends decode different indices");
+        assert_eq!(a, c, "{name}: rans4 decodes different indices");
     }
 }
 
@@ -219,6 +267,18 @@ fn legacy_goldens_predate_the_backend_field() {
     ] {
         assert_eq!(bytes[0] >> 6, 1);
         assert_eq!(lwfc::sniff(bytes).entropy, Some(EntropyKind::Rans));
+    }
+    // 4-way fixtures carry backend id 3 — id 2 stays unassigned so
+    // pre-rans4 decoders reject these with the ordinary unknown-backend
+    // error rather than mis-decoding.
+    for bytes in [
+        &include_bytes!("golden/rans4_uniform_n4.lwfc")[..],
+        &include_bytes!("golden/rans4_uniform_n2.lwfc")[..],
+        &include_bytes!("golden/rans4_ecq_n4.lwfc")[..],
+    ] {
+        assert_eq!(bytes[0] >> 6, 3);
+        assert_eq!(lwfc::sniff(bytes).entropy, Some(EntropyKind::Rans4));
+        assert_eq!(lwfc::sniff(bytes).format, lwfc::StreamFormat::SingleStream);
     }
 }
 
@@ -437,5 +497,10 @@ fn golden_streams_reject_truncation() {
     let rans = include_bytes!("golden/rans_uniform_n4.lwfc");
     for cut in [8, 20, rans.len() - 1] {
         assert!(codec.decode(&rans[..cut]).is_err(), "rANS cut at {cut} accepted");
+    }
+    // Same for the 4-way stream, whose header carries 16 state bytes.
+    let rans4 = include_bytes!("golden/rans4_uniform_n4.lwfc");
+    for cut in [8, 20, rans4.len() - 1] {
+        assert!(codec.decode(&rans4[..cut]).is_err(), "rans4 cut at {cut} accepted");
     }
 }

@@ -1,0 +1,197 @@
+//! Scalar↔SIMD seam tests, from outside the crate: every vector kernel
+//! in `lwfc::codec::simd` must be bit-exact against its scalar twin on
+//! adversarial inputs (NaN, ±inf, subnormals, exact clip boundaries,
+//! epsilon-straddlers, every vector-tail length), and the kernels must
+//! compose to exactly what the `Codec` façade produces. The suite is
+//! meaningful under both dispatch settings: in a normal run it
+//! differential-tests the dispatched AVX2/SSE2 paths against the scalar
+//! reference; under `LWFC_FORCE_SCALAR=1` (the CI fallback job) it
+//! additionally pins that the dispatcher honors the override.
+
+use lwfc::codec::simd::{self, scalar};
+use lwfc::codec::{design_ecq, EcqParams, EntropyKind, NonUniformQuantizer, UniformQuantizer};
+use lwfc::prop_assert;
+use lwfc::util::prop::{prop_check, Gen};
+use lwfc::util::rng::SplitMix64;
+use lwfc::{CodecBuilder, QuantSpec};
+
+/// Adversarial f32 soup: NaN, ±inf, subnormals, exact boundaries,
+/// values epsilon-straddling `c_min`/`c_max`, tiny offsets, and
+/// ordinary in/out-of-range mass.
+fn adversarial(n: usize, c_min: f32, c_max: f32, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    let span = c_max - c_min;
+    (0..n)
+        .map(|_| match rng.next_u64() % 12 {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            2 => f32::NEG_INFINITY,
+            3 => f32::MIN_POSITIVE / 2.0, // subnormal
+            4 => -f32::MIN_POSITIVE / 2.0,
+            5 => c_min,
+            6 => c_max,
+            7 => c_min - f32::EPSILON * span,
+            8 => c_max + f32::EPSILON * span,
+            9 => c_min + span * (rng.next_f64() as f32) * 1e-6,
+            _ => c_min - span * 0.25 + span * 1.5 * rng.next_f64() as f32,
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn dispatched_uniform_kernels_match_their_scalar_twins() {
+    prop_check("ext_simd_uniform", 50, |g: &mut Gen| {
+        let levels = *g.choice(&[2usize, 3, 4, 8, 17, 64, 255, 509]);
+        let c_min = g.f32_in(-8.0, 2.0);
+        let c_max = c_min + g.f32_in(0.1, 20.0);
+        let n = g.usize_in(0, 700); // crosses every 4- and 8-lane tail
+        let q = UniformQuantizer::new(c_min, c_max, levels);
+        let xs = adversarial(n, c_min, c_max, g.usize_in(0, 1 << 30) as u64);
+
+        let mut fast = vec![0u16; n];
+        let mut slow = vec![0u16; n];
+        simd::quantize_slice(&q, &xs, &mut fast);
+        scalar::quantize_slice(&q, &xs, &mut slow);
+        prop_assert!(fast == slow, "quantize diverged (levels={levels}, n={n})");
+
+        let mut rf = vec![0f32; n];
+        let mut rs = vec![0f32; n];
+        simd::reconstruct_slice(&q, &fast, &mut rf);
+        scalar::reconstruct_slice(&q, &slow, &mut rs);
+        prop_assert!(bits(&rf) == bits(&rs), "reconstruct diverged (levels={levels})");
+
+        let mut ff = vec![0f32; n];
+        let mut fs = vec![0f32; n];
+        simd::fake_quant_slice(&q, &xs, &mut ff);
+        scalar::fake_quant_slice(&q, &xs, &mut fs);
+        prop_assert!(bits(&ff) == bits(&fs), "fake_quant diverged (levels={levels})");
+        // Fused fake-quant == quantize ∘ reconstruct, bit for bit.
+        prop_assert!(bits(&ff) == bits(&rf), "fused path diverged from composition");
+
+        // And all of it equals the per-element public methods.
+        for (i, &x) in xs.iter().enumerate() {
+            prop_assert!(fast[i] == q.index(x), "index method diverged at {i}");
+            prop_assert!(
+                ff[i].to_bits() == q.fake_quant(x).to_bits(),
+                "fake_quant method diverged at {i}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatched_nonuniform_kernel_matches_designed_quantizers() {
+    // Real Algorithm-1 designs, plus degenerate duplicate thresholds.
+    prop_check("ext_simd_nonuniform", 15, |g: &mut Gen| {
+        let levels = g.usize_in(2, 8);
+        let train = g.activation_vec(8_192, 0.4);
+        let d = design_ecq(&train, 0.0, 2.0, EcqParams::pinned(levels, 0.02));
+        let mut q = d.quantizer;
+        if g.bool() && q.thresholds.len() >= 2 {
+            q.thresholds[1] = q.thresholds[0];
+        }
+        let n = g.usize_in(0, 500);
+        let xs = adversarial(n, q.c_min, q.c_max, g.usize_in(0, 1 << 30) as u64);
+        let mut fast = vec![0u16; n];
+        let mut slow = vec![0u16; n];
+        simd::nonuniform_index_slice(&q, &xs, &mut fast);
+        scalar::nonuniform_index_slice(&q, &xs, &mut slow);
+        prop_assert!(fast == slow, "nonuniform index diverged (levels={levels})");
+        for (i, &x) in xs.iter().enumerate() {
+            prop_assert!(fast[i] == q.index(x), "index method diverged at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nonuniform_kernel_falls_back_above_the_linear_scan_regime() {
+    // Past the linear-scan width the dispatcher must agree with the
+    // binary-search scalar path rather than mis-vectorize.
+    let levels = NonUniformQuantizer::LINEAR_SCAN_MAX_THRESHOLDS + 10;
+    let q = NonUniformQuantizer {
+        recon: (0..=levels).map(|i| i as f32).collect(),
+        thresholds: (0..levels).map(|i| i as f32 + 0.5).collect(),
+        c_min: 0.0,
+        c_max: levels as f32,
+    };
+    let xs = adversarial(333, q.c_min, q.c_max, 7);
+    let mut fast = vec![0u16; xs.len()];
+    let mut slow = vec![0u16; xs.len()];
+    simd::nonuniform_index_slice(&q, &xs, &mut fast);
+    scalar::nonuniform_index_slice(&q, &xs, &mut slow);
+    assert_eq!(fast, slow);
+}
+
+#[test]
+fn tu_bit_count_matches_scalar_across_alphabets_and_tails() {
+    prop_check("ext_simd_tu_bits", 40, |g: &mut Gen| {
+        let levels = *g.choice(&[2usize, 3, 4, 8, 255, 509]);
+        let n = g.usize_in(0, 3_000);
+        let mut rng = SplitMix64::new(g.usize_in(0, 1 << 30) as u64);
+        let idx: Vec<u16> = (0..n).map(|_| (rng.next_u64() % levels as u64) as u16).collect();
+        let fast = simd::tu_bit_count(&idx, levels);
+        let slow = scalar::tu_bit_count(&idx, levels);
+        prop_assert!(
+            fast == slow,
+            "tu bits diverged: {fast} vs {slow} (levels={levels}, n={n})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn kernels_compose_to_the_codec_facade_bit_for_bit() {
+    // The façade's encode (SIMD quantize feeding the entropy stage) and
+    // decode (entropy stage feeding SIMD reconstruct) must equal the
+    // kernel composition on ordinary activations — for every backend.
+    prop_check("ext_simd_facade", 12, |g: &mut Gen| {
+        let n = g.usize_in(1, 12_000);
+        let levels = *g.choice(&[2usize, 4, 8]);
+        let scale = g.f32_in(0.05, 2.0);
+        let xs = g.activation_vec(n, scale);
+        let q = UniformQuantizer::new(0.0, 2.0, levels);
+        let spec = QuantSpec::Uniform {
+            c_min: 0.0,
+            c_max: 2.0,
+            levels,
+        };
+        let mut want_idx = vec![0u16; n];
+        simd::quantize_slice(&q, &xs, &mut want_idx);
+        let mut want_vals = vec![0f32; n];
+        simd::reconstruct_slice(&q, &want_idx, &mut want_vals);
+        for entropy in [EntropyKind::Cabac, EntropyKind::Rans, EntropyKind::Rans4] {
+            let mut codec = CodecBuilder::new(spec.clone())
+                .image_size(32)
+                .entropy(entropy)
+                .expect_elements(n)
+                .build();
+            let stream = codec.encode(&xs);
+            let (idx, _) = codec.decode_indices(&stream.bytes).map_err(|e| e.to_string())?;
+            prop_assert!(idx == want_idx, "{entropy}: façade indices diverge from kernels");
+            let decoded = codec.decode(&stream.bytes).map_err(|e| e.to_string())?;
+            prop_assert!(
+                bits(&decoded.values) == bits(&want_vals),
+                "{entropy}: façade reconstruction diverges from kernels"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatcher_honors_the_scalar_override() {
+    let a = simd::active();
+    assert!(
+        ["scalar", "sse2", "avx2"].contains(&a),
+        "unknown kernel set {a}"
+    );
+    if simd::force_scalar() {
+        assert_eq!(a, "scalar", "LWFC_FORCE_SCALAR=1 must pin the scalar path");
+    }
+}
