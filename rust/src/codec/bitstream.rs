@@ -1,6 +1,11 @@
 //! Byte/bit stream primitives shared by the lightweight codec and the
 //! picture-codec baseline.
 
+// Wire-facing module: panic-freedom is enforced both by `cargo xtask
+// analyze` (lint 2) and by clippy below. Escape hatches are the
+// `LINT-ALLOW` escape-hatch convention documented in rust/README.md.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use super::error::CodecError;
 
 /// MSB-first bit writer over a growable byte buffer.
@@ -83,6 +88,7 @@ impl<'a> BitReader<'a> {
         if byte >= self.bytes.len() {
             return Err(CodecError::payload("bitstream exhausted"));
         }
+        // LINT-ALLOW(index): guarded by the bounds check just above.
         let bit = (self.bytes[byte] >> (7 - (self.pos % 8))) & 1;
         self.pos += 1;
         Ok(bit == 1)

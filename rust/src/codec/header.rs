@@ -32,6 +32,11 @@
 //! bits to the stream — a conservative accounting difference recorded in
 //! EXPERIMENTS.md).
 
+// Wire-facing module: panic-freedom is enforced both by `cargo xtask
+// analyze` (lint 2) and by clippy below. Escape hatches are the
+// `LINT-ALLOW` comment convention documented in rust/README.md.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use super::entropy::EntropyKind;
 use super::error::CodecError;
 
@@ -89,6 +94,10 @@ impl Header {
         self.fixed_len() + self.recon.as_ref().map_or(0, |r| r.len() * 4)
     }
 
+    // Encoder-side serialization: the panics below are precondition
+    // violations in our own configuration (never reachable from wire
+    // bytes), and each one is individually annotated.
+    #[allow(clippy::expect_used)]
     pub fn write(&self, out: &mut Vec<u8>) {
         let kind_nibble = match self.kind {
             StreamKind::Classification => 0u8,
@@ -99,17 +108,22 @@ impl Header {
             QuantKind::EntropyConstrained => 1u8,
         };
         out.push(kind_nibble | (quant_bits << 4) | (self.entropy.id() << 6));
-        assert!(
-            (2..=255).contains(&self.levels),
-            "levels out of range: {}",
-            self.levels
-        );
-        out.push(self.levels as u8);
+        // Checked conversion: level counts outside 2..=255 cannot be
+        // represented in the one-byte N field, and the old `as u8` would
+        // have truncated silently had the assert drifted out of sync.
+        match u8::try_from(self.levels) {
+            Ok(levels @ 2..=u8::MAX) => out.push(levels),
+            // LINT-ALLOW(panic): encoder precondition on our own config,
+            // not untrusted input.
+            _ => panic!("levels out of range: {}", self.levels),
+        }
         out.extend_from_slice(&self.c_min.to_le_bytes());
         out.extend_from_slice(&self.c_max.to_le_bytes());
         out.push(self.img_w);
         out.push(self.img_h);
         if self.kind == StreamKind::Detection {
+            // LINT-ALLOW(panic): encoder precondition — a detection
+            // header without DetInfo is a caller bug, not wire input.
             let d = self.det.expect("detection header needs DetInfo");
             out.extend_from_slice(&d.net_w.to_le_bytes());
             out.extend_from_slice(&d.net_h.to_le_bytes());
@@ -125,12 +139,18 @@ impl Header {
                     out.extend_from_slice(&r.to_le_bytes());
                 }
             }
+            // LINT-ALLOW(panic): encoder precondition (recon presence is
+            // tied to the quantizer kind by construction).
             (QuantKind::EntropyConstrained, None) => panic!("ECQ header needs recon table"),
+            // LINT-ALLOW(panic): encoder precondition, as above.
             (QuantKind::Uniform, Some(_)) => panic!("uniform header must not carry recon"),
             (QuantKind::Uniform, None) => {}
         }
     }
 
+    // LINT-ALLOW(index): every fixed-offset access below is guarded by a
+    // preceding `need(..)` length check; the recon loop stays inside the
+    // `need(off + levels * 4)` bound.
     pub fn read(bytes: &[u8]) -> Result<(Header, usize), CodecError> {
         let need = |n: usize| {
             if bytes.len() < n {
@@ -263,23 +283,19 @@ impl Header {
 // before applying a residual; it is written only by stream sessions, so
 // stateless encodes stay byte-identical to v2/v3 output.
 
-pub const BATCH_MAGIC: [u8; 4] = *b"LWFB";
-/// Container version carrying the per-tile quantizer design block
-/// (directories with `specs` but no `temporal` serialize as this).
-pub const BATCH_VERSION: u8 = 3;
-/// Newest container version: the temporal (stream-session) layout with
-/// per-tile intra/inter modes and reference generations.
-pub const BATCH_VERSION_TEMPORAL: u8 = 4;
-/// Spec-less container version ([`SubstreamDirectory`]s without per-tile
-/// quantizer designs serialize as this, unchanged from PR 1).
-pub const BATCH_VERSION_PLAIN: u8 = 2;
-/// Oldest container version this decoder still reads.
-pub const BATCH_MIN_VERSION: u8 = 1;
+// Container identity constants live in [`crate::consts`] (the single
+// source of truth shared with the wire protocol, the Python golden
+// generator, and `cargo xtask analyze`); this module remains their
+// historical import path.
+pub use crate::consts::{
+    BATCH_MAGIC, BATCH_MIN_VERSION, BATCH_VERSION, BATCH_VERSION_PLAIN, BATCH_VERSION_TEMPORAL,
+};
 pub const BATCH_PRELUDE_BYTES: usize = 18;
 pub const DIR_ENTRY_BYTES: usize = 12;
 
 /// True when `bytes` starts with the batched-container magic.
 pub fn is_batched(bytes: &[u8]) -> bool {
+    // LINT-ALLOW(index): guarded by the length check on the same line.
     bytes.len() >= 4 && bytes[..4] == BATCH_MAGIC
 }
 
@@ -287,7 +303,7 @@ pub fn is_batched(bytes: &[u8]) -> bool {
 pub fn substream_checksum(bytes: &[u8]) -> u32 {
     let mut h: u32 = 0x811C_9DC5;
     for &b in bytes {
-        h ^= b as u32;
+        h ^= u32::from(b);
         h = h.wrapping_mul(0x0100_0193);
     }
     h
@@ -381,7 +397,10 @@ impl SubstreamDirectory {
             + self.specs_len()
     }
 
+    #[allow(clippy::expect_used)]
     pub fn write(&self, out: &mut Vec<u8>) {
+        // LINT-ALLOW(panic): encoder precondition — a directory with more
+        // than u32::MAX substreams cannot exist in memory.
         let count =
             u32::try_from(self.entries.len()).expect("substream count exceeds u32 directory field");
         if let Some(specs) = &self.specs {
@@ -438,6 +457,9 @@ impl SubstreamDirectory {
     /// flip between the defined ids) — those only relabel the container,
     /// and the per-substream checksums plus each tile's own header still
     /// guard what actually decodes.
+    // LINT-ALLOW(index): every access below sits behind an explicit
+    // length check (prelude, entries_end, temporal block_end) with
+    // checked arithmetic on the untrusted counts.
     pub fn read(bytes: &[u8]) -> Result<(SubstreamDirectory, usize), CodecError> {
         if bytes.len() < BATCH_PRELUDE_BYTES {
             return Err(CodecError::directory(format!(

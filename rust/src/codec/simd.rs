@@ -107,7 +107,10 @@ pub fn quantize_slice(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
     #[cfg(target_arch = "x86_64")]
     if uniform_vectorizable(q) {
         match level() {
+            // SAFETY: `level()` returned Avx2 only because
+            // `is_x86_feature_detected!("avx2")` proved CPU support.
             Level::Avx2 => return unsafe { x86::quantize_avx2(q, xs, out) },
+            // SAFETY: as above — SSE2 support verified at detection time.
             Level::Sse2 => return unsafe { x86::quantize_sse2(q, xs, out) },
             Level::Scalar => {}
         }
@@ -123,7 +126,10 @@ pub fn reconstruct_slice(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     if uniform_vectorizable(q) {
         match level() {
+            // SAFETY: `level()` returned Avx2 only because
+            // `is_x86_feature_detected!("avx2")` proved CPU support.
             Level::Avx2 => return unsafe { x86::reconstruct_avx2(q, idx, out) },
+            // SAFETY: as above — SSE2 support verified at detection time.
             Level::Sse2 => return unsafe { x86::reconstruct_sse2(q, idx, out) },
             Level::Scalar => {}
         }
@@ -139,7 +145,10 @@ pub fn fake_quant_slice(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     if uniform_vectorizable(q) {
         match level() {
+            // SAFETY: `level()` returned Avx2 only because
+            // `is_x86_feature_detected!("avx2")` proved CPU support.
             Level::Avx2 => return unsafe { x86::fake_quant_avx2(q, xs, out) },
+            // SAFETY: as above — SSE2 support verified at detection time.
             Level::Sse2 => return unsafe { x86::fake_quant_sse2(q, xs, out) },
             Level::Scalar => {}
         }
@@ -159,7 +168,10 @@ pub fn nonuniform_index_slice(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u1
     #[cfg(target_arch = "x86_64")]
     if q.thresholds.len() <= NonUniformQuantizer::LINEAR_SCAN_MAX_THRESHOLDS {
         match level() {
+            // SAFETY: `level()` returned Avx2 only because
+            // `is_x86_feature_detected!("avx2")` proved CPU support.
             Level::Avx2 => return unsafe { x86::nonuniform_avx2(q, xs, out) },
+            // SAFETY: as above — SSE2 support verified at detection time.
             Level::Sse2 => return unsafe { x86::nonuniform_sse2(q, xs, out) },
             Level::Scalar => {}
         }
@@ -177,7 +189,10 @@ pub fn tu_bit_count(indices: &[u16], levels: usize) -> u64 {
     #[cfg(target_arch = "x86_64")]
     if levels < MAX_VECTOR_LEVELS {
         match level() {
+            // SAFETY: `level()` returned Avx2 only because
+            // `is_x86_feature_detected!("avx2")` proved CPU support.
             Level::Avx2 => return unsafe { x86::tu_bits_avx2(indices, levels) },
+            // SAFETY: as above — SSE2 support verified at detection time.
             Level::Sse2 => return unsafe { x86::tu_bits_sse2(indices, levels) },
             Level::Scalar => {}
         }
@@ -228,6 +243,16 @@ pub mod scalar {
     }
 }
 
+// Safety model of this module: every kernel is a *safe* fn gated by
+// `#[target_feature]` — callers (the dispatchers above) take on exactly
+// one obligation, "the CPU supports this feature", discharged by the
+// runtime detection in `level()`. Inside the kernels the only `unsafe`
+// operations are the unaligned load/store intrinsics, each wrapped in
+// its own SAFETY-commented block whose bounds argument is local to the
+// surrounding loop; all lane arithmetic is safe in a target-feature
+// context. `cargo xtask analyze` (unsafe audit) holds every block here
+// to that comment discipline and denies new `unsafe` outside the module
+// allowlist.
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::super::ecq::NonUniformQuantizer;
@@ -241,16 +266,22 @@ mod x86 {
     const TU_FLUSH_CHUNKS: usize = 8192;
 
     #[inline]
-    unsafe fn hsum_epi32_256(v: __m256i) -> u64 {
+    #[target_feature(enable = "avx2")]
+    fn hsum_epi32_256(v: __m256i) -> u64 {
         let mut lanes = [0i32; 8];
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        // SAFETY: `lanes` is a 32-byte local array; the unaligned store
+        // writes exactly those 32 bytes.
+        unsafe { _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v) };
         lanes.iter().map(|&l| l as u64).sum()
     }
 
     #[inline]
-    unsafe fn hsum_epi32_128(v: __m128i) -> u64 {
+    #[target_feature(enable = "sse2")]
+    fn hsum_epi32_128(v: __m128i) -> u64 {
         let mut lanes = [0i32; 4];
-        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, v);
+        // SAFETY: `lanes` is a 16-byte local array; the unaligned store
+        // writes exactly those 16 bytes.
+        unsafe { _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, v) };
         lanes.iter().map(|&l| l as u64).sum()
     }
 
@@ -264,7 +295,7 @@ mod x86 {
 
     #[inline]
     #[target_feature(enable = "avx2")]
-    unsafe fn clip_avx2(x: __m256, vmin: __m256, vmax: __m256) -> __m256 {
+    fn clip_avx2(x: __m256, vmin: __m256, vmax: __m256) -> __m256 {
         let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(x, vmax);
         let le = _mm256_cmp_ps::<_CMP_LE_OQ>(x, vmin);
         let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
@@ -276,13 +307,13 @@ mod x86 {
     // SSE2 has no blendv: select(mask, a, b) = (mask & a) | (!mask & b).
     #[inline]
     #[target_feature(enable = "sse2")]
-    unsafe fn select_ps(mask: __m128, a: __m128, b: __m128) -> __m128 {
+    fn select_ps(mask: __m128, a: __m128, b: __m128) -> __m128 {
         _mm_or_ps(_mm_and_ps(mask, a), _mm_andnot_ps(mask, b))
     }
 
     #[inline]
     #[target_feature(enable = "sse2")]
-    unsafe fn clip_sse2(x: __m128, vmin: __m128, vmax: __m128) -> __m128 {
+    fn clip_sse2(x: __m128, vmin: __m128, vmax: __m128) -> __m128 {
         let ge = _mm_cmpge_ps(x, vmax);
         let le = _mm_cmple_ps(x, vmin);
         let nan = _mm_cmpunord_ps(x, x);
@@ -294,7 +325,7 @@ mod x86 {
     // --- quantize (Eq. (1)) -----------------------------------------------
 
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn quantize_avx2(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
+    pub(super) fn quantize_avx2(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
         let vmin = _mm256_set1_ps(q.c_min);
         let vmax = _mm256_set1_ps(q.c_max);
         let vscale = _mm256_set1_ps(q.scale);
@@ -302,7 +333,9 @@ mod x86 {
         let n8 = xs.len() & !7;
         let mut i = 0;
         while i < n8 {
-            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            // SAFETY: reads 8 f32 lanes at `xs[i..i + 8]`; `i < n8` and
+            // `n8 = xs.len() & !7` keep the read in bounds.
+            let x = unsafe { _mm256_loadu_ps(xs.as_ptr().add(i)) };
             let xc = clip_avx2(x, vmin, vmax);
             // Separate multiply and add (the scalar path is not
             // FMA-contracted), then truncate: the argument is >= 0.5,
@@ -314,17 +347,22 @@ mod x86 {
             // the low 128 bits to restore element order.
             let packed = _mm256_packus_epi32(n, n);
             let ordered = _mm256_permute4x64_epi64::<0b11_01_10_00>(packed);
-            _mm_storeu_si128(
-                out.as_mut_ptr().add(i) as *mut __m128i,
-                _mm256_castsi256_si128(ordered),
-            );
+            // SAFETY: writes 8 u16 lanes at `out[i..i + 8]`; the
+            // dispatcher asserted `out.len() == xs.len()`, so `i < n8`
+            // keeps the write in bounds.
+            unsafe {
+                _mm_storeu_si128(
+                    out.as_mut_ptr().add(i) as *mut __m128i,
+                    _mm256_castsi256_si128(ordered),
+                );
+            }
             i += 8;
         }
         scalar::quantize_slice(q, &xs[n8..], &mut out[n8..]);
     }
 
     #[target_feature(enable = "sse2")]
-    pub(super) unsafe fn quantize_sse2(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
+    pub(super) fn quantize_sse2(q: &UniformQuantizer, xs: &[f32], out: &mut [u16]) {
         let vmin = _mm_set1_ps(q.c_min);
         let vmax = _mm_set1_ps(q.c_max);
         let vscale = _mm_set1_ps(q.scale);
@@ -332,14 +370,18 @@ mod x86 {
         let n4 = xs.len() & !3;
         let mut i = 0;
         while i < n4 {
-            let x = _mm_loadu_ps(xs.as_ptr().add(i));
+            // SAFETY: reads 4 f32 lanes at `xs[i..i + 4]`; `i < n4` and
+            // `n4 = xs.len() & !3` keep the read in bounds.
+            let x = unsafe { _mm_loadu_ps(xs.as_ptr().add(i)) };
             let xc = clip_sse2(x, vmin, vmax);
             let v = _mm_add_ps(_mm_mul_ps(_mm_sub_ps(xc, vmin), vscale), vhalf);
             let n = _mm_cvttps_epi32(v);
             // Values are < 2^15 (MAX_VECTOR_LEVELS gate), so the signed
             // i32 -> i16 saturating pack is exact.
             let packed = _mm_packs_epi32(n, n);
-            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, packed);
+            // SAFETY: writes 4 u16 lanes (the low 8 bytes) at
+            // `out[i..i + 4]`; the dispatcher asserted equal lengths.
+            unsafe { _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, packed) };
             i += 4;
         }
         scalar::quantize_slice(q, &xs[n4..], &mut out[n4..]);
@@ -352,7 +394,7 @@ mod x86 {
     // the scalar method, top bin patched in by an integer-compare blend.
 
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn reconstruct_avx2(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
+    pub(super) fn reconstruct_avx2(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
         let vmin = _mm256_set1_ps(q.c_min);
         let vmax = _mm256_set1_ps(q.c_max);
         let vinv = _mm256_set1_ps(q.inv_scale);
@@ -360,19 +402,23 @@ mod x86 {
         let n8 = idx.len() & !7;
         let mut i = 0;
         while i < n8 {
-            let raw = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            // SAFETY: reads 8 u16 lanes at `idx[i..i + 8]`; `i < n8` and
+            // `n8 = idx.len() & !7` keep the read in bounds.
+            let raw = unsafe { _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i) };
             let n = _mm256_cvtepu16_epi32(raw);
             let v = _mm256_add_ps(vmin, _mm256_mul_ps(_mm256_cvtepi32_ps(n), vinv));
             let is_top = _mm256_cmpeq_epi32(n, top);
             let v = _mm256_blendv_ps(v, vmax, _mm256_castsi256_ps(is_top));
-            _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+            // SAFETY: writes 8 f32 lanes at `out[i..i + 8]`; the
+            // dispatcher asserted `out.len() == idx.len()`.
+            unsafe { _mm256_storeu_ps(out.as_mut_ptr().add(i), v) };
             i += 8;
         }
         scalar::reconstruct_slice(q, &idx[n8..], &mut out[n8..]);
     }
 
     #[target_feature(enable = "sse2")]
-    pub(super) unsafe fn reconstruct_sse2(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
+    pub(super) fn reconstruct_sse2(q: &UniformQuantizer, idx: &[u16], out: &mut [f32]) {
         let vmin = _mm_set1_ps(q.c_min);
         let vmax = _mm_set1_ps(q.c_max);
         let vinv = _mm_set1_ps(q.inv_scale);
@@ -381,12 +427,16 @@ mod x86 {
         let n4 = idx.len() & !3;
         let mut i = 0;
         while i < n4 {
-            let raw = _mm_loadl_epi64(idx.as_ptr().add(i) as *const __m128i);
+            // SAFETY: reads 4 u16 lanes (the low 8 bytes) at
+            // `idx[i..i + 4]`; `i < n4 = idx.len() & !3` bounds the read.
+            let raw = unsafe { _mm_loadl_epi64(idx.as_ptr().add(i) as *const __m128i) };
             let n = _mm_unpacklo_epi16(raw, zero); // zero-extend u16 -> i32
             let v = _mm_add_ps(vmin, _mm_mul_ps(_mm_cvtepi32_ps(n), vinv));
             let is_top = _mm_castsi128_ps(_mm_cmpeq_epi32(n, top));
             let v = select_ps(is_top, vmax, v);
-            _mm_storeu_ps(out.as_mut_ptr().add(i), v);
+            // SAFETY: writes 4 f32 lanes at `out[i..i + 4]`; the
+            // dispatcher asserted `out.len() == idx.len()`.
+            unsafe { _mm_storeu_ps(out.as_mut_ptr().add(i), v) };
             i += 4;
         }
         scalar::reconstruct_slice(q, &idx[n4..], &mut out[n4..]);
@@ -395,7 +445,7 @@ mod x86 {
     // --- fused fake-quant -------------------------------------------------
 
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn fake_quant_avx2(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
+    pub(super) fn fake_quant_avx2(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
         let vmin = _mm256_set1_ps(q.c_min);
         let vmax = _mm256_set1_ps(q.c_max);
         let vscale = _mm256_set1_ps(q.scale);
@@ -405,21 +455,25 @@ mod x86 {
         let n8 = xs.len() & !7;
         let mut i = 0;
         while i < n8 {
-            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            // SAFETY: reads 8 f32 lanes at `xs[i..i + 8]`; `i < n8` and
+            // `n8 = xs.len() & !7` keep the read in bounds.
+            let x = unsafe { _mm256_loadu_ps(xs.as_ptr().add(i)) };
             let xc = clip_avx2(x, vmin, vmax);
             let v = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(xc, vmin), vscale), vhalf);
             let n = _mm256_cvttps_epi32(v);
             let r = _mm256_add_ps(vmin, _mm256_mul_ps(_mm256_cvtepi32_ps(n), vinv));
             let is_top = _mm256_cmpeq_epi32(n, top);
             let r = _mm256_blendv_ps(r, vmax, _mm256_castsi256_ps(is_top));
-            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            // SAFETY: writes 8 f32 lanes at `out[i..i + 8]`; the
+            // dispatcher asserted `out.len() == xs.len()`.
+            unsafe { _mm256_storeu_ps(out.as_mut_ptr().add(i), r) };
             i += 8;
         }
         scalar::fake_quant_slice(q, &xs[n8..], &mut out[n8..]);
     }
 
     #[target_feature(enable = "sse2")]
-    pub(super) unsafe fn fake_quant_sse2(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
+    pub(super) fn fake_quant_sse2(q: &UniformQuantizer, xs: &[f32], out: &mut [f32]) {
         let vmin = _mm_set1_ps(q.c_min);
         let vmax = _mm_set1_ps(q.c_max);
         let vscale = _mm_set1_ps(q.scale);
@@ -429,14 +483,18 @@ mod x86 {
         let n4 = xs.len() & !3;
         let mut i = 0;
         while i < n4 {
-            let x = _mm_loadu_ps(xs.as_ptr().add(i));
+            // SAFETY: reads 4 f32 lanes at `xs[i..i + 4]`; `i < n4` and
+            // `n4 = xs.len() & !3` keep the read in bounds.
+            let x = unsafe { _mm_loadu_ps(xs.as_ptr().add(i)) };
             let xc = clip_sse2(x, vmin, vmax);
             let v = _mm_add_ps(_mm_mul_ps(_mm_sub_ps(xc, vmin), vscale), vhalf);
             let n = _mm_cvttps_epi32(v);
             let r = _mm_add_ps(vmin, _mm_mul_ps(_mm_cvtepi32_ps(n), vinv));
             let is_top = _mm_castsi128_ps(_mm_cmpeq_epi32(n, top));
             let r = select_ps(is_top, vmax, r);
-            _mm_storeu_ps(out.as_mut_ptr().add(i), r);
+            // SAFETY: writes 4 f32 lanes at `out[i..i + 4]`; the
+            // dispatcher asserted `out.len() == xs.len()`.
+            unsafe { _mm_storeu_ps(out.as_mut_ptr().add(i), r) };
             i += 4;
         }
         scalar::fake_quant_slice(q, &xs[n4..], &mut out[n4..]);
@@ -451,13 +509,15 @@ mod x86 {
     // break semantics hold for arbitrary threshold vectors.
 
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn nonuniform_avx2(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
+    pub(super) fn nonuniform_avx2(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
         let vmin = _mm256_set1_ps(q.c_min);
         let vmax = _mm256_set1_ps(q.c_max);
         let n8 = xs.len() & !7;
         let mut i = 0;
         while i < n8 {
-            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            // SAFETY: reads 8 f32 lanes at `xs[i..i + 8]`; `i < n8` and
+            // `n8 = xs.len() & !7` keep the read in bounds.
+            let x = unsafe { _mm256_loadu_ps(xs.as_ptr().add(i)) };
             let xc = clip_avx2(x, vmin, vmax);
             let mut n = _mm256_setzero_si256();
             let mut alive = _mm256_set1_epi32(-1);
@@ -468,23 +528,29 @@ mod x86 {
             }
             let packed = _mm256_packus_epi32(n, n);
             let ordered = _mm256_permute4x64_epi64::<0b11_01_10_00>(packed);
-            _mm_storeu_si128(
-                out.as_mut_ptr().add(i) as *mut __m128i,
-                _mm256_castsi256_si128(ordered),
-            );
+            // SAFETY: writes 8 u16 lanes at `out[i..i + 8]`; the
+            // dispatcher asserted `out.len() == xs.len()`.
+            unsafe {
+                _mm_storeu_si128(
+                    out.as_mut_ptr().add(i) as *mut __m128i,
+                    _mm256_castsi256_si128(ordered),
+                );
+            }
             i += 8;
         }
         scalar::nonuniform_index_slice(q, &xs[n8..], &mut out[n8..]);
     }
 
     #[target_feature(enable = "sse2")]
-    pub(super) unsafe fn nonuniform_sse2(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
+    pub(super) fn nonuniform_sse2(q: &NonUniformQuantizer, xs: &[f32], out: &mut [u16]) {
         let vmin = _mm_set1_ps(q.c_min);
         let vmax = _mm_set1_ps(q.c_max);
         let n4 = xs.len() & !3;
         let mut i = 0;
         while i < n4 {
-            let x = _mm_loadu_ps(xs.as_ptr().add(i));
+            // SAFETY: reads 4 f32 lanes at `xs[i..i + 4]`; `i < n4` and
+            // `n4 = xs.len() & !3` keep the read in bounds.
+            let x = unsafe { _mm_loadu_ps(xs.as_ptr().add(i)) };
             let xc = clip_sse2(x, vmin, vmax);
             let mut n = _mm_setzero_si128();
             let mut alive = _mm_set1_epi32(-1);
@@ -495,7 +561,9 @@ mod x86 {
             }
             // Counts are <= LINEAR_SCAN_MAX_THRESHOLDS: signed pack exact.
             let packed = _mm_packs_epi32(n, n);
-            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, packed);
+            // SAFETY: writes 4 u16 lanes (the low 8 bytes) at
+            // `out[i..i + 4]`; the dispatcher asserted equal lengths.
+            unsafe { _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, packed) };
             i += 4;
         }
         scalar::nonuniform_index_slice(q, &xs[n4..], &mut out[n4..]);
@@ -509,7 +577,7 @@ mod x86 {
     // partial sums, flushed to u64 before they can overflow.
 
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn tu_bits_avx2(indices: &[u16], levels: usize) -> u64 {
+    pub(super) fn tu_bits_avx2(indices: &[u16], levels: usize) -> u64 {
         let one = _mm256_set1_epi16(1);
         let cap = _mm256_set1_epi16((levels - 1) as i16);
         let mut total = 0u64;
@@ -518,7 +586,9 @@ mod x86 {
         let n16 = indices.len() & !15;
         let mut i = 0;
         while i < n16 {
-            let v = _mm256_loadu_si256(indices.as_ptr().add(i) as *const __m256i);
+            // SAFETY: reads 16 u16 lanes at `indices[i..i + 16]`;
+            // `i < n16 = indices.len() & !15` bounds the read.
+            let v = unsafe { _mm256_loadu_si256(indices.as_ptr().add(i) as *const __m256i) };
             let len = _mm256_min_epu16(_mm256_adds_epu16(v, one), cap);
             acc = _mm256_add_epi32(acc, _mm256_madd_epi16(len, one));
             i += 16;
@@ -534,7 +604,7 @@ mod x86 {
     }
 
     #[target_feature(enable = "sse2")]
-    pub(super) unsafe fn tu_bits_sse2(indices: &[u16], levels: usize) -> u64 {
+    pub(super) fn tu_bits_sse2(indices: &[u16], levels: usize) -> u64 {
         let one = _mm_set1_epi16(1);
         let cap = _mm_set1_epi16((levels - 1) as i16);
         let mut total = 0u64;
@@ -543,7 +613,9 @@ mod x86 {
         let n8 = indices.len() & !7;
         let mut i = 0;
         while i < n8 {
-            let v = _mm_loadu_si128(indices.as_ptr().add(i) as *const __m128i);
+            // SAFETY: reads 8 u16 lanes at `indices[i..i + 8]`;
+            // `i < n8 = indices.len() & !7` bounds the read.
+            let v = unsafe { _mm_loadu_si128(indices.as_ptr().add(i) as *const __m128i) };
             // Both operands are < 2^15 (gate), so the signed min is exact.
             let len = _mm_min_epi16(_mm_adds_epu16(v, one), cap);
             acc = _mm_add_epi32(acc, _mm_madd_epi16(len, one));

@@ -3,6 +3,11 @@
 //! CABAC or interleaved rANS, see [`super::entropy`]) → bit-stream with
 //! the paper's 12/24-byte side-information header (Fig. 1 pipeline).
 
+// Wire-facing module: panic-freedom is enforced both by `cargo xtask
+// analyze` (lint 2) and by clippy below. Escape hatches are the
+// `LINT-ALLOW` comment convention documented in rust/README.md.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use super::design::QuantSpec;
 use super::ecq::NonUniformQuantizer;
 use super::entropy::{backend_for, EntropyBackend, EntropyKind};
@@ -248,26 +253,35 @@ impl Encoder {
 }
 
 /// Reconstruction table of a parsed header: the uniform level grid, or
-/// the in-band ECQ table.
-pub(crate) fn recon_table_of(header: &Header) -> Vec<f32> {
+/// the in-band ECQ table. [`Header::read`] always populates `recon` for
+/// entropy-constrained streams, so the error arm is unreachable through
+/// that path — but this sits on the untrusted decode path, so a header
+/// that somehow violates the invariant reports a typed error instead of
+/// panicking the decoder.
+pub(crate) fn recon_table_of(header: &Header) -> Result<Vec<f32>, CodecError> {
     match (&header.quant, &header.recon) {
         (QuantKind::Uniform, _) => {
-            UniformQuantizer::new(header.c_min, header.c_max, header.levels).levels_vec()
+            Ok(UniformQuantizer::new(header.c_min, header.c_max, header.levels).levels_vec())
         }
-        (QuantKind::EntropyConstrained, Some(r)) => r.clone(),
-        (QuantKind::EntropyConstrained, None) => unreachable!("Header::read enforces recon"),
+        (QuantKind::EntropyConstrained, Some(r)) => Ok(r.clone()),
+        (QuantKind::EntropyConstrained, None) => Err(CodecError::header(
+            "entropy-constrained stream carries no reconstruction table",
+        )),
     }
 }
 
 /// Owned-output single-stream decode (the engine behind
 /// [`crate::codec::api::Codec::decode`] and the container tile decoder's
 /// fallback path).
+// LINT-ALLOW(index): `off` is the parsed-header length Header::read
+// returned for these very bytes, so `bytes[off..]` cannot be out of
+// range.
 pub(crate) fn decode_stream_owned(
     bytes: &[u8],
     elements: usize,
 ) -> Result<(Vec<f32>, Header), CodecError> {
     let (header, off) = Header::read(bytes)?;
-    let recon_table = recon_table_of(&header);
+    let recon_table = recon_table_of(&header)?;
     // The header names the backend (legacy streams carry the CABAC id).
     // Both backends decode straight into f32 output (no intermediate
     // index buffer), and `elements` may come from an untrusted wire frame
@@ -285,9 +299,11 @@ pub(crate) fn decode_stream_owned(
 /// Zero-copy single-stream decode: exactly `out.len()` elements are
 /// written into the caller's slice (a slot of a reused buffer — the
 /// serving hot path; see [`crate::codec::api::Codec::decode_into`]).
+// LINT-ALLOW(index): `off` is the parsed-header length Header::read
+// returned for these very bytes.
 pub(crate) fn decode_stream_into(bytes: &[u8], out: &mut [f32]) -> Result<Header, CodecError> {
     let (header, off) = Header::read(bytes)?;
-    let recon_table = recon_table_of(&header);
+    let recon_table = recon_table_of(&header)?;
     backend_for(header.entropy).decode_payload_f32_into(
         &bytes[off..],
         header.levels,
@@ -297,6 +313,8 @@ pub(crate) fn decode_stream_into(bytes: &[u8], out: &mut [f32]) -> Result<Header
     Ok(header)
 }
 
+// LINT-ALLOW(index): `off` is the parsed-header length Header::read
+// returned for these very bytes.
 pub(crate) fn decode_indices_impl(
     bytes: &[u8],
     elements: usize,

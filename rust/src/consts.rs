@@ -1,0 +1,116 @@
+//! Single source of truth for the repo's cross-artifact wire and
+//! container constants.
+//!
+//! Every identity constant that appears in more than one artifact — the
+//! Rust codec, the wire protocol, the Python golden generator
+//! (`tests/golden/gen_golden.py`), and the committed golden fixtures —
+//! is defined exactly once, here. The historical definition sites
+//! re-export from this module ([`crate::codec::header`],
+//! [`crate::codec::entropy`], [`crate::coordinator::net`]), so existing
+//! paths keep working while divergence becomes impossible by
+//! construction on the Rust side.
+//!
+//! The Python side cannot import this file, so it carries a mirrored
+//! constants block instead — and two independent checks keep the mirror
+//! honest:
+//!
+//! * `tests/consts_parity.rs` parses the generator's `NAME = value`
+//!   lines at test time and compares every value against this module;
+//! * `cargo xtask analyze` (lint 3, cross-artifact invariant diff) does
+//!   the same comparison plus a byte-level scan of the committed golden
+//!   fixtures (magic, version, and backend-id bytes must stay inside
+//!   the ranges defined here).
+//!
+//! Keep the values below expressed as plain literals: both checkers
+//! parse this file textually (no compiler in the loop), exactly so a
+//! drive-by edit here is caught against the generator and the fixtures.
+
+// ---------------------------------------------------------------------------
+// Batched container ("LWFB", `codec::header::SubstreamDirectory`)
+
+/// Magic prefix of the batched-container format.
+pub const BATCH_MAGIC: [u8; 4] = *b"LWFB";
+/// Oldest container version the decoder still reads (predates the
+/// entropy-backend field; prelude byte 5 must be zero).
+pub const BATCH_MIN_VERSION: u8 = 1;
+/// Spec-less container version: directories without per-tile quantizer
+/// designs serialize as this, byte-identical with every container
+/// written since PR 1.
+pub const BATCH_VERSION_PLAIN: u8 = 2;
+/// Container version carrying the per-tile quantizer design block
+/// (directories with `specs` but no `temporal` serialize as this).
+pub const BATCH_VERSION: u8 = 3;
+/// Newest container version: the temporal (stream-session) layout with
+/// per-tile intra/inter modes and reference generations.
+pub const BATCH_VERSION_TEMPORAL: u8 = 4;
+
+// ---------------------------------------------------------------------------
+// Entropy-backend ids (stream header byte 0 bits 6–7, container prelude
+// byte 5, and — shifted by one — the wire frame's entropy advertisement)
+
+/// Adaptive binary arithmetic coding (the paper's simplified CABAC).
+/// Id 0 so legacy streams, written before the backend field existed,
+/// decode unchanged.
+pub const ENTROPY_ID_CABAC: u8 = 0;
+/// Two-way interleaved rANS with static in-band frequency tables.
+pub const ENTROPY_ID_RANS: u8 = 1;
+/// Four-way interleaved rANS. Id 3 — id 2 stays unassigned, so
+/// pre-rans4 decoders reject these streams with the ordinary
+/// unknown-backend error.
+pub const ENTROPY_ID_RANS4: u8 = 3;
+
+// ---------------------------------------------------------------------------
+// Wire protocol ("LWFN", `coordinator::net`)
+
+/// Magic prefix of every wire frame.
+pub const NET_MAGIC: [u8; 4] = *b"LWFN";
+/// Current wire-protocol version.
+pub const NET_VERSION: u8 = 4;
+/// Oldest protocol version the frame reader still accepts.
+pub const NET_MIN_VERSION: u8 = 1;
+
+/// Frame kind 0: a compressed item (edge → cloud).
+pub const FRAME_KIND_ITEM: u8 = 0;
+/// Frame kind 1: an inference outcome (cloud → edge).
+pub const FRAME_KIND_OUTCOME: u8 = 1;
+/// Frame kind 2: BUSY/shed flow control (cloud → edge, protocol v3+).
+pub const FRAME_KIND_BUSY: u8 = 2;
+/// Frame kind 3: stream reset — the edge's temporal encoder state
+/// restarted (protocol v4+; header-only, no payload).
+pub const FRAME_KIND_RESET: u8 = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn container_version_range_is_contiguous_and_ordered() {
+        assert!(BATCH_MIN_VERSION <= BATCH_VERSION_PLAIN);
+        assert!(BATCH_VERSION_PLAIN < BATCH_VERSION);
+        assert!(BATCH_VERSION < BATCH_VERSION_TEMPORAL);
+    }
+
+    #[test]
+    fn backend_ids_are_distinct_and_skip_the_unassigned_slot() {
+        let ids = [ENTROPY_ID_CABAC, ENTROPY_ID_RANS, ENTROPY_ID_RANS4];
+        assert!(!ids.contains(&2), "backend id 2 is deliberately unassigned");
+        for (i, a) in ids.iter().enumerate() {
+            for b in &ids[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn frame_kinds_are_dense_from_zero() {
+        assert_eq!(
+            [
+                FRAME_KIND_ITEM,
+                FRAME_KIND_OUTCOME,
+                FRAME_KIND_BUSY,
+                FRAME_KIND_RESET
+            ],
+            [0, 1, 2, 3]
+        );
+    }
+}

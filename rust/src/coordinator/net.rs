@@ -63,6 +63,11 @@
 //! Everything here is `std::net` only — no async runtime, no new
 //! dependencies (the Linux fast path declares `poll(2)` by hand).
 
+// Wire-facing module: panic-freedom is enforced both by `cargo xtask
+// analyze` (lint 2) and by clippy below. Escape hatches are the
+// `LINT-ALLOW` comment convention documented in rust/README.md.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -81,10 +86,14 @@ use crate::util::rng::SplitMix64;
 use crate::util::threadpool::ShardedPool;
 use crate::util::timer::Percentiles;
 
-pub const NET_MAGIC: [u8; 4] = *b"LWFN";
-pub const NET_VERSION: u8 = 4;
-/// Oldest protocol version this reader still accepts.
-pub const NET_MIN_VERSION: u8 = 1;
+// Protocol identity constants live in [`crate::consts`] (the single
+// source of truth shared with the container format, the Python golden
+// generator, and `cargo xtask analyze`); this module remains their
+// historical import path.
+pub use crate::consts::{
+    FRAME_KIND_BUSY, FRAME_KIND_ITEM, FRAME_KIND_OUTCOME, FRAME_KIND_RESET, NET_MAGIC,
+    NET_MIN_VERSION, NET_VERSION,
+};
 pub const FRAME_HEADER_BYTES: usize = 28;
 /// Upper bound on a frame payload accepted from the wire. A compressed
 /// split-layer tensor is a few kilobytes; 256 MiB rejects crafted lengths
@@ -204,6 +213,34 @@ fn proto_err(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
 }
 
+// Fixed-width little-endian reads at a caller-validated offset. Callers
+// check the buffer length once (a full frame header, a full payload)
+// before slicing fields out of it.
+// LINT-ALLOW(index): offset invariants are the caller's length checks,
+// documented above.
+#[inline]
+fn u32_le(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([bytes[at], bytes[at + 1], bytes[at + 2], bytes[at + 3]])
+}
+
+// LINT-ALLOW(index): see `u32_le`.
+#[inline]
+fn u64_le(bytes: &[u8], at: usize) -> u64 {
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&bytes[at..at + 8]);
+    u64::from_le_bytes(raw)
+}
+
+#[inline]
+fn f32_le(bytes: &[u8], at: usize) -> f32 {
+    f32::from_bits(u32_le(bytes, at))
+}
+
+#[inline]
+fn f64_le(bytes: &[u8], at: usize) -> f64 {
+    f64::from_bits(u64_le(bytes, at))
+}
+
 /// Byte-7 advertisement for an item's codec bytes: 0 = unspecified
 /// (unsniffable or legacy writer), else `EntropyKind::id() + 1`. Backed
 /// by [`crate::codec::api::sniff`] — the same sniffer every validation
@@ -212,6 +249,7 @@ fn entropy_hint_of(codec_bytes: &[u8]) -> u8 {
     sniff(codec_bytes).entropy.map_or(0, |k| k.id() + 1)
 }
 
+// LINT-ALLOW(index): fixed offsets into a fixed-size local array.
 fn frame_header(
     kind: u8,
     task: TaskKind,
@@ -225,15 +263,22 @@ fn frame_header(
             "frame payload {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte wire limit"
         )));
     }
+    // MAX_FRAME_PAYLOAD < u32::MAX, so the check above also proves the
+    // length fits the 4-byte wire field.
+    let wire_len = u32::try_from(payload_len).map_err(|_| {
+        proto_err(format!(
+            "frame payload {payload_len} does not fit the u32 length field"
+        ))
+    })?;
     let mut header = [0u8; FRAME_HEADER_BYTES];
     header[..4].copy_from_slice(&NET_MAGIC);
     header[4] = NET_VERSION;
     header[5] = kind;
-    header[6] = task.code();
+    header[6] = task.code().map_err(proto_err)?;
     header[7] = entropy_hint;
     header[8..16].copy_from_slice(&id.to_le_bytes());
     header[16..24].copy_from_slice(&image_index.to_le_bytes());
-    header[24..28].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    header[24..28].copy_from_slice(&wire_len.to_le_bytes());
     Ok(header)
 }
 
@@ -243,7 +288,7 @@ fn frame_header(
 pub fn write_item_frame(w: &mut impl Write, task: TaskKind, item: &WireItem) -> io::Result<usize> {
     let payload_len = 8 + item.bytes.len();
     let hint = entropy_hint_of(&item.bytes);
-    let header = frame_header(0, task, hint, item.id, item.image_index, payload_len)?;
+    let header = frame_header(FRAME_KIND_ITEM, task, hint, item.id, item.image_index, payload_len)?;
     w.write_all(&header)?;
     w.write_all(&item.elements.to_le_bytes())?;
     w.write_all(&item.bytes)?;
@@ -274,7 +319,7 @@ pub fn write_outcome_frame(
         p.extend_from_slice(&d.w.to_le_bytes());
         p.extend_from_slice(&d.h.to_le_bytes());
     }
-    let header = frame_header(1, task, 0, o.id, o.image_index, p.len())?;
+    let header = frame_header(FRAME_KIND_OUTCOME, task, 0, o.id, o.image_index, p.len())?;
     w.write_all(&header)?;
     w.write_all(&p)?;
     Ok(FRAME_HEADER_BYTES + p.len())
@@ -282,7 +327,7 @@ pub fn write_outcome_frame(
 
 /// Serialize one BUSY/shed frame (daemon → edge flow control).
 pub fn write_busy_frame(w: &mut impl Write, task: TaskKind, busy: WireBusy) -> io::Result<usize> {
-    let header = frame_header(2, task, 0, 0, 0, BUSY_WIRE_BYTES)?;
+    let header = frame_header(FRAME_KIND_BUSY, task, 0, 0, 0, BUSY_WIRE_BYTES)?;
     w.write_all(&header)?;
     w.write_all(&busy.retry_after_ms.to_le_bytes())?;
     Ok(FRAME_HEADER_BYTES + BUSY_WIRE_BYTES)
@@ -291,7 +336,7 @@ pub fn write_busy_frame(w: &mut impl Write, task: TaskKind, busy: WireBusy) -> i
 /// Serialize one stream-reset frame (edge → daemon temporal-state
 /// announcement; header only, no payload).
 pub fn write_reset_frame(w: &mut impl Write, task: TaskKind) -> io::Result<usize> {
-    let header = frame_header(3, task, 0, 0, 0, 0)?;
+    let header = frame_header(FRAME_KIND_RESET, task, 0, 0, 0, 0)?;
     w.write_all(&header)?;
     Ok(FRAME_HEADER_BYTES)
 }
@@ -314,13 +359,16 @@ pub fn write_frame(w: &mut impl Write, task: TaskKind, frame: &Frame) -> io::Res
 /// The daemon's readiness loop uses this to cut frames out of a
 /// partial-read buffer without blocking.
 pub fn buffered_frame_len(buf: &[u8]) -> io::Result<Option<usize>> {
+    // LINT-ALLOW(index): guarded by the length check on the same line.
     if buf.len() >= 4 && buf[..4] != NET_MAGIC {
         return Err(proto_err("bad frame magic".into()));
     }
     if buf.len() < FRAME_HEADER_BYTES {
         return Ok(None);
     }
-    let payload_len = u32::from_le_bytes(buf[24..28].try_into().unwrap()) as usize;
+    // LINT-ALLOW(index): the full 28-byte header is buffered (checked
+    // just above).
+    let payload_len = u32_le(buf, 24) as usize;
     if payload_len > MAX_FRAME_PAYLOAD {
         return Err(proto_err(format!(
             "frame payload {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte wire limit"
@@ -337,6 +385,9 @@ pub fn buffered_frame_len(buf: &[u8]) -> io::Result<Option<usize>> {
 /// Read one frame. `Ok(None)` on a clean EOF at a frame boundary (the
 /// peer's half-close); anything else that cuts a frame short is an error.
 /// `expect_task` rejects frames from a peer serving a different network.
+// LINT-ALLOW(index): header accesses are fixed offsets into the
+// fully-read 28-byte array; payload accesses sit behind the explicit
+// per-kind length checks.
 pub fn read_frame(
     r: &mut impl Read,
     expect_task: Option<TaskKind>,
@@ -367,7 +418,7 @@ pub fn read_frame(
     // frames may advertise the payload's entropy backend (cross-checked
     // against the payload below).
     let entropy_hint = header[7];
-    let hint_allowed = header[4] >= 2 && header[5] == 0;
+    let hint_allowed = header[4] >= 2 && header[5] == FRAME_KIND_ITEM;
     if entropy_hint != 0 && !hint_allowed {
         return Err(proto_err(format!("nonzero reserved byte {}", header[7])));
     }
@@ -379,9 +430,9 @@ pub fn read_frame(
             )));
         }
     }
-    let id = u64::from_le_bytes(header[8..16].try_into().unwrap());
-    let image_index = u64::from_le_bytes(header[16..24].try_into().unwrap());
-    let payload_len = u32::from_le_bytes(header[24..28].try_into().unwrap()) as usize;
+    let id = u64_le(&header, 8);
+    let image_index = u64_le(&header, 16);
+    let payload_len = u32_le(&header, 24) as usize;
     if payload_len > MAX_FRAME_PAYLOAD {
         return Err(proto_err(format!(
             "frame payload {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte wire limit"
@@ -390,11 +441,11 @@ pub fn read_frame(
     let mut payload = vec![0u8; payload_len];
     r.read_exact(&mut payload)?;
     let frame = match header[5] {
-        0 => {
+        FRAME_KIND_ITEM => {
             if payload.len() < 8 {
                 return Err(proto_err("item payload shorter than its element count".into()));
             }
-            let elements = u64::from_le_bytes(payload[..8].try_into().unwrap());
+            let elements = u64_le(&payload, 0);
             // Same plausibility rule the codec enforces everywhere, from
             // the one sniffer ([`crate::codec::api::sniff`]): an element
             // claim no compressed stream could carry is rejected here,
@@ -434,7 +485,7 @@ pub fn read_frame(
                 bytes,
             })
         }
-        1 => {
+        FRAME_KIND_OUTCOME => {
             if payload.len() < 21 {
                 return Err(proto_err("outcome payload truncated".into()));
             }
@@ -444,9 +495,9 @@ pub fn read_frame(
                 3 => Some(true),
                 flags => return Err(proto_err(format!("bad outcome flags {flags:#04x}"))),
             };
-            let latency_s = f64::from_le_bytes(payload[1..9].try_into().unwrap());
-            let bits_per_element = f64::from_le_bytes(payload[9..17].try_into().unwrap());
-            let n_det = u32::from_le_bytes(payload[17..21].try_into().unwrap()) as usize;
+            let latency_s = f64_le(&payload, 1);
+            let bits_per_element = f64_le(&payload, 9);
+            let n_det = u32_le(&payload, 17) as usize;
             if payload.len() != 21 + n_det * DET_WIRE_BYTES {
                 return Err(proto_err(format!(
                     "outcome carries {} payload bytes for {n_det} detections",
@@ -456,12 +507,10 @@ pub fn read_frame(
             let mut detections = Vec::with_capacity(n_det);
             for k in 0..n_det {
                 let at = 21 + k * DET_WIRE_BYTES;
-                let f32_at = |o: usize| {
-                    f32::from_le_bytes(payload[at + o..at + o + 4].try_into().unwrap())
-                };
+                let f32_at = |o: usize| f32_le(&payload, at + o);
                 detections.push(Detection {
                     image: image_index as usize,
-                    class: u32::from_le_bytes(payload[at..at + 4].try_into().unwrap()) as usize,
+                    class: u32_le(&payload, at) as usize,
                     score: f32_at(4),
                     x: f32_at(8),
                     y: f32_at(12),
@@ -478,7 +527,7 @@ pub fn read_frame(
                 detections,
             })
         }
-        2 => {
+        FRAME_KIND_BUSY => {
             // BUSY frames entered the protocol at v3; an older peer
             // stamping one is lying about its version.
             if header[4] < 3 {
@@ -494,10 +543,10 @@ pub fn read_frame(
                 )));
             }
             Frame::Busy(WireBusy {
-                retry_after_ms: u32::from_le_bytes(payload[..4].try_into().unwrap()),
+                retry_after_ms: u32_le(&payload, 0),
             })
         }
-        3 => {
+        FRAME_KIND_RESET => {
             // Stream-reset frames entered the protocol at v4.
             if header[4] < 4 {
                 return Err(proto_err(format!(
@@ -648,6 +697,12 @@ mod readiness {
                     None => -1,
                     Some(d) => d.as_millis().min(i32::MAX as u128).max(1) as c_int,
                 };
+                // SAFETY: `fds` is an exclusively-borrowed local Vec of
+                // `#[repr(C)] PollFd` records matching the kernel ABI; the
+                // pointer and length describe exactly that allocation for
+                // the duration of the call, and poll(2) only writes the
+                // `revents` field of each record. `nfds_t` is `c_ulong` on
+                // Linux (this module is Linux-gated for that reason).
                 let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
                 if rc < 0 {
                     let e = io::Error::last_os_error();
@@ -926,7 +981,7 @@ impl CloudDaemon {
                 draining: false,
             };
             if let Err(e) = ev.run() {
-                loop_errors.lock().unwrap().push(format!("event loop: {e}"));
+                lock_errors(&loop_errors).push(format!("event loop: {e}"));
             }
         });
 
@@ -968,7 +1023,7 @@ impl CloudDaemon {
     /// First failure recorded by the event loop or a connection — the same
     /// take-semantics contract as [`super::transport::Transport::take_error`].
     pub fn take_error(&self) -> Option<String> {
-        let mut errs = self.errors.lock().unwrap();
+        let mut errs = lock_errors(&self.errors);
         if errs.is_empty() {
             None
         } else {
@@ -997,7 +1052,7 @@ impl CloudDaemon {
             items: self.counters.items.load(Ordering::Relaxed),
             bytes_in: self.counters.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.counters.bytes_out.load(Ordering::Relaxed),
-            errors: self.errors.lock().unwrap().clone(),
+            errors: lock_errors(&self.errors).clone(),
         }
     }
 
@@ -1024,6 +1079,14 @@ enum DecodeJob {
 }
 
 type ConnResult = (u64, Result<WireOutcome>);
+
+/// Lock the shared error log, recovering from poisoning: the log is a
+/// plain `Vec<String>` with no invariants a panicked holder could break,
+/// and error reporting must keep working precisely when some thread has
+/// already failed.
+fn lock_errors(errors: &Mutex<Vec<String>>) -> std::sync::MutexGuard<'_, Vec<String>> {
+    errors.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// How long a half-closed connection lingers, discarding inbound bytes,
 /// before the socket is dropped. Closing with unread data in the kernel
@@ -1186,7 +1249,12 @@ impl EventLoop {
         let ids: Vec<u64> = self.conns.keys().copied().collect();
         for id in ids {
             let next = {
-                let conn = self.conns.get_mut(&id).expect("conn listed");
+                // Ids were snapshotted from the map above and this loop
+                // only removes the id it is visiting, so the entry is
+                // still present — but a missing one is simply skipped.
+                let Some(conn) = self.conns.get_mut(&id) else {
+                    continue;
+                };
                 match flush_conn(conn) {
                     Err(_) if conn.shedding || conn.closing_deadline.is_some() => {
                         // Already tearing down; not worth reporting twice.
@@ -1279,7 +1347,7 @@ impl EventLoop {
                 Err(e) => {
                     // Surfaced through take_error like the reader paths;
                     // the daemon keeps serving existing connections.
-                    self.errors.lock().unwrap().push(format!("accept: {e}"));
+                    lock_errors(&self.errors).push(format!("accept: {e}"));
                     break;
                 }
             }
@@ -1434,7 +1502,7 @@ impl EventLoop {
     /// daemon keeps serving everyone else; the client's reconnect machinery
     /// handles the rest.
     fn fail_conn(&mut self, id: u64, msg: String) {
-        self.errors.lock().unwrap().push(format!("connection {id}: {msg}"));
+        lock_errors(&self.errors).push(format!("connection {id}: {msg}"));
         if let Some(conn) = self.conns.get_mut(&id) {
             let _ = flush_conn(conn);
             let _ = conn.stream.shutdown(Shutdown::Write);
@@ -1986,7 +2054,7 @@ mod tests {
             TaskKind::ClassifyAlex,
             TaskKind::Detect,
         ] {
-            assert_eq!(TaskKind::from_code(t.code()).unwrap(), t);
+            assert_eq!(TaskKind::from_code(t.code().unwrap()).unwrap(), t);
         }
         assert!(TaskKind::from_code(0x00).is_err());
         assert!(TaskKind::from_code(0x10).is_err());

@@ -5,6 +5,11 @@
 //! CABAC payload. Everything upstream of it exists only on the edge
 //! device; everything downstream only in the cloud.
 
+// Wire-facing module: panic-freedom is enforced both by `cargo xtask
+// analyze` (lint 2) and by clippy below. Escape hatches are the
+// `LINT-ALLOW` comment convention documented in rust/README.md.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use std::time::Instant;
 
 use crate::eval::Detection;
@@ -33,12 +38,19 @@ impl TaskKind {
     }
 
     /// One-byte wire code carried in every [`super::net`] frame header so
-    /// both peers can verify they serve the same split network.
-    pub fn code(&self) -> u8 {
+    /// both peers can verify they serve the same split network. Errs on a
+    /// split with no code point: only splits 1–3 exist on the wire (the
+    /// exact set [`TaskKind::from_code`] accepts back), and the old
+    /// truncating `as u8 & 0x0F` silently collapsed e.g. split 18 onto
+    /// split 2's code.
+    pub fn code(&self) -> Result<u8, String> {
         match self {
-            TaskKind::ClassifyResnet { split } => 0x10 | (*split as u8 & 0x0F),
-            TaskKind::ClassifyAlex => 0x20,
-            TaskKind::Detect => 0x30,
+            TaskKind::ClassifyResnet { split } => match u8::try_from(*split) {
+                Ok(s @ 1..=3) => Ok(0x10 | s),
+                _ => Err(format!("resnet split {split} has no wire code (1..=3)")),
+            },
+            TaskKind::ClassifyAlex => Ok(0x20),
+            TaskKind::Detect => Ok(0x30),
         }
     }
 

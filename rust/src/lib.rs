@@ -22,6 +22,7 @@
 
 pub mod baseline;
 pub mod codec;
+pub mod consts;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

@@ -9,5 +9,6 @@ pub mod math;
 pub mod bench;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 pub mod timer;

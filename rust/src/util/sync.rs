@@ -1,0 +1,20 @@
+//! Synchronization-primitive facade: `std::sync` at runtime, loom's
+//! model-checked twins when the crate is compiled with `--cfg loom`.
+//!
+//! Code that wants its interleavings exhaustively explored (the
+//! coordinator's [`crate::util::threadpool::BoundedQueue`], the
+//! self-pipe waker protocol) imports `Arc`/`Condvar`/`Mutex` from here
+//! instead of `std::sync`. The nightly CI `loom` job appends a
+//! `[target.'cfg(loom)'.dependencies]` loom entry on the fly (it is
+//! *not* declared in Cargo.toml — the offline build environment
+//! resolves no external crates) and runs
+//! `RUSTFLAGS="--cfg loom" cargo test --release --test loom`.
+//!
+//! Loom's types mirror the `std::sync` API (including `LockResult`
+//! poisoning wrappers), so callers compile unchanged under either cfg.
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex};
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex};

@@ -269,111 +269,123 @@ impl<T: Send + 'static> Drop for ShardedPool<T> {
     }
 }
 
-/// Bounded MPMC queue with blocking push/pop and close semantics —
-/// the coordinator's backpressure primitive.
-pub struct BoundedQueue<T> {
-    inner: Arc<QueueInner<T>>,
-}
+mod bounded {
+    //! The queue lives in its own module so that its primitives come
+    //! from [`crate::util::sync`] — `std::sync` at runtime, loom's
+    //! model-checked twins under `--cfg loom`. `tests/loom.rs`
+    //! exhaustively interleaves push/pop/close against these semantics.
 
-struct QueueInner<T> {
-    state: Mutex<QueueState<T>>,
-    not_full: Condvar,
-    not_empty: Condvar,
-    capacity: usize,
-}
+    use crate::util::sync::{Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
 
-struct QueueState<T> {
-    items: VecDeque<T>,
-    closed: bool,
-}
+    /// Bounded MPMC queue with blocking push/pop and close semantics —
+    /// the coordinator's backpressure primitive.
+    pub struct BoundedQueue<T> {
+        inner: Arc<QueueInner<T>>,
+    }
 
-impl<T> Clone for BoundedQueue<T> {
-    fn clone(&self) -> Self {
-        Self {
-            inner: Arc::clone(&self.inner),
+    struct QueueInner<T> {
+        state: Mutex<QueueState<T>>,
+        not_full: Condvar,
+        not_empty: Condvar,
+        capacity: usize,
+    }
+
+    struct QueueState<T> {
+        items: VecDeque<T>,
+        closed: bool,
+    }
+
+    impl<T> Clone for BoundedQueue<T> {
+        fn clone(&self) -> Self {
+            Self {
+                inner: Arc::clone(&self.inner),
+            }
         }
     }
-}
 
-impl<T> BoundedQueue<T> {
-    pub fn new(capacity: usize) -> Self {
-        Self {
-            inner: Arc::new(QueueInner {
-                state: Mutex::new(QueueState {
-                    items: VecDeque::with_capacity(capacity),
-                    closed: false,
+    impl<T> BoundedQueue<T> {
+        pub fn new(capacity: usize) -> Self {
+            Self {
+                inner: Arc::new(QueueInner {
+                    state: Mutex::new(QueueState {
+                        items: VecDeque::with_capacity(capacity),
+                        closed: false,
+                    }),
+                    not_full: Condvar::new(),
+                    not_empty: Condvar::new(),
+                    capacity: capacity.max(1),
                 }),
-                not_full: Condvar::new(),
-                not_empty: Condvar::new(),
-                capacity: capacity.max(1),
-            }),
+            }
         }
-    }
 
-    /// Blocking push; returns Err(item) if the queue is closed.
-    pub fn push(&self, item: T) -> Result<(), T> {
-        let mut st = self.inner.state.lock().unwrap();
-        loop {
-            if st.closed {
-                return Err(item);
+        /// Blocking push; returns Err(item) if the queue is closed.
+        pub fn push(&self, item: T) -> Result<(), T> {
+            let mut st = self.inner.state.lock().unwrap();
+            loop {
+                if st.closed {
+                    return Err(item);
+                }
+                if st.items.len() < self.inner.capacity {
+                    st.items.push_back(item);
+                    self.inner.not_empty.notify_one();
+                    return Ok(());
+                }
+                st = self.inner.not_full.wait(st).unwrap();
             }
-            if st.items.len() < self.inner.capacity {
-                st.items.push_back(item);
-                self.inner.not_empty.notify_one();
-                return Ok(());
-            }
-            st = self.inner.not_full.wait(st).unwrap();
         }
-    }
 
-    /// Blocking pop; None when the queue is closed AND drained.
-    pub fn pop(&self) -> Option<T> {
-        let mut st = self.inner.state.lock().unwrap();
-        loop {
-            if let Some(item) = st.items.pop_front() {
-                self.inner.not_full.notify_one();
-                return Some(item);
+        /// Blocking pop; None when the queue is closed AND drained.
+        pub fn pop(&self) -> Option<T> {
+            let mut st = self.inner.state.lock().unwrap();
+            loop {
+                if let Some(item) = st.items.pop_front() {
+                    self.inner.not_full.notify_one();
+                    return Some(item);
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.inner.not_empty.wait(st).unwrap();
             }
-            if st.closed {
-                return None;
-            }
-            st = self.inner.not_empty.wait(st).unwrap();
         }
-    }
 
-    /// Drain up to `max` items, waiting for at least one (batch pop used by
-    /// the batching scheduler). None when closed and drained.
-    pub fn pop_up_to(&self, max: usize) -> Option<Vec<T>> {
-        let mut st = self.inner.state.lock().unwrap();
-        loop {
-            if !st.items.is_empty() {
-                let take = st.items.len().min(max.max(1));
-                let batch: Vec<T> = st.items.drain(..take).collect();
-                self.inner.not_full.notify_all();
-                return Some(batch);
+        /// Drain up to `max` items, waiting for at least one (batch pop
+        /// used by the batching scheduler). None when closed and drained.
+        pub fn pop_up_to(&self, max: usize) -> Option<Vec<T>> {
+            let mut st = self.inner.state.lock().unwrap();
+            loop {
+                if !st.items.is_empty() {
+                    let take = st.items.len().min(max.max(1));
+                    let batch: Vec<T> = st.items.drain(..take).collect();
+                    self.inner.not_full.notify_all();
+                    return Some(batch);
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.inner.not_empty.wait(st).unwrap();
             }
-            if st.closed {
-                return None;
-            }
-            st = self.inner.not_empty.wait(st).unwrap();
         }
-    }
 
-    pub fn close(&self) {
-        let mut st = self.inner.state.lock().unwrap();
-        st.closed = true;
-        self.inner.not_empty.notify_all();
-        self.inner.not_full.notify_all();
-    }
+        pub fn close(&self) {
+            let mut st = self.inner.state.lock().unwrap();
+            st.closed = true;
+            self.inner.not_empty.notify_all();
+            self.inner.not_full.notify_all();
+        }
 
-    pub fn len(&self) -> usize {
-        self.inner.state.lock().unwrap().items.len()
-    }
+        pub fn len(&self) -> usize {
+            self.inner.state.lock().unwrap().items.len()
+        }
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        pub fn is_empty(&self) -> bool {
+            self.len() == 0
+        }
     }
 }
+
+pub use bounded::BoundedQueue;
 
 #[cfg(test)]
 mod tests {

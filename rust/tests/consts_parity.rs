@@ -1,0 +1,82 @@
+//! Executable parity check between [`lwfc::consts`] (the single source
+//! of truth for wire/container constants) and the mirrored constant
+//! block at the top of `tests/golden/gen_golden.py`. The same pairing is
+//! checked textually by `cargo xtask analyze` (lint 3); this test makes
+//! the invariant fail `cargo test` too, so a drift cannot slip through a
+//! run that skips the xtask pass.
+
+use lwfc::consts;
+use std::collections::HashMap;
+use std::fs;
+use std::path::PathBuf;
+
+/// Parse the generator's module-level `NAME = literal` lines. First
+/// occurrence wins, which is the mirror block — every later rebinding of
+/// an upper-case name (none today) would be shadowed, not trusted.
+fn python_consts() -> HashMap<String, String> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/gen_golden.py");
+    let text =
+        fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let Some((name, value)) = line.split_once(" = ") else {
+            continue;
+        };
+        let name = name.trim();
+        let const_like = !name.is_empty()
+            && name.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+            && name.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_');
+        if !const_like {
+            continue;
+        }
+        let value = value.split('#').next().unwrap_or("").trim().to_string();
+        out.entry(name.to_string()).or_insert(value);
+    }
+    out
+}
+
+fn num(m: &HashMap<String, String>, name: &str) -> u64 {
+    let v = m
+        .get(name)
+        .unwrap_or_else(|| panic!("{name} missing from gen_golden.py's mirror block"));
+    v.parse()
+        .unwrap_or_else(|_| panic!("{name} must stay a plain integer literal, got `{v}`"))
+}
+
+fn magic(m: &HashMap<String, String>, name: &str) -> String {
+    m.get(name)
+        .unwrap_or_else(|| panic!("{name} missing from gen_golden.py's mirror block"))
+        .clone()
+}
+
+#[test]
+fn golden_generator_mirrors_container_consts() {
+    let m = python_consts();
+    let rust_magic = String::from_utf8(consts::BATCH_MAGIC.to_vec()).expect("ascii magic");
+    assert_eq!(magic(&m, "BATCH_MAGIC"), format!("b\"{rust_magic}\""));
+    assert_eq!(num(&m, "BATCH_MIN_VERSION"), u64::from(consts::BATCH_MIN_VERSION));
+    assert_eq!(num(&m, "BATCH_VERSION_PLAIN"), u64::from(consts::BATCH_VERSION_PLAIN));
+    assert_eq!(num(&m, "BATCH_VERSION"), u64::from(consts::BATCH_VERSION));
+    assert_eq!(num(&m, "BATCH_VERSION_TEMPORAL"), u64::from(consts::BATCH_VERSION_TEMPORAL));
+}
+
+#[test]
+fn golden_generator_mirrors_entropy_backend_ids() {
+    let m = python_consts();
+    assert_eq!(num(&m, "ENTROPY_ID_CABAC"), u64::from(consts::ENTROPY_ID_CABAC));
+    assert_eq!(num(&m, "ENTROPY_ID_RANS"), u64::from(consts::ENTROPY_ID_RANS));
+    assert_eq!(num(&m, "ENTROPY_ID_RANS4"), u64::from(consts::ENTROPY_ID_RANS4));
+}
+
+#[test]
+fn golden_generator_mirrors_wire_protocol_consts() {
+    let m = python_consts();
+    let rust_magic = String::from_utf8(consts::NET_MAGIC.to_vec()).expect("ascii magic");
+    assert_eq!(magic(&m, "NET_MAGIC"), format!("b\"{rust_magic}\""));
+    assert_eq!(num(&m, "NET_VERSION"), u64::from(consts::NET_VERSION));
+    assert_eq!(num(&m, "NET_MIN_VERSION"), u64::from(consts::NET_MIN_VERSION));
+    assert_eq!(num(&m, "FRAME_KIND_ITEM"), u64::from(consts::FRAME_KIND_ITEM));
+    assert_eq!(num(&m, "FRAME_KIND_OUTCOME"), u64::from(consts::FRAME_KIND_OUTCOME));
+    assert_eq!(num(&m, "FRAME_KIND_BUSY"), u64::from(consts::FRAME_KIND_BUSY));
+    assert_eq!(num(&m, "FRAME_KIND_RESET"), u64::from(consts::FRAME_KIND_RESET));
+}

@@ -33,6 +33,33 @@ ADAPT_SHIFT = 5
 TOP = 1 << 24
 MASK32 = 0xFFFFFFFF
 
+# --------------------------------------------------------------------------
+# Wire/container constants mirrored from rust/src/consts.rs. This block is
+# parsed *textually* by `cargo xtask analyze` (the cross-artifact invariant
+# diff) and by rust/tests/consts_parity.rs, so keep each entry a plain
+# `NAME = literal` line. If a value here drifts from the Rust side, both
+# checkers fail the build.
+# --------------------------------------------------------------------------
+
+BATCH_MAGIC = b"LWFB"
+BATCH_MIN_VERSION = 1
+BATCH_VERSION_PLAIN = 2
+BATCH_VERSION = 3
+BATCH_VERSION_TEMPORAL = 4
+
+ENTROPY_ID_CABAC = 0
+ENTROPY_ID_RANS = 1
+ENTROPY_ID_RANS4 = 3
+
+NET_MAGIC = b"LWFN"
+NET_VERSION = 4
+NET_MIN_VERSION = 1
+
+FRAME_KIND_ITEM = 0
+FRAME_KIND_OUTCOME = 1
+FRAME_KIND_BUSY = 2
+FRAME_KIND_RESET = 3
+
 
 def f32(x):
     """Round a Python float to the nearest IEEE-754 binary32 value."""
@@ -508,11 +535,11 @@ def container_bytes(tiles, entropy_id=0, specs=None, temporal=None):
     per-tile (mode, generation) records — their presence alone selects
     version 4 (flags byte + 5-byte records between the directory entries
     and the spec block), exactly like the Rust writer."""
-    out = bytearray(b"LWFB")
+    out = bytearray(BATCH_MAGIC)
     if temporal is not None:
-        out.append(4)
+        out.append(BATCH_VERSION_TEMPORAL)
     else:
-        out.append(3 if specs is not None else 2)
+        out.append(BATCH_VERSION if specs is not None else BATCH_VERSION_PLAIN)
     out.append(entropy_id)
     out += struct.pack("<I", len(tiles))
     out += struct.pack("<Q", sum(e for e, _ in tiles))
@@ -543,7 +570,7 @@ def container_v4_self_check(blob, plan, refs, c_min, c_max, levels, head_len):
     store — per tile, the previous frame's reconstructed f32 values (None
     for frame 0). Returns the reconstructions, i.e. the next frame's
     reference store."""
-    assert blob[:4] == b"LWFB" and blob[4] == 4
+    assert blob[:4] == BATCH_MAGIC and blob[4] == BATCH_VERSION_TEMPORAL
     count = struct.unpack_from("<I", blob, 6)[0]
     total = struct.unpack_from("<Q", blob, 10)[0]
     assert count == len(plan)
@@ -588,7 +615,7 @@ def container_v4_self_check(blob, plan, refs, c_min, c_max, levels, head_len):
 def container_self_check(blob, tile_plan):
     """Re-parse a generated container and decode every tile back to the
     expected indices. tile_plan: [(indices, levels, head_len)]."""
-    assert blob[:4] == b"LWFB"
+    assert blob[:4] == BATCH_MAGIC
     version = blob[4]
     count = struct.unpack_from("<I", blob, 6)[0]
     total = struct.unpack_from("<Q", blob, 10)[0]

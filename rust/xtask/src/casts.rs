@@ -1,0 +1,60 @@
+//! Lint 4: truncating casts on serialization paths.
+//!
+//! A bare `as u8/u16/u32` silently wraps when the value outgrows the
+//! wire field — the bug class that motivated the checked-conversion
+//! rework of `codec::header` and `coordinator::protocol`. On those two
+//! files every narrowing must go through `u8::try_from(..)`-style
+//! checked conversions (or a documented `// LINT-ALLOW(cast): <why>`
+//! when the value is already masked to range).
+
+use crate::scan::{allowed_lines, has_token, Finding, SourceFile};
+use std::path::Path;
+
+pub const LINT: &str = "truncating-cast";
+
+/// Serialization modules where a silent wrap corrupts the wire format.
+pub const FILES: &[&str] = &["src/codec/header.rs", "src/coordinator/protocol.rs"];
+
+const CAST_TOKENS: &[&str] = &["as u8", "as u16", "as u32"];
+
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for rel in FILES {
+        let Some(file) = SourceFile::load(root, rel) else {
+            findings.push(Finding {
+                lint: LINT,
+                file: (*rel).to_string(),
+                line: 0,
+                message: "serialization module listed in xtask/src/casts.rs is \
+                          missing; update FILES if it moved"
+                    .to_string(),
+            });
+            continue;
+        };
+        let allow = allowed_lines(&file.lines, "cast");
+        for (i, line) in file.lines.iter().enumerate() {
+            if file.in_tests(i) {
+                break;
+            }
+            if allow[i] {
+                continue;
+            }
+            for token in CAST_TOKENS {
+                if has_token(&line.code, token, true, true) {
+                    findings.push(Finding {
+                        lint: LINT,
+                        file: (*rel).to_string(),
+                        line: i + 1,
+                        message: format!(
+                            "bare `{token}` on a serialization path; use a checked \
+                             `try_from` conversion, or document the range with \
+                             `// LINT-ALLOW(cast): <reason>`"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+    findings
+}

@@ -1,0 +1,245 @@
+//! Lint 3: cross-artifact invariant diff.
+//!
+//! Three artifacts encode the same wire/container identity constants:
+//! `src/consts.rs` (the Rust source of truth), the mirror block in
+//! `tests/golden/gen_golden.py` (the Python golden generator cannot
+//! import Rust), and the committed golden fixture bytes themselves.
+//! This lint parses the first two textually and diffs every constant,
+//! then scans the fixture files' magic/version/backend-id bytes against
+//! the parsed values — so a drive-by edit to any one artifact fails the
+//! analyze gate until all three agree.
+
+use crate::scan::Finding;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+pub const LINT: &str = "consts-diff";
+
+pub const RUST_CONSTS: &str = "src/consts.rs";
+pub const PY_GENERATOR: &str = "tests/golden/gen_golden.py";
+
+/// Every constant that must exist, with the same value, in both the
+/// Rust consts module and the Python generator's mirror block.
+pub const REQUIRED: &[&str] = &[
+    "BATCH_MAGIC",
+    "BATCH_MIN_VERSION",
+    "BATCH_VERSION_PLAIN",
+    "BATCH_VERSION",
+    "BATCH_VERSION_TEMPORAL",
+    "ENTROPY_ID_CABAC",
+    "ENTROPY_ID_RANS",
+    "ENTROPY_ID_RANS4",
+    "NET_MAGIC",
+    "NET_VERSION",
+    "NET_MIN_VERSION",
+    "FRAME_KIND_ITEM",
+    "FRAME_KIND_OUTCOME",
+    "FRAME_KIND_BUSY",
+    "FRAME_KIND_RESET",
+];
+
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    let rust = match fs::read_to_string(root.join(RUST_CONSTS)) {
+        Ok(text) => parse_rust_consts(&text),
+        Err(_) => {
+            findings.push(file_finding(RUST_CONSTS, "constants module is missing"));
+            return findings;
+        }
+    };
+    let python = match fs::read_to_string(root.join(PY_GENERATOR)) {
+        Ok(text) => parse_python_consts(&text),
+        Err(_) => {
+            findings.push(file_finding(PY_GENERATOR, "golden generator is missing"));
+            return findings;
+        }
+    };
+
+    for name in REQUIRED {
+        if !rust.contains_key(*name) {
+            findings.push(file_finding(
+                RUST_CONSTS,
+                &format!("required constant `{name}` is not defined as a plain literal"),
+            ));
+        }
+    }
+    for (name, rv) in &rust {
+        match python.get(name) {
+            None => findings.push(file_finding(
+                PY_GENERATOR,
+                &format!(
+                    "Rust constant `{name}` has no mirror in the generator's \
+                     constants block"
+                ),
+            )),
+            Some(pv) if !values_equal(rv, pv) => findings.push(file_finding(
+                PY_GENERATOR,
+                &format!("constant `{name}` diverged: Rust has `{rv}`, Python has `{pv}`"),
+            )),
+            Some(_) => {}
+        }
+    }
+
+    scan_fixture_bytes(root, &rust, &mut findings);
+    findings
+}
+
+fn file_finding(file: &str, message: &str) -> Finding {
+    Finding { lint: LINT, file: file.to_string(), line: 0, message: message.to_string() }
+}
+
+/// Parse `pub const NAME: T = VALUE;` lines; the value keeps its source
+/// spelling minus a leading deref (`*b"LWFB"` → `b"LWFB"`).
+fn parse_rust_consts(text: &str) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix("pub const ") else {
+            continue;
+        };
+        let Some((name, after_name)) = rest.split_once(':') else {
+            continue;
+        };
+        let Some((_, value)) = after_name.split_once('=') else {
+            continue;
+        };
+        let value = value.trim().trim_end_matches(';').trim().trim_start_matches('*');
+        out.insert(name.trim().to_string(), value.to_string());
+    }
+    out
+}
+
+/// Parse `NAME = value` lines with const-shaped names (uppercase, first
+/// definition wins — the mirror block sits near the top of the file).
+fn parse_python_consts(text: &str) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let Some((name, value)) = line.split_once(" = ") else {
+            continue;
+        };
+        let name = name.trim();
+        let mut chars = name.chars();
+        let const_like = chars.next().is_some_and(|c| c.is_ascii_uppercase())
+            && name.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_');
+        if !const_like {
+            continue;
+        }
+        let value = match value.find('#') {
+            Some(p) => value[..p].trim(),
+            None => value.trim(),
+        };
+        out.entry(name.to_string()).or_insert_with(|| value.to_string());
+    }
+    out
+}
+
+/// Values compare numerically when both sides parse as integers, else
+/// as normalized source strings (covers the `b"LWFB"` magics).
+fn values_equal(rust: &str, python: &str) -> bool {
+    match (parse_int(rust), parse_int(python)) {
+        (Some(a), Some(b)) => a == b,
+        _ => rust == python,
+    }
+}
+
+fn parse_int(s: &str) -> Option<u64> {
+    let s = s.replace('_', "");
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// `b"LWFB"` → the 4 magic bytes.
+fn magic_bytes(value: &str) -> Option<Vec<u8>> {
+    let inner = value.strip_prefix("b\"")?.strip_suffix('"')?;
+    Some(inner.bytes().collect())
+}
+
+fn const_u8(map: &BTreeMap<String, String>, name: &str) -> Option<u8> {
+    parse_int(map.get(name)?).and_then(|v| u8::try_from(v).ok())
+}
+
+/// Byte-level scan of the committed fixtures: container files must open
+/// with the batch magic, a known version, and a known backend id;
+/// single-stream files must advertise a known backend id in the header
+/// byte's top two bits.
+fn scan_fixture_bytes(root: &Path, rust: &BTreeMap<String, String>, findings: &mut Vec<Finding>) {
+    let (Some(magic), Some(vmin), Some(vmax)) = (
+        rust.get("BATCH_MAGIC").and_then(|v| magic_bytes(v)),
+        const_u8(rust, "BATCH_MIN_VERSION"),
+        const_u8(rust, "BATCH_VERSION_TEMPORAL"),
+    ) else {
+        return; // already reported as missing constants
+    };
+    let ids: Vec<u8> = ["ENTROPY_ID_CABAC", "ENTROPY_ID_RANS", "ENTROPY_ID_RANS4"]
+        .iter()
+        .filter_map(|n| const_u8(rust, n))
+        .collect();
+
+    let dir = root.join("tests/golden");
+    let Ok(entries) = fs::read_dir(&dir) else {
+        findings.push(file_finding("tests/golden", "golden fixture directory is missing"));
+        return;
+    };
+    let mut paths: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for path in paths {
+        let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        let rel = format!("tests/golden/{name}");
+        match ext {
+            "lwfb" => {
+                let Ok(bytes) = fs::read(&path) else {
+                    continue;
+                };
+                if bytes.len() < 6 {
+                    findings.push(file_finding(&rel, "container fixture shorter than its prelude"));
+                    continue;
+                }
+                if bytes[..4] != magic[..] {
+                    findings.push(file_finding(
+                        &rel,
+                        "container fixture does not start with BATCH_MAGIC",
+                    ));
+                }
+                if !(vmin..=vmax).contains(&bytes[4]) {
+                    findings.push(file_finding(
+                        &rel,
+                        &format!(
+                            "container version byte {} outside \
+                             BATCH_MIN_VERSION..=BATCH_VERSION_TEMPORAL ({vmin}..={vmax})",
+                            bytes[4]
+                        ),
+                    ));
+                }
+                if !ids.contains(&bytes[5]) {
+                    findings.push(file_finding(
+                        &rel,
+                        &format!("container backend-id byte {} is not an assigned id", bytes[5]),
+                    ));
+                }
+            }
+            "lwfc" => {
+                let Ok(bytes) = fs::read(&path) else {
+                    continue;
+                };
+                let Some(first) = bytes.first() else {
+                    findings.push(file_finding(&rel, "empty stream fixture"));
+                    continue;
+                };
+                let id = first >> 6;
+                if !ids.contains(&id) {
+                    findings.push(file_finding(
+                        &rel,
+                        &format!("stream header advertises backend id {id}, which is unassigned"),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}

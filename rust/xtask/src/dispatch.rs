@@ -1,0 +1,214 @@
+//! Lint 5: exhaustive dispatch.
+//!
+//! When a new entropy backend, container version, or wire frame kind is
+//! added, it must be handled at *every* dispatch site — encode, decode,
+//! sniff, and the CLI — not just the one the author was looking at.
+//! `match` exhaustiveness does not help here: most of these sites match
+//! on raw `u8`s (with a rejecting wildcard arm) or on strings, so a
+//! forgotten variant compiles clean and fails at runtime. This lint
+//! pins each site to the tokens it must keep handling.
+
+use crate::scan::{has_token, Finding, SourceFile};
+use std::path::Path;
+
+pub const LINT: &str = "exhaustive-dispatch";
+
+/// Where to look for a required token.
+enum In {
+    /// Masked non-test code (identifier-ish tokens).
+    Code,
+    /// Raw non-comment, non-test lines (string-literal match arms and
+    /// CLI help text, which masking blanks out).
+    Raw,
+}
+
+struct Site {
+    file: &'static str,
+    role: &'static str,
+    token: &'static str,
+    place: In,
+}
+
+const SITES: &[Site] = &[
+    // Entropy-backend dispatch: encode enum, decode-by-id, name parsing.
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend encode dispatch",
+        token: "EntropyKind::Cabac",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend encode dispatch",
+        token: "EntropyKind::Rans",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend encode dispatch",
+        token: "EntropyKind::Rans4",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend id decode arm",
+        token: "ENTROPY_ID_CABAC =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend id decode arm",
+        token: "ENTROPY_ID_RANS =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend id decode arm",
+        token: "ENTROPY_ID_RANS4 =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend name parse arm",
+        token: "\"cabac\" =>",
+        place: In::Raw,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend name parse arm",
+        token: "\"rans\" =>",
+        place: In::Raw,
+    },
+    Site {
+        file: "src/codec/entropy.rs",
+        role: "backend name parse arm",
+        token: "\"rans4\" =>",
+        place: In::Raw,
+    },
+    // Container-version dispatch in the directory reader/writer.
+    Site {
+        file: "src/codec/header.rs",
+        role: "container version handling",
+        token: "BATCH_MIN_VERSION",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/header.rs",
+        role: "container version handling",
+        token: "BATCH_VERSION_PLAIN",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/header.rs",
+        role: "container version handling",
+        token: "BATCH_VERSION",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/header.rs",
+        role: "container version handling",
+        token: "BATCH_VERSION_TEMPORAL",
+        place: In::Code,
+    },
+    // Format sniffing in the public API.
+    Site {
+        file: "src/codec/api.rs",
+        role: "format sniff (backend id)",
+        token: "EntropyKind::from_id",
+        place: In::Code,
+    },
+    Site {
+        file: "src/codec/api.rs",
+        role: "format sniff (container vs stream)",
+        token: "is_batched",
+        place: In::Code,
+    },
+    // CLI surface: every backend stays selectable and documented.
+    Site { file: "src/main.rs", role: "CLI backend surface", token: "cabac", place: In::Raw },
+    Site { file: "src/main.rs", role: "CLI backend surface", token: "rans", place: In::Raw },
+    Site { file: "src/main.rs", role: "CLI backend surface", token: "rans4", place: In::Raw },
+    // Wire frame-kind dispatch and version window.
+    Site {
+        file: "src/coordinator/net.rs",
+        role: "wire frame dispatch arm",
+        token: "FRAME_KIND_ITEM =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/coordinator/net.rs",
+        role: "wire frame dispatch arm",
+        token: "FRAME_KIND_OUTCOME =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/coordinator/net.rs",
+        role: "wire frame dispatch arm",
+        token: "FRAME_KIND_BUSY =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/coordinator/net.rs",
+        role: "wire frame dispatch arm",
+        token: "FRAME_KIND_RESET =>",
+        place: In::Code,
+    },
+    Site {
+        file: "src/coordinator/net.rs",
+        role: "wire version window",
+        token: "NET_VERSION",
+        place: In::Code,
+    },
+    Site {
+        file: "src/coordinator/net.rs",
+        role: "wire version window",
+        token: "NET_MIN_VERSION",
+        place: In::Code,
+    },
+];
+
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut files: Vec<&'static str> = SITES.iter().map(|s| s.file).collect();
+    files.dedup();
+    for file_rel in files {
+        let Some(file) = SourceFile::load(root, file_rel) else {
+            findings.push(Finding {
+                lint: LINT,
+                file: file_rel.to_string(),
+                line: 0,
+                message: "dispatch-site file is missing; update SITES in \
+                          xtask/src/dispatch.rs if it moved"
+                    .to_string(),
+            });
+            continue;
+        };
+        for site in SITES.iter().filter(|s| s.file == file_rel) {
+            let found = file.lines.iter().enumerate().any(|(i, line)| {
+                if file.in_tests(i) {
+                    return false;
+                }
+                match site.place {
+                    In::Code => has_token(&line.code, site.token, true, true),
+                    In::Raw => {
+                        !line.raw.trim_start().starts_with("//")
+                            && has_token(&line.raw, site.token, true, true)
+                    }
+                }
+            });
+            if !found {
+                findings.push(Finding {
+                    lint: LINT,
+                    file: file_rel.to_string(),
+                    line: 0,
+                    message: format!(
+                        "dispatch site lost its handling of `{}` ({}); every \
+                         backend id, container version, and frame kind must stay \
+                         handled at each site",
+                        site.token, site.role
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}

@@ -1,0 +1,50 @@
+//! Repo-native static analysis, run as `cargo xtask analyze`.
+//!
+//! Five lints, each encoding an invariant this codebase actually relies
+//! on and that rustc/clippy cannot express:
+//!
+//! 1. **unsafe audit** ([`unsafe_audit`]) — every `unsafe` carries a
+//!    `// SAFETY:` comment, and `unsafe` exists only inside the audited
+//!    module allowlist (`codec::simd`, `coordinator::net`).
+//! 2. **panic-freedom** ([`panics`]) — no `unwrap`/`expect`/`panic!`-
+//!    family macros and no unchecked slice indexing in the wire-facing
+//!    decode modules; escape hatch `// LINT-ALLOW(panic|index): <why>`.
+//! 3. **cross-artifact invariant diff** ([`consts_diff`]) — the wire and
+//!    container constants in `src/consts.rs`, the Python golden
+//!    generator's mirror block, and the committed golden fixture bytes
+//!    must all agree.
+//! 4. **truncating-cast lint** ([`casts`]) — no bare `as u8/u16/u32` on
+//!    the serialization paths (`codec::header`, `coordinator::protocol`);
+//!    escape hatch `// LINT-ALLOW(cast): <why>`.
+//! 5. **exhaustive dispatch** ([`dispatch`]) — every entropy-backend id,
+//!    container version, and wire frame kind stays handled at each of
+//!    its dispatch sites (encode, decode, sniff, CLI).
+//!
+//! All lints are textual (see [`scan`]) — no compiler in the loop, so
+//! the same pass can diff Rust against Python and fixture bytes, and it
+//! runs in milliseconds as a blocking CI job. The lint taxonomy and the
+//! `LINT-ALLOW` convention are documented for contributors in
+//! `rust/README.md` ("Static analysis").
+
+pub mod casts;
+pub mod consts_diff;
+pub mod dispatch;
+pub mod panics;
+pub mod scan;
+pub mod unsafe_audit;
+
+pub use scan::Finding;
+
+use std::path::Path;
+
+/// Run every lint against a repo tree rooted at the `rust/` directory.
+/// Returns all findings; an empty vector means the tree is clean.
+pub fn analyze(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    findings.extend(unsafe_audit::check(root));
+    findings.extend(panics::check(root));
+    findings.extend(consts_diff::check(root));
+    findings.extend(casts::check(root));
+    findings.extend(dispatch::check(root));
+    findings
+}

@@ -1,0 +1,69 @@
+//! `cargo xtask analyze` — run the repo-native static-analysis pass.
+//!
+//! Exits non-zero if any lint fires; CI runs this as a blocking job.
+//! `--root <dir>` points the pass at a different tree (used by the
+//! fixture tests to prove each lint actually catches its violation).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut root = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                if i + 1 >= args.len() {
+                    eprintln!("error: --root needs a path");
+                    return ExitCode::FAILURE;
+                }
+                root = Some(PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("error: unknown flag `{flag}`");
+                return usage();
+            }
+            sub if cmd.is_none() => {
+                cmd = Some(sub.to_string());
+                i += 1;
+            }
+            extra => {
+                eprintln!("error: unexpected argument `{extra}`");
+                return usage();
+            }
+        }
+    }
+
+    match cmd.as_deref() {
+        Some("analyze") => {
+            // The xtask package sits at rust/xtask; the analyzed tree
+            // root is the rust/ directory above it.
+            let default_root =
+                Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf);
+            let Some(root) = root.or(default_root) else {
+                eprintln!("error: cannot locate the rust/ tree; pass --root");
+                return ExitCode::FAILURE;
+            };
+            let findings = xtask::analyze(&root);
+            for finding in &findings {
+                eprintln!("{finding}");
+            }
+            if findings.is_empty() {
+                println!("analyze: clean ({})", root.display());
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("analyze: {} finding(s) in {}", findings.len(), root.display());
+                ExitCode::FAILURE
+            }
+        }
+        _ => usage(),
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo xtask analyze [--root <rust-tree>]");
+    ExitCode::FAILURE
+}

@@ -1,0 +1,98 @@
+//! Lint 2: panic-freedom on the wire-facing decode paths.
+//!
+//! A malformed or truncated bitstream must surface as `Err`, never as a
+//! panic that takes down the serving daemon. The module-scoped clippy
+//! denies catch `unwrap`/`expect`; this lint additionally catches the
+//! panic macros and unchecked slice indexing on the buffers that carry
+//! untrusted bytes, and enforces that every exception is documented
+//! with `// LINT-ALLOW(panic|index): <reason>`.
+
+use crate::scan::{allowed_lines, has_token, Finding, SourceFile};
+use std::path::Path;
+
+pub const LINT: &str = "panic-freedom";
+
+/// The modules that parse bytes arriving from outside the process.
+pub const WIRE_MODULES: &[&str] = &[
+    "src/codec/header.rs",
+    "src/codec/entropy.rs",
+    "src/codec/cabac.rs",
+    "src/codec/bitstream.rs",
+    "src/codec/stream.rs",
+    "src/coordinator/net.rs",
+    "src/coordinator/protocol.rs",
+];
+
+/// (token, require identifier boundary before the match)
+const PANIC_TOKENS: &[(&str, bool)] = &[
+    (".unwrap()", false),
+    (".expect(", false),
+    ("panic!", true),
+    ("unreachable!", true),
+    ("todo!", true),
+    ("unimplemented!", true),
+];
+
+/// Buffer names that hold untrusted wire bytes; `name[` on these is an
+/// unchecked index unless the surrounding code documents the bound.
+const INDEXED_NAMES: &[&str] = &["bytes", "buf", "payload", "header"];
+
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for rel in WIRE_MODULES {
+        let Some(file) = SourceFile::load(root, rel) else {
+            findings.push(Finding {
+                lint: LINT,
+                file: (*rel).to_string(),
+                line: 0,
+                message: "wire module listed in xtask/src/panics.rs is missing; \
+                          update WIRE_MODULES if it moved"
+                    .to_string(),
+            });
+            continue;
+        };
+        let allow_panic = allowed_lines(&file.lines, "panic");
+        let allow_index = allowed_lines(&file.lines, "index");
+        for (i, line) in file.lines.iter().enumerate() {
+            if file.in_tests(i) {
+                break;
+            }
+            if !allow_panic[i] {
+                for (token, before) in PANIC_TOKENS {
+                    if has_token(&line.code, token, *before, false) {
+                        findings.push(Finding {
+                            lint: LINT,
+                            file: (*rel).to_string(),
+                            line: i + 1,
+                            message: format!(
+                                "`{token}` in a wire-facing decode module; return a \
+                                 typed error instead, or document the invariant with \
+                                 `// LINT-ALLOW(panic): <reason>`"
+                            ),
+                        });
+                        break;
+                    }
+                }
+            }
+            if !allow_index[i] {
+                for name in INDEXED_NAMES {
+                    let needle = format!("{name}[");
+                    if has_token(&line.code, &needle, true, false) {
+                        findings.push(Finding {
+                            lint: LINT,
+                            file: (*rel).to_string(),
+                            line: i + 1,
+                            message: format!(
+                                "unchecked index `{name}[..]` on a wire buffer; use \
+                                 `get(..)` with an error path, or document the bound \
+                                 with `// LINT-ALLOW(index): <reason>`"
+                            ),
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    findings
+}

@@ -1,0 +1,469 @@
+//! Shared textual-scanning infrastructure for the analyze lints:
+//! comment/string masking, token search with identifier boundaries,
+//! `LINT-ALLOW` escape-hatch resolution, and source-tree walking.
+//!
+//! Masking is a small state machine over the source text that blanks
+//! comments and string/char literal *contents* (quotes survive so lines
+//! keep their shape) while preserving newlines, so every lint can match
+//! tokens in `Line::code` without false positives from prose, and read
+//! `Line::raw` when it needs the comment text back (SAFETY comments,
+//! LINT-ALLOW markers).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint finding. `line` is 1-based; 0 means file-level.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "[{}] {}: {}", self.lint, self.file, self.message)
+        } else {
+            write!(f, "[{}] {}:{}: {}", self.lint, self.file, self.line, self.message)
+        }
+    }
+}
+
+/// One source line: the original text and the masked twin.
+pub struct Line {
+    pub raw: String,
+    pub code: String,
+}
+
+/// A parsed source file: masked lines plus the test-region boundary
+/// (first `#[cfg(test)]` line; everything from there to EOF is test
+/// code, which the wire lints deliberately skip).
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<Line>,
+    pub test_start: usize,
+}
+
+impl SourceFile {
+    pub fn load(root: &Path, rel: &str) -> Option<SourceFile> {
+        let text = fs::read_to_string(root.join(rel)).ok()?;
+        Some(SourceFile::parse(rel, &text))
+    }
+
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let masked = mask(text);
+        let lines: Vec<Line> = text
+            .lines()
+            .zip(masked.lines())
+            .map(|(raw, code)| Line { raw: raw.to_string(), code: code.to_string() })
+            .collect();
+        let test_start =
+            lines.iter().position(|l| l.raw.contains("#[cfg(test)]")).unwrap_or(lines.len());
+        SourceFile { rel: rel.to_string(), lines, test_start }
+    }
+
+    pub fn in_tests(&self, i: usize) -> bool {
+        i >= self.test_start
+    }
+}
+
+/// Blank comments and string/char-literal contents, preserving newlines
+/// and the overall line shape. Handles nested block comments, escape
+/// sequences, raw strings (`r"…"`, `r#"…"#`), and distinguishes char
+/// literals from lifetimes.
+pub fn mask(text: &str) -> String {
+    enum St {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut out = vec![' '; n];
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            out[i] = '\n';
+            if let St::LineComment = st {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && i + 1 < n && b[i + 1] == '/' {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    out[i] = '"';
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && i + 1 < n
+                    && (b[i + 1] == '"' || b[i + 1] == '#')
+                    && (i == 0 || !is_ident_char(b[i - 1]))
+                {
+                    let mut hashes = 0;
+                    let mut j = i + 1;
+                    while j < n && b[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == '"' {
+                        out[i] = 'r';
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        // `r#ident` raw identifier or attribute soup.
+                        out[i] = c;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if i + 1 < n && b[i + 1] == '\\' {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < n && b[j] != '\'' {
+                            j += 1;
+                        }
+                        i = (j + 1).min(n);
+                    } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\n' {
+                        i += 3; // plain char literal 'x'
+                    } else {
+                        i += 1; // lifetime: drop the quote, keep the ident
+                    }
+                } else {
+                    out[i] = c;
+                    i += 1;
+                }
+            }
+            St::LineComment => i += 1,
+            St::Block(d) => {
+                if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else if c == '*' && i + 1 < n && b[i + 1] == '/' {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    out[i] = '"';
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0;
+                    while j < n && k < h && b[j] == '#' {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == h {
+                        st = St::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.into_iter().collect()
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Does `hay` contain `needle`, optionally requiring that no identifier
+/// character touches the match on the checked side(s)?
+pub fn has_token(hay: &str, needle: &str, boundary_before: bool, boundary_after: bool) -> bool {
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let end = at + needle.len();
+        let ok_before = !boundary_before || at == 0 || !is_ident_byte(bytes[at - 1]);
+        let ok_after = !boundary_after || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if ok_before && ok_after {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// A line that is purely commentary: a `//` line, or the interior of a
+/// block comment (masked to nothing while the raw text is not).
+pub fn is_comment_line(line: &Line) -> bool {
+    let t = line.raw.trim_start();
+    if t.starts_with("//") {
+        return true;
+    }
+    line.code.trim().is_empty() && !line.raw.trim().is_empty() && !t.starts_with("#[")
+}
+
+/// Resolve the `// LINT-ALLOW(kind): <reason>` escape hatch into a
+/// per-line allow mask.
+///
+/// * Trailing marker — allows its own line.
+/// * Marker comment directly above a statement — allows the whole
+///   statement, through its terminating `;` or opening `{` (attributes
+///   and further comments may sit between).
+/// * Marker comment directly above a `fn` signature — allows the whole
+///   function body (brace-matched), the form used when every indexing
+///   site in a decoder shares one documented length-check invariant.
+pub fn allowed_lines(lines: &[Line], kind: &str) -> Vec<bool> {
+    let needle = format!("LINT-ALLOW({kind})");
+    let n = lines.len();
+    let mut allowed = vec![false; n];
+    for i in 0..n {
+        if !lines[i].raw.contains(&needle) {
+            continue;
+        }
+        allowed[i] = true;
+        if !is_comment_line(&lines[i]) {
+            continue; // trailing marker: same line only
+        }
+        // Find the first governed line (skip the rest of the comment).
+        let mut j = i + 1;
+        while j < n && (is_comment_line(&lines[j]) || lines[j].raw.trim().is_empty()) {
+            j += 1;
+        }
+        if j >= n {
+            continue;
+        }
+        // Skip attributes to see whether a fn signature follows.
+        let mut k = j;
+        while k < n
+            && (lines[k].raw.trim_start().starts_with("#[")
+                || is_comment_line(&lines[k])
+                || lines[k].raw.trim().is_empty())
+        {
+            k += 1;
+        }
+        let end = if k < n && is_fn_signature(&lines[k].code) {
+            end_of_block(lines, k)
+        } else {
+            end_of_statement(lines, j)
+        };
+        for slot in allowed.iter_mut().take(end + 1).skip(j) {
+            *slot = true;
+        }
+    }
+    allowed
+}
+
+/// Is this masked line the start of a `fn` item (visibility and
+/// qualifiers tolerated)?
+pub fn is_fn_signature(code: &str) -> bool {
+    let mut s = code.trim_start();
+    loop {
+        if let Some(rest) = s.strip_prefix("pub") {
+            if rest.starts_with('(') {
+                match rest.find(')') {
+                    Some(p) => {
+                        s = rest[p + 1..].trim_start();
+                        continue;
+                    }
+                    None => return false,
+                }
+            }
+            if rest.starts_with(char::is_whitespace) {
+                s = rest.trim_start();
+                continue;
+            }
+            return false;
+        }
+        let mut stripped = false;
+        for kw in ["const", "async", "unsafe", "default"] {
+            if let Some(rest) = s.strip_prefix(kw) {
+                if rest.starts_with(char::is_whitespace) {
+                    s = rest.trim_start();
+                    stripped = true;
+                    break;
+                }
+            }
+        }
+        if !stripped {
+            break;
+        }
+    }
+    s.starts_with("fn ")
+}
+
+/// Line index of the closing brace of the block opened at/after `start`
+/// (brace-matched over masked code). A body-less signature (`fn f();`)
+/// ends at its semicolon.
+pub fn end_of_block(lines: &[Line], start: usize) -> usize {
+    let mut depth = 0usize;
+    let mut brackets = 0i32;
+    let mut seen_brace = false;
+    for (i, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    seen_brace = true;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if seen_brace && depth == 0 {
+                        return i;
+                    }
+                }
+                '(' | '[' => brackets += 1,
+                ')' | ']' => brackets -= 1,
+                ';' if !seen_brace && brackets == 0 => return i,
+                _ => {}
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Line index where the statement starting at `start` ends: the first
+/// `;` or `{` at zero paren/bracket depth, so a multi-line `let`
+/// binding stays covered by the marker comment above it.
+pub fn end_of_statement(lines: &[Line], start: usize) -> usize {
+    let mut depth = 0i32;
+    for (i, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                ';' | '{' if depth <= 0 => return i,
+                _ => {}
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// All `.rs` files under `dir`, recursively, in sorted order.
+pub fn rust_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    collect(dir, &mut out);
+    out.sort();
+    out
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// `path` relative to `root`, with unix separators.
+pub fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_blanks_comments_and_strings() {
+        let m = mask("let x = \"unsafe\"; // unsafe here\nlet y = 1;");
+        assert!(!m.contains("unsafe"));
+        assert!(m.contains("let x = \""));
+        assert!(m.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn mask_handles_raw_strings_and_chars() {
+        let m = mask("let s = r#\"panic!(\"#; let c = '\\n'; let l: &'static str = \"x\";");
+        assert!(!m.contains("panic!"));
+        assert!(m.contains("static"));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("a.unwrap()", ".unwrap()", false, false));
+        assert!(!has_token("a.unwrap_or(b)", ".unwrap()", false, false));
+        assert!(has_token("bytes[4]", "bytes[", true, false));
+        assert!(!has_token("frame_bytes[4]", "bytes[", true, false));
+        assert!(has_token("x as u8;", "as u8", true, true));
+        assert!(!has_token("class u8x", "as u8", true, true));
+    }
+
+    #[test]
+    fn fn_signatures() {
+        assert!(is_fn_signature("pub(super) fn quantize_avx2(q: &Q) {"));
+        assert!(is_fn_signature("pub const fn id() -> u8 {"));
+        assert!(is_fn_signature("fn helper() {"));
+        assert!(!is_fn_signature("let f = |x| x;"));
+        assert!(!is_fn_signature("pub struct Foo {"));
+    }
+
+    #[test]
+    fn allow_marker_covers_a_whole_fn() {
+        let src = "\
+// LINT-ALLOW(index): lengths checked by caller.
+#[inline]
+fn u32_le(bytes: &[u8], at: usize) -> u32 {
+    bytes[at]
+}
+fn other(bytes: &[u8]) -> u8 {
+    bytes[0]
+}
+";
+        let f = SourceFile::parse("x.rs", src);
+        let allowed = allowed_lines(&f.lines, "index");
+        assert!(allowed[3], "inside the annotated fn");
+        assert!(!allowed[6], "the next fn is not covered");
+    }
+
+    #[test]
+    fn allow_marker_covers_a_multi_line_statement() {
+        let src = "\
+// LINT-ALLOW(panic): count bounded by construction.
+let count =
+    u32::try_from(items.len()).expect(\"too many\");
+let other = x.unwrap();
+";
+        let f = SourceFile::parse("x.rs", src);
+        let allowed = allowed_lines(&f.lines, "panic");
+        assert!(allowed[1] && allowed[2], "whole statement is covered");
+        assert!(!allowed[3], "the following statement is not");
+    }
+}

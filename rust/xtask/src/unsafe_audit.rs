@@ -1,0 +1,85 @@
+//! Lint 1: unsafe audit.
+//!
+//! Two contracts:
+//! * `unsafe` may appear only in the audited module allowlist —
+//!   `codec::simd` (SIMD intrinsics behind runtime dispatch) and
+//!   `coordinator::net` (libc poll/pipe FFI). New unsafe surface means
+//!   widening the allowlist in a reviewed diff, not slipping a block
+//!   into an unrelated module.
+//! * Every `unsafe` occurrence (block or fn) must have a `// SAFETY:`
+//!   comment on the same line or in the contiguous comment/attribute
+//!   run directly above, matching clippy's
+//!   `undocumented_unsafe_blocks` convention.
+
+use crate::scan::{has_token, is_comment_line, rel_path, rust_files, Finding, SourceFile};
+use std::fs;
+use std::path::Path;
+
+pub const LINT: &str = "unsafe-audit";
+
+/// Modules audited for unsafe; everything else must be safe code.
+pub const ALLOWLIST: &[&str] = &["src/codec/simd.rs", "src/coordinator/net.rs"];
+
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for path in rust_files(&root.join("src")) {
+        let rel = rel_path(root, &path);
+        let Ok(text) = fs::read_to_string(&path) else {
+            continue;
+        };
+        let file = SourceFile::parse(&rel, &text);
+        let allowlisted = ALLOWLIST.contains(&rel.as_str());
+        for (i, line) in file.lines.iter().enumerate() {
+            if !has_token(&line.code, "unsafe", true, true) {
+                continue;
+            }
+            if !allowlisted {
+                findings.push(Finding {
+                    lint: LINT,
+                    file: rel.clone(),
+                    line: i + 1,
+                    message: format!(
+                        "`unsafe` outside the audited allowlist ({}); move the \
+                         operation behind a safe API in an allowlisted module \
+                         or extend the allowlist in xtask/src/unsafe_audit.rs \
+                         with review",
+                        ALLOWLIST.join(", ")
+                    ),
+                });
+            } else if !has_safety_comment(&file, i) {
+                findings.push(Finding {
+                    lint: LINT,
+                    file: rel.clone(),
+                    line: i + 1,
+                    message: "unsafe block without a `// SAFETY:` comment on the \
+                              same line or directly above; state the invariant \
+                              that makes this sound"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// A SAFETY comment counts if it is on the unsafe line itself or within
+/// the contiguous run of comment/attribute lines immediately above.
+fn has_safety_comment(file: &SourceFile, i: usize) -> bool {
+    if file.lines[i].raw.to_uppercase().contains("SAFETY") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let line = &file.lines[j];
+        let trimmed = line.raw.trim_start();
+        if is_comment_line(line) || trimmed.starts_with("#[") {
+            if line.raw.to_uppercase().contains("SAFETY") {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}

@@ -1,0 +1,87 @@
+//! Integration tests for `cargo xtask analyze`.
+//!
+//! The contract, end to end: the real tree is clean, and each fixture
+//! tree with one injected violation trips exactly the lint built to
+//! catch it.
+
+use std::path::PathBuf;
+use xtask::{casts, consts_diff, panics, unsafe_audit};
+
+fn real_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits under rust/")
+        .to_path_buf()
+}
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let findings = xtask::analyze(&real_root());
+    assert!(
+        findings.is_empty(),
+        "the committed tree must pass its own analyze gate:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+#[test]
+fn missing_safety_comment_is_caught() {
+    let findings = unsafe_audit::check(&fixture("missing_safety"));
+    assert!(
+        findings.iter().any(|f| f.file == "src/codec/simd.rs" && f.message.contains("SAFETY")),
+        "expected an undocumented-unsafe finding, got: {findings:?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.file == "src/util/helpers.rs" && f.message.contains("allowlist")),
+        "expected an outside-allowlist finding, got: {findings:?}"
+    );
+}
+
+#[test]
+fn decode_path_unwrap_is_caught() {
+    let findings = panics::check(&fixture("decode_unwrap"));
+    assert!(
+        findings.iter().any(|f| f.file == "src/codec/header.rs" && f.message.contains(".unwrap()")),
+        "expected a panic-freedom finding, got: {findings:?}"
+    );
+    assert!(
+        !findings.iter().any(|f| f.line >= 10),
+        "the #[cfg(test)] region must be exempt, got: {findings:?}"
+    );
+}
+
+#[test]
+fn diverged_constant_is_caught() {
+    let findings = consts_diff::check(&fixture("diverged_constant"));
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.message.contains("NET_VERSION") && f.message.contains("diverged")),
+        "expected a consts-diff finding for NET_VERSION, got: {findings:?}"
+    );
+    assert!(
+        !findings.iter().any(|f| f.message.contains("BATCH_")),
+        "constants that agree must not be flagged, got: {findings:?}"
+    );
+}
+
+#[test]
+fn bare_truncating_cast_is_caught() {
+    let findings = casts::check(&fixture("bare_cast"));
+    assert!(
+        findings.iter().any(|f| f.file == "src/codec/header.rs" && f.message.contains("as u16")),
+        "expected a truncating-cast finding, got: {findings:?}"
+    );
+}
+
+#[test]
+fn full_analyze_rejects_every_fixture() {
+    for name in ["missing_safety", "decode_unwrap", "diverged_constant", "bare_cast"] {
+        let findings = xtask::analyze(&fixture(name));
+        assert!(!findings.is_empty(), "fixture `{name}` must fail the full analyze pass");
+    }
+}

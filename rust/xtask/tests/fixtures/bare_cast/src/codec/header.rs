@@ -1,0 +1,6 @@
+// Fixture: a bare truncating cast on a serialization path. The count
+// silently wraps past u16::MAX; the lint must demand `try_from`.
+
+pub fn write_count(count: usize, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(count as u16).to_le_bytes());
+}

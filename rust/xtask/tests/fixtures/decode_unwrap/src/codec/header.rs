@@ -1,0 +1,16 @@
+// Fixture: an unwrap on the decode path, the exact bug class the
+// panic-freedom lint exists to catch.
+
+pub fn read_count(bytes: &[u8]) -> u32 {
+    let arr: [u8; 4] = bytes[..4].try_into().unwrap();
+    u32::from_le_bytes(arr)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u8> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,21 @@
+// Fixture: Rust constants that diverged from the Python mirror —
+// NET_VERSION was bumped to 4 here without touching the generator.
+
+pub const BATCH_MAGIC: [u8; 4] = *b"LWFB";
+pub const BATCH_MIN_VERSION: u8 = 1;
+pub const BATCH_VERSION_PLAIN: u8 = 2;
+pub const BATCH_VERSION: u8 = 3;
+pub const BATCH_VERSION_TEMPORAL: u8 = 4;
+
+pub const ENTROPY_ID_CABAC: u8 = 0;
+pub const ENTROPY_ID_RANS: u8 = 1;
+pub const ENTROPY_ID_RANS4: u8 = 3;
+
+pub const NET_MAGIC: [u8; 4] = *b"LWFN";
+pub const NET_VERSION: u8 = 4;
+pub const NET_MIN_VERSION: u8 = 1;
+
+pub const FRAME_KIND_ITEM: u8 = 0;
+pub const FRAME_KIND_OUTCOME: u8 = 1;
+pub const FRAME_KIND_BUSY: u8 = 2;
+pub const FRAME_KIND_RESET: u8 = 3;

@@ -1,0 +1,10 @@
+// Fixture: an allowlisted module with an undocumented unsafe block.
+// `cargo xtask analyze` must flag the block below (no SAFETY comment).
+
+pub fn quantize(xs: &[f32], out: &mut [u8]) {
+    let p = xs.as_ptr();
+    unsafe {
+        let _ = *p;
+    }
+    out[0] = 0;
+}

@@ -1,0 +1,8 @@
+// Fixture: unsafe outside the audited allowlist. The SAFETY comment is
+// present, but the module is not allowlisted, so the audit must still
+// flag it.
+
+pub fn transmute_len(v: &[u8]) -> usize {
+    // SAFETY: documented, but this module is not on the unsafe allowlist.
+    unsafe { v.as_ptr().add(v.len()).offset_from(v.as_ptr()) as usize }
+}
